@@ -1,0 +1,99 @@
+//! Coordinator-overhead bench: batcher, selection, geometry, KV assembly
+//! and patching — the pure-Rust hot path around the XLA executables.  L3
+//! must not be the bottleneck (DESIGN.md §Perf target: < 5% of exec time).
+
+use std::time::Instant;
+
+use infoflow_kv::coordinator::batcher::{Batcher, BatcherConfig};
+use infoflow_kv::geometry::{self, RopeGeometry};
+use infoflow_kv::kvcache::{AssembledContext, ChunkKv, ChunkStore};
+use infoflow_kv::manifest::ModelDims;
+use infoflow_kv::selection;
+use infoflow_kv::tensor::TensorF;
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::util::stats::Bench;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 144, d_model: 64, n_layers: 4, n_heads: 4, head_dim: 16,
+        d_ff: 128, rope_theta: 10000.0, chunk: 64, prompt_len: 16,
+        sel_budget: 64, answer_buf: 8, dev_layers: 2,
+    }
+}
+
+fn mk_chunk(rng: &mut Rng, id: u64, d: &ModelDims) -> std::sync::Arc<ChunkKv> {
+    let shape = [d.n_layers, d.chunk, d.n_heads, d.head_dim];
+    let n: usize = shape.iter().product();
+    std::sync::Arc::new(ChunkKv {
+        id,
+        tokens: (0..d.chunk).map(|_| 16 + rng.below(120) as i32).collect(),
+        k: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
+        v: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
+    })
+}
+
+fn main() {
+    let bench = Bench::new(3, 20);
+    let d = dims();
+    let mut rng = Rng::new(1);
+
+    // KV assembly of 8 chunks into the 512 bucket
+    let chunks: Vec<_> = (0..8).map(|i| mk_chunk(&mut rng, i, &d)).collect();
+    bench.run("assemble/8x64->512", || {
+        AssembledContext::new(&d, 512, &chunks).unwrap()
+    });
+
+    // patching 64 recomputed rows
+    let mut ctx = AssembledContext::new(&d, 512, &chunks).unwrap();
+    let s = d.sel_budget;
+    let nk = TensorF::zeros(&[d.n_layers, s, d.n_heads, d.head_dim]);
+    let nv = nk.clone();
+    let slots: Vec<i32> = (0..s as i32).map(|i| i * 8).collect();
+    let gpos: Vec<i32> = (0..s as i32).map(|i| i * 8).collect();
+    bench.run("patch/64rows", || {
+        ctx.patch(&slots, &gpos, s, &nk, &nv);
+    });
+
+    // top-k selection over 512 scores
+    let scores: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+    let valid = vec![1.0f32; 512];
+    bench.run("topk/512->64", || selection::topk(&scores, &valid, 64));
+
+    // geometry layouts
+    let lens = vec![64usize; 8];
+    for g in RopeGeometry::ALL {
+        bench.run(&format!("geometry/{}", g.name()), || {
+            geometry::layout(g, &lens, 16)
+        });
+    }
+
+    // batcher throughput
+    bench.run("batcher/push+drain 256", || {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, ..Default::default() });
+        let now = Instant::now();
+        for i in 0..256 {
+            b.push(i, now);
+        }
+        let mut total = 0;
+        while !b.is_empty() {
+            total += b.drain_batch().len();
+        }
+        total
+    });
+
+    // chunk store churn
+    bench.run("store/insert+get 64", || {
+        let mut store = ChunkStore::new(1 << 24);
+        let mut r = Rng::new(2);
+        for i in 0..64u64 {
+            store.insert(ChunkKv {
+                id: i,
+                tokens: vec![1; 64],
+                k: TensorF::zeros(&[4, 64, 4, 16]),
+                v: TensorF::zeros(&[4, 64, 4, 16]),
+            });
+            let _ = store.get(r.below(i as usize + 1) as u64);
+        }
+        store.len()
+    });
+}

@@ -1,0 +1,69 @@
+//! Recompute-stage bench (§8 of the paper: cost of selective recomputation
+//! under the irregular mask).  Measures the recompute executable alone —
+//! the L1 selective_attn kernel path — across budgets and buckets, plus the
+//! dense full-prefill cost for the overhead-vs-ideal comparison.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use infoflow_kv::config::MethodSpec;
+use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::pipeline::Pipeline;
+use infoflow_kv::runtime::exec::ModelSession;
+use infoflow_kv::runtime::Runtime;
+use infoflow_kv::tensor::{TensorF, TensorI};
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::util::stats::Bench;
+use infoflow_kv::workload::EpisodeGen;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::load(Path::new("artifacts"))?);
+    let backbone = rt.backbone_names().first().cloned().expect("make artifacts");
+    let pipeline = Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?;
+    let d = rt.manifest.model.clone();
+    let bench = Bench::new(2, 8);
+
+    // isolated recompute executable across buckets
+    for &bucket in &rt.manifest.buckets.clone() {
+        let s = d.sel_budget;
+        let mut rng = Rng::new(3);
+        let st = TensorI::from_vec(&[s], (0..s).map(|_| 16 + rng.below(120) as i32).collect())?;
+        let sg = TensorI::from_vec(&[s], (0..s as i32).collect())?;
+        let ss = TensorI::from_vec(&[s], (0..s as i32).collect())?;
+        let sv = TensorF::full(&[s], 1.0);
+        let ck = TensorF::zeros(&[d.n_layers, bucket, d.n_heads, d.head_dim]);
+        let cv = TensorF::zeros(&[d.n_layers, bucket, d.n_heads, d.head_dim]);
+        let delta = TensorI::zeros(&[bucket]);
+        let gpos = TensorI::from_vec(&[bucket], (0..bucket as i32).collect())?;
+        let valid = TensorF::full(&[bucket], 1.0);
+        bench.run(&format!("recompute_exec/bucket{bucket}/S{s}"), || {
+            pipeline
+                .session
+                .recompute(bucket, &st, &sg, &ss, &sv, &ck, &cv, &delta, &gpos, &valid)
+                .unwrap()
+        });
+        // ideal-cost reference: dense full prefill at the same bucket
+        let np = bucket + d.prompt_len;
+        let toks = TensorI::from_vec(&[np], (0..np).map(|_| 16 + rng.below(120) as i32).collect())?;
+        let pos = TensorI::from_vec(&[np], (0..np as i32).collect())?;
+        let val = TensorF::full(&[np], 1.0);
+        bench.run(&format!("full_prefill/bucket{bucket}"), || {
+            pipeline.session.full_prefill(bucket, &toks, &pos, &val).unwrap()
+        });
+    }
+
+    // recompute stage inside the full pipeline across budgets
+    let genr = EpisodeGen::new(pipeline.vocab.clone(), d.chunk);
+    let mut rng = Rng::new(4);
+    let e = genr.onehop(&mut rng, 8);
+    let mut store = ChunkStore::new(1 << 30);
+    let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+    for budget in [4usize, 16, 64] {
+        bench.run(&format!("pipeline_ours/512tok/budget{budget}"), || {
+            pipeline
+                .answer(&chunks, &e.prompt, MethodSpec::ours(budget))
+                .unwrap()
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! End-to-end TTFT bench (criterion-lite, harness = false): measures the
+//! prepared-context latency of every inference strategy at each context
+//! bucket — the measured substrate behind Fig. 2 and Table 5 calibration.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use infoflow_kv::config::MethodSpec;
+use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::pipeline::Pipeline;
+use infoflow_kv::runtime::exec::ModelSession;
+use infoflow_kv::runtime::Runtime;
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::util::stats::Bench;
+use infoflow_kv::workload::EpisodeGen;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::load(Path::new("artifacts"))?);
+    let backbone = rt
+        .backbone_names()
+        .first()
+        .cloned()
+        .expect("run `make artifacts` first");
+    let pipeline = Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?;
+    let genr = EpisodeGen::new(pipeline.vocab.clone(), rt.manifest.model.chunk);
+    let bench = Bench::new(2, 8);
+
+    for &n_chunks in &[2usize, 4, 8] {
+        let mut rng = Rng::new(11);
+        let e = genr.onehop(&mut rng, n_chunks);
+        let mut store = ChunkStore::new(1 << 30);
+        let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+        for (name, method) in [
+            ("baseline", MethodSpec::Baseline),
+            ("norecompute", MethodSpec::NoRecompute),
+            ("ours16", MethodSpec::ours(16)),
+            ("reorder16", MethodSpec::ours_reorder(16)),
+            ("cacheblend16", MethodSpec::CacheBlend { budget: 16 }),
+            ("epic16", MethodSpec::Epic { budget: 16 }),
+        ] {
+            bench.run(&format!("ttft/{}chunks/{name}", n_chunks), || {
+                pipeline.answer(&chunks, &e.prompt, method).unwrap()
+            });
+        }
+    }
+    Ok(())
+}

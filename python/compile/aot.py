@@ -1,0 +1,130 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and its README.
+
+One set of HLO files serves every backbone because the weights are a runtime
+parameter (a single flat f32 vector), not baked constants.  The manifest
+records the exact argument/result specs so the Rust runtime can type-check
+itself against the artifacts at load time.
+
+Usage:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, make_entry_points, param_count, param_specs
+from .tasks import vocab_spec
+from .train import BACKBONES
+
+BUCKETS = [128, 256, 512]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_all(cfg: ModelConfig, out_dir: str, buckets=None, force=False):
+    buckets = buckets or BUCKETS
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    executables = []
+
+    jobs = []
+    # prefill_chunk is bucket-independent; lower it once from the smallest.
+    eps = {n: make_entry_points(cfg, n, use_pallas=True) for n in buckets}
+    jobs.append(("prefill_chunk", None, *eps[buckets[0]]["prefill_chunk"]))
+    for n in buckets:
+        for name in ("score", "recompute", "decode", "deviation", "full_prefill"):
+            jobs.append((name, n, *eps[n][name]))
+
+    for name, bucket, fn, example_args in jobs:
+        fname = f"{name}.hlo.txt" if bucket is None else f"{name}_{bucket}.hlo.txt"
+        path = os.path.join(hlo_dir, fname)
+        out_specs = [
+            _spec_of(o) for o in jax.tree.leaves(jax.eval_shape(fn, *example_args))
+        ]
+        executables.append(
+            {
+                "name": name,
+                "bucket": bucket,
+                "file": f"hlo/{fname}",
+                "args": [_spec_of(a) for a in example_args],
+                "outputs": out_specs,
+            }
+        )
+        if os.path.exists(path) and not force:
+            print(f"[aot] {fname}: exists, skipping")
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {fname}: {len(text) / 1024:.0f} KiB")
+    return executables
+
+
+def write_manifest(cfg: ModelConfig, out_dir: str, executables):
+    backbones = {}
+    for name in BACKBONES:
+        jpath = os.path.join(out_dir, f"weights_{name}.json")
+        wpath = f"weights_{name}.bin"
+        if os.path.exists(jpath):
+            with open(jpath) as f:
+                meta = json.load(f)
+            backbones[name] = {
+                "weights": wpath,
+                "task_acc": meta.get("task_acc", {}),
+                "steps": meta.get("steps"),
+                "final_loss": meta.get("final_loss"),
+            }
+    manifest = {
+        "format_version": 1,
+        "model": dataclasses.asdict(cfg),
+        "config_hash": cfg.config_hash(),
+        "param_count": param_count(cfg),
+        "param_layout": [
+            {"name": n, "shape": list(s)} for n, s in param_specs(cfg)
+        ],
+        "vocab": vocab_spec(),
+        "buckets": BUCKETS,
+        "executables": executables,
+        "backbones": backbones,
+    }
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path} ({len(executables)} executables, "
+          f"{len(backbones)} backbones)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="re-lower even if files exist")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg = ModelConfig()
+    executables = lower_all(cfg, args.out, force=args.force)
+    write_manifest(cfg, args.out, executables)
+
+
+if __name__ == "__main__":
+    main()

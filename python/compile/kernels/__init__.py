@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for InfoFlow KV + their pure-jnp oracles (ref)."""
+
+from . import ref  # noqa: F401
+from .selective_attn import selective_attn  # noqa: F401
+from .attn_norm import attn_norm_scores  # noqa: F401
+from .rope_kernel import rope_rerotate  # noqa: F401

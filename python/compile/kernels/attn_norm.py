@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: fused prompt->context attention-norm scoring (Eq. 7).
+
+Computes, for every context token j, the total softmax attention mass it
+receives from the prompt: ``s_j = sum_{heads, prompt rows} A_{ij}``.  The
+naive route materializes the [H, P, N+P] probability tensor in HBM; this
+kernel keeps each head's P x (N+P) tile in VMEM (P is small — the prompt),
+reduces it to a length-N score vector on the fly, and accumulates across
+heads in scratch, so only the final [N] vector is written out.
+
+The prompt attends to all context rows (context precedes the prompt in the
+decode layout) and causally over itself.  Invalid rows/columns are excluded
+via validity masks, exactly as in ``ref.attn_norm_scores``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_norm_kernel(
+    kval_ref,  # f32 [N]
+    pval_ref,  # f32 [P]
+    qp_ref,  # f32 [1, P, D]
+    kc_ref,  # f32 [1, N, D]
+    kp_ref,  # f32 [1, P, D]
+    o_ref,  # f32 [N]
+    acc_ref,  # f32 [N] VMEM scratch
+    *,
+    scale,
+    num_heads,
+):
+    hh = pl.program_id(0)
+
+    @pl.when(hh == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qp = qp_ref[0]  # [P, D]
+    kc = kc_ref[0]  # [N, D]
+    kp = kp_ref[0]  # [P, D]
+    p_sz = qp.shape[0]
+
+    lc = jnp.dot(qp, kc.T, preferred_element_type=jnp.float32) * scale  # [P, N]
+    lp = jnp.dot(qp, kp.T, preferred_element_type=jnp.float32) * scale  # [P, P]
+
+    ctx_mask = kval_ref[...][None, :] > 0  # [1, N]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (p_sz, p_sz), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (p_sz, p_sz), 1)
+    causal = (cols <= rows) & (pval_ref[...][None, :] > 0)
+
+    lc = jnp.where(ctx_mask, lc, NEG_INF)
+    lp = jnp.where(causal, lp, NEG_INF)
+
+    m = jnp.maximum(jnp.max(lc, axis=-1), jnp.max(lp, axis=-1))  # [P]
+    pc = jnp.exp(lc - m[:, None]) * ctx_mask.astype(jnp.float32)
+    pp = jnp.exp(lp - m[:, None]) * causal.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(pc, axis=-1) + jnp.sum(pp, axis=-1), 1e-20)
+    pc = pc / denom[:, None]
+
+    # Column sums over valid prompt rows only.
+    acc_ref[...] += jnp.sum(pc * pval_ref[...][:, None], axis=0)
+
+    @pl.when(hh == num_heads - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attn_norm_scores(q_prompt, k_ctx, k_prompt, k_valid, p_valid, *, interpret=True):
+    """Fused Eq.-7 scores. Same contract as ``ref.attn_norm_scores``.
+
+    q_prompt/k_prompt: f32 [P, H, D]; k_ctx: f32 [N, H, D];
+    k_valid: f32 [N]; p_valid: f32 [P].  Returns f32 [N].
+    """
+    p_sz, h, d = q_prompt.shape
+    n = k_ctx.shape[0]
+
+    qp = jnp.transpose(q_prompt, (1, 0, 2))  # [H, P, D]
+    kc = jnp.transpose(k_ctx, (1, 0, 2))  # [H, N, D]
+    kp = jnp.transpose(k_prompt, (1, 0, 2))  # [H, P, D]
+
+    return pl.pallas_call(
+        functools.partial(
+            _attn_norm_kernel, scale=1.0 / (d**0.5), num_heads=h
+        ),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda hh: (0,)),
+            pl.BlockSpec((p_sz,), lambda hh: (0,)),
+            pl.BlockSpec((1, p_sz, d), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, p_sz, d), lambda hh: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda hh: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n,), jnp.float32)],
+        interpret=interpret,
+    )(k_valid.astype(jnp.float32), p_valid.astype(jnp.float32), qp, kc, kp)

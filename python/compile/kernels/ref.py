@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package is
+tested (pytest + hypothesis) against the function of the same name here.
+They are also what the L2 model uses when ``use_pallas=False`` so the whole
+stack can be A/B-checked kernel-on vs kernel-off.
+
+Conventions (shared with model.py and the Rust side):
+  * attention head layout is ``[tokens, heads, head_dim]``,
+  * RoPE uses the rotate-half convention (first half of the head dim pairs
+    with the second half), base theta 10000,
+  * masked-out logits use a large negative constant, fully-masked rows
+    produce all-zero outputs (never NaN).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rope_angles(positions, head_dim, theta=10000.0):
+    """Per-(position, dim-pair) rotation angles, shape [len(positions), head_dim/2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[:, None] * freqs[None, :]
+
+
+def rotate_half(x):
+    """(x1, x2) -> (-x2, x1) over the last dim split in half."""
+    half = x.shape[-1] // 2
+    return jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """Apply RoPE at ``positions`` to ``x [T, H, D]`` (or [T, D])."""
+    ang = rope_angles(positions, x.shape[-1], theta)  # [T, D/2]
+    cos = jnp.concatenate([jnp.cos(ang), jnp.cos(ang)], axis=-1)
+    sin = jnp.concatenate([jnp.sin(ang), jnp.sin(ang)], axis=-1)
+    if x.ndim == 3:
+        cos, sin = cos[:, None, :], sin[:, None, :]
+    return x * cos + rotate_half(x) * sin
+
+
+def rope_rerotate(k, delta, theta=10000.0):
+    """Shift already-rotated keys by ``delta`` positions.
+
+    RoPE composes: RoPE(x, p + d) = R(d) @ RoPE(x, p), so re-homing a cached
+    key from its chunk-local position to a new global position only needs the
+    per-token position *delta*, not the original position.
+
+    k: [N, H, D] RoPE'd keys; delta: i32 [N].
+    """
+    return apply_rope(k, delta, theta)
+
+
+def selective_attn(q, k, v, q_gpos, k_gpos, k_valid):
+    """Index-based causal attention for selective KV recomputation (paper §8).
+
+    Each selected query row i (a token being recomputed at global position
+    ``q_gpos[i]``) attends to every cache row j with ``k_gpos[j] <= q_gpos[i]``
+    and ``k_valid[j] > 0``.  The mask is irregular: neither dense nor a
+    standard causal triangle.
+
+    q: [S, H, D], k/v: [N, H, D], q_gpos: i32 [S], k_gpos: i32 [N],
+    k_valid: f32 [N] (1.0 = usable row). Returns [S, H, D].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    # [H, S, N]
+    logits = jnp.einsum("shd,nhd->hsn", q, k) * scale
+    mask = (k_gpos[None, :] <= q_gpos[:, None]) & (k_valid[None, :] > 0)  # [S, N]
+    logits = jnp.where(mask[None, :, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m) * mask[None, :, :].astype(logits.dtype)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-20)
+    return jnp.einsum("hsn,nhd->shd", p, v)
+
+
+def attn_norm_scores(q_prompt, k_ctx, k_prompt, k_valid, p_valid):
+    """Prompt-conditioned attention-norm scores (paper Eq. 7).
+
+    The prompt attends jointly over all context rows (context precedes the
+    prompt, so it is fully visible) and causally over itself; the score of
+    context token j is the softmax mass it receives, summed over prompt rows
+    and heads:  s_j = sum_{h,i} A^h_{i j}.
+
+    q_prompt/k_prompt: [P, H, D], k_ctx: [N, H, D],
+    k_valid: f32 [N], p_valid: f32 [P]. Returns f32 [N].
+    """
+    P = q_prompt.shape[0]
+    N = k_ctx.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q_prompt.shape[-1]))
+    lc = jnp.einsum("phd,nhd->hpn", q_prompt, k_ctx) * scale  # ctx logits
+    lp = jnp.einsum("phd,qhd->hpq", q_prompt, k_prompt) * scale  # prompt logits
+    ctx_mask = jnp.broadcast_to(k_valid[None, :] > 0, (P, N))
+    causal = jnp.tril(jnp.ones((P, P), dtype=bool)) & (p_valid[None, :] > 0)
+    lc = jnp.where(ctx_mask[None], lc, NEG_INF)
+    lp = jnp.where(causal[None], lp, NEG_INF)
+    logits = jnp.concatenate([lc, lp], axis=-1)  # [H, P, N+P]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    full_mask = jnp.concatenate([ctx_mask, causal], axis=-1)[None]
+    p = jnp.exp(logits - m) * full_mask.astype(logits.dtype)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    ctx_probs = p[:, :, :N]  # [H, P, N]
+    return jnp.einsum("hpn,p->n", ctx_probs, p_valid)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: RoPE re-rotation of cached keys by per-token deltas.
+
+RoPE composes — ``RoPE(x, p + d) = R(d) @ RoPE(x, p)`` — so re-homing a
+chunk-local cached key to a different positional layout (the paper's global
+positional reconstruction, §4.2) only needs the per-token *delta* between the
+stored and the target position.  This kernel streams key rows through VMEM in
+blocks, computing the rotation angles in-register from the delta vector; no
+cos/sin table is read from HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rerotate_kernel(delta_ref, k_ref, o_ref, *, theta):
+    k = k_ref[...]  # [BN, H, D]
+    d = k.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [D/2]
+    ang = delta_ref[...].astype(jnp.float32)[:, None] * freqs[None, :]  # [BN, D/2]
+    cos = jnp.concatenate([jnp.cos(ang), jnp.cos(ang)], axis=-1)[:, None, :]
+    sin = jnp.concatenate([jnp.sin(ang), jnp.sin(ang)], axis=-1)[:, None, :]
+    rot = jnp.concatenate([-k[..., half:], k[..., :half]], axis=-1)
+    o_ref[...] = k * cos + rot * sin
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "theta", "interpret"))
+def rope_rerotate(k, delta, *, block_n=128, theta=10000.0, interpret=True):
+    """Rotate cached keys ``k [N, H, D]`` by ``delta i32 [N]`` positions."""
+    n, h, d = k.shape
+    bn = min(block_n, n)
+    n_pad = -(-n // bn) * bn
+    kp = jnp.pad(k, ((0, n_pad - n), (0, 0), (0, 0)))
+    dp = jnp.pad(delta.astype(jnp.int32), (0, n_pad - n))
+
+    out = pl.pallas_call(
+        functools.partial(_rerotate_kernel, theta=theta),
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, h, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, h, d), jnp.float32),
+        interpret=interpret,
+    )(dp, kp)
+    return out[:n]

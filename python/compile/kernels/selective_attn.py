@@ -1,0 +1,185 @@
+"""L1 Pallas kernel: flash-style attention with an index-based causal mask.
+
+This is the kernel the paper's §8 identifies as missing from existing stacks:
+selective KV recomputation attends a *dynamically selected* subset of S tokens
+to the full N-row cache under the constraint ``k_gpos[j] <= q_gpos[i]`` — an
+irregular mask that is neither dense nor a standard causal triangle, so
+FlashAttention-style kernels cannot express it and dense fallbacks waste up
+to 2x the ideal compute.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): instead of CUDA
+threadblocks + shared memory we express the HBM->VMEM schedule with
+BlockSpecs — the Q tile stays resident in VMEM while K/V stream block by
+block along the innermost grid dimension; online-softmax statistics live in
+VMEM scratch.  The per-tile mask is rebuilt from two small i32 position
+vectors, so no O(S*N) mask tensor ever touches HBM.  Contractions are shaped
+(BQ x D) @ (D x BK) so on a real TPU they map onto the MXU with f32
+accumulation; under the CPU PJRT plugin the kernel runs with
+``interpret=True`` (Mosaic custom-calls are TPU-only).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_selective_kernel(
+    qpos_ref,  # i32 [BQ]        (prefetch-style scalar rows for this Q tile)
+    kpos_ref,  # i32 [BK]
+    kval_ref,  # f32 [BK]
+    q_ref,  # f32 [1, BQ, D]
+    k_ref,  # f32 [1, BK, D]
+    v_ref,  # f32 [1, BK, D]
+    o_ref,  # f32 [1, BQ, D]
+    acc_ref,  # f32 [BQ, D]  VMEM scratch
+    m_ref,  # f32 [BQ]     VMEM scratch
+    l_ref,  # f32 [BQ]     VMEM scratch
+    *,
+    scale,
+    num_k_blocks,
+):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [BQ, D]
+    k = k_ref[0]  # [BK, D]
+    v = v_ref[0]  # [BK, D]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [BQ, BK]
+    mask = (kpos_ref[...][None, :] <= qpos_ref[...][:, None]) & (
+        kval_ref[...][None, :] > 0
+    )
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    # Explicitly re-zero masked columns: for a fully-masked row m_new stays
+    # NEG_INF and exp(s - m_new) would be exp(0)=1 without this.
+    p = jnp.exp(s - m_new[:, None]) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-20)[:, None]
+        o_ref[0, :, :] = acc_ref[...] / denom
+
+
+def _pad_to(x, size, axis, value=0):
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def selective_attn(
+    q,
+    k,
+    v,
+    q_gpos,
+    k_gpos,
+    k_valid,
+    *,
+    block_q=16,
+    block_k=128,
+    interpret=True,
+):
+    """Selective-recompute attention. Same contract as ``ref.selective_attn``.
+
+    q: f32 [S, H, D]; k, v: f32 [N, H, D]; q_gpos: i32 [S]; k_gpos: i32 [N];
+    k_valid: f32 [N].  Returns f32 [S, H, D].
+
+    Shapes need not be multiples of the block sizes; inputs are padded and
+    the pad rows are masked out (padded K rows get k_valid=0, padded Q rows
+    are dropped from the output).
+    """
+    s_orig, h, d = q.shape
+    n_orig = k.shape[0]
+    bq = min(block_q, max(8, s_orig))
+    bk = min(block_k, max(8, n_orig))
+    s_pad = -(-s_orig // bq) * bq
+    n_pad = -(-n_orig // bk) * bk
+
+    qt = _pad_to(jnp.transpose(q, (1, 0, 2)), s_pad, axis=1)  # [H, S, D]
+    kt = _pad_to(jnp.transpose(k, (1, 0, 2)), n_pad, axis=1)
+    vt = _pad_to(jnp.transpose(v, (1, 0, 2)), n_pad, axis=1)
+    qp = _pad_to(q_gpos.astype(jnp.int32), s_pad, axis=0)
+    kp = _pad_to(k_gpos.astype(jnp.int32), n_pad, axis=0)
+    kv = _pad_to(k_valid.astype(jnp.float32), n_pad, axis=0, value=0.0)
+
+    num_q_blocks = s_pad // bq
+    num_k_blocks = n_pad // bk
+    grid = (h, num_q_blocks, num_k_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_selective_kernel,
+            scale=1.0 / (d**0.5),
+            num_k_blocks=num_k_blocks,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda hh, qb, kb: (qb,)),
+            pl.BlockSpec((bk,), lambda hh, qb, kb: (kb,)),
+            pl.BlockSpec((bk,), lambda hh, qb, kb: (kb,)),
+            pl.BlockSpec((1, bq, d), lambda hh, qb, kb: (hh, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qb, kb: (hh, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qb, kb: (hh, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qb, kb: (hh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s_pad, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, kv, qt, kt, vt)
+
+    return jnp.transpose(out, (1, 0, 2))[:s_orig]
+
+
+def vmem_footprint_bytes(block_q, block_k, head_dim, dtype_bytes=4):
+    """Estimated per-core VMEM residency for one grid step (perf planning).
+
+    Q tile + K tile + V tile + O tile + acc/m/l scratch + position vectors,
+    double-buffered on the streamed operands (K, V, positions).
+    """
+    q_tile = block_q * head_dim * dtype_bytes
+    kv_tile = 2 * block_k * head_dim * dtype_bytes
+    o_tile = block_q * head_dim * dtype_bytes
+    scratch = (block_q * head_dim + 2 * block_q) * dtype_bytes
+    pos = (block_q + 2 * block_k) * 4
+    return q_tile + o_tile + scratch + 2 * (kv_tile + pos)
+
+
+def mxu_utilization_estimate(block_q, block_k, head_dim):
+    """Fraction of MXU (128x128 systolic) lanes busy for the two matmuls."""
+
+    def eff(m_dim, n_dim, k_dim):
+        pad = lambda x: -(-x // 128) * 128  # noqa: E731
+        return (m_dim * n_dim * k_dim) / (pad(m_dim) * pad(n_dim) * pad(k_dim))
+
+    qk = eff(block_q, block_k, head_dim)
+    pv = eff(block_q, head_dim, block_k)
+    return 0.5 * (qk + pv)

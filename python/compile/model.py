@@ -1,0 +1,462 @@
+"""L2: the InfoFlow-KV transformer and its six AOT entry points.
+
+A small RoPE decoder (rotate-half convention, RMSNorm, tied LM head) whose
+weights travel as ONE flat f32 runtime parameter, so a single set of HLO
+artifacts serves every trained backbone (weights are data, not constants).
+
+Entry points lowered by ``aot.py`` (shapes fixed per context bucket N):
+
+  prefill_chunk  tokens[C]                        -> chunk-local KV
+  score          prompt + cached ctx KV (+deltas) -> Eq.7 attention-norm
+                                                     scores per layer,
+                                                     prompt KV, next-token
+                                                     logits
+  recompute      selected tokens + cached ctx KV  -> fresh KV rows at global
+                                                     positions (uses the L1
+                                                     selective_attn kernel)
+  decode_step    one token + assembled KV buffer  -> logits + new KV row
+  deviation      ctx tokens + shallow cached KV   -> CacheBlend-style
+                                                     deviation scores
+  full_prefill   whole sequence                   -> exact-baseline KV+logits
+
+Position handling: cached keys are stored under chunk-local RoPE; every
+entry point that consumes cached keys takes a per-token position *delta*
+and re-homes them with the L1 ``rope_rerotate`` kernel (RoPE composes).
+Causality everywhere is index-based (``k_gpos <= q_gpos``) because after
+chunk-wise prefill the position space is irregular — this is exactly what
+the L1 ``selective_attn`` kernel implements.
+
+Training uses the same forward pieces with ``use_pallas=False`` (pure-jnp
+oracles from kernels/ref.py) for speed; pallas-vs-jnp consistency is tested
+in python/tests/test_model.py.
+"""
+
+import dataclasses
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.selective_attn import selective_attn
+from .kernels.attn_norm import attn_norm_scores
+from .kernels.rope_kernel import rope_rerotate
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 144
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 128
+    rope_theta: float = 10000.0
+    # Serving shape constants (shared with the Rust manifest).
+    chunk: int = 64
+    prompt_len: int = 16
+    sel_budget: int = 64
+    answer_buf: int = 8
+    dev_layers: int = 2  # shallow layers used by the CacheBlend deviation probe
+
+    @property
+    def attn_dim(self):
+        return self.n_heads * self.head_dim
+
+    def config_hash(self) -> str:
+        import hashlib
+
+        return hashlib.sha256(
+            json.dumps(dataclasses.asdict(self), sort_keys=True).encode()
+        ).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout (mirrored by rust/src/manifest.rs)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat weight vector layout."""
+    specs = [("embed", (cfg.vocab, cfg.d_model))]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        specs += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.attn_dim)),
+            (p + "wk", (cfg.d_model, cfg.attn_dim)),
+            (p + "wv", (cfg.d_model, cfg.attn_dim)),
+            (p + "wo", (cfg.attn_dim, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs.append(("ln_f", (cfg.d_model,)))
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_specs(cfg))
+
+
+def unflatten(cfg: ModelConfig, w):
+    """Flat f32 vector -> dict of named arrays."""
+    out, off = {}, 0
+    for name, shape in param_specs(cfg):
+        n = int(np.prod(shape))
+        out[name] = w[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def flatten(cfg: ModelConfig, params) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_specs(cfg)]
+    )
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Flat init vector: normal(0.02) matmuls, ones for norms."""
+    chunks = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            chunks.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        else:
+            chunks.append(
+                (0.02 * jax.random.normal(sub, shape, jnp.float32)).reshape(-1)
+            )
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _heads(cfg, x):
+    return x.reshape(x.shape[0], cfg.n_heads, cfg.head_dim)
+
+
+def _attend(cfg, q, k, v, q_gpos, k_gpos, k_valid, use_pallas):
+    if use_pallas:
+        return selective_attn(q, k, v, q_gpos, k_gpos, k_valid)
+    return ref.selective_attn(q, k, v, q_gpos, k_gpos, k_valid)
+
+
+def _mlp(p, prefix, x):
+    h = jax.nn.gelu(x @ p[prefix + "w1"])
+    return h @ p[prefix + "w2"]
+
+
+def prefill(cfg, p, tokens, positions, valid, use_pallas=False):
+    """Causal forward pass over ``tokens`` placed at ``positions``.
+
+    Returns (k_cache, v_cache) of shape [L, T, H, Dh] (RoPE'd keys) and
+    the final-layer logits [T, vocab].  Causality is index-based so this
+    one function covers chunk-local prefill (positions = arange(C)), the
+    full-prefill baseline, and the training forward.
+    """
+    x = p["embed"][tokens]
+    ks, vs = [], []
+    for layer in range(cfg.n_layers):
+        pre = f"l{layer}."
+        xn = rmsnorm(x, p[pre + "ln1"])
+        q = ref.apply_rope(_heads(cfg, xn @ p[pre + "wq"]), positions, cfg.rope_theta)
+        k = ref.apply_rope(_heads(cfg, xn @ p[pre + "wk"]), positions, cfg.rope_theta)
+        v = _heads(cfg, xn @ p[pre + "wv"])
+        ks.append(k)
+        vs.append(v)
+        o = _attend(cfg, q, k, v, positions, positions, valid, use_pallas)
+        x = x + o.reshape(x.shape[0], cfg.attn_dim) @ p[pre + "wo"]
+        x = x + _mlp(p, pre, rmsnorm(x, p[pre + "ln2"]))
+    logits = rmsnorm(x, p["ln_f"]) @ p["embed"].T
+    return jnp.stack(ks), jnp.stack(vs), logits
+
+
+def score(
+    cfg,
+    p,
+    prompt,
+    prompt_pos,
+    prompt_valid,
+    ctx_k,
+    ctx_v,
+    ctx_delta,
+    ctx_gpos,
+    ctx_valid,
+    use_pallas=True,
+):
+    """Prompt forward over a cached context under a RoPE geometry (§4.2).
+
+    Cached keys are re-homed by ``ctx_delta`` (GLOBAL geometry passes the
+    packed-global delta, decode-time reuse passes 0), then the prompt runs
+    causally on top of the context.  Outputs:
+
+      scores     f32 [L, N]  Eq.-7 attention-norm score of every context
+                             token at every layer (fused L1 kernel),
+      prompt_k/v f32 [L, P, H, Dh] for the decode buffer,
+      last_logits f32 [vocab] next-token logits of the final prompt row.
+    """
+    n = ctx_k.shape[1]
+    x = p["embed"][prompt]
+    scores, pks, pvs = [], [], []
+    rot = rope_rerotate if use_pallas else ref.rope_rerotate
+    for layer in range(cfg.n_layers):
+        pre = f"l{layer}."
+        xn = rmsnorm(x, p[pre + "ln1"])
+        q = ref.apply_rope(_heads(cfg, xn @ p[pre + "wq"]), prompt_pos, cfg.rope_theta)
+        k = ref.apply_rope(_heads(cfg, xn @ p[pre + "wk"]), prompt_pos, cfg.rope_theta)
+        v = _heads(cfg, xn @ p[pre + "wv"])
+        pks.append(k)
+        pvs.append(v)
+        kc = rot(ctx_k[layer], ctx_delta)
+        if use_pallas:
+            s = attn_norm_scores(q, kc, k, ctx_valid, prompt_valid)
+        else:
+            s = ref.attn_norm_scores(q, kc, k, ctx_valid, prompt_valid)
+        scores.append(s)
+        k_all = jnp.concatenate([kc, k], axis=0)
+        v_all = jnp.concatenate([ctx_v[layer], v], axis=0)
+        gpos_all = jnp.concatenate([ctx_gpos, prompt_pos])
+        valid_all = jnp.concatenate([ctx_valid, prompt_valid])
+        o = _attend(cfg, q, k_all, v_all, prompt_pos, gpos_all, valid_all, use_pallas)
+        x = x + o.reshape(x.shape[0], cfg.attn_dim) @ p[pre + "wo"]
+        x = x + _mlp(p, pre, rmsnorm(x, p[pre + "ln2"]))
+    last_logits = rmsnorm(x[-1], p["ln_f"]) @ p["embed"].T
+    return jnp.stack(scores), jnp.stack(pks), jnp.stack(pvs), last_logits
+
+
+def recompute(
+    cfg,
+    p,
+    sel_tokens,
+    sel_gpos,
+    sel_slot,
+    sel_valid,
+    ctx_k,
+    ctx_v,
+    ctx_delta,
+    ctx_gpos,
+    ctx_valid,
+    use_pallas=True,
+):
+    """Selective KV recomputation under the global causal mask (§4.2, App. B).
+
+    The S selected tokens are re-embedded and run through every layer at
+    their global positions.  At each layer the cached keys are re-homed to
+    the global layout, the selected rows are *patched in place* with the
+    fresh keys/values (so selected tokens see each other's recomputed
+    states, CacheBlend-style progressive patching), and the selected
+    queries attend through the L1 selective_attn kernel under the
+    irregular index-based causal mask.
+
+    ``sel_slot`` is each selected token's row index in the ctx buffer
+    (out-of-range => padding row, dropped by the scatter).  Returns fresh
+    (new_k, new_v) of shape [L, S, H, Dh].
+    """
+    x = p["embed"][sel_tokens]
+    rot = rope_rerotate if use_pallas else ref.rope_rerotate
+    new_ks, new_vs = [], []
+    for layer in range(cfg.n_layers):
+        pre = f"l{layer}."
+        xn = rmsnorm(x, p[pre + "ln1"])
+        q = ref.apply_rope(_heads(cfg, xn @ p[pre + "wq"]), sel_gpos, cfg.rope_theta)
+        k = ref.apply_rope(_heads(cfg, xn @ p[pre + "wk"]), sel_gpos, cfg.rope_theta)
+        v = _heads(cfg, xn @ p[pre + "wv"])
+        new_ks.append(k)
+        new_vs.append(v)
+        kc = rot(ctx_k[layer], ctx_delta)
+        # Progressive patch: recomputed rows replace their cache slots.
+        kc = kc.at[sel_slot].set(k, mode="drop")
+        vc = ctx_v[layer].at[sel_slot].set(v, mode="drop")
+        gpos = ctx_gpos.at[sel_slot].set(sel_gpos, mode="drop")
+        o = _attend(cfg, q, kc, vc, sel_gpos, gpos, ctx_valid, use_pallas)
+        x = x + o.reshape(x.shape[0], cfg.attn_dim) @ p[pre + "wo"]
+        x = x + _mlp(p, pre, rmsnorm(x, p[pre + "ln2"]))
+    # Zero the padding rows of the selection (also keeps sel_valid live in
+    # the lowered module so the AOT arity matches the manifest).
+    m = sel_valid[None, :, None, None]
+    return jnp.stack(new_ks) * m, jnp.stack(new_vs) * m
+
+
+def decode_step(cfg, p, tok, pos, k_all, v_all, k_gpos, k_valid, use_pallas=True):
+    """One autoregressive step over the assembled decode buffer.
+
+    k_all/v_all: [L, T, H, Dh] rows owned by the Rust KV layout (stale
+    chunk rows, recomputed rows, prompt rows, generated rows).  Returns
+    (logits [vocab], new_k [L, H, Dh], new_v [L, H, Dh]); the coordinator
+    writes the new row into the buffer and bumps its validity mask.
+    """
+    x = p["embed"][tok][None, :]  # [1, d]
+    pos1 = pos[None]
+    one = jnp.ones((1,), jnp.float32)
+    new_ks, new_vs = [], []
+    for layer in range(cfg.n_layers):
+        pre = f"l{layer}."
+        xn = rmsnorm(x, p[pre + "ln1"])
+        q = ref.apply_rope(_heads(cfg, xn @ p[pre + "wq"]), pos1, cfg.rope_theta)
+        k = ref.apply_rope(_heads(cfg, xn @ p[pre + "wk"]), pos1, cfg.rope_theta)
+        v = _heads(cfg, xn @ p[pre + "wv"])
+        new_ks.append(k[0])
+        new_vs.append(v[0])
+        k_cat = jnp.concatenate([k_all[layer], k], axis=0)
+        v_cat = jnp.concatenate([v_all[layer], v], axis=0)
+        gpos_cat = jnp.concatenate([k_gpos, pos1])
+        valid_cat = jnp.concatenate([k_valid, one])
+        o = _attend(cfg, q, k_cat, v_cat, pos1, gpos_cat, valid_cat, use_pallas)
+        x = x + o.reshape(1, cfg.attn_dim) @ p[pre + "wo"]
+        x = x + _mlp(p, pre, rmsnorm(x, p[pre + "ln2"]))
+    logits = rmsnorm(x[0], p["ln_f"]) @ p["embed"].T
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def deviation(
+    cfg,
+    p,
+    ctx_tokens,
+    ctx_gpos,
+    ctx_valid,
+    ctx_k_shallow,
+    ctx_v_shallow,
+    ctx_delta,
+    use_pallas=True,
+):
+    """CacheBlend-style deviation probe (baseline, §2.3).
+
+    Runs only the first ``cfg.dev_layers`` layers of the *full-context*
+    forward (global positions, cross-chunk attention restored) and scores
+    each context token by how far its true shallow KV states deviate from
+    the re-homed cached ones.  Returns f32 [N].
+    """
+    x = p["embed"][ctx_tokens]
+    rot = rope_rerotate if use_pallas else ref.rope_rerotate
+    dev = jnp.zeros((ctx_tokens.shape[0],), jnp.float32)
+    for layer in range(cfg.dev_layers):
+        pre = f"l{layer}."
+        xn = rmsnorm(x, p[pre + "ln1"])
+        q = ref.apply_rope(_heads(cfg, xn @ p[pre + "wq"]), ctx_gpos, cfg.rope_theta)
+        k = ref.apply_rope(_heads(cfg, xn @ p[pre + "wk"]), ctx_gpos, cfg.rope_theta)
+        v = _heads(cfg, xn @ p[pre + "wv"])
+        kc = rot(ctx_k_shallow[layer], ctx_delta)
+        vc = ctx_v_shallow[layer]
+        dk = jnp.sqrt(jnp.sum((k - kc) ** 2, axis=(-1, -2)) + 1e-12)
+        dv = jnp.sqrt(jnp.sum((v - vc) ** 2, axis=(-1, -2)) + 1e-12)
+        dev = dev + (dk + dv) * ctx_valid
+        o = _attend(cfg, q, k, v, ctx_gpos, ctx_gpos, ctx_valid, use_pallas)
+        x = x + o.reshape(x.shape[0], cfg.attn_dim) @ p[pre + "wo"]
+        x = x + _mlp(p, pre, rmsnorm(x, p[pre + "ln2"]))
+    return dev
+
+
+# ---------------------------------------------------------------------------
+# Flat-weight entry-point wrappers (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_entry_points(cfg: ModelConfig, n_ctx: int, use_pallas=True):
+    """Closures with the exact AOT signatures for context bucket ``n_ctx``.
+
+    Every function takes the flat weight vector first; all shapes are
+    static.  Returns {name: (fn, example_args)} for jax.jit(...).lower().
+    """
+    L, H, Dh, V = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.vocab
+    C, P, S = cfg.chunk, cfg.prompt_len, cfg.sel_budget
+    T = n_ctx + P + cfg.answer_buf
+    R = cfg.dev_layers
+    W = param_count(cfg)
+
+    f32, i32 = jnp.float32, jnp.int32
+
+    def sds(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    def prefill_chunk_fn(w, tokens, valid):
+        pdict = unflatten(cfg, w)
+        k, v, _ = prefill(
+            cfg, pdict, tokens, jnp.arange(C, dtype=i32), valid, use_pallas
+        )
+        return k, v
+
+    def score_fn(w, prompt, ppos, pvalid, ck, cv, cdelta, cgpos, cvalid):
+        return score(
+            cfg, unflatten(cfg, w), prompt, ppos, pvalid, ck, cv, cdelta,
+            cgpos, cvalid, use_pallas,
+        )
+
+    def recompute_fn(w, st, sg, ss, sv, ck, cv, cdelta, cgpos, cvalid):
+        return recompute(
+            cfg, unflatten(cfg, w), st, sg, ss, sv, ck, cv, cdelta, cgpos,
+            cvalid, use_pallas,
+        )
+
+    def decode_fn(w, tok, pos, ka, va, kg, kv):
+        return decode_step(
+            cfg, unflatten(cfg, w), tok, pos, ka, va, kg, kv, use_pallas
+        )
+
+    def deviation_fn(w, ct, cg, cvld, cks, cvs, cdelta):
+        return deviation(
+            cfg, unflatten(cfg, w), ct, cg, cvld, cks, cvs, cdelta, use_pallas
+        )
+
+    def full_prefill_fn(w, tokens, pos, valid):
+        pdict = unflatten(cfg, w)
+        k, v, logits = prefill(cfg, pdict, tokens, pos, valid, use_pallas)
+        return k, v, logits[-1]
+
+    NP = n_ctx + P
+    return {
+        "prefill_chunk": (
+            prefill_chunk_fn,
+            (sds((W,)), sds((C,), i32), sds((C,))),
+        ),
+        "score": (
+            score_fn,
+            (
+                sds((W,)), sds((P,), i32), sds((P,), i32), sds((P,)),
+                sds((L, n_ctx, H, Dh)), sds((L, n_ctx, H, Dh)),
+                sds((n_ctx,), i32), sds((n_ctx,), i32), sds((n_ctx,)),
+            ),
+        ),
+        "recompute": (
+            recompute_fn,
+            (
+                sds((W,)), sds((S,), i32), sds((S,), i32), sds((S,), i32),
+                sds((S,)),
+                sds((L, n_ctx, H, Dh)), sds((L, n_ctx, H, Dh)),
+                sds((n_ctx,), i32), sds((n_ctx,), i32), sds((n_ctx,)),
+            ),
+        ),
+        "decode": (
+            decode_fn,
+            (
+                sds((W,)), sds((), i32), sds((), i32),
+                sds((L, T, H, Dh)), sds((L, T, H, Dh)),
+                sds((T,), i32), sds((T,)),
+            ),
+        ),
+        "deviation": (
+            deviation_fn,
+            (
+                sds((W,)), sds((n_ctx,), i32), sds((n_ctx,), i32),
+                sds((n_ctx,)),
+                sds((R, n_ctx, H, Dh)), sds((R, n_ctx, H, Dh)),
+                sds((n_ctx,), i32),
+            ),
+        ),
+        "full_prefill": (
+            full_prefill_fn,
+            (sds((W,)), sds((NP,), i32), sds((NP,), i32), sds((NP,))),
+        ),
+    }

@@ -1,0 +1,280 @@
+"""The synthetic fact micro-language: vocabulary + training sample generator.
+
+This grammar is the build-time contract between the Python training/AOT side
+and the Rust serving/eval side (rust/src/vocab.rs and rust/src/workload/
+implement the same layout; the constants are exported through
+artifacts/manifest.json so the two can never drift silently).
+
+Vocabulary (144 ids — sized so the ~170k-param backbone can actually learn
+reliable in-context retrieval on a single-CPU training budget):
+
+  0..15   specials: PAD BOS QUERY ANSWER SEP KEYMARK VALMARK EOS IMG ROW COL HOP
+  16..63  keys     (grid tasks use keys 0..15 as rows, 16..31 as cols)
+  64..111 values
+  112..143 filler  (semantically-neutral noise; also used as chunk padding)
+
+Fact forms (offset-1 grammar: the value follows its key directly, so the
+standard two-layer induction circuit can read it; each fact fits inside one
+chunk and never straddles a boundary):
+
+  value fact   KEYMARK k v1 v2 SEP        answer of k = (v1, v2)
+  link fact    KEYMARK k1 HOP k2 SEP      k1 hops to k2
+  grid cell    IMG r c v                  cell (r, c) holds v
+  chart point  ROW r v                    series r has value v
+
+Queries (front-padded to prompt_len with PAD, all rows valid):
+
+  onehop/recency  QUERY k ANSWER          -> v1 v2 EOS
+  twohop          QUERY HOP k1 ANSWER     -> v1 v2 EOS   (values of k1's target)
+  grid            QUERY IMG r c ANSWER    -> v EOS EOS
+  chart           QUERY ROW r ANSWER      -> v EOS EOS
+
+The *recency* task places the queried key 2-3 times with different values and
+defines the answer as the LAST occurrence — this is what makes retrieval
+position-critical, so chunk-local (stale) RoPE keys genuinely hurt and
+selective recomputation genuinely helps (the failure mode the paper studies).
+"""
+
+import dataclasses
+
+import numpy as np
+
+# --- special token ids (mirrored in rust/src/vocab.rs) ---------------------
+PAD, BOS, QUERY, ANSWER, SEP, KEYMARK, VALMARK, EOS = 0, 1, 2, 3, 4, 5, 6, 7
+IMG, ROW, COL, HOP = 8, 9, 10, 11
+
+KEY_BASE, NUM_KEYS = 16, 48
+VAL_BASE, NUM_VALS = 64, 48
+FILLER_BASE, NUM_FILLER = 112, 32
+VOCAB = 144
+
+ANSWER_LEN = 3  # two payload slots + EOS (short answers repeat EOS)
+
+TASKS = ("onehop", "recency", "twohop", "grid", "chart")
+
+# Default task mixture for the "LLM" backbones; the VLM backbone reweights
+# toward grid/chart (see train.py).
+LLM_MIX = {"onehop": 0.28, "recency": 0.27, "twohop": 0.15, "grid": 0.15, "chart": 0.15}
+VLM_MIX = {"onehop": 0.14, "recency": 0.13, "twohop": 0.08, "grid": 0.35, "chart": 0.30}
+
+
+def vocab_spec() -> dict:
+    """Exported into manifest.json for the Rust side."""
+    return {
+        "vocab": VOCAB,
+        "pad": PAD, "bos": BOS, "query": QUERY, "answer": ANSWER,
+        "sep": SEP, "keymark": KEYMARK, "valmark": VALMARK, "eos": EOS,
+        "img": IMG, "row": ROW, "col": COL, "hop": HOP,
+        "key_base": KEY_BASE, "num_keys": NUM_KEYS,
+        "val_base": VAL_BASE, "num_vals": NUM_VALS,
+        "filler_base": FILLER_BASE, "num_filler": NUM_FILLER,
+        "answer_len": ANSWER_LEN,
+    }
+
+
+def rand_key(rng):
+    return KEY_BASE + int(rng.integers(NUM_KEYS))
+
+
+def rand_val(rng):
+    return VAL_BASE + int(rng.integers(NUM_VALS))
+
+
+def rand_filler(rng, n):
+    return (FILLER_BASE + rng.integers(NUM_FILLER, size=n)).tolist()
+
+
+def value_fact(k, v1, v2):
+    return [KEYMARK, k, v1, v2, SEP]
+
+
+def link_fact(k1, k2):
+    return [KEYMARK, k1, HOP, k2, SEP]
+
+
+def grid_cell(r, c, v):
+    return [IMG, r, c, v]
+
+
+def chart_point(r, v):
+    return [ROW, r, v]
+
+
+@dataclasses.dataclass
+class Sample:
+    ctx: list  # n_ctx token ids (chunk-aligned facts + filler)
+    prompt: list  # prompt_len ids, front-padded with PAD
+    answer: list  # ANSWER_LEN ids ending in EOS
+    task: str
+    needle_chunks: list  # chunk indices holding answer-bearing facts
+
+
+def _place_facts(rng, facts, n_ctx, chunk):
+    """Scatter fact token lists into an n_ctx stream without straddling
+    chunk boundaries; gaps become filler. Returns (ctx, fact_chunk_ids).
+
+    Facts are laid out in list order (fact i precedes fact i+1 in the
+    context) so callers can control recency semantics."""
+    n_chunks = n_ctx // chunk
+    # Assign facts to chunks in order: pick a non-decreasing random chunk
+    # index per fact, subject to capacity.
+    cap = [chunk] * n_chunks
+    fact_chunk = []
+    c = 0
+    for i, f in enumerate(facts):
+        remaining = facts[i:]
+        # move forward randomly but keep room for the remaining facts
+        while True:
+            # can the rest fit if we stay at or after c?
+            room = sum(cap[c:])
+            need = sum(len(x) for x in remaining)
+            if need > room:
+                raise ValueError("facts do not fit the context")
+            if cap[c] >= len(f) and (rng.integers(3) > 0 or c == n_chunks - 1):
+                break
+            if c < n_chunks - 1 and sum(cap[c + 1 :]) >= need:
+                c += 1
+            elif cap[c] >= len(f):
+                break
+            else:
+                raise ValueError("facts do not fit the context")
+        cap[c] -= len(f)
+        fact_chunk.append(c)
+    ctx = []
+    for ci in range(n_chunks):
+        body = []
+        for fi, f in enumerate(facts):
+            if fact_chunk[fi] == ci:
+                body.extend(f)
+        pad = chunk - len(body)
+        cut = int(rng.integers(pad + 1))
+        ctx.extend(rand_filler(rng, cut) + body + rand_filler(rng, pad - cut))
+    return ctx, fact_chunk
+
+
+def _pad_prompt(prompt, prompt_len):
+    assert len(prompt) <= prompt_len
+    return [PAD] * (prompt_len - len(prompt)) + prompt
+
+
+def _pad_answer(ans):
+    return (ans + [EOS] * ANSWER_LEN)[:ANSWER_LEN]
+
+
+def _fact_budget(rng, n_ctx, n_facts):
+    if n_facts is not None:
+        return n_facts
+    # few facts: capacity-matched to the tiny backbone
+    hi = max(3, min(8, n_ctx // 48))
+    return 2 + int(rng.integers(hi - 1))
+
+
+def make_sample(rng, task, n_ctx, chunk=64, prompt_len=16, n_facts=None) -> Sample:
+    """One (context, prompt, answer) episode of the given task type."""
+    budget = _fact_budget(rng, n_ctx, n_facts)
+
+    if task in ("onehop", "recency"):
+        keys = rng.choice(NUM_KEYS, size=budget, replace=False) + KEY_BASE
+        facts, vals = [], {}
+        for k in keys:
+            v1, v2 = rand_val(rng), rand_val(rng)
+            vals[int(k)] = [v1, v2]
+            facts.append(value_fact(int(k), v1, v2))
+        qk = int(keys[rng.integers(len(keys))])
+        if task == "recency":
+            # The queried key occurs 2-3 times; the LAST copy (in context
+            # order == position order) wins.
+            n_dup = 1 + int(rng.integers(2))
+            for _ in range(n_dup):
+                v1, v2 = rand_val(rng), rand_val(rng)
+                at = int(rng.integers(len(facts) + 1))
+                facts.insert(at, value_fact(qk, v1, v2))
+            ctx, fact_chunk = _place_facts(rng, facts, n_ctx, chunk)
+            last = None
+            for i in range(len(ctx) - 4):
+                if ctx[i] == KEYMARK and ctx[i + 1] == qk:
+                    last = i
+            answer = [ctx[last + 2], ctx[last + 3]]
+            return Sample(ctx, _pad_prompt([QUERY, qk, ANSWER], prompt_len),
+                          _pad_answer(answer), task, [last // chunk])
+        ctx, fact_chunk = _place_facts(rng, facts, n_ctx, chunk)
+        qi = list(keys).index(qk)
+        return Sample(
+            ctx, _pad_prompt([QUERY, qk, ANSWER], prompt_len),
+            _pad_answer(vals[qk]), task, [fact_chunk[qi]],
+        )
+
+    if task == "twohop":
+        ks = rng.choice(NUM_KEYS, size=max(budget, 3), replace=False) + KEY_BASE
+        k1, k2 = int(ks[0]), int(ks[1])
+        v1, v2 = rand_val(rng), rand_val(rng)
+        facts = [link_fact(k1, k2), value_fact(k2, v1, v2)]
+        for k in ks[2:]:
+            facts.append(value_fact(int(k), rand_val(rng), rand_val(rng)))
+        # shuffle fact order (the two needle facts may land in any chunks)
+        order = rng.permutation(len(facts))
+        facts = [facts[i] for i in order]
+        i_link = int(np.where(order == 0)[0][0])
+        i_val = int(np.where(order == 1)[0][0])
+        ctx, fact_chunk = _place_facts(rng, facts, n_ctx, chunk)
+        return Sample(
+            ctx, _pad_prompt([QUERY, HOP, k1, ANSWER], prompt_len),
+            _pad_answer([v1, v2]), task,
+            sorted({fact_chunk[i_link], fact_chunk[i_val]}),
+        )
+
+    if task == "grid":
+        rows = rng.choice(16, size=3, replace=False) + KEY_BASE
+        cols = rng.choice(16, size=3, replace=False) + KEY_BASE + 16
+        cells, facts = {}, []
+        for r in rows:
+            for c in cols:
+                v = rand_val(rng)
+                cells[(int(r), int(c))] = v
+                facts.append(grid_cell(int(r), int(c), v))
+        qr = int(rows[rng.integers(len(rows))])
+        qc = int(cols[rng.integers(len(cols))])
+        qi = facts.index(grid_cell(qr, qc, cells[(qr, qc)]))
+        ctx, fact_chunk = _place_facts(rng, facts, n_ctx, chunk)
+        return Sample(
+            ctx, _pad_prompt([QUERY, IMG, qr, qc, ANSWER], prompt_len),
+            _pad_answer([cells[(qr, qc)]]), task, [fact_chunk[qi]],
+        )
+
+    if task == "chart":
+        rows = rng.choice(NUM_KEYS, size=min(6, max(budget, 3)), replace=False) + KEY_BASE
+        facts, vals = [], {}
+        for r in rows:
+            v = rand_val(rng)
+            vals[int(r)] = v
+            facts.append(chart_point(int(r), v))
+        qr = int(rows[rng.integers(len(rows))])
+        qi = list(rows).index(qr)
+        ctx, fact_chunk = _place_facts(rng, facts, n_ctx, chunk)
+        return Sample(
+            ctx, _pad_prompt([QUERY, ROW, qr, ANSWER], prompt_len),
+            _pad_answer([vals[qr]]), task, [fact_chunk[qi]],
+        )
+
+    raise ValueError(f"unknown task {task}")
+
+
+def sample_batch(rng, mix, batch, n_ctx, chunk=64, prompt_len=16):
+    """Batched training arrays: (tokens [B, T], loss_mask [B, T]).
+
+    Sequence layout = ctx ++ prompt ++ answer; the loss mask covers exactly
+    the answer positions (next-token prediction, so the mask marks targets).
+    """
+    names = list(mix.keys())
+    probs = np.array([mix[n] for n in names], dtype=np.float64)
+    probs /= probs.sum()
+    seq_len = n_ctx + prompt_len + ANSWER_LEN
+    toks = np.zeros((batch, seq_len), dtype=np.int32)
+    mask = np.zeros((batch, seq_len), dtype=np.float32)
+    for b in range(batch):
+        task = names[int(rng.choice(len(names), p=probs))]
+        s = make_sample(rng, task, n_ctx, chunk, prompt_len)
+        seq = s.ctx + s.prompt + s.answer
+        toks[b] = np.array(seq, dtype=np.int32)
+        mask[b, n_ctx + prompt_len :] = 1.0
+    return toks, mask

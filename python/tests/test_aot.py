@@ -1,0 +1,104 @@
+"""AOT artifact contract tests: the manifest the Rust runtime trusts must
+exactly describe what the Python side lowers.
+
+These run against the real artifacts/ when present (after `make artifacts`);
+the pure-consistency checks (specs vs eval_shape) run always.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile.model import ModelConfig, make_entry_points, param_count, param_specs
+from compile.aot import BUCKETS
+from compile import tasks
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts/ not built")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifestContract:
+    def test_model_dims_match_default_config(self):
+        m = manifest()
+        cfg = ModelConfig()
+        for field in ("vocab", "d_model", "n_layers", "n_heads", "head_dim",
+                      "chunk", "prompt_len", "sel_budget", "answer_buf"):
+            assert m["model"][field] == getattr(cfg, field), field
+        assert m["param_count"] == param_count(cfg)
+
+    def test_param_layout_matches_specs(self):
+        m = manifest()
+        cfg = ModelConfig()
+        specs = param_specs(cfg)
+        assert len(m["param_layout"]) == len(specs)
+        for got, (name, shape) in zip(m["param_layout"], specs):
+            assert got["name"] == name
+            assert tuple(got["shape"]) == tuple(shape)
+
+    def test_vocab_spec_matches_tasks(self):
+        m = manifest()
+        for k, v in tasks.vocab_spec().items():
+            assert m["vocab"][k] == v, k
+
+    def test_every_executable_file_exists_with_args(self):
+        m = manifest()
+        names = set()
+        for e in m["executables"]:
+            assert os.path.exists(os.path.join(ART, e["file"])), e["file"]
+            assert len(e["args"]) >= 3
+            assert len(e["outputs"]) >= 1
+            # weights always come first
+            assert e["args"][0]["shape"] == [m["param_count"]]
+            names.add((e["name"], e["bucket"]))
+        for n in BUCKETS:
+            for ex in ("score", "recompute", "decode", "deviation", "full_prefill"):
+                assert (ex, n) in names
+        assert ("prefill_chunk", None) in names
+
+    def test_backbone_weights_exist_and_sized(self):
+        m = manifest()
+        assert m["backbones"], "no backbones — training incomplete"
+        for name, b in m["backbones"].items():
+            path = os.path.join(ART, b["weights"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) == m["param_count"] * 4, name
+
+
+class TestSpecConsistency:
+    """Pure checks: manifest arg specs are generated from the same example
+    args that get lowered, so eval_shape must agree for every entry point."""
+
+    @pytest.mark.parametrize("n_ctx", [128, 256])
+    def test_entry_point_outputs_are_stable(self, n_ctx):
+        cfg = ModelConfig()
+        eps = make_entry_points(cfg, n_ctx, use_pallas=False)
+        fn, args = eps["score"]
+        score_out = jax.eval_shape(fn, *args)
+        leaves = jax.tree.leaves(score_out)
+        # scores, prompt_k, prompt_v, last_logits
+        assert tuple(leaves[0].shape) == (cfg.n_layers, n_ctx)
+        assert tuple(leaves[1].shape) == (
+            cfg.n_layers, cfg.prompt_len, cfg.n_heads, cfg.head_dim)
+        assert tuple(leaves[3].shape) == (cfg.vocab,)
+        rfn, rargs = eps["recompute"]
+        rec_out = jax.tree.leaves(jax.eval_shape(rfn, *rargs))
+        assert tuple(rec_out[0].shape) == (
+            cfg.n_layers, cfg.sel_budget, cfg.n_heads, cfg.head_dim)
+        dfn, dargs = eps["decode"]
+        dec_out = jax.tree.leaves(jax.eval_shape(dfn, *dargs))
+        assert tuple(dec_out[0].shape) == (cfg.vocab,)
+
+    def test_weights_param_is_first_and_flat(self):
+        cfg = ModelConfig()
+        eps = make_entry_points(cfg, 128, use_pallas=False)
+        for name, (_fn, args) in eps.items():
+            assert args[0].shape == (param_count(cfg),), name

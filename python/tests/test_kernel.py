@@ -1,0 +1,262 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in
+``compile.kernels.ref`` — fixed cases for the shapes the AOT artifacts use,
+plus hypothesis sweeps over shapes, block sizes, position patterns and masks.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.selective_attn import (
+    selective_attn,
+    vmem_footprint_bytes,
+    mxu_utilization_estimate,
+)
+from compile.kernels.attn_norm import attn_norm_scores
+from compile.kernels.rope_kernel import rope_rerotate
+
+ATOL = 2e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# selective_attn
+# ---------------------------------------------------------------------------
+
+
+class TestSelectiveAttn:
+    @pytest.mark.parametrize("s,n", [(64, 128), (64, 256), (64, 512), (8, 64)])
+    def test_artifact_shapes(self, s, n):
+        """Exact shapes the AOT recompute executables are built with."""
+        rng = np.random.default_rng(s + n)
+        h, d = 4, 16
+        q, k, v = _rand(rng, s, h, d), _rand(rng, n, h, d), _rand(rng, n, h, d)
+        qg = jnp.asarray(rng.integers(0, n + 32, s), jnp.int32)
+        kg = jnp.asarray(rng.integers(0, n + 32, n), jnp.int32)
+        kv = jnp.ones((n,), jnp.float32)
+        got = selective_attn(q, k, v, qg, kg, kv)
+        want = ref.selective_attn(q, k, v, qg, kg, kv)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_fully_masked_row_is_zero(self):
+        """A query whose global position precedes every key must output 0."""
+        rng = np.random.default_rng(0)
+        q, k, v = _rand(rng, 4, 2, 8), _rand(rng, 16, 2, 8), _rand(rng, 16, 2, 8)
+        qg = jnp.array([0, 100, 0, 100], jnp.int32)
+        kg = jnp.full((16,), 50, jnp.int32)
+        kv = jnp.ones((16,), jnp.float32)
+        out = selective_attn(q, k, v, qg, kg, kv, block_q=8, block_k=8)
+        np.testing.assert_allclose(out[0], 0.0, atol=ATOL)
+        np.testing.assert_allclose(out[2], 0.0, atol=ATOL)
+        assert float(jnp.abs(out[1]).max()) > 0
+
+    def test_all_keys_invalid_is_zero(self):
+        rng = np.random.default_rng(1)
+        q, k, v = _rand(rng, 8, 2, 8), _rand(rng, 32, 2, 8), _rand(rng, 32, 2, 8)
+        out = selective_attn(
+            q, k, v,
+            jnp.full((8,), 1000, jnp.int32),
+            jnp.zeros((32,), jnp.int32),
+            jnp.zeros((32,), jnp.float32),
+        )
+        np.testing.assert_allclose(out, 0.0, atol=ATOL)
+
+    def test_reduces_to_standard_causal(self):
+        """With q_gpos == k_gpos == arange, matches plain causal attention."""
+        rng = np.random.default_rng(2)
+        n, h, d = 32, 2, 8
+        q, k, v = _rand(rng, n, h, d), _rand(rng, n, h, d), _rand(rng, n, h, d)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        ones = jnp.ones((n,), jnp.float32)
+        got = selective_attn(q, k, v, pos, pos, ones, block_q=8, block_k=8)
+        want = ref.selective_attn(q, k, v, pos, pos, ones)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_block_shape_invariance(self):
+        """Result must not depend on the tiling."""
+        rng = np.random.default_rng(3)
+        s, n, h, d = 24, 100, 4, 16
+        q, k, v = _rand(rng, s, h, d), _rand(rng, n, h, d), _rand(rng, n, h, d)
+        qg = jnp.asarray(rng.integers(0, 200, s), jnp.int32)
+        kg = jnp.asarray(rng.integers(0, 200, n), jnp.int32)
+        kv = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        base = selective_attn(q, k, v, qg, kg, kv, block_q=8, block_k=16)
+        for bq, bk in [(16, 32), (8, 128), (24, 64)]:
+            other = selective_attn(q, k, v, qg, kg, kv, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(base, other, atol=ATOL)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        s=st.integers(1, 40),
+        n=st.integers(1, 160),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**16),
+        bq=st.sampled_from([8, 16]),
+        bk=st.sampled_from([16, 64, 128]),
+    )
+    def test_hypothesis_matches_ref(self, s, n, h, d, seed, bq, bk):
+        rng = np.random.default_rng(seed)
+        q, k, v = _rand(rng, s, h, d), _rand(rng, n, h, d), _rand(rng, n, h, d)
+        qg = jnp.asarray(rng.integers(0, 2 * n + 2, s), jnp.int32)
+        kg = jnp.asarray(rng.integers(0, 2 * n + 2, n), jnp.int32)
+        kv = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        got = selective_attn(q, k, v, qg, kg, kv, block_q=bq, block_k=bk)
+        want = ref.selective_attn(q, k, v, qg, kg, kv)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+    def test_perf_model_helpers(self):
+        """VMEM/MXU estimators: sane ranges for the shapes we ship."""
+        fp = vmem_footprint_bytes(64, 128, 16)
+        assert 0 < fp < 16 * 1024 * 1024
+        u = mxu_utilization_estimate(64, 128, 16)
+        assert 0.0 < u <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# attn_norm_scores
+# ---------------------------------------------------------------------------
+
+
+class TestAttnNorm:
+    @pytest.mark.parametrize("n", [128, 256, 512])
+    def test_artifact_shapes(self, n):
+        rng = np.random.default_rng(n)
+        p, h, d = 16, 4, 16
+        qp, kp = _rand(rng, p, h, d), _rand(rng, p, h, d)
+        kc = _rand(rng, n, h, d)
+        kv = jnp.ones((n,), jnp.float32)
+        pv = jnp.ones((p,), jnp.float32)
+        got = attn_norm_scores(qp, kc, kp, kv, pv)
+        want = ref.attn_norm_scores(qp, kc, kp, kv, pv)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+    def test_scores_are_a_distribution_slice(self):
+        """Ctx scores are nonnegative and bounded by heads * valid prompt rows."""
+        rng = np.random.default_rng(7)
+        p, n, h, d = 8, 64, 2, 8
+        qp, kp, kc = _rand(rng, p, h, d), _rand(rng, p, h, d), _rand(rng, n, h, d)
+        kv = jnp.ones((n,), jnp.float32)
+        pv = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 0], jnp.float32)
+        s = attn_norm_scores(qp, kc, kp, kv, pv)
+        assert bool(jnp.all(s >= -1e-6))
+        # total mass <= heads * valid prompt rows (rest went to prompt self-attn)
+        assert float(jnp.sum(s)) <= h * float(jnp.sum(pv)) + 1e-4
+
+    def test_invalid_ctx_rows_get_zero(self):
+        rng = np.random.default_rng(8)
+        p, n, h, d = 4, 32, 2, 8
+        qp, kp, kc = _rand(rng, p, h, d), _rand(rng, p, h, d), _rand(rng, n, h, d)
+        kv = jnp.asarray([1.0] * 16 + [0.0] * 16, jnp.float32)
+        pv = jnp.ones((p,), jnp.float32)
+        s = attn_norm_scores(qp, kc, kp, kv, pv)
+        np.testing.assert_allclose(s[16:], 0.0, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        p=st.integers(1, 24),
+        n=st.integers(1, 160),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([4, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_matches_ref(self, p, n, h, d, seed):
+        rng = np.random.default_rng(seed)
+        qp, kp, kc = _rand(rng, p, h, d), _rand(rng, p, h, d), _rand(rng, n, h, d)
+        kv = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        pv_np = rng.integers(0, 2, p)
+        if pv_np.sum() == 0:
+            pv_np[0] = 1
+        pv = jnp.asarray(pv_np, jnp.float32)
+        got = attn_norm_scores(qp, kc, kp, kv, pv)
+        want = ref.attn_norm_scores(qp, kc, kp, kv, pv)
+        np.testing.assert_allclose(got, want, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# rope_rerotate
+# ---------------------------------------------------------------------------
+
+
+class TestRopeRerotate:
+    def test_zero_delta_is_identity(self):
+        rng = np.random.default_rng(9)
+        k = _rand(rng, 50, 4, 16)
+        out = rope_rerotate(k, jnp.zeros((50,), jnp.int32), block_n=16)
+        np.testing.assert_allclose(out, k, atol=ATOL)
+
+    def test_composition_law(self):
+        """rerotate(RoPE(x, p), d) == RoPE(x, p + d) — the key cache-reuse fact."""
+        rng = np.random.default_rng(10)
+        x = _rand(rng, 64, 4, 16)
+        p0 = jnp.asarray(rng.integers(0, 64, 64), jnp.int32)
+        d = jnp.asarray(rng.integers(-32, 512, 64), jnp.int32)
+        lhs = rope_rerotate(ref.apply_rope(x, p0), d, block_n=32)
+        rhs = ref.apply_rope(x, p0 + d)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-4)
+
+    def test_norm_preserved(self):
+        """Rotations are isometries: per-token L2 norm must not change."""
+        rng = np.random.default_rng(11)
+        k = _rand(rng, 40, 2, 8)
+        d = jnp.asarray(rng.integers(0, 4096, 40), jnp.int32)
+        out = rope_rerotate(k, d, block_n=8)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(out, axis=-1), jnp.linalg.norm(k, axis=-1), atol=1e-4
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 200),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([4, 8, 16]),
+        bn=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_matches_ref(self, n, h, d, bn, seed):
+        rng = np.random.default_rng(seed)
+        k = _rand(rng, n, h, d)
+        delta = jnp.asarray(rng.integers(-100, 1000, n), jnp.int32)
+        got = rope_rerotate(k, delta, block_n=bn)
+        want = ref.rope_rerotate(k, delta)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ref-level invariants (oracle self-checks)
+# ---------------------------------------------------------------------------
+
+
+class TestRefInvariants:
+    def test_selective_attn_is_convex_combination(self):
+        """Output rows lie inside the convex hull of value rows (per head)."""
+        rng = np.random.default_rng(12)
+        s, n, h, d = 8, 32, 2, 4
+        q, k = _rand(rng, s, h, d), _rand(rng, n, h, d)
+        v = jnp.asarray(rng.uniform(0.0, 1.0, (n, h, d)).astype(np.float32))
+        qg = jnp.full((s,), 10**6, jnp.int32)
+        kg = jnp.zeros((n,), jnp.int32)
+        out = ref.selective_attn(q, k, v, qg, kg, jnp.ones((n,), jnp.float32))
+        assert float(out.min()) >= -1e-5 and float(out.max()) <= 1.0 + 1e-5
+
+    def test_rope_relative_property(self):
+        """<RoPE(q,a), RoPE(k,b)> depends only on a-b."""
+        rng = np.random.default_rng(13)
+        q, k = _rand(rng, 16), _rand(rng, 16)
+
+        def dot(a, b):
+            qa = ref.apply_rope(q[None, :], jnp.array([a]))[0]
+            kb = ref.apply_rope(k[None, :], jnp.array([b]))[0]
+            return float(jnp.dot(qa, kb))
+
+        assert abs(dot(5, 3) - dot(105, 103)) < 1e-3
+        assert abs(dot(17, 0) - dot(1017, 1000)) < 1e-3

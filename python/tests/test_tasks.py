@@ -1,0 +1,117 @@
+"""Fact micro-language generator invariants (the python half of the
+python/rust grammar contract; rust/src/workload mirrors these)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+
+
+class TestVocabLayout:
+    def test_ranges_are_disjoint_and_cover(self):
+        spec = tasks.vocab_spec()
+        assert spec["key_base"] >= 16
+        assert spec["val_base"] == spec["key_base"] + spec["num_keys"]
+        assert spec["filler_base"] == spec["val_base"] + spec["num_vals"]
+        assert spec["filler_base"] + spec["num_filler"] == spec["vocab"]
+
+    def test_specials_below_key_base(self):
+        for tok in (tasks.PAD, tasks.BOS, tasks.QUERY, tasks.ANSWER, tasks.SEP,
+                    tasks.KEYMARK, tasks.VALMARK, tasks.EOS, tasks.IMG,
+                    tasks.ROW, tasks.COL, tasks.HOP):
+            assert 0 <= tok < tasks.KEY_BASE
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    task=st.sampled_from(tasks.TASKS),
+    n_chunks=st.integers(2, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_sample_wellformed(task, n_chunks, seed):
+    rng = np.random.default_rng(seed)
+    chunk, prompt_len = 64, 16
+    s = tasks.make_sample(rng, task, n_chunks * chunk, chunk, prompt_len)
+    assert len(s.ctx) == n_chunks * chunk
+    assert len(s.prompt) == prompt_len
+    assert len(s.answer) == tasks.ANSWER_LEN
+    assert all(0 <= t < tasks.VOCAB for t in s.ctx + s.prompt + s.answer)
+    # prompt is front-padded and ends with ANSWER
+    assert s.prompt[-1] == tasks.ANSWER
+    body = [t for t in s.prompt if t != tasks.PAD]
+    assert body[0] == tasks.QUERY
+    # answer payload tokens are values; tail is EOS
+    assert s.answer[-1] == tasks.EOS or s.answer.count(tasks.EOS) >= 1
+    for t in s.answer:
+        assert t == tasks.EOS or tasks.VAL_BASE <= t < tasks.VAL_BASE + tasks.NUM_VALS
+    # needle chunks are in range
+    for c in s.needle_chunks:
+        assert 0 <= c < n_chunks
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), n_chunks=st.integers(2, 6))
+def test_facts_never_straddle_chunks(seed, n_chunks):
+    """A KEYMARK fact must be entirely inside one chunk (passage-split
+    soundness depends on this)."""
+    rng = np.random.default_rng(seed)
+    chunk = 64
+    s = tasks.make_sample(rng, "onehop", n_chunks * chunk, chunk, 16)
+    for i, t in enumerate(s.ctx):
+        if t == tasks.KEYMARK:
+            assert i // chunk == (i + 4) // chunk, "fact crosses chunk boundary"
+            assert tasks.VAL_BASE <= s.ctx[i + 2] < tasks.VAL_BASE + tasks.NUM_VALS
+            assert s.ctx[i + 4] == tasks.SEP
+
+
+def test_recency_answer_is_last_occurrence():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        s = tasks.make_sample(rng, "recency", 256, 64, 16)
+        qk = [t for t in s.prompt if t != tasks.PAD][1]
+        occurrences = [
+            i for i in range(len(s.ctx) - 4)
+            if s.ctx[i] == tasks.KEYMARK and s.ctx[i + 1] == qk
+        ]
+        assert len(occurrences) >= 2, "recency sample must have duplicates"
+        last = occurrences[-1]
+        assert s.answer[0] == s.ctx[last + 2]
+        assert s.answer[1] == s.ctx[last + 3]
+
+
+def test_twohop_requires_both_facts():
+    rng = np.random.default_rng(8)
+    for _ in range(20):
+        s = tasks.make_sample(rng, "twohop", 256, 64, 16)
+        body = [t for t in s.prompt if t != tasks.PAD]
+        assert body[:2] == [tasks.QUERY, tasks.HOP]
+        k1 = body[2]
+        # find the link fact and the value fact in ctx
+        link = value = None
+        for i in range(len(s.ctx) - 4):
+            if (s.ctx[i] == tasks.KEYMARK and s.ctx[i + 1] == k1
+                    and s.ctx[i + 2] == tasks.HOP):
+                link = s.ctx[i + 3]
+        assert link is not None
+        for i in range(len(s.ctx) - 4):
+            if (s.ctx[i] == tasks.KEYMARK and s.ctx[i + 1] == link
+                    and s.ctx[i + 2] != tasks.HOP):
+                value = (s.ctx[i + 2], s.ctx[i + 3])
+        assert value == (s.answer[0], s.answer[1])
+
+
+def test_sample_batch_shapes_and_mask():
+    rng = np.random.default_rng(9)
+    toks, mask = tasks.sample_batch(rng, tasks.LLM_MIX, 4, 128)
+    assert toks.shape == (4, 128 + 16 + tasks.ANSWER_LEN)
+    assert mask.shape == toks.shape
+    # loss mask covers exactly the answer region
+    assert float(mask[:, : 128 + 16].sum()) == 0.0
+    assert float(mask[:, 128 + 16 :].sum()) == 4 * tasks.ANSWER_LEN
+
+
+def test_mixes_are_distributions():
+    for mix in (tasks.LLM_MIX, tasks.VLM_MIX):
+        assert abs(sum(mix.values()) - 1.0) < 1e-9
+        assert set(mix) == set(tasks.TASKS)

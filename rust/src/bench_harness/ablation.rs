@@ -1,0 +1,109 @@
+//! Selection-quality ablation (beyond the paper's tables; DESIGN.md calls
+//! for ablating the design choices): with the recomputation machinery held
+//! fixed, sweep WHAT gets selected —
+//!
+//!   none    no recomputation (lower anchor)
+//!   random  budget random context rows
+//!   epic    chunk-initial rows
+//!   norm    Eq.-7 attention-norm top-k (ours)
+//!   oracle  the needle fact's rows (ground-truth selection, upper anchor
+//!           for any selection strategy at this budget)
+//!
+//! This isolates the paper's core claim — that *which* tokens you recompute
+//! is what matters — from the recomputation mechanics and the model's
+//! ceiling (Baseline).
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::metrics::token_f1;
+use crate::eval::tables::{fmt4, Table};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::vocab;
+use crate::workload::needle::needle_episode;
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let backbone = ctx.backbone_or_default(args);
+    let pipeline = ctx.pipeline(&backbone)?;
+    let budget = args.usize_or("budget", 16)?;
+    let chunk = ctx.runtime.manifest.model.chunk;
+    let n_chunks = args.usize_or("chunks", 6)?;
+    let samples = ctx.samples;
+
+    let mut table = Table::new(
+        &format!(
+            "Ablation: selection quality at fixed budget {budget} \
+             (needle task, {} tokens, {backbone})",
+            n_chunks * chunk
+        ),
+        &["Selection", "F1", "needle-hit"],
+    );
+    let mut json_rows = vec![];
+
+    let variants = ["none", "random", "epic", "norm", "oracle", "baseline"];
+    for variant in variants {
+        let mut store = ctx.store();
+        let mut rng = Rng::new(ctx.seed ^ 0xAB1A);
+        let mut f1 = 0.0;
+        let mut hits = 0usize;
+        for _ in 0..samples {
+            let e = needle_episode(&pipeline.vocab, chunk, &mut rng, n_chunks, 0.7);
+            let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+            let n: usize = e.chunks.iter().map(|c| c.len()).sum();
+            let r = match variant {
+                "none" => pipeline.answer(&chunks, &e.prompt, MethodSpec::NoRecompute)?,
+                "baseline" => pipeline.answer(&chunks, &e.prompt, MethodSpec::Baseline)?,
+                "norm" => pipeline.answer(&chunks, &e.prompt, MethodSpec::ours(budget))?,
+                "epic" => pipeline.answer(
+                    &chunks,
+                    &e.prompt,
+                    MethodSpec::Epic { budget },
+                )?,
+                "random" => {
+                    let rows = rng.choose_distinct(n, budget.min(n));
+                    pipeline.answer_with_rows(&chunks, &e.prompt, rows)?
+                }
+                "oracle" => {
+                    // ground truth: the rows of the LAST occurrence of the
+                    // queried key (the answer-bearing fact), padded with the
+                    // rows right around it up to the budget
+                    let flat: Vec<i32> = e.chunks.iter().flatten().copied().collect();
+                    let qk = e.prompt[1];
+                    let mut at = 0usize;
+                    for i in 0..flat.len().saturating_sub(3) {
+                        if flat[i] == vocab::KEYMARK && flat[i + 1] == qk {
+                            at = i;
+                        }
+                    }
+                    let lo = at.saturating_sub((budget - 5) / 2);
+                    let rows: Vec<usize> = (lo..(lo + budget).min(n)).collect();
+                    pipeline.answer_with_rows(&chunks, &e.prompt, rows)?
+                }
+                _ => unreachable!(),
+            };
+            f1 += token_f1(&r.answer, &e.answer);
+            if r.selected
+                .iter()
+                .any(|&row| e.needle_chunks.contains(&(row / chunk)))
+            {
+                hits += 1;
+            }
+        }
+        let f1 = f1 / samples as f64;
+        let hit_rate = hits as f64 / samples as f64;
+        println!("{variant:<9} f1={f1:.4} needle-hit={hit_rate:.2}");
+        table.row(vec![variant.to_string(), fmt4(f1), format!("{hit_rate:.2}")]);
+        json_rows.push(Json::obj(vec![
+            ("selection", Json::from(variant)),
+            ("f1", Json::from(f1)),
+            ("needle_hit", Json::from(hit_rate)),
+        ]));
+    }
+    println!("\n{}", table.render());
+    ctx.dump("ablation", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

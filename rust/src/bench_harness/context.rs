@@ -1,0 +1,69 @@
+//! Shared setup for the reproduction harness: runtime + pipeline + store,
+//! sample-count knobs, result dumping.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::kvcache::ChunkStore;
+use crate::pipeline::Pipeline;
+use crate::runtime::exec::ModelSession;
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub struct BenchContext {
+    pub runtime: Arc<Runtime>,
+    /// Episodes per table cell (raise with --samples for tighter numbers).
+    pub samples: usize,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+}
+
+impl BenchContext {
+    pub fn from_args(args: &Args) -> Result<BenchContext> {
+        let artifacts = args.get_or("artifacts", "artifacts");
+        let runtime = Arc::new(Runtime::load(Path::new(artifacts))?);
+        let out_dir = PathBuf::from(args.get_or("out", "results"));
+        std::fs::create_dir_all(&out_dir)?;
+        Ok(BenchContext {
+            runtime,
+            samples: args.usize_or("samples", 24)?,
+            seed: args.u64_or("seed", 7)?,
+            out_dir,
+        })
+    }
+
+    pub fn pipeline(&self, backbone: &str) -> Result<Pipeline> {
+        Pipeline::new(ModelSession::new(self.runtime.clone(), backbone)?)
+    }
+
+    pub fn store(&self) -> ChunkStore {
+        ChunkStore::new(1 << 30)
+    }
+
+    /// First available backbone matching a preference list.
+    pub fn backbone_or_default(&self, args: &Args) -> String {
+        if let Some(b) = args.get("backbone") {
+            return b.to_string();
+        }
+        let have = self.runtime.backbone_names();
+        for want in ["qwen-syn", "base", "llama-syn"] {
+            if have.iter().any(|h| h == want) {
+                return want.to_string();
+            }
+        }
+        have.first().cloned().unwrap_or_else(|| "qwen-syn".into())
+    }
+
+    pub fn dump(&self, name: &str, json: Json, csv: Option<String>) -> Result<()> {
+        let jpath = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&jpath, json.to_string_pretty())?;
+        if let Some(csv) = csv {
+            std::fs::write(self.out_dir.join(format!("{name}.csv")), csv)?;
+        }
+        println!("[saved {}]", jpath.display());
+        Ok(())
+    }
+}

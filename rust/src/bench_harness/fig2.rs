@@ -1,0 +1,78 @@
+//! Figure 2: speed-accuracy trade-off — recompute-budget sweep per method,
+//! reporting measured TTFT (prepared-context regime: chunk caches warm) vs
+//! F1.  Upper-left wins.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::tables::Table;
+use crate::eval::EvalRunner;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::datasets::{eval_set, ChunkingMode, Dataset};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let chunk = ctx.runtime.manifest.model.chunk;
+    let budgets: Vec<usize> = vec![4, 8, 16, 32, 64];
+    let backbones: Vec<String> = ["qwen-syn", "llama-syn"]
+        .iter()
+        .filter(|b| ctx.runtime.backbone_names().iter().any(|h| h == *b))
+        .map(|s| s.to_string())
+        .collect();
+
+    let mut table = Table::new(
+        "Figure 2: TTFT vs F1, budget sweep (prepared context)",
+        &["Model", "Dataset", "Method", "Budget", "TTFT (ms)", "F1"],
+    );
+    let mut json_rows = vec![];
+    for backbone in &backbones {
+        let pipeline = ctx.pipeline(backbone)?;
+        for ds in [Dataset::TwoWikiMqa, Dataset::HotpotQa] {
+            let episodes = eval_set(&pipeline.vocab, chunk, ds, ChunkingMode::PassageSplit,
+                                    ctx.samples, ctx.seed);
+            let methods: Vec<(&str, Box<dyn Fn(usize) -> MethodSpec>)> = vec![
+                ("Our", Box::new(MethodSpec::ours)),
+                ("CacheBlend", Box::new(|b| MethodSpec::CacheBlend { budget: b })),
+                ("EPIC", Box::new(|b| MethodSpec::Epic { budget: b })),
+            ];
+            for (mname, mk) in &methods {
+                for &b in &budgets {
+                    // warm the store first so TTFT is the prepared-context one
+                    let mut store = ctx.store();
+                    for e in &episodes {
+                        pipeline.prepare_chunks(&mut store, &e.chunks)?;
+                    }
+                    let out = EvalRunner::new(&pipeline, &mut store)
+                        .run(&episodes, mk(b))?;
+                    table.row(vec![
+                        backbone.clone(),
+                        ds.name().into(),
+                        mname.to_string(),
+                        b.to_string(),
+                        format!("{:.1}", out.mean_ttft_s * 1e3),
+                        format!("{:.4}", out.f1),
+                    ]);
+                    json_rows.push(Json::obj(vec![
+                        ("model", Json::from(backbone.as_str())),
+                        ("dataset", Json::from(ds.name())),
+                        ("method", Json::from(*mname)),
+                        ("budget", Json::from(b)),
+                        ("ttft_ms", Json::from(out.mean_ttft_s * 1e3)),
+                        ("f1", Json::from(out.f1)),
+                    ]));
+                    println!(
+                        "{backbone} {} {mname} budget={b}: ttft={:.1}ms f1={:.4}",
+                        ds.name(),
+                        out.mean_ttft_s * 1e3,
+                        out.f1
+                    );
+                }
+            }
+        }
+    }
+    println!("\n{}", table.render());
+    ctx.dump("fig2", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

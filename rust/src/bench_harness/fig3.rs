@@ -1,0 +1,96 @@
+//! Figure 3: Needle-in-a-Haystack heatmaps — accuracy over (context length,
+//! needle depth) for the five inference strategies. Rendered as text
+//! heatmaps + CSV.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::metrics::token_f1;
+use crate::kvcache::ChunkStore;
+use crate::pipeline::Pipeline;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::needle::needle_episode;
+
+pub const DEPTHS: [f64; 5] = [0.0, 0.25, 0.5, 0.75, 1.0];
+
+/// Mean needle F1 for one (method, n_chunks, depth) cell.
+pub fn needle_cell(
+    pipeline: &Pipeline,
+    store: &mut ChunkStore,
+    method: MethodSpec,
+    n_chunks: usize,
+    depth: f64,
+    samples: usize,
+    seed: u64,
+) -> Result<f64> {
+    let chunk = pipeline.session.runtime.manifest.model.chunk;
+    let mut rng = Rng::new(seed ^ ((n_chunks as u64) << 32) ^ ((depth * 100.0) as u64));
+    let mut f1 = 0.0;
+    for _ in 0..samples {
+        let e = needle_episode(&pipeline.vocab, chunk, &mut rng, n_chunks, depth);
+        let (chunks, _) = pipeline.prepare_chunks(store, &e.chunks)?;
+        let r = pipeline.answer(&chunks, &e.prompt, method)?;
+        f1 += token_f1(&r.answer, &e.answer);
+    }
+    Ok(f1 / samples as f64)
+}
+
+pub fn shade(x: f64) -> char {
+    match x {
+        x if x >= 0.9 => '#',
+        x if x >= 0.7 => '@',
+        x if x >= 0.5 => '+',
+        x if x >= 0.3 => ':',
+        x if x >= 0.1 => '.',
+        _ => ' ',
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let backbone = ctx.backbone_or_default(args);
+    let pipeline = ctx.pipeline(&backbone)?;
+    let budget = args.usize_or("budget", 16)?;
+    let lengths: Vec<usize> = vec![2, 4, 6, 8]; // chunks => 128..512 tokens
+
+    let methods: Vec<(String, MethodSpec)> = vec![
+        ("Baseline".into(), MethodSpec::Baseline),
+        ("No Recompute".into(), MethodSpec::NoRecompute),
+        ("Our".into(), MethodSpec::ours(budget)),
+        ("Our + Reorder".into(), MethodSpec::ours_reorder(budget)),
+        ("CacheBlend".into(), MethodSpec::CacheBlend { budget }),
+        ("EPIC".into(), MethodSpec::Epic { budget }),
+    ];
+
+    let chunk = ctx.runtime.manifest.model.chunk;
+    let mut json_rows = vec![];
+    let mut csv = String::from("method,ctx_tokens,depth,f1\n");
+    for (mname, method) in &methods {
+        println!("\n-- Needle heatmap: {mname} ({backbone}) --");
+        println!("        depth:   0.00  0.25  0.50  0.75  1.00");
+        for &n_chunks in &lengths {
+            let mut store = ctx.store();
+            let mut row = format!("ctx {:>4} tok  |", n_chunks * chunk);
+            for &depth in &DEPTHS {
+                let f1 = needle_cell(
+                    &pipeline, &mut store, *method, n_chunks, depth,
+                    ctx.samples.min(12), ctx.seed,
+                )?;
+                row.push_str(&format!("  {:.2}{}", f1, shade(f1)));
+                csv.push_str(&format!("{mname},{},{depth},{f1:.4}\n", n_chunks * chunk));
+                json_rows.push(Json::obj(vec![
+                    ("method", Json::from(mname.as_str())),
+                    ("ctx_tokens", Json::from(n_chunks * chunk)),
+                    ("depth", Json::from(depth)),
+                    ("f1", Json::from(f1)),
+                ]));
+            }
+            println!("{row}");
+        }
+    }
+    ctx.dump("fig3", Json::Arr(json_rows), Some(csv))?;
+    Ok(())
+}

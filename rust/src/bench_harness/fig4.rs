@@ -1,0 +1,56 @@
+//! Figure 4: needle heatmaps with attention norms extracted from each
+//! Transformer layer — the norm-layer selection ablation (paper App. B:
+//! intermediate-to-late layers win).
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use super::fig3::{needle_cell, shade, DEPTHS};
+use crate::config::MethodSpec;
+use crate::geometry::RopeGeometry;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let backbone = ctx.backbone_or_default(args);
+    let pipeline = ctx.pipeline(&backbone)?;
+    let budget = args.usize_or("budget", 16)?;
+    let n_layers = ctx.runtime.manifest.model.n_layers;
+    let chunk = ctx.runtime.manifest.model.chunk;
+    let lengths: Vec<usize> = vec![2, 4, 6, 8];
+
+    let mut json_rows = vec![];
+    let mut csv = String::from("norm_layer,ctx_tokens,depth,f1\n");
+    for layer in 0..n_layers {
+        let method = MethodSpec::Ours {
+            budget,
+            geometry: RopeGeometry::Global,
+            norm_layer: layer,
+            reorder: false,
+        };
+        println!("\n-- Needle heatmap: norm layer {layer} ({backbone}) --");
+        println!("        depth:   0.00  0.25  0.50  0.75  1.00");
+        for &n_chunks in &lengths {
+            let mut store = ctx.store();
+            let mut row = format!("ctx {:>4} tok  |", n_chunks * chunk);
+            for &depth in &DEPTHS {
+                let f1 = needle_cell(
+                    &pipeline, &mut store, method, n_chunks, depth,
+                    ctx.samples.min(12), ctx.seed,
+                )?;
+                row.push_str(&format!("  {:.2}{}", f1, shade(f1)));
+                csv.push_str(&format!("{layer},{},{depth},{f1:.4}\n", n_chunks * chunk));
+                json_rows.push(Json::obj(vec![
+                    ("norm_layer", Json::from(layer)),
+                    ("ctx_tokens", Json::from(n_chunks * chunk)),
+                    ("depth", Json::from(depth)),
+                    ("f1", Json::from(f1)),
+                ]));
+            }
+            println!("{row}");
+        }
+    }
+    ctx.dump("fig4", Json::Arr(json_rows), Some(csv))?;
+    Ok(())
+}

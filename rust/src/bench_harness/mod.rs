@@ -1,0 +1,46 @@
+//! Reproduction harness: one submodule per paper table/figure.
+//! Dispatch via `repro bench <id>` (see main.rs).
+
+pub mod ablation;
+pub mod context;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+pub const ALL: [&str; 10] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "fig2", "fig3",
+    "fig4", "ablation",
+];
+
+pub fn run(which: &str, args: &Args) -> Result<()> {
+    match which {
+        "table1" => table1::run(args),
+        "table2" => table2::run(args),
+        "table3" => table3::run(args),
+        "table4" => table4::run(args),
+        "table5" => table5::run(args),
+        "table6" => table6::run(args),
+        "fig2" => fig2::run(args),
+        "fig3" => fig3::run(args),
+        "fig4" => fig4::run(args),
+        "ablation" => ablation::run(args),
+        "all" => {
+            for id in ALL {
+                println!("\n################ {id} ################");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown reproduction '{other}' (have {ALL:?} or 'all')"),
+    }
+}

@@ -1,0 +1,52 @@
+//! Table 1: RoPE geometry ablation — our selection under the four
+//! positional configurations, Qwen backbone, passage-split setting.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::{MethodSpec, DEFAULT_NORM_LAYER};
+use crate::eval::tables::{fmt4, Table};
+use crate::eval::EvalRunner;
+use crate::geometry::RopeGeometry;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::datasets::{eval_set, ChunkingMode, Dataset};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let backbone = ctx.backbone_or_default(args);
+    let pipeline = ctx.pipeline(&backbone)?;
+    let budget = args.usize_or("budget", 16)?;
+    let vocab = pipeline.vocab.clone();
+    let chunk = ctx.runtime.manifest.model.chunk;
+
+    let mut table = Table::new(
+        &format!("Table 1: RoPE geometry ablation ({backbone}, passage split, budget {budget})"),
+        &["Method", "2WikiMQA", "MuSiQue", "HotpotQA", "NarrativeQA"],
+    );
+    let mut json_rows = vec![];
+    for g in RopeGeometry::ALL {
+        let mut cells = vec![g.name().to_string()];
+        let mut jrow = vec![("method", Json::from(g.name()))];
+        for ds in Dataset::ALL {
+            let episodes = eval_set(&vocab, chunk, ds, ChunkingMode::PassageSplit,
+                                    ctx.samples, ctx.seed);
+            let mut store = ctx.store();
+            let method = MethodSpec::Ours {
+                budget,
+                geometry: g,
+                norm_layer: DEFAULT_NORM_LAYER,
+                reorder: false,
+            };
+            let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+            cells.push(fmt4(out.f1));
+            jrow.push((ds.name(), Json::from(out.f1)));
+        }
+        println!("{}", crate::util::fmt_row(&cells, &[8, 9, 9, 9, 11]));
+        table.row(cells);
+        json_rows.push(Json::obj(jrow));
+    }
+    println!("\n{}", table.render());
+    ctx.dump("table1", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Table 2: RoPE similarity (MoM / Max) between prompt positions and the
+//! positions of the tokens each method selects — semantics blocked, purely
+//! positional geometry (rust/src/rope.rs), two backbones x two datasets.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::tables::{fmt4, Table};
+use crate::rope;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::datasets::{eval_set, ChunkingMode, Dataset};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let budget = args.usize_or("budget", 16)?;
+    let d = ctx.runtime.manifest.model.clone();
+
+    let backbones: Vec<String> = ["qwen-syn", "llama-syn"]
+        .iter()
+        .filter(|b| ctx.runtime.backbone_names().iter().any(|h| h == *b))
+        .map(|s| s.to_string())
+        .collect();
+    let methods: Vec<(&str, MethodSpec)> = vec![
+        ("Norm-based", MethodSpec::ours(budget)),
+        ("CacheBlend", MethodSpec::CacheBlend { budget }),
+        ("EPIC", MethodSpec::Epic { budget }),
+    ];
+
+    let mut table = Table::new(
+        "Table 2: RoPE similarity of selected tokens (MoM / Max)",
+        &["Model", "Method", "2Wiki MoM", "2Wiki Max", "Hotpot MoM", "Hotpot Max"],
+    );
+    let mut json_rows = vec![];
+    for backbone in &backbones {
+        let pipeline = ctx.pipeline(backbone)?;
+        for (mname, method) in &methods {
+            let mut cells = vec![backbone.clone(), mname.to_string()];
+            let mut jrow = vec![
+                ("model", Json::from(backbone.as_str())),
+                ("method", Json::from(*mname)),
+            ];
+            for ds in [Dataset::TwoWikiMqa, Dataset::HotpotQa] {
+                let episodes = eval_set(&pipeline.vocab, d.chunk, ds,
+                                        ChunkingMode::PassageSplit, ctx.samples, ctx.seed);
+                let mut store = ctx.store();
+                let (mut mom, mut mx, mut n) = (0.0, 0.0, 0usize);
+                for e in &episodes {
+                    let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+                    let r = pipeline.answer(&chunks, &e.prompt, *method)?;
+                    if r.selected_positions.is_empty() {
+                        continue;
+                    }
+                    let nctx: usize = e.chunks.iter().map(|c| c.len()).sum();
+                    let prompt_pos: Vec<i64> =
+                        (nctx as i64..(nctx + d.prompt_len) as i64).collect();
+                    let s = rope::similarity_stats(
+                        &prompt_pos,
+                        &r.selected_positions,
+                        d.head_dim,
+                        d.rope_theta,
+                    );
+                    mom += s.mean_of_max;
+                    mx += s.max;
+                    n += 1;
+                }
+                let n = n.max(1) as f64;
+                cells.push(fmt4(mom / n));
+                cells.push(fmt4(mx / n));
+                jrow.push((ds.name(), Json::obj(vec![
+                    ("mom", Json::from(mom / n)),
+                    ("max", Json::from(mx / n)),
+                ])));
+            }
+            println!("{}", crate::util::fmt_row(&cells, &[10, 11, 10, 10, 10, 10]));
+            table.row(cells);
+            json_rows.push(Json::obj(jrow));
+        }
+    }
+    println!("\n{}", table.render());
+    ctx.dump("table2", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Table 3: the main LLM QA comparison — three backbones x six methods x
+//! four LongBench analogs, under fixed-chunk and passage-split settings.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::tables::{fmt4, Table};
+use crate::eval::EvalRunner;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::datasets::{eval_set, ChunkingMode, Dataset};
+
+pub fn methods(budget: usize) -> Vec<(String, MethodSpec)> {
+    vec![
+        ("Baseline".into(), MethodSpec::Baseline),
+        ("No Recompute".into(), MethodSpec::NoRecompute),
+        ("Our".into(), MethodSpec::ours(budget)),
+        ("Our + Reorder".into(), MethodSpec::ours_reorder(budget)),
+        ("CacheBlend".into(), MethodSpec::CacheBlend { budget }),
+        ("EPIC (15%)".into(), MethodSpec::Epic { budget }),
+    ]
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let budget = args.usize_or("budget", 16)?;
+    let chunk = ctx.runtime.manifest.model.chunk;
+    let backbones: Vec<String> = ["qwen-syn", "llama-syn", "glm-syn"]
+        .iter()
+        .filter(|b| ctx.runtime.backbone_names().iter().any(|h| h == *b))
+        .map(|s| s.to_string())
+        .collect();
+
+    let mut header = vec!["Model".to_string(), "Method".to_string()];
+    for mode in [ChunkingMode::FixedChunk, ChunkingMode::PassageSplit] {
+        for ds in Dataset::ALL {
+            header.push(format!("{}/{}", mode.name(), ds.name()));
+        }
+    }
+    let mut table = Table::new(
+        &format!("Table 3: LLM QA comparison (F1, budget {budget})"),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut json_rows = vec![];
+    for backbone in &backbones {
+        let pipeline = ctx.pipeline(backbone)?;
+        for (mname, method) in methods(budget) {
+            let mut cells = vec![backbone.clone(), mname.clone()];
+            let mut jrow = vec![
+                ("model", Json::from(backbone.as_str())),
+                ("method", Json::from(mname.as_str())),
+            ];
+            for mode in [ChunkingMode::FixedChunk, ChunkingMode::PassageSplit] {
+                for ds in Dataset::ALL {
+                    let episodes =
+                        eval_set(&pipeline.vocab, chunk, ds, mode, ctx.samples, ctx.seed);
+                    let mut store = ctx.store();
+                    let out =
+                        EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+                    cells.push(fmt4(out.f1));
+                    jrow.push((
+                        Box::leak(format!("{}/{}", mode.name(), ds.name()).into_boxed_str()),
+                        Json::from(out.f1),
+                    ));
+                }
+            }
+            println!("{} {} {}", backbone, mname, cells[2..].join(" "));
+            table.row(cells);
+            json_rows.push(Json::obj(jrow));
+        }
+    }
+    println!("\n{}", table.render());
+    ctx.dump("table3", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Table 4: VLM benchmark analogs under chunking budgets k in {0, 2, 4}.
+//! k = 0 is unchunked baseline inference; for k > 0 the four recompute
+//! strategies compete at a fixed token budget.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::tables::{fmt4, Table};
+use crate::eval::EvalRunner;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::vlm::{eval_set, VlmBench};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let budget = args.usize_or("budget", 16)?;
+    let chunk = ctx.runtime.manifest.model.chunk;
+    let have = ctx.runtime.backbone_names();
+    let backbone = if have.iter().any(|h| h == "qwenvl-syn") {
+        "qwenvl-syn".to_string()
+    } else {
+        ctx.backbone_or_default(args)
+    };
+    let pipeline = ctx.pipeline(&backbone)?;
+
+    let mut header = vec!["k".to_string(), "Method".to_string()];
+    for b in VlmBench::ALL {
+        header.push(b.name().to_string());
+    }
+    let mut table = Table::new(
+        &format!("Table 4: VLM comparison ({backbone}, F1, budget {budget})"),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut json_rows = vec![];
+
+    let mut eval_row = |k: usize, mname: &str, method: MethodSpec| -> Result<()> {
+        let mut cells = vec![format!("k={k}"), mname.to_string()];
+        let mut jrow = vec![
+            ("k", Json::from(k)),
+            ("method", Json::from(mname)),
+        ];
+        for b in VlmBench::ALL {
+            let episodes = eval_set(&pipeline.vocab, chunk, b, k, ctx.samples, ctx.seed);
+            let mut store = ctx.store();
+            let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+            cells.push(fmt4(out.f1));
+            jrow.push((Box::leak(b.name().to_string().into_boxed_str()), Json::from(out.f1)));
+        }
+        println!("{}", cells.join("  "));
+        table.row(cells);
+        json_rows.push(Json::obj(jrow));
+        Ok(())
+    };
+
+    // k = 0: unchunked baseline
+    eval_row(0, "Baseline (No Recompute)", MethodSpec::Baseline)?;
+    for k in [2usize, 4] {
+        eval_row(k, "No Recompute", MethodSpec::NoRecompute)?;
+        eval_row(k, "Our", MethodSpec::ours(budget))?;
+        eval_row(k, "CacheBlend", MethodSpec::CacheBlend { budget })?;
+        eval_row(k, "EPIC", MethodSpec::Epic { budget })?;
+    }
+    println!("\n{}", table.render());
+    ctx.dump("table4", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Table 5: TTFT under 4-device sequence parallelism at 8K/16K/32K tokens —
+//! single-GPU prefill vs ring attention vs ours (ratio 0.15), via the
+//! calibrated discrete-event simulator (DESIGN.md §1 substitution).
+//!
+//! Calibration measures the real `full_prefill` executables at two context
+//! buckets on this machine and fits the quadratic/linear compute terms, so
+//! the simulated schedules run on an empirically-grounded cost model.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::eval::tables::{fmt_ms, Table};
+use crate::seqpar::{ours_ttft, ring_ttft, single_gpu_ttft, CostModel};
+use crate::tensor::{TensorF, TensorI};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Measure full_prefill wall-clock at a bucket (median of `reps`).
+fn measure_full_prefill(
+    ctx: &BenchContext,
+    backbone: &str,
+    bucket: usize,
+    reps: usize,
+) -> Result<f64> {
+    let pipeline = ctx.pipeline(backbone)?;
+    let d = ctx.runtime.manifest.model.clone();
+    let np = bucket + d.prompt_len;
+    let mut rng = Rng::new(3);
+    let tokens: Vec<i32> = (0..np).map(|_| 16 + rng.below(120) as i32).collect();
+    let pos: Vec<i32> = (0..np as i32).collect();
+    let valid = vec![1.0f32; np];
+    let t_tok = TensorI::from_vec(&[np], tokens)?;
+    let t_pos = TensorI::from_vec(&[np], pos)?;
+    let t_val = TensorF::from_vec(&[np], valid)?;
+    // warm
+    pipeline.session.full_prefill(bucket, &t_tok, &t_pos, &t_val)?;
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        pipeline.session.full_prefill(bucket, &t_tok, &t_pos, &t_val)?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(times[times.len() / 2])
+}
+
+pub fn calibrated_model(ctx: &BenchContext, backbone: &str) -> Result<CostModel> {
+    let buckets = ctx.runtime.manifest.buckets.clone();
+    let b1 = buckets[0];
+    let b2 = *buckets.last().unwrap();
+    let t1 = measure_full_prefill(ctx, backbone, b1, 3)?;
+    let t2 = measure_full_prefill(ctx, backbone, b2, 3)?;
+    let d = &ctx.runtime.manifest.model;
+    let kv_row_bytes = (d.n_layers * d.n_heads * d.head_dim * 2 * 4) as f64;
+    println!(
+        "[calibration] full_prefill({b1})={:.1}ms  full_prefill({b2})={:.1}ms",
+        t1 * 1e3,
+        t2 * 1e3
+    );
+    Ok(CostModel::calibrate(b1 as f64, t1, b2 as f64, t2, kv_row_bytes))
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let backbone = ctx.backbone_or_default(args);
+    let m = calibrated_model(&ctx, &backbone)?;
+    let d = ctx.runtime.manifest.model.clone();
+    let devices = args.usize_or("devices", 4)?;
+    let ratio = args.f64_or("ratio", 0.15)?;
+
+    let mut table = Table::new(
+        &format!("Table 5: TTFT under sequence parallelism ({devices} simulated devices)"),
+        &["Seq Len", "Method", "Recompute Ratio", "TTFT (ms)", "Speedup"],
+    );
+    let mut json_rows = vec![];
+    for &n in &[8192usize, 16384, 32768] {
+        let single = single_gpu_ttft(&m, n, d.n_layers);
+        let ring = ring_ttft(&m, n, d.n_layers, devices);
+        let ours = ours_ttft(&m, n, d.n_layers, devices, ratio, d.prompt_len);
+        for (name, r, b) in [
+            ("Single-GPU Prefill", "-".to_string(), single),
+            ("Ring Attention", "-".to_string(), ring),
+            ("Ours", format!("{ratio}"), ours),
+        ] {
+            let speedup = single.total_s / b.total_s;
+            table.row(vec![
+                n.to_string(),
+                name.to_string(),
+                r.clone(),
+                fmt_ms(b.total_s),
+                format!("{speedup:.2}x"),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("seq_len", Json::from(n)),
+                ("method", Json::from(name)),
+                ("ttft_ms", Json::from(b.total_s * 1e3)),
+                ("compute_ms", Json::from(b.compute_s * 1e3)),
+                ("comm_ms", Json::from(b.comm_s * 1e3)),
+                ("speedup", Json::from(speedup)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+    ctx.dump("table5", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

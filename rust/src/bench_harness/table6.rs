@@ -1,0 +1,52 @@
+//! Table 6: answer quality under the sequence-parallel setting — "ring
+//! attention" (exact full-context attention, which is what ring attention
+//! computes) vs ours (4-way chunk partition + selective recomputation),
+//! F1 on three QA analogs.
+
+use anyhow::Result;
+
+use super::context::BenchContext;
+use crate::config::MethodSpec;
+use crate::eval::tables::Table;
+use crate::eval::EvalRunner;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::workload::datasets::{eval_set, ChunkingMode, Dataset};
+
+pub fn run(args: &Args) -> Result<()> {
+    let ctx = BenchContext::from_args(args)?;
+    let backbone = ctx.backbone_or_default(args);
+    let pipeline = ctx.pipeline(&backbone)?;
+    let budget = args.usize_or("budget", 16)?;
+    let chunk = ctx.runtime.manifest.model.chunk;
+
+    let mut table = Table::new(
+        &format!("Table 6: ring attention vs ours under sequence parallelism ({backbone})"),
+        &["Task", "Method", "F1 (%)"],
+    );
+    let mut json_rows = vec![];
+    for ds in [Dataset::HotpotQa, Dataset::TwoWikiMqa, Dataset::Musique] {
+        let episodes = eval_set(&pipeline.vocab, chunk, ds, ChunkingMode::FixedChunk,
+                                ctx.samples, ctx.seed);
+        for (name, method) in [
+            ("Ring Attention", MethodSpec::Baseline),
+            ("Ours", MethodSpec::ours(budget)),
+        ] {
+            let mut store = ctx.store();
+            let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+            table.row(vec![
+                ds.name().to_string(),
+                name.to_string(),
+                format!("{:.2}", out.f1 * 100.0),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("task", Json::from(ds.name())),
+                ("method", Json::from(name)),
+                ("f1", Json::from(out.f1 * 100.0)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+    ctx.dump("table6", Json::Arr(json_rows), Some(table.to_csv()))?;
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Serving/eval configuration: inference method specs and global knobs.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::geometry::RopeGeometry;
+
+/// Default attention-norm layer (paper App. B uses intermediate-to-late
+/// layers; for the 4-layer backbone that is layer 2).
+pub const DEFAULT_NORM_LAYER: usize = 2;
+
+/// One of the paper's six inference strategies (§6.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MethodSpec {
+    /// Full-context prefilling, no chunking (upper anchor).
+    Baseline,
+    /// Chunk-wise prefill reused as stored; no recomputation (lower anchor).
+    NoRecompute,
+    /// InfoFlow KV: attention-norm selection under a RoPE geometry.
+    Ours {
+        budget: usize,
+        geometry: RopeGeometry,
+        norm_layer: usize,
+        reorder: bool,
+    },
+    /// CacheBlend: shallow-layer deviation selection.
+    CacheBlend { budget: usize },
+    /// EPIC: fixed positional selection (chunk-initial tokens).
+    Epic { budget: usize },
+}
+
+impl MethodSpec {
+    pub fn ours(budget: usize) -> MethodSpec {
+        MethodSpec::Ours {
+            budget,
+            geometry: RopeGeometry::Global,
+            norm_layer: DEFAULT_NORM_LAYER,
+            reorder: false,
+        }
+    }
+
+    pub fn ours_reorder(budget: usize) -> MethodSpec {
+        MethodSpec::Ours {
+            budget,
+            geometry: RopeGeometry::Global,
+            norm_layer: DEFAULT_NORM_LAYER,
+            reorder: true,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            MethodSpec::Baseline => "Baseline".into(),
+            MethodSpec::NoRecompute => "No Recompute".into(),
+            MethodSpec::Ours { reorder: false, .. } => "Our".into(),
+            MethodSpec::Ours { reorder: true, .. } => "Our + Reorder".into(),
+            MethodSpec::CacheBlend { .. } => "CacheBlend".into(),
+            MethodSpec::Epic { .. } => "EPIC".into(),
+        }
+    }
+
+    /// Parse "baseline" | "norecompute" | "ours[:budget]" | "reorder[:budget]"
+    /// | "cacheblend[:budget]" | "epic[:budget]".
+    pub fn parse(s: &str, default_budget: usize) -> Result<MethodSpec> {
+        let (head, budget) = match s.split_once(':') {
+            Some((h, b)) => (h, b.parse::<usize>().map_err(|e| anyhow!("bad budget: {e}"))?),
+            None => (s, default_budget),
+        };
+        Ok(match head.to_ascii_lowercase().as_str() {
+            "baseline" => MethodSpec::Baseline,
+            "norecompute" | "no-recompute" => MethodSpec::NoRecompute,
+            "ours" | "our" => MethodSpec::ours(budget),
+            "reorder" | "ours+reorder" => MethodSpec::ours_reorder(budget),
+            "cacheblend" => MethodSpec::CacheBlend { budget },
+            "epic" => MethodSpec::Epic { budget },
+            other => return Err(anyhow!("unknown method '{other}'")),
+        })
+    }
+
+    pub fn budget(&self) -> Option<usize> {
+        match self {
+            MethodSpec::Baseline | MethodSpec::NoRecompute => None,
+            MethodSpec::Ours { budget, .. }
+            | MethodSpec::CacheBlend { budget }
+            | MethodSpec::Epic { budget } => Some(*budget),
+        }
+    }
+
+    pub fn with_budget(&self, budget: usize) -> MethodSpec {
+        match *self {
+            MethodSpec::Ours { geometry, norm_layer, reorder, .. } => {
+                MethodSpec::Ours { budget, geometry, norm_layer, reorder }
+            }
+            MethodSpec::CacheBlend { .. } => MethodSpec::CacheBlend { budget },
+            MethodSpec::Epic { .. } => MethodSpec::Epic { budget },
+            m => m,
+        }
+    }
+}
+
+/// Global serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    pub backbone: String,
+    /// Chunk-store byte budget.
+    pub cache_bytes: usize,
+    /// Dynamic batcher: max queue delay before dispatch.
+    pub batch_window_ms: u64,
+    /// Dynamic batcher: max requests per dispatch.
+    pub max_batch: usize,
+    /// Worker threads in the serving loop.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            backbone: "qwen-syn".into(),
+            cache_bytes: 512 * 1024 * 1024,
+            batch_window_ms: 2,
+            max_batch: 8,
+            workers: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_methods() {
+        assert_eq!(MethodSpec::parse("baseline", 8).unwrap(), MethodSpec::Baseline);
+        assert_eq!(
+            MethodSpec::parse("epic:32", 8).unwrap(),
+            MethodSpec::Epic { budget: 32 }
+        );
+        assert_eq!(
+            MethodSpec::parse("ours", 24).unwrap().budget(),
+            Some(24)
+        );
+        assert!(matches!(
+            MethodSpec::parse("reorder", 8).unwrap(),
+            MethodSpec::Ours { reorder: true, .. }
+        ));
+        assert!(MethodSpec::parse("wat", 8).is_err());
+    }
+
+    #[test]
+    fn names_match_paper_tables() {
+        assert_eq!(MethodSpec::Baseline.name(), "Baseline");
+        assert_eq!(MethodSpec::ours(8).name(), "Our");
+        assert_eq!(MethodSpec::ours_reorder(8).name(), "Our + Reorder");
+    }
+
+    #[test]
+    fn with_budget_rewrites_only_budgeted() {
+        let m = MethodSpec::ours(8).with_budget(32);
+        assert_eq!(m.budget(), Some(32));
+        assert_eq!(MethodSpec::Baseline.with_budget(32), MethodSpec::Baseline);
+    }
+}

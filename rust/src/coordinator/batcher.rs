@@ -1,0 +1,148 @@
+//! Dynamic batcher: groups queued requests into dispatch batches under a
+//! (max size, max wait) policy — the standard continuous-batching front end.
+//!
+//! The batcher itself is pure data-structure logic (and therefore unit- and
+//! property-testable without threads); the server drives it with timestamps.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+#[derive(Debug)]
+struct Queued<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+/// FIFO queue with batch-forming policy.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Queued<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back(Queued { item, enqueued: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be dispatched now?  True when the queue reached
+    /// `max_batch` or the oldest entry has waited `max_wait`.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(q) => now.duration_since(q.enqueued) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the oldest entry hits `max_wait` (for the server's park).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|q| {
+            self.cfg
+                .max_wait
+                .saturating_sub(now.duration_since(q.enqueued))
+        })
+    }
+
+    /// Pop up to `max_batch` items in FIFO order.
+    pub fn drain_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.cfg.max_batch);
+        self.queue.drain(..n).map(|q| q.item).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn dispatches_on_size() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        assert!(!b.ready(t0));
+        b.push(2, t0);
+        assert!(b.ready(t0));
+        assert_eq!(b.drain_batch(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let mut b = Batcher::new(cfg(10, 5));
+        let t0 = Instant::now();
+        b.push(7, t0);
+        assert!(!b.ready(t0));
+        assert!(b.ready(t0 + Duration::from_millis(6)));
+        assert_eq!(b.drain_batch(), vec![7]);
+    }
+
+    #[test]
+    fn batch_cap_respected() {
+        let mut b = Batcher::new(cfg(3, 0));
+        let t0 = Instant::now();
+        for i in 0..7 {
+            b.push(i, t0);
+        }
+        assert_eq!(b.drain_batch(), vec![0, 1, 2]);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn fifo_order_property() {
+        prop::check(100, |rng: &mut Rng| {
+            let mut b = Batcher::new(cfg(1 + rng.below(8), 1000));
+            let t0 = Instant::now();
+            let n = rng.below(40);
+            for i in 0..n {
+                b.push(i, t0);
+            }
+            let mut popped = Vec::new();
+            while !b.is_empty() {
+                popped.extend(b.drain_batch());
+            }
+            prop::assert_prop(popped == (0..n).collect::<Vec<_>>(), "order lost")
+        });
+    }
+
+    #[test]
+    fn deadline_countdown() {
+        let mut b = Batcher::new(cfg(10, 10));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push(1, t0);
+        let d = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+}

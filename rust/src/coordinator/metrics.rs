@@ -1,0 +1,115 @@
+//! Serving metrics registry: counters + latency histograms, lock-cheap and
+//! dumpable as JSON for the harness.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Vec<f64>>,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe_s(&self, name: &str, seconds: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies.entry(name.to_string()).or_default().push(seconds);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64)> {
+        let g = self.inner.lock().unwrap();
+        let xs = g.latencies.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut s = xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        Some((mean, percentile(&s, 0.5), percentile(&s, 0.95)))
+    }
+
+    pub fn dump(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let mut lat = BTreeMap::new();
+        for (k, xs) in &g.latencies {
+            if xs.is_empty() {
+                continue;
+            }
+            let mut s = xs.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            lat.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("n", Json::from(s.len())),
+                    ("mean_ms", Json::from(s.iter().sum::<f64>() / s.len() as f64 * 1e3)),
+                    ("p50_ms", Json::from(percentile(&s, 0.5) * 1e3)),
+                    ("p95_ms", Json::from(percentile(&s, 0.95) * 1e3)),
+                ]),
+            );
+        }
+        Json::obj(vec![("counters", counters), ("latency", Json::Obj(lat))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency() {
+        let m = MetricsRegistry::new();
+        m.incr("req");
+        m.add("req", 2);
+        assert_eq!(m.counter("req"), 3);
+        for i in 1..=100 {
+            m.observe_s("ttft", i as f64 / 1000.0);
+        }
+        let (mean, p50, p95) = m.latency_summary("ttft").unwrap();
+        assert!((mean - 0.0505).abs() < 1e-9);
+        assert!((p50 - 0.0505).abs() < 1e-3);
+        assert!(p95 > 0.09 && p95 <= 0.1);
+    }
+
+    #[test]
+    fn dump_roundtrips_json() {
+        let m = MetricsRegistry::new();
+        m.incr("a");
+        m.observe_s("l", 0.5);
+        let j = m.dump();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("a").unwrap().as_usize().unwrap(), 1);
+    }
+}

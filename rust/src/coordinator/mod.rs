@@ -1,0 +1,17 @@
+//! The serving coordinator: a threaded request loop with dynamic batching,
+//! a shared chunk store, per-session state and a metrics registry.
+//!
+//! (The image's offline crate mirror has no tokio, so the event loop is
+//! built on std threads + channels — same architecture, first-party
+//! machinery: a router thread drains the request queue into batches, worker
+//! threads run the pipeline, the chunk store is shared behind a mutex.)
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+pub mod session;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::MetricsRegistry;
+pub use server::{Request, Response, Server};
+pub use session::SessionTable;

@@ -1,0 +1,188 @@
+//! The serving loop: a router thread drains a request channel through the
+//! dynamic batcher and hands batches to the pipeline worker; responses flow
+//! back over per-request channels.  Backpressure: a bounded queue rejects
+//! new work when the system is saturated.
+//!
+//! On this single-core testbed the PJRT CPU client serializes compute, so
+//! one worker thread is the right default; the architecture (router +
+//! batcher + N workers + shared store) is the multi-GPU shape.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::MethodSpec;
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::MetricsRegistry;
+use crate::kvcache::ChunkStore;
+use crate::pipeline::Pipeline;
+use crate::workload::Episode;
+
+pub struct Request {
+    pub episode: Episode,
+    pub method: MethodSpec,
+    pub respond: SyncSender<Response>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub answer: Vec<i32>,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    /// Queueing delay before the pipeline picked the request up.
+    pub queue_s: f64,
+}
+
+struct Shared {
+    metrics: MetricsRegistry,
+    shutdown: AtomicBool,
+}
+
+/// A running server instance.
+pub struct Server {
+    tx: SyncSender<(Request, Instant)>,
+    shared: Arc<Shared>,
+    router: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the router/worker thread over an owned pipeline + store.
+    pub fn spawn(
+        pipeline: Pipeline,
+        store: ChunkStore,
+        batch_cfg: BatcherConfig,
+        queue_cap: usize,
+    ) -> Server {
+        let (tx, rx) = sync_channel::<(Request, Instant)>(queue_cap);
+        let shared = Arc::new(Shared {
+            metrics: MetricsRegistry::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let sh = shared.clone();
+        let router = std::thread::spawn(move || {
+            router_loop(pipeline, store, batch_cfg, rx, sh);
+        });
+        Server { tx, shared, router: Some(router) }
+    }
+
+    /// Submit a request; fails fast under backpressure.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.shared.metrics.incr("requests_submitted");
+        match self.tx.try_send((req, Instant::now())) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.shared.metrics.incr("requests_rejected");
+                Err(anyhow!("server saturated (queue full)"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        }
+    }
+
+    /// Convenience: submit and wait for the answer.
+    pub fn query(&self, episode: Episode, method: MethodSpec) -> Result<Response> {
+        let (rtx, rrx) = sync_channel(1);
+        self.submit(Request { episode, method, respond: rtx })?;
+        rrx.recv().map_err(|_| anyhow!("worker dropped the request"))
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.shared.metrics
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        drop(self.tx.clone()); // router also exits when all senders drop
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn router_loop(
+    pipeline: Pipeline,
+    store: ChunkStore,
+    batch_cfg: BatcherConfig,
+    rx: Receiver<(Request, Instant)>,
+    shared: Arc<Shared>,
+) {
+    let store = Mutex::new(store);
+    let mut batcher: Batcher<(Request, Instant)> = Batcher::new(batch_cfg);
+    'outer: loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        // Park until there is something to do.
+        let now = Instant::now();
+        let timeout = batcher
+            .time_to_deadline(now)
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(item) => batcher.push(item, Instant::now()),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // drain what's left, then exit
+                while !batcher.is_empty() {
+                    serve_batch(&pipeline, &store, batcher.drain_batch(), &shared);
+                }
+                break 'outer;
+            }
+        }
+        // opportunistically drain everything already queued
+        while let Ok(item) = rx.try_recv() {
+            batcher.push(item, Instant::now());
+        }
+        if batcher.ready(Instant::now()) {
+            let batch = batcher.drain_batch();
+            shared.metrics.observe_s("batch_size", batch.len() as f64);
+            serve_batch(&pipeline, &store, batch, &shared);
+        }
+    }
+}
+
+fn serve_batch(
+    pipeline: &Pipeline,
+    store: &Mutex<ChunkStore>,
+    batch: Vec<(Request, Instant)>,
+    shared: &Shared,
+) {
+    for (req, enq) in batch {
+        let queue_s = enq.elapsed().as_secs_f64();
+        let result = {
+            let mut st = store.lock().unwrap();
+            pipeline
+                .prepare_chunks(&mut st, &req.episode.chunks)
+                .and_then(|(chunks, _)| pipeline.answer(&chunks, &req.episode.prompt, req.method))
+        };
+        match result {
+            Ok(r) => {
+                shared.metrics.incr("requests_ok");
+                shared.metrics.observe_s("ttft", r.timing.ttft_s());
+                shared.metrics.observe_s("total", r.timing.total_s);
+                shared.metrics.observe_s("queue", queue_s);
+                let _ = req.respond.send(Response {
+                    answer: r.answer,
+                    ttft_s: r.timing.ttft_s(),
+                    total_s: r.timing.total_s,
+                    queue_s,
+                });
+            }
+            Err(e) => {
+                shared.metrics.incr("requests_failed");
+                eprintln!("[server] request failed: {e:#}");
+            }
+        }
+    }
+}

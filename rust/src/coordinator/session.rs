@@ -1,0 +1,107 @@
+//! Session table: multi-query sessions pin their retrieved documents so the
+//! chunk store keeps them resident between queries (the paper's interactive
+//! / multi-query amortization setting).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kvcache::{ChunkId, ChunkKv};
+
+#[derive(Default)]
+pub struct Session {
+    /// Pinned chunks (Arc keeps them out of LRU eviction).
+    pinned: HashMap<ChunkId, Arc<ChunkKv>>,
+    pub queries_served: u64,
+}
+
+impl Session {
+    pub fn pin(&mut self, chunk: Arc<ChunkKv>) {
+        self.pinned.insert(chunk.id, chunk);
+    }
+
+    pub fn pinned_ids(&self) -> Vec<ChunkId> {
+        self.pinned.keys().copied().collect()
+    }
+
+    pub fn pinned_bytes(&self) -> usize {
+        self.pinned.values().map(|c| c.nbytes()).sum()
+    }
+}
+
+/// Registry of live sessions.
+#[derive(Default)]
+pub struct SessionTable {
+    sessions: HashMap<u64, Session>,
+    next_id: u64,
+}
+
+impl SessionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn open(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.sessions.insert(id, Session::default());
+        id
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Session> {
+        self.sessions.get_mut(&id)
+    }
+
+    pub fn close(&mut self, id: u64) -> bool {
+        self.sessions.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF;
+
+    fn chunk(id: u64) -> Arc<ChunkKv> {
+        Arc::new(ChunkKv {
+            id,
+            tokens: vec![1, 2],
+            k: TensorF::zeros(&[1, 2, 1, 2]),
+            v: TensorF::zeros(&[1, 2, 1, 2]),
+        })
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut t = SessionTable::new();
+        let a = t.open();
+        let b = t.open();
+        assert_ne!(a, b);
+        assert_eq!(t.len(), 2);
+        t.get_mut(a).unwrap().pin(chunk(5));
+        t.get_mut(a).unwrap().queries_served += 1;
+        assert_eq!(t.get_mut(a).unwrap().pinned_ids(), vec![5]);
+        assert!(t.close(a));
+        assert!(!t.close(a));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn pinning_keeps_arc_alive() {
+        let mut t = SessionTable::new();
+        let s = t.open();
+        let c = chunk(9);
+        let weak = Arc::downgrade(&c);
+        t.get_mut(s).unwrap().pin(c);
+        assert!(weak.upgrade().is_some());
+        t.close(s);
+        assert!(weak.upgrade().is_none(), "closing releases pins");
+    }
+}

@@ -1,0 +1,107 @@
+//! Answer metrics: token-level F1 (the LongBench QA metric) and exact match.
+//! Predictions are cut at the first EOS and stripped of specials before
+//! scoring, mirroring the "official evaluation protocol" normalization.
+
+use crate::vocab;
+
+/// Strip EOS/PAD and everything after the first EOS.
+pub fn normalize(pred: &[i32]) -> Vec<i32> {
+    let mut out = Vec::new();
+    for &t in pred {
+        if t == vocab::EOS {
+            break;
+        }
+        if t != vocab::PAD {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Token-level F1 with multiset overlap (the SQuAD/LongBench convention).
+pub fn token_f1(pred: &[i32], gold: &[i32]) -> f64 {
+    let p = normalize(pred);
+    let g = normalize(gold);
+    if p.is_empty() && g.is_empty() {
+        return 1.0;
+    }
+    if p.is_empty() || g.is_empty() {
+        return 0.0;
+    }
+    let mut counts = std::collections::HashMap::new();
+    for &t in &g {
+        *counts.entry(t).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for &t in &p {
+        if let Some(c) = counts.get_mut(&t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / p.len() as f64;
+    let recall = overlap as f64 / g.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Exact match after normalization.
+pub fn exact_match(pred: &[i32], gold: &[i32]) -> bool {
+    normalize(pred) == normalize(gold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn perfect_and_zero() {
+        assert_eq!(token_f1(&[70, 71, vocab::EOS], &[70, 71]), 1.0);
+        assert_eq!(token_f1(&[90, vocab::EOS], &[70, 71]), 0.0);
+        assert!(exact_match(&[70, 71, vocab::EOS, 99], &[70, 71]));
+    }
+
+    #[test]
+    fn partial_overlap() {
+        // pred {70, 90}, gold {70, 71}: overlap 1, p=r=0.5 -> f1=0.5
+        let f1 = token_f1(&[70, 90], &[70, 71]);
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiset_semantics() {
+        // predicting the same gold token twice only counts once
+        let f1 = token_f1(&[70, 70], &[70, 71]);
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eos_cuts_prediction() {
+        assert_eq!(normalize(&[70, vocab::EOS, 71]), vec![70]);
+    }
+
+    #[test]
+    fn f1_bounds_and_symmetric_on_sets() {
+        prop::check(200, |rng: &mut Rng| {
+            let n = 1 + rng.below(4);
+            let m = 1 + rng.below(4);
+            let pred: Vec<i32> = (0..n).map(|_| 64 + rng.below(48) as i32).collect();
+            let gold: Vec<i32> = (0..m).map(|_| 64 + rng.below(48) as i32).collect();
+            let f1 = token_f1(&pred, &gold);
+            prop::assert_prop((0.0..=1.0).contains(&f1), format!("f1 {f1}"))?;
+            // identity gives 1.0
+            prop::assert_prop(
+                (token_f1(&gold, &gold) - 1.0).abs() < 1e-12,
+                "identity",
+            )?;
+            // f1(pred, gold) == f1(gold, pred) (multiset overlap is symmetric)
+            let rev = token_f1(&gold, &pred);
+            prop::assert_prop((f1 - rev).abs() < 1e-12, "symmetry")
+        });
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation: answer metrics (token F1 / EM — the LongBench-style scores),
+//! the dataset×method eval runner and table formatting.
+
+pub mod metrics;
+pub mod runner;
+pub mod tables;
+
+pub use metrics::{exact_match, token_f1};
+pub use runner::{EvalOutcome, EvalRunner};

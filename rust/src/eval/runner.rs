@@ -1,0 +1,105 @@
+//! Dataset × method evaluation loop shared by every accuracy table.
+
+use anyhow::Result;
+
+use crate::config::MethodSpec;
+use crate::eval::metrics::{exact_match, token_f1};
+use crate::kvcache::ChunkStore;
+use crate::pipeline::{Pipeline, QueryResult};
+use crate::workload::Episode;
+
+#[derive(Clone, Debug, Default)]
+pub struct EvalOutcome {
+    pub n: usize,
+    pub f1: f64,
+    pub em: f64,
+    pub mean_ttft_s: f64,
+    pub mean_total_s: f64,
+    /// Fraction of queries whose recompute selection hit a needle chunk.
+    pub needle_hit_rate: f64,
+}
+
+/// Runs episodes through a pipeline under one method, aggregating metrics.
+pub struct EvalRunner<'a> {
+    pub pipeline: &'a Pipeline,
+    pub store: &'a mut ChunkStore,
+}
+
+impl<'a> EvalRunner<'a> {
+    pub fn new(pipeline: &'a Pipeline, store: &'a mut ChunkStore) -> Self {
+        EvalRunner { pipeline, store }
+    }
+
+    pub fn run(&mut self, episodes: &[Episode], method: MethodSpec) -> Result<EvalOutcome> {
+        let mut out = EvalOutcome { n: episodes.len(), ..Default::default() };
+        let mut needle_hits = 0usize;
+        let mut needle_total = 0usize;
+        for e in episodes {
+            let (chunks, _) = self.pipeline.prepare_chunks(self.store, &e.chunks)?;
+            let r = self.pipeline.answer(&chunks, &e.prompt, method)?;
+            out.f1 += token_f1(&r.answer, &e.answer);
+            out.em += exact_match(&r.answer, &e.answer) as u8 as f64;
+            out.mean_ttft_s += r.timing.ttft_s();
+            out.mean_total_s += r.timing.total_s;
+            if !r.selected.is_empty() {
+                needle_total += 1;
+                if selection_hits_needle(&r, e) {
+                    needle_hits += 1;
+                }
+            }
+        }
+        let n = out.n.max(1) as f64;
+        out.f1 /= n;
+        out.em /= n;
+        out.mean_ttft_s /= n;
+        out.mean_total_s /= n;
+        out.needle_hit_rate = if needle_total > 0 {
+            needle_hits as f64 / needle_total as f64
+        } else {
+            0.0
+        };
+        Ok(out)
+    }
+}
+
+/// Did any selected row fall in a needle chunk (after reordering)?
+fn selection_hits_needle(r: &QueryResult, e: &Episode) -> bool {
+    let chunk = e.chunks[0].len();
+    // map original needle chunk ids through the decode-time chunk order
+    let needle_after: Vec<usize> = e
+        .needle_chunks
+        .iter()
+        .filter_map(|nc| r.chunk_order.iter().position(|&o| o == *nc))
+        .collect();
+    r.selected
+        .iter()
+        .any(|&row| needle_after.contains(&(row / chunk)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::Timing;
+
+    #[test]
+    fn needle_mapping_respects_reorder() {
+        let e = Episode {
+            chunks: vec![vec![0; 8], vec![0; 8], vec![0; 8]],
+            prompt: vec![],
+            answer: vec![],
+            needle_chunks: vec![2],
+            task: "t",
+        };
+        // chunk 2 moved to decode slot 0
+        let r = QueryResult {
+            answer: vec![],
+            timing: Timing::default(),
+            selected: vec![3], // row 3 -> chunk 0 after reorder
+            selected_positions: vec![],
+            chunk_order: vec![2, 0, 1],
+        };
+        assert!(selection_hits_needle(&r, &e));
+        let r2 = QueryResult { selected: vec![9], ..r }; // chunk 1 after reorder = old 0
+        assert!(!selection_hits_needle(&r2, &e));
+    }
+}

@@ -1,0 +1,240 @@
+//! RoPE geometry reconstruction (paper §4.2).
+//!
+//! After chunk-wise prefill every cached key carries chunk-local RoPE
+//! (positions 0..|C|).  At query time the coordinator chooses a positional
+//! layout for token *selection* — where each chunk is pretended to live in
+//! position space — and this module turns that choice into the per-token
+//! target positions and re-rotation deltas the `score` executable consumes.
+//!
+//! The four configurations from the paper:
+//!
+//! * `GLOBAL` — chunks at their packed global offsets, prompt right after:
+//!   the layout decode actually uses for recomputed tokens ("inference-
+//!   consistent").  Best in Table 1; our default.
+//! * `HL-HP` — every chunk at the head (local positions, colliding), prompt
+//!   immediately after the longest chunk: high-frequency region, close
+//!   prompt.
+//! * `HL-TP` — chunks at the head, prompt at its global index: far prompt.
+//! * `TL-TP` — every chunk pushed against the prompt (each ends where the
+//!   prompt begins, colliding at the tail), prompt at its global index.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RopeGeometry {
+    Global,
+    HlHp,
+    HlTp,
+    TlTp,
+}
+
+impl RopeGeometry {
+    pub const ALL: [RopeGeometry; 4] =
+        [RopeGeometry::HlHp, RopeGeometry::TlTp, RopeGeometry::HlTp, RopeGeometry::Global];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RopeGeometry::Global => "GLOBAL",
+            RopeGeometry::HlHp => "HL-HP",
+            RopeGeometry::HlTp => "HL-TP",
+            RopeGeometry::TlTp => "TL-TP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RopeGeometry> {
+        match s.to_ascii_uppercase().as_str() {
+            "GLOBAL" => Some(RopeGeometry::Global),
+            "HL-HP" | "HLHP" => Some(RopeGeometry::HlHp),
+            "HL-TP" | "HLTP" => Some(RopeGeometry::HlTp),
+            "TL-TP" | "TLTP" => Some(RopeGeometry::TlTp),
+            _ => None,
+        }
+    }
+}
+
+/// Positional layout for one assembled context: everything the score /
+/// recompute / decode executables need to know about where tokens live.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    /// Per context-row target position under this geometry.
+    pub ctx_pos: Vec<i32>,
+    /// Per context-row delta = target - stored(chunk-local) position; what
+    /// the re-rotation kernel applies to cached keys.
+    pub ctx_delta: Vec<i32>,
+    /// Prompt token positions.
+    pub prompt_pos: Vec<i32>,
+}
+
+/// Chunk lengths -> chunk-local (stored) position of every context row.
+pub fn local_positions(chunk_lens: &[usize]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(chunk_lens.iter().sum());
+    for &len in chunk_lens {
+        out.extend((0..len as i32).collect::<Vec<_>>());
+    }
+    out
+}
+
+/// Packed global offset of each chunk (retrieval order).
+pub fn global_offsets(chunk_lens: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(chunk_lens.len());
+    let mut acc = 0;
+    for &len in chunk_lens {
+        out.push(acc);
+        acc += len;
+    }
+    out
+}
+
+/// Build the positional layout of `geometry` for the given chunk lengths and
+/// prompt length. Positions are measured in the packed coordinate system
+/// where the full context occupies [0, N) and N = sum of chunk lengths.
+pub fn layout(geometry: RopeGeometry, chunk_lens: &[usize], prompt_len: usize) -> Layout {
+    let n: usize = chunk_lens.iter().sum();
+    let offsets = global_offsets(chunk_lens);
+    let max_chunk = chunk_lens.iter().copied().max().unwrap_or(0);
+
+    let mut ctx_pos = Vec::with_capacity(n);
+    for (ci, &len) in chunk_lens.iter().enumerate() {
+        for t in 0..len {
+            let p = match geometry {
+                RopeGeometry::Global => offsets[ci] + t,
+                RopeGeometry::HlHp | RopeGeometry::HlTp => t,
+                RopeGeometry::TlTp => n - len + t,
+            };
+            ctx_pos.push(p as i32);
+        }
+    }
+
+    let prompt_start = match geometry {
+        RopeGeometry::Global | RopeGeometry::HlTp | RopeGeometry::TlTp => n,
+        RopeGeometry::HlHp => max_chunk,
+    };
+    let prompt_pos: Vec<i32> =
+        (0..prompt_len).map(|i| (prompt_start + i) as i32).collect();
+
+    let local = local_positions(chunk_lens);
+    let ctx_delta: Vec<i32> =
+        ctx_pos.iter().zip(&local).map(|(&t, &l)| t - l).collect();
+
+    Layout { ctx_pos, ctx_delta, prompt_pos }
+}
+
+/// The layout the decode phase uses for rows that were NOT recomputed:
+/// cached keys as stored (chunk-local positions, delta 0), prompt at its
+/// packed-global position.  Recomputed rows get their global positions
+/// patched in by the pipeline.
+pub fn decode_layout(chunk_lens: &[usize], prompt_len: usize) -> Layout {
+    let n: usize = chunk_lens.iter().sum();
+    let local = local_positions(chunk_lens);
+    Layout {
+        ctx_delta: vec![0; local.len()],
+        ctx_pos: local,
+        prompt_pos: (0..prompt_len).map(|i| (n + i) as i32).collect(),
+    }
+}
+
+/// Map each context row to its chunk index.
+pub fn row_chunks(chunk_lens: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(chunk_lens.iter().sum());
+    for (ci, &len) in chunk_lens.iter().enumerate() {
+        out.extend(std::iter::repeat(ci).take(len));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn global_is_packed_and_collision_free() {
+        let l = layout(RopeGeometry::Global, &[64, 64, 32], 16);
+        let expect: Vec<i32> = (0..160).collect();
+        assert_eq!(l.ctx_pos, expect);
+        assert_eq!(l.prompt_pos[0], 160);
+        assert_eq!(*l.prompt_pos.last().unwrap(), 175);
+    }
+
+    #[test]
+    fn hl_configs_collide_at_head() {
+        for g in [RopeGeometry::HlHp, RopeGeometry::HlTp] {
+            let l = layout(g, &[64, 64], 8);
+            assert_eq!(l.ctx_pos[0], 0);
+            assert_eq!(l.ctx_pos[64], 0, "second chunk must restart at 0");
+            assert!(l.ctx_delta.iter().all(|&d| d == 0), "head-local => no delta");
+        }
+    }
+
+    #[test]
+    fn prompt_placement_differs_between_hp_and_tp() {
+        let hp = layout(RopeGeometry::HlHp, &[64, 64], 8);
+        let tp = layout(RopeGeometry::HlTp, &[64, 64], 8);
+        assert_eq!(hp.prompt_pos[0], 64); // right after the (collided) head block
+        assert_eq!(tp.prompt_pos[0], 128); // at the global index
+    }
+
+    #[test]
+    fn tl_tp_packs_chunks_against_prompt() {
+        let l = layout(RopeGeometry::TlTp, &[64, 32], 8);
+        // chunk 0 ends at position 95 (= n-1), chunk 1 also ends at 95
+        assert_eq!(l.ctx_pos[63], 95);
+        assert_eq!(l.ctx_pos[64 + 31], 95);
+        assert_eq!(l.prompt_pos[0], 96);
+    }
+
+    #[test]
+    fn decode_layout_keeps_stored_positions() {
+        let d = decode_layout(&[64, 64], 16);
+        assert!(d.ctx_delta.iter().all(|&x| x == 0));
+        assert_eq!(d.ctx_pos[64], 0);
+        assert_eq!(d.prompt_pos[0], 128);
+    }
+
+    #[test]
+    fn properties_hold_for_random_chunkings() {
+        prop::check(200, |rng: &mut Rng| {
+            let k = 1 + rng.below(8);
+            let chunk_lens: Vec<usize> = (0..k).map(|_| 1 + rng.below(64)).collect();
+            let n: usize = chunk_lens.iter().sum();
+            let p = 1 + rng.below(16);
+            for g in RopeGeometry::ALL {
+                let l = layout(g, &chunk_lens, p);
+                prop::assert_prop(l.ctx_pos.len() == n, "ctx_pos length")?;
+                prop::assert_prop(l.ctx_delta.len() == n, "delta length")?;
+                prop::assert_prop(l.prompt_pos.len() == p, "prompt length")?;
+                // deltas re-home stored local positions onto target positions
+                let local = local_positions(&chunk_lens);
+                for i in 0..n {
+                    prop::assert_prop(
+                        local[i] + l.ctx_delta[i] == l.ctx_pos[i],
+                        "delta inconsistency",
+                    )?;
+                }
+                // prompt strictly after every context position
+                let max_ctx = *l.ctx_pos.iter().max().unwrap();
+                prop::assert_prop(
+                    l.prompt_pos[0] > max_ctx,
+                    format!("{}: prompt not after context", g.name()),
+                )?;
+                // positions are non-negative
+                prop::assert_prop(
+                    l.ctx_pos.iter().all(|&x| x >= 0),
+                    "negative position",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_chunks_maps_rows() {
+        assert_eq!(row_chunks(&[2, 3]), vec![0, 0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn parse_names() {
+        for g in RopeGeometry::ALL {
+            assert_eq!(RopeGeometry::parse(g.name()), Some(g));
+        }
+        assert_eq!(RopeGeometry::parse("nope"), None);
+    }
+}

@@ -1,0 +1,351 @@
+//! Per-query KV assembly: padded context buffers for a bucket, in-place row
+//! patching with recomputed KV states, and the decode buffer (context +
+//! prompt + generated rows) the decode executable consumes.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::kvcache::store::ChunkKv;
+use crate::manifest::ModelDims;
+use crate::tensor::{TensorF, TensorI};
+
+/// A retrieved context assembled for one query: chunk KVs concatenated in
+/// order and padded to the bucket size.  `gpos` starts at the *stored*
+/// (chunk-local) positions — the decode-time truth for non-recomputed rows —
+/// and is updated as recomputed rows are patched in at global positions.
+pub struct AssembledContext {
+    pub bucket: usize,
+    pub chunk_lens: Vec<usize>,
+    pub tokens: TensorI, // [bucket]
+    pub k: TensorF,      // [L, bucket, H, Dh]
+    pub v: TensorF,      // [L, bucket, H, Dh]
+    pub gpos: TensorI,   // [bucket] decode-phase positions
+    pub valid: TensorF,  // [bucket]
+    dims: (usize, usize, usize),
+}
+
+impl AssembledContext {
+    pub fn new(dims: &ModelDims, bucket: usize, chunks: &[Arc<ChunkKv>]) -> Result<Self> {
+        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        let n: usize = chunks.iter().map(|c| c.len()).sum();
+        if n > bucket {
+            bail!("context of {n} tokens does not fit bucket {bucket}");
+        }
+        let mut tokens = TensorI::zeros(&[bucket]);
+        let mut k = TensorF::zeros(&[l, bucket, h, dh]);
+        let mut v = TensorF::zeros(&[l, bucket, h, dh]);
+        let mut gpos = TensorI::zeros(&[bucket]);
+        let mut valid = TensorF::zeros(&[bucket]);
+        let row = h * dh;
+        let mut at = 0usize;
+        for c in chunks {
+            let clen = c.len();
+            for t in 0..clen {
+                tokens.data_mut()[at + t] = c.tokens[t];
+                gpos.data_mut()[at + t] = t as i32; // stored chunk-local
+                valid.data_mut()[at + t] = 1.0;
+            }
+            for li in 0..l {
+                let src = (li * clen) * row;
+                let dst = (li * bucket + at) * row;
+                v.data_mut()[dst..dst + clen * row]
+                    .copy_from_slice(&c.v.data()[src..src + clen * row]);
+                k.data_mut()[dst..dst + clen * row]
+                    .copy_from_slice(&c.k.data()[src..src + clen * row]);
+            }
+            at += clen;
+        }
+        Ok(AssembledContext {
+            bucket,
+            chunk_lens: chunks.iter().map(|c| c.len()).collect(),
+            tokens,
+            k,
+            v,
+            gpos,
+            valid,
+            dims: (l, h, dh),
+        })
+    }
+
+    /// Number of real (non-padding) context rows.
+    pub fn n(&self) -> usize {
+        self.chunk_lens.iter().sum()
+    }
+
+    /// Patch recomputed rows into the buffers: row `slots[i]` receives
+    /// `new_k/new_v[:, i]` and its decode position becomes `sel_gpos[i]`.
+    /// Slots >= bucket (padding of the selection) are skipped.
+    pub fn patch(
+        &mut self,
+        slots: &[i32],
+        sel_gpos: &[i32],
+        count: usize,
+        new_k: &TensorF, // [L, S, H, Dh]
+        new_v: &TensorF,
+    ) {
+        let (l, h, dh) = self.dims;
+        let row = h * dh;
+        let s_cap = new_k.shape()[1];
+        for (i, (&slot, &gp)) in slots.iter().zip(sel_gpos).take(count).enumerate() {
+            debug_assert!(i < s_cap);
+            let slot = slot as usize;
+            if slot >= self.bucket {
+                continue;
+            }
+            for li in 0..l {
+                let src = (li * s_cap + i) * row;
+                let dst = (li * self.bucket + slot) * row;
+                self.k.data_mut()[dst..dst + row]
+                    .copy_from_slice(&new_k.data()[src..src + row]);
+                self.v.data_mut()[dst..dst + row]
+                    .copy_from_slice(&new_v.data()[src..src + row]);
+            }
+            self.gpos.data_mut()[slot] = gp;
+        }
+    }
+}
+
+/// The decode-phase KV buffer: [L, T, H, Dh] with T = bucket + prompt + answer
+/// slots.  Context rows come from an [`AssembledContext`], prompt rows from
+/// the score executable, generated rows are appended per decode step.
+pub struct DecodeBuffer {
+    pub k: TensorF,     // [L, T, H, Dh]
+    pub v: TensorF,     // [L, T, H, Dh]
+    pub gpos: TensorI,  // [T]
+    pub valid: TensorF, // [T]
+    pub next_row: usize,
+    pub next_pos: i32,
+    dims: (usize, usize, usize),
+}
+
+impl DecodeBuffer {
+    pub fn new(
+        dims: &ModelDims,
+        ctx: &AssembledContext,
+        prompt_k: &TensorF, // [L, P, H, Dh]
+        prompt_v: &TensorF,
+        prompt_pos: &[i32],
+    ) -> DecodeBuffer {
+        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        let p = dims.prompt_len;
+        let t_total = ctx.bucket + p + dims.answer_buf;
+        let row = h * dh;
+        let mut k = TensorF::zeros(&[l, t_total, h, dh]);
+        let mut v = TensorF::zeros(&[l, t_total, h, dh]);
+        let mut gpos = TensorI::zeros(&[t_total]);
+        let mut valid = TensorF::zeros(&[t_total]);
+        for li in 0..l {
+            // context rows [0, bucket)
+            let src = (li * ctx.bucket) * row;
+            let dst = (li * t_total) * row;
+            k.data_mut()[dst..dst + ctx.bucket * row]
+                .copy_from_slice(&ctx.k.data()[src..src + ctx.bucket * row]);
+            v.data_mut()[dst..dst + ctx.bucket * row]
+                .copy_from_slice(&ctx.v.data()[src..src + ctx.bucket * row]);
+            // prompt rows [bucket, bucket + p)
+            let psrc = (li * p) * row;
+            let pdst = (li * t_total + ctx.bucket) * row;
+            k.data_mut()[pdst..pdst + p * row]
+                .copy_from_slice(&prompt_k.data()[psrc..psrc + p * row]);
+            v.data_mut()[pdst..pdst + p * row]
+                .copy_from_slice(&prompt_v.data()[psrc..psrc + p * row]);
+        }
+        gpos.data_mut()[..ctx.bucket].copy_from_slice(ctx.gpos.data());
+        valid.data_mut()[..ctx.bucket].copy_from_slice(ctx.valid.data());
+        for (i, &pp) in prompt_pos.iter().enumerate() {
+            gpos.data_mut()[ctx.bucket + i] = pp;
+            valid.data_mut()[ctx.bucket + i] = 1.0;
+        }
+        DecodeBuffer {
+            k,
+            v,
+            gpos,
+            valid,
+            next_row: ctx.bucket + p,
+            next_pos: prompt_pos.last().copied().unwrap_or(0) + 1,
+            dims: (l, h, dh),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.gpos.len()
+    }
+
+    /// Build a decode buffer from an arbitrary [L, X, H, Dh] KV block (used
+    /// by the full-prefill baseline, where context + prompt KV come from one
+    /// executable).  Rows [0, X) are copied; `answer_buf` empty slots are
+    /// appended; decoding continues from `next_pos`.
+    pub fn from_parts(
+        dims: &ModelDims,
+        k: &TensorF,
+        v: &TensorF,
+        gpos: &[i32],
+        valid: &[f32],
+        next_pos: i32,
+    ) -> DecodeBuffer {
+        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        let x = k.shape()[1];
+        debug_assert_eq!(gpos.len(), x);
+        let t_total = x + dims.answer_buf;
+        let row = h * dh;
+        let mut kk = TensorF::zeros(&[l, t_total, h, dh]);
+        let mut vv = TensorF::zeros(&[l, t_total, h, dh]);
+        for li in 0..l {
+            let src = (li * x) * row;
+            let dst = (li * t_total) * row;
+            kk.data_mut()[dst..dst + x * row]
+                .copy_from_slice(&k.data()[src..src + x * row]);
+            vv.data_mut()[dst..dst + x * row]
+                .copy_from_slice(&v.data()[src..src + x * row]);
+        }
+        let mut g = TensorI::zeros(&[t_total]);
+        let mut val = TensorF::zeros(&[t_total]);
+        g.data_mut()[..x].copy_from_slice(gpos);
+        val.data_mut()[..x].copy_from_slice(valid);
+        DecodeBuffer {
+            k: kk,
+            v: vv,
+            gpos: g,
+            valid: val,
+            next_row: x,
+            next_pos,
+            dims: (l, h, dh),
+        }
+    }
+
+    /// Append a generated token's KV row (from a decode step).
+    pub fn append(&mut self, new_k: &TensorF, new_v: &TensorF) -> Result<()> {
+        let (l, h, dh) = self.dims;
+        let row = h * dh;
+        let t_total = self.capacity();
+        if self.next_row >= t_total {
+            bail!("decode buffer full ({t_total} rows)");
+        }
+        for li in 0..l {
+            let src = li * row;
+            let dst = (li * t_total + self.next_row) * row;
+            self.k.data_mut()[dst..dst + row]
+                .copy_from_slice(&new_k.data()[src..src + row]);
+            self.v.data_mut()[dst..dst + row]
+                .copy_from_slice(&new_v.data()[src..src + row]);
+        }
+        self.gpos.data_mut()[self.next_row] = self.next_pos;
+        self.valid.data_mut()[self.next_row] = 1.0;
+        self.next_row += 1;
+        self.next_pos += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 144,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 128,
+            rope_theta: 10000.0,
+            chunk: 8,
+            prompt_len: 4,
+            sel_budget: 8,
+            answer_buf: 3,
+            dev_layers: 2,
+        }
+    }
+
+    fn chunk(id: u64, len: usize, fill: f32) -> Arc<ChunkKv> {
+        let d = dims();
+        let shape = [d.n_layers, len, d.n_heads, d.head_dim];
+        let n: usize = shape.iter().product();
+        Arc::new(ChunkKv {
+            id,
+            tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
+            k: TensorF::from_vec(&shape, vec![fill; n]).unwrap(),
+            v: TensorF::from_vec(&shape, vec![fill * 10.0; n]).unwrap(),
+        })
+    }
+
+    #[test]
+    fn assembly_concatenates_in_order() {
+        let d = dims();
+        let ctx = AssembledContext::new(&d, 32, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)])
+            .unwrap();
+        assert_eq!(ctx.n(), 16);
+        assert_eq!(ctx.tokens.data()[0], 100);
+        assert_eq!(ctx.tokens.data()[8], 200);
+        // stored positions are chunk-local
+        assert_eq!(ctx.gpos.data()[7], 7);
+        assert_eq!(ctx.gpos.data()[8], 0);
+        // kv rows land in the right place for every layer
+        for li in 0..d.n_layers {
+            assert_eq!(ctx.k.at(&[li, 0, 0, 0]), 1.0);
+            assert_eq!(ctx.k.at(&[li, 8, 0, 0]), 2.0);
+            assert_eq!(ctx.v.at(&[li, 8, 1, 3]), 20.0);
+            // padding rows stay zero/invalid
+            assert_eq!(ctx.k.at(&[li, 16, 0, 0]), 0.0);
+        }
+        assert_eq!(ctx.valid.data()[15], 1.0);
+        assert_eq!(ctx.valid.data()[16], 0.0);
+    }
+
+    #[test]
+    fn assembly_rejects_overflow() {
+        let d = dims();
+        assert!(AssembledContext::new(&d, 8, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)])
+            .is_err());
+    }
+
+    #[test]
+    fn patch_updates_rows_and_positions() {
+        let d = dims();
+        let mut ctx =
+            AssembledContext::new(&d, 16, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)]).unwrap();
+        let s = 4usize;
+        let shape = [d.n_layers, s, d.n_heads, d.head_dim];
+        let nk = TensorF::full(&shape, 7.0);
+        let nv = TensorF::full(&shape, 9.0);
+        // patch rows 3 and 9; slot 99 (>= bucket) is selection padding
+        ctx.patch(&[3, 9, 99, 99], &[3, 9, 0, 0], 2, &nk, &nv);
+        assert_eq!(ctx.k.at(&[0, 3, 0, 0]), 7.0);
+        assert_eq!(ctx.v.at(&[1, 9, 1, 3]), 9.0);
+        assert_eq!(ctx.gpos.data()[9], 9, "patched row gets its global position");
+        // neighbours untouched
+        assert_eq!(ctx.k.at(&[0, 4, 0, 0]), 1.0);
+        assert_eq!(ctx.gpos.data()[10], 2);
+    }
+
+    #[test]
+    fn decode_buffer_layout_and_append() {
+        let d = dims();
+        let ctx = AssembledContext::new(&d, 16, &[chunk(1, 8, 1.0)]).unwrap();
+        let p_shape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+        let pk = TensorF::full(&p_shape, 5.0);
+        let pv = TensorF::full(&p_shape, 6.0);
+        let ppos: Vec<i32> = (8..12).collect();
+        let mut buf = DecodeBuffer::new(&d, &ctx, &pk, &pv, &ppos);
+        assert_eq!(buf.capacity(), 16 + 4 + 3);
+        assert_eq!(buf.k.at(&[0, 16, 0, 0]), 5.0, "prompt rows after ctx block");
+        assert_eq!(buf.gpos.data()[16], 8);
+        assert_eq!(buf.next_pos, 12);
+        let row_shape = [d.n_layers, d.n_heads, d.head_dim];
+        buf.append(&TensorF::full(&row_shape, 1.5), &TensorF::full(&row_shape, 2.5))
+            .unwrap();
+        assert_eq!(buf.k.at(&[1, 20, 0, 0]), 1.5);
+        assert_eq!(buf.gpos.data()[20], 12);
+        assert_eq!(buf.valid.data()[20], 1.0);
+        // fill to capacity -> error
+        for _ in 0..2 {
+            buf.append(&TensorF::full(&row_shape, 0.0), &TensorF::full(&row_shape, 0.0))
+                .unwrap();
+        }
+        assert!(buf
+            .append(&TensorF::full(&row_shape, 0.0), &TensorF::full(&row_shape, 0.0))
+            .is_err());
+    }
+}

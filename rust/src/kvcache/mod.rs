@@ -1,0 +1,9 @@
+//! Chunk-level KV cache management: the store (offline prefilled chunks,
+//! LRU + byte budget + disk persistence) and the per-query assembly/layout
+//! machinery (padded context buffers, row patching, the decode buffer).
+
+pub mod layout;
+pub mod store;
+
+pub use layout::{AssembledContext, DecodeBuffer};
+pub use store::{ChunkId, ChunkKv, ChunkStore, StoreStats};

@@ -1,0 +1,346 @@
+//! The chunk KV store: offline-prefilled chunk caches keyed by content id,
+//! with LRU eviction under a byte budget, pin counting, hit/miss accounting
+//! and a simple binary persistence format so caches survive restarts
+//! (the paper's "prefetched offline and reused across queries" regime).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::TensorF;
+
+pub type ChunkId = u64;
+
+/// An immutable prefilled chunk: tokens + chunk-local KV states.
+#[derive(Clone, Debug)]
+pub struct ChunkKv {
+    pub id: ChunkId,
+    pub tokens: Vec<i32>,
+    /// [n_layers, C, H, Dh] keys under chunk-local RoPE.
+    pub k: TensorF,
+    /// [n_layers, C, H, Dh] values.
+    pub v: TensorF,
+}
+
+impl ChunkKv {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.tokens.len() * 4 + (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Content-derived id (FNV-1a over the token stream) so identical
+    /// documents share one cache entry across queries.
+    pub fn content_id(tokens: &[i32]) -> ChunkId {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &t in tokens {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub bytes: usize,
+}
+
+/// LRU chunk cache with a byte budget. Entries handed out as `Arc` stay
+/// alive while in use; eviction skips entries that are externally pinned.
+pub struct ChunkStore {
+    budget_bytes: usize,
+    entries: HashMap<ChunkId, Arc<ChunkKv>>,
+    /// LRU order: front = oldest.
+    order: Vec<ChunkId>,
+    stats: StoreStats,
+}
+
+impl ChunkStore {
+    pub fn new(budget_bytes: usize) -> ChunkStore {
+        ChunkStore {
+            budget_bytes,
+            entries: HashMap::new(),
+            order: Vec::new(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let mut s = self.stats;
+        s.bytes = self.entries.values().map(|e| e.nbytes()).sum();
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    pub fn get(&mut self, id: ChunkId) -> Option<Arc<ChunkKv>> {
+        match self.entries.get(&id) {
+            Some(e) => {
+                self.stats.hits += 1;
+                let e = e.clone();
+                self.touch(id);
+                Some(e)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn touch(&mut self, id: ChunkId) {
+        if let Some(pos) = self.order.iter().position(|&x| x == id) {
+            self.order.remove(pos);
+        }
+        self.order.push(id);
+    }
+
+    pub fn insert(&mut self, chunk: ChunkKv) -> Arc<ChunkKv> {
+        let id = chunk.id;
+        let arc = Arc::new(chunk);
+        self.entries.insert(id, arc.clone());
+        self.touch(id);
+        self.stats.insertions += 1;
+        self.evict_to_budget(Some(id));
+        arc
+    }
+
+    fn evict_to_budget(&mut self, inserting: Option<ChunkId>) {
+        let mut bytes: usize = self.entries.values().map(|e| e.nbytes()).sum();
+        let mut i = 0;
+        while bytes > self.budget_bytes && i < self.order.len() {
+            let id = self.order[i];
+            // Pinned entries (externally referenced) are not evictable. The
+            // entry being inserted right now carries one extra count (the
+            // Arc insert() is about to hand back).
+            let pin_free = if inserting == Some(id) { 2 } else { 1 };
+            let evictable = self
+                .entries
+                .get(&id)
+                .map(|e| Arc::strong_count(e) == pin_free)
+                .unwrap_or(false);
+            if evictable {
+                if let Some(e) = self.entries.remove(&id) {
+                    bytes -= e.nbytes();
+                    self.stats.evictions += 1;
+                }
+                self.order.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    // -- persistence ---------------------------------------------------------
+    // Format (little-endian): magic "IFKV1\0\0\0", then per chunk:
+    //   id u64 | n_tokens u32 | k_rank u32 | k dims u32* | tokens i32* |
+    //   k f32* | v f32*   (v has the same dims as k)
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
+        f.write_all(b"IFKV1\0\0\0")?;
+        for id in &self.order {
+            let e = &self.entries[id];
+            f.write_all(&e.id.to_le_bytes())?;
+            f.write_all(&(e.tokens.len() as u32).to_le_bytes())?;
+            f.write_all(&(e.k.shape().len() as u32).to_le_bytes())?;
+            for &d in e.k.shape() {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &t in &e.tokens {
+                f.write_all(&t.to_le_bytes())?;
+            }
+            for &x in e.k.data() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+            for &x in e.v.data() {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path, budget_bytes: usize) -> Result<ChunkStore> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        if bytes.len() < 8 || &bytes[..8] != b"IFKV1\0\0\0" {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut store = ChunkStore::new(budget_bytes);
+        let mut off = 8usize;
+        let rd_u32 = |b: &[u8], o: &mut usize| -> Result<u32> {
+            if *o + 4 > b.len() {
+                bail!("truncated store file");
+            }
+            let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
+            *o += 4;
+            Ok(v)
+        };
+        while off < bytes.len() {
+            if off + 8 > bytes.len() {
+                bail!("truncated chunk header");
+            }
+            let id = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+            off += 8;
+            let n_tokens = rd_u32(&bytes, &mut off)? as usize;
+            let rank = rd_u32(&bytes, &mut off)? as usize;
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(rd_u32(&bytes, &mut off)? as usize);
+            }
+            let n_kv: usize = dims.iter().product();
+            let need = n_tokens * 4 + 2 * n_kv * 4;
+            if off + need > bytes.len() {
+                bail!("truncated chunk body");
+            }
+            let mut tokens = Vec::with_capacity(n_tokens);
+            for _ in 0..n_tokens {
+                tokens.push(i32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+                off += 4;
+            }
+            let read_f32s = |n: usize, o: &mut usize| {
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f32::from_le_bytes(bytes[*o..*o + 4].try_into().unwrap()));
+                    *o += 4;
+                }
+                v
+            };
+            let k = TensorF::from_vec(&dims, read_f32s(n_kv, &mut off))?;
+            let v = TensorF::from_vec(&dims, read_f32s(n_kv, &mut off))?;
+            store.insert(ChunkKv { id, tokens, k, v });
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn mk_chunk(id: ChunkId, c: usize) -> ChunkKv {
+        let dims = [2usize, c, 2, 4];
+        let n: usize = dims.iter().product();
+        ChunkKv {
+            id,
+            tokens: (0..c as i32).collect(),
+            k: TensorF::from_vec(&dims, (0..n).map(|x| x as f32).collect()).unwrap(),
+            v: TensorF::from_vec(&dims, (0..n).map(|x| (x * 2) as f32).collect()).unwrap(),
+        }
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut s = ChunkStore::new(usize::MAX);
+        s.insert(mk_chunk(1, 8));
+        assert!(s.get(1).is_some());
+        assert!(s.get(2).is_none());
+        let st = s.stats();
+        assert_eq!((st.hits, st.misses, st.insertions), (1, 1, 1));
+    }
+
+    #[test]
+    fn evicts_lru_first() {
+        let one = mk_chunk(1, 8).nbytes();
+        let mut s = ChunkStore::new(2 * one);
+        s.insert(mk_chunk(1, 8));
+        s.insert(mk_chunk(2, 8));
+        let _ = s.get(1); // make 2 the LRU
+        s.insert(mk_chunk(3, 8)); // exceeds budget -> evict 2
+        assert!(s.contains(1));
+        assert!(!s.contains(2));
+        assert!(s.contains(3));
+        assert_eq!(s.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction() {
+        let one = mk_chunk(1, 8).nbytes();
+        let mut s = ChunkStore::new(one); // room for 1 entry
+        let pinned = s.insert(mk_chunk(1, 8));
+        s.insert(mk_chunk(2, 8));
+        // 1 is pinned (we hold an Arc) so 2 must go instead
+        assert!(s.contains(1));
+        assert!(!s.contains(2));
+        drop(pinned);
+        s.insert(mk_chunk(3, 8));
+        assert!(!s.contains(1), "unpinned LRU entry finally evicted");
+    }
+
+    #[test]
+    fn content_id_stable_and_sensitive() {
+        let a = ChunkKv::content_id(&[1, 2, 3]);
+        assert_eq!(a, ChunkKv::content_id(&[1, 2, 3]));
+        assert_ne!(a, ChunkKv::content_id(&[1, 2, 4]));
+        assert_ne!(a, ChunkKv::content_id(&[3, 2, 1]));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ifkv_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chunks.bin");
+        let mut s = ChunkStore::new(usize::MAX);
+        s.insert(mk_chunk(7, 4));
+        s.insert(mk_chunk(9, 4));
+        s.save(&path).unwrap();
+        let mut l = ChunkStore::load(&path, usize::MAX).unwrap();
+        assert_eq!(l.len(), 2);
+        let c = l.get(7).unwrap();
+        assert_eq!(c.tokens, (0..4).collect::<Vec<i32>>());
+        assert_eq!(c.k.shape(), &[2, 4, 2, 4]);
+        let orig = mk_chunk(7, 4);
+        assert_eq!(c.k.max_abs_diff(&orig.k), 0.0);
+        assert_eq!(c.v.max_abs_diff(&orig.v), 0.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lru_property_never_exceeds_budget_when_unpinned() {
+        prop::check(50, |rng: &mut Rng| {
+            let one = mk_chunk(0, 8).nbytes();
+            let cap = 1 + rng.below(5);
+            let mut s = ChunkStore::new(cap * one);
+            for i in 0..20u64 {
+                s.insert(mk_chunk(i, 8));
+                if rng.chance(0.3) {
+                    let _ = s.get(rng.below(i as usize + 1) as u64);
+                }
+            }
+            prop::assert_prop(
+                s.stats().bytes <= cap * one,
+                format!("store exceeded budget: {} > {}", s.stats().bytes, cap * one),
+            )
+        });
+    }
+}

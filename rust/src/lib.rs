@@ -1,0 +1,47 @@
+//! # InfoFlow KV
+//!
+//! A three-layer reproduction of *InfoFlow KV: Information-Flow-Aware KV
+//! Recomputation for Long Context* as a production-shaped serving stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: chunk KV-cache
+//!   manager, RoPE geometry reconstruction, attention-norm token selection,
+//!   selective recomputation orchestration, chunk reordering, dynamic
+//!   batching, and the full benchmark harness reproducing every table and
+//!   figure of the paper.
+//! * **Layer 2 (python/compile/model.py, build time only)** — the JAX
+//!   transformer lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/, build time only)** — the Pallas
+//!   selective-attention / attention-norm / RoPE kernels embedded in those
+//!   artifacts.
+//!
+//! At runtime this crate loads `artifacts/manifest.json`, compiles the HLO
+//! executables on the PJRT CPU client via the `xla` crate, uploads one flat
+//! weight buffer per backbone, and serves queries without ever touching
+//! Python.
+//!
+//! Entry points:
+//! * [`runtime::Runtime`] — compiled executables + weights.
+//! * [`pipeline::Pipeline`] — one query end-to-end (assemble → score →
+//!   select → recompute → decode) under a [`config::MethodSpec`].
+//! * [`coordinator::Server`] — threaded request loop with dynamic batching.
+//! * [`bench_harness`] — `repro bench table1..table6 fig2..fig4`.
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod geometry;
+pub mod kvcache;
+pub mod manifest;
+pub mod pipeline;
+pub mod reorder;
+pub mod rope;
+pub mod runtime;
+pub mod selection;
+pub mod seqpar;
+pub mod tensor;
+pub mod util;
+pub mod vocab;
+pub mod workload;
+pub mod bench_harness;
+
+pub use anyhow::{anyhow, bail, Context, Result};

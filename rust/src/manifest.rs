@@ -1,0 +1,262 @@
+//! Artifact manifest: the contract between `python -m compile.aot` and this
+//! crate.  Parsed from `artifacts/manifest.json`; every executable's argument
+//! and result specs are recorded so the runtime can type-check itself against
+//! the artifacts at load time instead of failing inside PJRT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub chunk: usize,
+    pub prompt_len: usize,
+    pub sel_budget: usize,
+    pub answer_buf: usize,
+    pub dev_layers: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub name: String,
+    pub bucket: Option<usize>,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BackboneInfo {
+    pub name: String,
+    pub weights_file: String,
+    pub steps: Option<usize>,
+    pub final_loss: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: ModelDims,
+    pub config_hash: String,
+    pub param_count: usize,
+    pub buckets: Vec<usize>,
+    pub executables: Vec<ExecSpec>,
+    pub backbones: Vec<BackboneInfo>,
+    pub vocab_json: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)?;
+        Self::from_json(dir, &j).with_context(|| format!("in {}", path.display()))
+    }
+
+    fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let fv = j.get("format_version")?.as_usize()?;
+        if fv != 1 {
+            bail!("unsupported manifest format_version {fv}");
+        }
+        let m = j.get("model")?;
+        let model = ModelDims {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            head_dim: m.get("head_dim")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            rope_theta: m.get("rope_theta")?.as_f64()?,
+            chunk: m.get("chunk")?.as_usize()?,
+            prompt_len: m.get("prompt_len")?.as_usize()?,
+            sel_budget: m.get("sel_budget")?.as_usize()?,
+            answer_buf: m.get("answer_buf")?.as_usize()?,
+            dev_layers: m.get("dev_layers")?.as_usize()?,
+        };
+        let mut executables = Vec::new();
+        for e in j.get("executables")?.as_arr()? {
+            let parse_specs = |key: &str| -> Result<Vec<ArgSpec>> {
+                e.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|a| {
+                        Ok(ArgSpec {
+                            shape: a.get("shape")?.usize_array()?,
+                            dtype: DType::parse(a.get("dtype")?.as_str()?)?,
+                        })
+                    })
+                    .collect()
+            };
+            executables.push(ExecSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                bucket: match e.get("bucket")? {
+                    Json::Null => None,
+                    b => Some(b.as_usize()?),
+                },
+                file: e.get("file")?.as_str()?.to_string(),
+                args: parse_specs("args")?,
+                outputs: parse_specs("outputs")?,
+            });
+        }
+        let mut backbones = Vec::new();
+        for (name, b) in j.get("backbones")?.as_obj()? {
+            backbones.push(BackboneInfo {
+                name: name.clone(),
+                weights_file: b.get("weights")?.as_str()?.to_string(),
+                steps: b.opt("steps").and_then(|x| x.as_usize().ok()),
+                final_loss: b.opt("final_loss").and_then(|x| x.as_f64().ok()),
+            });
+        }
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            model,
+            config_hash: j.get("config_hash")?.as_str()?.to_string(),
+            param_count: j.get("param_count")?.as_usize()?,
+            buckets: j.get("buckets")?.usize_array()?,
+            executables,
+            backbones,
+            vocab_json: j.get("vocab")?.clone(),
+        })
+    }
+
+    pub fn exec_spec(&self, name: &str, bucket: Option<usize>) -> Result<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name && e.bucket == bucket)
+            .ok_or_else(|| anyhow!("no executable '{name}' (bucket {bucket:?}) in manifest"))
+    }
+
+    pub fn backbone(&self, name: &str) -> Result<&BackboneInfo> {
+        self.backbones
+            .iter()
+            .find(|b| b.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "backbone '{name}' not in manifest (have: {:?}) — run `make artifacts`",
+                    self.backbones.iter().map(|b| &b.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, spec: &ExecSpec) -> PathBuf {
+        self.root.join(&spec.file)
+    }
+
+    /// Pick the smallest context bucket that fits `n` tokens.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .ok_or_else(|| anyhow!("context of {n} tokens exceeds largest bucket"))
+    }
+
+    /// Load a backbone's flat f32 weight vector (little-endian raw file).
+    pub fn load_weights(&self, name: &str) -> Result<Vec<f32>> {
+        let info = self.backbone(name)?;
+        let path = self.root.join(&info.weights_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() != self.param_count * 4 {
+            bail!(
+                "{}: expected {} bytes ({} f32 params), got {}",
+                path.display(),
+                self.param_count * 4,
+                self.param_count,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("artifacts/ not built; skipping");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 144);
+        assert_eq!(m.model.chunk, 64);
+        assert!(!m.buckets.is_empty());
+        // one prefill_chunk + 5 executables per bucket
+        assert_eq!(m.executables.len(), 1 + 5 * m.buckets.len());
+        // every HLO file the manifest references must exist
+        for e in &m.executables {
+            assert!(m.hlo_path(e).exists(), "missing {}", e.file);
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1).unwrap(), 128);
+        assert_eq!(m.bucket_for(128).unwrap(), 128);
+        assert_eq!(m.bucket_for(129).unwrap(), 256);
+        assert_eq!(m.bucket_for(512).unwrap(), 512);
+        assert!(m.bucket_for(513).is_err());
+    }
+
+    #[test]
+    fn exec_spec_shapes_match_model() {
+        let Some(dir) = manifest_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let d = &m.model;
+        let spec = m.exec_spec("score", Some(256)).unwrap();
+        // args: w, prompt, ppos, pvalid, ck, cv, cdelta, cgpos, cvalid
+        assert_eq!(spec.args[0].shape, vec![m.param_count]);
+        assert_eq!(spec.args[1].shape, vec![d.prompt_len]);
+        assert_eq!(
+            spec.args[4].shape,
+            vec![d.n_layers, 256, d.n_heads, d.head_dim]
+        );
+        // outputs: scores, prompt_k, prompt_v, last_logits
+        assert_eq!(spec.outputs[0].shape, vec![d.n_layers, 256]);
+        assert_eq!(spec.outputs[3].shape, vec![d.vocab]);
+    }
+}

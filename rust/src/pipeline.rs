@@ -1,0 +1,481 @@
+//! The end-to-end query pipeline — the paper's Figure 1 as code.
+//!
+//! ```text
+//! chunks ──prefill_chunk──▶ ChunkStore (offline / cached)
+//!                              │ assemble (bucket-padded)
+//!                              ▼
+//!            score under selection geometry (GLOBAL default)   [skip: EPIC]
+//!                              │ Eq.7 scores @ norm layer
+//!                              ▼
+//!        [optional §4.3 reorder: HL-TP stage-1 → chunk order → re-score]
+//!                              ▼
+//!                  Top-k → recompute (L1 selective_attn kernel)
+//!                              │ patch rows at global positions
+//!                              ▼
+//!              score under decode layout → prompt KV + first logits
+//!                              ▼
+//!                    greedy decode loop (answer_len steps)
+//! ```
+//!
+//! Every stage is timed; TTFT = everything up to (and including) the first
+//! answer token's logits.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::MethodSpec;
+use crate::geometry::{self, RopeGeometry};
+use crate::kvcache::{AssembledContext, ChunkKv, ChunkStore, DecodeBuffer};
+use crate::runtime::exec::ModelSession;
+use crate::selection;
+use crate::tensor::{TensorF, TensorI};
+use crate::vocab::{self, Vocab};
+
+/// Per-stage wall-clock breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    /// Cold chunk prefill (0 when every chunk was cached).
+    pub chunk_prefill_s: f64,
+    pub score_s: f64,
+    pub select_s: f64,
+    pub recompute_s: f64,
+    pub prompt_s: f64,
+    pub decode_s: f64,
+    pub total_s: f64,
+}
+
+impl Timing {
+    /// Time to first token: everything before decode of the 2nd token.
+    pub fn ttft_s(&self) -> f64 {
+        self.chunk_prefill_s + self.score_s + self.select_s + self.recompute_s
+            + self.prompt_s
+    }
+}
+
+/// Result of one query.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub answer: Vec<i32>,
+    pub timing: Timing,
+    /// Context rows that were recomputed (buffer indices), selection order.
+    pub selected: Vec<usize>,
+    /// Decode-phase position of each selected row (for Table 2 analysis).
+    pub selected_positions: Vec<i64>,
+    /// Chunk order actually decoded (differs from input under reorder).
+    pub chunk_order: Vec<usize>,
+}
+
+/// Pipeline: a model session + vocab, stateless across queries (the chunk
+/// store is passed in so callers control sharing/eviction).
+pub struct Pipeline {
+    pub session: ModelSession,
+    pub vocab: Vocab,
+}
+
+impl Pipeline {
+    pub fn new(session: ModelSession) -> Result<Pipeline> {
+        let vocab = Vocab::from_manifest(&session.runtime.manifest.vocab_json)?;
+        Ok(Pipeline { session, vocab })
+    }
+
+    fn dims(&self) -> &crate::manifest::ModelDims {
+        &self.session.runtime.manifest.model
+    }
+
+    /// Fetch-or-prefill every chunk of a context (the offline phase; on a
+    /// warm store this is pure cache hits).  Returns pinned chunk handles
+    /// and the prefill seconds spent on misses.
+    pub fn prepare_chunks(
+        &self,
+        store: &mut ChunkStore,
+        chunk_tokens: &[Vec<i32>],
+    ) -> Result<(Vec<Arc<ChunkKv>>, f64)> {
+        let mut out = Vec::with_capacity(chunk_tokens.len());
+        let mut spent = 0.0;
+        for toks in chunk_tokens {
+            let id = ChunkKv::content_id(toks);
+            if let Some(c) = store.get(id) {
+                out.push(c);
+                continue;
+            }
+            let t0 = Instant::now();
+            let (k, v) = self.session.prefill_chunk(toks)?;
+            spent += t0.elapsed().as_secs_f64();
+            out.push(store.insert(ChunkKv { id, tokens: toks.clone(), k, v }));
+        }
+        Ok((out, spent))
+    }
+
+    /// Answer one query over prepared chunks with the given method.
+    /// `prompt_body` is the unpadded query (e.g. `[QUERY, k, ANSWER]`).
+    pub fn answer(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        method: MethodSpec,
+    ) -> Result<QueryResult> {
+        let t_start = Instant::now();
+        let mut timing = Timing::default();
+        let res = match method {
+            MethodSpec::Baseline => self.run_baseline(chunks, prompt_body, &mut timing)?,
+            MethodSpec::NoRecompute => {
+                self.run_selective(chunks, prompt_body, None, &mut timing)?
+            }
+            MethodSpec::Ours { budget, geometry, norm_layer, reorder } => self
+                .run_selective(
+                    chunks,
+                    prompt_body,
+                    Some(Selector::Norm { budget, geometry, norm_layer, reorder }),
+                    &mut timing,
+                )?,
+            MethodSpec::CacheBlend { budget } => self.run_selective(
+                chunks,
+                prompt_body,
+                Some(Selector::CacheBlend { budget }),
+                &mut timing,
+            )?,
+            MethodSpec::Epic { budget } => self.run_selective(
+                chunks,
+                prompt_body,
+                Some(Selector::Epic { budget }),
+                &mut timing,
+            )?,
+        };
+        let mut res = res;
+        res.timing = timing;
+        res.timing.total_s = t_start.elapsed().as_secs_f64();
+        Ok(res)
+    }
+
+    /// Answer with an explicitly chosen recomputation set (buffer row
+    /// indices) — the oracle/random selection ablations use this to separate
+    /// selection quality from recomputation mechanics.
+    pub fn answer_with_rows(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        rows: Vec<usize>,
+    ) -> Result<QueryResult> {
+        let t_start = Instant::now();
+        let mut timing = Timing::default();
+        let mut res = self.run_selective(
+            chunks,
+            prompt_body,
+            Some(Selector::Explicit(rows)),
+            &mut timing,
+        )?;
+        res.timing = timing;
+        res.timing.total_s = t_start.elapsed().as_secs_f64();
+        Ok(res)
+    }
+
+    // -- baseline: exact full-context prefill --------------------------------
+    fn run_baseline(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        timing: &mut Timing,
+    ) -> Result<QueryResult> {
+        let d = self.dims().clone();
+        let n: usize = chunks.iter().map(|c| c.len()).sum();
+        let bucket = self.session.runtime.manifest.bucket_for(n)?;
+        let np = bucket + d.prompt_len;
+
+        let mut tokens = vec![vocab::PAD; np];
+        let mut pos = vec![0i32; np];
+        let mut valid = vec![0.0f32; np];
+        let mut at = 0usize;
+        for c in chunks {
+            for &t in &c.tokens {
+                tokens[at] = t;
+                pos[at] = at as i32;
+                valid[at] = 1.0;
+                at += 1;
+            }
+        }
+        // bucket padding rows stay invalid; give them harmless positions
+        for i in at..bucket {
+            pos[i] = i as i32;
+        }
+        let prompt = self.vocab.pad_prompt(prompt_body, d.prompt_len);
+        for (i, &t) in prompt.iter().enumerate() {
+            tokens[bucket + i] = t;
+            pos[bucket + i] = (n + i) as i32; // prompt directly follows context
+            valid[bucket + i] = 1.0;
+        }
+
+        let t0 = Instant::now();
+        let out = self.session.full_prefill(
+            bucket,
+            &TensorI::from_vec(&[np], tokens)?,
+            &TensorI::from_vec(&[np], pos.clone())?,
+            &TensorF::from_vec(&[np], valid.clone())?,
+        )?;
+        timing.prompt_s = t0.elapsed().as_secs_f64();
+
+        let next_pos = (n + d.prompt_len) as i32;
+        let mut buf =
+            DecodeBuffer::from_parts(&d, &out.k, &out.v, &pos, &valid, next_pos);
+        let answer = self.decode_answer(bucket, &mut buf, &out.last_logits, timing)?;
+        Ok(QueryResult {
+            answer,
+            timing: *timing,
+            selected: vec![],
+            selected_positions: vec![],
+            chunk_order: (0..chunks.len()).collect(),
+        })
+    }
+
+    // -- the chunked family: no-recompute / ours / cacheblend / epic --------
+    #[allow(clippy::too_many_lines)]
+    fn run_selective(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        selector: Option<Selector>,
+        timing: &mut Timing,
+    ) -> Result<QueryResult> {
+        let d = self.dims().clone();
+        let n: usize = chunks.iter().map(|c| c.len()).sum();
+        let bucket = self.session.runtime.manifest.bucket_for(n)?;
+        let prompt =
+            TensorI::from_vec(&[d.prompt_len], self.vocab.pad_prompt(prompt_body, d.prompt_len))?;
+
+        // §4.3 stage 1: reorder chunks before anything else.
+        let mut chunk_order: Vec<usize> = (0..chunks.len()).collect();
+        let mut chunks: Vec<Arc<ChunkKv>> = chunks.to_vec();
+        if let Some(Selector::Norm { reorder: true, norm_layer, .. }) = &selector {
+            let ctx = AssembledContext::new(&d, bucket, &chunks)?;
+            let t0 = Instant::now();
+            let scores = self.score_pass(
+                bucket, &prompt, &ctx, RopeGeometry::HlTp, *norm_layer,
+            )?;
+            timing.score_s += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            chunk_order =
+                crate::reorder::reorder_chunks(&scores, ctx.valid.data(), &ctx.chunk_lens);
+            chunks = crate::reorder::permute(&chunks, &chunk_order);
+            timing.select_s += t1.elapsed().as_secs_f64();
+        }
+
+        let mut ctx = AssembledContext::new(&d, bucket, &chunks)?;
+
+        // Selection + recomputation.
+        let (mut selected, mut selected_positions) = (vec![], vec![]);
+        if let Some(sel) = &selector {
+            let global = geometry::layout(RopeGeometry::Global, &ctx.chunk_lens, d.prompt_len);
+            let rows = match sel.clone() {
+                Selector::Norm { budget, geometry: g, norm_layer, .. } => {
+                    let t0 = Instant::now();
+                    let scores = self.score_pass(bucket, &prompt, &ctx, g, norm_layer)?;
+                    timing.score_s += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    let rows = selection::topk(&scores, ctx.valid.data(), budget);
+                    timing.select_s += t1.elapsed().as_secs_f64();
+                    rows
+                }
+                Selector::CacheBlend { budget } => {
+                    let t0 = Instant::now();
+                    let scores = self.deviation_pass(bucket, &ctx, &global)?;
+                    timing.score_s += t0.elapsed().as_secs_f64();
+                    let t1 = Instant::now();
+                    let rows = selection::topk(&scores, ctx.valid.data(), budget);
+                    timing.select_s += t1.elapsed().as_secs_f64();
+                    rows
+                }
+                Selector::Epic { budget } => {
+                    let t1 = Instant::now();
+                    let rows = selection::epic(&ctx.chunk_lens, budget);
+                    timing.select_s += t1.elapsed().as_secs_f64();
+                    rows
+                }
+                Selector::Explicit(rows) => {
+                    let n = ctx.n();
+                    rows.into_iter().filter(|&r| r < n).collect()
+                }
+            };
+            if !rows.is_empty() {
+                let t2 = Instant::now();
+                self.recompute_rows(bucket, &mut ctx, &global, &rows)?;
+                timing.recompute_s += t2.elapsed().as_secs_f64();
+            }
+            selected_positions = rows.iter().map(|&r| global.ctx_pos[r] as i64).collect();
+            selected = rows;
+        }
+
+        // Decode-phase prompt prefill over the (possibly patched) cache:
+        // stored positions as-is => delta 0.
+        let decode_layout = geometry::decode_layout(&ctx.chunk_lens, d.prompt_len);
+        let ppos = TensorI::from_vec(&[d.prompt_len], decode_layout.prompt_pos.clone())?;
+        let zero_delta = TensorI::zeros(&[bucket]);
+        let t3 = Instant::now();
+        let score_out = self.session.score(
+            bucket, &prompt, &ppos, &ctx.k, &ctx.v, &zero_delta, &ctx.gpos, &ctx.valid,
+        )?;
+        timing.prompt_s += t3.elapsed().as_secs_f64();
+
+        let mut buf = DecodeBuffer::new(
+            &d, &ctx, &score_out.prompt_k, &score_out.prompt_v, &decode_layout.prompt_pos,
+        );
+        let answer =
+            self.decode_answer(bucket, &mut buf, &score_out.last_logits, timing)?;
+        Ok(QueryResult {
+            answer,
+            timing: *timing,
+            selected,
+            selected_positions,
+            chunk_order,
+        })
+    }
+
+    /// Selection-pass scoring under a geometry; returns the Eq.7 scores of
+    /// `norm_layer` (one f32 per context row).
+    fn score_pass(
+        &self,
+        bucket: usize,
+        prompt: &TensorI,
+        ctx: &AssembledContext,
+        g: RopeGeometry,
+        norm_layer: usize,
+    ) -> Result<Vec<f32>> {
+        let d = self.dims();
+        let lay = geometry::layout(g, &ctx.chunk_lens, d.prompt_len);
+        let mut delta = lay.ctx_delta.clone();
+        let mut gpos = lay.ctx_pos.clone();
+        delta.resize(bucket, 0);
+        gpos.resize(bucket, 0);
+        let out = self.session.score(
+            bucket,
+            prompt,
+            &TensorI::from_vec(&[d.prompt_len], lay.prompt_pos.clone())?,
+            &ctx.k,
+            &ctx.v,
+            &TensorI::from_vec(&[bucket], delta)?,
+            &TensorI::from_vec(&[bucket], gpos)?,
+            &ctx.valid,
+        )?;
+        let n_rows = out.scores.shape()[1];
+        let layer = norm_layer.min(d.n_layers - 1);
+        Ok(out.scores.data()[layer * n_rows..(layer + 1) * n_rows].to_vec())
+    }
+
+    /// CacheBlend deviation scores under the global layout.
+    fn deviation_pass(
+        &self,
+        bucket: usize,
+        ctx: &AssembledContext,
+        global: &geometry::Layout,
+    ) -> Result<Vec<f32>> {
+        let d = self.dims();
+        let r = d.dev_layers;
+        let (h, dh) = (d.n_heads, d.head_dim);
+        // shallow slice of the cached KV: layers [0, r)
+        let row = bucket * h * dh;
+        let mut ks = TensorF::zeros(&[r, bucket, h, dh]);
+        let mut vs = TensorF::zeros(&[r, bucket, h, dh]);
+        ks.data_mut().copy_from_slice(&ctx.k.data()[..r * row]);
+        vs.data_mut().copy_from_slice(&ctx.v.data()[..r * row]);
+        let mut delta = global.ctx_delta.clone();
+        let mut gpos = global.ctx_pos.clone();
+        delta.resize(bucket, 0);
+        gpos.resize(bucket, 0);
+        let scores = self.session.deviation(
+            bucket,
+            &ctx.tokens,
+            &TensorI::from_vec(&[bucket], gpos)?,
+            &ctx.valid,
+            &ks,
+            &vs,
+            &TensorI::from_vec(&[bucket], delta)?,
+        )?;
+        Ok(scores.into_vec())
+    }
+
+    /// Recompute the given rows at their global positions and patch the
+    /// assembled context in place.
+    fn recompute_rows(
+        &self,
+        bucket: usize,
+        ctx: &mut AssembledContext,
+        global: &geometry::Layout,
+        rows: &[usize],
+    ) -> Result<()> {
+        let d = self.dims();
+        let s_cap = d.sel_budget;
+        // Process in global-position order, in sel_budget-sized waves.
+        let mut rows: Vec<usize> = rows.to_vec();
+        rows.sort_by_key(|&r| global.ctx_pos[r]);
+        for wave in rows.chunks(s_cap) {
+            let mut st = vec![0i32; s_cap];
+            let mut sg = vec![0i32; s_cap];
+            let mut ss = vec![bucket as i32; s_cap]; // out-of-range => pad
+            let mut sv = vec![0.0f32; s_cap];
+            for (i, &r) in wave.iter().enumerate() {
+                st[i] = ctx.tokens.data()[r];
+                sg[i] = global.ctx_pos[r];
+                ss[i] = r as i32;
+                sv[i] = 1.0;
+            }
+            let mut delta = global.ctx_delta.clone();
+            let mut gpos = global.ctx_pos.clone();
+            delta.resize(bucket, 0);
+            gpos.resize(bucket, 0);
+            let out = self.session.recompute(
+                bucket,
+                &TensorI::from_vec(&[s_cap], st)?,
+                &TensorI::from_vec(&[s_cap], sg.clone())?,
+                &TensorI::from_vec(&[s_cap], ss.clone())?,
+                &TensorF::from_vec(&[s_cap], sv)?,
+                &ctx.k,
+                &ctx.v,
+                &TensorI::from_vec(&[bucket], delta)?,
+                &TensorI::from_vec(&[bucket], gpos)?,
+                &ctx.valid,
+            )?;
+            ctx.patch(&ss, &sg, wave.len(), &out.new_k, &out.new_v);
+        }
+        Ok(())
+    }
+
+    /// Greedy decode: first token from the prompt logits, then decode steps.
+    fn decode_answer(
+        &self,
+        bucket: usize,
+        buf: &mut DecodeBuffer,
+        first_logits: &TensorF,
+        timing: &mut Timing,
+    ) -> Result<Vec<i32>> {
+        let d = self.dims();
+        let answer_len = self.vocab.answer_len;
+        let mut answer = Vec::with_capacity(answer_len);
+        let mut tok = first_logits.argmax() as i32;
+        answer.push(tok);
+        let t0 = Instant::now();
+        for _ in 1..answer_len {
+            if tok == vocab::EOS {
+                break;
+            }
+            let pos = buf.next_pos;
+            let out = self
+                .session
+                .decode(bucket, tok, pos, &buf.k, &buf.v, &buf.gpos, &buf.valid)?;
+            buf.append(&out.new_k, &out.new_v)?;
+            tok = out.logits.argmax() as i32;
+            answer.push(tok);
+        }
+        let _ = d;
+        timing.decode_s += t0.elapsed().as_secs_f64();
+        Ok(answer)
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Selector {
+    Norm { budget: usize, geometry: RopeGeometry, norm_layer: usize, reorder: bool },
+    CacheBlend { budget: usize },
+    Epic { budget: usize },
+    /// Externally supplied buffer rows (oracle / random ablations).
+    Explicit(Vec<usize>),
+}

@@ -1,0 +1,87 @@
+//! Chunk reordering (paper §4.3).
+//!
+//! For contexts whose chunks are independent segments (multi-document
+//! retrieval), the chunk order itself is a degree of freedom: under RoPE
+//! causal decoding, chunks closer to the prompt interact with prompt queries
+//! more effectively.  Stage 1 scores tokens *within each chunk independently*
+//! under the HL-TP geometry (chunk-local RoPE, so no chunk is favored merely
+//! for sitting closer to the prompt), derives chunk-level importance, and
+//! produces an order that places informative chunks nearest the prompt.
+//! Stage 2 (in the pipeline) re-scores under GLOBAL in the new order.
+
+use crate::selection::chunk_scores;
+
+/// Tokens per chunk used for the chunk-importance sum.
+pub const CHUNK_SCORE_TOP_M: usize = 4;
+
+/// Compute the new chunk order: ascending importance, so the most
+/// informative chunk lands immediately before the prompt.  Returns the
+/// permutation `order` such that `new_chunks[i] = old_chunks[order[i]]`.
+pub fn reorder_chunks(
+    stage1_scores: &[f32],
+    valid: &[f32],
+    chunk_lens: &[usize],
+) -> Vec<usize> {
+    let cs = chunk_scores(stage1_scores, valid, chunk_lens, CHUNK_SCORE_TOP_M);
+    let mut order: Vec<usize> = (0..chunk_lens.len()).collect();
+    // ascending score; stable tie-break on original index keeps determinism
+    order.sort_by(|&a, &b| cs[a].partial_cmp(&cs[b]).unwrap().then(a.cmp(&b)));
+    order
+}
+
+/// Apply a chunk permutation to any per-chunk vector.
+pub fn permute<T: Clone>(items: &[T], order: &[usize]) -> Vec<T> {
+    order.iter().map(|&i| items[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn informative_chunk_moves_last() {
+        // chunk 1 holds all the mass -> must end up last (closest to prompt)
+        let scores = [0.0, 0.0, 0.0, 0.0, 5.0, 4.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0];
+        let valid = [1.0; 12];
+        let order = reorder_chunks(&scores, &valid, &[4, 4, 4]);
+        assert_eq!(*order.last().unwrap(), 1);
+        assert_eq!(order[0], 0); // least informative first (tie broken by index)
+    }
+
+    #[test]
+    fn permute_applies_order() {
+        assert_eq!(permute(&["a", "b", "c"], &[2, 0, 1]), vec!["c", "a", "b"]);
+    }
+
+    #[test]
+    fn order_is_always_a_permutation() {
+        prop::check(100, |rng: &mut Rng| {
+            let k = 1 + rng.below(8);
+            let lens: Vec<usize> = (0..k).map(|_| 1 + rng.below(32)).collect();
+            let n: usize = lens.iter().sum();
+            let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+            let valid: Vec<f32> = (0..n).map(|_| 1.0).collect();
+            let order = reorder_chunks(&scores, &valid, &lens);
+            let mut s = order.clone();
+            s.sort_unstable();
+            prop::assert_prop(s == (0..k).collect::<Vec<_>>(), "not a permutation")
+        });
+    }
+
+    #[test]
+    fn chunk_importance_is_monotone_in_scores() {
+        // doubling every score in one chunk cannot move it earlier
+        let scores = vec![1.0f32, 1.0, 2.0, 2.0];
+        let valid = vec![1.0f32; 4];
+        let lens = [2usize, 2];
+        let base = reorder_chunks(&scores, &valid, &lens);
+        let mut boosted = scores.clone();
+        boosted[0] *= 10.0;
+        boosted[1] *= 10.0;
+        let after = reorder_chunks(&boosted, &valid, &lens);
+        let pos_base = base.iter().position(|&c| c == 0).unwrap();
+        let pos_after = after.iter().position(|&c| c == 0).unwrap();
+        assert!(pos_after >= pos_base);
+    }
+}

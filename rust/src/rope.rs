@@ -1,0 +1,178 @@
+//! RoPE mathematics on the Rust side.
+//!
+//! Used for (a) the Table-2 RoPE-similarity analysis (MoM / Max between
+//! prompt positions and selected-token positions, computed purely from the
+//! positional embedding — semantics blocked, exactly as the paper does), and
+//! (b) host-side re-rotation sanity checks against the L1 kernel.
+//!
+//! Convention matches `python/compile/kernels/ref.py`: rotate-half pairing,
+//! theta_i = base^(-i / (d/2)) for pair index i.
+
+/// Angular frequencies for a head dimension (length d/2).
+pub fn frequencies(head_dim: usize, theta: f64) -> Vec<f64> {
+    let half = head_dim / 2;
+    (0..half)
+        .map(|i| theta.powf(-(i as f64) / half as f64))
+        .collect()
+}
+
+/// The RoPE "embedding" of a position: the unit-norm feature vector
+/// [cos(p*f_0), ..., cos(p*f_{h-1}), sin(p*f_0), ..., sin(p*f_{h-1})] / sqrt(h).
+/// Cosine similarity between two such vectors depends only on the position
+/// *difference* filtered through the frequency bank — the purely geometric
+/// reachability signal Table 2 measures.
+pub fn position_embedding(pos: i64, head_dim: usize, theta: f64) -> Vec<f64> {
+    let freqs = frequencies(head_dim, theta);
+    let norm = 1.0 / (freqs.len() as f64).sqrt();
+    let mut v = Vec::with_capacity(2 * freqs.len());
+    for &f in &freqs {
+        v.push((pos as f64 * f).cos() * norm);
+    }
+    for &f in &freqs {
+        v.push((pos as f64 * f).sin() * norm);
+    }
+    v
+}
+
+/// Cosine similarity of the RoPE embeddings of two positions.
+/// Equal to mean_i cos((a - b) * f_i) — symmetric, 1.0 at a == b.
+pub fn position_similarity(a: i64, b: i64, head_dim: usize, theta: f64) -> f64 {
+    let freqs = frequencies(head_dim, theta);
+    let d = (a - b) as f64;
+    freqs.iter().map(|&f| (d * f).cos()).sum::<f64>() / freqs.len() as f64
+}
+
+/// Rotate one head vector (rotate-half convention) by `delta` positions.
+pub fn rotate(vec: &mut [f32], delta: i64, theta: f64) {
+    let d = vec.len();
+    let half = d / 2;
+    let freqs = frequencies(d, theta);
+    for i in 0..half {
+        let ang = delta as f64 * freqs[i];
+        let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+        let x1 = vec[i];
+        let x2 = vec[i + half];
+        vec[i] = x1 * cos - x2 * sin;
+        vec[i + half] = x2 * cos + x1 * sin;
+    }
+}
+
+/// Table-2 statistics: for each prompt position, the max RoPE similarity to
+/// any selected-token position; reported as the mean over prompt positions
+/// (MoM) and the global max.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimilarityStats {
+    pub mean_of_max: f64,
+    pub max: f64,
+}
+
+pub fn similarity_stats(
+    prompt_positions: &[i64],
+    selected_positions: &[i64],
+    head_dim: usize,
+    theta: f64,
+) -> SimilarityStats {
+    assert!(!prompt_positions.is_empty() && !selected_positions.is_empty());
+    let mut sum_max = 0.0;
+    let mut global_max = f64::NEG_INFINITY;
+    for &p in prompt_positions {
+        let mut best = f64::NEG_INFINITY;
+        for &s in selected_positions {
+            let sim = position_similarity(p, s, head_dim, theta);
+            best = best.max(sim);
+        }
+        sum_max += best;
+        global_max = global_max.max(best);
+    }
+    SimilarityStats {
+        mean_of_max: sum_max / prompt_positions.len() as f64,
+        max: global_max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    const D: usize = 16;
+    const THETA: f64 = 10000.0;
+
+    #[test]
+    fn similarity_identity_and_symmetry() {
+        assert!((position_similarity(5, 5, D, THETA) - 1.0).abs() < 1e-12);
+        let a = position_similarity(3, 90, D, THETA);
+        let b = position_similarity(90, 3, D, THETA);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn similarity_depends_only_on_difference() {
+        let a = position_similarity(10, 3, D, THETA);
+        let b = position_similarity(1010, 1003, D, THETA);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn similarity_decays_near_zero_offset() {
+        // strictly smaller at small nonzero offsets than at zero
+        for d in 1..10 {
+            assert!(position_similarity(0, d, D, THETA) < 1.0);
+        }
+    }
+
+    #[test]
+    fn embedding_dot_equals_similarity() {
+        let ea = position_embedding(17, D, THETA);
+        let eb = position_embedding(40, D, THETA);
+        let dot: f64 = ea.iter().zip(&eb).map(|(x, y)| x * y).sum();
+        let sim = position_similarity(17, 40, D, THETA);
+        assert!((dot - sim).abs() < 1e-9, "{dot} vs {sim}");
+    }
+
+    #[test]
+    fn rotation_is_isometry_and_composes() {
+        prop::check(100, |rng: &mut Rng| {
+            let mut v: Vec<f32> = (0..D).map(|_| rng.normal() as f32).collect();
+            let orig = v.clone();
+            let norm0: f32 = v.iter().map(|x| x * x).sum();
+            let d1 = rng.range(-200, 200);
+            let d2 = rng.range(-200, 200);
+            rotate(&mut v, d1, THETA);
+            rotate(&mut v, d2, THETA);
+            let norm1: f32 = v.iter().map(|x| x * x).sum();
+            prop::assert_prop(
+                (norm0 - norm1).abs() < 1e-3 * norm0.max(1.0),
+                "rotation changed the norm",
+            )?;
+            let mut w = orig;
+            rotate(&mut w, d1 + d2, THETA);
+            let err: f32 = v
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            prop::assert_prop(err < 1e-3, format!("composition err {err}"))
+        });
+    }
+
+    #[test]
+    fn zero_rotation_is_identity() {
+        let mut v: Vec<f32> = (0..D).map(|i| i as f32).collect();
+        let orig = v.clone();
+        rotate(&mut v, 0, THETA);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn stats_reward_close_positions() {
+        // selected tokens adjacent to the prompt score higher than far ones
+        let prompt: Vec<i64> = (100..108).collect();
+        let near: Vec<i64> = (90..98).collect();
+        let far: Vec<i64> = (0..8).collect();
+        let sn = similarity_stats(&prompt, &near, D, THETA);
+        let sf = similarity_stats(&prompt, &far, D, THETA);
+        assert!(sn.mean_of_max > sf.mean_of_max);
+        assert!(sn.max >= sf.max);
+    }
+}

@@ -1,0 +1,258 @@
+//! Typed entry-point wrappers: one method per AOT executable, converting
+//! between host tensors and PJRT literals and validating shapes against the
+//! manifest specs.
+//!
+//! [`ModelSession`] binds a backbone's weights to the compiled executables;
+//! the pipeline holds one session per (backbone) and calls these methods on
+//! the request path.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::literal::{
+    literal_to_tensor_f, tensor_f_to_literal, tensor_i_to_literal,
+};
+use super::{Executable, Runtime, SharedBuffer};
+use crate::tensor::{TensorF, TensorI};
+
+/// Outputs of the `score` executable (paper Eq. 7 + prompt KV + next-token
+/// logits of the last prompt row).
+pub struct ScoreOut {
+    /// [n_layers, N] attention-norm score of every context row per layer.
+    pub scores: TensorF,
+    /// [n_layers, P, H, Dh] prompt keys (RoPE'd at the given positions).
+    pub prompt_k: TensorF,
+    /// [n_layers, P, H, Dh] prompt values.
+    pub prompt_v: TensorF,
+    /// [vocab] logits predicting the first answer token.
+    pub last_logits: TensorF,
+}
+
+/// Outputs of `recompute`: fresh KV rows for the selected tokens.
+pub struct RecomputeOut {
+    /// [n_layers, S, H, Dh]
+    pub new_k: TensorF,
+    /// [n_layers, S, H, Dh]
+    pub new_v: TensorF,
+}
+
+/// Outputs of one decode step.
+pub struct DecodeOut {
+    /// [vocab]
+    pub logits: TensorF,
+    /// [n_layers, H, Dh] the new token's key row.
+    pub new_k: TensorF,
+    /// [n_layers, H, Dh] the new token's value row.
+    pub new_v: TensorF,
+}
+
+/// Outputs of `full_prefill` (the exact baseline).
+pub struct FullPrefillOut {
+    /// [n_layers, N+P, H, Dh]
+    pub k: TensorF,
+    /// [n_layers, N+P, H, Dh]
+    pub v: TensorF,
+    /// [vocab]
+    pub last_logits: TensorF,
+}
+
+// Marker aliases so callers can name the executables they hold.
+pub type PrefillChunkExec = Arc<Executable>;
+pub type ScoreExec = Arc<Executable>;
+pub type RecomputeExec = Arc<Executable>;
+pub type DecodeExec = Arc<Executable>;
+pub type DeviationExec = Arc<Executable>;
+pub type FullPrefillExec = Arc<Executable>;
+
+/// A backbone bound to the runtime: weights resident on device, executables
+/// fetched from the compile cache per call (Arc clones, no recompiles).
+pub struct ModelSession {
+    pub runtime: Arc<Runtime>,
+    pub backbone: String,
+    weights: Arc<SharedBuffer>,
+}
+
+impl ModelSession {
+    pub fn new(runtime: Arc<Runtime>, backbone: &str) -> Result<ModelSession> {
+        let weights = runtime.weights(backbone)?;
+        Ok(ModelSession { runtime, backbone: backbone.to_string(), weights })
+    }
+
+    fn run(
+        &self,
+        name: &str,
+        bucket: Option<usize>,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.runtime.executable(name, bucket)?;
+        exe.run(&self.weights.0, args, self.runtime.client())
+    }
+
+    /// Chunk-local prefill: `tokens` must be exactly `chunk` long.
+    /// Returns (k, v) of shape [L, C, H, Dh] under chunk-local RoPE.
+    pub fn prefill_chunk(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+        let c = self.runtime.manifest.model.chunk;
+        if tokens.len() != c {
+            bail!("prefill_chunk wants {c} tokens, got {}", tokens.len());
+        }
+        let toks = tensor_i_to_literal(&TensorI::from_vec(&[c], tokens.to_vec())?)?;
+        let valid = tensor_f_to_literal(&TensorF::full(&[c], 1.0))?;
+        let out = self.run("prefill_chunk", None, &[toks, valid])?;
+        Ok((literal_to_tensor_f(&out[0])?, literal_to_tensor_f(&out[1])?))
+    }
+
+    /// Prompt scoring over a cached context under a positional layout.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score(
+        &self,
+        bucket: usize,
+        prompt: &TensorI,       // [P]
+        prompt_pos: &TensorI,   // [P]
+        ctx_k: &TensorF,        // [L, N, H, Dh]
+        ctx_v: &TensorF,        // [L, N, H, Dh]
+        ctx_delta: &TensorI,    // [N]
+        ctx_gpos: &TensorI,     // [N]
+        ctx_valid: &TensorF,    // [N]
+    ) -> Result<ScoreOut> {
+        let p = self.runtime.manifest.model.prompt_len;
+        let pvalid = tensor_f_to_literal(&TensorF::full(&[p], 1.0))?;
+        let out = self.run(
+            "score",
+            Some(bucket),
+            &[
+                tensor_i_to_literal(prompt)?,
+                tensor_i_to_literal(prompt_pos)?,
+                pvalid,
+                tensor_f_to_literal(ctx_k)?,
+                tensor_f_to_literal(ctx_v)?,
+                tensor_i_to_literal(ctx_delta)?,
+                tensor_i_to_literal(ctx_gpos)?,
+                tensor_f_to_literal(ctx_valid)?,
+            ],
+        )?;
+        Ok(ScoreOut {
+            scores: literal_to_tensor_f(&out[0])?,
+            prompt_k: literal_to_tensor_f(&out[1])?,
+            prompt_v: literal_to_tensor_f(&out[2])?,
+            last_logits: literal_to_tensor_f(&out[3])?,
+        })
+    }
+
+    /// Selective KV recomputation of up to `sel_budget` tokens.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recompute(
+        &self,
+        bucket: usize,
+        sel_tokens: &TensorI, // [S]
+        sel_gpos: &TensorI,   // [S]
+        sel_slot: &TensorI,   // [S] row index in the ctx buffer (>= N: pad)
+        sel_valid: &TensorF,  // [S]
+        ctx_k: &TensorF,
+        ctx_v: &TensorF,
+        ctx_delta: &TensorI,
+        ctx_gpos: &TensorI,
+        ctx_valid: &TensorF,
+    ) -> Result<RecomputeOut> {
+        let out = self.run(
+            "recompute",
+            Some(bucket),
+            &[
+                tensor_i_to_literal(sel_tokens)?,
+                tensor_i_to_literal(sel_gpos)?,
+                tensor_i_to_literal(sel_slot)?,
+                tensor_f_to_literal(sel_valid)?,
+                tensor_f_to_literal(ctx_k)?,
+                tensor_f_to_literal(ctx_v)?,
+                tensor_i_to_literal(ctx_delta)?,
+                tensor_i_to_literal(ctx_gpos)?,
+                tensor_f_to_literal(ctx_valid)?,
+            ],
+        )?;
+        Ok(RecomputeOut {
+            new_k: literal_to_tensor_f(&out[0])?,
+            new_v: literal_to_tensor_f(&out[1])?,
+        })
+    }
+
+    /// One greedy decode step over the assembled buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &self,
+        bucket: usize,
+        tok: i32,
+        pos: i32,
+        k_all: &TensorF,  // [L, T, H, Dh]
+        v_all: &TensorF,  // [L, T, H, Dh]
+        k_gpos: &TensorI, // [T]
+        k_valid: &TensorF, // [T]
+    ) -> Result<DecodeOut> {
+        let out = self.run(
+            "decode",
+            Some(bucket),
+            &[
+                xla::Literal::scalar(tok),
+                xla::Literal::scalar(pos),
+                tensor_f_to_literal(k_all)?,
+                tensor_f_to_literal(v_all)?,
+                tensor_i_to_literal(k_gpos)?,
+                tensor_f_to_literal(k_valid)?,
+            ],
+        )?;
+        Ok(DecodeOut {
+            logits: literal_to_tensor_f(&out[0])?,
+            new_k: literal_to_tensor_f(&out[1])?,
+            new_v: literal_to_tensor_f(&out[2])?,
+        })
+    }
+
+    /// CacheBlend-style shallow-layer deviation probe. Returns [N] scores.
+    pub fn deviation(
+        &self,
+        bucket: usize,
+        ctx_tokens: &TensorI,  // [N]
+        ctx_gpos: &TensorI,    // [N] target (global) positions
+        ctx_valid: &TensorF,   // [N]
+        ctx_k_shallow: &TensorF, // [dev_layers, N, H, Dh]
+        ctx_v_shallow: &TensorF, // [dev_layers, N, H, Dh]
+        ctx_delta: &TensorI,   // [N]
+    ) -> Result<TensorF> {
+        let out = self.run(
+            "deviation",
+            Some(bucket),
+            &[
+                tensor_i_to_literal(ctx_tokens)?,
+                tensor_i_to_literal(ctx_gpos)?,
+                tensor_f_to_literal(ctx_valid)?,
+                tensor_f_to_literal(ctx_k_shallow)?,
+                tensor_f_to_literal(ctx_v_shallow)?,
+                tensor_i_to_literal(ctx_delta)?,
+            ],
+        )?;
+        literal_to_tensor_f(&out[0])
+    }
+
+    /// Exact full-context prefill (the paper's Baseline method).
+    pub fn full_prefill(
+        &self,
+        bucket: usize,
+        tokens: &TensorI, // [N + P]
+        pos: &TensorI,    // [N + P]
+        valid: &TensorF,  // [N + P]
+    ) -> Result<FullPrefillOut> {
+        let out = self.run(
+            "full_prefill",
+            Some(bucket),
+            &[
+                tensor_i_to_literal(tokens)?,
+                tensor_i_to_literal(pos)?,
+                tensor_f_to_literal(valid)?,
+            ],
+        )?;
+        Ok(FullPrefillOut {
+            k: literal_to_tensor_f(&out[0])?,
+            v: literal_to_tensor_f(&out[1])?,
+            last_logits: literal_to_tensor_f(&out[2])?,
+        })
+    }
+}

@@ -1,0 +1,43 @@
+//! Host `Tensor` <-> PJRT `Literal` conversion.
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::{TensorF, TensorI};
+
+pub fn tensor_f_to_literal(t: &TensorF) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn tensor_i_to_literal(t: &TensorI) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn scalar_i(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn literal_to_tensor_f(lit: &xla::Literal) -> Result<TensorF> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
+    TensorF::from_vec(&dims, data)
+}
+
+pub fn literal_to_tensor_i(lit: &xla::Literal) -> Result<TensorI> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<i32>()
+        .map_err(|e| anyhow!("literal to i32 vec: {e:?}"))?;
+    TensorI::from_vec(&dims, data)
+}

@@ -1,0 +1,181 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts, compiles them once per
+//! process, uploads backbone weights as persistent device buffers, and
+//! exposes typed executable wrappers to the coordinator.
+//!
+//! Python never runs here — this is the request path.
+
+pub mod exec;
+pub mod literal;
+
+pub use exec::{
+    DecodeExec, DeviationExec, FullPrefillExec, PrefillChunkExec, RecomputeExec,
+    ScoreExec,
+};
+pub use literal::{literal_to_tensor_f, literal_to_tensor_i, tensor_f_to_literal,
+                  tensor_i_to_literal};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::{ExecSpec, Manifest};
+
+/// One compiled HLO executable plus its manifest spec.
+pub struct Executable {
+    pub spec: ExecSpec,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT CPU client serializes execution internally; the xla
+// crate's wrappers just aren't annotated. We only share these through Arc
+// and never mutate after construction.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// A device buffer that may be shared across coordinator threads (weights).
+pub struct SharedBuffer(pub xla::PjRtBuffer);
+
+// SAFETY: see `Executable`.
+unsafe impl Send for SharedBuffer {}
+unsafe impl Sync for SharedBuffer {}
+
+/// The process-wide runtime: PJRT client + compile cache + weights.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<(String, Option<usize>), Arc<Executable>>>,
+    weights: Mutex<HashMap<String, Arc<SharedBuffer>>>,
+}
+
+// The PJRT CPU client and its buffers are internally synchronized; the xla
+// crate just doesn't mark its wrappers Send/Sync. All our mutation goes
+// through the Mutexes above.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load the manifest from `artifacts_dir` and create the PJRT CPU client.
+    /// Executables compile lazily on first use (see [`Runtime::executable`]);
+    /// call [`Runtime::warmup`] to compile everything eagerly.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            compiled: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) an executable by manifest name + bucket.
+    pub fn executable(&self, name: &str, bucket: Option<usize>) -> Result<Arc<Executable>> {
+        let key = (name.to_string(), bucket);
+        if let Some(e) = self.compiled.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.exec_spec(name, bucket)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name} (bucket {bucket:?}): {e:?}"))?;
+        let entry = Arc::new(Executable { spec, exe });
+        self.compiled.lock().unwrap().insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Eagerly compile every executable in the manifest.
+    pub fn warmup(&self) -> Result<()> {
+        let specs: Vec<(String, Option<usize>)> = self
+            .manifest
+            .executables
+            .iter()
+            .map(|e| (e.name.clone(), e.bucket))
+            .collect();
+        for (name, bucket) in specs {
+            self.executable(&name, bucket)?;
+        }
+        Ok(())
+    }
+
+    /// Upload (once) and return the flat weight vector of a backbone as a
+    /// persistent device buffer.
+    pub fn weights(&self, backbone: &str) -> Result<Arc<SharedBuffer>> {
+        if let Some(w) = self.weights.lock().unwrap().get(backbone) {
+            return Ok(w.clone());
+        }
+        let host = self
+            .manifest
+            .load_weights(backbone)
+            .with_context(|| format!("loading weights for '{backbone}'"))?;
+        let buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(&host, &[host.len()], None)
+            .map_err(|e| anyhow!("uploading weights: {e:?}"))?;
+        let buf = Arc::new(SharedBuffer(buf));
+        self.weights
+            .lock()
+            .unwrap()
+            .insert(backbone.to_string(), buf.clone());
+        Ok(buf)
+    }
+
+    pub fn backbone_names(&self) -> Vec<String> {
+        self.manifest.backbones.iter().map(|b| b.name.clone()).collect()
+    }
+}
+
+impl Executable {
+    /// Execute with the weights device buffer first and host literals after,
+    /// returning the decomposed output tuple.
+    pub fn run(
+        &self,
+        weights: &xla::PjRtBuffer,
+        args: &[xla::Literal],
+        client: &xla::PjRtClient,
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() + 1 != self.spec.args.len() {
+            anyhow::bail!(
+                "{}: expected {} args (incl. weights), got {}",
+                self.spec.name,
+                self.spec.args.len(),
+                args.len() + 1
+            );
+        }
+        // execute_b wants every argument as a device buffer; the weights are
+        // already resident, everything else is staged per call.
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for lit in args {
+            bufs.push(
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("staging arg: {e:?}"))?,
+            );
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len() + 1);
+        refs.push(weights);
+        refs.extend(bufs.iter());
+        let out = self
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.spec.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", self.spec.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))
+    }
+}

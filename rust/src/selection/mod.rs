@@ -1,0 +1,176 @@
+//! Recomputation-target selection strategies.
+//!
+//! * [`topk`] — generic top-k over per-token scores: the back half of the
+//!   paper's Eq. 8 (`S = Top-k({s_j})`); used with attention-norm scores
+//!   (ours) and deviation scores (CacheBlend).
+//! * [`epic`] — EPIC's fixed positional heuristic (chunk-initial tokens).
+//! * [`per_chunk_topk`] — stage-1 of the reordering strategy (§4.3): best
+//!   tokens within each chunk independently.
+
+/// Indices of the `k` highest-scoring valid rows, in descending score order.
+/// Ties break toward lower indices (deterministic).
+pub fn topk(scores: &[f32], valid: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len())
+        .filter(|&i| valid[i] > 0.0 && scores[i].is_finite())
+        .collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// EPIC-style selection: the first `ceil(budget / n_chunks)` rows of every
+/// chunk (document-boundary tokens), truncated to `budget` in chunk order.
+pub fn epic(chunk_lens: &[usize], budget: usize) -> Vec<usize> {
+    if chunk_lens.is_empty() || budget == 0 {
+        return vec![];
+    }
+    let per = budget.div_ceil(chunk_lens.len());
+    let mut out = Vec::with_capacity(budget);
+    let mut base = 0usize;
+    for &len in chunk_lens {
+        for t in 0..per.min(len) {
+            out.push(base + t);
+        }
+        base += len;
+    }
+    // Keep chunk-major order but cap the total.
+    out.truncate(budget);
+    out
+}
+
+/// Top-`m` rows of each chunk by score (for chunk-level importance and the
+/// reorder stage-1 pass). Returns per-chunk index lists (global row indices).
+pub fn per_chunk_topk(
+    scores: &[f32],
+    valid: &[f32],
+    chunk_lens: &[usize],
+    m: usize,
+) -> Vec<Vec<usize>> {
+    let mut out = Vec::with_capacity(chunk_lens.len());
+    let mut base = 0usize;
+    for &len in chunk_lens {
+        let local = topk(&scores[base..base + len], &valid[base..base + len], m);
+        out.push(local.into_iter().map(|i| base + i).collect());
+        base += len;
+    }
+    out
+}
+
+/// Chunk importance = sum of its top-`m` token scores (§4.3).
+pub fn chunk_scores(
+    scores: &[f32],
+    valid: &[f32],
+    chunk_lens: &[usize],
+    m: usize,
+) -> Vec<f32> {
+    per_chunk_topk(scores, valid, chunk_lens, m)
+        .iter()
+        .map(|rows| rows.iter().map(|&i| scores[i]).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn topk_orders_and_respects_validity() {
+        let scores = [0.1, 0.9, 0.5, 0.7];
+        let valid = [1.0, 0.0, 1.0, 1.0];
+        assert_eq!(topk(&scores, &valid, 2), vec![3, 2]);
+        assert_eq!(topk(&scores, &valid, 10), vec![3, 2, 0]);
+    }
+
+    #[test]
+    fn topk_tie_breaks_low_index() {
+        let scores = [0.5, 0.5, 0.5];
+        let valid = [1.0, 1.0, 1.0];
+        assert_eq!(topk(&scores, &valid, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn epic_picks_chunk_heads() {
+        // 2 chunks of 4, budget 4 -> first 2 of each
+        assert_eq!(epic(&[4, 4], 4), vec![0, 1, 4, 5]);
+        // budget 3 -> truncate chunk-major
+        assert_eq!(epic(&[4, 4], 3), vec![0, 1, 4]);
+        assert_eq!(epic(&[], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn per_chunk_topk_stays_in_chunk() {
+        let scores = [0.0, 9.0, 0.0, 0.0, 8.0, 0.1, 0.0, 0.0];
+        let valid = [1.0; 8];
+        let sel = per_chunk_topk(&scores, &valid, &[4, 4], 1);
+        assert_eq!(sel, vec![vec![1], vec![4]]);
+    }
+
+    #[test]
+    fn chunk_scores_sum_top_m() {
+        let scores = [1.0, 2.0, 0.0, 5.0, 4.0, 0.0];
+        let valid = [1.0; 6];
+        let cs = chunk_scores(&scores, &valid, &[3, 3], 2);
+        assert_eq!(cs, vec![3.0, 9.0]);
+    }
+
+    #[test]
+    fn properties() {
+        prop::check(150, |rng: &mut Rng| {
+            let n = 1 + rng.below(200);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let valid: Vec<f32> =
+                (0..n).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+            let k = rng.below(n + 4);
+            let sel = topk(&scores, &valid, k);
+            let n_valid = valid.iter().filter(|&&v| v > 0.0).count();
+            prop::assert_prop(sel.len() == k.min(n_valid), "size")?;
+            // distinct
+            let mut s2 = sel.clone();
+            s2.sort_unstable();
+            s2.dedup();
+            prop::assert_prop(s2.len() == sel.len(), "duplicates")?;
+            // descending scores, all valid
+            for w in sel.windows(2) {
+                prop::assert_prop(scores[w[0]] >= scores[w[1]], "order")?;
+            }
+            for &i in &sel {
+                prop::assert_prop(valid[i] > 0.0, "invalid row selected")?;
+            }
+            // every unselected valid row scores <= the worst selected row
+            if let Some(&last) = sel.last() {
+                for i in 0..n {
+                    if valid[i] > 0.0 && !sel.contains(&i) {
+                        prop::assert_prop(
+                            scores[i] <= scores[last],
+                            "missed a better row",
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn epic_budget_property() {
+        prop::check(100, |rng: &mut Rng| {
+            let k = 1 + rng.below(8);
+            let lens: Vec<usize> = (0..k).map(|_| 1 + rng.below(64)).collect();
+            let n: usize = lens.iter().sum();
+            let budget = rng.below(n + 8);
+            let sel = epic(&lens, budget);
+            prop::assert_prop(sel.len() <= budget, "over budget")?;
+            let mut sorted = sel.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            prop::assert_prop(sorted.len() == sel.len(), "duplicates")?;
+            prop::assert_prop(sel.iter().all(|&i| i < n), "out of range")
+        });
+    }
+}

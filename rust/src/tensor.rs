@@ -1,0 +1,178 @@
+//! Minimal dense host tensors used at the PJRT boundary.
+//!
+//! The coordinator only ever needs contiguous row-major f32/i32 buffers with
+//! a shape attached — KV caches, position vectors, logits.  Views, strides
+//! and broadcasting are deliberately out of scope; anything heavier happens
+//! inside the compiled XLA executables.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn full(shape: &[usize], value: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    pub fn scalar(value: T) -> Self {
+        Tensor { shape: vec![], data: vec![value] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Row-major flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {x} out of bound {d} at dim {i}");
+            off = off * d + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Interpret the first axis as rows; copy row `src` of `other` into row
+    /// `dst` of self. Both tensors must have identical trailing dims.
+    pub fn copy_row_from(&mut self, dst: usize, other: &Tensor<T>, src: usize) {
+        let row = self.row_len();
+        debug_assert_eq!(row, other.row_len());
+        let d = dst * row;
+        let s = src * row;
+        self.data[d..d + row].copy_from_slice(&other.data[s..s + row]);
+    }
+
+    /// Elements per leading-axis row.
+    pub fn row_len(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
+    pub fn reshaped(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} -> {shape:?}", self.shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+}
+
+impl Tensor<f32> {
+    pub fn max_abs_diff(&self, other: &Tensor<f32>) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &x) in self.data.iter().enumerate() {
+            if x > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_row_major() {
+        let t = TensorF::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        assert!(TensorF::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn row_copy() {
+        let mut a = TensorF::zeros(&[3, 4]);
+        let b = TensorF::from_vec(&[2, 4], (0..8).map(|x| x as f32).collect()).unwrap();
+        a.copy_row_from(2, &b, 1);
+        assert_eq!(&a.data()[8..12], &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(&a.data()[..8], &[0.0; 8]);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        let t = TensorF::from_vec(&[4], vec![1.0, 9.0, 9.0, 2.0]).unwrap();
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = TensorF::zeros(&[2, 6]);
+        assert!(t.clone().reshaped(&[3, 4]).is_ok());
+        assert!(t.reshaped(&[5]).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = TensorI::scalar(42);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.data(), &[42]);
+    }
+}

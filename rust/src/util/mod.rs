@@ -1,0 +1,28 @@
+//! First-party utility substrates (the crate builds fully offline, so JSON,
+//! CLI parsing, RNG, timing and property testing are implemented here
+//! rather than pulled from crates.io).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Measure the wall-clock time of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Format a throughput/latency table row with fixed column widths.
+pub fn fmt_row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:<w$}", w = w))
+        .collect::<Vec<_>>()
+        .join(" ")
+}

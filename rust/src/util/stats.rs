@@ -1,0 +1,131 @@
+//! Timing statistics + a criterion-style micro-bench runner (first-party).
+//!
+//! `cargo bench` targets use [`Bench`] with `harness = false`: warmup,
+//! repeated timed runs, mean/median/p95 with outlier-robust reporting.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Summary {
+    pub fn from_samples(mut xs: Vec<f64>) -> Summary {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        Summary {
+            n,
+            mean_s: xs.iter().sum::<f64>() / n as f64,
+            median_s: percentile(&xs, 0.5),
+            p95_s: percentile(&xs, 0.95),
+            min_s: xs[0],
+            max_s: xs[n - 1],
+        }
+    }
+
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "mean {:8.3} ms  median {:8.3} ms  p95 {:8.3} ms  (n={})",
+            self.mean_s * 1e3,
+            self.median_s * 1e3,
+            self.p95_s * 1e3,
+            self.n
+        )
+    }
+}
+
+/// Percentile over a sorted slice, linear interpolation.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Criterion-lite bench runner.
+pub struct Bench {
+    pub warmup: usize,
+    pub runs: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, runs: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, runs: usize) -> Self {
+        Bench { warmup, runs }
+    }
+
+    /// Time `f` (which should do one full unit of work per call).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Summary::from_samples(samples);
+        println!("bench {name:<44} {}", s.fmt_ms());
+        s
+    }
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_orders() {
+        let s = Summary::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 3.0);
+        assert_eq!(s.median_s, 2.0);
+        assert!((s.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0];
+        assert!((percentile(&xs, 0.5) - 1.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 3.0);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!(s > 0.0);
+    }
+}

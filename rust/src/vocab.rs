@@ -1,0 +1,226 @@
+//! Synthetic vocabulary layout + fact-language token helpers.
+//!
+//! Mirror of `python/compile/tasks.py` (the build-time contract); the actual
+//! numbers are loaded from the manifest at runtime and validated against
+//! these compile-time defaults so drift between the two sides fails fast.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const QUERY: i32 = 2;
+pub const ANSWER: i32 = 3;
+pub const SEP: i32 = 4;
+pub const KEYMARK: i32 = 5;
+pub const VALMARK: i32 = 6;
+pub const EOS: i32 = 7;
+pub const IMG: i32 = 8;
+pub const ROW: i32 = 9;
+pub const COL: i32 = 10;
+pub const HOP: i32 = 11;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub vocab: usize,
+    pub key_base: i32,
+    pub num_keys: usize,
+    pub val_base: i32,
+    pub num_vals: usize,
+    pub filler_base: i32,
+    pub num_filler: usize,
+    pub answer_len: usize,
+}
+
+impl Default for Vocab {
+    fn default() -> Self {
+        Vocab {
+            vocab: 144,
+            key_base: 16,
+            num_keys: 48,
+            val_base: 64,
+            num_vals: 48,
+            filler_base: 112,
+            num_filler: 32,
+            answer_len: 3,
+        }
+    }
+}
+
+impl Vocab {
+    pub fn from_manifest(j: &Json) -> Result<Vocab> {
+        let v = Vocab {
+            vocab: j.get("vocab")?.as_usize()?,
+            key_base: j.get("key_base")?.as_i64()? as i32,
+            num_keys: j.get("num_keys")?.as_usize()?,
+            val_base: j.get("val_base")?.as_i64()? as i32,
+            num_vals: j.get("num_vals")?.as_usize()?,
+            filler_base: j.get("filler_base")?.as_i64()? as i32,
+            num_filler: j.get("num_filler")?.as_usize()?,
+            answer_len: j.get("answer_len")?.as_usize()?,
+        };
+        // Cross-check the special ids the Python side baked into training
+        // data against this module's constants.
+        for (name, got, want) in [
+            ("pad", j.get("pad")?.as_i64()? as i32, PAD),
+            ("query", j.get("query")?.as_i64()? as i32, QUERY),
+            ("answer", j.get("answer")?.as_i64()? as i32, ANSWER),
+            ("sep", j.get("sep")?.as_i64()? as i32, SEP),
+            ("keymark", j.get("keymark")?.as_i64()? as i32, KEYMARK),
+            ("valmark", j.get("valmark")?.as_i64()? as i32, VALMARK),
+            ("eos", j.get("eos")?.as_i64()? as i32, EOS),
+            ("img", j.get("img")?.as_i64()? as i32, IMG),
+            ("row", j.get("row")?.as_i64()? as i32, ROW),
+            ("hop", j.get("hop")?.as_i64()? as i32, HOP),
+        ] {
+            if got != want {
+                bail!("vocab drift: manifest {name}={got}, crate expects {want}");
+            }
+        }
+        Ok(v)
+    }
+
+    pub fn key(&self, i: usize) -> i32 {
+        debug_assert!(i < self.num_keys);
+        self.key_base + i as i32
+    }
+
+    pub fn val(&self, i: usize) -> i32 {
+        debug_assert!(i < self.num_vals);
+        self.val_base + i as i32
+    }
+
+    pub fn filler(&self, i: usize) -> i32 {
+        self.filler_base + (i % self.num_filler) as i32
+    }
+
+    pub fn is_value(&self, t: i32) -> bool {
+        t >= self.val_base && t < self.val_base + self.num_vals as i32
+    }
+
+    pub fn is_key(&self, t: i32) -> bool {
+        t >= self.key_base && t < self.key_base + self.num_keys as i32
+    }
+
+    pub fn is_filler(&self, t: i32) -> bool {
+        t >= self.filler_base && t < self.filler_base + self.num_filler as i32
+    }
+
+    /// Human-readable rendering for logs/examples.
+    pub fn describe(&self, t: i32) -> String {
+        match t {
+            PAD => "<pad>".into(),
+            BOS => "<bos>".into(),
+            QUERY => "<query>".into(),
+            ANSWER => "<answer>".into(),
+            SEP => "<sep>".into(),
+            KEYMARK => "<key>".into(),
+            VALMARK => "<val>".into(),
+            EOS => "<eos>".into(),
+            IMG => "<img>".into(),
+            ROW => "<row>".into(),
+            COL => "<col>".into(),
+            HOP => "<hop>".into(),
+            t if self.is_key(t) => format!("K{}", t - self.key_base),
+            t if self.is_value(t) => format!("V{}", t - self.val_base),
+            t if self.is_filler(t) => format!("~{}", t - self.filler_base),
+            t => format!("?{t}"),
+        }
+    }
+
+    pub fn render(&self, toks: &[i32]) -> String {
+        toks.iter()
+            .map(|&t| self.describe(t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    // -- fact constructors (mirror tasks.py) --------------------------------
+    pub fn value_fact(&self, k: i32, v1: i32, v2: i32) -> Vec<i32> {
+        vec![KEYMARK, k, v1, v2, SEP]
+    }
+
+    pub fn link_fact(&self, k1: i32, k2: i32) -> Vec<i32> {
+        vec![KEYMARK, k1, HOP, k2, SEP]
+    }
+
+    pub fn grid_cell(&self, r: i32, c: i32, v: i32) -> Vec<i32> {
+        vec![IMG, r, c, v]
+    }
+
+    pub fn chart_point(&self, r: i32, v: i32) -> Vec<i32> {
+        vec![ROW, r, v]
+    }
+
+    /// Front-pad a prompt to `prompt_len` (mirror of tasks._pad_prompt).
+    pub fn pad_prompt(&self, body: &[i32], prompt_len: usize) -> Vec<i32> {
+        assert!(body.len() <= prompt_len, "prompt body too long");
+        let mut out = vec![PAD; prompt_len - body.len()];
+        out.extend_from_slice(body);
+        out
+    }
+
+    /// Answer padded/truncated to answer_len, EOS-terminated.
+    pub fn pad_answer(&self, payload: &[i32]) -> Vec<i32> {
+        let mut out = payload.to_vec();
+        while out.len() < self.answer_len {
+            out.push(EOS);
+        }
+        out.truncate(self.answer_len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_layout_is_consistent() {
+        let v = Vocab::default();
+        assert_eq!(v.val_base, v.key_base + v.num_keys as i32);
+        assert_eq!(v.filler_base, v.val_base + v.num_vals as i32);
+        assert_eq!(
+            v.filler_base as usize + v.num_filler,
+            v.vocab
+        );
+    }
+
+    #[test]
+    fn class_predicates_are_disjoint() {
+        let v = Vocab::default();
+        for t in 0..v.vocab as i32 {
+            let classes =
+                [v.is_key(t), v.is_value(t), v.is_filler(t)].iter().filter(|&&x| x).count();
+            assert!(classes <= 1, "token {t} in multiple classes");
+        }
+    }
+
+    #[test]
+    fn prompt_padding() {
+        let v = Vocab::default();
+        let p = v.pad_prompt(&[QUERY, v.key(3), ANSWER], 8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..5], &[PAD; 5]);
+        assert_eq!(p[7], ANSWER);
+    }
+
+    #[test]
+    fn answer_padding() {
+        let v = Vocab::default();
+        assert_eq!(v.pad_answer(&[v.val(1)]), vec![v.val(1), EOS, EOS]);
+        assert_eq!(
+            v.pad_answer(&[v.val(1), v.val(2)]),
+            vec![v.val(1), v.val(2), EOS]
+        );
+    }
+
+    #[test]
+    fn describe_roundtrips_classes() {
+        let v = Vocab::default();
+        assert_eq!(v.describe(v.key(5)), "K5");
+        assert_eq!(v.describe(v.val(0)), "V0");
+        assert_eq!(v.describe(EOS), "<eos>");
+    }
+}

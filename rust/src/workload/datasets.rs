@@ -1,0 +1,178 @@
+//! LongBench dataset analogs (DESIGN.md §1): each stresses the axis its
+//! namesake stresses.
+//!
+//! * `2wikimqa-syn` — two-hop composition whose two facts tend to live in
+//!   different chunks (cross-chunk evidence aggregation).
+//! * `musique-syn` — two-hop with a denser distractor pool.
+//! * `hotpotqa-syn` — recency / same-key distractors (positional
+//!   disambiguation) mixed with two-hop.
+//! * `narrativeqa-syn` — one-hop needles buried in long filler ("narrative")
+//!   contexts, larger chunk count.
+//!
+//! Two chunking regimes mirror Table 3: `FixedChunk` (every chunk exactly
+//! `chunk` tokens, facts packed anywhere) and `PassageSplit` (each "passage"
+//! = one chunk, sparser facts — the RAG document setting).
+
+use crate::util::rng::Rng;
+use crate::vocab::Vocab;
+
+use super::lang::{Episode, EpisodeGen};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkingMode {
+    FixedChunk,
+    PassageSplit,
+}
+
+impl ChunkingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChunkingMode::FixedChunk => "Fixed Chunk",
+            ChunkingMode::PassageSplit => "Passage Split",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    TwoWikiMqa,
+    Musique,
+    HotpotQa,
+    NarrativeQa,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 4] = [
+        Dataset::TwoWikiMqa,
+        Dataset::Musique,
+        Dataset::HotpotQa,
+        Dataset::NarrativeQa,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::TwoWikiMqa => "2WikiMQA",
+            Dataset::Musique => "MuSiQue",
+            Dataset::HotpotQa => "HotpotQA",
+            Dataset::NarrativeQa => "NarrativeQA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s.to_ascii_lowercase().as_str() {
+            "2wikimqa" | "2wiki" => Some(Dataset::TwoWikiMqa),
+            "musique" => Some(Dataset::Musique),
+            "hotpotqa" | "hotpot" => Some(Dataset::HotpotQa),
+            "narrativeqa" | "narrative" => Some(Dataset::NarrativeQa),
+            _ => None,
+        }
+    }
+
+    /// Number of context chunks per episode.
+    pub fn n_chunks(&self, mode: ChunkingMode) -> usize {
+        match (self, mode) {
+            (Dataset::NarrativeQa, _) => 8,
+            (_, ChunkingMode::FixedChunk) => 4,
+            (_, ChunkingMode::PassageSplit) => 6,
+        }
+    }
+
+    pub fn sample(
+        &self,
+        genr: &EpisodeGen,
+        rng: &mut Rng,
+        mode: ChunkingMode,
+    ) -> Episode {
+        let n_chunks = self.n_chunks(mode);
+        // PassageSplit = sparser facts per chunk (documents), FixedChunk =
+        // packed facts.
+        let mut g = EpisodeGen::new(genr.vocab.clone(), genr.chunk);
+        g.n_facts = match mode {
+            ChunkingMode::FixedChunk => (3, 6),
+            ChunkingMode::PassageSplit => (2, 4),
+        };
+        match self {
+            Dataset::TwoWikiMqa => g.twohop(rng, n_chunks),
+            Dataset::Musique => {
+                let mut gg = EpisodeGen::new(g.vocab.clone(), g.chunk);
+                gg.n_facts = (g.n_facts.0 + 2, g.n_facts.1 + 3); // denser distractors
+                gg.twohop(rng, n_chunks)
+            }
+            Dataset::HotpotQa => {
+                if rng.chance(0.5) {
+                    g.recency(rng, n_chunks)
+                } else {
+                    g.twohop(rng, n_chunks)
+                }
+            }
+            Dataset::NarrativeQa => {
+                let mut gg = EpisodeGen::new(g.vocab.clone(), g.chunk);
+                gg.n_facts = (2, 3); // sparse needles in long filler
+                if rng.chance(0.4) {
+                    gg.recency(rng, n_chunks)
+                } else {
+                    gg.onehop(rng, n_chunks)
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: a seeded evaluation set.
+pub fn eval_set(
+    vocab: &Vocab,
+    chunk: usize,
+    ds: Dataset,
+    mode: ChunkingMode,
+    n: usize,
+    seed: u64,
+) -> Vec<Episode> {
+    let genr = EpisodeGen::new(vocab.clone(), chunk);
+    let mut rng = Rng::new(seed ^ (ds as u64) << 8 ^ (mode as u64) << 16);
+    (0..n).map(|_| ds.sample(&genr, &mut rng, mode)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_datasets_sample() {
+        let v = Vocab::default();
+        for ds in Dataset::ALL {
+            for mode in [ChunkingMode::FixedChunk, ChunkingMode::PassageSplit] {
+                let set = eval_set(&v, 64, ds, mode, 3, 7);
+                assert_eq!(set.len(), 3);
+                for e in &set {
+                    assert_eq!(e.chunks.len(), ds.n_chunks(mode));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_sets_are_deterministic() {
+        let v = Vocab::default();
+        let a = eval_set(&v, 64, Dataset::HotpotQa, ChunkingMode::PassageSplit, 4, 1);
+        let b = eval_set(&v, 64, Dataset::HotpotQa, ChunkingMode::PassageSplit, 4, 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.chunks, y.chunks);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn twohop_datasets_can_cross_chunks() {
+        // at least some 2wiki episodes have needles in 2 distinct chunks
+        let v = Vocab::default();
+        let set = eval_set(&v, 64, Dataset::TwoWikiMqa, ChunkingMode::PassageSplit, 40, 3);
+        assert!(set.iter().any(|e| e.needle_chunks.len() == 2));
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for ds in Dataset::ALL {
+            assert_eq!(Dataset::parse(ds.name()), Some(ds));
+        }
+    }
+}

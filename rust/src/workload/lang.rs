@@ -1,0 +1,399 @@
+//! Fact micro-language episode generator (Rust mirror of
+//! `python/compile/tasks.py` — same grammar, independent sampler).
+//!
+//! An [`Episode`] is one QA item: context chunks (each exactly `chunk`
+//! tokens, facts never straddling boundaries, filler elsewhere), an unpadded
+//! prompt body, the gold answer payload, and the needle chunk indices.
+
+use crate::util::rng::Rng;
+use crate::vocab::{self, Vocab};
+
+#[derive(Clone, Debug)]
+pub struct Episode {
+    /// Chunked context: each inner vec is exactly `chunk` tokens.
+    pub chunks: Vec<Vec<i32>>,
+    /// Unpadded prompt body, e.g. [QUERY, k, ANSWER].
+    pub prompt: Vec<i32>,
+    /// Gold answer payload (1-2 value tokens, no EOS).
+    pub answer: Vec<i32>,
+    /// Chunk indices containing answer-bearing facts.
+    pub needle_chunks: Vec<usize>,
+    pub task: &'static str,
+}
+
+/// Generator with the knobs the experiment harness sweeps.
+pub struct EpisodeGen {
+    pub vocab: Vocab,
+    pub chunk: usize,
+    /// Facts per episode (distractors + needles).
+    pub n_facts: (usize, usize),
+}
+
+impl EpisodeGen {
+    pub fn new(vocab: Vocab, chunk: usize) -> EpisodeGen {
+        EpisodeGen { vocab, chunk, n_facts: (2, 5) }
+    }
+
+    fn filler(&self, rng: &mut Rng, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|_| self.vocab.filler(rng.below(self.vocab.num_filler)))
+            .collect()
+    }
+
+    /// Place facts (in order) into `n_chunks` chunks without straddling
+    /// boundaries; returns (chunks, chunk index of every fact).
+    fn place(
+        &self,
+        rng: &mut Rng,
+        facts: &[Vec<i32>],
+        n_chunks: usize,
+    ) -> (Vec<Vec<i32>>, Vec<usize>) {
+        let chunk = self.chunk;
+        let mut cap = vec![chunk; n_chunks];
+        let mut fact_chunk = Vec::with_capacity(facts.len());
+        let mut c = 0usize;
+        for (i, f) in facts.iter().enumerate() {
+            let need: usize = facts[i..].iter().map(|x| x.len()).sum();
+            loop {
+                let room: usize = cap[c..].iter().sum();
+                assert!(need <= room, "facts do not fit the context");
+                let can_here = cap[c] >= f.len();
+                let can_later = c + 1 < n_chunks
+                    && cap[c + 1..].iter().sum::<usize>() >= need;
+                if can_here && (!can_later || rng.below(3) > 0) {
+                    break;
+                }
+                if can_later {
+                    c += 1;
+                } else {
+                    assert!(can_here, "fact placement stuck");
+                    break;
+                }
+            }
+            cap[c] -= f.len();
+            fact_chunk.push(c);
+        }
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for ci in 0..n_chunks {
+            let mut body = Vec::new();
+            for (fi, f) in facts.iter().enumerate() {
+                if fact_chunk[fi] == ci {
+                    body.extend_from_slice(f);
+                }
+            }
+            let pad = chunk - body.len();
+            let cut = rng.below(pad + 1);
+            let mut out = self.filler(rng, cut);
+            out.extend(body);
+            out.extend(self.filler(rng, pad - cut));
+            chunks.push(out);
+        }
+        (chunks, fact_chunk)
+    }
+
+    fn fact_budget(&self, rng: &mut Rng, n_chunks: usize) -> usize {
+        let (lo, hi) = self.n_facts;
+        let hi = hi.max(lo + 1).min(3 + n_chunks);
+        lo + rng.below(hi - lo + 1)
+    }
+
+    pub fn onehop(&self, rng: &mut Rng, n_chunks: usize) -> Episode {
+        let v = &self.vocab;
+        let nf = self.fact_budget(rng, n_chunks);
+        let keys = rng.choose_distinct(v.num_keys, nf);
+        let facts: Vec<Vec<i32>> = keys
+            .iter()
+            .map(|&k| {
+                v.value_fact(
+                    v.key(k),
+                    v.val(rng.below(v.num_vals)),
+                    v.val(rng.below(v.num_vals)),
+                )
+            })
+            .collect();
+        let qi = rng.below(nf);
+        let (chunks, fact_chunk) = self.place(rng, &facts, n_chunks);
+        Episode {
+            answer: vec![facts[qi][2], facts[qi][3]],
+            prompt: vec![vocab::QUERY, v.key(keys[qi]), vocab::ANSWER],
+            needle_chunks: vec![fact_chunk[qi]],
+            chunks,
+            task: "onehop",
+        }
+    }
+
+    /// Recency: the queried key appears 2-3 times; the LAST copy wins.
+    pub fn recency(&self, rng: &mut Rng, n_chunks: usize) -> Episode {
+        let v = &self.vocab;
+        let nf = self.fact_budget(rng, n_chunks);
+        let keys = rng.choose_distinct(v.num_keys, nf);
+        let qk = v.key(keys[0]);
+        let mut facts: Vec<Vec<i32>> = keys
+            .iter()
+            .map(|&k| {
+                v.value_fact(
+                    v.key(k),
+                    v.val(rng.below(v.num_vals)),
+                    v.val(rng.below(v.num_vals)),
+                )
+            })
+            .collect();
+        let n_dup = 1 + rng.below(2);
+        for _ in 0..n_dup {
+            let f = v.value_fact(qk, v.val(rng.below(v.num_vals)), v.val(rng.below(v.num_vals)));
+            let at = rng.below(facts.len() + 1);
+            facts.insert(at, f);
+        }
+        let (chunks, _) = self.place(rng, &facts, n_chunks);
+        // find the last occurrence in the flattened context
+        let flat: Vec<i32> = chunks.iter().flatten().copied().collect();
+        let mut last = None;
+        for i in 0..flat.len().saturating_sub(3) {
+            if flat[i] == vocab::KEYMARK && flat[i + 1] == qk {
+                last = Some(i);
+            }
+        }
+        let last = last.expect("recency episode lost its needle");
+        Episode {
+            answer: vec![flat[last + 2], flat[last + 3]],
+            prompt: vec![vocab::QUERY, qk, vocab::ANSWER],
+            needle_chunks: vec![last / self.chunk],
+            chunks,
+            task: "recency",
+        }
+    }
+
+    /// Two-hop: link fact + value fact, possibly in different chunks.
+    pub fn twohop(&self, rng: &mut Rng, n_chunks: usize) -> Episode {
+        let v = &self.vocab;
+        let nf = self.fact_budget(rng, n_chunks).max(3);
+        let keys = rng.choose_distinct(v.num_keys, nf);
+        let (k1, k2) = (v.key(keys[0]), v.key(keys[1]));
+        let (v1, v2) = (v.val(rng.below(v.num_vals)), v.val(rng.below(v.num_vals)));
+        let mut facts = vec![v.link_fact(k1, k2), v.value_fact(k2, v1, v2)];
+        for &k in &keys[2..] {
+            facts.push(v.value_fact(
+                v.key(k),
+                v.val(rng.below(v.num_vals)),
+                v.val(rng.below(v.num_vals)),
+            ));
+        }
+        // shuffle, remember where the two needles land
+        let mut order: Vec<usize> = (0..facts.len()).collect();
+        rng.shuffle(&mut order);
+        let shuffled: Vec<Vec<i32>> = order.iter().map(|&i| facts[i].clone()).collect();
+        let i_link = order.iter().position(|&i| i == 0).unwrap();
+        let i_val = order.iter().position(|&i| i == 1).unwrap();
+        let (chunks, fact_chunk) = self.place(rng, &shuffled, n_chunks);
+        let mut needles = vec![fact_chunk[i_link], fact_chunk[i_val]];
+        needles.sort_unstable();
+        needles.dedup();
+        Episode {
+            answer: vec![v1, v2],
+            prompt: vec![vocab::QUERY, vocab::HOP, k1, vocab::ANSWER],
+            needle_chunks: needles,
+            chunks,
+            task: "twohop",
+        }
+    }
+
+    /// Grid lookup ("image" chunk): 3x3 cells, query one.
+    pub fn grid(&self, rng: &mut Rng, n_chunks: usize) -> Episode {
+        let v = &self.vocab;
+        let rows: Vec<i32> = rng.choose_distinct(16, 3).iter().map(|&r| v.key(r)).collect();
+        let cols: Vec<i32> =
+            rng.choose_distinct(16, 3).iter().map(|&c| v.key(16 + c)).collect();
+        let mut facts = Vec::new();
+        let mut cells = std::collections::HashMap::new();
+        for &r in &rows {
+            for &c in &cols {
+                let val = v.val(rng.below(v.num_vals));
+                cells.insert((r, c), val);
+                facts.push(v.grid_cell(r, c, val));
+            }
+        }
+        let qr = rows[rng.below(rows.len())];
+        let qc = cols[rng.below(cols.len())];
+        let gold = cells[&(qr, qc)];
+        let qi = facts
+            .iter()
+            .position(|f| f[1] == qr && f[2] == qc)
+            .unwrap();
+        let (chunks, fact_chunk) = self.place(rng, &facts, n_chunks);
+        Episode {
+            answer: vec![gold],
+            prompt: vec![vocab::QUERY, vocab::IMG, qr, qc, vocab::ANSWER],
+            needle_chunks: vec![fact_chunk[qi]],
+            chunks,
+            task: "grid",
+        }
+    }
+
+    /// Chart lookup: series -> value.
+    pub fn chart(&self, rng: &mut Rng, n_chunks: usize) -> Episode {
+        let v = &self.vocab;
+        let nf = self.fact_budget(rng, n_chunks).clamp(3, 6);
+        let rows = rng.choose_distinct(v.num_keys, nf);
+        let facts: Vec<Vec<i32>> = rows
+            .iter()
+            .map(|&r| v.chart_point(v.key(r), v.val(rng.below(v.num_vals))))
+            .collect();
+        let qi = rng.below(nf);
+        let gold = facts[qi][2];
+        let (chunks, fact_chunk) = self.place(rng, &facts, n_chunks);
+        Episode {
+            answer: vec![gold],
+            prompt: vec![vocab::QUERY, vocab::ROW, v.key(rows[qi]), vocab::ANSWER],
+            needle_chunks: vec![fact_chunk[qi]],
+            chunks,
+            task: "chart",
+        }
+    }
+
+    pub fn by_name(&self, name: &str, rng: &mut Rng, n_chunks: usize) -> Episode {
+        match name {
+            "onehop" => self.onehop(rng, n_chunks),
+            "recency" => self.recency(rng, n_chunks),
+            "twohop" => self.twohop(rng, n_chunks),
+            "grid" => self.grid(rng, n_chunks),
+            "chart" => self.chart(rng, n_chunks),
+            other => panic!("unknown task '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn gen() -> EpisodeGen {
+        EpisodeGen::new(Vocab::default(), 64)
+    }
+
+    #[test]
+    fn episodes_are_wellformed() {
+        prop::check(100, |rng| {
+            let g = gen();
+            let n_chunks = 2 + rng.below(7);
+            for task in ["onehop", "recency", "twohop", "grid", "chart"] {
+                let e = g.by_name(task, rng, n_chunks);
+                prop::assert_prop(e.chunks.len() == n_chunks, "chunk count")?;
+                for c in &e.chunks {
+                    prop::assert_prop(c.len() == 64, "chunk length")?;
+                    prop::assert_prop(
+                        c.iter().all(|&t| t >= 0 && (t as usize) < g.vocab.vocab),
+                        "token range",
+                    )?;
+                }
+                prop::assert_prop(!e.answer.is_empty() && e.answer.len() <= 2, "answer len")?;
+                prop::assert_prop(
+                    e.answer.iter().all(|&a| g.vocab.is_value(a)),
+                    "answer must be value tokens",
+                )?;
+                prop::assert_prop(
+                    e.prompt.first() == Some(&vocab::QUERY)
+                        && e.prompt.last() == Some(&vocab::ANSWER),
+                    "prompt frame",
+                )?;
+                for &nc in &e.needle_chunks {
+                    prop::assert_prop(nc < n_chunks, "needle chunk in range")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn facts_never_straddle_chunks() {
+        prop::check(60, |rng| {
+            let g = gen();
+            let e = g.onehop(rng, 4);
+            for c in &e.chunks {
+                for i in 0..c.len() {
+                    if c[i] == vocab::KEYMARK {
+                        prop::assert_prop(i + 4 < c.len(), "fact crosses boundary")?;
+                        prop::assert_prop(c[i + 4] == vocab::SEP, "malformed fact")?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn onehop_answer_matches_context() {
+        prop::check(60, |rng| {
+            let g = gen();
+            let e = g.onehop(rng, 3);
+            let qk = e.prompt[1];
+            let flat: Vec<i32> = e.chunks.iter().flatten().copied().collect();
+            let mut found = false;
+            for i in 0..flat.len() - 3 {
+                if flat[i] == vocab::KEYMARK && flat[i + 1] == qk {
+                    found = true;
+                    prop::assert_prop(
+                        flat[i + 2] == e.answer[0] && flat[i + 3] == e.answer[1],
+                        "answer mismatch",
+                    )?;
+                }
+            }
+            prop::assert_prop(found, "needle missing")
+        });
+    }
+
+    #[test]
+    fn recency_answer_is_last_occurrence() {
+        prop::check(60, |rng| {
+            let g = gen();
+            let e = g.recency(rng, 4);
+            let qk = e.prompt[1];
+            let flat: Vec<i32> = e.chunks.iter().flatten().copied().collect();
+            let mut occurrences = 0;
+            let mut last_ans = None;
+            for i in 0..flat.len() - 3 {
+                if flat[i] == vocab::KEYMARK && flat[i + 1] == qk {
+                    occurrences += 1;
+                    last_ans = Some(vec![flat[i + 2], flat[i + 3]]);
+                }
+            }
+            prop::assert_prop(occurrences >= 2, "needs duplicates")?;
+            prop::assert_prop(last_ans.as_deref() == Some(&e.answer[..]), "not last")
+        });
+    }
+
+    #[test]
+    fn twohop_is_consistent() {
+        prop::check(60, |rng| {
+            let g = gen();
+            let e = g.twohop(rng, 4);
+            let k1 = e.prompt[2];
+            let flat: Vec<i32> = e.chunks.iter().flatten().copied().collect();
+            let mut k2 = None;
+            for i in 0..flat.len() - 3 {
+                if flat[i] == vocab::KEYMARK && flat[i + 1] == k1 && flat[i + 2] == vocab::HOP {
+                    k2 = Some(flat[i + 3]);
+                }
+            }
+            let k2 = k2.expect("link fact missing");
+            let mut ok = false;
+            for i in 0..flat.len() - 3 {
+                if flat[i] == vocab::KEYMARK && flat[i + 1] == k2 && flat[i + 2] != vocab::HOP {
+                    ok = flat[i + 2] == e.answer[0] && flat[i + 3] == e.answer[1];
+                }
+            }
+            prop::assert_prop(ok, "value fact mismatch")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = gen();
+        let mut r1 = crate::util::rng::Rng::new(42);
+        let mut r2 = crate::util::rng::Rng::new(42);
+        let a = g.onehop(&mut r1, 4);
+        let b = g.onehop(&mut r2, 4);
+        assert_eq!(a.chunks, b.chunks);
+        assert_eq!(a.answer, b.answer);
+    }
+}

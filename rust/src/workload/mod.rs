@@ -1,0 +1,11 @@
+//! Workload generation: the Rust mirror of the fact micro-language plus the
+//! dataset analogs used by every experiment table (see DESIGN.md §1 for the
+//! paper-benchmark ↔ analog mapping).
+
+pub mod datasets;
+pub mod lang;
+pub mod needle;
+pub mod traces;
+pub mod vlm;
+
+pub use lang::{Episode, EpisodeGen};

@@ -1,0 +1,125 @@
+//! Needle-in-a-Haystack generator (Figures 3 & 4): a single value fact
+//! buried at a controlled *depth* within a controlled context length, plus
+//! same-key duplicate distractors earlier in the context so retrieval is
+//! position-critical (the model must find the LAST / deepest-correct copy).
+
+use crate::util::rng::Rng;
+use crate::vocab::{self, Vocab};
+
+use super::lang::Episode;
+
+/// Generate one needle episode.
+/// `n_chunks` controls context length; `depth` in [0,1] places the needle
+/// fact (0 = context start, 1 = immediately before the prompt).
+pub fn needle_episode(
+    vocab: &Vocab,
+    chunk: usize,
+    rng: &mut Rng,
+    n_chunks: usize,
+    depth: f64,
+) -> Episode {
+    let n_ctx = n_chunks * chunk;
+    let qk = vocab.key(rng.below(vocab.num_keys));
+    let (v1, v2) = (
+        vocab.val(rng.below(vocab.num_vals)),
+        vocab.val(rng.below(vocab.num_vals)),
+    );
+    let fact = vocab.value_fact(qk, v1, v2);
+    let flen = fact.len();
+
+    // needle start position at the requested depth, clamped into range and
+    // aligned so the fact does not straddle a chunk boundary
+    let max_start = n_ctx - flen;
+    let mut start = ((depth * max_start as f64).round() as usize).min(max_start);
+    let chunk_of = start / chunk;
+    if (start + flen - 1) / chunk != chunk_of {
+        start = (chunk_of + 1) * chunk - flen; // pull back inside the chunk
+    }
+
+    let mut flat: Vec<i32> = (0..n_ctx)
+        .map(|_| vocab.filler(rng.below(vocab.num_filler)))
+        .collect();
+    flat[start..start + flen].copy_from_slice(&fact);
+
+    // distractor: an EARLIER duplicate of the key with different values
+    // (recency semantics: the deeper copy is correct). Skip when the needle
+    // sits at the very front.
+    if start >= flen + 2 {
+        let dv1 = vocab.val(rng.below(vocab.num_vals));
+        let dv2 = vocab.val(rng.below(vocab.num_vals));
+        let dup = vocab.value_fact(qk, dv1, dv2);
+        let mut dstart = rng.below(start - flen);
+        let dchunk = dstart / chunk;
+        if (dstart + flen - 1) / chunk != dchunk {
+            dstart = dchunk * chunk; // keep inside one chunk
+        }
+        if dstart + flen <= start {
+            flat[dstart..dstart + flen].copy_from_slice(&dup);
+        }
+    }
+
+    let chunks: Vec<Vec<i32>> = flat.chunks(chunk).map(|c| c.to_vec()).collect();
+    Episode {
+        chunks,
+        prompt: vec![vocab::QUERY, qk, vocab::ANSWER],
+        answer: vec![v1, v2],
+        needle_chunks: vec![start / chunk],
+        task: "needle",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn needle_lands_at_requested_depth() {
+        prop::check(80, |rng| {
+            let v = Vocab::default();
+            let n_chunks = 2 + rng.below(7);
+            let depth = rng.f64();
+            let e = needle_episode(&v, 64, rng, n_chunks, depth);
+            let flat: Vec<i32> = e.chunks.iter().flatten().copied().collect();
+            let qk = e.prompt[1];
+            // the LAST occurrence must carry the gold answer
+            let mut last = None;
+            for i in 0..flat.len() - 3 {
+                if flat[i] == vocab::KEYMARK && flat[i + 1] == qk {
+                    last = Some(i);
+                }
+            }
+            let last = last.expect("needle missing");
+            prop::assert_prop(
+                flat[last + 2] == e.answer[0] && flat[last + 3] == e.answer[1],
+                "gold mismatch",
+            )?;
+            // depth accuracy: within one chunk of the request
+            let want = (depth * (flat.len() - 5) as f64) as usize;
+            prop::assert_prop(
+                (last as i64 - want as i64).unsigned_abs() as usize <= 64,
+                format!("needle at {last}, wanted ~{want}"),
+            )?;
+            prop::assert_prop(e.needle_chunks == vec![last / 64], "needle chunk")
+        });
+    }
+
+    #[test]
+    fn deep_needles_have_distractors() {
+        let v = Vocab::default();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut with_dup = 0;
+        for _ in 0..20 {
+            let e = needle_episode(&v, 64, &mut rng, 4, 1.0);
+            let flat: Vec<i32> = e.chunks.iter().flatten().copied().collect();
+            let qk = e.prompt[1];
+            let occ = (0..flat.len() - 3)
+                .filter(|&i| flat[i] == vocab::KEYMARK && flat[i + 1] == qk)
+                .count();
+            if occ >= 2 {
+                with_dup += 1;
+            }
+        }
+        assert!(with_dup >= 15, "deep needles should usually carry a distractor");
+    }
+}

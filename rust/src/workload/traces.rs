@@ -1,0 +1,111 @@
+//! Request traces for the serving benchmarks: Poisson arrivals over a pool
+//! of shared documents (so the chunk store sees realistic reuse), used by
+//! the coordinator bench and the rag_serving example.
+
+use crate::util::rng::Rng;
+use crate::vocab::Vocab;
+
+use super::lang::{Episode, EpisodeGen};
+
+#[derive(Clone, Debug)]
+pub struct TracedRequest {
+    /// Arrival time in seconds from trace start.
+    pub at_s: f64,
+    pub episode: Episode,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean request rate (req/s).
+    pub rate: f64,
+    pub n_requests: usize,
+    /// Size of the shared document pool; smaller pool => more cache reuse.
+    pub doc_pool: usize,
+    pub chunks_per_request: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate: 4.0,
+            n_requests: 32,
+            doc_pool: 12,
+            chunks_per_request: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a trace where requests retrieve `chunks_per_request` documents
+/// from a fixed pool (multi-query RAG reuse) and ask a one-hop question
+/// about a fact known to live in one of the retrieved documents.
+pub fn generate(vocab: &Vocab, chunk: usize, cfg: &TraceConfig) -> Vec<TracedRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let genr = EpisodeGen::new(vocab.clone(), chunk);
+
+    // Document pool: each document is one chunk from a one-hop episode,
+    // with its (key -> answer) fact recorded.
+    let mut docs: Vec<(Vec<i32>, Vec<i32>, Vec<i32>)> = Vec::new(); // (chunk, prompt, answer)
+    for _ in 0..cfg.doc_pool {
+        let e = genr.onehop(&mut rng, 1);
+        docs.push((e.chunks[0].clone(), e.prompt.clone(), e.answer.clone()));
+    }
+
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    let mut t = 0.0;
+    for _ in 0..cfg.n_requests {
+        t += rng.exponential(cfg.rate);
+        // retrieve a random subset; the needle doc decides the query
+        let pick = rng.choose_distinct(docs.len(), cfg.chunks_per_request.min(docs.len()));
+        let needle_slot = rng.below(pick.len());
+        let chunks: Vec<Vec<i32>> = pick.iter().map(|&i| docs[i].0.clone()).collect();
+        let (_, prompt, answer) = &docs[pick[needle_slot]];
+        out.push(TracedRequest {
+            at_s: t,
+            episode: Episode {
+                chunks,
+                prompt: prompt.clone(),
+                answer: answer.clone(),
+                needle_chunks: vec![needle_slot],
+                task: "trace-onehop",
+            },
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_shape_and_reuse() {
+        let v = Vocab::default();
+        let cfg = TraceConfig { n_requests: 20, doc_pool: 5, ..Default::default() };
+        let tr = generate(&v, 64, &cfg);
+        assert_eq!(tr.len(), 20);
+        // arrivals strictly increasing
+        for w in tr.windows(2) {
+            assert!(w[1].at_s > w[0].at_s);
+        }
+        // small pool => chunk reuse across requests
+        let mut seen = std::collections::HashSet::new();
+        for r in &tr {
+            for c in &r.episode.chunks {
+                seen.insert(crate::kvcache::ChunkKv::content_id(c));
+            }
+        }
+        assert!(seen.len() <= 5, "documents must be shared across requests");
+    }
+
+    #[test]
+    fn deterministic() {
+        let v = Vocab::default();
+        let cfg = TraceConfig::default();
+        let a = generate(&v, 64, &cfg);
+        let b = generate(&v, 64, &cfg);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[3].episode.chunks, b[3].episode.chunks);
+    }
+}

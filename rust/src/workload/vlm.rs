@@ -1,0 +1,136 @@
+//! VLM benchmark analogs (Table 4): the same decoder consuming "image
+//! chunks" — serialized symbol grids — standing in for Qwen3-VL-8B on
+//! OCRBench / ChartQA / RealWorldQA / HRBench4K / InfoVQA (DESIGN.md §1).
+//!
+//! The paper's budget knob `k` is the number of chunks the visual input is
+//! split into (`k = 0` means unchunked baseline inference).
+
+use crate::util::rng::Rng;
+use crate::vocab::Vocab;
+
+use super::lang::{Episode, EpisodeGen};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VlmBench {
+    /// OCRBench-like: read one cell of a dense grid.
+    OcrSyn,
+    /// ChartQA-like: chart series lookup among distractor series.
+    ChartSyn,
+    /// RealWorldQA-like: grid lookup with heavy filler "scene" noise.
+    RealWorldSyn,
+    /// HRBench4K-like: high-resolution = more chunks, one tiny needle cell.
+    HrBenchSyn,
+    /// InfoVQA-like: mixed text facts + grid cells in one context.
+    InfoVqaSyn,
+}
+
+impl VlmBench {
+    pub const ALL: [VlmBench; 5] = [
+        VlmBench::RealWorldSyn,
+        VlmBench::ChartSyn,
+        VlmBench::OcrSyn,
+        VlmBench::HrBenchSyn,
+        VlmBench::InfoVqaSyn,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VlmBench::OcrSyn => "OCRBench-syn",
+            VlmBench::ChartSyn => "ChartQA-syn",
+            VlmBench::RealWorldSyn => "RealWorldQA-syn",
+            VlmBench::HrBenchSyn => "HRBench4K-syn",
+            VlmBench::InfoVqaSyn => "InfoVQA-syn",
+        }
+    }
+
+    /// Sample one episode with the image split into `k.max(1)` chunks
+    /// (k is the paper's chunking budget; k = 0 -> single chunk, evaluated
+    /// with the Baseline method by the harness).
+    pub fn sample(&self, vocab: &Vocab, chunk: usize, rng: &mut Rng, k: usize) -> Episode {
+        let n_chunks = k.max(1).min(8);
+        let mut g = EpisodeGen::new(vocab.clone(), chunk);
+        match self {
+            VlmBench::OcrSyn => {
+                g.n_facts = (4, 8);
+                let mut e = g.grid(rng, n_chunks);
+                e.task = "ocr-syn";
+                e
+            }
+            VlmBench::ChartSyn => {
+                g.n_facts = (4, 6);
+                let mut e = g.chart(rng, n_chunks);
+                e.task = "chart-syn";
+                e
+            }
+            VlmBench::RealWorldSyn => {
+                g.n_facts = (2, 4);
+                let mut e = g.grid(rng, n_chunks);
+                e.task = "realworld-syn";
+                e
+            }
+            VlmBench::HrBenchSyn => {
+                // high resolution: double the chunk count, single needle
+                let nk = (2 * n_chunks).min(8);
+                g.n_facts = (2, 3);
+                let mut e = g.grid(rng, nk);
+                e.task = "hrbench-syn";
+                e
+            }
+            VlmBench::InfoVqaSyn => {
+                // mixed modality: half the episodes are text lookups over a
+                // context that also contains grid cells, half are grid
+                // lookups over a context that also contains text facts.
+                let mut e = if rng.chance(0.5) {
+                    g.onehop(rng, n_chunks)
+                } else {
+                    g.grid(rng, n_chunks)
+                };
+                e.task = "infovqa-syn";
+                e
+            }
+        }
+    }
+}
+
+/// A seeded eval set for one benchmark and chunking budget.
+pub fn eval_set(
+    vocab: &Vocab,
+    chunk: usize,
+    bench: VlmBench,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<Episode> {
+    let mut rng = Rng::new(seed ^ ((bench as u64) << 8) ^ ((k as u64) << 20));
+    (0..n).map(|_| bench.sample(vocab, chunk, &mut rng, k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benches_sample_at_all_budgets() {
+        let v = Vocab::default();
+        for b in VlmBench::ALL {
+            for k in [0usize, 2, 4] {
+                let set = eval_set(&v, 64, b, k, 3, 11);
+                for e in &set {
+                    assert!(!e.chunks.is_empty());
+                    assert!(!e.answer.is_empty());
+                    for c in &e.chunks {
+                        assert_eq!(c.len(), 64);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hrbench_has_more_chunks() {
+        let v = Vocab::default();
+        let hr = eval_set(&v, 64, VlmBench::HrBenchSyn, 4, 2, 1);
+        let ocr = eval_set(&v, 64, VlmBench::OcrSyn, 4, 2, 1);
+        assert!(hr[0].chunks.len() > ocr[0].chunks.len());
+    }
+}
