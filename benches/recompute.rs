@@ -56,8 +56,8 @@ fn main() -> anyhow::Result<()> {
     let genr = EpisodeGen::new(pipeline.vocab.clone(), d.chunk);
     let mut rng = Rng::new(4);
     let e = genr.onehop(&mut rng, 8);
-    let mut store = ChunkStore::new(1 << 30);
-    let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
     for budget in [4usize, 16, 64] {
         bench.run(&format!("pipeline_ours/512tok/budget{budget}"), || {
             pipeline

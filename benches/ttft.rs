@@ -28,8 +28,8 @@ fn main() -> anyhow::Result<()> {
     for &n_chunks in &[2usize, 4, 8] {
         let mut rng = Rng::new(11);
         let e = genr.onehop(&mut rng, n_chunks);
-        let mut store = ChunkStore::new(1 << 30);
-        let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+        let store = ChunkStore::new(1 << 30);
+        let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
         for (name, method) in [
             ("baseline", MethodSpec::Baseline),
             ("norecompute", MethodSpec::NoRecompute),

@@ -36,14 +36,14 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{:<8} {:>8} {:>12} {:>14}", "config", "F1", "needle-hit", "sel-in-needle%");
     for g in RopeGeometry::ALL {
-        let mut store = ChunkStore::new(1 << 30);
+        let store = ChunkStore::new(1 << 30);
         let mut rng = Rng::new(77);
         let mut f1 = 0.0;
         let mut hits = 0usize;
         let mut frac = 0.0;
         for _ in 0..samples {
             let e = needle_episode(&pipeline.vocab, chunk, &mut rng, n_chunks, 0.8);
-            let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+            let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
             let method = MethodSpec::Ours {
                 budget: 16,
                 geometry: g,

@@ -43,12 +43,12 @@ fn main() -> anyhow::Result<()> {
     for (name, method) in methods {
         print!("{name:<14}");
         for depth in [0.0, 0.25, 0.5, 0.75, 1.0] {
-            let mut store = ChunkStore::new(1 << 30);
+            let store = ChunkStore::new(1 << 30);
             let mut rng = Rng::new(9 + (depth * 100.0) as u64);
             let mut f1 = 0.0;
             for _ in 0..samples {
                 let e = needle_episode(&pipeline.vocab, chunk, &mut rng, n_chunks, depth);
-                let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+                let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
                 let r = pipeline.answer(&chunks, &e.prompt, method)?;
                 f1 += token_f1(&r.answer, &e.answer);
             }

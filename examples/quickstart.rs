@@ -34,8 +34,8 @@ fn main() -> anyhow::Result<()> {
     println!("gold  : {}", pipeline.vocab.render(&episode.answer));
 
     // 3. Prefill the chunks offline (chunk-local RoPE, cached by content id).
-    let mut store = ChunkStore::new(256 << 20);
-    let (chunks, prefill_s) = pipeline.prepare_chunks(&mut store, &episode.chunks)?;
+    let store = ChunkStore::new(256 << 20);
+    let (chunks, prefill_s) = pipeline.prepare_chunks(&store, &episode.chunks)?;
     println!("prefilled {} chunks in {:.1} ms", chunks.len(), prefill_s * 1e3);
 
     // 4. Answer with each strategy and compare.

@@ -5,7 +5,7 @@
 //! percentiles, cache hit rate and answer quality.
 //!
 //! ```bash
-//! cargo run --release --example rag_serving -- [requests] [rate]
+//! cargo run --release --example rag_serving -- [requests] [rate] [workers]
 //! ```
 
 use std::path::Path;
@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use infoflow_kv::config::MethodSpec;
 use infoflow_kv::coordinator::batcher::BatcherConfig;
-use infoflow_kv::coordinator::Server;
+use infoflow_kv::coordinator::{Server, ServerConfig};
 use infoflow_kv::eval::token_f1;
 use infoflow_kv::kvcache::ChunkStore;
 use infoflow_kv::pipeline::Pipeline;
@@ -25,11 +25,17 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
     let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2).max(1);
 
     let runtime = Arc::new(Runtime::load(Path::new("artifacts"))?);
     let backbone = runtime.backbone_names().first().cloned()
         .expect("no backbones — run `make artifacts`");
-    let pipeline = Pipeline::new(ModelSession::new(runtime.clone(), &backbone)?)?;
+    // One session per worker; weights/executables are shared via the Runtime.
+    let mut pipelines = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        pipelines.push(Pipeline::new(ModelSession::new(runtime.clone(), &backbone)?)?);
+    }
+    let vocab = pipelines[0].vocab.clone();
     let chunk = runtime.manifest.model.chunk;
 
     let cfg = TraceConfig {
@@ -39,17 +45,16 @@ fn main() -> anyhow::Result<()> {
         chunks_per_request: 4,
         seed: 21,
     };
-    let trace = traces::generate(&pipeline.vocab, chunk, &cfg);
+    let trace = traces::generate(&vocab, chunk, &cfg);
     println!(
-        "rag_serving: {} requests @ poisson {}/s over {} shared docs ({backbone})",
+        "rag_serving: {} requests @ poisson {}/s over {} shared docs ({backbone}, {workers} workers)",
         cfg.n_requests, cfg.rate, cfg.doc_pool
     );
 
-    let server = Server::spawn(
-        pipeline,
+    let server = Server::spawn_pool(
+        pipelines,
         ChunkStore::new(256 << 20),
-        BatcherConfig::default(),
-        128,
+        ServerConfig { batch: BatcherConfig::default(), queue_cap: 128 },
     );
 
     let t0 = std::time::Instant::now();
@@ -79,7 +84,19 @@ fn main() -> anyhow::Result<()> {
     if let Some((mean, _, p95)) = m.latency_summary("queue") {
         println!("queueing: mean {:.1} ms | p95 {:.1} ms", mean * 1e3, p95 * 1e3);
     }
-    println!("\nfull metrics:\n{}", m.dump().to_string_pretty());
+    if let Some(store) = server.store() {
+        let st = store.stats();
+        let total = (st.hits + st.misses).max(1);
+        println!(
+            "chunk cache: {} hits / {} misses ({:.0}% hit rate), {} evictions, lock wait {:.2} ms",
+            st.hits,
+            st.misses,
+            st.hits as f64 / total as f64 * 100.0,
+            st.evictions,
+            store.lock_wait_s() * 1e3,
+        );
+    }
+    println!("\nfull metrics:\n{}", server.metrics_json().to_string_pretty());
     server.shutdown();
     Ok(())
 }

@@ -46,13 +46,13 @@ pub fn run(args: &Args) -> Result<()> {
 
     let variants = ["none", "random", "epic", "norm", "oracle", "baseline"];
     for variant in variants {
-        let mut store = ctx.store();
+        let store = ctx.store();
         let mut rng = Rng::new(ctx.seed ^ 0xAB1A);
         let mut f1 = 0.0;
         let mut hits = 0usize;
         for _ in 0..samples {
             let e = needle_episode(&pipeline.vocab, chunk, &mut rng, n_chunks, 0.7);
-            let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+            let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
             let n: usize = e.chunks.iter().map(|c| c.len()).sum();
             let r = match variant {
                 "none" => pipeline.answer(&chunks, &e.prompt, MethodSpec::NoRecompute)?,

@@ -40,11 +40,11 @@ pub fn run(args: &Args) -> Result<()> {
             for (mname, mk) in &methods {
                 for &b in &budgets {
                     // warm the store first so TTFT is the prepared-context one
-                    let mut store = ctx.store();
+                    let store = ctx.store();
                     for e in &episodes {
-                        pipeline.prepare_chunks(&mut store, &e.chunks)?;
+                        pipeline.prepare_chunks(&store, &e.chunks)?;
                     }
-                    let out = EvalRunner::new(&pipeline, &mut store)
+                    let out = EvalRunner::new(&pipeline, &store)
                         .run(&episodes, mk(b))?;
                     table.row(vec![
                         backbone.clone(),

@@ -32,11 +32,11 @@ pub fn run(args: &Args) -> Result<()> {
         println!("\n-- Needle heatmap: norm layer {layer} ({backbone}) --");
         println!("        depth:   0.00  0.25  0.50  0.75  1.00");
         for &n_chunks in &lengths {
-            let mut store = ctx.store();
+            let store = ctx.store();
             let mut row = format!("ctx {:>4} tok  |", n_chunks * chunk);
             for &depth in &DEPTHS {
                 let f1 = needle_cell(
-                    &pipeline, &mut store, method, n_chunks, depth,
+                    &pipeline, &store, method, n_chunks, depth,
                     ctx.samples.min(12), ctx.seed,
                 )?;
                 row.push_str(&format!("  {:.2}{}", f1, shade(f1)));

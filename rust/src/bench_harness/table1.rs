@@ -31,14 +31,14 @@ pub fn run(args: &Args) -> Result<()> {
         for ds in Dataset::ALL {
             let episodes = eval_set(&vocab, chunk, ds, ChunkingMode::PassageSplit,
                                     ctx.samples, ctx.seed);
-            let mut store = ctx.store();
+            let store = ctx.store();
             let method = MethodSpec::Ours {
                 budget,
                 geometry: g,
                 norm_layer: DEFAULT_NORM_LAYER,
                 reorder: false,
             };
-            let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+            let out = EvalRunner::new(&pipeline, &store).run(&episodes, method)?;
             cells.push(fmt4(out.f1));
             jrow.push((ds.name(), Json::from(out.f1)));
         }

@@ -44,10 +44,10 @@ pub fn run(args: &Args) -> Result<()> {
             for ds in [Dataset::TwoWikiMqa, Dataset::HotpotQa] {
                 let episodes = eval_set(&pipeline.vocab, d.chunk, ds,
                                         ChunkingMode::PassageSplit, ctx.samples, ctx.seed);
-                let mut store = ctx.store();
+                let store = ctx.store();
                 let (mut mom, mut mx, mut n) = (0.0, 0.0, 0usize);
                 for e in &episodes {
-                    let (chunks, _) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+                    let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
                     let r = pipeline.answer(&chunks, &e.prompt, *method)?;
                     if r.selected_positions.is_empty() {
                         continue;

@@ -55,9 +55,9 @@ pub fn run(args: &Args) -> Result<()> {
                 for ds in Dataset::ALL {
                     let episodes =
                         eval_set(&pipeline.vocab, chunk, ds, mode, ctx.samples, ctx.seed);
-                    let mut store = ctx.store();
+                    let store = ctx.store();
                     let out =
-                        EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+                        EvalRunner::new(&pipeline, &store).run(&episodes, method)?;
                     cells.push(fmt4(out.f1));
                     jrow.push((
                         Box::leak(format!("{}/{}", mode.name(), ds.name()).into_boxed_str()),

@@ -42,8 +42,8 @@ pub fn run(args: &Args) -> Result<()> {
         ];
         for b in VlmBench::ALL {
             let episodes = eval_set(&pipeline.vocab, chunk, b, k, ctx.samples, ctx.seed);
-            let mut store = ctx.store();
-            let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+            let store = ctx.store();
+            let out = EvalRunner::new(&pipeline, &store).run(&episodes, method)?;
             cells.push(fmt4(out.f1));
             jrow.push((Box::leak(b.name().to_string().into_boxed_str()), Json::from(out.f1)));
         }

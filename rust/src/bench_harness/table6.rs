@@ -32,8 +32,8 @@ pub fn run(args: &Args) -> Result<()> {
             ("Ring Attention", MethodSpec::Baseline),
             ("Ours", MethodSpec::ours(budget)),
         ] {
-            let mut store = ctx.store();
-            let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+            let store = ctx.store();
+            let out = EvalRunner::new(&pipeline, &store).run(&episodes, method)?;
             table.row(vec![
                 ds.name().to_string(),
                 name.to_string(),

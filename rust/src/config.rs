@@ -104,14 +104,24 @@ impl MethodSpec {
 pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
     pub backbone: String,
-    /// Chunk-store byte budget.
+    /// Chunk-store byte budget (split evenly across `shards`).
     pub cache_bytes: usize,
+    /// Chunk-store shard count (`repro serve --shards`).  Rounded up to a
+    /// power of two; each shard is an independent LRU with budget
+    /// `cache_bytes / shards`, so keep `cache_bytes / shards` well above a
+    /// single chunk's footprint.
+    pub shards: usize,
     /// Dynamic batcher: max queue delay before dispatch.
     pub batch_window_ms: u64,
     /// Dynamic batcher: max requests per dispatch.
     pub max_batch: usize,
-    /// Worker threads in the serving loop.
+    /// Pipeline worker threads in the serving loop (`repro serve
+    /// --workers`).  Each worker owns a `ModelSession`; the chunk store is
+    /// shared and internally synchronized, so workers overlap end-to-end.
     pub workers: usize,
+    /// Bound of the ingress request queue; submissions beyond it are
+    /// rejected (backpressure) instead of buffered.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -120,9 +130,11 @@ impl Default for ServeConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             backbone: "qwen-syn".into(),
             cache_bytes: 512 * 1024 * 1024,
+            shards: 8,
             batch_window_ms: 2,
             max_batch: 8,
             workers: 1,
+            queue_cap: 64,
         }
     }
 }
@@ -154,6 +166,16 @@ mod tests {
         assert_eq!(MethodSpec::Baseline.name(), "Baseline");
         assert_eq!(MethodSpec::ours(8).name(), "Our");
         assert_eq!(MethodSpec::ours_reorder(8).name(), "Our + Reorder");
+    }
+
+    #[test]
+    fn serve_defaults_are_coherent() {
+        let c = ServeConfig::default();
+        assert!(c.workers >= 1);
+        assert!(c.shards >= 1);
+        assert!(c.queue_cap >= c.max_batch);
+        // per-shard budget must comfortably exceed a typical chunk
+        assert!(c.cache_bytes / c.shards >= 1 << 20);
     }
 
     #[test]

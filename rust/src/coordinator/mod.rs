@@ -1,10 +1,12 @@
-//! The serving coordinator: a threaded request loop with dynamic batching,
-//! a shared chunk store, per-session state and a metrics registry.
+//! The serving coordinator: a router thread with dynamic batching feeding a
+//! pool of pipeline workers, a shared sharded chunk store, per-session state
+//! and a metrics registry.
 //!
 //! (The image's offline crate mirror has no tokio, so the event loop is
 //! built on std threads + channels — same architecture, first-party
-//! machinery: a router thread drains the request queue into batches, worker
-//! threads run the pipeline, the chunk store is shared behind a mutex.)
+//! machinery: the router drains the request queue into batches and hands
+//! them to N worker threads over a bounded work channel; each worker owns a
+//! `ModelSession`, and the chunk store synchronizes internally per shard.)
 
 pub mod batcher;
 pub mod metrics;
@@ -13,5 +15,5 @@ pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::MetricsRegistry;
-pub use server::{Request, Response, Server};
+pub use server::{Handler, Request, Response, Served, Server, ServerConfig};
 pub use session::SessionTable;

@@ -1,13 +1,31 @@
 //! The serving loop: a router thread drains a request channel through the
-//! dynamic batcher and hands batches to the pipeline worker; responses flow
-//! back over per-request channels.  Backpressure: a bounded queue rejects
-//! new work when the system is saturated.
+//! dynamic batcher and feeds a pool of pipeline workers over a bounded work
+//! channel; responses flow back over per-request channels.  Backpressure: a
+//! bounded queue rejects new work when the system is saturated.
 //!
-//! On this single-core testbed the PJRT CPU client serializes compute, so
-//! one worker thread is the right default; the architecture (router +
-//! batcher + N workers + shared store) is the multi-GPU shape.
+//! Architecture (the multi-GPU shape, running on std threads + channels):
+//!
+//! ```text
+//!  submit() ──▶ request channel ──▶ router (batcher) ──▶ work channel
+//!                                                          │ │ │
+//!                                             worker 0 ◀───┘ │ └───▶ worker N-1
+//!                                 (per-worker ModelSession; shared sharded
+//!                                  ChunkStore — locked per get/insert only,
+//!                                  never across prefill or answer)
+//! ```
+//!
+//! Worker count is the caller's choice: one pipeline handler per worker
+//! (see [`Server::spawn_pool`]).  Each drained batch is split evenly across
+//! the pool (a worker serves its sub-batch sequentially), so a burst never
+//! serializes onto one worker.  The chunk store is sharded and internally
+//! synchronized, so concurrent requests overlap end-to-end; only cache
+//! lookups/inserts serialize, and only within a shard.
+//!
+//! Shutdown is graceful and prompt: dropping the real request sender makes
+//! the router observe `Disconnected` immediately, drain what is queued into
+//! the work channel, and hang up on the workers, which drain and exit.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -20,7 +38,12 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::kvcache::ChunkStore;
 use crate::pipeline::Pipeline;
+use crate::util::json::Json;
 use crate::workload::Episode;
+
+/// How long the router parks when idle.  Shutdown does not depend on it:
+/// the parked `recv_timeout` wakes immediately when the sender drops.
+const IDLE_PARK: Duration = Duration::from_millis(50);
 
 pub struct Request {
     pub episode: Episode,
@@ -33,46 +56,145 @@ pub struct Response {
     pub answer: Vec<i32>,
     pub ttft_s: f64,
     pub total_s: f64,
-    /// Queueing delay before the pipeline picked the request up.
+    /// Queueing delay before a worker picked the request up.
     pub queue_s: f64,
 }
 
+/// What a worker computes for one request (queueing metadata is added by
+/// the worker loop when it builds the [`Response`]).
+#[derive(Clone, Debug)]
+pub struct Served {
+    pub answer: Vec<i32>,
+    pub ttft_s: f64,
+    pub total_s: f64,
+}
+
+/// Per-worker request handler.  [`Server::spawn_pool`] builds one
+/// pipeline-backed handler per worker; tests and benches inject synthetic
+/// handlers to exercise the concurrency machinery without model artifacts.
+pub type Handler = Box<dyn FnMut(&Request) -> Result<Served> + Send>;
+
+/// Queueing/batching knobs for a server instance.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batch: BatcherConfig,
+    /// Bound of the ingress request queue (backpressure limit).
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { batch: BatcherConfig::default(), queue_cap: 64 }
+    }
+}
+
+type Batch = Vec<(Request, Instant)>;
+
 struct Shared {
     metrics: MetricsRegistry,
-    shutdown: AtomicBool,
 }
 
 /// A running server instance.
 pub struct Server {
-    tx: SyncSender<(Request, Instant)>,
+    /// The one real sender; `shutdown` drops it so the router observes
+    /// `Disconnected` instead of waiting out a poll timeout.
+    tx: Option<SyncSender<(Request, Instant)>>,
     shared: Arc<Shared>,
     router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    store: Option<Arc<ChunkStore>>,
 }
 
 impl Server {
-    /// Spawn the router/worker thread over an owned pipeline + store.
+    /// Spawn a single-worker server over an owned pipeline + store
+    /// (convenience wrapper around [`Server::spawn_pool`]).
     pub fn spawn(
         pipeline: Pipeline,
         store: ChunkStore,
         batch_cfg: BatcherConfig,
         queue_cap: usize,
     ) -> Server {
-        let (tx, rx) = sync_channel::<(Request, Instant)>(queue_cap);
-        let shared = Arc::new(Shared {
-            metrics: MetricsRegistry::new(),
-            shutdown: AtomicBool::new(false),
-        });
+        Server::spawn_pool(
+            vec![pipeline],
+            store,
+            ServerConfig { batch: batch_cfg, queue_cap },
+        )
+    }
+
+    /// Spawn a router + one worker per pipeline, all sharing `store`.
+    /// Sessions are per-worker (each `Pipeline` owns its `ModelSession`);
+    /// weights and compiled executables are shared through the `Runtime`.
+    pub fn spawn_pool(
+        pipelines: Vec<Pipeline>,
+        store: ChunkStore,
+        cfg: ServerConfig,
+    ) -> Server {
+        let store = Arc::new(store);
+        let handlers: Vec<Handler> = pipelines
+            .into_iter()
+            .map(|p| {
+                let st = store.clone();
+                Box::new(move |req: &Request| -> Result<Served> {
+                    // The store lock lives inside get/insert; the batch is
+                    // served over pinned Arcs with no lock held.
+                    let (chunks, _) = p.prepare_chunks(&st, &req.episode.chunks)?;
+                    let r = p.answer(&chunks, &req.episode.prompt, req.method)?;
+                    Ok(Served {
+                        answer: r.answer,
+                        ttft_s: r.timing.ttft_s(),
+                        total_s: r.timing.total_s,
+                    })
+                }) as Handler
+            })
+            .collect();
+        let mut server = Server::spawn_handlers(handlers, cfg);
+        server.store = Some(store);
+        server
+    }
+
+    /// Spawn the router/worker machinery over arbitrary handlers — the
+    /// seam used by concurrency tests and the coordinator bench.
+    pub fn spawn_handlers(handlers: Vec<Handler>, cfg: ServerConfig) -> Server {
+        assert!(!handlers.is_empty(), "server needs at least one worker");
+        let (tx, rx) = sync_channel::<(Request, Instant)>(cfg.queue_cap);
+        let shared = Arc::new(Shared { metrics: MetricsRegistry::new() });
+        let n_workers = handlers.len();
+        // Bounded so the router backpressures instead of buffering
+        // unbounded batches ahead of slow workers.
+        let (work_tx, work_rx) = sync_channel::<Batch>(n_workers * 2);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut workers = Vec::with_capacity(n_workers);
+        for (i, mut handler) in handlers.into_iter().enumerate() {
+            let wrx = work_rx.clone();
+            let sh = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ifkv-worker-{i}"))
+                    .spawn(move || worker_loop(&mut handler, &wrx, &sh))
+                    .expect("spawning worker thread"),
+            );
+        }
         let sh = shared.clone();
-        let router = std::thread::spawn(move || {
-            router_loop(pipeline, store, batch_cfg, rx, sh);
-        });
-        Server { tx, shared, router: Some(router) }
+        let router = std::thread::Builder::new()
+            .name("ifkv-router".into())
+            .spawn(move || router_loop(cfg.batch, rx, work_tx, sh, n_workers))
+            .expect("spawning router thread");
+        Server {
+            tx: Some(tx),
+            shared,
+            router: Some(router),
+            workers,
+            store: None,
+        }
     }
 
     /// Submit a request; fails fast under backpressure.
     pub fn submit(&self, req: Request) -> Result<()> {
+        let Some(tx) = self.tx.as_ref() else {
+            return Err(anyhow!("server stopped"));
+        };
         self.shared.metrics.incr("requests_submitted");
-        match self.tx.try_send((req, Instant::now())) {
+        match tx.try_send((req, Instant::now())) {
             Ok(()) => Ok(()),
             Err(TrySendError::Full(_)) => {
                 self.shared.metrics.incr("requests_rejected");
@@ -93,10 +215,38 @@ impl Server {
         &self.shared.metrics
     }
 
+    /// The shared chunk store, when this server owns one (pipeline-backed
+    /// servers do; handler-backed test servers may not).
+    pub fn store(&self) -> Option<&ChunkStore> {
+        self.store.as_deref()
+    }
+
+    /// Registry dump plus live chunk-store stats (per-shard hit/eviction
+    /// counts and cumulative lock-wait time).
+    pub fn metrics_json(&self) -> Json {
+        let mut entries = vec![("serving", self.shared.metrics.dump())];
+        if let Some(store) = &self.store {
+            entries.push(("chunk_store", store.stats_json()));
+        }
+        Json::obj(entries)
+    }
+
+    /// Drain queued work and stop: drops the real request sender so the
+    /// router sees `Disconnected` immediately (no poll-timeout escape
+    /// hatch), flushes the batcher to the workers, and joins everything.
     pub fn shutdown(mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        drop(self.tx.clone()); // router also exits when all senders drop
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        // The Server holds the only request sender, so dropping it is the
+        // complete (and race-free) stop signal: the router drains what is
+        // buffered, hangs up on the workers, and everything joins.
+        drop(self.tx.take());
         if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -104,40 +254,32 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        if let Some(h) = self.router.take() {
-            let _ = h.join();
-        }
+        self.finish();
     }
 }
 
 fn router_loop(
-    pipeline: Pipeline,
-    store: ChunkStore,
     batch_cfg: BatcherConfig,
     rx: Receiver<(Request, Instant)>,
+    work_tx: SyncSender<Batch>,
     shared: Arc<Shared>,
+    n_workers: usize,
 ) {
-    let store = Mutex::new(store);
     let mut batcher: Batcher<(Request, Instant)> = Batcher::new(batch_cfg);
-    'outer: loop {
-        if shared.shutdown.load(Ordering::SeqCst) {
-            break;
-        }
-        // Park until there is something to do.
+    loop {
         let now = Instant::now();
-        let timeout = batcher
-            .time_to_deadline(now)
-            .unwrap_or(Duration::from_millis(50));
+        let timeout = batcher.time_to_deadline(now).unwrap_or(IDLE_PARK);
         match rx.recv_timeout(timeout) {
             Ok(item) => batcher.push(item, Instant::now()),
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                // drain what's left, then exit
+                // All senders gone (shutdown or caller dropped the server):
+                // flush the remaining queue to the workers and stop.
+                shared.metrics.incr("router_disconnect_drain");
                 while !batcher.is_empty() {
-                    serve_batch(&pipeline, &store, batcher.drain_batch(), &shared);
+                    dispatch(&mut batcher, &work_tx, &shared, n_workers);
                 }
-                break 'outer;
+                break;
             }
         }
         // opportunistically drain everything already queued
@@ -145,44 +287,317 @@ fn router_loop(
             batcher.push(item, Instant::now());
         }
         if batcher.ready(Instant::now()) {
-            let batch = batcher.drain_batch();
-            shared.metrics.observe_s("batch_size", batch.len() as f64);
-            serve_batch(&pipeline, &store, batch, &shared);
+            dispatch(&mut batcher, &work_tx, &shared, n_workers);
+        }
+    }
+    // work_tx drops here; workers drain their channel and exit.
+}
+
+fn dispatch(
+    batcher: &mut Batcher<(Request, Instant)>,
+    work_tx: &SyncSender<Batch>,
+    shared: &Shared,
+    n_workers: usize,
+) {
+    shared.metrics.observe_s("queue_depth", batcher.len() as f64);
+    let batch = batcher.drain_batch();
+    shared.metrics.observe_s("batch_size", batch.len() as f64);
+    // A worker serves its sub-batch sequentially, so a drained burst is
+    // split across the pool instead of serializing onto one worker while
+    // the rest sit idle.
+    let per = batch.len().div_ceil(n_workers).max(1);
+    let mut remaining = batch;
+    while !remaining.is_empty() {
+        let tail = remaining.split_off(per.min(remaining.len()));
+        let sub = remaining;
+        remaining = tail;
+        shared.metrics.incr("batches_dispatched");
+        if work_tx.send(sub).is_err() {
+            // every worker died; the dropped requests close their respond
+            // channels, failing the callers' recv
+            shared.metrics.incr("batches_dropped");
+            return;
         }
     }
 }
 
-fn serve_batch(
-    pipeline: &Pipeline,
-    store: &Mutex<ChunkStore>,
-    batch: Vec<(Request, Instant)>,
-    shared: &Shared,
-) {
+fn worker_loop(handler: &mut Handler, work_rx: &Mutex<Receiver<Batch>>, shared: &Shared) {
+    loop {
+        // Standard shared-receiver pattern: the lock is held across the
+        // blocking recv, which just moves the other idle workers' wait
+        // from the channel to the mutex.
+        let batch = match work_rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => break, // router hung up: no more work is coming
+        };
+        serve_batch(handler, batch, shared);
+    }
+}
+
+fn serve_batch(handler: &mut Handler, batch: Batch, shared: &Shared) {
     for (req, enq) in batch {
         let queue_s = enq.elapsed().as_secs_f64();
-        let result = {
-            let mut st = store.lock().unwrap();
-            pipeline
-                .prepare_chunks(&mut st, &req.episode.chunks)
-                .and_then(|(chunks, _)| pipeline.answer(&chunks, &req.episode.prompt, req.method))
-        };
-        match result {
-            Ok(r) => {
+        // A panicking handler must not take the worker (and with it the
+        // whole pool, silently) down: contain it, fail the one request.
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| handler(&req)));
+        match outcome {
+            Ok(Ok(s)) => {
                 shared.metrics.incr("requests_ok");
-                shared.metrics.observe_s("ttft", r.timing.ttft_s());
-                shared.metrics.observe_s("total", r.timing.total_s);
+                shared.metrics.observe_s("ttft", s.ttft_s);
+                shared.metrics.observe_s("total", s.total_s);
                 shared.metrics.observe_s("queue", queue_s);
                 let _ = req.respond.send(Response {
-                    answer: r.answer,
-                    ttft_s: r.timing.ttft_s(),
-                    total_s: r.timing.total_s,
+                    answer: s.answer,
+                    ttft_s: s.ttft_s,
+                    total_s: s.total_s,
                     queue_s,
                 });
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 shared.metrics.incr("requests_failed");
                 eprintln!("[server] request failed: {e:#}");
             }
+            Err(panic) => {
+                shared.metrics.incr("requests_failed");
+                shared.metrics.incr("handler_panics");
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                eprintln!("[server] handler panicked ({msg}); worker continues");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc::Receiver as StdReceiver;
+
+    fn test_episode() -> Episode {
+        Episode {
+            chunks: vec![vec![1, 2, 3]],
+            prompt: vec![4],
+            answer: vec![5],
+            needle_chunks: vec![],
+            task: "test",
+        }
+    }
+
+    fn instant_handler() -> Handler {
+        Box::new(|_req| {
+            Ok(Served { answer: vec![1], ttft_s: 1e-6, total_s: 1e-6 })
+        })
+    }
+
+    fn submit_one(server: &Server) -> StdReceiver<Response> {
+        let (rtx, rrx) = sync_channel(1);
+        server
+            .submit(Request {
+                episode: test_episode(),
+                method: MethodSpec::Baseline,
+                respond: rtx,
+            })
+            .unwrap();
+        rrx
+    }
+
+    #[test]
+    fn shutdown_is_prompt_via_disconnect_not_timeout() {
+        let server = Server::spawn_handlers(vec![instant_handler()], ServerConfig::default());
+        // Let the router reach its idle park so shutdown must interrupt it.
+        std::thread::sleep(Duration::from_millis(5));
+        let t0 = Instant::now();
+        server.shutdown();
+        // The old escape hatch was a 50 ms poll timeout; a disconnect-driven
+        // exit returns in well under that even on a loaded CI box.
+        assert!(
+            t0.elapsed() < Duration::from_millis(45),
+            "shutdown took {:?}: router still exits via the poll timeout",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        // A slow-ish handler plus several queued requests: shutdown must
+        // flush every one of them through the workers before returning.
+        let handler: Handler = Box::new(|_req| {
+            std::thread::sleep(Duration::from_millis(3));
+            Ok(Served { answer: vec![9], ttft_s: 1e-3, total_s: 3e-3 })
+        });
+        let server = Server::spawn_handlers(vec![handler], ServerConfig::default());
+        let receivers: Vec<_> = (0..5).map(|_| submit_one(&server)).collect();
+        server.shutdown();
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            let resp = rrx.try_recv();
+            assert!(resp.is_ok(), "request {i} was dropped during shutdown");
+            assert_eq!(resp.unwrap().answer, vec![9]);
+        }
+    }
+
+    #[test]
+    fn two_inflight_requests_overlap_across_workers() {
+        // Regression for the serialized hot path: with the store lock no
+        // longer held across answer(), two workers must be inside their
+        // handlers at the same time.
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mk = |live: Arc<AtomicUsize>, peak: Arc<AtomicUsize>| -> Handler {
+            Box::new(move |_req| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(50));
+                live.fetch_sub(1, Ordering::SeqCst);
+                Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 5e-2 })
+            })
+        };
+        let cfg = ServerConfig {
+            // max_batch 1 so the two requests land in separate batches.
+            batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            queue_cap: 16,
+        };
+        let server = Server::spawn_handlers(
+            vec![
+                mk(live.clone(), peak.clone()),
+                mk(live.clone(), peak.clone()),
+            ],
+            cfg,
+        );
+        let r1 = submit_one(&server);
+        let r2 = submit_one(&server);
+        r1.recv().unwrap();
+        r2.recv().unwrap();
+        server.shutdown();
+        assert_eq!(
+            peak.load(Ordering::SeqCst),
+            2,
+            "requests never overlapped: the serving path is still serialized"
+        );
+    }
+
+    #[test]
+    fn burst_batch_is_split_across_workers() {
+        // With the default-style batcher both requests coalesce into ONE
+        // drained batch; dispatch must split it across the pool instead of
+        // serializing it onto a single worker.
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mk = |live: Arc<AtomicUsize>, peak: Arc<AtomicUsize>| -> Handler {
+            Box::new(move |_req| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(50));
+                live.fetch_sub(1, Ordering::SeqCst);
+                Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 5e-2 })
+            })
+        };
+        let cfg = ServerConfig {
+            batch: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            queue_cap: 16,
+        };
+        let server = Server::spawn_handlers(
+            vec![
+                mk(live.clone(), peak.clone()),
+                mk(live.clone(), peak.clone()),
+            ],
+            cfg,
+        );
+        let r1 = submit_one(&server);
+        let r2 = submit_one(&server);
+        r1.recv().unwrap();
+        r2.recv().unwrap();
+        server.shutdown();
+        assert_eq!(
+            peak.load(Ordering::SeqCst),
+            2,
+            "a bursty batch was served sequentially by one worker"
+        );
+    }
+
+    #[test]
+    fn failed_requests_are_counted_not_answered() {
+        let handler: Handler = Box::new(|_req| Err(anyhow!("synthetic failure")));
+        let server = Server::spawn_handlers(vec![handler], ServerConfig::default());
+        let rrx = submit_one(&server);
+        assert!(rrx.recv().is_err(), "failed request must drop the respond channel");
+        assert_eq!(server.metrics().counter("requests_failed"), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_handler_fails_one_request_not_the_worker() {
+        // A panic inside the handler must be contained: the panicking
+        // request's caller gets a dropped channel, and the SAME worker
+        // keeps serving subsequent requests.
+        let mut calls = 0u32;
+        let handler: Handler = Box::new(move |_req| {
+            calls += 1;
+            if calls == 1 {
+                panic!("synthetic handler panic");
+            }
+            Ok(Served { answer: vec![2], ttft_s: 1e-6, total_s: 1e-6 })
+        });
+        let server = Server::spawn_handlers(vec![handler], ServerConfig::default());
+        let r1 = submit_one(&server);
+        assert!(r1.recv().is_err(), "panicked request must drop its respond channel");
+        let r2 = submit_one(&server);
+        assert_eq!(
+            r2.recv().expect("worker must survive the panic").answer,
+            vec![2]
+        );
+        assert_eq!(server.metrics().counter("handler_panics"), 1);
+        assert_eq!(server.metrics().counter("requests_ok"), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_saturated() {
+        // One wedged worker + a tiny ingress queue: the system can absorb
+        // only worker(1) + work channel + ingress queue(1); beyond that,
+        // submit must reject instead of blocking the caller.
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let handler: Handler = Box::new(move |_req| {
+            gate_rx.recv().map_err(|_| anyhow!("gate closed"))?;
+            Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 1e-3 })
+        });
+        let cfg = ServerConfig {
+            batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            queue_cap: 1,
+        };
+        let server = Server::spawn_handlers(vec![handler], cfg);
+        let mut rejected = 0u64;
+        let mut receivers = Vec::new();
+        for _ in 0..200 {
+            let (rtx, rrx) = sync_channel(1);
+            match server.submit(Request {
+                episode: test_episode(),
+                method: MethodSpec::Baseline,
+                respond: rtx,
+            }) {
+                Ok(()) => receivers.push(rrx),
+                Err(_) => {
+                    rejected += 1;
+                    if rejected >= 3 {
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(rejected >= 3, "server absorbed 200 requests with a wedged worker");
+        assert_eq!(server.metrics().counter("requests_rejected"), rejected);
+        // Release exactly one permit per accepted request so shutdown can
+        // drain them all (each handler call consumes one).
+        for _ in 0..receivers.len() {
+            gate_tx.send(()).unwrap();
+        }
+        server.shutdown();
+        for (i, rrx) in receivers.into_iter().enumerate() {
+            assert!(rrx.try_recv().is_ok(), "accepted request {i} never served");
         }
     }
 }

@@ -22,11 +22,11 @@ pub struct EvalOutcome {
 /// Runs episodes through a pipeline under one method, aggregating metrics.
 pub struct EvalRunner<'a> {
     pub pipeline: &'a Pipeline,
-    pub store: &'a mut ChunkStore,
+    pub store: &'a ChunkStore,
 }
 
 impl<'a> EvalRunner<'a> {
-    pub fn new(pipeline: &'a Pipeline, store: &'a mut ChunkStore) -> Self {
+    pub fn new(pipeline: &'a Pipeline, store: &'a ChunkStore) -> Self {
         EvalRunner { pipeline, store }
     }
 

@@ -1,9 +1,10 @@
 //! Chunk-level KV cache management: the store (offline prefilled chunks,
-//! LRU + byte budget + disk persistence) and the per-query assembly/layout
-//! machinery (padded context buffers, row patching, the decode buffer).
+//! sharded + internally synchronized, per-shard LRU under a byte budget,
+//! disk persistence) and the per-query assembly/layout machinery (padded
+//! context buffers, row patching, the decode buffer).
 
 pub mod layout;
 pub mod store;
 
 pub use layout::{AssembledContext, DecodeBuffer};
-pub use store::{ChunkId, ChunkKv, ChunkStore, StoreStats};
+pub use store::{ChunkId, ChunkKv, ChunkStore, StoreStats, DEFAULT_SHARDS};

@@ -2,17 +2,36 @@
 //! with LRU eviction under a byte budget, pin counting, hit/miss accounting
 //! and a simple binary persistence format so caches survive restarts
 //! (the paper's "prefetched offline and reused across queries" regime).
+//!
+//! The store is internally synchronized and sharded by [`ChunkId`] so the
+//! multi-worker coordinator can hit it concurrently: every operation takes
+//! `&self`, locks exactly one shard, and holds the lock only for the
+//! get/insert itself — never across prefill or answer.  Recency is tracked
+//! with a per-shard monotonic counter (O(1) touch; eviction scans the shard
+//! for the oldest unpinned entry, which is rare and shard-local), replacing
+//! the old `Vec::position` LRU list.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::tensor::TensorF;
+use crate::util::json::Json;
 
 pub type ChunkId = u64;
+
+/// Default shard count: enough to keep 4-8 workers from contending while
+/// keeping per-shard budgets comfortably larger than a chunk.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Largest tensor rank the persistence format will accept (real chunk KV is
+/// rank 4); guards `load` against allocating from garbage headers.
+const MAX_RANK: usize = 8;
 
 /// An immutable prefilled chunk: tokens + chunk-local KV states.
 #[derive(Clone, Debug)]
@@ -61,100 +80,228 @@ pub struct StoreStats {
     pub bytes: usize,
 }
 
-/// LRU chunk cache with a byte budget. Entries handed out as `Arc` stay
-/// alive while in use; eviction skips entries that are externally pinned.
-pub struct ChunkStore {
+impl StoreStats {
+    fn merge(&mut self, other: &StoreStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+        self.bytes += other.bytes;
+    }
+}
+
+struct Entry {
+    chunk: Arc<ChunkKv>,
+    /// Shard-local recency tick; larger = more recently used.
+    last_used: u64,
+}
+
+struct Shard {
     budget_bytes: usize,
-    entries: HashMap<ChunkId, Arc<ChunkKv>>,
-    /// LRU order: front = oldest.
-    order: Vec<ChunkId>,
+    entries: HashMap<ChunkId, Entry>,
+    /// Resident bytes, maintained incrementally.
+    bytes: usize,
+    /// Monotonic recency counter.
+    tick: u64,
     stats: StoreStats,
 }
 
-impl ChunkStore {
-    pub fn new(budget_bytes: usize) -> ChunkStore {
-        ChunkStore {
+impl Shard {
+    fn new(budget_bytes: usize) -> Shard {
+        Shard {
             budget_bytes,
             entries: HashMap::new(),
-            order: Vec::new(),
+            bytes: 0,
+            tick: 0,
             stats: StoreStats::default(),
         }
     }
 
+    /// Evict oldest unpinned entries until the shard fits its budget.  The
+    /// entry being inserted right now carries one extra strong count (the
+    /// `Arc` that `insert()` is about to hand back).
+    fn evict_to_budget(&mut self, inserting: Option<ChunkId>) {
+        while self.bytes > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|entry| {
+                    let unpinned = if inserting == Some(*entry.0) { 2 } else { 1 };
+                    Arc::strong_count(&entry.1.chunk) == unpinned
+                })
+                .min_by_key(|entry| entry.1.last_used)
+                .map(|entry| *entry.0);
+            match victim {
+                Some(id) => {
+                    if let Some(e) = self.entries.remove(&id) {
+                        self.bytes -= e.chunk.nbytes();
+                        self.stats.evictions += 1;
+                    }
+                }
+                // Everything left is pinned by in-flight requests.
+                None => break,
+            }
+        }
+    }
+}
+
+/// Sharded LRU chunk cache with a byte budget, safe to share across worker
+/// threads as `Arc<ChunkStore>`.  Entries handed out as `Arc` stay alive
+/// while in use; eviction skips entries that are externally pinned.
+///
+/// The total budget is split evenly across shards, so it should be much
+/// larger than `shards * chunk_bytes`; pass `with_shards(budget, 1)` for the
+/// exact single-LRU semantics (useful in deterministic tests).
+pub struct ChunkStore {
+    shards: Vec<Mutex<Shard>>,
+    /// `shards.len() - 1`; shard count is always a power of two.
+    shard_mask: usize,
+    /// Cumulative nanoseconds spent waiting to acquire shard locks.
+    lock_wait_ns: AtomicU64,
+}
+
+impl ChunkStore {
+    pub fn new(budget_bytes: usize) -> ChunkStore {
+        ChunkStore::with_shards(budget_bytes, DEFAULT_SHARDS)
+    }
+
+    /// `n_shards` is rounded up to a power of two (min 1); each shard gets
+    /// `budget_bytes / n_shards`.
+    pub fn with_shards(budget_bytes: usize, n_shards: usize) -> ChunkStore {
+        let n = n_shards.max(1).next_power_of_two();
+        let per_shard = budget_bytes / n;
+        ChunkStore {
+            shards: (0..n).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
+            shard_mask: n - 1,
+            lock_wait_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_index(&self, id: ChunkId) -> usize {
+        // Content ids are already hashes, but mix anyway so adversarial or
+        // structured ids (tests use 0,1,2,..) still spread across shards.
+        let mixed = id.wrapping_mul(0x9E3779B97F4A7C15);
+        ((mixed >> 32) as usize) & self.shard_mask
+    }
+
+    /// Lock the shard owning `id`, accounting the wait time.
+    fn lock_shard(&self, id: ChunkId) -> MutexGuard<'_, Shard> {
+        let t0 = Instant::now();
+        let g = self.shards[self.shard_index(id)].lock().unwrap();
+        self.lock_wait_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        g
+    }
+
+    /// Total seconds any caller has spent blocked on shard locks.
+    pub fn lock_wait_s(&self) -> f64 {
+        self.lock_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Aggregate stats across all shards.
     pub fn stats(&self) -> StoreStats {
-        let mut s = self.stats;
-        s.bytes = self.entries.values().map(|e| e.nbytes()).sum();
-        s
+        let mut total = StoreStats::default();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            let mut s = g.stats;
+            s.bytes = g.bytes;
+            total.merge(&s);
+        }
+        total
+    }
+
+    /// Per-shard stats (hit/eviction balance, residency skew).
+    pub fn shard_stats(&self) -> Vec<StoreStats> {
+        self.shards
+            .iter()
+            .map(|shard| {
+                let g = shard.lock().unwrap();
+                let mut s = g.stats;
+                s.bytes = g.bytes;
+                s
+            })
+            .collect()
+    }
+
+    /// Stats as JSON for the serving metrics dump.
+    pub fn stats_json(&self) -> Json {
+        let agg = self.stats();
+        let shard_objs: Vec<Json> = self
+            .shard_stats()
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("hits", Json::from(s.hits as f64)),
+                    ("misses", Json::from(s.misses as f64)),
+                    ("evictions", Json::from(s.evictions as f64)),
+                    ("bytes", Json::from(s.bytes)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("hits", Json::from(agg.hits as f64)),
+            ("misses", Json::from(agg.misses as f64)),
+            ("insertions", Json::from(agg.insertions as f64)),
+            ("evictions", Json::from(agg.evictions as f64)),
+            ("bytes", Json::from(agg.bytes)),
+            ("lock_wait_ms", Json::from(self.lock_wait_s() * 1e3)),
+            ("shards", Json::Arr(shard_objs)),
+        ])
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 
     pub fn contains(&self, id: ChunkId) -> bool {
-        self.entries.contains_key(&id)
+        self.shards[self.shard_index(id)]
+            .lock()
+            .unwrap()
+            .entries
+            .contains_key(&id)
     }
 
-    pub fn get(&mut self, id: ChunkId) -> Option<Arc<ChunkKv>> {
-        match self.entries.get(&id) {
+    pub fn get(&self, id: ChunkId) -> Option<Arc<ChunkKv>> {
+        let mut guard = self.lock_shard(id);
+        let sh = &mut *guard;
+        sh.tick += 1;
+        match sh.entries.get_mut(&id) {
             Some(e) => {
-                self.stats.hits += 1;
-                let e = e.clone();
-                self.touch(id);
-                Some(e)
+                e.last_used = sh.tick;
+                sh.stats.hits += 1;
+                Some(e.chunk.clone())
             }
             None => {
-                self.stats.misses += 1;
+                sh.stats.misses += 1;
                 None
             }
         }
     }
 
-    fn touch(&mut self, id: ChunkId) {
-        if let Some(pos) = self.order.iter().position(|&x| x == id) {
-            self.order.remove(pos);
-        }
-        self.order.push(id);
-    }
-
-    pub fn insert(&mut self, chunk: ChunkKv) -> Arc<ChunkKv> {
+    pub fn insert(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
         let id = chunk.id;
         let arc = Arc::new(chunk);
-        self.entries.insert(id, arc.clone());
-        self.touch(id);
-        self.stats.insertions += 1;
-        self.evict_to_budget(Some(id));
-        arc
-    }
-
-    fn evict_to_budget(&mut self, inserting: Option<ChunkId>) {
-        let mut bytes: usize = self.entries.values().map(|e| e.nbytes()).sum();
-        let mut i = 0;
-        while bytes > self.budget_bytes && i < self.order.len() {
-            let id = self.order[i];
-            // Pinned entries (externally referenced) are not evictable. The
-            // entry being inserted right now carries one extra count (the
-            // Arc insert() is about to hand back).
-            let pin_free = if inserting == Some(id) { 2 } else { 1 };
-            let evictable = self
-                .entries
-                .get(&id)
-                .map(|e| Arc::strong_count(e) == pin_free)
-                .unwrap_or(false);
-            if evictable {
-                if let Some(e) = self.entries.remove(&id) {
-                    bytes -= e.nbytes();
-                    self.stats.evictions += 1;
-                }
-                self.order.remove(i);
-            } else {
-                i += 1;
-            }
+        let mut guard = self.lock_shard(id);
+        let sh = &mut *guard;
+        sh.tick += 1;
+        let entry = Entry { chunk: arc.clone(), last_used: sh.tick };
+        sh.bytes += arc.nbytes();
+        if let Some(old) = sh.entries.insert(id, entry) {
+            // Concurrent workers may race to prefill the same content id;
+            // last write wins and the accounting stays balanced.
+            sh.bytes -= old.chunk.nbytes();
         }
+        sh.stats.insertions += 1;
+        sh.evict_to_budget(Some(id));
+        arc
     }
 
     // -- persistence ---------------------------------------------------------
@@ -163,11 +310,18 @@ impl ChunkStore {
     //   k f32* | v f32*   (v has the same dims as k)
 
     pub fn save(&self, path: &Path) -> Result<()> {
+        // Snapshot under per-shard locks, write outside them.  Entries go
+        // out oldest-first so a reload rebuilds the same per-shard recency.
+        let mut snapshot: Vec<(u64, Arc<ChunkKv>)> = Vec::new();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            snapshot.extend(g.entries.values().map(|e| (e.last_used, e.chunk.clone())));
+        }
+        snapshot.sort_by_key(|e| (e.0, e.1.id));
         let mut f = std::fs::File::create(path)
             .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
         f.write_all(b"IFKV1\0\0\0")?;
-        for id in &self.order {
-            let e = &self.entries[id];
+        for (_, e) in &snapshot {
             f.write_all(&e.id.to_le_bytes())?;
             f.write_all(&(e.tokens.len() as u32).to_le_bytes())?;
             f.write_all(&(e.k.shape().len() as u32).to_le_bytes())?;
@@ -188,6 +342,14 @@ impl ChunkStore {
     }
 
     pub fn load(path: &Path, budget_bytes: usize) -> Result<ChunkStore> {
+        ChunkStore::load_with_shards(path, budget_bytes, DEFAULT_SHARDS)
+    }
+
+    pub fn load_with_shards(
+        path: &Path,
+        budget_bytes: usize,
+        n_shards: usize,
+    ) -> Result<ChunkStore> {
         let mut bytes = Vec::new();
         std::fs::File::open(path)
             .map_err(|e| anyhow!("opening {}: {e}", path.display()))?
@@ -195,10 +357,10 @@ impl ChunkStore {
         if bytes.len() < 8 || &bytes[..8] != b"IFKV1\0\0\0" {
             bail!("{}: bad magic", path.display());
         }
-        let mut store = ChunkStore::new(budget_bytes);
+        let store = ChunkStore::with_shards(budget_bytes, n_shards);
         let mut off = 8usize;
         let rd_u32 = |b: &[u8], o: &mut usize| -> Result<u32> {
-            if *o + 4 > b.len() {
+            if b.len() - *o < 4 {
                 bail!("truncated store file");
             }
             let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
@@ -206,20 +368,31 @@ impl ChunkStore {
             Ok(v)
         };
         while off < bytes.len() {
-            if off + 8 > bytes.len() {
+            if bytes.len() - off < 8 {
                 bail!("truncated chunk header");
             }
             let id = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
             off += 8;
             let n_tokens = rd_u32(&bytes, &mut off)? as usize;
             let rank = rd_u32(&bytes, &mut off)? as usize;
+            if rank > MAX_RANK {
+                bail!("implausible tensor rank {rank} (corrupt file?)");
+            }
             let mut dims = Vec::with_capacity(rank);
             for _ in 0..rank {
                 dims.push(rd_u32(&bytes, &mut off)? as usize);
             }
-            let n_kv: usize = dims.iter().product();
-            let need = n_tokens * 4 + 2 * n_kv * 4;
-            if off + need > bytes.len() {
+            // All size arithmetic checked: garbage headers must produce an
+            // error, not an overflow-wrapped bound that lets slicing panic.
+            let n_kv = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow!("tensor dims overflow (corrupt file?)"))?;
+            let need = n_tokens
+                .checked_mul(4)
+                .and_then(|t| n_kv.checked_mul(8).and_then(|kv| t.checked_add(kv)))
+                .ok_or_else(|| anyhow!("chunk size overflow (corrupt file?)"))?;
+            if bytes.len() - off < need {
                 bail!("truncated chunk body");
             }
             let mut tokens = Vec::with_capacity(n_tokens);
@@ -261,7 +434,7 @@ mod tests {
 
     #[test]
     fn hit_miss_accounting() {
-        let mut s = ChunkStore::new(usize::MAX);
+        let s = ChunkStore::new(usize::MAX);
         s.insert(mk_chunk(1, 8));
         assert!(s.get(1).is_some());
         assert!(s.get(2).is_none());
@@ -271,8 +444,9 @@ mod tests {
 
     #[test]
     fn evicts_lru_first() {
+        // Single shard: deterministic global LRU order.
         let one = mk_chunk(1, 8).nbytes();
-        let mut s = ChunkStore::new(2 * one);
+        let s = ChunkStore::with_shards(2 * one, 1);
         s.insert(mk_chunk(1, 8));
         s.insert(mk_chunk(2, 8));
         let _ = s.get(1); // make 2 the LRU
@@ -286,7 +460,7 @@ mod tests {
     #[test]
     fn pinned_entries_survive_eviction() {
         let one = mk_chunk(1, 8).nbytes();
-        let mut s = ChunkStore::new(one); // room for 1 entry
+        let s = ChunkStore::with_shards(one, 1); // room for 1 entry
         let pinned = s.insert(mk_chunk(1, 8));
         s.insert(mk_chunk(2, 8));
         // 1 is pinned (we hold an Arc) so 2 must go instead
@@ -298,6 +472,17 @@ mod tests {
     }
 
     #[test]
+    fn reinsert_same_id_keeps_bytes_balanced() {
+        let s = ChunkStore::with_shards(usize::MAX, 1);
+        let one = mk_chunk(4, 8).nbytes();
+        s.insert(mk_chunk(4, 8));
+        s.insert(mk_chunk(4, 8)); // racing double-prefill: last write wins
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats().bytes, one);
+        assert_eq!(s.stats().insertions, 2);
+    }
+
+    #[test]
     fn content_id_stable_and_sensitive() {
         let a = ChunkKv::content_id(&[1, 2, 3]);
         assert_eq!(a, ChunkKv::content_id(&[1, 2, 3]));
@@ -306,15 +491,28 @@ mod tests {
     }
 
     #[test]
+    fn entries_spread_across_shards() {
+        let s = ChunkStore::with_shards(usize::MAX, 4);
+        for i in 0..64u64 {
+            s.insert(mk_chunk(i, 8));
+        }
+        let per_shard = s.shard_stats();
+        assert_eq!(per_shard.len(), 4);
+        assert_eq!(per_shard.iter().map(|st| st.insertions).sum::<u64>(), 64);
+        let populated = per_shard.iter().filter(|st| st.bytes > 0).count();
+        assert!(populated >= 3, "ids clumped onto {populated}/4 shards");
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let dir = std::env::temp_dir().join("ifkv_store_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("chunks.bin");
-        let mut s = ChunkStore::new(usize::MAX);
+        let s = ChunkStore::new(usize::MAX);
         s.insert(mk_chunk(7, 4));
         s.insert(mk_chunk(9, 4));
         s.save(&path).unwrap();
-        let mut l = ChunkStore::load(&path, usize::MAX).unwrap();
+        let l = ChunkStore::load(&path, usize::MAX).unwrap();
         assert_eq!(l.len(), 2);
         let c = l.get(7).unwrap();
         assert_eq!(c.tokens, (0..4).collect::<Vec<i32>>());
@@ -326,11 +524,120 @@ mod tests {
     }
 
     #[test]
+    fn load_rejects_corrupt_files_without_panicking() {
+        let dir = std::env::temp_dir().join("ifkv_store_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("empty", vec![]),
+            ("bad_magic", b"NOTKV000".to_vec()),
+            ("magic_only_truncated_header", b"IFKV1\0\0\0\x01\x02".to_vec()),
+            ("truncated_after_id", {
+                let mut v = b"IFKV1\0\0\0".to_vec();
+                v.extend_from_slice(&7u64.to_le_bytes());
+                v
+            }),
+            ("absurd_rank", {
+                let mut v = b"IFKV1\0\0\0".to_vec();
+                v.extend_from_slice(&7u64.to_le_bytes());
+                v.extend_from_slice(&1u32.to_le_bytes()); // n_tokens
+                v.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+                v
+            }),
+            ("dims_product_overflow", {
+                let mut v = b"IFKV1\0\0\0".to_vec();
+                v.extend_from_slice(&7u64.to_le_bytes());
+                v.extend_from_slice(&1u32.to_le_bytes()); // n_tokens
+                v.extend_from_slice(&4u32.to_le_bytes()); // rank 4
+                for _ in 0..4 {
+                    v.extend_from_slice(&u32::MAX.to_le_bytes()); // dims
+                }
+                v
+            }),
+            ("truncated_body", {
+                let mut v = b"IFKV1\0\0\0".to_vec();
+                v.extend_from_slice(&7u64.to_le_bytes());
+                v.extend_from_slice(&8u32.to_le_bytes()); // n_tokens
+                v.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+                v.extend_from_slice(&4u32.to_le_bytes());
+                v.extend_from_slice(&4u32.to_le_bytes());
+                v.extend_from_slice(&[0u8; 12]); // far short of 8*4 + 2*16*4
+                v
+            }),
+        ];
+        for (name, data) in cases {
+            let path = dir.join(name);
+            std::fs::write(&path, &data).unwrap();
+            let res = ChunkStore::load(&path, usize::MAX);
+            assert!(res.is_err(), "{name}: corrupt file must not load");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage_tail_after_valid_chunk() {
+        let dir = std::env::temp_dir().join("ifkv_store_tail");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tail.bin");
+        let s = ChunkStore::new(usize::MAX);
+        s.insert(mk_chunk(7, 4));
+        s.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xAB; 5]); // partial next header
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ChunkStore::load(&path, usize::MAX).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn concurrent_get_insert_evict_smoke() {
+        let one = mk_chunk(0, 8).nbytes();
+        // Budget forces steady eviction churn under contention.
+        let store = Arc::new(ChunkStore::with_shards(4 * 16 * one, 4));
+        let gets = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let store = store.clone();
+            let gets = gets.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let mut pinned = Vec::new();
+                for i in 0..200u64 {
+                    let id = rng.below(48) as u64;
+                    if rng.chance(0.5) {
+                        let arc = store.insert(mk_chunk(id, 8));
+                        if rng.chance(0.2) {
+                            pinned.push(arc); // hold some pins across ops
+                        }
+                    } else {
+                        let _ = store.get(id);
+                        gets.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if i % 50 == 0 {
+                        pinned.clear();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let st = store.stats();
+        assert_eq!(st.hits + st.misses, gets.load(Ordering::Relaxed));
+        assert!(!store.is_empty());
+        // All pins are dropped; one more insert per shard settles each
+        // shard back under its budget.
+        for id in 0..64u64 {
+            store.insert(mk_chunk(id, 8));
+        }
+        assert!(store.stats().bytes <= 4 * 16 * one);
+    }
+
+    #[test]
     fn lru_property_never_exceeds_budget_when_unpinned() {
         prop::check(50, |rng: &mut Rng| {
             let one = mk_chunk(0, 8).nbytes();
             let cap = 1 + rng.below(5);
-            let mut s = ChunkStore::new(cap * one);
+            let s = ChunkStore::with_shards(cap * one, 1);
             for i in 0..20u64 {
                 s.insert(mk_chunk(i, 8));
                 if rng.chance(0.3) {
@@ -340,6 +647,25 @@ mod tests {
             prop::assert_prop(
                 s.stats().bytes <= cap * one,
                 format!("store exceeded budget: {} > {}", s.stats().bytes, cap * one),
+            )
+        });
+    }
+
+    #[test]
+    fn sharded_store_never_exceeds_total_budget() {
+        prop::check(25, |rng: &mut Rng| {
+            let one = mk_chunk(0, 8).nbytes();
+            // Per-shard budget must hold >= 1 chunk for the bound to be
+            // meaningful; total = 4 shards * cap entries each.
+            let cap = 1 + rng.below(4);
+            let total = 4 * cap * one;
+            let s = ChunkStore::with_shards(total, 4);
+            for i in 0..40u64 {
+                s.insert(mk_chunk(i, 8));
+            }
+            prop::assert_prop(
+                s.stats().bytes <= total,
+                format!("sharded store exceeded budget: {} > {total}", s.stats().bytes),
             )
         });
     }

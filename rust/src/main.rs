@@ -14,9 +14,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use infoflow_kv::bench_harness;
-use infoflow_kv::config::MethodSpec;
+use infoflow_kv::config::{MethodSpec, ServeConfig};
 use infoflow_kv::coordinator::batcher::BatcherConfig;
-use infoflow_kv::coordinator::Server;
+use infoflow_kv::coordinator::{Server, ServerConfig};
 use infoflow_kv::eval::tables::Table;
 use infoflow_kv::eval::EvalRunner;
 use infoflow_kv::kvcache::ChunkStore;
@@ -37,6 +37,8 @@ USAGE:
   repro query   [--backbone B] [--method M[:budget]] [--chunks K] [--task T] [--seed S]
   repro eval    [--backbone B] [--method M] [--dataset D] [--mode fixed|passage] [--samples N]
   repro serve   [--backbone B] [--requests N] [--rate R] [--method M]
+                [--workers W] [--shards S] [--cache-mb MB] [--queue-cap N]
+                [--max-batch N] [--batch-window-ms MS]
   repro bench   table1|...|table6|fig2|fig3|fig4|ablation|all [--samples N]
   repro cache   save|load [--path kvcache.bin] [--docs N]
 
@@ -89,14 +91,14 @@ fn cache(args: &Args) -> Result<()> {
     let op = args.positional.get(1).map(|s| s.as_str()).unwrap_or("save");
     match op {
         "save" => {
-            let mut store = ChunkStore::new(1 << 30);
+            let store = ChunkStore::new(1 << 30);
             let genr = EpisodeGen::new(pipeline.vocab.clone(), rt.manifest.model.chunk);
             let mut rng = Rng::new(args.u64_or("seed", 5)?);
             let mut chunks = Vec::new();
             for _ in 0..n_docs {
                 chunks.push(genr.onehop(&mut rng, 1).chunks[0].clone());
             }
-            let (_, spent) = pipeline.prepare_chunks(&mut store, &chunks)?;
+            let (_, spent) = pipeline.prepare_chunks(&store, &chunks)?;
             store.save(&path)?;
             println!(
                 "prefilled {n_docs} docs in {:.1} ms, saved {} ({} bytes)",
@@ -173,8 +175,8 @@ fn query(args: &Args) -> Result<()> {
     let genr = EpisodeGen::new(pipeline.vocab.clone(), rt.manifest.model.chunk);
     let e = genr.by_name(task, &mut rng, n_chunks);
 
-    let mut store = ChunkStore::new(1 << 30);
-    let (chunks, prefill_s) = pipeline.prepare_chunks(&mut store, &e.chunks)?;
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, prefill_s) = pipeline.prepare_chunks(&store, &e.chunks)?;
     let r = pipeline.answer(&chunks, &e.prompt, method)?;
     let v = &pipeline.vocab;
     println!("task    : {task} ({n_chunks} chunks, backbone {backbone})");
@@ -223,8 +225,8 @@ fn eval(args: &Args) -> Result<()> {
     );
     for ds in datasets {
         let episodes = eval_set(&pipeline.vocab, rt.manifest.model.chunk, ds, mode, samples, seed);
-        let mut store = ChunkStore::new(1 << 30);
-        let out = EvalRunner::new(&pipeline, &mut store).run(&episodes, method)?;
+        let store = ChunkStore::new(1 << 30);
+        let out = EvalRunner::new(&pipeline, &store).run(&episodes, method)?;
         table.row(vec![
             ds.name().into(),
             format!("{:.4}", out.f1),
@@ -240,7 +242,24 @@ fn eval(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
     let backbone = pick_backbone(&rt, args);
-    let pipeline = Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?;
+    let serve_defaults = ServeConfig::default();
+    let n_workers = args.usize_or("workers", serve_defaults.workers)?.max(1);
+    let shards = args.usize_or("shards", serve_defaults.shards)?;
+    let cache_bytes = args.usize_or("cache-mb", serve_defaults.cache_bytes >> 20)? << 20;
+    let batch = BatcherConfig {
+        max_batch: args.usize_or("max-batch", serve_defaults.max_batch)?,
+        max_wait: std::time::Duration::from_millis(
+            args.u64_or("batch-window-ms", serve_defaults.batch_window_ms)?,
+        ),
+    };
+    let queue_cap = args.usize_or("queue-cap", serve_defaults.queue_cap)?;
+    // One pipeline (and thus one ModelSession) per worker; weights and
+    // compiled executables are shared through the Runtime.
+    let mut pipelines = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        pipelines.push(Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?);
+    }
+    let vocab = pipelines[0].vocab.clone();
     let method = MethodSpec::parse(args.get_or("method", "ours"), args.usize_or("budget", 16)?)?;
     let cfg = TraceConfig {
         rate: args.f64_or("rate", 8.0)?,
@@ -249,16 +268,15 @@ fn serve(args: &Args) -> Result<()> {
         chunks_per_request: args.usize_or("chunks", 4)?,
         seed: args.u64_or("seed", 5)?,
     };
-    let trace = traces::generate(&pipeline.vocab, rt.manifest.model.chunk, &cfg);
-    let server = Server::spawn(
-        pipeline,
-        ChunkStore::new(1 << 30),
-        BatcherConfig::default(),
-        64,
+    let trace = traces::generate(&vocab, rt.manifest.model.chunk, &cfg);
+    let server = Server::spawn_pool(
+        pipelines,
+        ChunkStore::with_shards(cache_bytes, shards),
+        ServerConfig { batch, queue_cap },
     );
 
     println!(
-        "serving {} requests (poisson rate {}/s, {} docs, method {})...",
+        "serving {} requests (poisson rate {}/s, {} docs, method {}, {n_workers} workers, {shards} shards)...",
         cfg.n_requests, cfg.rate, cfg.doc_pool, method.name()
     );
     let t0 = std::time::Instant::now();
@@ -286,7 +304,7 @@ fn serve(args: &Args) -> Result<()> {
         ok as f64 / wall,
         f1_sum / ok.max(1) as f64
     );
-    println!("metrics: {}", server.metrics().dump().to_string_pretty());
+    println!("metrics: {}", server.metrics_json().to_string_pretty());
     server.shutdown();
     Ok(())
 }

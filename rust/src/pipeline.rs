@@ -87,9 +87,13 @@ impl Pipeline {
     /// Fetch-or-prefill every chunk of a context (the offline phase; on a
     /// warm store this is pure cache hits).  Returns pinned chunk handles
     /// and the prefill seconds spent on misses.
+    ///
+    /// The store is internally synchronized: its per-shard locks are held
+    /// only inside `get`/`insert`, never across `prefill_chunk`, so worker
+    /// threads sharing one store prefill different chunks concurrently.
     pub fn prepare_chunks(
         &self,
-        store: &mut ChunkStore,
+        store: &ChunkStore,
         chunk_tokens: &[Vec<i32>],
     ) -> Result<(Vec<Arc<ChunkKv>>, f64)> {
         let mut out = Vec::with_capacity(chunk_tokens.len());

@@ -23,23 +23,46 @@ pub fn topk(scores: &[f32], valid: &[f32], k: usize) -> Vec<usize> {
     idx
 }
 
-/// EPIC-style selection: the first `ceil(budget / n_chunks)` rows of every
-/// chunk (document-boundary tokens), truncated to `budget` in chunk order.
+/// EPIC-style selection: an even split of `budget` across chunk-initial
+/// tokens (document-boundary rows), in chunk-major order.  Budget left over
+/// by chunks shorter than their share is redistributed across the remaining
+/// chunks, so the full budget is always spent: the result has exactly
+/// `budget.min(total_rows)` rows.
 pub fn epic(chunk_lens: &[usize], budget: usize) -> Vec<usize> {
+    let total: usize = chunk_lens.iter().sum();
+    let budget = budget.min(total);
     if chunk_lens.is_empty() || budget == 0 {
         return vec![];
     }
-    let per = budget.div_ceil(chunk_lens.len());
+    // Water-filling: repeatedly split what remains evenly over the chunks
+    // that still have unclaimed rows.  Each round either exhausts the
+    // budget or saturates at least one chunk, so this terminates in at
+    // most `chunk_lens.len()` rounds.
+    let mut take = vec![0usize; chunk_lens.len()];
+    let mut remaining = budget;
+    while remaining > 0 {
+        let unsaturated: Vec<usize> = (0..chunk_lens.len())
+            .filter(|&i| take[i] < chunk_lens[i])
+            .collect();
+        if unsaturated.is_empty() {
+            break;
+        }
+        let per = remaining.div_ceil(unsaturated.len());
+        for i in unsaturated {
+            let add = per.min(chunk_lens[i] - take[i]).min(remaining);
+            take[i] += add;
+            remaining -= add;
+            if remaining == 0 {
+                break;
+            }
+        }
+    }
     let mut out = Vec::with_capacity(budget);
     let mut base = 0usize;
-    for &len in chunk_lens {
-        for t in 0..per.min(len) {
-            out.push(base + t);
-        }
+    for (i, &len) in chunk_lens.iter().enumerate() {
+        out.extend(base..base + take[i]);
         base += len;
     }
-    // Keep chunk-major order but cap the total.
-    out.truncate(budget);
     out
 }
 
@@ -98,9 +121,20 @@ mod tests {
     fn epic_picks_chunk_heads() {
         // 2 chunks of 4, budget 4 -> first 2 of each
         assert_eq!(epic(&[4, 4], 4), vec![0, 1, 4, 5]);
-        // budget 3 -> truncate chunk-major
+        // budget 3 -> the first chunk gets the odd row out
         assert_eq!(epic(&[4, 4], 3), vec![0, 1, 4]);
         assert_eq!(epic(&[], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn epic_redistributes_short_chunk_leftovers() {
+        // Chunk 0 saturates at 1 row; its unused share must flow to chunk 1
+        // so the whole budget is spent (the old code returned 4 rows here).
+        assert_eq!(epic(&[1, 8], 6), vec![0, 1, 2, 3, 4, 5]);
+        // Budget larger than the context selects everything.
+        assert_eq!(epic(&[2, 2], 10), vec![0, 1, 2, 3]);
+        // Middle chunk short, both neighbors absorb the leftovers.
+        assert_eq!(epic(&[4, 1, 4], 9), vec![0, 1, 2, 3, 4, 5, 6, 7, 8]);
     }
 
     #[test]
@@ -165,7 +199,10 @@ mod tests {
             let n: usize = lens.iter().sum();
             let budget = rng.below(n + 8);
             let sel = epic(&lens, budget);
-            prop::assert_prop(sel.len() <= budget, "over budget")?;
+            prop::assert_prop(
+                sel.len() == budget.min(n),
+                format!("budget not spent: {} != {}", sel.len(), budget.min(n)),
+            )?;
             let mut sorted = sel.clone();
             sorted.sort_unstable();
             sorted.dedup();

@@ -66,8 +66,8 @@ fn all_methods_answer_and_select_within_bounds() {
     let genr = EpisodeGen::new(p.vocab.clone(), rt.manifest.model.chunk);
     let mut rng = Rng::new(2);
     let e = genr.onehop(&mut rng, 4);
-    let mut store = ChunkStore::new(1 << 30);
-    let (chunks, _) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
     let n: usize = e.chunks.iter().map(|c| c.len()).sum();
     for method in [
         MethodSpec::Baseline,
@@ -107,10 +107,10 @@ fn chunk_cache_hits_across_queries() {
     let genr = EpisodeGen::new(p.vocab.clone(), rt.manifest.model.chunk);
     let mut rng = Rng::new(3);
     let e = genr.onehop(&mut rng, 4);
-    let mut store = ChunkStore::new(1 << 30);
-    let (_, cold_s) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+    let store = ChunkStore::new(1 << 30);
+    let (_, cold_s) = p.prepare_chunks(&store, &e.chunks).unwrap();
     assert!(cold_s > 0.0, "cold prepare must prefill");
-    let (_, warm_s) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+    let (_, warm_s) = p.prepare_chunks(&store, &e.chunks).unwrap();
     assert_eq!(warm_s, 0.0, "warm prepare must be pure cache hits");
     assert_eq!(store.stats().hits, 4);
 }
@@ -127,8 +127,8 @@ fn full_budget_recompute_tracks_baseline_logits() {
     for seed in 0..total {
         let mut rng = Rng::new(100 + seed);
         let e = genr.onehop(&mut rng, 2); // 128 ctx rows = 2 waves of 64
-        let mut store = ChunkStore::new(1 << 30);
-        let (chunks, _) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+        let store = ChunkStore::new(1 << 30);
+        let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
         let baseline = p.answer(&chunks, &e.prompt, MethodSpec::Baseline).unwrap();
         let full = p
             .answer(&chunks, &e.prompt, MethodSpec::ours(128))
@@ -149,12 +149,12 @@ fn selection_prefers_needle_chunk_under_global() {
     let (rt, p) = require_artifacts!();
     let chunk = rt.manifest.model.chunk;
     let mut rng = Rng::new(4);
-    let mut store = ChunkStore::new(1 << 30);
+    let store = ChunkStore::new(1 << 30);
     let mut hits = 0usize;
     let total = 8;
     for _ in 0..total {
         let e = needle_episode(&p.vocab, chunk, &mut rng, 4, 0.6);
-        let (chunks, _) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+        let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
         let r = p.answer(&chunks, &e.prompt, MethodSpec::ours(16)).unwrap();
         if r.selected.iter().any(|&row| e.needle_chunks.contains(&(row / chunk))) {
             hits += 1;
@@ -172,8 +172,8 @@ fn geometry_configs_produce_different_selections() {
     let chunk = rt.manifest.model.chunk;
     let mut rng = Rng::new(5);
     let e = needle_episode(&p.vocab, chunk, &mut rng, 4, 0.7);
-    let mut store = ChunkStore::new(1 << 30);
-    let (chunks, _) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
     let mut sets = vec![];
     for g in RopeGeometry::ALL {
         let r = p
@@ -202,8 +202,8 @@ fn reorder_moves_chunks_and_answers() {
     let mut any_moved = false;
     for _ in 0..4 {
         let e = genr.onehop(&mut rng, 4);
-        let mut store = ChunkStore::new(1 << 30);
-        let (chunks, _) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+        let store = ChunkStore::new(1 << 30);
+        let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
         let r = p.answer(&chunks, &e.prompt, MethodSpec::ours_reorder(16)).unwrap();
         assert_eq!(r.chunk_order.len(), 4);
         let mut sorted = r.chunk_order.clone();
@@ -243,6 +243,43 @@ fn server_roundtrip_with_batching() {
 }
 
 #[test]
+fn server_pool_shares_store_across_workers() {
+    // Two workers, one sharded store: the same document pool must be
+    // prefilled once and then served as cache hits by either worker.
+    let Some((rt, p1)) = pipeline() else {
+        eprintln!("artifacts/ not built; skipping integration test");
+        return;
+    };
+    use infoflow_kv::coordinator::{Server, ServerConfig};
+    let backbone = rt.backbone_names().first().cloned().unwrap();
+    let p2 = Pipeline::new(ModelSession::new(rt.clone(), &backbone).unwrap()).unwrap();
+    let genr = EpisodeGen::new(p1.vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        vec![p1, p2],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let mut rng = Rng::new(9);
+    // The same episode served repeatedly: every chunk after round one is a hit.
+    let episodes: Vec<_> = (0..3).map(|_| genr.onehop(&mut rng, 2)).collect();
+    for round in 0..2 {
+        for e in &episodes {
+            let resp = server.query(e.clone(), MethodSpec::ours(8)).unwrap();
+            assert!(!resp.answer.is_empty(), "round {round}: empty answer");
+        }
+    }
+    // 2 rounds x 3 episodes = 6 queries, each touching 2 chunks.
+    assert_eq!(server.metrics().counter("requests_ok"), 6);
+    let stats = server.store().expect("pool server owns a store").stats();
+    assert_eq!(stats.hits + stats.misses, 12, "every chunk goes through the store");
+    // 3 episodes x 2 chunks prefill at most once each (identical chunk
+    // content across episodes dedupes further); everything else must hit.
+    assert!(stats.misses <= 6, "round-two queries re-prefilled cached chunks");
+    assert!(stats.hits >= 6, "the warm round must be pure cache hits");
+    server.shutdown();
+}
+
+#[test]
 fn bucket_padding_does_not_change_results() {
     // A 3-chunk (192-token) context lands in the 256 bucket with 64 pad
     // rows; answers must match running the same context as 4 chunks worth
@@ -253,8 +290,8 @@ fn bucket_padding_does_not_change_results() {
     let mut rng = Rng::new(8);
     let e = genr.onehop(&mut rng, 3);
     let run = || {
-        let mut store = ChunkStore::new(1 << 30);
-        let (chunks, _) = p.prepare_chunks(&mut store, &e.chunks).unwrap();
+        let store = ChunkStore::new(1 << 30);
+        let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
         p.answer(&chunks, &e.prompt, MethodSpec::ours(16)).unwrap()
     };
     let a = run();
