@@ -39,7 +39,7 @@ fn main() {
 
     // KV assembly of 8 chunks into the 512 bucket
     let chunks: Vec<_> = (0..8).map(|i| mk_chunk(&mut rng, i, &d)).collect();
-    bench.run("assemble/8x64->512", || {
+    let _ = bench.run("assemble/8x64->512", || {
         AssembledContext::new(&d, 512, &chunks).unwrap()
     });
 
@@ -50,25 +50,25 @@ fn main() {
     let nv = nk.clone();
     let slots: Vec<i32> = (0..s as i32).map(|i| i * 8).collect();
     let gpos: Vec<i32> = (0..s as i32).map(|i| i * 8).collect();
-    bench.run("patch/64rows", || {
-        ctx.patch(&slots, &gpos, s, &nk, &nv);
+    let _ = bench.run("patch/64rows", || {
+        ctx.patch(&slots, &gpos, s, &nk, &nv).unwrap();
     });
 
     // top-k selection over 512 scores
     let scores: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
     let valid = vec![1.0f32; 512];
-    bench.run("topk/512->64", || selection::topk(&scores, &valid, 64));
+    let _ = bench.run("topk/512->64", || selection::topk(&scores, &valid, 64));
 
     // geometry layouts
     let lens = vec![64usize; 8];
     for g in RopeGeometry::ALL {
-        bench.run(&format!("geometry/{}", g.name()), || {
+        let _ = bench.run(&format!("geometry/{}", g.name()), || {
             geometry::layout(g, &lens, 16)
         });
     }
 
     // batcher throughput
-    bench.run("batcher/push+drain 256", || {
+    let _ = bench.run("batcher/push+drain 256", || {
         let mut b = Batcher::new(BatcherConfig { max_batch: 8, ..Default::default() });
         let now = Instant::now();
         for i in 0..256 {
@@ -82,7 +82,7 @@ fn main() {
     });
 
     // chunk store churn (single thread)
-    bench.run("store/insert+get 64", || {
+    let _ = bench.run("store/insert+get 64", || {
         let store = ChunkStore::new(1 << 24);
         let mut r = Rng::new(2);
         for i in 0..64u64 {
@@ -98,7 +98,7 @@ fn main() {
     });
 
     // sharded store under 4-thread contention
-    bench.run("store/4-thread insert+get 256", || {
+    let _ = bench.run("store/4-thread insert+get 256", || {
         let store = std::sync::Arc::new(ChunkStore::with_shards(1 << 26, 8));
         let mut handles = Vec::new();
         for t in 0..4u64 {

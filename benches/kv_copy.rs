@@ -1,0 +1,125 @@
+//! Copy-count bench for the assemble-once, pooled context-buffer path
+//! (pure host — no model artifacts needed).
+//!
+//! Measures one simulated query's buffer work under two regimes and prints
+//! the `kvcache::counters` deltas alongside wall time:
+//!
+//! * `legacy`: assemble → reassemble after reorder → host DecodeBuffer →
+//!   whole-buffer literal conversion per decode step (the pre-refactor
+//!   shape: 3 full-context copies + T-sized uploads every token).
+//! * `pooled`: pool checkout (reused allocation) → in-place permutation →
+//!   in-place patch → resident decode literal built once → one-row updates
+//!   per token (1 full-context copy, 1 full upload, done).
+
+use std::sync::Arc;
+
+use infoflow_kv::kvcache::{counters, AssembledContext, BufferPool, ChunkKv, DecodeBuffer};
+use infoflow_kv::manifest::ModelDims;
+use infoflow_kv::runtime::resident::ResidentDecodeKv;
+use infoflow_kv::runtime::tensor_f_to_literal;
+use infoflow_kv::tensor::TensorF;
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::util::stats::Bench;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 144, d_model: 64, n_layers: 4, n_heads: 4, head_dim: 16,
+        d_ff: 128, rope_theta: 10000.0, chunk: 64, prompt_len: 16,
+        sel_budget: 64, answer_buf: 8, dev_layers: 2,
+    }
+}
+
+fn mk_chunk(rng: &mut Rng, id: u64, d: &ModelDims) -> Arc<ChunkKv> {
+    let shape = [d.n_layers, d.chunk, d.n_heads, d.head_dim];
+    let n: usize = shape.iter().product();
+    Arc::new(ChunkKv {
+        id,
+        tokens: (0..d.chunk).map(|_| 16 + rng.below(120) as i32).collect(),
+        k: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
+        v: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
+    })
+}
+
+fn main() {
+    let d = dims();
+    let bucket = 512usize;
+    let mut rng = Rng::new(7);
+    let chunks: Vec<_> = (0..8).map(|i| mk_chunk(&mut rng, i, &d)).collect();
+    let order = vec![3usize, 0, 7, 2, 6, 1, 5, 4];
+    let n_steps = d.answer_buf;
+    let s = d.sel_budget;
+    let sel_shape = [d.n_layers, s, d.n_heads, d.head_dim];
+    let nk = TensorF::full(&sel_shape, 0.5);
+    let nv = TensorF::full(&sel_shape, -0.5);
+    let slots: Vec<i32> = (0..s as i32).map(|i| i * 8).collect();
+    let pshape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+    let pk = TensorF::full(&pshape, 0.25);
+    let pv = TensorF::full(&pshape, -0.25);
+    let ppos: Vec<i32> = (512..512 + d.prompt_len as i32).collect();
+    let row_shape = [d.n_layers, d.n_heads, d.head_dim];
+    let new_row = TensorF::full(&row_shape, 0.125);
+    let bench = Bench::new(2, 10);
+
+    // -- legacy: fresh allocations + reassembly + per-step full conversion --
+    let legacy = || {
+        let ctx = AssembledContext::new(&d, bucket, &chunks).unwrap();
+        drop(ctx); // discarded after the reorder score pass
+        let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
+        let mut ctx = AssembledContext::new(&d, bucket, &permuted).unwrap();
+        ctx.patch(&slots, &slots, s, &nk, &nv).unwrap();
+        let mut buf = DecodeBuffer::new(&d, &ctx, &pk, &pv, &ppos);
+        for _ in 0..n_steps {
+            // pre-refactor decode step: whole [L, T, H, Dh] -> literal
+            let _k = tensor_f_to_literal(&buf.k).unwrap();
+            let _v = tensor_f_to_literal(&buf.v).unwrap();
+            buf.append(&new_row, &new_row).unwrap();
+        }
+        buf.capacity()
+    };
+    let before = counters::snapshot();
+    legacy();
+    let legacy_delta = counters::snapshot().since(&before);
+    let _ = bench.run("kv_copy/legacy 8x64->512 reorder+patch", legacy);
+
+    // -- pooled: assemble once, mutate in place, resident decode ------------
+    let pool = BufferPool::new();
+    let pooled = || {
+        let mut ctx = pool.checkout(&d, bucket, &chunks).unwrap();
+        ctx.permute_chunks_in_place(&order).unwrap();
+        ctx.patch(&slots, &slots, s, &nk, &nv).unwrap();
+        let mut kv = ResidentDecodeKv::from_context(&d, &ctx, &pk, &pv, &ppos).unwrap();
+        drop(ctx);
+        for _ in 0..n_steps {
+            kv.append(&new_row, &new_row).unwrap();
+        }
+        kv.capacity()
+    };
+    pooled(); // warm the pool so the measured path is steady-state
+    let before = counters::snapshot();
+    pooled();
+    let pooled_delta = counters::snapshot().since(&before);
+    let _ = bench.run("kv_copy/pooled 8x64->512 reorder+patch", pooled);
+
+    println!(
+        "      legacy: {} full KV copies, {} ctx allocs, 2x{} per-step full-buffer \
+         literal conversions / query",
+        legacy_delta.full_kv_copies, legacy_delta.ctx_allocs, n_steps
+    );
+    println!(
+        "      pooled: {} full KV copies, {} ctx allocs, {} full uploads, {} row updates / query",
+        pooled_delta.full_kv_copies,
+        pooled_delta.ctx_allocs,
+        pooled_delta.decode_uploads_full,
+        pooled_delta.decode_row_updates
+    );
+    assert_eq!(
+        pooled_delta.full_kv_copies, 1,
+        "steady-state pooled path must do exactly ONE full-context copy"
+    );
+    assert_eq!(pooled_delta.ctx_allocs, 0, "steady-state pooled path must not allocate");
+    assert_eq!(
+        pooled_delta.decode_uploads_full, 1,
+        "resident decode must build its literal exactly once"
+    );
+    assert_eq!(legacy_delta.full_kv_copies, 3, "the legacy path really was 3 copies");
+}

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         let delta = TensorI::zeros(&[bucket]);
         let gpos = TensorI::from_vec(&[bucket], (0..bucket as i32).collect())?;
         let valid = TensorF::full(&[bucket], 1.0);
-        bench.run(&format!("recompute_exec/bucket{bucket}/S{s}"), || {
+        let _ = bench.run(&format!("recompute_exec/bucket{bucket}/S{s}"), || {
             pipeline
                 .session
                 .recompute(bucket, &st, &sg, &ss, &sv, &ck, &cv, &delta, &gpos, &valid)
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         let toks = TensorI::from_vec(&[np], (0..np).map(|_| 16 + rng.below(120) as i32).collect())?;
         let pos = TensorI::from_vec(&[np], (0..np as i32).collect())?;
         let val = TensorF::full(&[np], 1.0);
-        bench.run(&format!("full_prefill/bucket{bucket}"), || {
+        let _ = bench.run(&format!("full_prefill/bucket{bucket}"), || {
             pipeline.session.full_prefill(bucket, &toks, &pos, &val).unwrap()
         });
     }
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     let store = ChunkStore::new(1 << 30);
     let (chunks, _) = pipeline.prepare_chunks(&store, &e.chunks)?;
     for budget in [4usize, 16, 64] {
-        bench.run(&format!("pipeline_ours/512tok/budget{budget}"), || {
+        let _ = bench.run(&format!("pipeline_ours/512tok/budget{budget}"), || {
             pipeline
                 .answer(&chunks, &e.prompt, MethodSpec::ours(budget))
                 .unwrap()

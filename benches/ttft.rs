@@ -6,7 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use infoflow_kv::config::MethodSpec;
-use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::kvcache::{counters, ChunkStore};
 use infoflow_kv::pipeline::Pipeline;
 use infoflow_kv::runtime::exec::ModelSession;
 use infoflow_kv::runtime::Runtime;
@@ -38,9 +38,22 @@ fn main() -> anyhow::Result<()> {
             ("cacheblend16", MethodSpec::CacheBlend { budget: 16 }),
             ("epic16", MethodSpec::Epic { budget: 16 }),
         ] {
-            bench.run(&format!("ttft/{}chunks/{name}", n_chunks), || {
+            let _ = bench.run(&format!("ttft/{}chunks/{name}", n_chunks), || {
                 pipeline.answer(&chunks, &e.prompt, method).unwrap()
             });
+            // Steady-state copy accounting for one more warm query: the
+            // assemble-once + resident-decode contract in hard numbers.
+            let before = counters::snapshot();
+            let r = pipeline.answer(&chunks, &e.prompt, method).unwrap();
+            let delta = counters::snapshot().since(&before);
+            println!(
+                "      {name}: {} full KV copies, {} full decode uploads, \
+                 {} row updates ({} tokens)",
+                delta.full_kv_copies,
+                delta.decode_uploads_full,
+                delta.decode_row_updates,
+                r.answer.len()
+            );
         }
     }
     Ok(())

@@ -1,16 +1,86 @@
 //! Serving metrics registry: counters + latency histograms, lock-cheap and
 //! dumpable as JSON for the harness.
+//!
+//! Latency series are **bounded reservoirs** (Vitter's Algorithm R, capacity
+//! [`RESERVOIR_CAP`]): under sustained load memory stays constant while the
+//! reservoir remains a uniform sample of everything observed.  Mean is
+//! exact (running sum); percentiles come from the sample.  Summaries clone
+//! the bounded sample and sort OUTSIDE the lock, so a slow dump never
+//! stalls the serving threads mid-`observe`.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::stats::percentile;
+
+/// Max samples retained per latency series.
+pub const RESERVOIR_CAP: usize = 1024;
+
+/// Uniform sample of an unbounded observation stream (Algorithm R).
+struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    sum: f64,
+}
+
+impl Reservoir {
+    fn new() -> Reservoir {
+        Reservoir { samples: Vec::new(), seen: 0, sum: 0.0 }
+    }
+
+    fn observe(&mut self, x: f64, rng: &mut Rng) {
+        self.seen += 1;
+        self.sum += x;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(x);
+        } else {
+            // replace a random slot with probability cap/seen
+            let j = (rng.next_u64() % self.seen) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        self.sum / self.seen as f64
+    }
+
+    /// Bounded copy for summarizing outside the lock.
+    fn snapshot(&self) -> SeriesSnapshot {
+        SeriesSnapshot {
+            samples: self.samples.clone(),
+            seen: self.seen,
+            mean: self.mean(),
+        }
+    }
+}
+
+/// A bounded copy of one series, extracted under the lock; sorting and
+/// percentile math happen on this snapshot, outside the lock.
+struct SeriesSnapshot {
+    samples: Vec<f64>,
+    seen: u64,
+    mean: f64,
+}
+
+impl SeriesSnapshot {
+    fn summarize(mut self) -> (u64, f64, f64, f64) {
+        self.samples
+            .sort_by(|a, b| a.partial_cmp(b).expect("latency samples are finite"));
+        let p50 = percentile(&self.samples, 0.5);
+        let p95 = percentile(&self.samples, 0.95);
+        (self.seen, self.mean, p50, p95)
+    }
+}
 
 #[derive(Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
-    latencies: BTreeMap<String, Vec<f64>>,
+    latencies: BTreeMap<String, Reservoir>,
+    rng: Option<Rng>,
 }
 
 /// Thread-safe metrics sink.
@@ -35,47 +105,77 @@ impl MetricsRegistry {
 
     pub fn observe_s(&self, name: &str, seconds: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.latencies.entry(name.to_string()).or_default().push(seconds);
+        let inner = &mut *g;
+        let rng = inner.rng.get_or_insert_with(|| Rng::new(0x5EED_CAFE));
+        inner
+            .latencies
+            .entry(name.to_string())
+            .or_insert_with(Reservoir::new)
+            .observe(seconds, rng);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
 
-    pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64)> {
+    /// Number of observations recorded for a latency series (may exceed the
+    /// retained reservoir size).
+    pub fn observations(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .latencies
+            .get(name)
+            .map(|r| r.seen)
+            .unwrap_or(0)
+    }
+
+    fn snapshot_series(&self, name: &str) -> Option<SeriesSnapshot> {
         let g = self.inner.lock().unwrap();
-        let xs = g.latencies.get(name)?;
-        if xs.is_empty() {
+        let r = g.latencies.get(name)?;
+        if r.samples.is_empty() {
             return None;
         }
-        let mut s = xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = s.iter().sum::<f64>() / s.len() as f64;
-        Some((mean, percentile(&s, 0.5), percentile(&s, 0.95)))
+        Some(r.snapshot())
+    }
+
+    pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64)> {
+        // clone (bounded) under the lock, sort outside it
+        let (_, mean, p50, p95) = self.snapshot_series(name)?.summarize();
+        Some((mean, p50, p95))
     }
 
     pub fn dump(&self) -> Json {
-        let g = self.inner.lock().unwrap();
-        let counters = Json::Obj(
-            g.counters
+        // Copy everything bounded out of the lock first...
+        let (counters, series) = {
+            let g = self.inner.lock().unwrap();
+            let counters: Vec<(String, u64)> =
+                g.counters.iter().map(|(k, &v)| (k.clone(), v)).collect();
+            let series: Vec<(String, SeriesSnapshot)> = g
+                .latencies
                 .iter()
-                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .filter(|(_, r)| !r.samples.is_empty())
+                .map(|(k, r)| (k.clone(), r.snapshot()))
+                .collect();
+            (counters, series)
+        };
+        // ...then sort/summarize with no lock held.
+        let counters = Json::Obj(
+            counters
+                .into_iter()
+                .map(|(k, v)| (k, Json::Num(v as f64)))
                 .collect(),
         );
         let mut lat = BTreeMap::new();
-        for (k, xs) in &g.latencies {
-            if xs.is_empty() {
-                continue;
-            }
-            let mut s = xs.clone();
-            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (k, snap) in series {
+            let (seen, mean, p50, p95) = snap.summarize();
             lat.insert(
-                k.clone(),
+                k,
                 Json::obj(vec![
-                    ("n", Json::from(s.len())),
-                    ("mean_ms", Json::from(s.iter().sum::<f64>() / s.len() as f64 * 1e3)),
-                    ("p50_ms", Json::from(percentile(&s, 0.5) * 1e3)),
-                    ("p95_ms", Json::from(percentile(&s, 0.95) * 1e3)),
+                    ("n", Json::from(seen as f64)),
+                    ("mean_ms", Json::from(mean * 1e3)),
+                    ("p50_ms", Json::from(p50 * 1e3)),
+                    ("p95_ms", Json::from(p95 * 1e3)),
                 ]),
             );
         }
@@ -96,10 +196,48 @@ mod tests {
         for i in 1..=100 {
             m.observe_s("ttft", i as f64 / 1000.0);
         }
+        // below the reservoir cap everything is exact
         let (mean, p50, p95) = m.latency_summary("ttft").unwrap();
         assert!((mean - 0.0505).abs() < 1e-9);
         assert!((p50 - 0.0505).abs() < 1e-3);
         assert!(p95 > 0.09 && p95 <= 0.1);
+    }
+
+    #[test]
+    fn sustained_load_is_bounded_and_still_representative() {
+        let m = MetricsRegistry::new();
+        let n = 100_000u64;
+        for i in 0..n {
+            // uniform ramp over [0, 1): true p50 = 0.5, p95 = 0.95
+            m.observe_s("ttft", i as f64 / n as f64);
+        }
+        assert_eq!(m.observations("ttft"), n);
+        {
+            let g = m.inner.lock().unwrap();
+            let r = g.latencies.get("ttft").unwrap();
+            assert_eq!(
+                r.samples.len(),
+                RESERVOIR_CAP,
+                "reservoir must stay bounded under sustained load"
+            );
+        }
+        let (mean, p50, p95) = m.latency_summary("ttft").unwrap();
+        // mean is exact (running sum); percentiles are sampled
+        assert!((mean - 0.5).abs() < 1e-5, "mean {mean}");
+        assert!((p50 - 0.5).abs() < 0.08, "sampled p50 {p50}");
+        assert!((p95 - 0.95).abs() < 0.05, "sampled p95 {p95}");
+        // dump reports the true observation count, not the reservoir size
+        let j = m.dump();
+        let reported_n = j
+            .get("latency")
+            .unwrap()
+            .get("ttft")
+            .unwrap()
+            .get("n")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(reported_n, n as usize);
     }
 
     #[test]

@@ -9,9 +9,10 @@
 //!  submit() ──▶ request channel ──▶ router (batcher) ──▶ work channel
 //!                                                          │ │ │
 //!                                             worker 0 ◀───┘ │ └───▶ worker N-1
-//!                                 (per-worker ModelSession; shared sharded
-//!                                  ChunkStore — locked per get/insert only,
-//!                                  never across prefill or answer)
+//!                                 (per-worker ModelSession + scratch
+//!                                  BufferPool; shared sharded ChunkStore —
+//!                                  locked per get/insert only, never across
+//!                                  prefill or answer)
 //! ```
 //!
 //! Worker count is the caller's choice: one pipeline handler per worker
@@ -36,7 +37,7 @@ use anyhow::{anyhow, Result};
 use crate::config::MethodSpec;
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::MetricsRegistry;
-use crate::kvcache::ChunkStore;
+use crate::kvcache::{ChunkStore, PoolStats};
 use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::workload::Episode;
@@ -103,6 +104,10 @@ pub struct Server {
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     store: Option<Arc<ChunkStore>>,
+    /// Per-worker buffer-pool counters (pipeline-backed servers only).  The
+    /// pools themselves move into the worker threads with their pipelines;
+    /// these shared handles let `metrics_json` report reuse rates.
+    pool_stats: Vec<Arc<PoolStats>>,
 }
 
 impl Server {
@@ -130,6 +135,11 @@ impl Server {
         cfg: ServerConfig,
     ) -> Server {
         let store = Arc::new(store);
+        // Each worker keeps its own scratch-buffer pool (inside its
+        // Pipeline); grab the stat handles before the pipelines move into
+        // the worker closures.
+        let pool_stats: Vec<Arc<PoolStats>> =
+            pipelines.iter().map(|p| p.pool.stats()).collect();
         let handlers: Vec<Handler> = pipelines
             .into_iter()
             .map(|p| {
@@ -149,6 +159,7 @@ impl Server {
             .collect();
         let mut server = Server::spawn_handlers(handlers, cfg);
         server.store = Some(store);
+        server.pool_stats = pool_stats;
         server
     }
 
@@ -185,6 +196,7 @@ impl Server {
             router: Some(router),
             workers,
             store: None,
+            pool_stats: Vec::new(),
         }
     }
 
@@ -222,11 +234,19 @@ impl Server {
     }
 
     /// Registry dump plus live chunk-store stats (per-shard hit/eviction
-    /// counts and cumulative lock-wait time).
+    /// counts and cumulative lock-wait time) and aggregated buffer-pool
+    /// reuse counters across the worker pool.
     pub fn metrics_json(&self) -> Json {
         let mut entries = vec![("serving", self.shared.metrics.dump())];
         if let Some(store) = &self.store {
             entries.push(("chunk_store", store.stats_json()));
+        }
+        if !self.pool_stats.is_empty() {
+            let agg = PoolStats::default();
+            for s in &self.pool_stats {
+                s.merge_into(&agg);
+            }
+            entries.push(("buffer_pool", agg.json()));
         }
         Json::obj(entries)
     }

@@ -1,0 +1,102 @@
+//! Copy/alloc accounting for the per-query KV hot path.
+//!
+//! The assemble-once refactor is only honest if it can prove, in a test,
+//! how many times a query's context KV was actually copied.  These counters
+//! are bumped by the layout/pool/resident-buffer machinery at every point
+//! where a full context block moves or a decode buffer crosses the literal
+//! boundary.
+//!
+//! Counters are **thread-local**: a query runs on one thread end to end
+//! (pipeline workers never split a query), and thread-locality means
+//! parallel `cargo test` threads cannot pollute each other's deltas.
+
+use std::cell::Cell;
+
+/// A point-in-time view of the current thread's copy counters.  Obtain with
+/// [`snapshot`], diff with [`CopySnapshot::since`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CopySnapshot {
+    /// Host buffer-to-buffer copies of a FULL context KV block
+    /// (`[L, bucket, H, Dh]`): chunk assembly, decode-buffer builds from a
+    /// context, and the unequal-chunk permutation fallback.
+    pub full_kv_copies: u64,
+    /// Fresh `[L, bucket, H, Dh]` K/V allocations (pool misses + explicit
+    /// `AssembledContext::new`).
+    pub ctx_allocs: u64,
+    /// Chunk assemblies into a context buffer (each is also a full copy).
+    pub ctx_assembles: u64,
+    /// In-place chunk permutations (§4.3 reorder) that did NOT fall back to
+    /// a full-buffer copy.
+    pub inplace_permutes: u64,
+    /// Whole decode-buffer (`[L, T, H, Dh]`) conversions to a literal.  The
+    /// resident path pays exactly one per query (the initial build); the
+    /// pre-refactor path paid one per decode step.
+    pub decode_uploads_full: u64,
+    /// Incremental single-row updates of a resident decode literal.
+    pub decode_row_updates: u64,
+}
+
+impl CopySnapshot {
+    /// Element-wise `self - earlier`: what happened between two snapshots.
+    pub fn since(&self, earlier: &CopySnapshot) -> CopySnapshot {
+        CopySnapshot {
+            full_kv_copies: self.full_kv_copies - earlier.full_kv_copies,
+            ctx_allocs: self.ctx_allocs - earlier.ctx_allocs,
+            ctx_assembles: self.ctx_assembles - earlier.ctx_assembles,
+            inplace_permutes: self.inplace_permutes - earlier.inplace_permutes,
+            decode_uploads_full: self.decode_uploads_full - earlier.decode_uploads_full,
+            decode_row_updates: self.decode_row_updates - earlier.decode_row_updates,
+        }
+    }
+}
+
+thread_local! {
+    static COUNTS: Cell<CopySnapshot> = const { Cell::new(CopySnapshot {
+        full_kv_copies: 0,
+        ctx_allocs: 0,
+        ctx_assembles: 0,
+        inplace_permutes: 0,
+        decode_uploads_full: 0,
+        decode_row_updates: 0,
+    }) };
+}
+
+/// Current thread's counter values.
+pub fn snapshot() -> CopySnapshot {
+    COUNTS.with(Cell::get)
+}
+
+pub(crate) fn bump(f: impl FnOnce(&mut CopySnapshot)) {
+    COUNTS.with(|c| {
+        let mut s = c.get();
+        f(&mut s);
+        c.set(s);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_diff_is_elementwise() {
+        let base = snapshot();
+        bump(|s| {
+            s.full_kv_copies += 2;
+            s.decode_row_updates += 5;
+        });
+        let d = snapshot().since(&base);
+        assert_eq!(d.full_kv_copies, 2);
+        assert_eq!(d.decode_row_updates, 5);
+        assert_eq!(d.ctx_allocs, 0);
+    }
+
+    #[test]
+    fn counters_are_thread_local() {
+        let base = snapshot();
+        std::thread::spawn(|| bump(|s| s.full_kv_copies += 100))
+            .join()
+            .unwrap();
+        assert_eq!(snapshot().since(&base).full_kv_copies, 0);
+    }
+}

@@ -1,11 +1,23 @@
 //! Per-query KV assembly: padded context buffers for a bucket, in-place row
-//! patching with recomputed KV states, and the decode buffer (context +
-//! prompt + generated rows) the decode executable consumes.
+//! patching with recomputed KV states, in-place §4.3 chunk permutation, and
+//! the decode buffer (context + prompt + generated rows).
+//!
+//! The serving path assembles each query's chunks ONCE into a pooled
+//! [`AssembledContext`] (see [`super::pool::BufferPool`]), permutes and
+//! patches that same buffer in place, and then hands it to the resident
+//! decode state (`runtime::resident`) — one full-context copy per query.
+//! [`DecodeBuffer`] remains as the fresh-allocation host-side reference
+//! implementation that the equivalence property tests diff against.
+//!
+//! Every full-context copy and allocation is recorded in
+//! [`super::counters`] so tests can assert the copy budget instead of
+//! trusting comments.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::kvcache::counters;
 use crate::kvcache::store::ChunkKv;
 use crate::manifest::ModelDims;
 use crate::tensor::{TensorF, TensorI};
@@ -25,47 +37,127 @@ pub struct AssembledContext {
     dims: (usize, usize, usize),
 }
 
+/// Permute equal-size blocks of `data` in place so that the block at index
+/// `i` afterwards holds the block that was at `order[i]`.  One save/restore
+/// per cycle; every block is written exactly once.  `bases` gives the start
+/// offset of each independent block region (one per layer for KV buffers).
+fn permute_equal_blocks<T: Copy>(
+    data: &mut [T],
+    bases: &[usize],
+    block: usize,
+    order: &[usize],
+) {
+    let k = order.len();
+    let mut tmp: Vec<T> = Vec::with_capacity(block);
+    let mut done = vec![false; k];
+    for &base in bases {
+        done.fill(false);
+        for start in 0..k {
+            if done[start] || order[start] == start {
+                done[start] = true;
+                continue;
+            }
+            tmp.clear();
+            tmp.extend_from_slice(&data[base + start * block..base + (start + 1) * block]);
+            let mut dst = start;
+            loop {
+                let src = order[dst];
+                done[dst] = true;
+                if src == start {
+                    data[base + dst * block..base + (dst + 1) * block]
+                        .copy_from_slice(&tmp);
+                    break;
+                }
+                data.copy_within(
+                    base + src * block..base + (src + 1) * block,
+                    base + dst * block,
+                );
+                dst = src;
+            }
+        }
+    }
+}
+
 impl AssembledContext {
-    pub fn new(dims: &ModelDims, bucket: usize, chunks: &[Arc<ChunkKv>]) -> Result<Self> {
+    /// A zeroed, unassembled buffer for `bucket` context rows — the unit a
+    /// [`super::pool::BufferPool`] recycles.
+    pub fn alloc(dims: &ModelDims, bucket: usize) -> Self {
         let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        counters::bump(|s| s.ctx_allocs += 1);
+        AssembledContext {
+            bucket,
+            chunk_lens: Vec::new(),
+            tokens: TensorI::zeros(&[bucket]),
+            k: TensorF::zeros(&[l, bucket, h, dh]),
+            v: TensorF::zeros(&[l, bucket, h, dh]),
+            gpos: TensorI::zeros(&[bucket]),
+            valid: TensorF::zeros(&[bucket]),
+            dims: (l, h, dh),
+        }
+    }
+
+    /// Whether this buffer can be reused for (`dims`, `bucket`).
+    pub fn matches(&self, dims: &ModelDims, bucket: usize) -> bool {
+        self.bucket == bucket
+            && self.dims == (dims.n_layers, dims.n_heads, dims.head_dim)
+    }
+
+    pub fn new(dims: &ModelDims, bucket: usize, chunks: &[Arc<ChunkKv>]) -> Result<Self> {
+        let mut ctx = AssembledContext::alloc(dims, bucket);
+        ctx.assemble_into(chunks)?;
+        Ok(ctx)
+    }
+
+    /// (Re)assemble `chunks` into this buffer, overwriting whatever query
+    /// used it before.  Rows `[0, n)` are fully rewritten from the chunks;
+    /// rows `[n, bucket)` are zeroed so a recycled buffer is bit-identical
+    /// to a freshly allocated one.  This is the ONE full-context copy the
+    /// steady-state query path performs.
+    pub fn assemble_into(&mut self, chunks: &[Arc<ChunkKv>]) -> Result<()> {
+        let (l, h, dh) = self.dims;
+        let bucket = self.bucket;
         let n: usize = chunks.iter().map(|c| c.len()).sum();
         if n > bucket {
             bail!("context of {n} tokens does not fit bucket {bucket}");
         }
-        let mut tokens = TensorI::zeros(&[bucket]);
-        let mut k = TensorF::zeros(&[l, bucket, h, dh]);
-        let mut v = TensorF::zeros(&[l, bucket, h, dh]);
-        let mut gpos = TensorI::zeros(&[bucket]);
-        let mut valid = TensorF::zeros(&[bucket]);
+        counters::bump(|s| {
+            s.ctx_assembles += 1;
+            s.full_kv_copies += 1;
+        });
         let row = h * dh;
+        // metadata: real rows from the chunks, stale padding rows cleared
         let mut at = 0usize;
         for c in chunks {
-            let clen = c.len();
-            for t in 0..clen {
-                tokens.data_mut()[at + t] = c.tokens[t];
-                gpos.data_mut()[at + t] = t as i32; // stored chunk-local
-                valid.data_mut()[at + t] = 1.0;
+            for t in 0..c.len() {
+                self.tokens.data_mut()[at + t] = c.tokens[t];
+                self.gpos.data_mut()[at + t] = t as i32; // stored chunk-local
+                self.valid.data_mut()[at + t] = 1.0;
             }
-            for li in 0..l {
+            at += c.len();
+        }
+        self.tokens.data_mut()[n..bucket].fill(0);
+        self.gpos.data_mut()[n..bucket].fill(0);
+        self.valid.data_mut()[n..bucket].fill(0.0);
+        // KV rows: copy the chunk blocks, zero the stale padding region
+        for li in 0..l {
+            let mut at = 0usize;
+            for c in chunks {
+                let clen = c.len();
                 let src = (li * clen) * row;
                 let dst = (li * bucket + at) * row;
-                v.data_mut()[dst..dst + clen * row]
-                    .copy_from_slice(&c.v.data()[src..src + clen * row]);
-                k.data_mut()[dst..dst + clen * row]
+                self.k.data_mut()[dst..dst + clen * row]
                     .copy_from_slice(&c.k.data()[src..src + clen * row]);
+                self.v.data_mut()[dst..dst + clen * row]
+                    .copy_from_slice(&c.v.data()[src..src + clen * row]);
+                at += clen;
             }
-            at += clen;
+            let pad = (li * bucket + n) * row;
+            let end = (li + 1) * bucket * row;
+            self.k.data_mut()[pad..end].fill(0.0);
+            self.v.data_mut()[pad..end].fill(0.0);
         }
-        Ok(AssembledContext {
-            bucket,
-            chunk_lens: chunks.iter().map(|c| c.len()).collect(),
-            tokens,
-            k,
-            v,
-            gpos,
-            valid,
-            dims: (l, h, dh),
-        })
+        self.chunk_lens = chunks.iter().map(|c| c.len()).collect();
+        Ok(())
     }
 
     /// Number of real (non-padding) context rows.
@@ -73,9 +165,95 @@ impl AssembledContext {
         self.chunk_lens.iter().sum()
     }
 
+    /// Apply the §4.3 reorder permutation to the assembled chunks IN PLACE:
+    /// afterwards chunk slot `i` holds what was chunk `order[i]`, exactly as
+    /// if the buffer had been reassembled from the permuted chunk list —
+    /// without the second full-context allocation + copy.
+    ///
+    /// Must be called before any rows are patched (patched `gpos` entries
+    /// refer to the pre-permutation layout).  Equal-length chunks (the only
+    /// kind the chunk store produces) move cycle-by-cycle with one chunk of
+    /// scratch; unequal lengths fall back to a counted full-buffer gather.
+    pub fn permute_chunks_in_place(&mut self, order: &[usize]) -> Result<()> {
+        let nc = self.chunk_lens.len();
+        if order.len() != nc {
+            bail!("permutation of {} entries for {nc} chunks", order.len());
+        }
+        let mut seen = vec![false; nc];
+        for &o in order {
+            if o >= nc || seen[o] {
+                bail!("order {order:?} is not a permutation of 0..{nc}");
+            }
+            seen[o] = true;
+        }
+        if order.iter().enumerate().all(|(i, &o)| i == o) {
+            return Ok(());
+        }
+        let (l, h, dh) = self.dims;
+        let row = h * dh;
+        let equal = self.chunk_lens.iter().all(|&c| c == self.chunk_lens[0]);
+        if equal {
+            let clen = self.chunk_lens[0];
+            let kv_bases: Vec<usize> = (0..l).map(|li| li * self.bucket * row).collect();
+            permute_equal_blocks(self.k.data_mut(), &kv_bases, clen * row, order);
+            permute_equal_blocks(self.v.data_mut(), &kv_bases, clen * row, order);
+            permute_equal_blocks(self.tokens.data_mut(), &[0], clen, order);
+            permute_equal_blocks(self.gpos.data_mut(), &[0], clen, order);
+            permute_equal_blocks(self.valid.data_mut(), &[0], clen, order);
+            counters::bump(|s| s.inplace_permutes += 1);
+        } else {
+            // Variable-length blocks cannot rotate in place; gather into a
+            // fresh buffer and swap (counted as a full-context copy AND an
+            // allocation, so the hot-path accounting stays honest when this
+            // slow path kicks in).
+            counters::bump(|s| s.ctx_allocs += 1);
+            let mut offsets = Vec::with_capacity(nc);
+            let mut acc = 0usize;
+            for &len in &self.chunk_lens {
+                offsets.push(acc);
+                acc += len;
+            }
+            let mut nk = TensorF::zeros(&[l, self.bucket, h, dh]);
+            let mut nv = TensorF::zeros(&[l, self.bucket, h, dh]);
+            let mut nt = TensorI::zeros(&[self.bucket]);
+            let mut ng = TensorI::zeros(&[self.bucket]);
+            let mut nva = TensorF::zeros(&[self.bucket]);
+            let mut at = 0usize;
+            for &src_chunk in order {
+                let clen = self.chunk_lens[src_chunk];
+                let src = offsets[src_chunk];
+                nt.data_mut()[at..at + clen]
+                    .copy_from_slice(&self.tokens.data()[src..src + clen]);
+                ng.data_mut()[at..at + clen]
+                    .copy_from_slice(&self.gpos.data()[src..src + clen]);
+                nva.data_mut()[at..at + clen]
+                    .copy_from_slice(&self.valid.data()[src..src + clen]);
+                for li in 0..l {
+                    let s = (li * self.bucket + src) * row;
+                    let d = (li * self.bucket + at) * row;
+                    nk.data_mut()[d..d + clen * row]
+                        .copy_from_slice(&self.k.data()[s..s + clen * row]);
+                    nv.data_mut()[d..d + clen * row]
+                        .copy_from_slice(&self.v.data()[s..s + clen * row]);
+                }
+                at += clen;
+            }
+            self.k = nk;
+            self.v = nv;
+            self.tokens = nt;
+            self.gpos = ng;
+            self.valid = nva;
+            counters::bump(|s| s.full_kv_copies += 1);
+        }
+        self.chunk_lens = order.iter().map(|&i| self.chunk_lens[i]).collect();
+        Ok(())
+    }
+
     /// Patch recomputed rows into the buffers: row `slots[i]` receives
     /// `new_k/new_v[:, i]` and its decode position becomes `sel_gpos[i]`.
-    /// Slots >= bucket (padding of the selection) are skipped.
+    /// Slots >= bucket (padding of the selection) are skipped.  Shape
+    /// mismatches are hard errors — a silent partial patch corrupts the
+    /// decode cache.
     pub fn patch(
         &mut self,
         slots: &[i32],
@@ -83,12 +261,35 @@ impl AssembledContext {
         count: usize,
         new_k: &TensorF, // [L, S, H, Dh]
         new_v: &TensorF,
-    ) {
+    ) -> Result<()> {
         let (l, h, dh) = self.dims;
         let row = h * dh;
+        if new_k.shape().len() != 4
+            || new_k.shape()[0] != l
+            || new_k.shape()[2] != h
+            || new_k.shape()[3] != dh
+        {
+            bail!(
+                "patch: new_k shape {:?} does not match [L={l}, S, H={h}, Dh={dh}]",
+                new_k.shape()
+            );
+        }
+        if new_v.shape() != new_k.shape() {
+            bail!(
+                "patch: new_v shape {:?} != new_k shape {:?}",
+                new_v.shape(),
+                new_k.shape()
+            );
+        }
         let s_cap = new_k.shape()[1];
+        if count > s_cap || count > slots.len() || count > sel_gpos.len() {
+            bail!(
+                "patch: count {count} exceeds capacity (S={s_cap}, slots={}, gpos={})",
+                slots.len(),
+                sel_gpos.len()
+            );
+        }
         for (i, (&slot, &gp)) in slots.iter().zip(sel_gpos).take(count).enumerate() {
-            debug_assert!(i < s_cap);
             let slot = slot as usize;
             if slot >= self.bucket {
                 continue;
@@ -103,12 +304,18 @@ impl AssembledContext {
             }
             self.gpos.data_mut()[slot] = gp;
         }
+        Ok(())
     }
 }
 
 /// The decode-phase KV buffer: [L, T, H, Dh] with T = bucket + prompt + answer
 /// slots.  Context rows come from an [`AssembledContext`], prompt rows from
 /// the score executable, generated rows are appended per decode step.
+///
+/// This is the fresh-allocation HOST-SIDE REFERENCE path.  Production
+/// decoding uses `runtime::resident::ResidentDecodeKv`, which keeps the same
+/// layout inside a reusable literal and updates it row-by-row; the
+/// equivalence property tests diff the two bit-for-bit.
 pub struct DecodeBuffer {
     pub k: TensorF,     // [L, T, H, Dh]
     pub v: TensorF,     // [L, T, H, Dh]
@@ -127,6 +334,7 @@ impl DecodeBuffer {
         prompt_v: &TensorF,
         prompt_pos: &[i32],
     ) -> DecodeBuffer {
+        counters::bump(|s| s.full_kv_copies += 1);
         let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
         let p = dims.prompt_len;
         let t_total = ctx.bucket + p + dims.answer_buf;
@@ -175,7 +383,8 @@ impl DecodeBuffer {
     /// Build a decode buffer from an arbitrary [L, X, H, Dh] KV block (used
     /// by the full-prefill baseline, where context + prompt KV come from one
     /// executable).  Rows [0, X) are copied; `answer_buf` empty slots are
-    /// appended; decoding continues from `next_pos`.
+    /// appended; decoding continues from `next_pos`.  Shape mismatches are
+    /// hard errors, not debug-only assertions.
     pub fn from_parts(
         dims: &ModelDims,
         k: &TensorF,
@@ -183,10 +392,27 @@ impl DecodeBuffer {
         gpos: &[i32],
         valid: &[f32],
         next_pos: i32,
-    ) -> DecodeBuffer {
+    ) -> Result<DecodeBuffer> {
         let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        if k.shape().len() != 4 || k.shape()[0] != l || k.shape()[2] != h || k.shape()[3] != dh
+        {
+            bail!(
+                "from_parts: k shape {:?} does not match [L={l}, X, H={h}, Dh={dh}]",
+                k.shape()
+            );
+        }
+        if v.shape() != k.shape() {
+            bail!("from_parts: v shape {:?} != k shape {:?}", v.shape(), k.shape());
+        }
         let x = k.shape()[1];
-        debug_assert_eq!(gpos.len(), x);
+        if gpos.len() != x || valid.len() != x {
+            bail!(
+                "from_parts: gpos/valid lengths ({}, {}) != {x} KV rows",
+                gpos.len(),
+                valid.len()
+            );
+        }
+        counters::bump(|s| s.full_kv_copies += 1);
         let t_total = x + dims.answer_buf;
         let row = h * dh;
         let mut kk = TensorF::zeros(&[l, t_total, h, dh]);
@@ -203,7 +429,7 @@ impl DecodeBuffer {
         let mut val = TensorF::zeros(&[t_total]);
         g.data_mut()[..x].copy_from_slice(gpos);
         val.data_mut()[..x].copy_from_slice(valid);
-        DecodeBuffer {
+        Ok(DecodeBuffer {
             k: kk,
             v: vv,
             gpos: g,
@@ -211,7 +437,7 @@ impl DecodeBuffer {
             next_row: x,
             next_pos,
             dims: (l, h, dh),
-        }
+        })
     }
 
     /// Append a generated token's KV row (from a decode step).
@@ -241,6 +467,7 @@ impl DecodeBuffer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::{prop, rng::Rng};
 
     fn dims() -> ModelDims {
         ModelDims {
@@ -269,6 +496,34 @@ mod tests {
             k: TensorF::from_vec(&shape, vec![fill; n]).unwrap(),
             v: TensorF::from_vec(&shape, vec![fill * 10.0; n]).unwrap(),
         })
+    }
+
+    /// A chunk whose KV rows are all distinct (id/layer/row/head encoded),
+    /// so permutation bugs cannot cancel out.
+    fn distinct_chunk(rng: &mut Rng, id: u64, len: usize) -> Arc<ChunkKv> {
+        let d = dims();
+        let shape = [d.n_layers, len, d.n_heads, d.head_dim];
+        let n: usize = shape.iter().product();
+        let kv: Vec<f32> = (0..n)
+            .map(|i| id as f32 * 1000.0 + i as f32 + rng.f64() as f32)
+            .collect();
+        let vv: Vec<f32> = kv.iter().map(|x| -x).collect();
+        Arc::new(ChunkKv {
+            id,
+            tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
+            k: TensorF::from_vec(&shape, kv).unwrap(),
+            v: TensorF::from_vec(&shape, vv).unwrap(),
+        })
+    }
+
+    fn assert_ctx_eq(a: &AssembledContext, b: &AssembledContext, what: &str) {
+        assert_eq!(a.bucket, b.bucket, "{what}: bucket");
+        assert_eq!(a.chunk_lens, b.chunk_lens, "{what}: chunk_lens");
+        assert_eq!(a.tokens.data(), b.tokens.data(), "{what}: tokens");
+        assert_eq!(a.gpos.data(), b.gpos.data(), "{what}: gpos");
+        assert_eq!(a.valid.data(), b.valid.data(), "{what}: valid");
+        assert_eq!(a.k.data(), b.k.data(), "{what}: k");
+        assert_eq!(a.v.data(), b.v.data(), "{what}: v");
     }
 
     #[test]
@@ -302,6 +557,105 @@ mod tests {
     }
 
     #[test]
+    fn reused_buffer_is_bit_identical_to_fresh() {
+        let d = dims();
+        let mut pooled = AssembledContext::alloc(&d, 32);
+        // First query dirties the buffer thoroughly: 3 chunks + a patch.
+        pooled
+            .assemble_into(&[chunk(1, 8, 1.0), chunk(2, 8, 2.0), chunk(3, 8, 3.0)])
+            .unwrap();
+        let s = 2usize;
+        let shape = [d.n_layers, s, d.n_heads, d.head_dim];
+        pooled
+            .patch(
+                &[5, 20],
+                &[5, 20],
+                2,
+                &TensorF::full(&shape, 7.0),
+                &TensorF::full(&shape, 9.0),
+            )
+            .unwrap();
+        // Second query is SHORTER: stale rows from query 1 must not leak.
+        let chunks2 = [chunk(9, 8, 4.0)];
+        pooled.assemble_into(&chunks2).unwrap();
+        let fresh = AssembledContext::new(&d, 32, &chunks2).unwrap();
+        assert_ctx_eq(&pooled, &fresh, "reused vs fresh");
+    }
+
+    #[test]
+    fn inplace_permutation_matches_reassembly() {
+        let d = dims();
+        let mut rng = Rng::new(42);
+        let chunks: Vec<_> = (0..4).map(|i| distinct_chunk(&mut rng, i, 8)).collect();
+        let order = vec![2usize, 0, 3, 1];
+        let mut inplace = AssembledContext::new(&d, 64, &chunks).unwrap();
+        inplace.permute_chunks_in_place(&order).unwrap();
+        let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
+        let reference = AssembledContext::new(&d, 64, &permuted).unwrap();
+        assert_ctx_eq(&inplace, &reference, "in-place vs reassembled");
+    }
+
+    #[test]
+    fn inplace_permutation_random_property() {
+        let d = dims();
+        prop::check(60, |rng: &mut Rng| {
+            let nc = 1 + rng.below(6);
+            // equal-length chunks exercise the cycle path; a second pass
+            // with mixed lengths exercises the gather fallback
+            for &mixed in &[false, true] {
+                let chunks: Vec<_> = (0..nc)
+                    .map(|i| {
+                        let len = if mixed { 2 + rng.below(7) } else { 8 };
+                        distinct_chunk(rng, i as u64, len)
+                    })
+                    .collect();
+                let n: usize = chunks.iter().map(|c| c.len()).sum();
+                let bucket = n + rng.below(9);
+                // random permutation via sort-by-random-key
+                let mut order: Vec<usize> = (0..nc).collect();
+                let keys: Vec<u64> = (0..nc).map(|_| rng.next_u64()).collect();
+                order.sort_by_key(|&i| keys[i]);
+                let mut inplace = AssembledContext::new(&d, bucket, &chunks).unwrap();
+                inplace.permute_chunks_in_place(&order).unwrap();
+                let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
+                let reference = AssembledContext::new(&d, bucket, &permuted).unwrap();
+                prop::assert_prop(
+                    inplace.k.data() == reference.k.data()
+                        && inplace.v.data() == reference.v.data()
+                        && inplace.tokens.data() == reference.tokens.data()
+                        && inplace.gpos.data() == reference.gpos.data()
+                        && inplace.valid.data() == reference.valid.data()
+                        && inplace.chunk_lens == reference.chunk_lens,
+                    format!("permute mismatch (mixed={mixed}, order={order:?})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn equal_chunk_permutation_is_inplace_not_a_copy() {
+        let d = dims();
+        let chunks: Vec<_> = (0..4).map(|i| chunk(i, 8, i as f32 + 1.0)).collect();
+        let mut ctx = AssembledContext::new(&d, 32, &chunks).unwrap();
+        let before = counters::snapshot();
+        ctx.permute_chunks_in_place(&[3, 1, 0, 2]).unwrap();
+        let delta = counters::snapshot().since(&before);
+        assert_eq!(delta.full_kv_copies, 0, "equal chunks must permute in place");
+        assert_eq!(delta.inplace_permutes, 1);
+    }
+
+    #[test]
+    fn permutation_rejects_non_permutations() {
+        let d = dims();
+        let mut ctx =
+            AssembledContext::new(&d, 32, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)]).unwrap();
+        assert!(ctx.permute_chunks_in_place(&[0]).is_err(), "wrong length");
+        assert!(ctx.permute_chunks_in_place(&[0, 0]).is_err(), "duplicate");
+        assert!(ctx.permute_chunks_in_place(&[0, 2]).is_err(), "out of range");
+    }
+
+    #[test]
     fn patch_updates_rows_and_positions() {
         let d = dims();
         let mut ctx =
@@ -311,13 +665,36 @@ mod tests {
         let nk = TensorF::full(&shape, 7.0);
         let nv = TensorF::full(&shape, 9.0);
         // patch rows 3 and 9; slot 99 (>= bucket) is selection padding
-        ctx.patch(&[3, 9, 99, 99], &[3, 9, 0, 0], 2, &nk, &nv);
+        ctx.patch(&[3, 9, 99, 99], &[3, 9, 0, 0], 2, &nk, &nv).unwrap();
         assert_eq!(ctx.k.at(&[0, 3, 0, 0]), 7.0);
         assert_eq!(ctx.v.at(&[1, 9, 1, 3]), 9.0);
         assert_eq!(ctx.gpos.data()[9], 9, "patched row gets its global position");
         // neighbours untouched
         assert_eq!(ctx.k.at(&[0, 4, 0, 0]), 1.0);
         assert_eq!(ctx.gpos.data()[10], 2);
+    }
+
+    #[test]
+    fn patch_rejects_shape_mismatches() {
+        let d = dims();
+        let mut ctx = AssembledContext::new(&d, 16, &[chunk(1, 8, 1.0)]).unwrap();
+        let good = TensorF::full(&[d.n_layers, 4, d.n_heads, d.head_dim], 1.0);
+        // wrong layer count
+        let bad_l = TensorF::full(&[d.n_layers + 1, 4, d.n_heads, d.head_dim], 1.0);
+        assert!(ctx.patch(&[0], &[0], 1, &bad_l, &good).is_err());
+        // wrong head dim
+        let bad_dh = TensorF::full(&[d.n_layers, 4, d.n_heads, d.head_dim + 1], 1.0);
+        assert!(ctx.patch(&[0], &[0], 1, &good, &bad_dh).is_err());
+        // k/v disagree on S
+        let bad_s = TensorF::full(&[d.n_layers, 5, d.n_heads, d.head_dim], 1.0);
+        assert!(ctx.patch(&[0], &[0], 1, &good, &bad_s).is_err());
+        // count exceeds slot list
+        assert!(ctx.patch(&[0], &[0], 2, &good, &good).is_err());
+        // count exceeds S capacity
+        let slots = [0, 1, 2, 3, 4];
+        assert!(ctx.patch(&slots, &slots, 5, &good, &good).is_err());
+        // and a well-formed call still succeeds
+        assert!(ctx.patch(&[0], &[0], 1, &good, &good).is_ok());
     }
 
     #[test]
@@ -347,5 +724,27 @@ mod tests {
         assert!(buf
             .append(&TensorF::full(&row_shape, 0.0), &TensorF::full(&row_shape, 0.0))
             .is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_shape_mismatches() {
+        let d = dims();
+        let x = 8usize;
+        let k = TensorF::zeros(&[d.n_layers, x, d.n_heads, d.head_dim]);
+        let v = k.clone();
+        let gpos: Vec<i32> = (0..x as i32).collect();
+        let valid = vec![1.0f32; x];
+        assert!(DecodeBuffer::from_parts(&d, &k, &v, &gpos, &valid, x as i32).is_ok());
+        // gpos too short
+        assert!(DecodeBuffer::from_parts(&d, &k, &v, &gpos[..x - 1], &valid, 0).is_err());
+        // valid too long
+        let long = vec![1.0f32; x + 1];
+        assert!(DecodeBuffer::from_parts(&d, &k, &v, &gpos, &long, 0).is_err());
+        // wrong layer count
+        let bad = TensorF::zeros(&[d.n_layers + 1, x, d.n_heads, d.head_dim]);
+        assert!(DecodeBuffer::from_parts(&d, &bad, &v, &gpos, &valid, 0).is_err());
+        // k/v shape disagreement
+        let bad_v = TensorF::zeros(&[d.n_layers, x + 1, d.n_heads, d.head_dim]);
+        assert!(DecodeBuffer::from_parts(&d, &k, &bad_v, &gpos, &valid, 0).is_err());
     }
 }

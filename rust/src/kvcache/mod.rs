@@ -1,10 +1,17 @@
 //! Chunk-level KV cache management: the store (offline prefilled chunks,
 //! sharded + internally synchronized, per-shard LRU under a byte budget,
-//! disk persistence) and the per-query assembly/layout machinery (padded
-//! context buffers, row patching, the decode buffer).
+//! disk persistence), the per-query assembly/layout machinery (padded
+//! context buffers assembled once, in-place permutation and row patching,
+//! the decode buffer), the per-worker buffer pool that recycles those
+//! assembly buffers, and the copy/alloc counters that keep the hot path
+//! honest.
 
+pub mod counters;
 pub mod layout;
+pub mod pool;
 pub mod store;
 
+pub use counters::CopySnapshot;
 pub use layout::{AssembledContext, DecodeBuffer};
+pub use pool::{BufferPool, PoolStats, PooledContext};
 pub use store::{ChunkId, ChunkKv, ChunkStore, StoreStats, DEFAULT_SHARDS};

@@ -1,0 +1,307 @@
+//! Per-worker scratch-buffer pool for query-time KV assembly.
+//!
+//! Every query needs a bucket-sized [`AssembledContext`] — at serving rates
+//! that used to mean a multi-megabyte zeroed allocation (and two more full
+//! copies downstream) per request.  The pool keeps a handful of retired
+//! buffers per worker and re-assembles straight into them; on a warm worker
+//! the steady-state query path allocates nothing.
+//!
+//! The pool is owned by its `Pipeline` (one per worker — see
+//! `coordinator::server::Server::spawn_pool`), so checkouts never contend
+//! across workers; the internal mutex only orders a worker's own
+//! checkout/return pairs.  Stats live behind an `Arc` so the server can
+//! aggregate them into `metrics_json` after the pipelines move into their
+//! worker threads.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::kvcache::layout::AssembledContext;
+use crate::kvcache::store::ChunkKv;
+use crate::manifest::ModelDims;
+use crate::util::json::Json;
+
+/// How many idle buffers a pool retains (across all bucket sizes).
+pub const DEFAULT_POOL_CAP: usize = 4;
+
+/// Lock-free pool counters, shared with the serving metrics.
+#[derive(Default)]
+pub struct PoolStats {
+    /// Checkouts satisfied by a recycled buffer (no allocation).
+    pub hits: AtomicU64,
+    /// Checkouts that had to allocate a fresh buffer.
+    pub misses: AtomicU64,
+    /// Buffers returned to the idle list.
+    pub returns: AtomicU64,
+    /// Buffers dropped on return because the idle list was full or the
+    /// pool was disabled.
+    pub discards: AtomicU64,
+}
+
+impl PoolStats {
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::from(self.hits.load(Ordering::Relaxed) as f64)),
+            ("misses", Json::from(self.misses.load(Ordering::Relaxed) as f64)),
+            ("returns", Json::from(self.returns.load(Ordering::Relaxed) as f64)),
+            ("discards", Json::from(self.discards.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+
+    /// Fold another worker's stats into an aggregate view.
+    pub fn merge_into(&self, acc: &PoolStats) {
+        acc.hits.fetch_add(self.hits.load(Ordering::Relaxed), Ordering::Relaxed);
+        acc.misses.fetch_add(self.misses.load(Ordering::Relaxed), Ordering::Relaxed);
+        acc.returns.fetch_add(self.returns.load(Ordering::Relaxed), Ordering::Relaxed);
+        acc.discards.fetch_add(self.discards.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// A pool of idle [`AssembledContext`] buffers keyed by their shape.
+pub struct BufferPool {
+    idle: Mutex<Vec<AssembledContext>>,
+    cap: usize,
+    enabled: AtomicBool,
+    stats: Arc<PoolStats>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::with_capacity(DEFAULT_POOL_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> BufferPool {
+        BufferPool {
+            idle: Mutex::new(Vec::new()),
+            cap,
+            enabled: AtomicBool::new(true),
+            stats: Arc::new(PoolStats::default()),
+        }
+    }
+
+    /// Disabling turns every checkout into a fresh allocation and every
+    /// return into a discard — the reference behaviour the equivalence
+    /// tests compare against.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Shared handle to this pool's counters.
+    pub fn stats(&self) -> Arc<PoolStats> {
+        self.stats.clone()
+    }
+
+    /// Number of idle buffers currently retained.
+    pub fn idle_len(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    /// Check out a buffer for (`dims`, `bucket`) and assemble `chunks` into
+    /// it.  Recycles a matching idle buffer when possible; the returned
+    /// guard puts the buffer back on drop.
+    pub fn checkout(
+        &self,
+        dims: &ModelDims,
+        bucket: usize,
+        chunks: &[Arc<ChunkKv>],
+    ) -> Result<PooledContext<'_>> {
+        let reused = if self.is_enabled() {
+            let mut idle = self.idle.lock().unwrap();
+            idle.iter()
+                .position(|c| c.matches(dims, bucket))
+                .map(|i| idle.swap_remove(i))
+        } else {
+            None
+        };
+        let mut ctx = match reused {
+            Some(c) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                c
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                AssembledContext::alloc(dims, bucket)
+            }
+        };
+        // A failed assembly (oversized context) must not shrink the pool:
+        // assemble_into bails before touching the buffer, so it is still a
+        // perfectly good recyclable allocation.
+        if let Err(e) = ctx.assemble_into(chunks) {
+            self.put_back(ctx);
+            return Err(e);
+        }
+        Ok(PooledContext { pool: self, ctx: Some(ctx) })
+    }
+
+    fn put_back(&self, ctx: AssembledContext) {
+        if self.is_enabled() {
+            let mut idle = self.idle.lock().unwrap();
+            if idle.len() < self.cap {
+                idle.push(ctx);
+                self.stats.returns.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.stats.discards.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// RAII checkout guard: derefs to the [`AssembledContext`] and returns it
+/// to the pool when dropped (also on error paths).
+pub struct PooledContext<'a> {
+    pool: &'a BufferPool,
+    ctx: Option<AssembledContext>,
+}
+
+impl Deref for PooledContext<'_> {
+    type Target = AssembledContext;
+    fn deref(&self) -> &AssembledContext {
+        self.ctx.as_ref().expect("checked out context present until drop")
+    }
+}
+
+impl DerefMut for PooledContext<'_> {
+    fn deref_mut(&mut self) -> &mut AssembledContext {
+        self.ctx.as_mut().expect("checked out context present until drop")
+    }
+}
+
+impl Drop for PooledContext<'_> {
+    fn drop(&mut self) {
+        if let Some(ctx) = self.ctx.take() {
+            self.pool.put_back(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::counters;
+    use crate::tensor::TensorF;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 144,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 128,
+            rope_theta: 10000.0,
+            chunk: 8,
+            prompt_len: 4,
+            sel_budget: 8,
+            answer_buf: 3,
+            dev_layers: 2,
+        }
+    }
+
+    fn chunk(id: u64, fill: f32) -> Arc<ChunkKv> {
+        let d = dims();
+        let len = d.chunk;
+        let shape = [d.n_layers, len, d.n_heads, d.head_dim];
+        let n: usize = shape.iter().product();
+        Arc::new(ChunkKv {
+            id,
+            tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
+            k: TensorF::from_vec(&shape, vec![fill; n]).unwrap(),
+            v: TensorF::from_vec(&shape, vec![fill * 10.0; n]).unwrap(),
+        })
+    }
+
+    #[test]
+    fn warm_checkout_reuses_the_allocation() {
+        let d = dims();
+        let pool = BufferPool::new();
+        let chunks = [chunk(1, 1.0), chunk(2, 2.0)];
+        {
+            let _c = pool.checkout(&d, 32, &chunks).unwrap();
+        }
+        assert_eq!(pool.idle_len(), 1);
+        let before = counters::snapshot();
+        {
+            let c = pool.checkout(&d, 32, &chunks).unwrap();
+            assert_eq!(c.n(), 16);
+        }
+        let delta = counters::snapshot().since(&before);
+        assert_eq!(delta.ctx_allocs, 0, "warm checkout must not allocate");
+        assert_eq!(delta.full_kv_copies, 1, "exactly the assemble copy");
+        assert_eq!(pool.stats().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats().misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn mismatched_bucket_allocates_fresh() {
+        let d = dims();
+        let pool = BufferPool::new();
+        {
+            let _c = pool.checkout(&d, 32, &[chunk(1, 1.0)]).unwrap();
+        }
+        let before = counters::snapshot();
+        {
+            let _c = pool.checkout(&d, 64, &[chunk(1, 1.0)]).unwrap();
+        }
+        assert_eq!(counters::snapshot().since(&before).ctx_allocs, 1);
+        // both buffers now idle, each claimable by its own bucket
+        assert_eq!(pool.idle_len(), 2);
+    }
+
+    #[test]
+    fn capacity_bounds_retained_buffers() {
+        let d = dims();
+        let pool = BufferPool::with_capacity(1);
+        let c1 = pool.checkout(&d, 32, &[chunk(1, 1.0)]).unwrap();
+        let c2 = pool.checkout(&d, 32, &[chunk(2, 2.0)]).unwrap();
+        drop(c1);
+        drop(c2);
+        assert_eq!(pool.idle_len(), 1);
+        assert_eq!(pool.stats().discards.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn disabled_pool_never_recycles() {
+        let d = dims();
+        let pool = BufferPool::new();
+        pool.set_enabled(false);
+        {
+            let _c = pool.checkout(&d, 32, &[chunk(1, 1.0)]).unwrap();
+        }
+        assert_eq!(pool.idle_len(), 0);
+        let before = counters::snapshot();
+        {
+            let _c = pool.checkout(&d, 32, &[chunk(1, 1.0)]).unwrap();
+        }
+        assert_eq!(counters::snapshot().since(&before).ctx_allocs, 1);
+    }
+
+    #[test]
+    fn failed_assembly_returns_the_buffer_to_the_pool() {
+        let d = dims();
+        let pool = BufferPool::new();
+        // 2 chunks of 8 rows cannot fit an 8-row bucket
+        assert!(pool.checkout(&d, 8, &[chunk(1, 1.0), chunk(2, 2.0)]).is_err());
+        // the allocation survives the failure instead of draining the pool
+        assert_eq!(pool.idle_len(), 1);
+        let before = counters::snapshot();
+        assert!(pool.checkout(&d, 8, &[chunk(1, 1.0)]).is_ok());
+        assert_eq!(
+            counters::snapshot().since(&before).ctx_allocs,
+            0,
+            "the buffer from the failed checkout must be recycled"
+        );
+    }
+}

@@ -2,23 +2,34 @@
 //!
 //! ```text
 //! chunks ──prefill_chunk──▶ ChunkStore (offline / cached)
-//!                              │ assemble (bucket-padded)
+//!                              │ assemble ONCE into a pooled, bucket-padded
+//!                              │ scratch buffer (per-worker BufferPool)
 //!                              ▼
 //!            score under selection geometry (GLOBAL default)   [skip: EPIC]
 //!                              │ Eq.7 scores @ norm layer
 //!                              ▼
-//!        [optional §4.3 reorder: HL-TP stage-1 → chunk order → re-score]
+//!     [optional §4.3 reorder: HL-TP stage-1 → IN-PLACE chunk permutation
+//!                            of the same buffer → re-score]
 //!                              ▼
 //!                  Top-k → recompute (L1 selective_attn kernel)
-//!                              │ patch rows at global positions
+//!                              │ patch rows in place at global positions
 //!                              ▼
 //!              score under decode layout → prompt KV + first logits
+//!                              │ build the RESIDENT decode literal
+//!                              │ (context + prompt + answer tail in one
+//!                              │  buffer — the query's ONE full-KV copy)
 //!                              ▼
-//!                    greedy decode loop (answer_len steps)
+//!        greedy decode loop: one appended KV row update per token,
+//!        never a whole-buffer re-serialization
 //! ```
 //!
-//! Every stage is timed; TTFT = everything up to (and including) the first
-//! answer token's logits.
+//! Memory architecture: each worker's `Pipeline` owns a
+//! [`BufferPool`](crate::kvcache::BufferPool) of reusable assembly buffers,
+//! so a warm worker serves a query with zero context-sized allocations, a
+//! single full-context copy (the assemble), and per-token decode updates of
+//! one KV row.  `kvcache::counters` records every copy so tests can assert
+//! the budget.  Every stage is timed; TTFT = everything up to (and
+//! including) the first answer token's logits.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -27,8 +38,9 @@ use anyhow::Result;
 
 use crate::config::MethodSpec;
 use crate::geometry::{self, RopeGeometry};
-use crate::kvcache::{AssembledContext, ChunkKv, ChunkStore, DecodeBuffer};
+use crate::kvcache::{AssembledContext, BufferPool, ChunkKv, ChunkStore};
 use crate::runtime::exec::ModelSession;
+use crate::runtime::resident::ResidentDecodeKv;
 use crate::selection;
 use crate::tensor::{TensorF, TensorI};
 use crate::vocab::{self, Vocab};
@@ -67,17 +79,44 @@ pub struct QueryResult {
     pub chunk_order: Vec<usize>,
 }
 
-/// Pipeline: a model session + vocab, stateless across queries (the chunk
-/// store is passed in so callers control sharing/eviction).
+/// Pipeline: a model session + vocab + per-worker buffer pool, stateless
+/// across queries apart from the recycled scratch buffers (the chunk store
+/// is passed in so callers control sharing/eviction).
 pub struct Pipeline {
     pub session: ModelSession,
     pub vocab: Vocab,
+    /// Per-worker scratch-buffer pool for query-time KV assembly.  Disable
+    /// (`pool.set_enabled(false)`) to force the fresh-allocation reference
+    /// behaviour the equivalence tests compare against.
+    pub pool: BufferPool,
+}
+
+/// Greedy token loop, pure over a `step` closure so the termination rules
+/// are unit-testable without a model session.  EOS is a terminator, never
+/// an emitted token (a trailing EOS in the answer pollutes token-match
+/// eval); a first-token EOS yields an empty answer.  `step` is called once
+/// per token actually needed beyond the first.
+fn greedy_decode(
+    first: i32,
+    answer_len: usize,
+    mut step: impl FnMut(i32) -> Result<i32>,
+) -> Result<Vec<i32>> {
+    let mut answer = Vec::with_capacity(answer_len);
+    let mut tok = first;
+    while tok != vocab::EOS && answer.len() < answer_len {
+        answer.push(tok);
+        if answer.len() == answer_len {
+            break;
+        }
+        tok = step(tok)?;
+    }
+    Ok(answer)
 }
 
 impl Pipeline {
     pub fn new(session: ModelSession) -> Result<Pipeline> {
         let vocab = Vocab::from_manifest(&session.runtime.manifest.vocab_json)?;
-        Ok(Pipeline { session, vocab })
+        Ok(Pipeline { session, vocab, pool: BufferPool::new() })
     }
 
     fn dims(&self) -> &crate::manifest::ModelDims {
@@ -220,9 +259,9 @@ impl Pipeline {
         timing.prompt_s = t0.elapsed().as_secs_f64();
 
         let next_pos = (n + d.prompt_len) as i32;
-        let mut buf =
-            DecodeBuffer::from_parts(&d, &out.k, &out.v, &pos, &valid, next_pos);
-        let answer = self.decode_answer(bucket, &mut buf, &out.last_logits, timing)?;
+        let mut kv =
+            ResidentDecodeKv::from_parts(&d, &out.k, &out.v, &pos, &valid, next_pos)?;
+        let answer = self.decode_answer(bucket, &mut kv, &out.last_logits, timing)?;
         Ok(QueryResult {
             answer,
             timing: *timing,
@@ -247,11 +286,14 @@ impl Pipeline {
         let prompt =
             TensorI::from_vec(&[d.prompt_len], self.vocab.pad_prompt(prompt_body, d.prompt_len))?;
 
-        // §4.3 stage 1: reorder chunks before anything else.
+        // Assemble the chunks ONCE, into a pooled scratch buffer.  Every
+        // later stage mutates this same buffer in place.
+        let mut ctx = self.pool.checkout(&d, bucket, chunks)?;
+
+        // §4.3 stage 1: reorder chunks — an in-place permutation of the
+        // assembled buffer, not a second assembly.
         let mut chunk_order: Vec<usize> = (0..chunks.len()).collect();
-        let mut chunks: Vec<Arc<ChunkKv>> = chunks.to_vec();
         if let Some(Selector::Norm { reorder: true, norm_layer, .. }) = &selector {
-            let ctx = AssembledContext::new(&d, bucket, &chunks)?;
             let t0 = Instant::now();
             let scores = self.score_pass(
                 bucket, &prompt, &ctx, RopeGeometry::HlTp, *norm_layer,
@@ -260,13 +302,11 @@ impl Pipeline {
             let t1 = Instant::now();
             chunk_order =
                 crate::reorder::reorder_chunks(&scores, ctx.valid.data(), &ctx.chunk_lens);
-            chunks = crate::reorder::permute(&chunks, &chunk_order);
+            ctx.permute_chunks_in_place(&chunk_order)?;
             timing.select_s += t1.elapsed().as_secs_f64();
         }
 
-        let mut ctx = AssembledContext::new(&d, bucket, &chunks)?;
-
-        // Selection + recomputation.
+        // Selection + recomputation (rows patched into the same buffer).
         let (mut selected, mut selected_positions) = (vec![], vec![]);
         if let Some(sel) = &selector {
             let global = geometry::layout(RopeGeometry::Global, &ctx.chunk_lens, d.prompt_len);
@@ -320,11 +360,15 @@ impl Pipeline {
         )?;
         timing.prompt_s += t3.elapsed().as_secs_f64();
 
-        let mut buf = DecodeBuffer::new(
+        // Promote the context into the resident decode literal (the one
+        // full-KV copy of the query), then give the scratch buffer back to
+        // the pool before the long decode loop.
+        let mut kv = ResidentDecodeKv::from_context(
             &d, &ctx, &score_out.prompt_k, &score_out.prompt_v, &decode_layout.prompt_pos,
-        );
+        )?;
+        drop(ctx);
         let answer =
-            self.decode_answer(bucket, &mut buf, &score_out.last_logits, timing)?;
+            self.decode_answer(bucket, &mut kv, &score_out.last_logits, timing)?;
         Ok(QueryResult {
             answer,
             timing: *timing,
@@ -438,38 +482,29 @@ impl Pipeline {
                 &TensorI::from_vec(&[bucket], gpos)?,
                 &ctx.valid,
             )?;
-            ctx.patch(&ss, &sg, wave.len(), &out.new_k, &out.new_v);
+            ctx.patch(&ss, &sg, wave.len(), &out.new_k, &out.new_v)?;
         }
         Ok(())
     }
 
-    /// Greedy decode: first token from the prompt logits, then decode steps.
+    /// Greedy decode: first token from the prompt logits, then resident
+    /// decode steps (one appended KV row per token).
     fn decode_answer(
         &self,
         bucket: usize,
-        buf: &mut DecodeBuffer,
+        kv: &mut ResidentDecodeKv,
         first_logits: &TensorF,
         timing: &mut Timing,
     ) -> Result<Vec<i32>> {
-        let d = self.dims();
         let answer_len = self.vocab.answer_len;
-        let mut answer = Vec::with_capacity(answer_len);
-        let mut tok = first_logits.argmax() as i32;
-        answer.push(tok);
+        let first = first_logits.argmax() as i32;
         let t0 = Instant::now();
-        for _ in 1..answer_len {
-            if tok == vocab::EOS {
-                break;
-            }
-            let pos = buf.next_pos;
-            let out = self
-                .session
-                .decode(bucket, tok, pos, &buf.k, &buf.v, &buf.gpos, &buf.valid)?;
-            buf.append(&out.new_k, &out.new_v)?;
-            tok = out.logits.argmax() as i32;
-            answer.push(tok);
-        }
-        let _ = d;
+        let answer = greedy_decode(first, answer_len, |tok| {
+            let pos = kv.next_pos;
+            let out = self.session.decode_step(bucket, tok, pos, kv)?;
+            kv.append(&out.new_k, &out.new_v)?;
+            Ok(out.logits.argmax() as i32)
+        })?;
         timing.decode_s += t0.elapsed().as_secs_f64();
         Ok(answer)
     }
@@ -482,4 +517,47 @@ enum Selector {
     Epic { budget: usize },
     /// Externally supplied buffer rows (oracle / random ablations).
     Explicit(Vec<usize>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_decode_never_emits_eos() {
+        // EOS produced mid-sequence terminates without being pushed
+        let toks = [10, 11, vocab::EOS, 99];
+        let mut i = 0;
+        let ans = greedy_decode(toks[0], 8, |_| {
+            i += 1;
+            Ok(toks[i])
+        })
+        .unwrap();
+        assert_eq!(ans, vec![10, 11]);
+    }
+
+    #[test]
+    fn greedy_decode_first_token_eos_is_empty() {
+        let ans = greedy_decode(vocab::EOS, 8, |_| panic!("no step on first-EOS"))
+            .unwrap();
+        assert!(ans.is_empty());
+    }
+
+    #[test]
+    fn greedy_decode_stops_at_answer_len_without_extra_step() {
+        let mut steps = 0;
+        let ans = greedy_decode(1, 3, |t| {
+            steps += 1;
+            Ok(t + 1)
+        })
+        .unwrap();
+        assert_eq!(ans, vec![1, 2, 3]);
+        assert_eq!(steps, 2, "exactly answer_len - 1 decode steps");
+    }
+
+    #[test]
+    fn greedy_decode_propagates_step_errors() {
+        let r = greedy_decode(1, 4, |_| anyhow::bail!("device lost"));
+        assert!(r.is_err());
+    }
 }

@@ -4,7 +4,10 @@
 //!
 //! [`ModelSession`] binds a backbone's weights to the compiled executables;
 //! the pipeline holds one session per (backbone) and calls these methods on
-//! the request path.
+//! the request path.  The decode step consumes a
+//! [`super::resident::ResidentDecodeKv`] — the per-query KV literal that is
+//! built once and updated row-by-row — instead of re-serializing the whole
+//! decode buffer every token.
 
 use std::sync::Arc;
 
@@ -13,6 +16,7 @@ use anyhow::{bail, Result};
 use super::literal::{
     literal_to_tensor_f, tensor_f_to_literal, tensor_i_to_literal,
 };
+use super::resident::ResidentDecodeKv;
 use super::{Executable, Runtime, SharedBuffer};
 use crate::tensor::{TensorF, TensorI};
 
@@ -83,7 +87,7 @@ impl ModelSession {
         &self,
         name: &str,
         bucket: Option<usize>,
-        args: &[xla::Literal],
+        args: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
         let exe = self.runtime.executable(name, bucket)?;
         exe.run(&self.weights.0, args, self.runtime.client())
@@ -98,7 +102,7 @@ impl ModelSession {
         }
         let toks = tensor_i_to_literal(&TensorI::from_vec(&[c], tokens.to_vec())?)?;
         let valid = tensor_f_to_literal(&TensorF::full(&[c], 1.0))?;
-        let out = self.run("prefill_chunk", None, &[toks, valid])?;
+        let out = self.run("prefill_chunk", None, &[&toks, &valid])?;
         Ok((literal_to_tensor_f(&out[0])?, literal_to_tensor_f(&out[1])?))
     }
 
@@ -116,20 +120,18 @@ impl ModelSession {
         ctx_valid: &TensorF,    // [N]
     ) -> Result<ScoreOut> {
         let p = self.runtime.manifest.model.prompt_len;
-        let pvalid = tensor_f_to_literal(&TensorF::full(&[p], 1.0))?;
+        let a0 = tensor_i_to_literal(prompt)?;
+        let a1 = tensor_i_to_literal(prompt_pos)?;
+        let a2 = tensor_f_to_literal(&TensorF::full(&[p], 1.0))?;
+        let a3 = tensor_f_to_literal(ctx_k)?;
+        let a4 = tensor_f_to_literal(ctx_v)?;
+        let a5 = tensor_i_to_literal(ctx_delta)?;
+        let a6 = tensor_i_to_literal(ctx_gpos)?;
+        let a7 = tensor_f_to_literal(ctx_valid)?;
         let out = self.run(
             "score",
             Some(bucket),
-            &[
-                tensor_i_to_literal(prompt)?,
-                tensor_i_to_literal(prompt_pos)?,
-                pvalid,
-                tensor_f_to_literal(ctx_k)?,
-                tensor_f_to_literal(ctx_v)?,
-                tensor_i_to_literal(ctx_delta)?,
-                tensor_i_to_literal(ctx_gpos)?,
-                tensor_f_to_literal(ctx_valid)?,
-            ],
+            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7],
         )?;
         Ok(ScoreOut {
             scores: literal_to_tensor_f(&out[0])?,
@@ -154,20 +156,19 @@ impl ModelSession {
         ctx_gpos: &TensorI,
         ctx_valid: &TensorF,
     ) -> Result<RecomputeOut> {
+        let a0 = tensor_i_to_literal(sel_tokens)?;
+        let a1 = tensor_i_to_literal(sel_gpos)?;
+        let a2 = tensor_i_to_literal(sel_slot)?;
+        let a3 = tensor_f_to_literal(sel_valid)?;
+        let a4 = tensor_f_to_literal(ctx_k)?;
+        let a5 = tensor_f_to_literal(ctx_v)?;
+        let a6 = tensor_i_to_literal(ctx_delta)?;
+        let a7 = tensor_i_to_literal(ctx_gpos)?;
+        let a8 = tensor_f_to_literal(ctx_valid)?;
         let out = self.run(
             "recompute",
             Some(bucket),
-            &[
-                tensor_i_to_literal(sel_tokens)?,
-                tensor_i_to_literal(sel_gpos)?,
-                tensor_i_to_literal(sel_slot)?,
-                tensor_f_to_literal(sel_valid)?,
-                tensor_f_to_literal(ctx_k)?,
-                tensor_f_to_literal(ctx_v)?,
-                tensor_i_to_literal(ctx_delta)?,
-                tensor_i_to_literal(ctx_gpos)?,
-                tensor_f_to_literal(ctx_valid)?,
-            ],
+            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7, &a8],
         )?;
         Ok(RecomputeOut {
             new_k: literal_to_tensor_f(&out[0])?,
@@ -175,29 +176,23 @@ impl ModelSession {
         })
     }
 
-    /// One greedy decode step over the assembled buffer.
-    #[allow(clippy::too_many_arguments)]
-    pub fn decode(
+    /// One greedy decode step over the resident decode-phase KV.  The KV
+    /// literals are borrowed straight from `kv` — nothing about the context
+    /// is converted or copied on this path.
+    pub fn decode_step(
         &self,
         bucket: usize,
         tok: i32,
         pos: i32,
-        k_all: &TensorF,  // [L, T, H, Dh]
-        v_all: &TensorF,  // [L, T, H, Dh]
-        k_gpos: &TensorI, // [T]
-        k_valid: &TensorF, // [T]
+        kv: &ResidentDecodeKv,
     ) -> Result<DecodeOut> {
+        let t = xla::Literal::scalar(tok);
+        let p = xla::Literal::scalar(pos);
+        let [k_all, v_all, k_gpos, k_valid] = kv.literals();
         let out = self.run(
             "decode",
             Some(bucket),
-            &[
-                xla::Literal::scalar(tok),
-                xla::Literal::scalar(pos),
-                tensor_f_to_literal(k_all)?,
-                tensor_f_to_literal(v_all)?,
-                tensor_i_to_literal(k_gpos)?,
-                tensor_f_to_literal(k_valid)?,
-            ],
+            &[&t, &p, k_all, v_all, k_gpos, k_valid],
         )?;
         Ok(DecodeOut {
             logits: literal_to_tensor_f(&out[0])?,
@@ -217,17 +212,16 @@ impl ModelSession {
         ctx_v_shallow: &TensorF, // [dev_layers, N, H, Dh]
         ctx_delta: &TensorI,   // [N]
     ) -> Result<TensorF> {
+        let a0 = tensor_i_to_literal(ctx_tokens)?;
+        let a1 = tensor_i_to_literal(ctx_gpos)?;
+        let a2 = tensor_f_to_literal(ctx_valid)?;
+        let a3 = tensor_f_to_literal(ctx_k_shallow)?;
+        let a4 = tensor_f_to_literal(ctx_v_shallow)?;
+        let a5 = tensor_i_to_literal(ctx_delta)?;
         let out = self.run(
             "deviation",
             Some(bucket),
-            &[
-                tensor_i_to_literal(ctx_tokens)?,
-                tensor_i_to_literal(ctx_gpos)?,
-                tensor_f_to_literal(ctx_valid)?,
-                tensor_f_to_literal(ctx_k_shallow)?,
-                tensor_f_to_literal(ctx_v_shallow)?,
-                tensor_i_to_literal(ctx_delta)?,
-            ],
+            &[&a0, &a1, &a2, &a3, &a4, &a5],
         )?;
         literal_to_tensor_f(&out[0])
     }
@@ -240,15 +234,10 @@ impl ModelSession {
         pos: &TensorI,    // [N + P]
         valid: &TensorF,  // [N + P]
     ) -> Result<FullPrefillOut> {
-        let out = self.run(
-            "full_prefill",
-            Some(bucket),
-            &[
-                tensor_i_to_literal(tokens)?,
-                tensor_i_to_literal(pos)?,
-                tensor_f_to_literal(valid)?,
-            ],
-        )?;
+        let a0 = tensor_i_to_literal(tokens)?;
+        let a1 = tensor_i_to_literal(pos)?;
+        let a2 = tensor_f_to_literal(valid)?;
+        let out = self.run("full_prefill", Some(bucket), &[&a0, &a1, &a2])?;
         Ok(FullPrefillOut {
             k: literal_to_tensor_f(&out[0])?,
             v: literal_to_tensor_f(&out[1])?,

@@ -16,6 +16,15 @@ pub fn tensor_i_to_literal(t: &TensorI) -> Result<xla::Literal> {
     lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
 }
 
+/// Move an owned vector (f32 or i32) into a shaped literal without copying.
+pub fn vec_to_literal<T: xla::NativeType>(
+    data: Vec<T>,
+    shape: &[usize],
+) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::from_vec(data, &dims).map_err(|e| anyhow!("literal from vec: {e:?}"))
+}
+
 pub fn scalar_i(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)
 }

@@ -6,6 +6,7 @@
 
 pub mod exec;
 pub mod literal;
+pub mod resident;
 
 pub use exec::{
     DecodeExec, DeviationExec, FullPrefillExec, PrefillChunkExec, RecomputeExec,
@@ -13,6 +14,7 @@ pub use exec::{
 };
 pub use literal::{literal_to_tensor_f, literal_to_tensor_i, tensor_f_to_literal,
                   tensor_i_to_literal};
+pub use resident::ResidentDecodeKv;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -140,11 +142,13 @@ impl Runtime {
 
 impl Executable {
     /// Execute with the weights device buffer first and host literals after,
-    /// returning the decomposed output tuple.
+    /// returning the decomposed output tuple.  Arguments are borrowed so a
+    /// resident (per-query) literal can be re-submitted every decode step
+    /// without being cloned.
     pub fn run(
         &self,
         weights: &xla::PjRtBuffer,
-        args: &[xla::Literal],
+        args: &[&xla::Literal],
         client: &xla::PjRtClient,
     ) -> Result<Vec<xla::Literal>> {
         if args.len() + 1 != self.spec.args.len() {
@@ -158,7 +162,7 @@ impl Executable {
         // execute_b wants every argument as a device buffer; the weights are
         // already resident, everything else is staged per call.
         let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        for lit in args {
+        for &lit in args {
             bufs.push(
                 client
                     .buffer_from_host_literal(None, lit)

@@ -1,0 +1,350 @@
+//! Resident decode-phase KV: the decode buffer kept AS A LITERAL for the
+//! whole answer, updated one row per generated token.
+//!
+//! The pre-refactor decode loop converted the entire `[L, T, H, Dh]` host
+//! buffer (plus positions and validity) to fresh literals on every step —
+//! for a 512 bucket that is the whole context re-serialized per token.  A
+//! [`ResidentDecodeKv`] pays that conversion once per query (built straight
+//! from the assembled context + prompt KV, no intermediate host decode
+//! buffer) and then patches exactly one appended KV row per step through
+//! the stub's `Literal::write_sub` incremental-update entry point.
+//!
+//! `kvcache::layout::DecodeBuffer` remains the fresh-allocation host-side
+//! reference; the tests below diff the two bit-for-bit.
+
+use anyhow::{bail, Result};
+
+use crate::kvcache::counters;
+use crate::kvcache::AssembledContext;
+use crate::manifest::ModelDims;
+use crate::runtime::literal::{literal_to_tensor_f, literal_to_tensor_i, vec_to_literal};
+use crate::tensor::{TensorF, TensorI};
+
+pub struct ResidentDecodeKv {
+    k: xla::Literal,     // [L, T, H, Dh]
+    v: xla::Literal,     // [L, T, H, Dh]
+    gpos: xla::Literal,  // [T] i32
+    valid: xla::Literal, // [T] f32
+    l: usize,
+    row: usize, // H * Dh
+    t_total: usize,
+    pub next_row: usize,
+    pub next_pos: i32,
+}
+
+impl ResidentDecodeKv {
+    /// Build the decode literal directly from the assembled (already
+    /// permuted/patched) context and the prompt KV from the score pass:
+    /// context rows, then prompt rows, then zeroed answer slots — one
+    /// allocation, one pass, no intermediate host decode buffer.
+    pub fn from_context(
+        dims: &ModelDims,
+        ctx: &AssembledContext,
+        prompt_k: &TensorF, // [L, P, H, Dh]
+        prompt_v: &TensorF,
+        prompt_pos: &[i32],
+    ) -> Result<ResidentDecodeKv> {
+        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        let p = dims.prompt_len;
+        let row = h * dh;
+        let pshape = [l, p, h, dh];
+        if prompt_k.shape() != pshape {
+            bail!(
+                "resident: prompt_k shape {:?} != {pshape:?}",
+                prompt_k.shape()
+            );
+        }
+        if prompt_v.shape() != pshape {
+            bail!(
+                "resident: prompt_v shape {:?} != {pshape:?}",
+                prompt_v.shape()
+            );
+        }
+        if prompt_pos.len() != p {
+            bail!("resident: {} prompt positions for P={p}", prompt_pos.len());
+        }
+        let bucket = ctx.bucket;
+        let t_total = bucket + p + dims.answer_buf;
+        counters::bump(|s| s.decode_uploads_full += 1);
+        let mut kd: Vec<f32> = Vec::with_capacity(l * t_total * row);
+        let mut vd: Vec<f32> = Vec::with_capacity(l * t_total * row);
+        for li in 0..l {
+            let cs = li * bucket * row;
+            kd.extend_from_slice(&ctx.k.data()[cs..cs + bucket * row]);
+            vd.extend_from_slice(&ctx.v.data()[cs..cs + bucket * row]);
+            let ps = li * p * row;
+            kd.extend_from_slice(&prompt_k.data()[ps..ps + p * row]);
+            vd.extend_from_slice(&prompt_v.data()[ps..ps + p * row]);
+            kd.resize((li + 1) * t_total * row, 0.0);
+            vd.resize((li + 1) * t_total * row, 0.0);
+        }
+        let mut gd: Vec<i32> = Vec::with_capacity(t_total);
+        gd.extend_from_slice(ctx.gpos.data());
+        gd.extend_from_slice(prompt_pos);
+        gd.resize(t_total, 0);
+        let mut vald: Vec<f32> = Vec::with_capacity(t_total);
+        vald.extend_from_slice(ctx.valid.data());
+        vald.resize(bucket + p, 1.0);
+        vald.resize(t_total, 0.0);
+        Ok(ResidentDecodeKv {
+            k: vec_to_literal(kd, &[l, t_total, h, dh])?,
+            v: vec_to_literal(vd, &[l, t_total, h, dh])?,
+            gpos: vec_to_literal(gd, &[t_total])?,
+            valid: vec_to_literal(vald, &[t_total])?,
+            l,
+            row,
+            t_total,
+            next_row: bucket + p,
+            next_pos: prompt_pos.last().copied().unwrap_or(0) + 1,
+        })
+    }
+
+    /// Build from an arbitrary `[L, X, H, Dh]` KV block + row metadata (the
+    /// full-prefill baseline, where context and prompt KV come fused from
+    /// one executable).  `answer_buf` empty slots are appended.
+    pub fn from_parts(
+        dims: &ModelDims,
+        k: &TensorF,
+        v: &TensorF,
+        gpos: &[i32],
+        valid: &[f32],
+        next_pos: i32,
+    ) -> Result<ResidentDecodeKv> {
+        let (l, h, dh) = (dims.n_layers, dims.n_heads, dims.head_dim);
+        if k.shape().len() != 4 || k.shape()[0] != l || k.shape()[2] != h || k.shape()[3] != dh
+        {
+            bail!(
+                "resident from_parts: k shape {:?} does not match [L={l}, X, H={h}, Dh={dh}]",
+                k.shape()
+            );
+        }
+        if v.shape() != k.shape() {
+            bail!(
+                "resident from_parts: v shape {:?} != k shape {:?}",
+                v.shape(),
+                k.shape()
+            );
+        }
+        let x = k.shape()[1];
+        if gpos.len() != x || valid.len() != x {
+            bail!(
+                "resident from_parts: gpos/valid lengths ({}, {}) != {x} KV rows",
+                gpos.len(),
+                valid.len()
+            );
+        }
+        let row = h * dh;
+        let t_total = x + dims.answer_buf;
+        counters::bump(|s| s.decode_uploads_full += 1);
+        let mut kd: Vec<f32> = Vec::with_capacity(l * t_total * row);
+        let mut vd: Vec<f32> = Vec::with_capacity(l * t_total * row);
+        for li in 0..l {
+            let s = li * x * row;
+            kd.extend_from_slice(&k.data()[s..s + x * row]);
+            vd.extend_from_slice(&v.data()[s..s + x * row]);
+            kd.resize((li + 1) * t_total * row, 0.0);
+            vd.resize((li + 1) * t_total * row, 0.0);
+        }
+        let mut gd: Vec<i32> = gpos.to_vec();
+        gd.resize(t_total, 0);
+        let mut vald: Vec<f32> = valid.to_vec();
+        vald.resize(t_total, 0.0);
+        Ok(ResidentDecodeKv {
+            k: vec_to_literal(kd, &[l, t_total, h, dh])?,
+            v: vec_to_literal(vd, &[l, t_total, h, dh])?,
+            gpos: vec_to_literal(gd, &[t_total])?,
+            valid: vec_to_literal(vald, &[t_total])?,
+            l,
+            row,
+            t_total,
+            next_row: x,
+            next_pos,
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.t_total
+    }
+
+    /// Append a generated token's KV row in place: one `write_sub` per
+    /// layer per tensor instead of a whole-buffer rebuild.
+    pub fn append(&mut self, new_k: &TensorF, new_v: &TensorF) -> Result<()> {
+        let rshape = [self.l, self.row];
+        let flat_ok = |t: &TensorF| t.len() == self.l * self.row;
+        if !flat_ok(new_k) || !flat_ok(new_v) {
+            bail!(
+                "resident append: row shapes {:?}/{:?} != [L={}, H*Dh={}]",
+                new_k.shape(),
+                new_v.shape(),
+                rshape[0],
+                rshape[1]
+            );
+        }
+        if self.next_row >= self.t_total {
+            bail!("decode buffer full ({} rows)", self.t_total);
+        }
+        counters::bump(|s| s.decode_row_updates += 1);
+        for li in 0..self.l {
+            let src = li * self.row;
+            let dst = (li * self.t_total + self.next_row) * self.row;
+            self.k
+                .write_sub(dst, &new_k.data()[src..src + self.row])
+                .map_err(|e| anyhow::anyhow!("resident k row update: {e:?}"))?;
+            self.v
+                .write_sub(dst, &new_v.data()[src..src + self.row])
+                .map_err(|e| anyhow::anyhow!("resident v row update: {e:?}"))?;
+        }
+        self.gpos
+            .write_sub(self.next_row, &[self.next_pos])
+            .map_err(|e| anyhow::anyhow!("resident gpos update: {e:?}"))?;
+        self.valid
+            .write_sub(self.next_row, &[1.0f32])
+            .map_err(|e| anyhow::anyhow!("resident valid update: {e:?}"))?;
+        self.next_row += 1;
+        self.next_pos += 1;
+        Ok(())
+    }
+
+    /// The literals the decode executable consumes, in argument order
+    /// (k_all, v_all, k_gpos, k_valid).
+    pub fn literals(&self) -> [&xla::Literal; 4] {
+        [&self.k, &self.v, &self.gpos, &self.valid]
+    }
+
+    /// Host copies of the resident state (test/verification only).
+    pub fn k_host(&self) -> Result<TensorF> {
+        literal_to_tensor_f(&self.k)
+    }
+
+    pub fn v_host(&self) -> Result<TensorF> {
+        literal_to_tensor_f(&self.v)
+    }
+
+    pub fn gpos_host(&self) -> Result<TensorI> {
+        literal_to_tensor_i(&self.gpos)
+    }
+
+    pub fn valid_host(&self) -> Result<TensorF> {
+        literal_to_tensor_f(&self.valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::store::ChunkKv;
+    use crate::kvcache::DecodeBuffer;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 144,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 128,
+            rope_theta: 10000.0,
+            chunk: 8,
+            prompt_len: 4,
+            sel_budget: 8,
+            answer_buf: 3,
+            dev_layers: 2,
+        }
+    }
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> TensorF {
+        let n: usize = shape.iter().product();
+        TensorF::from_vec(shape, (0..n).map(|_| rng.f64() as f32).collect()).unwrap()
+    }
+
+    fn rand_chunk(rng: &mut Rng, id: u64, len: usize) -> Arc<ChunkKv> {
+        let d = dims();
+        let shape = [d.n_layers, len, d.n_heads, d.head_dim];
+        Arc::new(ChunkKv {
+            id,
+            tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
+            k: rand_tensor(rng, &shape),
+            v: rand_tensor(rng, &shape),
+        })
+    }
+
+    fn assert_matches_reference(kv: &ResidentDecodeKv, buf: &DecodeBuffer, what: &str) {
+        assert_eq!(kv.k_host().unwrap().data(), buf.k.data(), "{what}: k");
+        assert_eq!(kv.v_host().unwrap().data(), buf.v.data(), "{what}: v");
+        assert_eq!(kv.gpos_host().unwrap().data(), buf.gpos.data(), "{what}: gpos");
+        assert_eq!(kv.valid_host().unwrap().data(), buf.valid.data(), "{what}: valid");
+        assert_eq!(kv.next_row, buf.next_row, "{what}: next_row");
+        assert_eq!(kv.next_pos, buf.next_pos, "{what}: next_pos");
+    }
+
+    #[test]
+    fn resident_matches_reference_decode_buffer_bitwise() {
+        let d = dims();
+        let mut rng = Rng::new(21);
+        let chunks = [rand_chunk(&mut rng, 1, 8), rand_chunk(&mut rng, 2, 8)];
+        let ctx = crate::kvcache::AssembledContext::new(&d, 24, &chunks).unwrap();
+        let pshape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+        let pk = rand_tensor(&mut rng, &pshape);
+        let pv = rand_tensor(&mut rng, &pshape);
+        let ppos: Vec<i32> = (16..20).collect();
+        let mut kv = ResidentDecodeKv::from_context(&d, &ctx, &pk, &pv, &ppos).unwrap();
+        let mut reference = DecodeBuffer::new(&d, &ctx, &pk, &pv, &ppos);
+        assert_matches_reference(&kv, &reference, "after build");
+        // incremental appends track the reference exactly
+        let rshape = [d.n_layers, d.n_heads, d.head_dim];
+        for step in 0..d.answer_buf {
+            let nk = rand_tensor(&mut rng, &rshape);
+            let nv = rand_tensor(&mut rng, &rshape);
+            kv.append(&nk, &nv).unwrap();
+            reference.append(&nk, &nv).unwrap();
+            assert_matches_reference(&kv, &reference, &format!("after append {step}"));
+        }
+        // both refuse further appends at capacity
+        let nk = rand_tensor(&mut rng, &rshape);
+        assert!(kv.append(&nk, &nk).is_err());
+        assert!(reference.append(&nk, &nk).is_err());
+    }
+
+    #[test]
+    fn from_parts_matches_reference() {
+        let d = dims();
+        let mut rng = Rng::new(22);
+        let x = 12usize;
+        let k = rand_tensor(&mut rng, &[d.n_layers, x, d.n_heads, d.head_dim]);
+        let v = rand_tensor(&mut rng, &[d.n_layers, x, d.n_heads, d.head_dim]);
+        let gpos: Vec<i32> = (0..x as i32).collect();
+        let valid = vec![1.0f32; x];
+        let kv = ResidentDecodeKv::from_parts(&d, &k, &v, &gpos, &valid, 40).unwrap();
+        let reference = DecodeBuffer::from_parts(&d, &k, &v, &gpos, &valid, 40).unwrap();
+        assert_matches_reference(&kv, &reference, "from_parts");
+        // shape mismatches are checked, not silently corrupting
+        assert!(ResidentDecodeKv::from_parts(&d, &k, &v, &gpos[..x - 1], &valid, 0).is_err());
+        let bad = rand_tensor(&mut rng, &[d.n_layers + 1, x, d.n_heads, d.head_dim]);
+        assert!(ResidentDecodeKv::from_parts(&d, &bad, &v, &gpos, &valid, 0).is_err());
+    }
+
+    #[test]
+    fn build_is_one_upload_and_appends_are_row_updates() {
+        let d = dims();
+        let mut rng = Rng::new(23);
+        let chunks = [rand_chunk(&mut rng, 1, 8)];
+        let ctx = crate::kvcache::AssembledContext::new(&d, 16, &chunks).unwrap();
+        let pshape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+        let pk = rand_tensor(&mut rng, &pshape);
+        let pv = rand_tensor(&mut rng, &pshape);
+        let ppos: Vec<i32> = (8..12).collect();
+        let before = crate::kvcache::counters::snapshot();
+        let mut kv = ResidentDecodeKv::from_context(&d, &ctx, &pk, &pv, &ppos).unwrap();
+        let rshape = [d.n_layers, d.n_heads, d.head_dim];
+        for _ in 0..2 {
+            let nk = rand_tensor(&mut rng, &rshape);
+            kv.append(&nk, &nk).unwrap();
+        }
+        let delta = crate::kvcache::counters::snapshot().since(&before);
+        assert_eq!(delta.decode_uploads_full, 1, "exactly one full build per query");
+        assert_eq!(delta.decode_row_updates, 2, "one row update per decode step");
+        assert_eq!(delta.full_kv_copies, 0, "no host decode-buffer copy at all");
+    }
+}

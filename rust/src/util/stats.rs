@@ -16,18 +16,22 @@ pub struct Summary {
 }
 
 impl Summary {
-    pub fn from_samples(mut xs: Vec<f64>) -> Summary {
-        assert!(!xs.is_empty());
+    /// Summarize a sample set; `None` for an empty one (a zero-run bench
+    /// must degrade gracefully, not abort the whole bench binary).
+    pub fn from_samples(mut xs: Vec<f64>) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = xs.len();
-        Summary {
+        Some(Summary {
             n,
             mean_s: xs.iter().sum::<f64>() / n as f64,
             median_s: percentile(&xs, 0.5),
             p95_s: percentile(&xs, 0.95),
             min_s: xs[0],
             max_s: xs[n - 1],
-        }
+        })
     }
 
     pub fn fmt_ms(&self) -> String {
@@ -73,8 +77,10 @@ impl Bench {
         Bench { warmup, runs }
     }
 
-    /// Time `f` (which should do one full unit of work per call).
-    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+    /// Time `f` (which should do one full unit of work per call).  `None`
+    /// when configured with zero runs (nothing measured, nothing printed
+    /// but a note) — previously this panicked inside `from_samples`.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Option<Summary> {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -84,9 +90,16 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
         }
-        let s = Summary::from_samples(samples);
-        println!("bench {name:<44} {}", s.fmt_ms());
-        s
+        match Summary::from_samples(samples) {
+            Some(s) => {
+                println!("bench {name:<44} {}", s.fmt_ms());
+                Some(s)
+            }
+            None => {
+                println!("bench {name:<44} (0 runs, nothing measured)");
+                None
+            }
+        }
     }
 }
 
@@ -107,11 +120,19 @@ mod tests {
 
     #[test]
     fn summary_orders() {
-        let s = Summary::from_samples(vec![3.0, 1.0, 2.0]);
+        let s = Summary::from_samples(vec![3.0, 1.0, 2.0]).unwrap();
         assert_eq!(s.min_s, 1.0);
         assert_eq!(s.max_s, 3.0);
         assert_eq!(s.median_s, 2.0);
         assert!((s.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_samples_are_none_not_a_panic() {
+        assert!(Summary::from_samples(vec![]).is_none());
+        // regression: Bench::new(_, 0).run(..) used to abort
+        let out = Bench::new(0, 0).run("noop", || 1 + 1);
+        assert!(out.is_none());
     }
 
     #[test]

@@ -280,6 +280,83 @@ fn server_pool_shares_store_across_workers() {
 }
 
 #[test]
+fn pooled_path_matches_fresh_allocation_reference() {
+    // The assemble-once / pooled / resident-decode path must produce the
+    // exact QueryResult of the fresh-allocation reference behaviour
+    // (pool disabled), including reorder + recompute combined.
+    let (rt, p) = require_artifacts!();
+    let genr = EpisodeGen::new(p.vocab.clone(), rt.manifest.model.chunk);
+    let mut rng = Rng::new(12);
+    let store = ChunkStore::new(1 << 30);
+    for method in [
+        MethodSpec::NoRecompute,
+        MethodSpec::ours(16),
+        MethodSpec::ours_reorder(16),
+    ] {
+        let e = genr.onehop(&mut rng, 4);
+        let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
+        // warm the pool so the pooled run actually reuses a buffer
+        let _ = p.answer(&chunks, &e.prompt, method).unwrap();
+        let pooled = p.answer(&chunks, &e.prompt, method).unwrap();
+        p.pool.set_enabled(false);
+        let fresh = p.answer(&chunks, &e.prompt, method).unwrap();
+        p.pool.set_enabled(true);
+        assert_eq!(pooled.answer, fresh.answer, "{}: answers differ", method.name());
+        assert_eq!(pooled.selected, fresh.selected, "{}: selection differs", method.name());
+        assert_eq!(
+            pooled.selected_positions, fresh.selected_positions,
+            "{}: positions differ",
+            method.name()
+        );
+        assert_eq!(
+            pooled.chunk_order, fresh.chunk_order,
+            "{}: chunk order differs",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn warm_query_copy_budget_is_one_copy_one_upload() {
+    // The acceptance bar of the assemble-once refactor in hard numbers: a
+    // steady-state query on a warm store + warm pool does exactly ONE
+    // full-context KV copy and ONE decode-literal build (zero per-step
+    // whole-buffer conversions).
+    use infoflow_kv::kvcache::counters;
+    let (rt, p) = require_artifacts!();
+    let genr = EpisodeGen::new(p.vocab.clone(), rt.manifest.model.chunk);
+    let mut rng = Rng::new(13);
+    let store = ChunkStore::new(1 << 30);
+    let e = genr.onehop(&mut rng, 4);
+    let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
+    for method in [MethodSpec::ours(16), MethodSpec::ours_reorder(16)] {
+        let _ = p.answer(&chunks, &e.prompt, method).unwrap(); // warm pool
+        let before = counters::snapshot();
+        let r = p.answer(&chunks, &e.prompt, method).unwrap();
+        let delta = counters::snapshot().since(&before);
+        assert_eq!(
+            delta.full_kv_copies, 1,
+            "{}: warm query did {} full-context copies",
+            method.name(),
+            delta.full_kv_copies
+        );
+        assert_eq!(delta.ctx_allocs, 0, "{}: warm query allocated", method.name());
+        assert_eq!(
+            delta.decode_uploads_full, 1,
+            "{}: decode buffer was rebuilt mid-answer",
+            method.name()
+        );
+        assert!(
+            delta.decode_row_updates <= r.answer.len() as u64,
+            "{}: more row updates ({}) than generated tokens ({})",
+            method.name(),
+            delta.decode_row_updates,
+            r.answer.len()
+        );
+    }
+}
+
+#[test]
 fn bucket_padding_does_not_change_results() {
     // A 3-chunk (192-token) context lands in the 256 bucket with 64 pad
     // rows; answers must match running the same context as 4 chunks worth

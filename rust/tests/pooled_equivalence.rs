@@ -1,0 +1,201 @@
+//! Property test: the pooled / assemble-once / in-place / resident-literal
+//! query path is BIT-IDENTICAL to the fresh-allocation reference path at
+//! every stage — across sequences of queries that actually reuse buffers,
+//! with §4.3 reorder and recompute-patching combined — and does it within
+//! the copy budget (one full-context copy + one decode-literal build per
+//! steady-state query).
+//!
+//! This exercises the full host-side buffer machinery without model
+//! artifacts; `tests/integration.rs` adds the artifact-gated end-to-end
+//! `QueryResult` comparison over the real executables.
+
+use std::sync::Arc;
+
+use infoflow_kv::kvcache::{
+    counters, AssembledContext, BufferPool, ChunkKv, DecodeBuffer,
+};
+use infoflow_kv::manifest::ModelDims;
+use infoflow_kv::runtime::resident::ResidentDecodeKv;
+use infoflow_kv::tensor::TensorF;
+use infoflow_kv::util::{prop, rng::Rng};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 144,
+        d_model: 64,
+        n_layers: 3,
+        n_heads: 2,
+        head_dim: 4,
+        d_ff: 128,
+        rope_theta: 10000.0,
+        chunk: 8,
+        prompt_len: 4,
+        sel_budget: 4,
+        answer_buf: 3,
+        dev_layers: 2,
+    }
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> TensorF {
+    let n: usize = shape.iter().product();
+    TensorF::from_vec(shape, (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect())
+        .unwrap()
+}
+
+fn rand_chunk(rng: &mut Rng, id: u64, len: usize) -> Arc<ChunkKv> {
+    let d = dims();
+    let shape = [d.n_layers, len, d.n_heads, d.head_dim];
+    Arc::new(ChunkKv {
+        id,
+        tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
+        k: rand_tensor(rng, &shape),
+        v: rand_tensor(rng, &shape),
+    })
+}
+
+fn rand_permutation(rng: &mut Rng, n: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    order.sort_by_key(|&i| keys[i]);
+    order
+}
+
+struct QueryPlan {
+    chunks: Vec<Arc<ChunkKv>>,
+    order: Vec<usize>,
+    // patch inputs (shared verbatim by both paths)
+    slots: Vec<i32>,
+    sel_gpos: Vec<i32>,
+    count: usize,
+    new_k: TensorF,
+    new_v: TensorF,
+    // decode inputs
+    prompt_k: TensorF,
+    prompt_v: TensorF,
+    prompt_pos: Vec<i32>,
+    appends: Vec<(TensorF, TensorF)>,
+}
+
+fn random_plan(rng: &mut Rng, bucket: usize) -> QueryPlan {
+    let d = dims();
+    let nc = 1 + rng.below(bucket / d.chunk);
+    let chunks: Vec<_> =
+        (0..nc).map(|i| rand_chunk(rng, i as u64, d.chunk)).collect();
+    let n = nc * d.chunk;
+    let order = rand_permutation(rng, nc);
+    let s_cap = d.sel_budget;
+    let count = rng.below(s_cap + 1);
+    let slots: Vec<i32> = (0..s_cap).map(|_| rng.below(n) as i32).collect();
+    let sel_gpos: Vec<i32> = slots.iter().map(|&s| s + 1).collect();
+    let sel_shape = [d.n_layers, s_cap, d.n_heads, d.head_dim];
+    let pshape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+    let row_shape = [d.n_layers, d.n_heads, d.head_dim];
+    let n_appends = rng.below(d.answer_buf + 1);
+    QueryPlan {
+        chunks,
+        order,
+        slots,
+        sel_gpos,
+        count,
+        new_k: rand_tensor(rng, &sel_shape),
+        new_v: rand_tensor(rng, &sel_shape),
+        prompt_k: rand_tensor(rng, &pshape),
+        prompt_v: rand_tensor(rng, &pshape),
+        prompt_pos: (n as i32..(n + d.prompt_len) as i32).collect(),
+        appends: (0..n_appends)
+            .map(|_| (rand_tensor(rng, &row_shape), rand_tensor(rng, &row_shape)))
+            .collect(),
+    }
+}
+
+/// The pre-refactor shape: fresh context per stage, host decode buffer.
+fn reference_path(d: &ModelDims, bucket: usize, plan: &QueryPlan) -> (AssembledContext, DecodeBuffer) {
+    let permuted: Vec<_> = plan.order.iter().map(|&i| plan.chunks[i].clone()).collect();
+    let mut ctx = AssembledContext::new(d, bucket, &permuted).unwrap();
+    ctx.patch(&plan.slots, &plan.sel_gpos, plan.count, &plan.new_k, &plan.new_v)
+        .unwrap();
+    let mut buf =
+        DecodeBuffer::new(d, &ctx, &plan.prompt_k, &plan.prompt_v, &plan.prompt_pos);
+    for (nk, nv) in &plan.appends {
+        buf.append(nk, nv).unwrap();
+    }
+    (ctx, buf)
+}
+
+#[test]
+fn pooled_path_is_bit_identical_to_reference_across_reuse() {
+    let d = dims();
+    let bucket = 64usize;
+    let pool = BufferPool::new();
+    let mut warmed = false;
+    prop::check(40, |rng: &mut Rng| {
+        let plan = random_plan(rng, bucket);
+
+        // pooled / in-place / resident path, counters measured around it
+        let before = counters::snapshot();
+        let mut ctx = pool.checkout(&d, bucket, &plan.chunks).unwrap();
+        ctx.permute_chunks_in_place(&plan.order).unwrap();
+        ctx.patch(&plan.slots, &plan.sel_gpos, plan.count, &plan.new_k, &plan.new_v)
+            .unwrap();
+        let mut kv =
+            ResidentDecodeKv::from_context(&d, &ctx, &plan.prompt_k, &plan.prompt_v, &plan.prompt_pos)
+                .unwrap();
+        for (nk, nv) in &plan.appends {
+            kv.append(nk, nv).unwrap();
+        }
+        // counter delta captured BEFORE the reference path runs, so it
+        // covers only the pooled path's work
+        let delta = counters::snapshot().since(&before);
+
+        // stage 1: the mutated context equals a freshly assembled one
+        let (ref_ctx, ref_buf) = reference_path(&d, bucket, &plan);
+        prop::assert_prop(ctx.chunk_lens == ref_ctx.chunk_lens, "chunk_lens differ")?;
+        prop::assert_prop(ctx.tokens.data() == ref_ctx.tokens.data(), "tokens differ")?;
+        prop::assert_prop(ctx.gpos.data() == ref_ctx.gpos.data(), "gpos differ")?;
+        prop::assert_prop(ctx.valid.data() == ref_ctx.valid.data(), "valid differ")?;
+        prop::assert_prop(ctx.k.data() == ref_ctx.k.data(), "ctx k differs")?;
+        prop::assert_prop(ctx.v.data() == ref_ctx.v.data(), "ctx v differs")?;
+        drop(ctx); // back to the pool, as in the pipeline
+
+        // stage 2: the resident literal equals the reference decode buffer
+        prop::assert_prop(
+            kv.k_host().unwrap().data() == ref_buf.k.data(),
+            "decode k differs",
+        )?;
+        prop::assert_prop(
+            kv.v_host().unwrap().data() == ref_buf.v.data(),
+            "decode v differs",
+        )?;
+        prop::assert_prop(
+            kv.gpos_host().unwrap().data() == ref_buf.gpos.data(),
+            "decode gpos differs",
+        )?;
+        prop::assert_prop(
+            kv.valid_host().unwrap().data() == ref_buf.valid.data(),
+            "decode valid differs",
+        )?;
+        prop::assert_prop(
+            kv.next_row == ref_buf.next_row && kv.next_pos == ref_buf.next_pos,
+            "decode cursors differ",
+        )?;
+
+        // stage 3: the copy budget, once the pool is warm
+        if warmed {
+            prop::assert_prop(
+                delta.full_kv_copies == 1,
+                format!("steady state did {} full copies, want 1", delta.full_kv_copies),
+            )?;
+            prop::assert_prop(delta.ctx_allocs == 0, "steady state allocated a context")?;
+        }
+        warmed = true;
+        prop::assert_prop(
+            delta.decode_uploads_full == 1,
+            format!("{} decode-literal builds, want 1", delta.decode_uploads_full),
+        )?;
+        prop::assert_prop(
+            delta.decode_row_updates == plan.appends.len() as u64,
+            "append count mismatch",
+        )?;
+        Ok(())
+    });
+}

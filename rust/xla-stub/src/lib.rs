@@ -10,9 +10,16 @@
 //!   from it) return [`Error`] instead of panicking, so code paths that
 //!   need real compute degrade into ordinary `Result` failures and the
 //!   artifact-gated integration tests skip cleanly.
+//! * [`Literal::from_vec`] and [`Literal::write_sub`] are the incremental-
+//!   update entry points the resident decode buffer uses to build a literal
+//!   without an extra copy and to patch single KV rows in place between
+//!   decode steps.
 //!
 //! On a machine with real PJRT bindings, point the `xla` path dependency in
-//! `rust/Cargo.toml` at them; no `infoflow_kv` source changes are needed.
+//! `rust/Cargo.toml` at them through a thin shim crate: everything here maps
+//! 1:1 onto the real API except `from_vec`/`write_sub`, which the shim can
+//! implement over the bindings' mutable literal data accessors (or, at
+//! worst, degrade to a rebuild — correctness does not depend on them).
 
 use std::fmt;
 
@@ -39,6 +46,7 @@ fn unavailable(what: &str) -> Error {
 pub trait NativeType: Copy + Sized {
     fn wrap(data: Vec<Self>) -> LiteralData;
     fn unwrap(data: &LiteralData) -> Result<Vec<Self>>;
+    fn slice_mut(data: &mut LiteralData) -> Result<&mut [Self]>;
 }
 
 impl NativeType for f32 {
@@ -51,6 +59,12 @@ impl NativeType for f32 {
             _ => Err(Error("literal is not f32".into())),
         }
     }
+    fn slice_mut(data: &mut LiteralData) -> Result<&mut [Self]> {
+        match data {
+            LiteralData::F32(v) => Ok(v.as_mut_slice()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
 }
 
 impl NativeType for i32 {
@@ -60,6 +74,12 @@ impl NativeType for i32 {
     fn unwrap(data: &LiteralData) -> Result<Vec<Self>> {
         match data {
             LiteralData::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+    fn slice_mut(data: &mut LiteralData) -> Result<&mut [Self]> {
+        match data {
+            LiteralData::I32(v) => Ok(v.as_mut_slice()),
             _ => Err(Error("literal is not i32".into())),
         }
     }
@@ -96,6 +116,37 @@ impl Literal {
 
     pub fn scalar<T: NativeType>(v: T) -> Literal {
         Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    /// Build a literal by TAKING `data` (no copy), shaped as `dims`.
+    pub fn from_vec<T: NativeType>(data: Vec<T>, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != data.len() {
+            return Err(Error(format!(
+                "cannot shape {} elements as {dims:?}",
+                data.len()
+            )));
+        }
+        Ok(Literal { data: T::wrap(data), dims: dims.to_vec() })
+    }
+
+    /// Incremental in-place update: overwrite `values.len()` elements of the
+    /// flat (row-major) payload starting at element `offset`.  This is the
+    /// entry point that lets a resident decode buffer patch one appended KV
+    /// row per step instead of rebuilding the whole literal.
+    pub fn write_sub<T: NativeType>(&mut self, offset: usize, values: &[T]) -> Result<()> {
+        let slice = T::slice_mut(&mut self.data)?;
+        let end = offset.checked_add(values.len()).ok_or_else(|| {
+            Error(format!("write_sub: offset {offset} overflows"))
+        })?;
+        if end > slice.len() {
+            return Err(Error(format!(
+                "write_sub: [{offset}, {end}) out of bounds for {} elements",
+                slice.len()
+            )));
+        }
+        slice[offset..end].copy_from_slice(values);
+        Ok(())
     }
 
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
@@ -228,6 +279,28 @@ mod tests {
         let s = Literal::scalar(7i32);
         assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
         assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn from_vec_takes_ownership_and_checks_shape() {
+        let lit = Literal::from_vec(vec![1i32, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(Literal::from_vec(vec![1.0f32; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn write_sub_patches_in_place() {
+        let mut lit = Literal::from_vec(vec![0.0f32; 8], &[2, 4]).unwrap();
+        lit.write_sub(2, &[1.0f32, 2.0, 3.0]).unwrap();
+        assert_eq!(
+            lit.to_vec::<f32>().unwrap(),
+            vec![0.0, 0.0, 1.0, 2.0, 3.0, 0.0, 0.0, 0.0]
+        );
+        // out-of-bounds and wrong-dtype writes are errors, not corruption
+        assert!(lit.write_sub(6, &[1.0f32, 2.0, 3.0]).is_err());
+        assert!(lit.write_sub(0, &[1i32]).is_err());
+        assert_eq!(lit.to_vec::<f32>().unwrap()[6], 0.0);
     }
 
     #[test]
