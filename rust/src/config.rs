@@ -122,6 +122,14 @@ pub struct ServeConfig {
     /// Bound of the ingress request queue; submissions beyond it are
     /// rejected (backpressure) instead of buffered.
     pub queue_cap: usize,
+    /// Background prefetcher threads warming queued requests' chunks
+    /// (`repro serve --prefetch-threads`); 0 disables queue-driven
+    /// prefetch.  Each prefetcher owns its own `ModelSession`.
+    pub prefetch_threads: usize,
+    /// Directory for the chunk store's disk spill tier (`repro serve
+    /// --spill-dir`): evicted chunk KV is serialized there and re-admitted
+    /// on a later miss instead of re-prefilled.  `None` disables spilling.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -135,6 +143,8 @@ impl Default for ServeConfig {
             max_batch: 8,
             workers: 1,
             queue_cap: 64,
+            prefetch_threads: 1,
+            spill_dir: None,
         }
     }
 }

@@ -75,6 +75,14 @@ impl<T> Batcher<T> {
         let n = self.queue.len().min(self.cfg.max_batch);
         self.queue.drain(..n).map(|q| q.item).collect()
     }
+
+    /// Peek the queued items in FIFO order WITHOUT draining them.  The
+    /// coordinator's prefetch hook uses this after each dispatch: whatever
+    /// is still queued will wait at least one more batch window, so its
+    /// chunk ids are worth warming in the background.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.queue.iter().map(|q| &q.item)
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +142,21 @@ mod tests {
             }
             prop::assert_prop(popped == (0..n).collect::<Vec<_>>(), "order lost")
         });
+    }
+
+    #[test]
+    fn iter_peeks_without_draining() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(i, t0);
+        }
+        let peeked: Vec<i32> = b.iter().copied().collect();
+        assert_eq!(peeked, vec![0, 1, 2, 3, 4], "peek is FIFO");
+        assert_eq!(b.len(), 5, "peeking must not consume");
+        b.drain_batch();
+        let peeked: Vec<i32> = b.iter().copied().collect();
+        assert_eq!(peeked, vec![2, 3, 4], "peek tracks the queue head");
     }
 
     #[test]

@@ -118,6 +118,12 @@ impl MetricsRegistry {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Point-in-time copy of every counter (test/bench introspection
+    /// without parsing the JSON dump).
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().counters.clone()
+    }
+
     /// Number of observations recorded for a latency series (may exceed the
     /// retained reservoir size).
     pub fn observations(&self, name: &str) -> u64 {

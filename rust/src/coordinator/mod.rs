@@ -15,5 +15,5 @@ pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::MetricsRegistry;
-pub use server::{Handler, Request, Response, Served, Server, ServerConfig};
+pub use server::{Handler, PrefetchFn, Request, Response, Served, Server, ServerConfig};
 pub use session::SessionTable;

@@ -22,9 +22,19 @@
 //! synchronized, so concurrent requests overlap end-to-end; only cache
 //! lookups/inserts serialize, and only within a shard.
 //!
+//! **Queue-driven prefetch** (see [`Server::spawn_pool_with_prefetch`]): the
+//! router peeks queued requests' chunk lists — once when a request arrives
+//! and again for the next dispatch wave after each dispatch — and feeds
+//! them to a background prefetcher pool that warms misses through the chunk
+//! store's lifecycle API (`get_or_load`).  The single-flight registry makes
+//! the worker/prefetcher race harmless: whoever starts a chunk's load first
+//! owns it, everyone else shares the result, so a steady-state query finds
+//! its chunks resident.
+//!
 //! Shutdown is graceful and prompt: dropping the real request sender makes
 //! the router observe `Disconnected` immediately, drain what is queued into
-//! the work channel, and hang up on the workers, which drain and exit.
+//! the work channel, and hang up on the workers AND the prefetchers (their
+//! job channel's sender lives in the router), which drain and exit.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -37,7 +47,7 @@ use anyhow::{anyhow, Result};
 use crate::config::MethodSpec;
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::MetricsRegistry;
-use crate::kvcache::{ChunkStore, PoolStats};
+use crate::kvcache::{ChunkKv, ChunkStore, PoolStats};
 use crate::pipeline::Pipeline;
 use crate::util::json::Json;
 use crate::workload::Episode;
@@ -75,6 +85,15 @@ pub struct Served {
 /// handlers to exercise the concurrency machinery without model artifacts.
 pub type Handler = Box<dyn FnMut(&Request) -> Result<Served> + Send>;
 
+/// Per-prefetcher warm function: receives one queued request's chunk token
+/// lists and warms whatever is missing (best-effort — errors are its own
+/// business).  [`Server::spawn_pool_with_prefetch`] builds one per prefetch
+/// pipeline; tests inject synthetic ones.
+pub type PrefetchFn = Box<dyn FnMut(&[Vec<i32>]) + Send>;
+
+/// A prefetch job: one request's chunk token lists.
+type PrefetchJob = Vec<Vec<i32>>;
+
 /// Queueing/batching knobs for a server instance.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
@@ -103,6 +122,9 @@ pub struct Server {
     shared: Arc<Shared>,
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// Background prefetcher threads (their job sender lives inside the
+    /// router, so they observe disconnect as soon as the router exits).
+    prefetchers: Vec<JoinHandle<()>>,
     store: Option<Arc<ChunkStore>>,
     /// Per-worker buffer-pool counters (pipeline-backed servers only).  The
     /// pools themselves move into the worker threads with their pipelines;
@@ -126,11 +148,28 @@ impl Server {
         )
     }
 
-    /// Spawn a router + one worker per pipeline, all sharing `store`.
-    /// Sessions are per-worker (each `Pipeline` owns its `ModelSession`);
-    /// weights and compiled executables are shared through the `Runtime`.
+    /// Spawn a router + one worker per pipeline, all sharing `store`
+    /// (no prefetchers — see [`Server::spawn_pool_with_prefetch`]).
     pub fn spawn_pool(
         pipelines: Vec<Pipeline>,
+        store: ChunkStore,
+        cfg: ServerConfig,
+    ) -> Server {
+        Server::spawn_pool_with_prefetch(pipelines, Vec::new(), store, cfg)
+    }
+
+    /// Spawn a router + one worker per pipeline + one background prefetcher
+    /// per prefetch pipeline, all sharing `store`.  Sessions are per-thread
+    /// (each `Pipeline` owns its `ModelSession`); weights and compiled
+    /// executables are shared through the `Runtime`.
+    ///
+    /// Prefetchers warm queued requests' chunks through the store's
+    /// lifecycle API before a worker picks the request up; the store's
+    /// single-flight registry guarantees a prefetcher and a worker never
+    /// duplicate a prefill.
+    pub fn spawn_pool_with_prefetch(
+        pipelines: Vec<Pipeline>,
+        prefetch_pipelines: Vec<Pipeline>,
         store: ChunkStore,
         cfg: ServerConfig,
     ) -> Server {
@@ -157,7 +196,35 @@ impl Server {
                 }) as Handler
             })
             .collect();
-        let mut server = Server::spawn_handlers(handlers, cfg);
+        let prefetchers: Vec<PrefetchFn> = prefetch_pipelines
+            .into_iter()
+            .map(|p| {
+                let st = store.clone();
+                Box::new(move |chunks: &[Vec<i32>]| {
+                    for toks in chunks {
+                        let id = ChunkKv::content_id(toks);
+                        // Skip chunks that are resident or already being
+                        // loaded by someone else: parking on their flight
+                        // would serialize the prefetch queue behind one
+                        // in-flight prefill for no benefit.  (Best-effort:
+                        // a flight starting right after the check just
+                        // makes get_or_load share its result.)
+                        if st.contains(id) || st.in_flight(id) {
+                            continue;
+                        }
+                        // A failed warm just leaves the miss for the
+                        // worker; single-flight still applies.
+                        if let Err(e) = st.get_or_load(id, || {
+                            let (k, v) = p.session.prefill_chunk(toks)?;
+                            Ok(ChunkKv { id, tokens: toks.clone(), k, v })
+                        }) {
+                            eprintln!("[server] prefetch of chunk {id:#018x} failed: {e:#}");
+                        }
+                    }
+                }) as PrefetchFn
+            })
+            .collect();
+        let mut server = Server::spawn_handlers_with_prefetch(handlers, prefetchers, cfg);
         server.store = Some(store);
         server.pool_stats = pool_stats;
         server
@@ -166,6 +233,16 @@ impl Server {
     /// Spawn the router/worker machinery over arbitrary handlers — the
     /// seam used by concurrency tests and the coordinator bench.
     pub fn spawn_handlers(handlers: Vec<Handler>, cfg: ServerConfig) -> Server {
+        Server::spawn_handlers_with_prefetch(handlers, Vec::new(), cfg)
+    }
+
+    /// [`Server::spawn_handlers`] plus arbitrary prefetch warmers — the
+    /// artifact-free seam for testing the queue-driven prefetch machinery.
+    pub fn spawn_handlers_with_prefetch(
+        handlers: Vec<Handler>,
+        prefetchers: Vec<PrefetchFn>,
+        cfg: ServerConfig,
+    ) -> Server {
         assert!(!handlers.is_empty(), "server needs at least one worker");
         let (tx, rx) = sync_channel::<(Request, Instant)>(cfg.queue_cap);
         let shared = Arc::new(Shared { metrics: MetricsRegistry::new() });
@@ -185,16 +262,44 @@ impl Server {
                     .expect("spawning worker thread"),
             );
         }
+        // Prefetchers share one bounded job channel; its sender moves into
+        // the router, so prefetchers drain and exit when the router does.
+        let mut prefetch_threads = Vec::with_capacity(prefetchers.len());
+        let prefetch_tx = if prefetchers.is_empty() {
+            None
+        } else {
+            let (ptx, prx) = sync_channel::<PrefetchJob>(cfg.queue_cap.max(16));
+            let prx = Arc::new(Mutex::new(prx));
+            for (i, mut warm) in prefetchers.into_iter().enumerate() {
+                let rx = prx.clone();
+                let sh = shared.clone();
+                prefetch_threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("ifkv-prefetch-{i}"))
+                        .spawn(move || loop {
+                            let job = match rx.lock().unwrap().recv() {
+                                Ok(j) => j,
+                                Err(_) => break, // router gone: drain done
+                            };
+                            warm(&job);
+                            sh.metrics.incr("prefetch_jobs");
+                        })
+                        .expect("spawning prefetch thread"),
+                );
+            }
+            Some(ptx)
+        };
         let sh = shared.clone();
         let router = std::thread::Builder::new()
             .name("ifkv-router".into())
-            .spawn(move || router_loop(cfg.batch, rx, work_tx, sh, n_workers))
+            .spawn(move || router_loop(cfg.batch, rx, work_tx, prefetch_tx, sh, n_workers))
             .expect("spawning router thread");
         Server {
             tx: Some(tx),
             shared,
             router: Some(router),
             workers,
+            prefetchers: prefetch_threads,
             store: None,
             pool_stats: Vec::new(),
         }
@@ -261,12 +366,16 @@ impl Server {
     fn finish(&mut self) {
         // The Server holds the only request sender, so dropping it is the
         // complete (and race-free) stop signal: the router drains what is
-        // buffered, hangs up on the workers, and everything joins.
+        // buffered, hangs up on the workers (work channel) and prefetchers
+        // (job channel), and everything joins.
         drop(self.tx.take());
         if let Some(h) = self.router.take() {
             let _ = h.join();
         }
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.prefetchers.drain(..) {
             let _ = h.join();
         }
     }
@@ -282,6 +391,7 @@ fn router_loop(
     batch_cfg: BatcherConfig,
     rx: Receiver<(Request, Instant)>,
     work_tx: SyncSender<Batch>,
+    prefetch_tx: Option<SyncSender<PrefetchJob>>,
     shared: Arc<Shared>,
     n_workers: usize,
 ) {
@@ -290,7 +400,10 @@ fn router_loop(
         let now = Instant::now();
         let timeout = batcher.time_to_deadline(now).unwrap_or(IDLE_PARK);
         match rx.recv_timeout(timeout) {
-            Ok(item) => batcher.push(item, Instant::now()),
+            Ok(item) => {
+                schedule_prefetch(&prefetch_tx, &item.0, &shared);
+                batcher.push(item, Instant::now());
+            }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 // All senders gone (shutdown or caller dropped the server):
@@ -304,13 +417,41 @@ fn router_loop(
         }
         // opportunistically drain everything already queued
         while let Ok(item) = rx.try_recv() {
+            schedule_prefetch(&prefetch_tx, &item.0, &shared);
             batcher.push(item, Instant::now());
         }
         if batcher.ready(Instant::now()) {
             dispatch(&mut batcher, &work_tx, &shared, n_workers);
+            // Re-peek the NEXT dispatch wave so the prefetchers keep its
+            // chunks warm (idempotent — resident chunks are skipped).
+            // Bounded to one batch: re-scheduling the whole queue would
+            // clone every queued request's chunk list per dispatch on the
+            // serial router thread for mostly-duplicate hints.
+            for item in batcher.iter().take(batch_cfg.max_batch) {
+                schedule_prefetch(&prefetch_tx, &item.0, &shared);
+            }
         }
     }
-    // work_tx drops here; workers drain their channel and exit.
+    // work_tx (and the prefetch job sender) drop here; workers and
+    // prefetchers drain their channels and exit.
+}
+
+/// Best-effort prefetch scheduling: a full job channel drops the hint (the
+/// worker will resolve the miss itself) rather than ever stalling the
+/// router.
+fn schedule_prefetch(
+    tx: &Option<SyncSender<PrefetchJob>>,
+    req: &Request,
+    shared: &Shared,
+) {
+    let Some(tx) = tx else { return };
+    if req.episode.chunks.is_empty() {
+        return;
+    }
+    match tx.try_send(req.episode.chunks.clone()) {
+        Ok(()) => shared.metrics.incr("prefetch_scheduled"),
+        Err(_) => shared.metrics.incr("prefetch_dropped"),
+    }
 }
 
 fn dispatch(
@@ -572,6 +713,110 @@ mod tests {
         assert_eq!(server.metrics().counter("handler_panics"), 1);
         assert_eq!(server.metrics().counter("requests_ok"), 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn prefetcher_warms_queued_request_before_its_worker() {
+        use std::collections::HashSet;
+        // One worker wedged on a gate: the second request sits queued while
+        // the prefetcher (scheduled by the router at push time) warms its
+        // chunks.  The handler reports whether the chunks were warm when it
+        // finally ran.
+        let warmed: Arc<Mutex<HashSet<Vec<i32>>>> = Arc::new(Mutex::new(HashSet::new()));
+        let warm_fn: PrefetchFn = {
+            let warmed = warmed.clone();
+            Box::new(move |chunks: &[Vec<i32>]| {
+                let mut g = warmed.lock().unwrap();
+                for c in chunks {
+                    g.insert(c.clone());
+                }
+            })
+        };
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let handler: Handler = {
+            let warmed = warmed.clone();
+            Box::new(move |req: &Request| {
+                gate_rx.recv().map_err(|_| anyhow!("gate closed"))?;
+                let all_warm = req
+                    .episode
+                    .chunks
+                    .iter()
+                    .all(|c| warmed.lock().unwrap().contains(c));
+                Ok(Served {
+                    answer: vec![i32::from(all_warm)],
+                    ttft_s: 1e-6,
+                    total_s: 1e-6,
+                })
+            })
+        };
+        let cfg = ServerConfig {
+            batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            queue_cap: 16,
+        };
+        let server = Server::spawn_handlers_with_prefetch(vec![handler], vec![warm_fn], cfg);
+        let mk_req = |tag: i32| Episode {
+            chunks: vec![vec![tag, tag + 1, tag + 2]],
+            prompt: vec![4],
+            answer: vec![5],
+            needle_chunks: vec![],
+            task: "test",
+        };
+        let (rtx1, rrx1) = sync_channel(1);
+        server
+            .submit(Request { episode: mk_req(10), method: MethodSpec::Baseline, respond: rtx1 })
+            .unwrap();
+        let (rtx2, rrx2) = sync_channel(1);
+        server
+            .submit(Request { episode: mk_req(20), method: MethodSpec::Baseline, respond: rtx2 })
+            .unwrap();
+        // Wait for the prefetcher to warm the second request's chunks, then
+        // release the worker for both requests.
+        let key: Vec<i32> = vec![20, 21, 22];
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !warmed.lock().unwrap().contains(&key) {
+            assert!(Instant::now() < deadline, "prefetcher never warmed the queued request");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        let _ = rrx1.recv().unwrap();
+        let r2 = rrx2.recv().unwrap();
+        assert_eq!(r2.answer, vec![1], "queued request must find its chunks warm");
+        assert!(server.metrics().counter("prefetch_scheduled") >= 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_scheduled_prefetch_jobs() {
+        // Every job the router managed to schedule must be processed before
+        // shutdown returns — prefetchers drain their channel, they are not
+        // killed mid-queue.
+        let processed = Arc::new(AtomicUsize::new(0));
+        let warm_fn: PrefetchFn = {
+            let processed = processed.clone();
+            Box::new(move |_chunks: &[Vec<i32>]| {
+                processed.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        let server = Server::spawn_handlers_with_prefetch(
+            vec![instant_handler()],
+            vec![warm_fn],
+            ServerConfig::default(),
+        );
+        let receivers: Vec<_> = (0..8).map(|_| submit_one(&server)).collect();
+        for rrx in receivers {
+            rrx.recv().unwrap();
+        }
+        let shared = server.shared.clone(); // metrics outlive the server
+        server.shutdown();
+        let scheduled = shared.metrics.counter("prefetch_scheduled");
+        let jobs = shared.metrics.counter("prefetch_jobs");
+        assert!(scheduled >= 8, "router must schedule every pushed request");
+        assert_eq!(
+            jobs, scheduled,
+            "shutdown must drain every scheduled prefetch job"
+        );
+        assert_eq!(processed.load(Ordering::SeqCst) as u64, jobs);
     }
 
     #[test]

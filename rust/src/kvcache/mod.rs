@@ -1,17 +1,21 @@
 //! Chunk-level KV cache management: the store (offline prefilled chunks,
 //! sharded + internally synchronized, per-shard LRU under a byte budget,
-//! disk persistence), the per-query assembly/layout machinery (padded
-//! context buffers assembled once, in-place permutation and row patching,
-//! the decode buffer), the per-worker buffer pool that recycles those
-//! assembly buffers, and the copy/alloc counters that keep the hot path
-//! honest.
+//! disk persistence), the chunk lifecycle around it (disk spill tier,
+//! single-flight miss resolution — see [`store::ChunkStore::get_or_load`]
+//! and [`tier::SpillTier`]), the per-query assembly/layout machinery
+//! (padded context buffers assembled once, in-place permutation and row
+//! patching, the decode buffer), the per-worker buffer pool that recycles
+//! those assembly buffers, and the copy/alloc counters that keep the hot
+//! path honest.
 
 pub mod counters;
 pub mod layout;
 pub mod pool;
 pub mod store;
+pub mod tier;
 
 pub use counters::CopySnapshot;
 pub use layout::{AssembledContext, DecodeBuffer};
 pub use pool::{BufferPool, PoolStats, PooledContext};
-pub use store::{ChunkId, ChunkKv, ChunkStore, StoreStats, DEFAULT_SHARDS};
+pub use store::{ChunkId, ChunkKv, ChunkStore, LifecycleStats, StoreStats, DEFAULT_SHARDS};
+pub use tier::SpillTier;

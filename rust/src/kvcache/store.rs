@@ -10,16 +10,35 @@
 //! with a per-shard monotonic counter (O(1) touch; eviction scans the shard
 //! for the oldest unpinned entry, which is rare and shard-local), replacing
 //! the old `Vec::position` LRU list.
+//!
+//! On top of the resident tier the store owns the **chunk lifecycle**:
+//!
+//! * an optional disk **spill tier** ([`super::tier::SpillTier`]): eviction
+//!   serializes the chunk to a per-chunk file instead of discarding it, and
+//!   a later miss deserializes it back (bit-identical) instead of paying a
+//!   full prefill;
+//! * a per-chunk **single-flight registry**: concurrent misses of the same
+//!   id share ONE resolution (prefill or spill admission) — followers block
+//!   on the leader's flight slot instead of duplicating the work, proven by
+//!   the [`LifecycleStats::duplicate_prefills`] tripwire counter;
+//! * [`ChunkStore::get_or_load`], the miss-resolution entry point the
+//!   pipeline and the coordinator's prefetcher both go through.
+//!
+//! Invariant maintained across all of it: a chunk id is never resident in
+//! the store and spilled on disk at the same time (admission removes the
+//! file before inserting; eviction removes the entry before writing, under
+//! the id's flight slot).
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kvcache::tier::SpillTier;
 use crate::tensor::TensorF;
 use crate::util::json::Json;
 
@@ -90,6 +109,113 @@ impl StoreStats {
     }
 }
 
+/// Cross-thread lifecycle honesty counters.  `kvcache::counters` is
+/// thread-local by design; miss resolution is inherently cross-thread, so
+/// these live as atomics on the store itself.
+#[derive(Debug, Default)]
+pub struct LifecycleStats {
+    /// Loader (prefill) invocations performed via [`ChunkStore::get_or_load`].
+    pub prefills: AtomicU64,
+    /// Loader invocations that completed while the chunk was ALREADY
+    /// resident — exactly the wasted work the single-flight registry exists
+    /// to prevent.  Must read 0 when every miss goes through `get_or_load`.
+    pub duplicate_prefills: AtomicU64,
+    /// Misses satisfied by deserializing a spilled chunk instead of a
+    /// prefill (the disk tier's "hits").
+    pub spill_admits: AtomicU64,
+    /// Evicted chunks serialized to the spill tier.
+    pub spills: AtomicU64,
+    /// Spill/admission IO failures (the chunk falls back to re-prefill).
+    pub spill_errors: AtomicU64,
+    /// Followers that blocked on another thread's in-flight resolution.
+    pub single_flight_waits: AtomicU64,
+}
+
+impl LifecycleStats {
+    fn json(&self) -> Json {
+        let g = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("prefills", g(&self.prefills)),
+            ("duplicate_prefills", g(&self.duplicate_prefills)),
+            ("spill_admits", g(&self.spill_admits)),
+            ("spills", g(&self.spills)),
+            ("spill_errors", g(&self.spill_errors)),
+            ("single_flight_waits", g(&self.single_flight_waits)),
+        ])
+    }
+}
+
+/// Per-chunk single-flight registry: at most one thread resolves a given
+/// chunk id at a time (prefill, spill admission, or spill write); everyone
+/// else either waits on the leader's slot or skips.
+#[derive(Default)]
+struct Flights {
+    slots: Mutex<HashMap<ChunkId, Arc<FlightSlot>>>,
+}
+
+#[derive(Default)]
+struct FlightSlot {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl FlightSlot {
+    fn wait(&self) {
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+enum FlightTicket {
+    Leader,
+    Follower(Arc<FlightSlot>),
+}
+
+impl Flights {
+    fn begin(&self, id: ChunkId) -> FlightTicket {
+        let mut g = self.slots.lock().unwrap();
+        match g.get(&id) {
+            Some(slot) => FlightTicket::Follower(slot.clone()),
+            None => {
+                g.insert(id, Arc::new(FlightSlot::default()));
+                FlightTicket::Leader
+            }
+        }
+    }
+
+    /// Non-blocking: become leader for `id` or give up immediately.
+    fn try_begin(&self, id: ChunkId) -> bool {
+        let mut g = self.slots.lock().unwrap();
+        if g.contains_key(&id) {
+            return false;
+        }
+        g.insert(id, Arc::new(FlightSlot::default()));
+        true
+    }
+
+    fn end(&self, id: ChunkId) {
+        let slot = self.slots.lock().unwrap().remove(&id);
+        if let Some(s) = slot {
+            *s.done.lock().unwrap() = true;
+            s.cv.notify_all();
+        }
+    }
+}
+
+/// Ends the flight (waking all followers) even when the leader errors out.
+struct FlightGuard<'a> {
+    flights: &'a Flights,
+    id: ChunkId,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        self.flights.end(self.id);
+    }
+}
+
 struct Entry {
     chunk: Arc<ChunkKv>,
     /// Shard-local recency tick; larger = more recently used.
@@ -117,10 +243,13 @@ impl Shard {
         }
     }
 
-    /// Evict oldest unpinned entries until the shard fits its budget.  The
-    /// entry being inserted right now carries one extra strong count (the
-    /// `Arc` that `insert()` is about to hand back).
-    fn evict_to_budget(&mut self, inserting: Option<ChunkId>) {
+    /// Evict oldest unpinned entries until the shard fits its budget,
+    /// returning the evicted chunks so the caller can spill them to disk
+    /// OUTSIDE the shard lock.  The entry being inserted right now carries
+    /// one extra strong count (the `Arc` that `insert()` is about to hand
+    /// back).
+    fn evict_to_budget(&mut self, inserting: Option<ChunkId>) -> Vec<Arc<ChunkKv>> {
+        let mut victims = Vec::new();
         while self.bytes > self.budget_bytes {
             let victim = self
                 .entries
@@ -136,12 +265,14 @@ impl Shard {
                     if let Some(e) = self.entries.remove(&id) {
                         self.bytes -= e.chunk.nbytes();
                         self.stats.evictions += 1;
+                        victims.push(e.chunk);
                     }
                 }
                 // Everything left is pinned by in-flight requests.
                 None => break,
             }
         }
+        victims
     }
 }
 
@@ -158,6 +289,11 @@ pub struct ChunkStore {
     shard_mask: usize,
     /// Cumulative nanoseconds spent waiting to acquire shard locks.
     lock_wait_ns: AtomicU64,
+    /// Optional disk tier: evictions spill here, misses re-admit from here.
+    spill: Option<Arc<SpillTier>>,
+    /// Per-chunk single-flight slots for miss resolution and spill writes.
+    flights: Flights,
+    life: LifecycleStats,
 }
 
 impl ChunkStore {
@@ -174,7 +310,45 @@ impl ChunkStore {
             shards: (0..n).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
             shard_mask: n - 1,
             lock_wait_ns: AtomicU64::new(0),
+            spill: None,
+            flights: Flights::default(),
+            life: LifecycleStats::default(),
         }
+    }
+
+    /// A sharded store with a disk spill tier attached.
+    pub fn with_spill(
+        budget_bytes: usize,
+        n_shards: usize,
+        tier: Arc<SpillTier>,
+    ) -> ChunkStore {
+        let mut s = ChunkStore::with_shards(budget_bytes, n_shards);
+        s.set_spill_tier(tier);
+        s
+    }
+
+    /// Attach a disk spill tier (before the store is shared): evictions
+    /// serialize to it and [`ChunkStore::get_or_load`] re-admits from it
+    /// instead of re-prefilling.
+    pub fn set_spill_tier(&mut self, tier: Arc<SpillTier>) {
+        self.spill = Some(tier);
+    }
+
+    pub fn spill_tier(&self) -> Option<&SpillTier> {
+        self.spill.as_deref()
+    }
+
+    /// Lifecycle counters (single-flight + spill-tier accounting).
+    pub fn lifecycle(&self) -> &LifecycleStats {
+        &self.life
+    }
+
+    /// Whether someone is resolving `id` right now.  Best-effort (the
+    /// answer can be stale by the time the caller acts on it); used by the
+    /// prefetcher to skip chunks a worker is already loading instead of
+    /// parking on their flight slots.
+    pub fn in_flight(&self, id: ChunkId) -> bool {
+        self.flights.slots.lock().unwrap().contains_key(&id)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -242,7 +416,7 @@ impl ChunkStore {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut entries = vec![
             ("hits", Json::from(agg.hits as f64)),
             ("misses", Json::from(agg.misses as f64)),
             ("insertions", Json::from(agg.insertions as f64)),
@@ -250,7 +424,12 @@ impl ChunkStore {
             ("bytes", Json::from(agg.bytes)),
             ("lock_wait_ms", Json::from(self.lock_wait_s() * 1e3)),
             ("shards", Json::Arr(shard_objs)),
-        ])
+            ("lifecycle", self.life.json()),
+        ];
+        if let Some(tier) = &self.spill {
+            entries.push(("spill_tier", tier.stats_json()));
+        }
+        Json::obj(entries)
     }
 
     pub fn len(&self) -> usize {
@@ -286,26 +465,202 @@ impl ChunkStore {
         }
     }
 
-    pub fn insert(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
-        let id = chunk.id;
-        let arc = Arc::new(chunk);
+    /// Uncounted lookup (no hit/miss accounting): used by the lifecycle
+    /// machinery for re-checks, so stats keep meaning "one logical lookup,
+    /// one hit-or-miss".
+    fn probe(&self, id: ChunkId) -> Option<Arc<ChunkKv>> {
         let mut guard = self.lock_shard(id);
         let sh = &mut *guard;
         sh.tick += 1;
-        let entry = Entry { chunk: arc.clone(), last_used: sh.tick };
-        sh.bytes += arc.nbytes();
-        if let Some(old) = sh.entries.insert(id, entry) {
-            // Concurrent workers may race to prefill the same content id;
-            // last write wins and the accounting stays balanced.
-            sh.bytes -= old.chunk.nbytes();
-        }
-        sh.stats.insertions += 1;
-        sh.evict_to_budget(Some(id));
+        let tick = sh.tick;
+        sh.entries.get_mut(&id).map(|e| {
+            e.last_used = tick;
+            e.chunk.clone()
+        })
+    }
+
+    pub fn insert(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
+        let id = chunk.id;
+        let arc = Arc::new(chunk);
+        let victims = {
+            let mut guard = self.lock_shard(id);
+            let sh = &mut *guard;
+            sh.tick += 1;
+            let entry = Entry { chunk: arc.clone(), last_used: sh.tick };
+            sh.bytes += arc.nbytes();
+            if let Some(old) = sh.entries.insert(id, entry) {
+                // Concurrent workers may race to prefill the same content id;
+                // last write wins and the accounting stays balanced.
+                sh.bytes -= old.chunk.nbytes();
+            }
+            sh.stats.insertions += 1;
+            sh.evict_to_budget(Some(id))
+        };
+        self.spill_victims(id, victims);
         arc
     }
 
+    /// Spill freshly evicted chunks to the disk tier, outside every shard
+    /// lock.  Each victim is written under its own single-flight slot so a
+    /// concurrent `get_or_load` of the same id either wins (and we skip the
+    /// spill — it is about to be resident again) or only sees the finished
+    /// file.
+    fn spill_victims(&self, inserted: ChunkId, victims: Vec<Arc<ChunkKv>>) {
+        let Some(tier) = &self.spill else { return };
+        // An insert of a previously spilled id makes that file stale; drop
+        // it so no chunk stays resident and spilled at the same time.  This
+        // WAITS for the id's flight if one is active — almost always just a
+        // spill write in progress (admission and loader flights consume the
+        // id's file up front), so raw inserts effectively never block; only
+        // the lifecycle API is hot-path anyway.
+        if tier.contains(inserted) {
+            loop {
+                match self.flights.begin(inserted) {
+                    FlightTicket::Leader => {
+                        let _g = FlightGuard { flights: &self.flights, id: inserted };
+                        tier.discard(inserted);
+                        break;
+                    }
+                    FlightTicket::Follower(slot) => slot.wait(),
+                }
+            }
+        }
+        for v in victims {
+            if !self.flights.try_begin(v.id) {
+                // Someone is resolving this id right now; spilling a chunk
+                // that is about to be resident again would break the
+                // resident-xor-spilled invariant.  Skip it.
+                continue;
+            }
+            let _g = FlightGuard { flights: &self.flights, id: v.id };
+            self.spill_one(tier, &v);
+        }
+    }
+
+    /// Write one evicted chunk to the tier.  MUST be called with the
+    /// chunk's flight held.  Re-checks residency around the write so an
+    /// insert racing the eviction always ends with exactly one live copy.
+    fn spill_one(&self, tier: &Arc<SpillTier>, chunk: &Arc<ChunkKv>) {
+        if self.probe(chunk.id).is_some() {
+            return; // re-inserted between eviction and spill
+        }
+        match tier.spill(chunk) {
+            Ok(()) => {
+                self.life.spills.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.life.spill_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[kvcache] spill of chunk {:#018x} failed: {e:#}", chunk.id);
+            }
+        }
+        if self.probe(chunk.id).is_some() {
+            // An insert raced the write (it will have found our flight busy
+            // and skipped its own cleanup, or blocked until we release);
+            // the resident copy wins.
+            tier.discard(chunk.id);
+        }
+    }
+
+    /// Insert a chunk whose flight slot the CALLING thread holds.  If the
+    /// insertion instantly evicted the chunk again (budget smaller than the
+    /// live working set), spill it under our own flight — `spill_victims`
+    /// had to skip it because the slot was taken (by us) — so the chunk is
+    /// moved to disk instead of silently dropped.
+    fn insert_under_flight(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
+        let id = chunk.id;
+        let arc = self.insert(chunk);
+        if let Some(tier) = &self.spill {
+            // `insert` saw our flight on this id and skipped both the
+            // stale-file check (no file exists on any under-flight path)
+            // and, had we been evicted, the victim spill — so do the spill
+            // ourselves while we still own the slot.
+            self.spill_one(tier, &arc);
+        }
+        arc
+    }
+
+    /// The lifecycle miss-resolution API: return the resident chunk, or
+    /// re-admit it from the spill tier, or run `load` (a prefill) — with
+    /// concurrent callers for the same id sharing ONE resolution through
+    /// the single-flight registry.  [`LifecycleStats::duplicate_prefills`]
+    /// stays 0 exactly when no prefill work was ever duplicated.
+    ///
+    /// `load` runs outside every lock; only the per-id flight slot is held
+    /// across it, so loads of *different* chunks proceed in parallel.
+    ///
+    /// Protocol note: with a spill tier attached, raw [`ChunkStore::insert`]
+    /// remains safe for bulk load/restore, but mixing raw inserts and
+    /// `get_or_load` for the SAME id concurrently can leave a transient
+    /// redundant spill file (content-identical by construction, since ids
+    /// are content hashes).  The lifecycle API alone maintains the strict
+    /// resident-xor-spilled invariant.
+    pub fn get_or_load(
+        &self,
+        id: ChunkId,
+        load: impl FnOnce() -> Result<ChunkKv>,
+    ) -> Result<Arc<ChunkKv>> {
+        if let Some(c) = self.get(id) {
+            return Ok(c);
+        }
+        let mut load = Some(load);
+        loop {
+            match self.flights.begin(id) {
+                FlightTicket::Leader => {
+                    let _guard = FlightGuard { flights: &self.flights, id };
+                    // A previous leader may have finished between our miss
+                    // and taking the flight.
+                    if let Some(c) = self.probe(id) {
+                        return Ok(c);
+                    }
+                    if let Some(tier) = &self.spill {
+                        match tier.take(id) {
+                            Ok(Some(chunk)) => {
+                                self.life.spill_admits.fetch_add(1, Ordering::Relaxed);
+                                return Ok(self.insert_under_flight(chunk));
+                            }
+                            Ok(None) => {}
+                            Err(e) => {
+                                self.life.spill_errors.fetch_add(1, Ordering::Relaxed);
+                                eprintln!(
+                                    "[kvcache] admitting chunk {id:#018x} failed ({e:#}); re-prefilling"
+                                );
+                            }
+                        }
+                    }
+                    let load = load.take().ok_or_else(|| {
+                        anyhow!("chunk {id:#018x}: loader consumed by an earlier attempt")
+                    })?;
+                    self.life.prefills.fetch_add(1, Ordering::Relaxed);
+                    let chunk = load()?;
+                    if chunk.id != id {
+                        bail!(
+                            "loader produced chunk {:#018x} for id {id:#018x}",
+                            chunk.id
+                        );
+                    }
+                    if self.contains(id) {
+                        // Unreachable through this API; the counter is the
+                        // tripwire the concurrency tests assert on.
+                        self.life.duplicate_prefills.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(self.insert_under_flight(chunk));
+                }
+                FlightTicket::Follower(slot) => {
+                    self.life.single_flight_waits.fetch_add(1, Ordering::Relaxed);
+                    slot.wait();
+                    if let Some(c) = self.probe(id) {
+                        return Ok(c);
+                    }
+                    // The leader failed (or the chunk was already evicted
+                    // again): take the lead ourselves on the next spin.
+                }
+            }
+        }
+    }
+
     // -- persistence ---------------------------------------------------------
-    // Format (little-endian): magic "IFKV1\0\0\0", then per chunk:
+    // Record format (little-endian), shared with the spill tier
+    // (`kvcache::tier`): magic "IFKV1\0\0\0" once per file, then per chunk:
     //   id u64 | n_tokens u32 | k_rank u32 | k dims u32* | tokens i32* |
     //   k f32* | v f32*   (v has the same dims as k)
 
@@ -318,26 +673,14 @@ impl ChunkStore {
             snapshot.extend(g.entries.values().map(|e| (e.last_used, e.chunk.clone())));
         }
         snapshot.sort_by_key(|e| (e.0, e.1.id));
-        let mut f = std::fs::File::create(path)
+        let f = std::fs::File::create(path)
             .map_err(|e| anyhow!("creating {}: {e}", path.display()))?;
-        f.write_all(b"IFKV1\0\0\0")?;
+        let mut w = BufWriter::new(f);
+        w.write_all(STORE_MAGIC)?;
         for (_, e) in &snapshot {
-            f.write_all(&e.id.to_le_bytes())?;
-            f.write_all(&(e.tokens.len() as u32).to_le_bytes())?;
-            f.write_all(&(e.k.shape().len() as u32).to_le_bytes())?;
-            for &d in e.k.shape() {
-                f.write_all(&(d as u32).to_le_bytes())?;
-            }
-            for &t in &e.tokens {
-                f.write_all(&t.to_le_bytes())?;
-            }
-            for &x in e.k.data() {
-                f.write_all(&x.to_le_bytes())?;
-            }
-            for &x in e.v.data() {
-                f.write_all(&x.to_le_bytes())?;
-            }
+            write_chunk_record(&mut w, e.as_ref())?;
         }
+        w.flush()?;
         Ok(())
     }
 
@@ -345,75 +688,144 @@ impl ChunkStore {
         ChunkStore::load_with_shards(path, budget_bytes, DEFAULT_SHARDS)
     }
 
+    /// Stream the store file chunk-by-chunk through a buffered reader:
+    /// startup memory is bounded by ONE chunk, not the whole file (stores
+    /// are routinely orders of magnitude larger than a chunk).
     pub fn load_with_shards(
         path: &Path,
         budget_bytes: usize,
         n_shards: usize,
     ) -> Result<ChunkStore> {
-        let mut bytes = Vec::new();
-        std::fs::File::open(path)
-            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?
-            .read_to_end(&mut bytes)?;
-        if bytes.len() < 8 || &bytes[..8] != b"IFKV1\0\0\0" {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+        let total = f.metadata()?.len();
+        if total < 8 {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != STORE_MAGIC {
             bail!("{}: bad magic", path.display());
         }
         let store = ChunkStore::with_shards(budget_bytes, n_shards);
-        let mut off = 8usize;
-        let rd_u32 = |b: &[u8], o: &mut usize| -> Result<u32> {
-            if b.len() - *o < 4 {
-                bail!("truncated store file");
-            }
-            let v = u32::from_le_bytes(b[*o..*o + 4].try_into().unwrap());
-            *o += 4;
-            Ok(v)
-        };
-        while off < bytes.len() {
-            if bytes.len() - off < 8 {
-                bail!("truncated chunk header");
-            }
-            let id = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
-            off += 8;
-            let n_tokens = rd_u32(&bytes, &mut off)? as usize;
-            let rank = rd_u32(&bytes, &mut off)? as usize;
-            if rank > MAX_RANK {
-                bail!("implausible tensor rank {rank} (corrupt file?)");
-            }
-            let mut dims = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                dims.push(rd_u32(&bytes, &mut off)? as usize);
-            }
-            // All size arithmetic checked: garbage headers must produce an
-            // error, not an overflow-wrapped bound that lets slicing panic.
-            let n_kv = dims
-                .iter()
-                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-                .ok_or_else(|| anyhow!("tensor dims overflow (corrupt file?)"))?;
-            let need = n_tokens
-                .checked_mul(4)
-                .and_then(|t| n_kv.checked_mul(8).and_then(|kv| t.checked_add(kv)))
-                .ok_or_else(|| anyhow!("chunk size overflow (corrupt file?)"))?;
-            if bytes.len() - off < need {
-                bail!("truncated chunk body");
-            }
-            let mut tokens = Vec::with_capacity(n_tokens);
-            for _ in 0..n_tokens {
-                tokens.push(i32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-                off += 4;
-            }
-            let read_f32s = |n: usize, o: &mut usize| {
-                let mut v = Vec::with_capacity(n);
-                for _ in 0..n {
-                    v.push(f32::from_le_bytes(bytes[*o..*o + 4].try_into().unwrap()));
-                    *o += 4;
-                }
-                v
-            };
-            let k = TensorF::from_vec(&dims, read_f32s(n_kv, &mut off))?;
-            let v = TensorF::from_vec(&dims, read_f32s(n_kv, &mut off))?;
-            store.insert(ChunkKv { id, tokens, k, v });
+        let mut remaining = total - 8;
+        while let Some(chunk) = read_chunk_record(&mut r, &mut remaining)
+            .map_err(|e| anyhow!("{}: {e:#}", path.display()))?
+        {
+            store.insert(chunk);
         }
         Ok(store)
     }
+}
+
+pub(crate) const STORE_MAGIC: &[u8; 8] = b"IFKV1\0\0\0";
+
+/// Serialize one chunk record (no magic — that is per file) to `w`.
+pub(crate) fn write_chunk_record<W: Write>(w: &mut W, c: &ChunkKv) -> Result<()> {
+    w.write_all(&c.id.to_le_bytes())?;
+    w.write_all(&(c.tokens.len() as u32).to_le_bytes())?;
+    w.write_all(&(c.k.shape().len() as u32).to_le_bytes())?;
+    for &d in c.k.shape() {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    for &t in &c.tokens {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    for &x in c.k.data() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    for &x in c.v.data() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Fill `buf` from `r`, distinguishing clean EOF (zero bytes read, `false`)
+/// from a mid-record truncation (hard error).
+fn read_full_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(false);
+            }
+            bail!("truncated chunk record");
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
+fn rd_u32<R: Read>(r: &mut R, remaining: &mut u64) -> Result<u32> {
+    let mut b = [0u8; 4];
+    if !read_full_or_eof(r, &mut b)? {
+        bail!("truncated chunk header");
+    }
+    *remaining = remaining.saturating_sub(4);
+    Ok(u32::from_le_bytes(b))
+}
+
+fn rd_f32s<R: Read>(r: &mut R, n: usize, remaining: &mut u64) -> Result<Vec<f32>> {
+    let mut b = vec![0u8; n * 4];
+    if !read_full_or_eof(r, &mut b)? {
+        bail!("truncated chunk body");
+    }
+    *remaining = remaining.saturating_sub(b.len() as u64);
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Deserialize the next chunk record from `r`, or `None` at clean EOF.
+/// `remaining` tracks how many payload bytes the stream can still supply, so
+/// a corrupt header can never provoke an over-allocation: memory use is
+/// bounded by one plausible chunk regardless of what the header claims.
+pub(crate) fn read_chunk_record<R: Read>(
+    r: &mut R,
+    remaining: &mut u64,
+) -> Result<Option<ChunkKv>> {
+    let mut idb = [0u8; 8];
+    if !read_full_or_eof(r, &mut idb)? {
+        return Ok(None);
+    }
+    *remaining = remaining.saturating_sub(8);
+    let id = u64::from_le_bytes(idb);
+    let n_tokens = rd_u32(r, remaining)? as usize;
+    let rank = rd_u32(r, remaining)? as usize;
+    if rank > MAX_RANK {
+        bail!("implausible tensor rank {rank} (corrupt file?)");
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(rd_u32(r, remaining)? as usize);
+    }
+    // All size arithmetic checked: garbage headers must produce an error,
+    // not an overflow-wrapped bound that lets an allocation explode.
+    let n_kv = dims
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow!("tensor dims overflow (corrupt file?)"))?;
+    let need = n_tokens
+        .checked_mul(4)
+        .and_then(|t| n_kv.checked_mul(8).and_then(|kv| t.checked_add(kv)))
+        .ok_or_else(|| anyhow!("chunk size overflow (corrupt file?)"))?;
+    if need as u64 > *remaining {
+        bail!("truncated chunk body (record wants {need} bytes, {remaining} left)");
+    }
+    let mut tb = vec![0u8; n_tokens * 4];
+    if !read_full_or_eof(r, &mut tb)? {
+        bail!("truncated chunk body");
+    }
+    *remaining = remaining.saturating_sub(tb.len() as u64);
+    let tokens: Vec<i32> = tb
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let k = TensorF::from_vec(&dims, rd_f32s(r, n_kv, remaining)?)?;
+    let v = TensorF::from_vec(&dims, rd_f32s(r, n_kv, remaining)?)?;
+    Ok(Some(ChunkKv { id, tokens, k, v }))
 }
 
 #[cfg(test)]
@@ -571,6 +983,44 @@ mod tests {
             assert!(res.is_err(), "{name}: corrupt file must not load");
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn load_rejects_corruption_mid_stream_after_valid_chunks() {
+        // Streaming load must parse leading valid records and still reject
+        // the file when a LATER record is corrupt — without ever allocating
+        // more than one chunk's worth of payload for the bad header.
+        let dir = std::env::temp_dir().join("ifkv_store_midstream");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mid.bin");
+        let s = ChunkStore::new(usize::MAX);
+        s.insert(mk_chunk(1, 4));
+        s.insert(mk_chunk(2, 4));
+        s.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // A third record whose header claims an absurd rank.
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&4u32.to_le_bytes()); // n_tokens
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ChunkStore::load(&path, usize::MAX).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("rank"),
+            "mid-stream corruption must surface the header error, got: {err:#}"
+        );
+        // And a record claiming a body far larger than the file remainder.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 16); // drop the absurd-rank record
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&1_000_000u32.to_le_bytes()); // n_tokens
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        bytes.extend_from_slice(&1_000_000u32.to_le_bytes()); // dim
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(
+            ChunkStore::load(&path, usize::MAX).is_err(),
+            "body larger than the file remainder must be rejected before allocation"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! The disk spill tier: one file per evicted chunk, in the same serialized
+//! record format as [`super::store`]'s persistence (so a spilled file and a
+//! saved store are mutually intelligible), with an in-memory index of what
+//! is on disk.
+//!
+//! The tier itself is deliberately dumb storage — `spill` / `take` /
+//! `discard` plus an index.  All ordering guarantees (who may write or
+//! consume a given id, never holding a chunk resident and spilled at once)
+//! are enforced by the [`super::store::ChunkStore`] lifecycle machinery,
+//! which serializes every per-id tier operation under that id's
+//! single-flight slot.
+//!
+//! Round-trips are bit-identical: tokens and both KV tensors are serialized
+//! as little-endian words, so a re-admitted chunk is exactly the chunk that
+//! was evicted.  Spill files survive restarts: [`SpillTier::new`] re-indexes
+//! whatever `<id:016x>.kv` files a previous process left in the directory.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::kvcache::store::{
+    read_chunk_record, write_chunk_record, ChunkId, ChunkKv, STORE_MAGIC,
+};
+use crate::util::json::Json;
+
+pub struct SpillTier {
+    dir: PathBuf,
+    /// id -> serialized file size; the in-memory truth of what is on disk.
+    index: Mutex<HashMap<ChunkId, u64>>,
+    writes: AtomicU64,
+    reads: AtomicU64,
+    discards: AtomicU64,
+}
+
+impl SpillTier {
+    /// Open (creating if needed) a spill directory, re-indexing any chunk
+    /// files a previous process left behind.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<SpillTier> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| anyhow!("creating spill dir {}: {e}", dir.display()))?;
+        let mut index = HashMap::new();
+        let entries = fs::read_dir(&dir)
+            .map_err(|e| anyhow!("reading spill dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(hex) = name.strip_suffix(".kv") else { continue };
+            let Ok(id) = ChunkId::from_str_radix(hex, 16) else { continue };
+            index.insert(id, entry.metadata()?.len());
+        }
+        Ok(SpillTier {
+            dir,
+            index: Mutex::new(index),
+            writes: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            discards: AtomicU64::new(0),
+        })
+    }
+
+    fn path(&self, id: ChunkId) -> PathBuf {
+        self.dir.join(format!("{id:016x}.kv"))
+    }
+
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.index.lock().unwrap().contains_key(&id)
+    }
+
+    /// Number of chunks currently spilled.
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total serialized bytes currently on disk.
+    pub fn bytes(&self) -> u64 {
+        self.index.lock().unwrap().values().sum()
+    }
+
+    /// Ids currently spilled (for invariant checks in tests).
+    pub fn ids(&self) -> Vec<ChunkId> {
+        self.index.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Serialize `chunk` to its per-chunk file.  Write-then-rename, so a
+    /// crash mid-write never leaves a half-record behind the index.
+    pub fn spill(&self, chunk: &ChunkKv) -> Result<()> {
+        let final_path = self.path(chunk.id);
+        let tmp = final_path.with_extension("tmp");
+        {
+            let f = fs::File::create(&tmp)
+                .map_err(|e| anyhow!("creating {}: {e}", tmp.display()))?;
+            let mut w = BufWriter::new(f);
+            w.write_all(STORE_MAGIC)?;
+            write_chunk_record(&mut w, chunk)?;
+            w.flush()?;
+        }
+        fs::rename(&tmp, &final_path)
+            .map_err(|e| anyhow!("renaming into {}: {e}", final_path.display()))?;
+        let size = fs::metadata(&final_path)?.len();
+        self.index.lock().unwrap().insert(chunk.id, size);
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Remove and deserialize a spilled chunk ([`None`] if `id` is not
+    /// spilled).  The index entry and the file are both gone before this
+    /// returns — corrupt files included, so a bad record cannot wedge its
+    /// id (the caller just falls back to a re-prefill).
+    pub fn take(&self, id: ChunkId) -> Result<Option<ChunkKv>> {
+        if self.index.lock().unwrap().remove(&id).is_none() {
+            return Ok(None);
+        }
+        let path = self.path(id);
+        let out = read_spill_file(&path, id);
+        let _ = fs::remove_file(&path);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        out.map(Some)
+    }
+
+    /// Drop a spilled chunk without reading it; `true` if one was indexed.
+    pub fn discard(&self, id: ChunkId) -> bool {
+        if self.index.lock().unwrap().remove(&id).is_none() {
+            return false;
+        }
+        let _ = fs::remove_file(self.path(id));
+        self.discards.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("chunks", Json::from(self.len())),
+            ("bytes", Json::from(self.bytes() as f64)),
+            ("writes", Json::from(self.writes.load(Ordering::Relaxed) as f64)),
+            ("reads", Json::from(self.reads.load(Ordering::Relaxed) as f64)),
+            ("discards", Json::from(self.discards.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Parse one spill file: magic + exactly one chunk record for `id`.
+fn read_spill_file(path: &std::path::Path, id: ChunkId) -> Result<ChunkKv> {
+    let f = fs::File::open(path)
+        .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
+    let total = f.metadata()?.len();
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .map_err(|e| anyhow!("{}: reading magic: {e}", path.display()))?;
+    if &magic != STORE_MAGIC {
+        bail!("{}: bad magic", path.display());
+    }
+    let mut remaining = total.saturating_sub(8);
+    let chunk = read_chunk_record(&mut r, &mut remaining)
+        .map_err(|e| anyhow!("{}: {e:#}", path.display()))?
+        .ok_or_else(|| anyhow!("{}: empty spill file", path.display()))?;
+    if chunk.id != id {
+        bail!(
+            "{}: holds chunk {:#018x}, expected {id:#018x}",
+            path.display(),
+            chunk.id
+        );
+    }
+    Ok(chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF;
+    use crate::util::rng::Rng;
+
+    fn temp_tier(tag: &str) -> SpillTier {
+        let dir = std::env::temp_dir().join(format!("ifkv_tier_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        SpillTier::new(dir).unwrap()
+    }
+
+    fn rand_chunk(rng: &mut Rng, id: ChunkId, c: usize) -> ChunkKv {
+        let dims = [2usize, c, 2, 4];
+        let n: usize = dims.iter().product();
+        ChunkKv {
+            id,
+            tokens: (0..c as i32).map(|t| t + rng.below(7) as i32).collect(),
+            k: TensorF::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
+                .unwrap(),
+            v: TensorF::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
+                .unwrap(),
+        }
+    }
+
+    #[test]
+    fn spill_take_roundtrip_is_bit_identical() {
+        let tier = temp_tier("roundtrip");
+        let mut rng = Rng::new(41);
+        let chunk = rand_chunk(&mut rng, 0xDEAD_BEEF, 8);
+        tier.spill(&chunk).unwrap();
+        assert!(tier.contains(chunk.id));
+        assert_eq!(tier.len(), 1);
+        assert!(tier.bytes() > 0);
+        let back = tier.take(chunk.id).unwrap().expect("chunk was spilled");
+        assert_eq!(back.id, chunk.id);
+        assert_eq!(back.tokens, chunk.tokens);
+        // bit-identical, not approximately equal
+        assert_eq!(back.k.shape(), chunk.k.shape());
+        assert_eq!(back.k.data(), chunk.k.data());
+        assert_eq!(back.v.data(), chunk.v.data());
+        // consumed: neither indexed nor on disk
+        assert!(!tier.contains(chunk.id));
+        assert!(tier.take(chunk.id).unwrap().is_none());
+        assert!(tier.is_empty());
+    }
+
+    #[test]
+    fn reopen_reindexes_existing_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("ifkv_tier_reopen_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(42);
+        let chunk = rand_chunk(&mut rng, 77, 8);
+        {
+            let tier = SpillTier::new(&dir).unwrap();
+            tier.spill(&chunk).unwrap();
+        }
+        let tier = SpillTier::new(&dir).unwrap();
+        assert!(tier.contains(77), "restart must re-index spilled chunks");
+        let back = tier.take(77).unwrap().unwrap();
+        assert_eq!(back.k.data(), chunk.k.data());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_file_errors_and_unwedges_the_id() {
+        let tier = temp_tier("corrupt");
+        let mut rng = Rng::new(43);
+        let chunk = rand_chunk(&mut rng, 99, 8);
+        tier.spill(&chunk).unwrap();
+        // truncate the file behind the index's back
+        let path = tier.path(99);
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(tier.take(99).is_err(), "corrupt spill file must error");
+        // ...but the id is consumed, so the caller can re-prefill freely
+        assert!(!tier.contains(99));
+        assert!(tier.take(99).unwrap().is_none());
+    }
+
+    #[test]
+    fn discard_removes_file_and_index() {
+        let tier = temp_tier("discard");
+        let mut rng = Rng::new(44);
+        tier.spill(&rand_chunk(&mut rng, 5, 8)).unwrap();
+        assert!(tier.discard(5));
+        assert!(!tier.discard(5), "second discard is a no-op");
+        assert!(!tier.path(5).exists());
+        assert!(tier.is_empty());
+    }
+}

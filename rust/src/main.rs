@@ -39,6 +39,7 @@ USAGE:
   repro serve   [--backbone B] [--requests N] [--rate R] [--method M]
                 [--workers W] [--shards S] [--cache-mb MB] [--queue-cap N]
                 [--max-batch N] [--batch-window-ms MS]
+                [--spill-dir DIR] [--prefetch-threads N]
   repro bench   table1|...|table6|fig2|fig3|fig4|ablation|all [--samples N]
   repro cache   save|load [--path kvcache.bin] [--docs N]
 
@@ -253,11 +254,22 @@ fn serve(args: &Args) -> Result<()> {
         ),
     };
     let queue_cap = args.usize_or("queue-cap", serve_defaults.queue_cap)?;
-    // One pipeline (and thus one ModelSession) per worker; weights and
-    // compiled executables are shared through the Runtime.
+    let prefetch_threads =
+        args.usize_or("prefetch-threads", serve_defaults.prefetch_threads)?;
+    let spill_dir = args
+        .get("spill-dir")
+        .map(std::path::PathBuf::from)
+        .or_else(|| serve_defaults.spill_dir.clone());
+    // One pipeline (and thus one ModelSession) per worker and per
+    // prefetcher; weights and compiled executables are shared through the
+    // Runtime.
     let mut pipelines = Vec::with_capacity(n_workers);
     for _ in 0..n_workers {
         pipelines.push(Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?);
+    }
+    let mut prefetch_pipelines = Vec::with_capacity(prefetch_threads);
+    for _ in 0..prefetch_threads {
+        prefetch_pipelines.push(Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?);
     }
     let vocab = pipelines[0].vocab.clone();
     let method = MethodSpec::parse(args.get_or("method", "ours"), args.usize_or("budget", 16)?)?;
@@ -269,15 +281,28 @@ fn serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 5)?,
     };
     let trace = traces::generate(&vocab, rt.manifest.model.chunk, &cfg);
-    let server = Server::spawn_pool(
+    let mut store = ChunkStore::with_shards(cache_bytes, shards);
+    if let Some(dir) = &spill_dir {
+        store.set_spill_tier(Arc::new(infoflow_kv::kvcache::SpillTier::new(dir)?));
+    }
+    let server = Server::spawn_pool_with_prefetch(
         pipelines,
-        ChunkStore::with_shards(cache_bytes, shards),
+        prefetch_pipelines,
+        store,
         ServerConfig { batch, queue_cap },
     );
 
     println!(
-        "serving {} requests (poisson rate {}/s, {} docs, method {}, {n_workers} workers, {shards} shards)...",
-        cfg.n_requests, cfg.rate, cfg.doc_pool, method.name()
+        "serving {} requests (poisson rate {}/s, {} docs, method {}, {n_workers} workers, \
+         {shards} shards, {prefetch_threads} prefetchers, spill {})...",
+        cfg.n_requests,
+        cfg.rate,
+        cfg.doc_pool,
+        method.name(),
+        spill_dir
+            .as_ref()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "off".into())
     );
     let t0 = std::time::Instant::now();
     let mut ok = 0usize;

@@ -149,6 +149,50 @@ impl Manifest {
         })
     }
 
+    /// An in-memory manifest for the artifact-free stub runtime
+    /// (`runtime::stub`): the same shape contract `python -m compile.aot`
+    /// writes, with no files behind it and a single "stub" backbone.
+    pub fn synthetic(model: ModelDims, buckets: Vec<usize>) -> Manifest {
+        use crate::vocab;
+        let v = vocab::Vocab::default();
+        let n = |x: i32| Json::Num(x as f64);
+        let vocab_json = Json::obj(vec![
+            ("vocab", Json::from(model.vocab)),
+            ("key_base", n(v.key_base)),
+            ("num_keys", Json::from(v.num_keys)),
+            ("val_base", n(v.val_base)),
+            ("num_vals", Json::from(v.num_vals)),
+            ("filler_base", n(v.filler_base)),
+            ("num_filler", Json::from(v.num_filler)),
+            ("answer_len", Json::from(v.answer_len)),
+            ("pad", n(vocab::PAD)),
+            ("query", n(vocab::QUERY)),
+            ("answer", n(vocab::ANSWER)),
+            ("sep", n(vocab::SEP)),
+            ("keymark", n(vocab::KEYMARK)),
+            ("valmark", n(vocab::VALMARK)),
+            ("eos", n(vocab::EOS)),
+            ("img", n(vocab::IMG)),
+            ("row", n(vocab::ROW)),
+            ("hop", n(vocab::HOP)),
+        ]);
+        Manifest {
+            root: PathBuf::from("<stub>"),
+            model,
+            config_hash: "stub".into(),
+            param_count: 0,
+            buckets,
+            executables: Vec::new(),
+            backbones: vec![BackboneInfo {
+                name: "stub".into(),
+                weights_file: String::new(),
+                steps: None,
+                final_loss: None,
+            }],
+            vocab_json,
+        }
+    }
+
     pub fn exec_spec(&self, name: &str, bucket: Option<usize>) -> Result<&ExecSpec> {
         self.executables
             .iter()

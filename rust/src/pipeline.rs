@@ -123,13 +123,16 @@ impl Pipeline {
         &self.session.runtime.manifest.model
     }
 
-    /// Fetch-or-prefill every chunk of a context (the offline phase; on a
-    /// warm store this is pure cache hits).  Returns pinned chunk handles
-    /// and the prefill seconds spent on misses.
+    /// Fetch-or-load every chunk of a context through the store's lifecycle
+    /// API (the offline phase; on a warm store this is pure cache hits).
+    /// Returns pinned chunk handles and the prefill seconds spent on misses.
     ///
-    /// The store is internally synchronized: its per-shard locks are held
-    /// only inside `get`/`insert`, never across `prefill_chunk`, so worker
-    /// threads sharing one store prefill different chunks concurrently.
+    /// Misses go through [`ChunkStore::get_or_load`]: a spilled chunk is
+    /// re-admitted from disk instead of re-prefilled, and concurrent
+    /// queries missing the same chunk share ONE prefill via the store's
+    /// single-flight registry.  The store's per-shard locks are held only
+    /// inside get/insert, never across `prefill_chunk`, so worker threads
+    /// sharing one store still prefill *different* chunks concurrently.
     pub fn prepare_chunks(
         &self,
         store: &ChunkStore,
@@ -139,14 +142,13 @@ impl Pipeline {
         let mut spent = 0.0;
         for toks in chunk_tokens {
             let id = ChunkKv::content_id(toks);
-            if let Some(c) = store.get(id) {
-                out.push(c);
-                continue;
-            }
-            let t0 = Instant::now();
-            let (k, v) = self.session.prefill_chunk(toks)?;
-            spent += t0.elapsed().as_secs_f64();
-            out.push(store.insert(ChunkKv { id, tokens: toks.clone(), k, v }));
+            let chunk = store.get_or_load(id, || {
+                let t0 = Instant::now();
+                let (k, v) = self.session.prefill_chunk(toks)?;
+                spent += t0.elapsed().as_secs_f64();
+                Ok(ChunkKv { id, tokens: toks.clone(), k, v })
+            })?;
+            out.push(chunk);
         }
         Ok((out, spent))
     }

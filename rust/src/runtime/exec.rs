@@ -71,15 +71,23 @@ pub type FullPrefillExec = Arc<Executable>;
 
 /// A backbone bound to the runtime: weights resident on device, executables
 /// fetched from the compile cache per call (Arc clones, no recompiles).
+/// On a stub runtime ([`Runtime::stub`]) every entry point dispatches to
+/// the deterministic host-side model instead — same signatures, no PJRT.
 pub struct ModelSession {
     pub runtime: Arc<Runtime>,
     pub backbone: String,
-    weights: Arc<SharedBuffer>,
+    /// Device weights (PJRT backend only; the stub model has none).
+    weights: Option<Arc<SharedBuffer>>,
 }
 
 impl ModelSession {
     pub fn new(runtime: Arc<Runtime>, backbone: &str) -> Result<ModelSession> {
-        let weights = runtime.weights(backbone)?;
+        runtime.manifest.backbone(backbone)?;
+        let weights = if runtime.is_stub() {
+            None
+        } else {
+            Some(runtime.weights(backbone)?)
+        };
         Ok(ModelSession { runtime, backbone: backbone.to_string(), weights })
     }
 
@@ -90,7 +98,11 @@ impl ModelSession {
         args: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
         let exe = self.runtime.executable(name, bucket)?;
-        exe.run(&self.weights.0, args, self.runtime.client())
+        let weights = self
+            .weights
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no device weights for '{}'", self.backbone))?;
+        exe.run(&weights.0, args, self.runtime.client()?)
     }
 
     /// Chunk-local prefill: `tokens` must be exactly `chunk` long.
@@ -99,6 +111,9 @@ impl ModelSession {
         let c = self.runtime.manifest.model.chunk;
         if tokens.len() != c {
             bail!("prefill_chunk wants {c} tokens, got {}", tokens.len());
+        }
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.prefill_chunk(tokens);
         }
         let toks = tensor_i_to_literal(&TensorI::from_vec(&[c], tokens.to_vec())?)?;
         let valid = tensor_f_to_literal(&TensorF::full(&[c], 1.0))?;
@@ -119,6 +134,12 @@ impl ModelSession {
         ctx_gpos: &TensorI,     // [N]
         ctx_valid: &TensorF,    // [N]
     ) -> Result<ScoreOut> {
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.score(
+                bucket, prompt, prompt_pos, ctx_k, ctx_v, ctx_delta, ctx_gpos,
+                ctx_valid,
+            );
+        }
         let p = self.runtime.manifest.model.prompt_len;
         let a0 = tensor_i_to_literal(prompt)?;
         let a1 = tensor_i_to_literal(prompt_pos)?;
@@ -156,6 +177,12 @@ impl ModelSession {
         ctx_gpos: &TensorI,
         ctx_valid: &TensorF,
     ) -> Result<RecomputeOut> {
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.recompute(
+                bucket, sel_tokens, sel_gpos, sel_slot, sel_valid, ctx_k, ctx_v,
+                ctx_delta, ctx_gpos, ctx_valid,
+            );
+        }
         let a0 = tensor_i_to_literal(sel_tokens)?;
         let a1 = tensor_i_to_literal(sel_gpos)?;
         let a2 = tensor_i_to_literal(sel_slot)?;
@@ -186,6 +213,9 @@ impl ModelSession {
         pos: i32,
         kv: &ResidentDecodeKv,
     ) -> Result<DecodeOut> {
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.decode_step(tok, pos, kv);
+        }
         let t = xla::Literal::scalar(tok);
         let p = xla::Literal::scalar(pos);
         let [k_all, v_all, k_gpos, k_valid] = kv.literals();
@@ -212,6 +242,12 @@ impl ModelSession {
         ctx_v_shallow: &TensorF, // [dev_layers, N, H, Dh]
         ctx_delta: &TensorI,   // [N]
     ) -> Result<TensorF> {
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.deviation(
+                bucket, ctx_tokens, ctx_gpos, ctx_valid, ctx_k_shallow,
+                ctx_v_shallow, ctx_delta,
+            );
+        }
         let a0 = tensor_i_to_literal(ctx_tokens)?;
         let a1 = tensor_i_to_literal(ctx_gpos)?;
         let a2 = tensor_f_to_literal(ctx_valid)?;
@@ -234,6 +270,9 @@ impl ModelSession {
         pos: &TensorI,    // [N + P]
         valid: &TensorF,  // [N + P]
     ) -> Result<FullPrefillOut> {
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.full_prefill(bucket, tokens, pos, valid);
+        }
         let a0 = tensor_i_to_literal(tokens)?;
         let a1 = tensor_i_to_literal(pos)?;
         let a2 = tensor_f_to_literal(valid)?;

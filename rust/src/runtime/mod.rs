@@ -1,12 +1,18 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts, compiles them once per
-//! process, uploads backbone weights as persistent device buffers, and
-//! exposes typed executable wrappers to the coordinator.
+//! Model runtime: loads the AOT HLO-text artifacts, compiles them once per
+//! process (PJRT backend), uploads backbone weights as persistent device
+//! buffers, and exposes typed executable wrappers to the coordinator.
+//!
+//! Alternatively, [`Runtime::stub`] builds an **artifact-free** runtime
+//! over the deterministic host-side model in [`stub`]: the same manifest
+//! contract and [`exec::ModelSession`] entry points, no PJRT, no files.
+//! End-to-end pipeline/serving tests and benches run on it in CI.
 //!
 //! Python never runs here — this is the request path.
 
 pub mod exec;
 pub mod literal;
 pub mod resident;
+pub mod stub;
 
 pub use exec::{
     DecodeExec, DeviationExec, FullPrefillExec, PrefillChunkExec, RecomputeExec,
@@ -20,9 +26,9 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::manifest::{ExecSpec, Manifest};
+use crate::manifest::{ExecSpec, Manifest, ModelDims};
 
 /// One compiled HLO executable plus its manifest spec.
 pub struct Executable {
@@ -43,17 +49,27 @@ pub struct SharedBuffer(pub xla::PjRtBuffer);
 unsafe impl Send for SharedBuffer {}
 unsafe impl Sync for SharedBuffer {}
 
-/// The process-wide runtime: PJRT client + compile cache + weights.
+/// The process-wide runtime: manifest + one of two backends (real PJRT
+/// artifacts, or the deterministic host-side stub model).
 pub struct Runtime {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    compiled: Mutex<HashMap<(String, Option<usize>), Arc<Executable>>>,
-    weights: Mutex<HashMap<String, Arc<SharedBuffer>>>,
+    backend: Backend,
+}
+
+enum Backend {
+    /// Real AOT artifacts: PJRT client + compile cache + device weights.
+    Pjrt {
+        client: xla::PjRtClient,
+        compiled: Mutex<HashMap<(String, Option<usize>), Arc<Executable>>>,
+        weights: Mutex<HashMap<String, Arc<SharedBuffer>>>,
+    },
+    /// Deterministic host-side model — no artifacts, no PJRT.
+    Stub(stub::StubModel),
 }
 
 // The PJRT CPU client and its buffers are internally synchronized; the xla
 // crate just doesn't mark its wrappers Send/Sync. All our mutation goes
-// through the Mutexes above.
+// through the Mutexes above. The stub model is plain immutable data.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 
@@ -67,20 +83,54 @@ impl Runtime {
             .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
         Ok(Runtime {
             manifest,
-            client,
-            compiled: Mutex::new(HashMap::new()),
-            weights: Mutex::new(HashMap::new()),
+            backend: Backend::Pjrt {
+                client,
+                compiled: Mutex::new(HashMap::new()),
+                weights: Mutex::new(HashMap::new()),
+            },
         })
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+    /// An artifact-free runtime over the deterministic stub model with the
+    /// default small dims (see [`stub::default_dims`]).
+    pub fn stub(seed: u64) -> Runtime {
+        Runtime::stub_with(stub::default_dims(), vec![16, 32, 64, 128], seed)
+    }
+
+    /// An artifact-free stub runtime with explicit dims and buckets.
+    pub fn stub_with(dims: ModelDims, buckets: Vec<usize>, seed: u64) -> Runtime {
+        let model = stub::StubModel::new(dims.clone(), seed);
+        Runtime {
+            manifest: Manifest::synthetic(dims, buckets),
+            backend: Backend::Stub(model),
+        }
+    }
+
+    pub fn is_stub(&self) -> bool {
+        matches!(self.backend, Backend::Stub(_))
+    }
+
+    pub(crate) fn stub_model(&self) -> Option<&stub::StubModel> {
+        match &self.backend {
+            Backend::Stub(m) => Some(m),
+            Backend::Pjrt { .. } => None,
+        }
+    }
+
+    pub(crate) fn client(&self) -> Result<&xla::PjRtClient> {
+        match &self.backend {
+            Backend::Pjrt { client, .. } => Ok(client),
+            Backend::Stub(_) => bail!("stub runtime has no PJRT client"),
+        }
     }
 
     /// Compile (or fetch from cache) an executable by manifest name + bucket.
     pub fn executable(&self, name: &str, bucket: Option<usize>) -> Result<Arc<Executable>> {
+        let Backend::Pjrt { client, compiled, .. } = &self.backend else {
+            bail!("stub runtime has no compiled executables");
+        };
         let key = (name.to_string(), bucket);
-        if let Some(e) = self.compiled.lock().unwrap().get(&key) {
+        if let Some(e) = compiled.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
         let spec = self.manifest.exec_spec(name, bucket)?.clone();
@@ -90,17 +140,19 @@ impl Runtime {
         )
         .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name} (bucket {bucket:?}): {e:?}"))?;
         let entry = Arc::new(Executable { spec, exe });
-        self.compiled.lock().unwrap().insert(key, entry.clone());
+        compiled.lock().unwrap().insert(key, entry.clone());
         Ok(entry)
     }
 
-    /// Eagerly compile every executable in the manifest.
+    /// Eagerly compile every executable in the manifest (no-op on the stub).
     pub fn warmup(&self) -> Result<()> {
+        if self.is_stub() {
+            return Ok(());
+        }
         let specs: Vec<(String, Option<usize>)> = self
             .manifest
             .executables
@@ -116,19 +168,21 @@ impl Runtime {
     /// Upload (once) and return the flat weight vector of a backbone as a
     /// persistent device buffer.
     pub fn weights(&self, backbone: &str) -> Result<Arc<SharedBuffer>> {
-        if let Some(w) = self.weights.lock().unwrap().get(backbone) {
+        let Backend::Pjrt { client, weights, .. } = &self.backend else {
+            bail!("stub runtime has no device weights");
+        };
+        if let Some(w) = weights.lock().unwrap().get(backbone) {
             return Ok(w.clone());
         }
         let host = self
             .manifest
             .load_weights(backbone)
             .with_context(|| format!("loading weights for '{backbone}'"))?;
-        let buf = self
-            .client
+        let buf = client
             .buffer_from_host_buffer::<f32>(&host, &[host.len()], None)
             .map_err(|e| anyhow!("uploading weights: {e:?}"))?;
         let buf = Arc::new(SharedBuffer(buf));
-        self.weights
+        weights
             .lock()
             .unwrap()
             .insert(backbone.to_string(), buf.clone());

@@ -1,0 +1,674 @@
+//! Deterministic host-side stub model: the artifact-free backend behind
+//! [`super::Runtime::stub`].
+//!
+//! Implements the semantics of all six AOT executables (chunk prefill,
+//! geometry scoring, selective recomputation, decode steps, CacheBlend
+//! deviation, full prefill) as a tiny hash-weighted attention model:
+//!
+//! * "weights" are splitmix64 hashes of `(seed, family, token, layer, dim)`
+//!   mapped into [-0.5, 0.5] — no files, perfectly reproducible;
+//! * keys/queries carry real RoPE (via [`crate::rope::rotate`]) at their
+//!   positions, so the paper's geometry deltas genuinely change scores;
+//! * values are mixed by causal softmax attention, so stored chunk-local KV
+//!   differs from globally recomputed KV and selective recomputation
+//!   actually changes answers — the full method matrix is exercisable
+//!   end to end.
+//!
+//! Not a trained model: outputs are structurally plausible, deterministic
+//! token streams, which is exactly what the artifact-free conformance and
+//! serving tests need (they lock in *behavior*, not accuracy).  Every
+//! transcendental-derived value is snapped to a 2^-12 grid so argmaxed
+//! token ids survive libm differences across platforms.
+
+use anyhow::{bail, Result};
+
+use super::exec::{DecodeOut, FullPrefillOut, RecomputeOut, ScoreOut};
+use super::resident::ResidentDecodeKv;
+use crate::manifest::ModelDims;
+use crate::rope;
+use crate::tensor::{TensorF, TensorI};
+
+/// Hash-derived "weight" families.
+const KIND_K: u64 = 1;
+const KIND_V: u64 = 2;
+const KIND_Q: u64 = 3;
+const KIND_UNEMBED: u64 = 4;
+
+/// Quantization grid (2^12): transcendental outputs are snapped to it so
+/// cross-platform libm jitter cannot flip an argmax.
+const GRID: f32 = 4096.0;
+
+fn q(x: f32) -> f32 {
+    (x * GRID).round() / GRID
+}
+
+/// Small dims the artifact-free tests run on: big enough that every stage
+/// (multi-chunk contexts, recompute waves, reorder) is non-trivial, small
+/// enough that a full conformance grid takes well under a second.
+pub fn default_dims() -> ModelDims {
+    ModelDims {
+        vocab: 144,
+        d_model: 32,
+        n_layers: 3,
+        n_heads: 2,
+        head_dim: 8,
+        d_ff: 64,
+        rope_theta: 10000.0,
+        chunk: 16,
+        prompt_len: 4,
+        sel_budget: 8,
+        answer_buf: 4,
+        dev_layers: 2,
+    }
+}
+
+pub struct StubModel {
+    d: ModelDims,
+    seed: u64,
+}
+
+impl StubModel {
+    pub fn new(d: ModelDims, seed: u64) -> StubModel {
+        StubModel { d, seed }
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.d
+    }
+
+    /// Hash-derived pseudo-weight in [-0.5, 0.5].
+    fn feat(&self, kind: u64, tok: i32, layer: usize, i: usize) -> f32 {
+        let mut x = self.seed
+            ^ kind.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (tok as i64 as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ (layer as u64).wrapping_mul(0x94D0_49BB_1331_11EB)
+            ^ (i as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        (x >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+    }
+
+    fn row(&self) -> usize {
+        self.d.n_heads * self.d.head_dim
+    }
+
+    /// [H*Dh] base embedding of a token for one layer and weight family.
+    fn embed(&self, kind: u64, tok: i32, layer: usize) -> Vec<f32> {
+        (0..self.row()).map(|i| self.feat(kind, tok, layer, i)).collect()
+    }
+
+    /// RoPE-rotate a [H*Dh] row per head by `delta` positions, quantized.
+    fn rotate_row(&self, row: &mut [f32], delta: i64) {
+        let dh = self.d.head_dim;
+        for h in 0..self.d.n_heads {
+            rope::rotate(&mut row[h * dh..(h + 1) * dh], delta, self.d.rope_theta);
+        }
+        for x in row.iter_mut() {
+            *x = q(*x);
+        }
+    }
+
+    /// Base embedding rotated to `pos`.
+    fn embed_at(&self, kind: u64, tok: i32, layer: usize, pos: i32) -> Vec<f32> {
+        let mut e = self.embed(kind, tok, layer);
+        self.rotate_row(&mut e, pos as i64);
+        e
+    }
+
+    /// Per-head softmax attention of one [H*Dh] query over the key/value
+    /// rows selected by `rows`; returns the mixed value vector and adds
+    /// each attended row's attention mass (summed over heads) into `mass`
+    /// (which must be at least as long as `keys`).
+    fn attend_with_mass(
+        &self,
+        qrow: &[f32],
+        keys: &[Vec<f32>],
+        vals: &[Vec<f32>],
+        rows: &[usize],
+        mass: &mut [f32],
+    ) -> Vec<f32> {
+        let (h, dh) = (self.d.n_heads, self.d.head_dim);
+        let mut out = vec![0.0f32; h * dh];
+        if rows.is_empty() {
+            return out;
+        }
+        let scale = 1.0 / (dh as f32).sqrt();
+        for head in 0..h {
+            let o = head * dh;
+            let mut w = Vec::with_capacity(rows.len());
+            let mut m = f32::NEG_INFINITY;
+            for &j in rows {
+                let mut s = 0.0f32;
+                for dd in 0..dh {
+                    s += qrow[o + dd] * keys[j][o + dd];
+                }
+                let s = q(s * scale);
+                m = m.max(s);
+                w.push(s);
+            }
+            let mut z = 0.0f32;
+            for x in w.iter_mut() {
+                *x = q((*x - m).exp());
+                z += *x;
+            }
+            if z <= 0.0 {
+                continue;
+            }
+            for (wi, &j) in rows.iter().enumerate() {
+                let a = w[wi] / z;
+                mass[j] += a;
+                for dd in 0..dh {
+                    out[o + dd] += a * vals[j][o + dd];
+                }
+            }
+        }
+        for x in out.iter_mut() {
+            *x = q(*x);
+        }
+        out
+    }
+
+    fn attend(
+        &self,
+        qrow: &[f32],
+        keys: &[Vec<f32>],
+        vals: &[Vec<f32>],
+        rows: &[usize],
+    ) -> Vec<f32> {
+        let mut scratch = vec![0.0f32; keys.len()];
+        self.attend_with_mass(qrow, keys, vals, rows, &mut scratch)
+    }
+
+    /// Pseudo-unembedding: project an [H*Dh] state onto the vocabulary.
+    fn logits_from_state(&self, state: &[f32]) -> TensorF {
+        let mut l = vec![0.0f32; self.d.vocab];
+        for (t, slot) in l.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for (i, &x) in state.iter().enumerate() {
+                s += x * self.feat(KIND_UNEMBED, t as i32, 0, i);
+            }
+            *slot = q(s);
+        }
+        TensorF::from_vec(&[self.d.vocab], l).expect("vocab-sized logits")
+    }
+
+    /// Quantized value-base embedding.
+    fn vbase(&self, tok: i32, layer: usize) -> Vec<f32> {
+        self.embed(KIND_V, tok, layer).iter().map(|&x| q(x)).collect()
+    }
+
+    /// Slice one [H*Dh] row out of a [.., N, H, Dh] tensor.
+    fn kv_row(t: &TensorF, layer: usize, n: usize, r: usize, row: usize) -> Vec<f32> {
+        let base = (layer * n + r) * row;
+        t.data()[base..base + row].to_vec()
+    }
+
+    // -- executable semantics ------------------------------------------------
+
+    /// Chunk-local prefill: keys RoPE'd at local positions, values mixed by
+    /// causal attention *within the chunk* (so chunk-local KV genuinely
+    /// differs from globally recomputed KV).
+    pub fn prefill_chunk(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
+        let d = &self.d;
+        let c = tokens.len();
+        let (l, h, dh) = (d.n_layers, d.n_heads, d.head_dim);
+        let row = h * dh;
+        let mut k = TensorF::zeros(&[l, c, h, dh]);
+        let mut v = TensorF::zeros(&[l, c, h, dh]);
+        for li in 0..l {
+            let ks: Vec<Vec<f32>> = tokens
+                .iter()
+                .enumerate()
+                .map(|(t, &tok)| self.embed_at(KIND_K, tok, li, t as i32))
+                .collect();
+            let qs: Vec<Vec<f32>> = tokens
+                .iter()
+                .enumerate()
+                .map(|(t, &tok)| self.embed_at(KIND_Q, tok, li, t as i32))
+                .collect();
+            let vs: Vec<Vec<f32>> = tokens.iter().map(|&tok| self.vbase(tok, li)).collect();
+            for t in 0..c {
+                let rows: Vec<usize> = (0..=t).collect();
+                let mixed = self.attend(&qs[t], &ks, &vs, &rows);
+                let base = (li * c + t) * row;
+                for i in 0..row {
+                    k.data_mut()[base + i] = ks[t][i];
+                    v.data_mut()[base + i] = q(vs[t][i] + 0.5 * mixed[i]);
+                }
+            }
+        }
+        Ok((k, v))
+    }
+
+    /// Prompt scoring under a positional layout: cached keys are re-rotated
+    /// by `ctx_delta`, prompt queries attend over them (plus earlier prompt
+    /// rows), and the per-row attention mass times the value norm is the
+    /// Eq.7-style score.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score(
+        &self,
+        bucket: usize,
+        prompt: &TensorI,
+        prompt_pos: &TensorI,
+        ctx_k: &TensorF,
+        ctx_v: &TensorF,
+        ctx_delta: &TensorI,
+        _ctx_gpos: &TensorI,
+        ctx_valid: &TensorF,
+    ) -> Result<ScoreOut> {
+        let d = &self.d;
+        let (l, p) = (d.n_layers, d.prompt_len);
+        let (h, dh) = (d.n_heads, d.head_dim);
+        let row = h * dh;
+        if prompt.len() != p || ctx_valid.len() < bucket || ctx_delta.len() < bucket {
+            bail!("stub score: inconsistent shapes");
+        }
+        let valid_rows: Vec<usize> =
+            (0..bucket).filter(|&r| ctx_valid.data()[r] > 0.0).collect();
+        let mut scores = TensorF::zeros(&[l, bucket]);
+        let mut pk = TensorF::zeros(&[l, p, h, dh]);
+        let mut pv = TensorF::zeros(&[l, p, h, dh]);
+        let mut last_state = vec![0.0f32; row];
+        for li in 0..l {
+            let mut keys: Vec<Vec<f32>> = (0..bucket)
+                .map(|r| {
+                    let mut key = Self::kv_row(ctx_k, li, bucket, r, row);
+                    let delta = ctx_delta.data()[r];
+                    if delta != 0 {
+                        self.rotate_row(&mut key, delta as i64);
+                    }
+                    key
+                })
+                .collect();
+            let mut vals: Vec<Vec<f32>> = (0..bucket)
+                .map(|r| Self::kv_row(ctx_v, li, bucket, r, row))
+                .collect();
+            let mut mass = vec![0.0f32; bucket + p];
+            for pi in 0..p {
+                let tok = prompt.data()[pi];
+                let pos = prompt_pos.data()[pi];
+                let kp = self.embed_at(KIND_K, tok, li, pos);
+                let vp = self.vbase(tok, li);
+                let qp = self.embed_at(KIND_Q, tok, li, pos);
+                keys.push(kp.clone());
+                vals.push(vp.clone());
+                let mut rows = valid_rows.clone();
+                rows.extend(bucket..bucket + pi + 1);
+                let state = self.attend_with_mass(&qp, &keys, &vals, &rows, &mut mass);
+                let base = (li * p + pi) * row;
+                pk.data_mut()[base..base + row].copy_from_slice(&kp);
+                pv.data_mut()[base..base + row].copy_from_slice(&vp);
+                if pi == p - 1 {
+                    for i in 0..row {
+                        last_state[i] = q(last_state[i] + state[i]);
+                    }
+                }
+            }
+            for &r in &valid_rows {
+                let vnorm: f32 = vals[r].iter().map(|x| x * x).sum::<f32>().sqrt();
+                scores.data_mut()[li * bucket + r] = q(mass[r] * q(vnorm));
+            }
+        }
+        Ok(ScoreOut {
+            scores,
+            prompt_k: pk,
+            prompt_v: pv,
+            last_logits: self.logits_from_state(&last_state),
+        })
+    }
+
+    /// Fresh KV for the selected tokens at their global positions (the
+    /// selective_attn kernel): keys re-RoPE'd, values re-mixed by causal
+    /// attention over the re-rotated cached context.
+    #[allow(clippy::too_many_arguments)]
+    pub fn recompute(
+        &self,
+        bucket: usize,
+        sel_tokens: &TensorI,
+        sel_gpos: &TensorI,
+        _sel_slot: &TensorI,
+        sel_valid: &TensorF,
+        ctx_k: &TensorF,
+        ctx_v: &TensorF,
+        ctx_delta: &TensorI,
+        ctx_gpos: &TensorI,
+        ctx_valid: &TensorF,
+    ) -> Result<RecomputeOut> {
+        let d = &self.d;
+        let (l, h, dh) = (d.n_layers, d.n_heads, d.head_dim);
+        let row = h * dh;
+        let s = sel_tokens.len();
+        if sel_gpos.len() != s || sel_valid.len() != s {
+            bail!("stub recompute: inconsistent selection shapes");
+        }
+        let mut new_k = TensorF::zeros(&[l, s, h, dh]);
+        let mut new_v = TensorF::zeros(&[l, s, h, dh]);
+        for li in 0..l {
+            let keys: Vec<Vec<f32>> = (0..bucket)
+                .map(|r| {
+                    let mut key = Self::kv_row(ctx_k, li, bucket, r, row);
+                    let delta = ctx_delta.data()[r];
+                    if delta != 0 {
+                        self.rotate_row(&mut key, delta as i64);
+                    }
+                    key
+                })
+                .collect();
+            let vals: Vec<Vec<f32>> = (0..bucket)
+                .map(|r| Self::kv_row(ctx_v, li, bucket, r, row))
+                .collect();
+            for i in 0..s {
+                if sel_valid.data()[i] <= 0.0 {
+                    continue; // selection padding stays zero
+                }
+                let tok = sel_tokens.data()[i];
+                let gp = sel_gpos.data()[i];
+                let rows: Vec<usize> = (0..bucket)
+                    .filter(|&r| {
+                        ctx_valid.data()[r] > 0.0 && ctx_gpos.data()[r] <= gp
+                    })
+                    .collect();
+                let qp = self.embed_at(KIND_Q, tok, li, gp);
+                let mixed = self.attend(&qp, &keys, &vals, &rows);
+                let nk = self.embed_at(KIND_K, tok, li, gp);
+                let vb = self.vbase(tok, li);
+                let base = (li * s + i) * row;
+                for j in 0..row {
+                    new_k.data_mut()[base + j] = nk[j];
+                    new_v.data_mut()[base + j] = q(vb[j] + 0.5 * mixed[j]);
+                }
+            }
+        }
+        Ok(RecomputeOut { new_k, new_v })
+    }
+
+    /// One greedy decode step over the resident decode-phase KV.
+    pub fn decode_step(
+        &self,
+        tok: i32,
+        pos: i32,
+        kv: &ResidentDecodeKv,
+    ) -> Result<DecodeOut> {
+        let d = &self.d;
+        let (l, h, dh) = (d.n_layers, d.n_heads, d.head_dim);
+        let row = h * dh;
+        let k_all = kv.k_host()?;
+        let v_all = kv.v_host()?;
+        let valid = kv.valid_host()?;
+        let t_total = kv.capacity();
+        let rows: Vec<usize> =
+            (0..t_total).filter(|&r| valid.data()[r] > 0.0).collect();
+        let mut state = vec![0.0f32; row];
+        let mut new_k = TensorF::zeros(&[l, h, dh]);
+        let mut new_v = TensorF::zeros(&[l, h, dh]);
+        for li in 0..l {
+            let keys: Vec<Vec<f32>> = (0..t_total)
+                .map(|r| Self::kv_row(&k_all, li, t_total, r, row))
+                .collect();
+            let vals: Vec<Vec<f32>> = (0..t_total)
+                .map(|r| Self::kv_row(&v_all, li, t_total, r, row))
+                .collect();
+            let qp = self.embed_at(KIND_Q, tok, li, pos);
+            let mixed = self.attend(&qp, &keys, &vals, &rows);
+            let nk = self.embed_at(KIND_K, tok, li, pos);
+            let vb = self.vbase(tok, li);
+            for i in 0..row {
+                state[i] = q(state[i] + mixed[i]);
+                new_k.data_mut()[li * row + i] = nk[i];
+                new_v.data_mut()[li * row + i] = q(vb[i] + 0.5 * mixed[i]);
+            }
+        }
+        Ok(DecodeOut {
+            logits: self.logits_from_state(&state),
+            new_k,
+            new_v,
+        })
+    }
+
+    /// CacheBlend-style shallow-layer deviation: how far each stored value
+    /// row is from what a full-context recompute at the target positions
+    /// would produce.
+    #[allow(clippy::too_many_arguments)]
+    pub fn deviation(
+        &self,
+        bucket: usize,
+        ctx_tokens: &TensorI,
+        ctx_gpos: &TensorI,
+        ctx_valid: &TensorF,
+        ctx_k_shallow: &TensorF,
+        ctx_v_shallow: &TensorF,
+        ctx_delta: &TensorI,
+    ) -> Result<TensorF> {
+        let d = &self.d;
+        let r_layers = d.dev_layers.min(d.n_layers);
+        let row = self.row();
+        if ctx_tokens.len() < bucket || ctx_valid.len() < bucket {
+            bail!("stub deviation: inconsistent shapes");
+        }
+        let mut dev = vec![0.0f32; bucket];
+        for li in 0..r_layers {
+            let keys: Vec<Vec<f32>> = (0..bucket)
+                .map(|r| {
+                    let mut key = Self::kv_row(ctx_k_shallow, li, bucket, r, row);
+                    let delta = ctx_delta.data()[r];
+                    if delta != 0 {
+                        self.rotate_row(&mut key, delta as i64);
+                    }
+                    key
+                })
+                .collect();
+            let vals: Vec<Vec<f32>> = (0..bucket)
+                .map(|r| Self::kv_row(ctx_v_shallow, li, bucket, r, row))
+                .collect();
+            for r in 0..bucket {
+                if ctx_valid.data()[r] <= 0.0 {
+                    continue;
+                }
+                let tok = ctx_tokens.data()[r];
+                let gp = ctx_gpos.data()[r];
+                let rows: Vec<usize> = (0..bucket)
+                    .filter(|&j| {
+                        ctx_valid.data()[j] > 0.0 && ctx_gpos.data()[j] <= gp
+                    })
+                    .collect();
+                let qp = self.embed_at(KIND_Q, tok, li, gp);
+                let mixed = self.attend(&qp, &keys, &vals, &rows);
+                let vb = self.vbase(tok, li);
+                let stored = &vals[r];
+                let mut sum = 0.0f32;
+                for i in 0..row {
+                    let expect = q(vb[i] + 0.5 * mixed[i]);
+                    sum += (expect - stored[i]).abs();
+                }
+                dev[r] = q(dev[r] + sum);
+            }
+        }
+        TensorF::from_vec(&[bucket], dev)
+    }
+
+    /// Exact full-context prefill (the Baseline method): one causal pass
+    /// over the whole padded sequence at its real positions.
+    pub fn full_prefill(
+        &self,
+        _bucket: usize,
+        tokens: &TensorI,
+        pos: &TensorI,
+        valid: &TensorF,
+    ) -> Result<FullPrefillOut> {
+        let d = &self.d;
+        let np = tokens.len();
+        let (l, h, dh) = (d.n_layers, d.n_heads, d.head_dim);
+        let row = h * dh;
+        if pos.len() != np || valid.len() != np {
+            bail!("stub full_prefill: inconsistent shapes");
+        }
+        let mut k = TensorF::zeros(&[l, np, h, dh]);
+        let mut v = TensorF::zeros(&[l, np, h, dh]);
+        let mut last_state = vec![0.0f32; row];
+        for li in 0..l {
+            let ks: Vec<Vec<f32>> = (0..np)
+                .map(|t| self.embed_at(KIND_K, tokens.data()[t], li, pos.data()[t]))
+                .collect();
+            let qs: Vec<Vec<f32>> = (0..np)
+                .map(|t| self.embed_at(KIND_Q, tokens.data()[t], li, pos.data()[t]))
+                .collect();
+            let vs: Vec<Vec<f32>> =
+                (0..np).map(|t| self.vbase(tokens.data()[t], li)).collect();
+            for t in 0..np {
+                let rows: Vec<usize> =
+                    (0..=t).filter(|&j| valid.data()[j] > 0.0).collect();
+                let mixed = self.attend(&qs[t], &ks, &vs, &rows);
+                let base = (li * np + t) * row;
+                for i in 0..row {
+                    k.data_mut()[base + i] = ks[t][i];
+                    v.data_mut()[base + i] = q(vs[t][i] + 0.5 * mixed[i]);
+                }
+                if t == np - 1 {
+                    for i in 0..row {
+                        last_state[i] = q(last_state[i] + mixed[i]);
+                    }
+                }
+            }
+        }
+        Ok(FullPrefillOut {
+            k,
+            v,
+            last_logits: self.logits_from_state(&last_state),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> StubModel {
+        StubModel::new(default_dims(), 7)
+    }
+
+    #[test]
+    fn prefill_is_deterministic_and_token_sensitive() {
+        let m = model();
+        let toks: Vec<i32> = (16..32).collect();
+        let (k1, v1) = m.prefill_chunk(&toks).unwrap();
+        let (k2, v2) = m.prefill_chunk(&toks).unwrap();
+        assert_eq!(k1.data(), k2.data(), "prefill must be deterministic");
+        assert_eq!(v1.data(), v2.data());
+        let mut other = toks.clone();
+        other[3] += 1;
+        let (k3, _) = m.prefill_chunk(&other).unwrap();
+        assert_ne!(k1.data(), k3.data(), "different tokens, different KV");
+        let d = default_dims();
+        assert_eq!(k1.shape(), &[d.n_layers, 16, d.n_heads, d.head_dim]);
+    }
+
+    #[test]
+    fn different_seeds_are_different_models() {
+        let d = default_dims();
+        let a = StubModel::new(d.clone(), 1);
+        let b = StubModel::new(d, 2);
+        let toks: Vec<i32> = (16..32).collect();
+        let (ka, _) = a.prefill_chunk(&toks).unwrap();
+        let (kb, _) = b.prefill_chunk(&toks).unwrap();
+        assert_ne!(ka.data(), kb.data());
+    }
+
+    #[test]
+    fn delta_rotation_recovers_global_position_keys() {
+        // Key stored at local position t then re-rotated by delta must land
+        // (within quantization noise) on the key freshly RoPE'd at t+delta
+        // — the §4.2 geometry-reconstruction contract the score path uses.
+        let m = model();
+        let tok = 42;
+        let (local_t, delta) = (3i64, 29i64);
+        let mut stored = m.embed(KIND_K, tok, 1);
+        m.rotate_row(&mut stored, local_t);
+        m.rotate_row(&mut stored, delta);
+        let fresh = m.embed_at(KIND_K, tok, 1, (local_t + delta) as i32);
+        let err = stored
+            .iter()
+            .zip(&fresh)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 2.0 / GRID, "rotation composition drifted: {err}");
+    }
+
+    #[test]
+    fn score_shapes_and_validity_mask() {
+        let m = model();
+        let d = default_dims();
+        let bucket = 32;
+        let (h, dh, l, p) = (d.n_heads, d.head_dim, d.n_layers, d.prompt_len);
+        let ctx_k = TensorF::full(&[l, bucket, h, dh], 0.1);
+        let ctx_v = TensorF::full(&[l, bucket, h, dh], 0.2);
+        let delta = TensorI::zeros(&[bucket]);
+        let gpos = TensorI::zeros(&[bucket]);
+        // only the first 16 rows are real
+        let mut valid = TensorF::zeros(&[bucket]);
+        valid.data_mut()[..16].fill(1.0);
+        let prompt = TensorI::from_vec(&[p], vec![2, 20, 3, 0]).unwrap();
+        let ppos = TensorI::from_vec(&[p], (16..16 + p as i32).collect()).unwrap();
+        let out = m
+            .score(bucket, &prompt, &ppos, &ctx_k, &ctx_v, &delta, &gpos, &valid)
+            .unwrap();
+        assert_eq!(out.scores.shape(), &[l, bucket]);
+        assert_eq!(out.prompt_k.shape(), &[l, p, h, dh]);
+        assert_eq!(out.last_logits.shape(), &[d.vocab]);
+        for li in 0..l {
+            for r in 16..bucket {
+                assert_eq!(
+                    out.scores.at(&[li, r]),
+                    0.0,
+                    "padding rows must score zero"
+                );
+            }
+        }
+        assert!(
+            out.scores.data().iter().any(|&x| x != 0.0),
+            "valid rows must receive attention mass"
+        );
+    }
+
+    #[test]
+    fn recompute_changes_values_not_just_keys() {
+        // Recomputing a token at its global position over the full context
+        // must produce a value row different from its chunk-local one —
+        // otherwise selective recomputation would be a no-op in the stub.
+        let m = model();
+        let d = default_dims();
+        let toks: Vec<i32> = (16..32).collect();
+        let (k, v) = m.prefill_chunk(&toks).unwrap();
+        let bucket = 16usize;
+        let s = 1usize;
+        let sel_tok = TensorI::from_vec(&[s], vec![toks[8]]).unwrap();
+        let sel_gpos = TensorI::from_vec(&[s], vec![8]).unwrap();
+        let sel_slot = TensorI::from_vec(&[s], vec![8]).unwrap();
+        let sel_valid = TensorF::full(&[s], 1.0);
+        let delta = TensorI::zeros(&[bucket]);
+        let gpos = TensorI::from_vec(&[bucket], (0..bucket as i32).collect()).unwrap();
+        let valid = TensorF::full(&[bucket], 1.0);
+        let out = m
+            .recompute(
+                bucket, &sel_tok, &sel_gpos, &sel_slot, &sel_valid, &k, &v, &delta,
+                &gpos, &valid,
+            )
+            .unwrap();
+        let row = d.n_heads * d.head_dim;
+        // layer 0, selected row vs original row 8
+        let orig = &v.data()[8 * row..9 * row];
+        let fresh = &out.new_v.data()[..row];
+        assert_ne!(orig, fresh, "recompute must change the value row");
+    }
+
+    #[test]
+    fn logits_depend_on_state() {
+        let m = model();
+        let pos = vec![0.3f32; m.row()];
+        let neg = vec![-0.3f32; m.row()];
+        let a = m.logits_from_state(&pos);
+        let b = m.logits_from_state(&neg);
+        assert_ne!(a.data(), b.data());
+        assert_ne!(a.argmax(), b.argmax());
+    }
+}

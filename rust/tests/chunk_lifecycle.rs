@@ -1,0 +1,266 @@
+//! Artifact-free conformance tests for the chunk-lifecycle subsystem:
+//! single-flight miss resolution (the duplicate-prefill counter MUST read 0
+//! under contention), bit-identical spill/re-admission, and a mixed
+//! get/insert/evict/spill concurrency stress with the store's accounting
+//! and the resident-xor-spilled invariant checked throughout.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Barrier};
+use std::time::Duration;
+
+use anyhow::bail;
+use infoflow_kv::kvcache::{ChunkKv, ChunkStore, SpillTier};
+use infoflow_kv::tensor::TensorF;
+use infoflow_kv::util::rng::Rng;
+
+const CHUNK_LEN: usize = 8;
+
+/// Chunk content derived deterministically from the id, so any copy that
+/// ever comes back (resident, spilled, or re-prefilled) must be
+/// bit-identical to this reference.
+fn det_chunk(id: u64) -> ChunkKv {
+    let dims = [2usize, CHUNK_LEN, 2, 4];
+    let n: usize = dims.iter().product();
+    let mut rng = Rng::new(id ^ 0x00AB_CDEF);
+    ChunkKv {
+        id,
+        tokens: (0..CHUNK_LEN as i32).map(|t| t + id as i32).collect(),
+        k: TensorF::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap(),
+        v: TensorF::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap(),
+    }
+}
+
+fn chunk_bytes() -> usize {
+    det_chunk(0).nbytes()
+}
+
+fn temp_spill_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ifkv_lifecycle_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn eight_concurrent_misses_share_one_prefill() {
+    // The acceptance bar: 8 threads miss the same chunk at the same moment;
+    // exactly ONE prefill runs and the duplicate-prefill counter reads 0.
+    let store = Arc::new(ChunkStore::with_shards(usize::MAX, 4));
+    let loader_runs = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(8));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let store = store.clone();
+        let loader_runs = loader_runs.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            store
+                .get_or_load(42, || {
+                    loader_runs.fetch_add(1, Ordering::SeqCst);
+                    // make the in-flight window wide enough that every
+                    // follower really contends
+                    std::thread::sleep(Duration::from_millis(30));
+                    Ok(det_chunk(42))
+                })
+                .unwrap()
+        }));
+    }
+    let reference = det_chunk(42);
+    for h in handles {
+        let c = h.join().unwrap();
+        assert_eq!(c.id, 42);
+        assert_eq!(c.k.data(), reference.k.data(), "all callers share one result");
+        assert_eq!(c.v.data(), reference.v.data());
+    }
+    assert_eq!(loader_runs.load(Ordering::SeqCst), 1, "exactly one prefill ran");
+    let life = store.lifecycle();
+    assert_eq!(life.prefills.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        life.duplicate_prefills.load(Ordering::Relaxed),
+        0,
+        "single-flight must prevent every duplicate prefill"
+    );
+    assert!(
+        life.single_flight_waits.load(Ordering::Relaxed) >= 1,
+        "with a 30ms in-flight window somebody must have waited"
+    );
+}
+
+#[test]
+fn duplicate_prefill_counter_trips_when_work_is_actually_wasted() {
+    // Negative control for the tripwire: a raw insert racing a get_or_load
+    // loader makes that loader's work redundant — the counter must say so.
+    let store = Arc::new(ChunkStore::with_shards(usize::MAX, 1));
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let loader_store = store.clone();
+    let h = std::thread::spawn(move || {
+        loader_store
+            .get_or_load(7, move || {
+                started_tx.send(()).unwrap();
+                gate_rx.recv().unwrap(); // hold the prefill open
+                Ok(det_chunk(7))
+            })
+            .unwrap()
+    });
+    started_rx.recv().unwrap();
+    // The chunk becomes resident behind the loader's back.
+    store.insert(det_chunk(7));
+    gate_tx.send(()).unwrap();
+    h.join().unwrap();
+    assert_eq!(
+        store.lifecycle().duplicate_prefills.load(Ordering::Relaxed),
+        1,
+        "a prefill finishing for an already-resident chunk is a duplicate"
+    );
+}
+
+#[test]
+fn evicted_chunk_spills_and_readmits_bit_identical() {
+    let dir = temp_spill_dir("readmit");
+    let tier = Arc::new(SpillTier::new(&dir).unwrap());
+    // Room for exactly one chunk: inserting B evicts (and spills) A.
+    let store = ChunkStore::with_spill(chunk_bytes(), 1, tier.clone());
+    let a = det_chunk(1);
+    store.insert(det_chunk(1));
+    store.insert(det_chunk(2));
+    assert!(!store.contains(1), "A must be evicted");
+    assert!(tier.contains(1), "A must be spilled, not discarded");
+    assert!(store.contains(2) != tier.contains(2), "resident xor spilled");
+
+    // Re-admission must deserialize, never re-prefill.
+    let back = store
+        .get_or_load(1, || bail!("spilled chunk must not be re-prefilled"))
+        .unwrap();
+    assert_eq!(back.tokens, a.tokens);
+    assert_eq!(back.k.data(), a.k.data(), "K must round-trip bit-identically");
+    assert_eq!(back.v.data(), a.v.data(), "V must round-trip bit-identically");
+    assert!(
+        !tier.contains(1),
+        "a re-admitted chunk must not stay spilled while resident"
+    );
+    let life = store.lifecycle();
+    assert_eq!(life.spill_admits.load(Ordering::Relaxed), 1);
+    assert_eq!(life.prefills.load(Ordering::Relaxed), 0);
+    assert!(life.spills.load(Ordering::Relaxed) >= 1);
+    // Re-admitting A (budget 1) evicted B in turn — B must have spilled.
+    assert!(tier.contains(2), "the displaced chunk must spill in turn");
+    drop(back);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lifecycle_stress_mixed_ops_keeps_every_invariant() {
+    const N_THREADS: u64 = 6;
+    const ID_SPACE: u64 = 32;
+    const OPS: u64 = 300;
+    let dir = temp_spill_dir("stress");
+    let tier = Arc::new(SpillTier::new(&dir).unwrap());
+    // 4 shards x 2 chunks each: constant eviction/spill churn.
+    let budget = 8 * chunk_bytes();
+    let store = Arc::new(ChunkStore::with_spill(budget, 4, tier.clone()));
+    let lookups = Arc::new(AtomicU64::new(0));
+    let slack = N_THREADS as usize * chunk_bytes();
+    let mut handles = Vec::new();
+    for t in 0..N_THREADS {
+        let store = store.clone();
+        let lookups = lookups.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + t);
+            for _ in 0..OPS {
+                let id = rng.below(ID_SPACE as usize) as u64;
+                let roll = rng.below(10);
+                if roll < 5 {
+                    lookups.fetch_add(1, Ordering::Relaxed);
+                    let _ = store.get(id);
+                } else if roll < 8 {
+                    lookups.fetch_add(1, Ordering::Relaxed);
+                    let c = store.get_or_load(id, || Ok(det_chunk(id))).unwrap();
+                    assert_eq!(c.id, id);
+                    drop(c);
+                } else {
+                    drop(store.insert(det_chunk(id)));
+                }
+                // Budget invariant after every op, modulo transient pins
+                // (each live thread can hold at most one chunk Arc here).
+                let bytes = store.stats().bytes;
+                assert!(
+                    bytes <= budget + slack,
+                    "resident bytes {bytes} blew past budget {budget} + pin slack {slack}"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Accounting: every counted lookup is exactly one hit or one miss.
+    let stats = store.stats();
+    assert_eq!(
+        stats.hits + stats.misses,
+        lookups.load(Ordering::Relaxed),
+        "hits + misses must equal lookups"
+    );
+
+    // All pins are dropped: one settle insert per shard region brings every
+    // shard back under its budget.
+    for id in 0..ID_SPACE {
+        drop(store.insert(det_chunk(id)));
+    }
+    assert!(store.stats().bytes <= budget, "store must settle under its budget");
+
+    // Quiescent: no chunk is both resident and spilled.
+    for id in 0..ID_SPACE {
+        assert!(
+            !(store.contains(id) && tier.contains(id)),
+            "chunk {id} is resident AND spilled"
+        );
+    }
+
+    // No lost chunks: every id is recoverable (resident hit, spill
+    // admission, or deterministic re-prefill) and bit-identical to the
+    // reference content.
+    for id in 0..ID_SPACE {
+        let reference = det_chunk(id);
+        let c = store.get_or_load(id, || Ok(det_chunk(id))).unwrap();
+        assert_eq!(c.tokens, reference.tokens, "chunk {id} tokens corrupted");
+        assert_eq!(c.k.data(), reference.k.data(), "chunk {id} K corrupted");
+        assert_eq!(c.v.data(), reference.v.data(), "chunk {id} V corrupted");
+    }
+
+    // The spill tier actually took part.
+    let life = store.lifecycle();
+    assert!(
+        life.spills.load(Ordering::Relaxed) > 0,
+        "stress run never exercised the spill path"
+    );
+    assert_eq!(
+        life.spill_errors.load(Ordering::Relaxed),
+        0,
+        "spill IO must not fail on a healthy disk"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stats_json_exposes_lifecycle_and_tier_blocks() {
+    let dir = temp_spill_dir("statsjson");
+    let tier = Arc::new(SpillTier::new(&dir).unwrap());
+    let store = ChunkStore::with_spill(chunk_bytes(), 1, tier);
+    store.insert(det_chunk(1));
+    store.insert(det_chunk(2)); // evict + spill 1
+    let _ = store.get_or_load(1, || Ok(det_chunk(1))).unwrap(); // admit 1
+    let j = store.stats_json();
+    let life = j.get("lifecycle").unwrap();
+    assert_eq!(life.get("spill_admits").unwrap().as_usize().unwrap(), 1);
+    assert!(life.get("spills").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(life.get("duplicate_prefills").unwrap().as_usize().unwrap(), 0);
+    let tier_stats = j.get("spill_tier").unwrap();
+    assert!(tier_stats.get("writes").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(tier_stats.get("reads").unwrap().as_usize().unwrap(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

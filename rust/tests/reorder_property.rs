@@ -1,0 +1,121 @@
+//! Property test composing the §4.3 reorder with the in-place buffer
+//! permutation: applying `reorder_chunks`'s order via
+//! `AssembledContext::permute_chunks_in_place` must equal the clone-based
+//! `reorder::permute` reference (permute the chunk list, reassemble fresh)
+//! for random chunkings — including the single-chunk and empty-selection
+//! edge cases.
+
+use std::sync::Arc;
+
+use infoflow_kv::kvcache::{AssembledContext, ChunkKv};
+use infoflow_kv::manifest::ModelDims;
+use infoflow_kv::reorder;
+use infoflow_kv::tensor::TensorF;
+use infoflow_kv::util::{prop, rng::Rng};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 144,
+        d_model: 64,
+        n_layers: 3,
+        n_heads: 2,
+        head_dim: 4,
+        d_ff: 128,
+        rope_theta: 10000.0,
+        chunk: 8,
+        prompt_len: 4,
+        sel_budget: 4,
+        answer_buf: 3,
+        dev_layers: 2,
+    }
+}
+
+fn rand_chunk(rng: &mut Rng, id: u64, len: usize) -> Arc<ChunkKv> {
+    let d = dims();
+    let shape = [d.n_layers, len, d.n_heads, d.head_dim];
+    let n: usize = shape.iter().product();
+    Arc::new(ChunkKv {
+        id,
+        tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
+        k: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap(),
+        v: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect())
+            .unwrap(),
+    })
+}
+
+fn assert_ctx_matches(a: &AssembledContext, b: &AssembledContext) -> prop::PropResult {
+    prop::assert_prop(a.chunk_lens == b.chunk_lens, "chunk_lens differ")?;
+    prop::assert_prop(a.tokens.data() == b.tokens.data(), "tokens differ")?;
+    prop::assert_prop(a.gpos.data() == b.gpos.data(), "gpos differ")?;
+    prop::assert_prop(a.valid.data() == b.valid.data(), "valid differ")?;
+    prop::assert_prop(a.k.data() == b.k.data(), "k differs")?;
+    prop::assert_prop(a.v.data() == b.v.data(), "v differs")
+}
+
+#[test]
+fn reorder_applied_in_place_matches_clone_based_reference() {
+    let d = dims();
+    prop::check(80, |rng: &mut Rng| {
+        let nc = 1 + rng.below(6);
+        let equal_lens = rng.chance(0.5);
+        let chunks: Vec<Arc<ChunkKv>> = (0..nc)
+            .map(|i| {
+                let len = if equal_lens { d.chunk } else { 2 + rng.below(7) };
+                rand_chunk(rng, i as u64, len)
+            })
+            .collect();
+        let n: usize = chunks.iter().map(|c| c.len()).sum();
+        let bucket = n + rng.below(9);
+        let mut ctx = AssembledContext::new(&d, bucket, &chunks).unwrap();
+
+        // Drive the order from the real reorder logic over random stage-1
+        // scores (valid mask included), exactly as the pipeline does.
+        let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32).collect();
+        let order = reorder::reorder_chunks(&scores, ctx.valid.data(), &ctx.chunk_lens);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        prop::assert_prop(
+            sorted == (0..nc).collect::<Vec<usize>>(),
+            format!("reorder produced a non-permutation {order:?}"),
+        )?;
+
+        // In-place application...
+        ctx.permute_chunks_in_place(&order).unwrap();
+        // ...vs the clone-based reference: permute the chunk list, then
+        // assemble a fresh buffer from it.
+        let permuted = reorder::permute(&chunks, &order);
+        let reference = AssembledContext::new(&d, bucket, &permuted).unwrap();
+        assert_ctx_matches(&ctx, &reference)
+    });
+}
+
+#[test]
+fn single_chunk_reorder_is_identity() {
+    let d = dims();
+    let mut rng = Rng::new(17);
+    let chunks = vec![rand_chunk(&mut rng, 9, d.chunk)];
+    let mut ctx = AssembledContext::new(&d, d.chunk + 4, &chunks).unwrap();
+    let before_k = ctx.k.data().to_vec();
+    let scores: Vec<f32> = (0..d.chunk).map(|i| i as f32).collect();
+    let order = reorder::reorder_chunks(&scores, ctx.valid.data(), &ctx.chunk_lens);
+    assert_eq!(order, vec![0], "one chunk has exactly one order");
+    ctx.permute_chunks_in_place(&order).unwrap();
+    assert_eq!(ctx.k.data(), &before_k[..], "identity permutation must not move data");
+}
+
+#[test]
+fn empty_selection_reorders_nothing() {
+    // Zero chunks: the reorder yields an empty permutation and the in-place
+    // application over an empty assembly is a no-op rather than a panic.
+    let d = dims();
+    let chunks: Vec<Arc<ChunkKv>> = Vec::new();
+    let mut ctx = AssembledContext::new(&d, 8, &chunks).unwrap();
+    let order = reorder::reorder_chunks(&[], &[], &[]);
+    assert!(order.is_empty());
+    ctx.permute_chunks_in_place(&order).unwrap();
+    assert_eq!(ctx.n(), 0);
+    let reference = AssembledContext::new(&d, 8, &reorder::permute(&chunks, &order)).unwrap();
+    assert_eq!(ctx.k.data(), reference.k.data());
+    assert_eq!(ctx.valid.data(), reference.valid.data());
+}
