@@ -170,7 +170,7 @@ fn worker_scaling() {
                     i += 1;
                     // simulated answer(): no store lock held
                     std::thread::sleep(Duration::from_millis(2));
-                    Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 2e-3 })
+                    Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 2e-3, stages: vec![] })
                 }) as Handler
             })
             .collect();
@@ -194,7 +194,7 @@ fn worker_scaling() {
                             needle_chunks: vec![],
                             task: "bench",
                         },
-                        method: MethodSpec::Baseline,
+                        plan: MethodSpec::Baseline.to_plan(),
                         respond: rtx,
                     })
                     .unwrap();

@@ -51,8 +51,8 @@ fn main() -> anyhow::Result<()> {
             pipeline.vocab.render(&r.answer),
             token_f1(&r.answer, &episode.answer),
             r.timing.ttft_s() * 1e3,
-            r.timing.score_s * 1e3,
-            r.timing.recompute_s * 1e3,
+            r.timing.score_s() * 1e3,
+            r.timing.recompute_s() * 1e3,
             r.timing.prompt_s * 1e3,
         );
     }

@@ -11,6 +11,16 @@ use crate::geometry::RopeGeometry;
 pub const DEFAULT_NORM_LAYER: usize = 2;
 
 /// One of the paper's six inference strategies (§6.1).
+///
+/// **Deprecated facade.**  The method layer's real currency is the
+/// composable [`QueryPlan`](crate::plan::QueryPlan): every variant here
+/// lowers onto policy stages via
+/// [`MethodSpec::to_plan`](crate::plan) (e.g. `Ours` becomes
+/// `score=norm:layer2,geom=global;select=topk:B`), and the pipeline no
+/// longer dispatches on this enum.  It is kept so the paper-table benches,
+/// the golden conformance grid and existing callers keep compiling — and to
+/// prove plan lowering reproduces the historical behaviour bit-for-bit.
+/// New strategies should be expressed as plans, not new variants.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MethodSpec {
     /// Full-context prefilling, no chunking (upper anchor).
@@ -130,6 +140,10 @@ pub struct ServeConfig {
     /// --spill-dir`): evicted chunk KV is serialized there and re-admitted
     /// on a later miss instead of re-prefilled.  `None` disables spilling.
     pub spill_dir: Option<PathBuf>,
+    /// Byte budget of the spill tier (`repro serve --spill-mb`): oldest
+    /// spill files are evicted once the directory exceeds it.  `None`
+    /// leaves the tier unbounded.
+    pub spill_budget_bytes: Option<u64>,
 }
 
 impl Default for ServeConfig {
@@ -145,6 +159,7 @@ impl Default for ServeConfig {
             queue_cap: 64,
             prefetch_threads: 1,
             spill_dir: None,
+            spill_budget_bytes: None,
         }
     }
 }

@@ -36,6 +36,7 @@
 //! the work channel, and hang up on the workers AND the prefetchers (their
 //! job channel's sender lives in the router), which drain and exit.
 
+use std::collections::HashSet;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -47,8 +48,9 @@ use anyhow::{anyhow, Result};
 use crate::config::MethodSpec;
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::MetricsRegistry;
-use crate::kvcache::{ChunkKv, ChunkStore, PoolStats};
+use crate::kvcache::{ChunkId, ChunkKv, ChunkStore, PoolStats};
 use crate::pipeline::Pipeline;
+use crate::plan::QueryPlan;
 use crate::util::json::Json;
 use crate::workload::Episode;
 
@@ -56,9 +58,11 @@ use crate::workload::Episode;
 /// the parked `recv_timeout` wakes immediately when the sender drops.
 const IDLE_PARK: Duration = Duration::from_millis(50);
 
+/// One queued query: the episode plus the [`QueryPlan`] to answer it under
+/// (legacy callers lower a `MethodSpec` via [`Server::query`]).
 pub struct Request {
     pub episode: Episode,
-    pub method: MethodSpec,
+    pub plan: QueryPlan,
     pub respond: SyncSender<Response>,
 }
 
@@ -69,6 +73,9 @@ pub struct Response {
     pub total_s: f64,
     /// Queueing delay before a worker picked the request up.
     pub queue_s: f64,
+    /// Per-stage seconds of the plan's policy stages plus the fixed
+    /// `prompt`/`decode` phases, in execution order.
+    pub stages: Vec<(&'static str, f64)>,
 }
 
 /// What a worker computes for one request (queueing metadata is added by
@@ -78,6 +85,9 @@ pub struct Served {
     pub answer: Vec<i32>,
     pub ttft_s: f64,
     pub total_s: f64,
+    /// Per-stage seconds, recorded into the metrics registry as
+    /// `stage_<name>` latency series.
+    pub stages: Vec<(&'static str, f64)>,
 }
 
 /// Per-worker request handler.  [`Server::spawn_pool`] builds one
@@ -91,8 +101,13 @@ pub type Handler = Box<dyn FnMut(&Request) -> Result<Served> + Send>;
 /// pipeline; tests inject synthetic ones.
 pub type PrefetchFn = Box<dyn FnMut(&[Vec<i32>]) + Send>;
 
-/// A prefetch job: one request's chunk token lists.
-type PrefetchJob = Vec<Vec<i32>>;
+/// A prefetch job: one request's chunk token lists (minus anything already
+/// queued for prefetch), plus their content ids so the prefetcher can clear
+/// the queued-set when the warm completes.
+struct PrefetchJob {
+    ids: Vec<ChunkId>,
+    chunks: Vec<Vec<i32>>,
+}
 
 /// Queueing/batching knobs for a server instance.
 #[derive(Clone, Copy, Debug)]
@@ -112,6 +127,10 @@ type Batch = Vec<(Request, Instant)>;
 
 struct Shared {
     metrics: MetricsRegistry,
+    /// Chunk ids currently sitting in the prefetch job queue (or being
+    /// warmed right now).  Admission dedup: a hot chunk referenced by many
+    /// queued requests is scheduled once, not once per request.
+    prefetch_queued: Mutex<HashSet<ChunkId>>,
 }
 
 /// A running server instance.
@@ -187,11 +206,15 @@ impl Server {
                     // The store lock lives inside get/insert; the batch is
                     // served over pinned Arcs with no lock held.
                     let (chunks, _) = p.prepare_chunks(&st, &req.episode.chunks)?;
-                    let r = p.answer(&chunks, &req.episode.prompt, req.method)?;
+                    let r = p.answer_plan(&chunks, &req.episode.prompt, &req.plan)?;
+                    let mut stages = r.timing.stages.clone();
+                    stages.push(("prompt", r.timing.prompt_s));
+                    stages.push(("decode", r.timing.decode_s));
                     Ok(Served {
                         answer: r.answer,
                         ttft_s: r.timing.ttft_s(),
                         total_s: r.timing.total_s,
+                        stages,
                     })
                 }) as Handler
             })
@@ -245,7 +268,10 @@ impl Server {
     ) -> Server {
         assert!(!handlers.is_empty(), "server needs at least one worker");
         let (tx, rx) = sync_channel::<(Request, Instant)>(cfg.queue_cap);
-        let shared = Arc::new(Shared { metrics: MetricsRegistry::new() });
+        let shared = Arc::new(Shared {
+            metrics: MetricsRegistry::new(),
+            prefetch_queued: Mutex::new(HashSet::new()),
+        });
         let n_workers = handlers.len();
         // Bounded so the router backpressures instead of buffering
         // unbounded batches ahead of slow workers.
@@ -281,8 +307,30 @@ impl Server {
                                 Ok(j) => j,
                                 Err(_) => break, // router gone: drain done
                             };
-                            warm(&job);
-                            sh.metrics.incr("prefetch_jobs");
+                            // Contain warm panics (like serve_batch does for
+                            // handlers): the ids MUST leave the queued-set on
+                            // every path, or those chunks would be deduped —
+                            // i.e. never prefetched again — forever.  While
+                            // the warm is in progress, a re-submission of the
+                            // same chunks still dedups instead of re-queueing.
+                            let outcome = std::panic::catch_unwind(
+                                AssertUnwindSafe(|| warm(&job.chunks)),
+                            );
+                            {
+                                let mut queued = sh.prefetch_queued.lock().unwrap();
+                                for id in &job.ids {
+                                    queued.remove(id);
+                                }
+                            }
+                            match outcome {
+                                Ok(()) => sh.metrics.incr("prefetch_jobs"),
+                                Err(_) => {
+                                    sh.metrics.incr("prefetch_panics");
+                                    eprintln!(
+                                        "[server] prefetch warm panicked; prefetcher continues"
+                                    );
+                                }
+                            }
                         })
                         .expect("spawning prefetch thread"),
                 );
@@ -321,10 +369,16 @@ impl Server {
         }
     }
 
-    /// Convenience: submit and wait for the answer.
+    /// Convenience: submit and wait for the answer, under a legacy method
+    /// spec (lowered to a [`QueryPlan`]).
     pub fn query(&self, episode: Episode, method: MethodSpec) -> Result<Response> {
+        self.query_plan(episode, method.to_plan())
+    }
+
+    /// Submit a plan-typed query and wait for the answer.
+    pub fn query_plan(&self, episode: Episode, plan: QueryPlan) -> Result<Response> {
         let (rtx, rrx) = sync_channel(1);
-        self.submit(Request { episode, method, respond: rtx })?;
+        self.submit(Request { episode, plan, respond: rtx })?;
         rrx.recv().map_err(|_| anyhow!("worker dropped the request"))
     }
 
@@ -438,7 +492,9 @@ fn router_loop(
 
 /// Best-effort prefetch scheduling: a full job channel drops the hint (the
 /// worker will resolve the miss itself) rather than ever stalling the
-/// router.
+/// router.  Admission dedup: chunk ids already sitting in the prefetch
+/// queue (or being warmed right now) are skipped, so a hot chunk referenced
+/// by many queued requests is scheduled once.
 fn schedule_prefetch(
     tx: &Option<SyncSender<PrefetchJob>>,
     req: &Request,
@@ -448,9 +504,37 @@ fn schedule_prefetch(
     if req.episode.chunks.is_empty() {
         return;
     }
-    match tx.try_send(req.episode.chunks.clone()) {
+    let mut ids: Vec<ChunkId> = Vec::new();
+    let mut chunks: Vec<Vec<i32>> = Vec::new();
+    {
+        let mut queued = shared.prefetch_queued.lock().unwrap();
+        for toks in &req.episode.chunks {
+            let id = ChunkKv::content_id(toks);
+            if queued.contains(&id) || ids.contains(&id) {
+                shared.metrics.incr("prefetch_deduped");
+                continue;
+            }
+            ids.push(id);
+            chunks.push(toks.clone());
+        }
+        if ids.is_empty() {
+            return; // everything is already queued or in-warm
+        }
+        for &id in &ids {
+            queued.insert(id);
+        }
+    }
+    match tx.try_send(PrefetchJob { ids, chunks }) {
         Ok(()) => shared.metrics.incr("prefetch_scheduled"),
-        Err(_) => shared.metrics.incr("prefetch_dropped"),
+        Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => {
+            shared.metrics.incr("prefetch_dropped");
+            // The hint is gone; un-queue the ids so a later request (or the
+            // post-dispatch re-peek) can schedule them again.
+            let mut queued = shared.prefetch_queued.lock().unwrap();
+            for id in job.ids {
+                queued.remove(&id);
+            }
+        }
     }
 }
 
@@ -507,11 +591,17 @@ fn serve_batch(handler: &mut Handler, batch: Batch, shared: &Shared) {
                 shared.metrics.observe_s("ttft", s.ttft_s);
                 shared.metrics.observe_s("total", s.total_s);
                 shared.metrics.observe_s("queue", queue_s);
+                // Per-stage latency series, keyed by stage name, so
+                // `metrics_json` breaks serving time down by plan stage.
+                for (name, secs) in &s.stages {
+                    shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+                }
                 let _ = req.respond.send(Response {
                     answer: s.answer,
                     ttft_s: s.ttft_s,
                     total_s: s.total_s,
                     queue_s,
+                    stages: s.stages,
                 });
             }
             Ok(Err(e)) => {
@@ -550,7 +640,7 @@ mod tests {
 
     fn instant_handler() -> Handler {
         Box::new(|_req| {
-            Ok(Served { answer: vec![1], ttft_s: 1e-6, total_s: 1e-6 })
+            Ok(Served { answer: vec![1], ttft_s: 1e-6, total_s: 1e-6, stages: vec![] })
         })
     }
 
@@ -559,7 +649,7 @@ mod tests {
         server
             .submit(Request {
                 episode: test_episode(),
-                method: MethodSpec::Baseline,
+                plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
             })
             .unwrap();
@@ -588,7 +678,7 @@ mod tests {
         // flush every one of them through the workers before returning.
         let handler: Handler = Box::new(|_req| {
             std::thread::sleep(Duration::from_millis(3));
-            Ok(Served { answer: vec![9], ttft_s: 1e-3, total_s: 3e-3 })
+            Ok(Served { answer: vec![9], ttft_s: 1e-3, total_s: 3e-3, stages: vec![] })
         });
         let server = Server::spawn_handlers(vec![handler], ServerConfig::default());
         let receivers: Vec<_> = (0..5).map(|_| submit_one(&server)).collect();
@@ -613,7 +703,7 @@ mod tests {
                 peak.fetch_max(now, Ordering::SeqCst);
                 std::thread::sleep(Duration::from_millis(50));
                 live.fetch_sub(1, Ordering::SeqCst);
-                Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 5e-2 })
+                Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 5e-2, stages: vec![] })
             })
         };
         let cfg = ServerConfig {
@@ -653,7 +743,7 @@ mod tests {
                 peak.fetch_max(now, Ordering::SeqCst);
                 std::thread::sleep(Duration::from_millis(50));
                 live.fetch_sub(1, Ordering::SeqCst);
-                Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 5e-2 })
+                Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 5e-2, stages: vec![] })
             })
         };
         let cfg = ServerConfig {
@@ -700,7 +790,7 @@ mod tests {
             if calls == 1 {
                 panic!("synthetic handler panic");
             }
-            Ok(Served { answer: vec![2], ttft_s: 1e-6, total_s: 1e-6 })
+            Ok(Served { answer: vec![2], ttft_s: 1e-6, total_s: 1e-6, stages: vec![] })
         });
         let server = Server::spawn_handlers(vec![handler], ServerConfig::default());
         let r1 = submit_one(&server);
@@ -746,6 +836,7 @@ mod tests {
                     answer: vec![i32::from(all_warm)],
                     ttft_s: 1e-6,
                     total_s: 1e-6,
+                    stages: vec![],
                 })
             })
         };
@@ -763,11 +854,11 @@ mod tests {
         };
         let (rtx1, rrx1) = sync_channel(1);
         server
-            .submit(Request { episode: mk_req(10), method: MethodSpec::Baseline, respond: rtx1 })
+            .submit(Request { episode: mk_req(10), plan: MethodSpec::Baseline.to_plan(), respond: rtx1 })
             .unwrap();
         let (rtx2, rrx2) = sync_channel(1);
         server
-            .submit(Request { episode: mk_req(20), method: MethodSpec::Baseline, respond: rtx2 })
+            .submit(Request { episode: mk_req(20), plan: MethodSpec::Baseline.to_plan(), respond: rtx2 })
             .unwrap();
         // Wait for the prefetcher to warm the second request's chunks, then
         // release the worker for both requests.
@@ -803,7 +894,28 @@ mod tests {
             vec![warm_fn],
             ServerConfig::default(),
         );
-        let receivers: Vec<_> = (0..8).map(|_| submit_one(&server)).collect();
+        // Distinct chunk lists per request: admission dedup must not merge
+        // them, so every push schedules a job.
+        let receivers: Vec<_> = (0..8)
+            .map(|i| {
+                let (rtx, rrx) = sync_channel(1);
+                let tag = 10 * (i as i32 + 1);
+                server
+                    .submit(Request {
+                        episode: Episode {
+                            chunks: vec![vec![tag, tag + 1, tag + 2]],
+                            prompt: vec![4],
+                            answer: vec![5],
+                            needle_chunks: vec![],
+                            task: "test",
+                        },
+                        plan: MethodSpec::Baseline.to_plan(),
+                        respond: rtx,
+                    })
+                    .unwrap();
+                rrx
+            })
+            .collect();
         for rrx in receivers {
             rrx.recv().unwrap();
         }
@@ -820,6 +932,49 @@ mod tests {
     }
 
     #[test]
+    fn queued_duplicate_chunks_prefetch_once() {
+        // Admission dedup: while a chunk list is queued (or mid-warm),
+        // identical chunk lists from later requests must be skipped, not
+        // re-queued — a hot chunk referenced by many requests is scheduled
+        // once.
+        let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let warm_fn: PrefetchFn = Box::new(move |_chunks: &[Vec<i32>]| {
+            let _ = started_tx.send(());
+            let _ = release_rx.recv(); // wedge the warm until released
+        });
+        let server = Server::spawn_handlers_with_prefetch(
+            vec![instant_handler()],
+            vec![warm_fn],
+            ServerConfig::default(),
+        );
+        // First request schedules its chunks and wedges the prefetcher...
+        let r0 = submit_one(&server);
+        started_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("prefetcher never started the first warm");
+        // ...so these five identical requests must all dedup against the
+        // still-queued ids.
+        let rest: Vec<_> = (0..5).map(|_| submit_one(&server)).collect();
+        r0.recv().unwrap();
+        for rrx in rest {
+            rrx.recv().unwrap();
+        }
+        assert_eq!(
+            server.metrics().counter("prefetch_scheduled"),
+            1,
+            "identical queued chunk lists must be scheduled once"
+        );
+        assert!(
+            server.metrics().counter("prefetch_deduped") >= 5,
+            "later duplicates must be counted as deduped"
+        );
+        release_tx.send(()).unwrap();
+        drop(release_tx); // any further warm returns immediately
+        server.shutdown();
+    }
+
+    #[test]
     fn backpressure_rejects_when_saturated() {
         // One wedged worker + a tiny ingress queue: the system can absorb
         // only worker(1) + work channel + ingress queue(1); beyond that,
@@ -827,7 +982,7 @@ mod tests {
         let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
         let handler: Handler = Box::new(move |_req| {
             gate_rx.recv().map_err(|_| anyhow!("gate closed"))?;
-            Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 1e-3 })
+            Ok(Served { answer: vec![1], ttft_s: 1e-3, total_s: 1e-3, stages: vec![] })
         });
         let cfg = ServerConfig {
             batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
@@ -840,7 +995,7 @@ mod tests {
             let (rtx, rrx) = sync_channel(1);
             match server.submit(Request {
                 episode: test_episode(),
-                method: MethodSpec::Baseline,
+                plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
             }) {
                 Ok(()) => receivers.push(rrx),

@@ -6,6 +6,7 @@ use crate::config::MethodSpec;
 use crate::eval::metrics::{exact_match, token_f1};
 use crate::kvcache::ChunkStore;
 use crate::pipeline::{Pipeline, QueryResult};
+use crate::plan::QueryPlan;
 use crate::workload::Episode;
 
 #[derive(Clone, Debug, Default)]
@@ -30,13 +31,19 @@ impl<'a> EvalRunner<'a> {
         EvalRunner { pipeline, store }
     }
 
+    /// Legacy entry point: lowers the method onto a [`QueryPlan`].
     pub fn run(&mut self, episodes: &[Episode], method: MethodSpec) -> Result<EvalOutcome> {
+        self.run_plan(episodes, &method.to_plan())
+    }
+
+    /// Run every episode under one [`QueryPlan`], aggregating metrics.
+    pub fn run_plan(&mut self, episodes: &[Episode], plan: &QueryPlan) -> Result<EvalOutcome> {
         let mut out = EvalOutcome { n: episodes.len(), ..Default::default() };
         let mut needle_hits = 0usize;
         let mut needle_total = 0usize;
         for e in episodes {
             let (chunks, _) = self.pipeline.prepare_chunks(self.store, &e.chunks)?;
-            let r = self.pipeline.answer(&chunks, &e.prompt, method)?;
+            let r = self.pipeline.answer_plan(&chunks, &e.prompt, plan)?;
             out.f1 += token_f1(&r.answer, &e.answer);
             out.em += exact_match(&r.answer, &e.answer) as u8 as f64;
             out.mean_ttft_s += r.timing.ttft_s();

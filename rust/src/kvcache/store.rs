@@ -129,6 +129,9 @@ pub struct LifecycleStats {
     pub spill_errors: AtomicU64,
     /// Followers that blocked on another thread's in-flight resolution.
     pub single_flight_waits: AtomicU64,
+    /// Chunks admitted through [`ChunkStore::admit`] (bulk restores routed
+    /// through the flight-aware lifecycle path).
+    pub restores: AtomicU64,
 }
 
 impl LifecycleStats {
@@ -141,6 +144,7 @@ impl LifecycleStats {
             ("spills", g(&self.spills)),
             ("spill_errors", g(&self.spill_errors)),
             ("single_flight_waits", g(&self.single_flight_waits)),
+            ("restores", g(&self.restores)),
         ])
     }
 }
@@ -658,6 +662,46 @@ impl ChunkStore {
         }
     }
 
+    /// Admit a fully materialized chunk through the flight-aware lifecycle
+    /// path — the bulk-restore counterpart of [`ChunkStore::get_or_load`].
+    /// Unlike raw [`ChunkStore::insert`], this serializes with any live
+    /// resolution of the same id and removes a stale spill-tier file before
+    /// inserting, so restores compose with a live spill tier without ever
+    /// leaving a chunk resident and spilled at once.
+    ///
+    /// If the id is already resident the existing entry is returned
+    /// untouched (ids are content hashes, so the copies are identical).
+    pub fn admit(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
+        let id = chunk.id;
+        loop {
+            match self.flights.begin(id) {
+                FlightTicket::Leader => {
+                    let _guard = FlightGuard { flights: &self.flights, id };
+                    if let Some(existing) = self.probe(id) {
+                        return existing;
+                    }
+                    // Consume any spilled copy up front (under our flight),
+                    // exactly like the admission path of `get_or_load`; the
+                    // incoming chunk supersedes it.
+                    if let Some(tier) = &self.spill {
+                        tier.discard(id);
+                    }
+                    self.life.restores.fetch_add(1, Ordering::Relaxed);
+                    return self.insert_under_flight(chunk);
+                }
+                FlightTicket::Follower(slot) => {
+                    self.life.single_flight_waits.fetch_add(1, Ordering::Relaxed);
+                    slot.wait();
+                    if let Some(existing) = self.probe(id) {
+                        return existing;
+                    }
+                    // The other resolution failed or was evicted again:
+                    // take the lead ourselves on the next spin.
+                }
+            }
+        }
+    }
+
     // -- persistence ---------------------------------------------------------
     // Record format (little-endian), shared with the spill tier
     // (`kvcache::tier`): magic "IFKV1\0\0\0" once per file, then per chunk:
@@ -696,6 +740,18 @@ impl ChunkStore {
         budget_bytes: usize,
         n_shards: usize,
     ) -> Result<ChunkStore> {
+        let store = ChunkStore::with_shards(budget_bytes, n_shards);
+        store.restore_from(path)?;
+        Ok(store)
+    }
+
+    /// Stream a persisted store file into this (possibly live) store through
+    /// the flight-aware [`ChunkStore::admit`] path, returning how many
+    /// records were read.  Restores therefore compose with a live spill
+    /// tier and with concurrent `get_or_load` traffic: every admitted id
+    /// serializes under its single-flight slot, stale spill files are
+    /// consumed, and already-resident ids are left untouched.
+    pub fn restore_from(&self, path: &Path) -> Result<usize> {
         let f = std::fs::File::open(path)
             .map_err(|e| anyhow!("opening {}: {e}", path.display()))?;
         let total = f.metadata()?.len();
@@ -708,14 +764,15 @@ impl ChunkStore {
         if &magic != STORE_MAGIC {
             bail!("{}: bad magic", path.display());
         }
-        let store = ChunkStore::with_shards(budget_bytes, n_shards);
+        let mut n = 0usize;
         let mut remaining = total - 8;
         while let Some(chunk) = read_chunk_record(&mut r, &mut remaining)
             .map_err(|e| anyhow!("{}: {e:#}", path.display()))?
         {
-            store.insert(chunk);
+            self.admit(chunk);
+            n += 1;
         }
-        Ok(store)
+        Ok(n)
     }
 }
 
@@ -1099,6 +1156,67 @@ mod tests {
                 format!("store exceeded budget: {} > {}", s.stats().bytes, cap * one),
             )
         });
+    }
+
+    #[test]
+    fn admit_consumes_stale_spill_file_and_counts_restores() {
+        let dir = std::env::temp_dir()
+            .join(format!("ifkv_store_admit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tier = Arc::new(SpillTier::new(&dir).unwrap());
+        let s = ChunkStore::with_spill(usize::MAX, 1, tier.clone());
+        // A previous process left chunk 7 spilled on disk...
+        tier.spill(&mk_chunk(7, 8)).unwrap();
+        assert!(tier.contains(7));
+        // ...and a bulk restore admits the same id: the resident copy must
+        // win and the file must go, keeping resident-xor-spilled intact.
+        let arc = s.admit(mk_chunk(7, 8));
+        assert_eq!(arc.id, 7);
+        assert!(s.contains(7));
+        assert!(!tier.contains(7), "admit must consume the stale spill file");
+        assert_eq!(s.lifecycle().restores.load(Ordering::Relaxed), 1);
+        // Admitting an already-resident id is a no-op returning the
+        // existing entry, not a second restore.
+        let again = s.admit(mk_chunk(7, 8));
+        assert!(Arc::ptr_eq(&arc, &again));
+        assert_eq!(s.lifecycle().restores.load(Ordering::Relaxed), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_from_streams_through_the_lifecycle_path() {
+        let dir = std::env::temp_dir()
+            .join(format!("ifkv_store_restore_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chunks.bin");
+        let saved = ChunkStore::new(usize::MAX);
+        saved.insert(mk_chunk(7, 4));
+        saved.insert(mk_chunk(9, 4));
+        saved.save(&path).unwrap();
+
+        // Restore into a LIVE store with a spill tier already holding one
+        // of the ids: the restore must compose (file consumed, both ids
+        // resident exactly once, nothing resident-and-spilled).
+        let tier = Arc::new(SpillTier::new(dir.join("spill")).unwrap());
+        let live = ChunkStore::with_spill(usize::MAX, 2, tier.clone());
+        tier.spill(&mk_chunk(9, 4)).unwrap();
+        let n = live.restore_from(&path).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(live.len(), 2);
+        assert!(live.contains(7) && live.contains(9));
+        assert!(!tier.contains(9), "restored id must not stay spilled");
+        assert_eq!(live.lifecycle().restores.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            live.lifecycle().duplicate_prefills.load(Ordering::Relaxed),
+            0,
+            "restores must never count as duplicate prefills"
+        );
+        // restoring again over the now-resident ids is a clean no-op
+        assert_eq!(live.restore_from(&path).unwrap(), 2);
+        assert_eq!(live.len(), 2);
+        assert_eq!(live.lifecycle().restores.load(Ordering::Relaxed), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

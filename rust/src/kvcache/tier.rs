@@ -1,19 +1,26 @@
 //! The disk spill tier: one file per evicted chunk, in the same serialized
 //! record format as [`super::store`]'s persistence (so a spilled file and a
 //! saved store are mutually intelligible), with an in-memory index of what
-//! is on disk.
+//! is on disk — now under a configurable **byte budget** with LRU file
+//! eviction, so the disk tier can no longer grow without bound.
 //!
 //! The tier itself is deliberately dumb storage — `spill` / `take` /
 //! `discard` plus an index.  All ordering guarantees (who may write or
 //! consume a given id, never holding a chunk resident and spilled at once)
 //! are enforced by the [`super::store::ChunkStore`] lifecycle machinery,
 //! which serializes every per-id tier operation under that id's
-//! single-flight slot.
+//! single-flight slot.  Tier-internal budget eviction needs no such slot:
+//! a spill publishes its file (rename), indexes it, picks victims AND
+//! unlinks them all under one index-lock critical section, so an eviction
+//! can never delete a file that a concurrent `spill` of the same id just
+//! re-published — and a concurrent `take` either got the chunk first or
+//! misses cleanly and falls back to a re-prefill.
 //!
 //! Round-trips are bit-identical: tokens and both KV tensors are serialized
 //! as little-endian words, so a re-admitted chunk is exactly the chunk that
 //! was evicted.  Spill files survive restarts: [`SpillTier::new`] re-indexes
-//! whatever `<id:016x>.kv` files a previous process left in the directory.
+//! whatever `<id:016x>.kv` files a previous process left in the directory
+//! (and a smaller budget on reopen trims the oldest files down to fit).
 
 use std::collections::HashMap;
 use std::fs;
@@ -29,23 +36,86 @@ use crate::kvcache::store::{
 };
 use crate::util::json::Json;
 
+/// Per-file index entry: serialized size + recency tick (larger = newer).
+struct FileMeta {
+    size: u64,
+    tick: u64,
+}
+
+/// The in-memory truth of what is on disk, plus the running byte total.
+#[derive(Default)]
+struct TierIndex {
+    files: HashMap<ChunkId, FileMeta>,
+    bytes: u64,
+    tick: u64,
+}
+
+impl TierIndex {
+    fn insert(&mut self, id: ChunkId, size: u64) {
+        self.tick += 1;
+        if let Some(old) = self.files.insert(id, FileMeta { size, tick: self.tick }) {
+            self.bytes -= old.size;
+        }
+        self.bytes += size;
+    }
+
+    fn remove(&mut self, id: ChunkId) -> Option<u64> {
+        let meta = self.files.remove(&id)?;
+        self.bytes -= meta.size;
+        Some(meta.size)
+    }
+
+    /// Oldest-first victims until the index fits `budget`.  Entries leave
+    /// the index here (under the caller's lock); the caller unlinks the
+    /// files afterwards.
+    fn evict_to(&mut self, budget: u64) -> Vec<ChunkId> {
+        let mut victims = Vec::new();
+        while self.bytes > budget {
+            let Some(oldest) =
+                self.files.iter().min_by_key(|(_, m)| m.tick).map(|(id, _)| *id)
+            else {
+                break;
+            };
+            self.remove(oldest);
+            victims.push(oldest);
+        }
+        victims
+    }
+}
+
 pub struct SpillTier {
     dir: PathBuf,
-    /// id -> serialized file size; the in-memory truth of what is on disk.
-    index: Mutex<HashMap<ChunkId, u64>>,
+    /// Disk byte budget; `u64::MAX` means unbounded (the historical
+    /// behaviour of [`SpillTier::new`]).
+    budget_bytes: u64,
+    index: Mutex<TierIndex>,
     writes: AtomicU64,
     reads: AtomicU64,
     discards: AtomicU64,
+    /// Files deleted by budget eviction (disk pressure, not consumption).
+    evictions: AtomicU64,
 }
 
 impl SpillTier {
-    /// Open (creating if needed) a spill directory, re-indexing any chunk
-    /// files a previous process left behind.
+    /// Open (creating if needed) an **unbounded** spill directory,
+    /// re-indexing any chunk files a previous process left behind.
     pub fn new(dir: impl Into<PathBuf>) -> Result<SpillTier> {
+        SpillTier::with_budget(dir, u64::MAX)
+    }
+
+    /// Open a spill directory bounded to `budget_bytes` of serialized chunk
+    /// files.  Exceeding the budget evicts the least-recently-written files
+    /// (a spilled chunk's recency renews every time it is re-spilled).  If
+    /// the directory already holds more than the budget, the oldest files
+    /// (by modification time, the best cross-restart recency signal) are
+    /// trimmed immediately.
+    pub fn with_budget(dir: impl Into<PathBuf>, budget_bytes: u64) -> Result<SpillTier> {
         let dir = dir.into();
         fs::create_dir_all(&dir)
             .map_err(|e| anyhow!("creating spill dir {}: {e}", dir.display()))?;
-        let mut index = HashMap::new();
+        // Re-index in mtime order so ticks reflect write recency across the
+        // restart, not filesystem iteration order.
+        let mut found: Vec<(std::time::SystemTime, ChunkId, u64)> = Vec::new();
         let entries = fs::read_dir(&dir)
             .map_err(|e| anyhow!("reading spill dir {}: {e}", dir.display()))?;
         for entry in entries {
@@ -54,15 +124,39 @@ impl SpillTier {
             let Some(name) = name.to_str() else { continue };
             let Some(hex) = name.strip_suffix(".kv") else { continue };
             let Ok(id) = ChunkId::from_str_radix(hex, 16) else { continue };
-            index.insert(id, entry.metadata()?.len());
+            let meta = entry.metadata()?;
+            let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+            found.push((mtime, id, meta.len()));
         }
-        Ok(SpillTier {
+        found.sort_by_key(|(mtime, id, _)| (*mtime, *id));
+        let mut index = TierIndex::default();
+        for &(_, id, size) in &found {
+            index.insert(id, size);
+        }
+        // Startup trim: `found` is already oldest-first, so walk it instead
+        // of re-scanning the map per victim (reopening a huge unbounded dir
+        // with a small budget would otherwise be quadratic).
+        let tier = SpillTier {
             dir,
+            budget_bytes,
             index: Mutex::new(index),
             writes: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             discards: AtomicU64::new(0),
-        })
+            evictions: AtomicU64::new(0),
+        };
+        {
+            let mut index = tier.index.lock().unwrap();
+            let mut oldest = found.iter();
+            while index.bytes > budget_bytes {
+                let Some(&(_, id, _)) = oldest.next() else { break };
+                if index.remove(id).is_some() {
+                    let _ = fs::remove_file(tier.path(id));
+                    tier.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(tier)
     }
 
     fn path(&self, id: ChunkId) -> PathBuf {
@@ -70,12 +164,12 @@ impl SpillTier {
     }
 
     pub fn contains(&self, id: ChunkId) -> bool {
-        self.index.lock().unwrap().contains_key(&id)
+        self.index.lock().unwrap().files.contains_key(&id)
     }
 
     /// Number of chunks currently spilled.
     pub fn len(&self) -> usize {
-        self.index.lock().unwrap().len()
+        self.index.lock().unwrap().files.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -84,16 +178,29 @@ impl SpillTier {
 
     /// Total serialized bytes currently on disk.
     pub fn bytes(&self) -> u64 {
-        self.index.lock().unwrap().values().sum()
+        self.index.lock().unwrap().bytes
+    }
+
+    /// The configured disk budget (`u64::MAX` = unbounded).
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Files deleted so far by budget eviction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Ids currently spilled (for invariant checks in tests).
     pub fn ids(&self) -> Vec<ChunkId> {
-        self.index.lock().unwrap().keys().copied().collect()
+        self.index.lock().unwrap().files.keys().copied().collect()
     }
 
     /// Serialize `chunk` to its per-chunk file.  Write-then-rename, so a
-    /// crash mid-write never leaves a half-record behind the index.
+    /// crash mid-write never leaves a half-record behind the index.  If the
+    /// write pushes the tier over its byte budget, the least-recently-
+    /// written files are evicted (possibly including this one, when a
+    /// single chunk exceeds the whole budget).
     pub fn spill(&self, chunk: &ChunkKv) -> Result<()> {
         let final_path = self.path(chunk.id);
         let tmp = final_path.with_extension("tmp");
@@ -105,10 +212,22 @@ impl SpillTier {
             write_chunk_record(&mut w, chunk)?;
             w.flush()?;
         }
-        fs::rename(&tmp, &final_path)
-            .map_err(|e| anyhow!("renaming into {}: {e}", final_path.display()))?;
-        let size = fs::metadata(&final_path)?.len();
-        self.index.lock().unwrap().insert(chunk.id, size);
+        let size = fs::metadata(&tmp)?.len();
+        // Publish (rename), index, and evict under ONE critical section:
+        // eviction picks victims and unlinks their files while holding the
+        // lock, so it can never race a concurrent re-spill of a victim id
+        // into deleting the freshly published file.  The heavy serialization
+        // above stays outside the lock; only rename/unlink sit inside.
+        {
+            let mut index = self.index.lock().unwrap();
+            fs::rename(&tmp, &final_path)
+                .map_err(|e| anyhow!("renaming into {}: {e}", final_path.display()))?;
+            index.insert(chunk.id, size);
+            for id in index.evict_to(self.budget_bytes) {
+                let _ = fs::remove_file(self.path(id));
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         self.writes.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -118,7 +237,7 @@ impl SpillTier {
     /// returns — corrupt files included, so a bad record cannot wedge its
     /// id (the caller just falls back to a re-prefill).
     pub fn take(&self, id: ChunkId) -> Result<Option<ChunkKv>> {
-        if self.index.lock().unwrap().remove(&id).is_none() {
+        if self.index.lock().unwrap().remove(id).is_none() {
             return Ok(None);
         }
         let path = self.path(id);
@@ -130,7 +249,7 @@ impl SpillTier {
 
     /// Drop a spilled chunk without reading it; `true` if one was indexed.
     pub fn discard(&self, id: ChunkId) -> bool {
-        if self.index.lock().unwrap().remove(&id).is_none() {
+        if self.index.lock().unwrap().remove(id).is_none() {
             return false;
         }
         let _ = fs::remove_file(self.path(id));
@@ -139,12 +258,19 @@ impl SpillTier {
     }
 
     pub fn stats_json(&self) -> Json {
+        let budget = if self.budget_bytes == u64::MAX {
+            Json::Null
+        } else {
+            Json::from(self.budget_bytes as f64)
+        };
         Json::obj(vec![
             ("chunks", Json::from(self.len())),
             ("bytes", Json::from(self.bytes() as f64)),
+            ("budget_bytes", budget),
             ("writes", Json::from(self.writes.load(Ordering::Relaxed) as f64)),
             ("reads", Json::from(self.reads.load(Ordering::Relaxed) as f64)),
             ("discards", Json::from(self.discards.load(Ordering::Relaxed) as f64)),
+            ("evictions", Json::from(self.evictions.load(Ordering::Relaxed) as f64)),
         ])
     }
 }
@@ -181,10 +307,14 @@ mod tests {
     use crate::tensor::TensorF;
     use crate::util::rng::Rng;
 
-    fn temp_tier(tag: &str) -> SpillTier {
+    fn temp_dir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!("ifkv_tier_{tag}_{}", std::process::id()));
         let _ = fs::remove_dir_all(&dir);
-        SpillTier::new(dir).unwrap()
+        dir
+    }
+
+    fn temp_tier(tag: &str) -> SpillTier {
+        SpillTier::new(temp_dir(tag)).unwrap()
     }
 
     fn rand_chunk(rng: &mut Rng, id: ChunkId, c: usize) -> ChunkKv {
@@ -220,13 +350,12 @@ mod tests {
         assert!(!tier.contains(chunk.id));
         assert!(tier.take(chunk.id).unwrap().is_none());
         assert!(tier.is_empty());
+        assert_eq!(tier.bytes(), 0, "byte accounting must drain with the index");
     }
 
     #[test]
     fn reopen_reindexes_existing_files() {
-        let dir = std::env::temp_dir()
-            .join(format!("ifkv_tier_reopen_{}", std::process::id()));
-        let _ = fs::remove_dir_all(&dir);
+        let dir = temp_dir("reopen");
         let mut rng = Rng::new(42);
         let chunk = rand_chunk(&mut rng, 77, 8);
         {
@@ -265,5 +394,95 @@ mod tests {
         assert!(!tier.discard(5), "second discard is a no-op");
         assert!(!tier.path(5).exists());
         assert!(tier.is_empty());
+    }
+
+    #[test]
+    fn budget_evicts_oldest_files_first() {
+        let dir = temp_dir("budget");
+        let mut rng = Rng::new(45);
+        // Learn one file's size, then budget for exactly 3 of them.
+        let probe = SpillTier::new(&dir).unwrap();
+        probe.spill(&rand_chunk(&mut rng, 0, 8)).unwrap();
+        let one = probe.bytes();
+        assert!(probe.discard(0));
+        drop(probe);
+
+        let tier = SpillTier::with_budget(&dir, 3 * one).unwrap();
+        for id in 1..=3u64 {
+            tier.spill(&rand_chunk(&mut rng, id, 8)).unwrap();
+        }
+        assert_eq!(tier.len(), 3);
+        assert_eq!(tier.evictions(), 0);
+        // A 4th spill must evict the oldest (id 1), and only it.
+        tier.spill(&rand_chunk(&mut rng, 4, 8)).unwrap();
+        assert_eq!(tier.len(), 3);
+        assert!(!tier.contains(1), "oldest file must be evicted");
+        assert!(!tier.path(1).exists(), "evicted file must leave the disk");
+        for id in 2..=4u64 {
+            assert!(tier.contains(id), "newer file {id} must survive");
+        }
+        assert_eq!(tier.evictions(), 1);
+        assert!(tier.bytes() <= 3 * one, "bytes must stay under the budget");
+        // Re-spilling an existing id renews its recency: 2 is now newest,
+        // so the next eviction takes 3.
+        tier.spill(&rand_chunk(&mut rng, 2, 8)).unwrap();
+        tier.spill(&rand_chunk(&mut rng, 5, 8)).unwrap();
+        assert!(tier.contains(2), "re-spilled id must be most-recent");
+        assert!(!tier.contains(3));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_smaller_than_one_chunk_keeps_nothing_but_never_errors() {
+        let dir = temp_dir("tiny_budget");
+        let mut rng = Rng::new(46);
+        let tier = SpillTier::with_budget(&dir, 8).unwrap();
+        tier.spill(&rand_chunk(&mut rng, 1, 8)).unwrap();
+        assert!(tier.is_empty(), "a chunk larger than the whole budget is dropped");
+        assert_eq!(tier.evictions(), 1);
+        assert!(tier.take(1).unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_with_smaller_budget_trims_to_fit() {
+        let dir = temp_dir("reopen_trim");
+        let mut rng = Rng::new(47);
+        let one = {
+            let tier = SpillTier::new(&dir).unwrap();
+            for id in 1..=4u64 {
+                tier.spill(&rand_chunk(&mut rng, id, 8)).unwrap();
+            }
+            tier.bytes() / 4
+        };
+        let tier = SpillTier::with_budget(&dir, 2 * one).unwrap();
+        assert_eq!(tier.len(), 2, "reopen must trim down to the new budget");
+        assert!(tier.bytes() <= 2 * one);
+        assert_eq!(tier.evictions(), 2);
+        // whatever survived is still readable
+        for id in tier.ids() {
+            assert!(tier.take(id).unwrap().is_some());
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_json_reports_disk_pressure() {
+        let dir = temp_dir("stats");
+        let mut rng = Rng::new(48);
+        let tier = SpillTier::with_budget(&dir, 1 << 20).unwrap();
+        tier.spill(&rand_chunk(&mut rng, 9, 8)).unwrap();
+        let j = tier.stats_json();
+        assert_eq!(j.get("chunks").unwrap().as_usize().unwrap(), 1);
+        assert!(j.get("bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("budget_bytes").unwrap().as_usize().unwrap(),
+            1 << 20
+        );
+        assert_eq!(j.get("evictions").unwrap().as_usize().unwrap(), 0);
+        // unbounded tiers report a null budget
+        let unbounded = temp_tier("stats_unbounded");
+        assert_eq!(*unbounded.stats_json().get("budget_bytes").unwrap(), Json::Null);
+        let _ = fs::remove_dir_all(&dir);
     }
 }

@@ -21,8 +21,11 @@
 //!
 //! Entry points:
 //! * [`runtime::Runtime`] — compiled executables + weights.
-//! * [`pipeline::Pipeline`] — one query end-to-end (assemble → score →
-//!   select → recompute → decode) under a [`config::MethodSpec`].
+//! * [`plan::QueryPlan`] — a composable policy-stage inference strategy
+//!   (score / select / reorder), parsed from the plan grammar or lowered
+//!   from the legacy [`config::MethodSpec`] facade.
+//! * [`pipeline::Pipeline`] — one query end-to-end (assemble → reorder →
+//!   score → select → recompute → decode), driven by a plan.
 //! * [`coordinator::Server`] — threaded request loop with dynamic batching.
 //! * [`bench_harness`] — `repro bench table1..table6 fig2..fig4`.
 
@@ -33,6 +36,7 @@ pub mod geometry;
 pub mod kvcache;
 pub mod manifest;
 pub mod pipeline;
+pub mod plan;
 pub mod reorder;
 pub mod rope;
 pub mod runtime;

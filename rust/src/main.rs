@@ -14,13 +14,14 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use infoflow_kv::bench_harness;
-use infoflow_kv::config::{MethodSpec, ServeConfig};
+use infoflow_kv::config::ServeConfig;
 use infoflow_kv::coordinator::batcher::BatcherConfig;
 use infoflow_kv::coordinator::{Server, ServerConfig};
 use infoflow_kv::eval::tables::Table;
 use infoflow_kv::eval::EvalRunner;
 use infoflow_kv::kvcache::ChunkStore;
 use infoflow_kv::pipeline::Pipeline;
+use infoflow_kv::plan::QueryPlan;
 use infoflow_kv::runtime::exec::ModelSession;
 use infoflow_kv::runtime::Runtime;
 use infoflow_kv::util::cli::Args;
@@ -34,17 +35,24 @@ repro — InfoFlow KV reproduction CLI
 
 USAGE:
   repro info    [--artifacts DIR]
-  repro query   [--backbone B] [--method M[:budget]] [--chunks K] [--task T] [--seed S]
-  repro eval    [--backbone B] [--method M] [--dataset D] [--mode fixed|passage] [--samples N]
-  repro serve   [--backbone B] [--requests N] [--rate R] [--method M]
+  repro query   [--backbone B] [--method M] [--plan P] [--chunks K] [--task T] [--seed S]
+  repro eval    [--backbone B] [--method M] [--plan P] [--dataset D] [--mode fixed|passage] [--samples N]
+  repro serve   [--backbone B] [--requests N] [--rate R] [--method M] [--plan P]
                 [--workers W] [--shards S] [--cache-mb MB] [--queue-cap N]
                 [--max-batch N] [--batch-window-ms MS]
-                [--spill-dir DIR] [--prefetch-threads N]
+                [--spill-dir DIR] [--spill-mb MB] [--prefetch-threads N]
   repro bench   table1|...|table6|fig2|fig3|fig4|ablation|all [--samples N]
   repro cache   save|load [--path kvcache.bin] [--docs N]
 
-Methods: baseline | norecompute | ours[:budget] | reorder[:budget] |
-         cacheblend[:budget] | epic[:budget]";
+Methods (legacy shorthands): baseline | norecompute | ours[:budget] |
+  reorder[:budget] | cacheblend[:budget] | epic[:budget]
+
+Plans (--plan, composable stage grammar; overrides --method):
+  clauses joined by ';' — reorder[=SCORE] | score=SCORE | select=SELECT,
+  or the complete plans 'baseline' / 'norecompute'.
+  SCORE : norm[:layerK][,geom=global|hlhp|hltp|tltp] | deviation | positional
+  SELECT: topk:B | epic:B | random:B[,seed=S] | explicit:R+R+...
+  e.g. --plan 'reorder=deviation;score=norm:layer2,geom=global;select=topk:16'";
 
 fn main() {
     if let Err(e) = run() {
@@ -131,6 +139,21 @@ fn load_runtime(args: &Args) -> Result<Arc<Runtime>> {
     Ok(rt)
 }
 
+/// Resolve the query plan from `--plan` (grammar ONLY — so `--plan reorder`
+/// is the reorder-only plan the grammar documents, never the legacy
+/// `ours_reorder` shorthand) or `--method` (legacy shorthands, falling back
+/// to the grammar), validated against the loaded model.
+fn pick_plan(rt: &Runtime, args: &Args) -> Result<QueryPlan> {
+    let budget = args.usize_or("budget", 16)?;
+    let plan = match args.get("plan") {
+        Some(p) => QueryPlan::parse(p)?,
+        None => QueryPlan::parse_cli(args.get_or("method", "ours"), budget)?,
+    };
+    let max_bucket = rt.manifest.buckets.iter().copied().max().unwrap_or(0);
+    plan.validate_for(&rt.manifest.model, max_bucket)?;
+    Ok(plan)
+}
+
 fn pick_backbone(rt: &Runtime, args: &Args) -> String {
     if let Some(b) = args.get("backbone") {
         return b.to_string();
@@ -169,7 +192,7 @@ fn query(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
     let backbone = pick_backbone(&rt, args);
     let pipeline = Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?;
-    let method = MethodSpec::parse(args.get_or("method", "ours"), args.usize_or("budget", 16)?)?;
+    let plan = pick_plan(&rt, args)?;
     let n_chunks = args.usize_or("chunks", 4)?;
     let task = args.get_or("task", "onehop");
     let mut rng = Rng::new(args.u64_or("seed", 1)?);
@@ -178,9 +201,10 @@ fn query(args: &Args) -> Result<()> {
 
     let store = ChunkStore::new(1 << 30);
     let (chunks, prefill_s) = pipeline.prepare_chunks(&store, &e.chunks)?;
-    let r = pipeline.answer(&chunks, &e.prompt, method)?;
+    let r = pipeline.answer_plan(&chunks, &e.prompt, &plan)?;
     let v = &pipeline.vocab;
     println!("task    : {task} ({n_chunks} chunks, backbone {backbone})");
+    println!("plan    : {} ({})", plan.display_name(), plan.render());
     println!("prompt  : {}", v.render(&e.prompt));
     println!("gold    : {}", v.render(&e.answer));
     println!("answer  : {}", v.render(&r.answer));
@@ -188,16 +212,18 @@ fn query(args: &Args) -> Result<()> {
         "f1      : {:.3}",
         infoflow_kv::eval::token_f1(&r.answer, &e.answer)
     );
-    println!(
-        "timing  : prefill {:.1}ms | score {:.1}ms | select {:.2}ms | recompute {:.1}ms | prompt {:.1}ms | decode {:.1}ms | ttft {:.1}ms",
-        prefill_s * 1e3,
-        r.timing.score_s * 1e3,
-        r.timing.select_s * 1e3,
-        r.timing.recompute_s * 1e3,
+    // Per-stage timing, generic over whatever stages the plan ran.
+    let mut timing = format!("timing  : prefill {:.1}ms", prefill_s * 1e3);
+    for (stage, secs) in &r.timing.stages {
+        timing.push_str(&format!(" | {stage} {:.2}ms", secs * 1e3));
+    }
+    timing.push_str(&format!(
+        " | prompt {:.1}ms | decode {:.1}ms | ttft {:.1}ms",
         r.timing.prompt_s * 1e3,
         r.timing.decode_s * 1e3,
         r.timing.ttft_s() * 1e3,
-    );
+    ));
+    println!("{timing}");
     if !r.selected.is_empty() {
         println!("selected rows: {:?}", &r.selected[..r.selected.len().min(16)]);
     }
@@ -208,7 +234,7 @@ fn eval(args: &Args) -> Result<()> {
     let rt = load_runtime(args)?;
     let backbone = pick_backbone(&rt, args);
     let pipeline = Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?;
-    let method = MethodSpec::parse(args.get_or("method", "ours"), args.usize_or("budget", 16)?)?;
+    let plan = pick_plan(&rt, args)?;
     let mode = match args.get_or("mode", "passage") {
         "fixed" => ChunkingMode::FixedChunk,
         _ => ChunkingMode::PassageSplit,
@@ -221,13 +247,13 @@ fn eval(args: &Args) -> Result<()> {
     };
 
     let mut table = Table::new(
-        &format!("eval: {backbone}, {}, {}", method.name(), mode.name()),
+        &format!("eval: {backbone}, {}, {}", plan.display_name(), mode.name()),
         &["Dataset", "F1", "EM", "TTFT (ms)", "needle-hit"],
     );
     for ds in datasets {
         let episodes = eval_set(&pipeline.vocab, rt.manifest.model.chunk, ds, mode, samples, seed);
         let store = ChunkStore::new(1 << 30);
-        let out = EvalRunner::new(&pipeline, &store).run(&episodes, method)?;
+        let out = EvalRunner::new(&pipeline, &store).run_plan(&episodes, &plan)?;
         table.row(vec![
             ds.name().into(),
             format!("{:.4}", out.f1),
@@ -260,6 +286,17 @@ fn serve(args: &Args) -> Result<()> {
         .get("spill-dir")
         .map(std::path::PathBuf::from)
         .or_else(|| serve_defaults.spill_dir.clone());
+    let spill_budget: Option<u64> = match args.get("spill-mb") {
+        Some(mb) => Some(
+            mb.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("--spill-mb expects an integer: {e}"))?
+                << 20,
+        ),
+        None => serve_defaults.spill_budget_bytes,
+    };
+    if spill_budget.is_some() && spill_dir.is_none() {
+        bail!("--spill-mb bounds the spill tier, which needs --spill-dir DIR to exist");
+    }
     // One pipeline (and thus one ModelSession) per worker and per
     // prefetcher; weights and compiled executables are shared through the
     // Runtime.
@@ -272,7 +309,7 @@ fn serve(args: &Args) -> Result<()> {
         prefetch_pipelines.push(Pipeline::new(ModelSession::new(rt.clone(), &backbone)?)?);
     }
     let vocab = pipelines[0].vocab.clone();
-    let method = MethodSpec::parse(args.get_or("method", "ours"), args.usize_or("budget", 16)?)?;
+    let plan = pick_plan(&rt, args)?;
     let cfg = TraceConfig {
         rate: args.f64_or("rate", 8.0)?,
         n_requests: args.usize_or("requests", 24)?,
@@ -283,7 +320,11 @@ fn serve(args: &Args) -> Result<()> {
     let trace = traces::generate(&vocab, rt.manifest.model.chunk, &cfg);
     let mut store = ChunkStore::with_shards(cache_bytes, shards);
     if let Some(dir) = &spill_dir {
-        store.set_spill_tier(Arc::new(infoflow_kv::kvcache::SpillTier::new(dir)?));
+        let tier = match spill_budget {
+            Some(bytes) => infoflow_kv::kvcache::SpillTier::with_budget(dir, bytes)?,
+            None => infoflow_kv::kvcache::SpillTier::new(dir)?,
+        };
+        store.set_spill_tier(Arc::new(tier));
     }
     let server = Server::spawn_pool_with_prefetch(
         pipelines,
@@ -293,12 +334,13 @@ fn serve(args: &Args) -> Result<()> {
     );
 
     println!(
-        "serving {} requests (poisson rate {}/s, {} docs, method {}, {n_workers} workers, \
+        "serving {} requests (poisson rate {}/s, {} docs, plan {} [{}], {n_workers} workers, \
          {shards} shards, {prefetch_threads} prefetchers, spill {})...",
         cfg.n_requests,
         cfg.rate,
         cfg.doc_pool,
-        method.name(),
+        plan.display_name(),
+        plan.render(),
         spill_dir
             .as_ref()
             .map(|d| d.display().to_string())
@@ -314,7 +356,7 @@ fn serve(args: &Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs_f64(wait));
         }
         let gold = req.episode.answer.clone();
-        match server.query(req.episode, method) {
+        match server.query_plan(req.episode, plan.clone()) {
             Ok(resp) => {
                 ok += 1;
                 f1_sum += infoflow_kv::eval::token_f1(&resp.answer, &gold);

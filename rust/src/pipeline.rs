@@ -5,14 +5,15 @@
 //!                              │ assemble ONCE into a pooled, bucket-padded
 //!                              │ scratch buffer (per-worker BufferPool)
 //!                              ▼
-//!            score under selection geometry (GLOBAL default)   [skip: EPIC]
-//!                              │ Eq.7 scores @ norm layer
+//!       [reorder stage: score under the reorder policy's geometry →
+//!        IN-PLACE chunk permutation of the same buffer]          (optional)
 //!                              ▼
-//!     [optional §4.3 reorder: HL-TP stage-1 → IN-PLACE chunk permutation
-//!                            of the same buffer → re-score]
+//!       [score stage: one f32 per context row under the plan's
+//!        ScorePolicy (Eq.7 norms / deviation / positional)]      (optional)
 //!                              ▼
-//!                  Top-k → recompute (L1 selective_attn kernel)
-//!                              │ patch rows in place at global positions
+//!       [select stage: SelectPolicy rows → recompute (L1
+//!        selective_attn kernel), patched in place at global
+//!        positions]                                              (optional)
 //!                              ▼
 //!              score under decode layout → prompt KV + first logits
 //!                              │ build the RESIDENT decode literal
@@ -22,6 +23,12 @@
 //!        greedy decode loop: one appended KV row update per token,
 //!        never a whole-buffer re-serialization
 //! ```
+//!
+//! The stage sequence is data, not code: a [`QueryPlan`] names the policies
+//! and [`Pipeline::answer_plan`] drives them generically, recording one
+//! [`Timing`] entry per stage.  The historical [`MethodSpec`] entry points
+//! ([`Pipeline::answer`], [`Pipeline::answer_with_rows`]) remain as thin
+//! facades that lower onto plans.
 //!
 //! Memory architecture: each worker's `Pipeline` owns a
 //! [`BufferPool`](crate::kvcache::BufferPool) of reusable assembly buffers,
@@ -39,29 +46,66 @@ use anyhow::Result;
 use crate::config::MethodSpec;
 use crate::geometry::{self, RopeGeometry};
 use crate::kvcache::{AssembledContext, BufferPool, ChunkKv, ChunkStore};
+use crate::plan::{Explicit, PlanBuilder, PrefillMode, QueryPlan, StageCtx};
 use crate::runtime::exec::ModelSession;
 use crate::runtime::resident::ResidentDecodeKv;
-use crate::selection;
 use crate::tensor::{TensorF, TensorI};
 use crate::vocab::{self, Vocab};
 
-/// Per-stage wall-clock breakdown (seconds).
-#[derive(Clone, Copy, Debug, Default)]
+/// Per-query wall-clock breakdown (seconds).  Policy-stage time is recorded
+/// generically under the driver's stage keys (`"reorder_score"`,
+/// `"reorder"`, `"score"`, `"select"`, `"recompute"`), in execution order;
+/// the fixed phases (chunk prefill, prompt pass, decode loop) keep their
+/// own fields.
+#[derive(Clone, Debug, Default)]
 pub struct Timing {
     /// Cold chunk prefill (0 when every chunk was cached).
     pub chunk_prefill_s: f64,
-    pub score_s: f64,
-    pub select_s: f64,
-    pub recompute_s: f64,
     pub prompt_s: f64,
     pub decode_s: f64,
     pub total_s: f64,
+    /// Per-stage seconds, keyed by stage name, in execution order.
+    pub stages: Vec<(&'static str, f64)>,
 }
 
 impl Timing {
+    /// Accumulate `seconds` under `stage` (merging repeated records).
+    pub fn record(&mut self, stage: &'static str, seconds: f64) {
+        if let Some(e) = self.stages.iter_mut().find(|(n, _)| *n == stage) {
+            e.1 += seconds;
+        } else {
+            self.stages.push((stage, seconds));
+        }
+    }
+
+    /// Seconds recorded under one stage key (0.0 if the stage never ran).
+    pub fn stage_s(&self, stage: &str) -> f64 {
+        self.stages
+            .iter()
+            .filter(|(n, _)| *n == stage)
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    /// Scoring time (selection-pass + reorder-pass scoring) — the historical
+    /// `score_s` accounting.
+    pub fn score_s(&self) -> f64 {
+        self.stage_s("score") + self.stage_s("reorder_score")
+    }
+
+    /// Selection + reorder-permutation time — the historical `select_s`.
+    pub fn select_s(&self) -> f64 {
+        self.stage_s("select") + self.stage_s("reorder")
+    }
+
+    pub fn recompute_s(&self) -> f64 {
+        self.stage_s("recompute")
+    }
+
     /// Time to first token: everything before decode of the 2nd token.
     pub fn ttft_s(&self) -> f64 {
-        self.chunk_prefill_s + self.score_s + self.select_s + self.recompute_s
+        self.chunk_prefill_s
+            + self.stages.iter().map(|(_, s)| s).sum::<f64>()
             + self.prompt_s
     }
 }
@@ -119,7 +163,7 @@ impl Pipeline {
         Ok(Pipeline { session, vocab, pool: BufferPool::new() })
     }
 
-    fn dims(&self) -> &crate::manifest::ModelDims {
+    pub(crate) fn dims(&self) -> &crate::manifest::ModelDims {
         &self.session.runtime.manifest.model
     }
 
@@ -153,70 +197,57 @@ impl Pipeline {
         Ok((out, spent))
     }
 
-    /// Answer one query over prepared chunks with the given method.
-    /// `prompt_body` is the unpadded query (e.g. `[QUERY, k, ANSWER]`).
+    /// Answer one query over prepared chunks by driving the plan's stages:
+    /// `assemble → [reorder] → [score] → [select → recompute] → decode`.
+    /// This is the one method-dispatch point in the serving stack.
+    pub fn answer_plan(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        plan: &QueryPlan,
+    ) -> Result<QueryResult> {
+        let t_start = Instant::now();
+        let mut timing = Timing::default();
+        let mut res = match plan.prefill {
+            PrefillMode::Full => self.run_baseline(chunks, prompt_body, &mut timing)?,
+            PrefillMode::Chunked => {
+                self.run_staged(chunks, prompt_body, plan, &mut timing)?
+            }
+        };
+        timing.total_s = t_start.elapsed().as_secs_f64();
+        res.timing = timing;
+        Ok(res)
+    }
+
+    /// Answer one query under a legacy [`MethodSpec`] — a deprecated facade
+    /// that lowers onto [`Pipeline::answer_plan`]; see [`MethodSpec::to_plan`].
     pub fn answer(
         &self,
         chunks: &[Arc<ChunkKv>],
         prompt_body: &[i32],
         method: MethodSpec,
     ) -> Result<QueryResult> {
-        let t_start = Instant::now();
-        let mut timing = Timing::default();
-        let res = match method {
-            MethodSpec::Baseline => self.run_baseline(chunks, prompt_body, &mut timing)?,
-            MethodSpec::NoRecompute => {
-                self.run_selective(chunks, prompt_body, None, &mut timing)?
-            }
-            MethodSpec::Ours { budget, geometry, norm_layer, reorder } => self
-                .run_selective(
-                    chunks,
-                    prompt_body,
-                    Some(Selector::Norm { budget, geometry, norm_layer, reorder }),
-                    &mut timing,
-                )?,
-            MethodSpec::CacheBlend { budget } => self.run_selective(
-                chunks,
-                prompt_body,
-                Some(Selector::CacheBlend { budget }),
-                &mut timing,
-            )?,
-            MethodSpec::Epic { budget } => self.run_selective(
-                chunks,
-                prompt_body,
-                Some(Selector::Epic { budget }),
-                &mut timing,
-            )?,
-        };
-        let mut res = res;
-        res.timing = timing;
-        res.timing.total_s = t_start.elapsed().as_secs_f64();
-        Ok(res)
+        self.answer_plan(chunks, prompt_body, &method.to_plan())
     }
 
     /// Answer with an explicitly chosen recomputation set (buffer row
     /// indices) — the oracle/random selection ablations use this to separate
-    /// selection quality from recomputation mechanics.
+    /// selection quality from recomputation mechanics.  Facade over the
+    /// `explicit` select policy.
     pub fn answer_with_rows(
         &self,
         chunks: &[Arc<ChunkKv>],
         prompt_body: &[i32],
         rows: Vec<usize>,
     ) -> Result<QueryResult> {
-        let t_start = Instant::now();
-        let mut timing = Timing::default();
-        let mut res = self.run_selective(
-            chunks,
-            prompt_body,
-            Some(Selector::Explicit(rows)),
-            &mut timing,
-        )?;
-        res.timing = timing;
-        res.timing.total_s = t_start.elapsed().as_secs_f64();
-        Ok(res)
+        let plan = PlanBuilder::chunked()
+            .named("Explicit")
+            .select(Box::new(Explicit { rows }))
+            .build()?;
+        self.answer_plan(chunks, prompt_body, &plan)
     }
 
-    // -- baseline: exact full-context prefill --------------------------------
+    // -- full-context prefill (the paper's Baseline) -------------------------
     fn run_baseline(
         &self,
         chunks: &[Arc<ChunkKv>],
@@ -266,20 +297,20 @@ impl Pipeline {
         let answer = self.decode_answer(bucket, &mut kv, &out.last_logits, timing)?;
         Ok(QueryResult {
             answer,
-            timing: *timing,
+            // placeholder: answer_plan installs the accumulated Timing
+            timing: Timing::default(),
             selected: vec![],
             selected_positions: vec![],
             chunk_order: (0..chunks.len()).collect(),
         })
     }
 
-    // -- the chunked family: no-recompute / ours / cacheblend / epic --------
-    #[allow(clippy::too_many_lines)]
-    fn run_selective(
+    // -- the chunked stage driver: every non-baseline plan -------------------
+    fn run_staged(
         &self,
         chunks: &[Arc<ChunkKv>],
         prompt_body: &[i32],
-        selector: Option<Selector>,
+        plan: &QueryPlan,
         timing: &mut Timing,
     ) -> Result<QueryResult> {
         let d = self.dims().clone();
@@ -292,60 +323,51 @@ impl Pipeline {
         // later stage mutates this same buffer in place.
         let mut ctx = self.pool.checkout(&d, bucket, chunks)?;
 
-        // §4.3 stage 1: reorder chunks — an in-place permutation of the
-        // assembled buffer, not a second assembly.
+        // §4.3 reorder stage — an in-place permutation of the assembled
+        // buffer, not a second assembly.  The stage scores under its own
+        // policy (HL-TP norms for the paper's method; any registered signal
+        // for hybrids).
         let mut chunk_order: Vec<usize> = (0..chunks.len()).collect();
-        if let Some(Selector::Norm { reorder: true, norm_layer, .. }) = &selector {
+        if let Some(stage) = &plan.reorder {
             let t0 = Instant::now();
-            let scores = self.score_pass(
-                bucket, &prompt, &ctx, RopeGeometry::HlTp, *norm_layer,
-            )?;
-            timing.score_s += t0.elapsed().as_secs_f64();
+            let scores = stage.score.score(&StageCtx {
+                pipeline: self,
+                bucket,
+                prompt: &prompt,
+                ctx: &ctx,
+            })?;
+            timing.record("reorder_score", t0.elapsed().as_secs_f64());
             let t1 = Instant::now();
-            chunk_order =
-                crate::reorder::reorder_chunks(&scores, ctx.valid.data(), &ctx.chunk_lens);
+            chunk_order = stage.policy.order(&scores, ctx.valid.data(), &ctx.chunk_lens);
             ctx.permute_chunks_in_place(&chunk_order)?;
-            timing.select_s += t1.elapsed().as_secs_f64();
+            timing.record("reorder", t1.elapsed().as_secs_f64());
         }
 
-        // Selection + recomputation (rows patched into the same buffer).
+        // Score + select + recompute (rows patched into the same buffer).
         let (mut selected, mut selected_positions) = (vec![], vec![]);
-        if let Some(sel) = &selector {
+        if let Some(sel) = &plan.select {
             let global = geometry::layout(RopeGeometry::Global, &ctx.chunk_lens, d.prompt_len);
-            let rows = match sel.clone() {
-                Selector::Norm { budget, geometry: g, norm_layer, .. } => {
+            let scores: Option<Vec<f32>> = match &plan.score {
+                Some(sp) if sel.needs_scores() => {
                     let t0 = Instant::now();
-                    let scores = self.score_pass(bucket, &prompt, &ctx, g, norm_layer)?;
-                    timing.score_s += t0.elapsed().as_secs_f64();
-                    let t1 = Instant::now();
-                    let rows = selection::topk(&scores, ctx.valid.data(), budget);
-                    timing.select_s += t1.elapsed().as_secs_f64();
-                    rows
+                    let s = sp.score(&StageCtx {
+                        pipeline: self,
+                        bucket,
+                        prompt: &prompt,
+                        ctx: &ctx,
+                    })?;
+                    timing.record("score", t0.elapsed().as_secs_f64());
+                    Some(s)
                 }
-                Selector::CacheBlend { budget } => {
-                    let t0 = Instant::now();
-                    let scores = self.deviation_pass(bucket, &ctx, &global)?;
-                    timing.score_s += t0.elapsed().as_secs_f64();
-                    let t1 = Instant::now();
-                    let rows = selection::topk(&scores, ctx.valid.data(), budget);
-                    timing.select_s += t1.elapsed().as_secs_f64();
-                    rows
-                }
-                Selector::Epic { budget } => {
-                    let t1 = Instant::now();
-                    let rows = selection::epic(&ctx.chunk_lens, budget);
-                    timing.select_s += t1.elapsed().as_secs_f64();
-                    rows
-                }
-                Selector::Explicit(rows) => {
-                    let n = ctx.n();
-                    rows.into_iter().filter(|&r| r < n).collect()
-                }
+                _ => None,
             };
+            let t1 = Instant::now();
+            let rows = sel.select(scores.as_deref(), ctx.valid.data(), &ctx.chunk_lens)?;
+            timing.record("select", t1.elapsed().as_secs_f64());
             if !rows.is_empty() {
                 let t2 = Instant::now();
                 self.recompute_rows(bucket, &mut ctx, &global, &rows)?;
-                timing.recompute_s += t2.elapsed().as_secs_f64();
+                timing.record("recompute", t2.elapsed().as_secs_f64());
             }
             selected_positions = rows.iter().map(|&r| global.ctx_pos[r] as i64).collect();
             selected = rows;
@@ -373,7 +395,8 @@ impl Pipeline {
             self.decode_answer(bucket, &mut kv, &score_out.last_logits, timing)?;
         Ok(QueryResult {
             answer,
-            timing: *timing,
+            // placeholder: answer_plan installs the accumulated Timing
+            timing: Timing::default(),
             selected,
             selected_positions,
             chunk_order,
@@ -381,8 +404,9 @@ impl Pipeline {
     }
 
     /// Selection-pass scoring under a geometry; returns the Eq.7 scores of
-    /// `norm_layer` (one f32 per context row).
-    fn score_pass(
+    /// `norm_layer` (one f32 per context row).  Called by the `norm` score
+    /// policy.
+    pub(crate) fn score_pass(
         &self,
         bucket: usize,
         prompt: &TensorI,
@@ -411,8 +435,9 @@ impl Pipeline {
         Ok(out.scores.data()[layer * n_rows..(layer + 1) * n_rows].to_vec())
     }
 
-    /// CacheBlend deviation scores under the global layout.
-    fn deviation_pass(
+    /// CacheBlend deviation scores under the global layout.  Called by the
+    /// `deviation` score policy.
+    pub(crate) fn deviation_pass(
         &self,
         bucket: usize,
         ctx: &AssembledContext,
@@ -512,15 +537,6 @@ impl Pipeline {
     }
 }
 
-#[derive(Clone, Debug)]
-enum Selector {
-    Norm { budget: usize, geometry: RopeGeometry, norm_layer: usize, reorder: bool },
-    CacheBlend { budget: usize },
-    Epic { budget: usize },
-    /// Externally supplied buffer rows (oracle / random ablations).
-    Explicit(Vec<usize>),
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -561,5 +577,24 @@ mod tests {
     fn greedy_decode_propagates_step_errors() {
         let r = greedy_decode(1, 4, |_| anyhow::bail!("device lost"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn timing_records_merge_and_legacy_accessors_sum() {
+        let mut t = Timing::default();
+        t.record("score", 0.25);
+        t.record("reorder_score", 0.5);
+        t.record("select", 0.125);
+        t.record("reorder", 0.25);
+        t.record("recompute", 1.0);
+        t.record("recompute", 0.5); // second wave merges into the same key
+        assert_eq!(t.stages.iter().filter(|(n, _)| *n == "recompute").count(), 1);
+        assert_eq!(t.score_s(), 0.75);
+        assert_eq!(t.select_s(), 0.375);
+        assert_eq!(t.recompute_s(), 1.5);
+        t.chunk_prefill_s = 0.5;
+        t.prompt_s = 0.25;
+        assert_eq!(t.ttft_s(), 0.5 + 0.75 + 0.375 + 1.5 + 0.25);
+        assert_eq!(t.stage_s("nope"), 0.0);
     }
 }

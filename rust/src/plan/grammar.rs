@@ -1,0 +1,352 @@
+//! The plan grammar, the stage registry, and the JSON form.
+//!
+//! A plan string is `;`-separated clauses, order-insensitive:
+//!
+//! ```text
+//! baseline                       # full-context prefill (no stages allowed)
+//! norecompute                    # chunked, no stages (lower anchor)
+//! reorder[=<score-atom>]         # §4.3 reorder, scored by the given policy
+//!                                #   (default: norm:layer2,geom=hltp)
+//! score=<score-atom>             # scoring signal feeding the select stage
+//! select=<select-atom>           # which rows get recomputed
+//! ```
+//!
+//! Score atoms: `norm[:layer<K>][,geom=<global|hlhp|hltp|tltp>]`,
+//! `deviation`, `positional`.  Select atoms: `topk:<budget>`,
+//! `epic:<budget>`, `random:<budget>[,seed=<S>]`,
+//! `explicit:<row>+<row>+...`.
+//!
+//! `parse` ∘ `render` is the identity on rendered plans; `render` emits the
+//! canonical spelling (stages in reorder→score→select order, all defaults
+//! made explicit), so two plans are behaviorally equal iff their renders
+//! are string-equal.
+//!
+//! The [`Registry`] is the extension surface: a stage name maps to a
+//! constructor that parses the atom's options, and everything above it
+//! (grammar, CLI, coordinator, benches) picks up new policies for free.
+
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::DEFAULT_NORM_LAYER;
+use crate::geometry::RopeGeometry;
+use crate::util::json::Json;
+
+use super::policy::{DeviationScore, NormScore, PositionalPrior, ScorePolicy};
+use super::select::{EpicSplit, Explicit, RandomSel, SelectPolicy, TopK};
+use super::{PlanBuilder, PrefillMode, QueryPlan, ReorderStage};
+
+/// Lowercase grammar code of a RoPE geometry (`RopeGeometry::parse` accepts
+/// these back case-insensitively).
+pub fn geom_code(g: RopeGeometry) -> &'static str {
+    match g {
+        RopeGeometry::Global => "global",
+        RopeGeometry::HlHp => "hlhp",
+        RopeGeometry::HlTp => "hltp",
+        RopeGeometry::TlTp => "tltp",
+    }
+}
+
+type ScoreCtor = fn(&str) -> Result<Box<dyn ScorePolicy>>;
+type SelectCtor = fn(&str) -> Result<Box<dyn SelectPolicy>>;
+
+/// Name → stage-constructor registry for the plan grammar.
+pub struct Registry {
+    score: Vec<(&'static str, ScoreCtor)>,
+    select: Vec<(&'static str, SelectCtor)>,
+}
+
+impl Registry {
+    /// The process-wide registry of built-in policies.
+    pub fn global() -> &'static Registry {
+        static REG: OnceLock<Registry> = OnceLock::new();
+        REG.get_or_init(|| Registry {
+            score: vec![
+                ("norm", mk_norm as ScoreCtor),
+                ("deviation", mk_deviation as ScoreCtor),
+                ("positional", mk_positional as ScoreCtor),
+            ],
+            select: vec![
+                ("topk", mk_topk as SelectCtor),
+                ("epic", mk_epic as SelectCtor),
+                ("random", mk_random as SelectCtor),
+                ("explicit", mk_explicit as SelectCtor),
+            ],
+        })
+    }
+
+    pub fn score_names(&self) -> Vec<&'static str> {
+        self.score.iter().map(|(n, _)| *n).collect()
+    }
+
+    pub fn select_names(&self) -> Vec<&'static str> {
+        self.select.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Build a score policy from an atom like `norm:layer2,geom=global`.
+    pub fn make_score(&self, atom: &str) -> Result<Box<dyn ScorePolicy>> {
+        let (name, opts) = split_atom(atom);
+        let ctor = self
+            .score
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| *c)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown score policy '{name}' (known: {})",
+                    self.score_names().join(", ")
+                )
+            })?;
+        ctor(opts)
+    }
+
+    /// Build a select policy from an atom like `topk:16`.
+    pub fn make_select(&self, atom: &str) -> Result<Box<dyn SelectPolicy>> {
+        let (name, opts) = split_atom(atom);
+        let ctor = self
+            .select
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| *c)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown select policy '{name}' (known: {})",
+                    self.select_names().join(", ")
+                )
+            })?;
+        ctor(opts)
+    }
+}
+
+fn split_atom(atom: &str) -> (&str, &str) {
+    match atom.split_once(':') {
+        Some((name, opts)) => (name, opts),
+        None => (atom, ""),
+    }
+}
+
+/// Reorder-stage score atoms default to the §4.3 geometry (HL-TP: chunk-
+/// local RoPE, so no chunk is favored for prompt adjacency), not `norm`'s
+/// selection-pass default of GLOBAL — `reorder=norm:layer1` must mean the
+/// paper's reorder at a different layer, not a silently different
+/// experiment.  An explicit `geom=` always wins.
+fn reorder_score_atom(atom: &str) -> String {
+    let (name, opts) = split_atom(atom);
+    if name == "norm" && !opts.split(',').any(|o| o.starts_with("geom=")) {
+        if opts.is_empty() {
+            "norm:geom=hltp".to_string()
+        } else {
+            format!("norm:{opts},geom=hltp")
+        }
+    } else {
+        atom.to_string()
+    }
+}
+
+fn mk_norm(opts: &str) -> Result<Box<dyn ScorePolicy>> {
+    let mut norm_layer = DEFAULT_NORM_LAYER;
+    let mut geometry = RopeGeometry::Global;
+    for opt in opts.split(',').filter(|s| !s.is_empty()) {
+        if let Some(l) = opt.strip_prefix("layer") {
+            norm_layer = l
+                .parse()
+                .map_err(|e| anyhow!("norm: bad layer '{l}': {e}"))?;
+        } else if let Some(g) = opt.strip_prefix("geom=") {
+            geometry = RopeGeometry::parse(g)
+                .ok_or_else(|| anyhow!("norm: unknown geometry '{g}'"))?;
+        } else {
+            bail!("norm: unknown option '{opt}' (expected layer<K> or geom=<G>)");
+        }
+    }
+    Ok(Box::new(NormScore { geometry, norm_layer }))
+}
+
+fn mk_deviation(opts: &str) -> Result<Box<dyn ScorePolicy>> {
+    if !opts.is_empty() {
+        bail!("deviation takes no options, got '{opts}'");
+    }
+    Ok(Box::new(DeviationScore))
+}
+
+fn mk_positional(opts: &str) -> Result<Box<dyn ScorePolicy>> {
+    if !opts.is_empty() {
+        bail!("positional takes no options, got '{opts}'");
+    }
+    Ok(Box::new(PositionalPrior))
+}
+
+fn parse_budget(name: &str, opts: &str) -> Result<usize> {
+    if opts.is_empty() {
+        bail!("{name} needs a budget, e.g. {name}:16");
+    }
+    opts.parse()
+        .map_err(|e| anyhow!("{name}: bad budget '{opts}': {e}"))
+}
+
+fn mk_topk(opts: &str) -> Result<Box<dyn SelectPolicy>> {
+    Ok(Box::new(TopK { budget: parse_budget("topk", opts)? }))
+}
+
+fn mk_epic(opts: &str) -> Result<Box<dyn SelectPolicy>> {
+    Ok(Box::new(EpicSplit { budget: parse_budget("epic", opts)? }))
+}
+
+fn mk_random(opts: &str) -> Result<Box<dyn SelectPolicy>> {
+    let mut parts = opts.split(',').filter(|s| !s.is_empty());
+    let budget = parse_budget("random", parts.next().unwrap_or(""))?;
+    let mut seed = 0u64;
+    for opt in parts {
+        if let Some(s) = opt.strip_prefix("seed=") {
+            seed = s.parse().map_err(|e| anyhow!("random: bad seed '{s}': {e}"))?;
+        } else {
+            bail!("random: unknown option '{opt}' (expected seed=<S>)");
+        }
+    }
+    Ok(Box::new(RandomSel { budget, seed }))
+}
+
+fn mk_explicit(opts: &str) -> Result<Box<dyn SelectPolicy>> {
+    let rows: Result<Vec<usize>> = opts
+        .split('+')
+        .filter(|s| !s.is_empty())
+        .map(|r| {
+            r.parse()
+                .map_err(|e| anyhow!("explicit: bad row '{r}': {e}"))
+        })
+        .collect();
+    Ok(Box::new(Explicit { rows: rows? }))
+}
+
+// -- plan string <-> QueryPlan ----------------------------------------------
+
+pub(super) fn parse_plan(s: &str) -> Result<QueryPlan> {
+    let reg = Registry::global();
+    let mut builder = PlanBuilder::chunked();
+    let mut full = false;
+    let mut bare_chunked = false;
+    let mut staged = false;
+    let mut any = false;
+    for clause in s.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        any = true;
+        match clause {
+            "baseline" | "prefill=full" => full = true,
+            "norecompute" | "chunked" => bare_chunked = true,
+            "reorder" => {
+                staged = true;
+                builder = builder.reorder(ReorderStage::default_norm());
+            }
+            _ => {
+                staged = true;
+                if let Some(atom) = clause.strip_prefix("reorder=") {
+                    builder = builder.reorder(ReorderStage::by_score(
+                        reg.make_score(&reorder_score_atom(atom))?,
+                    ));
+                } else if let Some(atom) = clause.strip_prefix("score=") {
+                    builder = builder.score(reg.make_score(atom)?);
+                } else if let Some(atom) = clause.strip_prefix("select=") {
+                    builder = builder.select(reg.make_select(atom)?);
+                } else {
+                    bail!(
+                        "unknown plan clause '{clause}' (expected baseline, norecompute, \
+                         reorder[=...], score=..., or select=...)"
+                    );
+                }
+            }
+        }
+    }
+    if !any {
+        bail!("empty plan (try 'norecompute' or 'score=norm;select=topk:16')");
+    }
+    if full && (bare_chunked || staged) {
+        bail!("'baseline' is a complete plan; it admits no other clauses");
+    }
+    if bare_chunked && staged {
+        bail!("'norecompute' is a complete plan; drop it or the stage clauses");
+    }
+    if full {
+        builder = builder.prefill(PrefillMode::Full);
+    }
+    builder.build()
+}
+
+pub(super) fn render_plan(plan: &QueryPlan) -> String {
+    match plan.prefill {
+        PrefillMode::Full => "baseline".into(),
+        PrefillMode::Chunked => {
+            let mut parts = Vec::new();
+            if let Some(r) = &plan.reorder {
+                parts.push(format!("reorder={}", r.score.render()));
+            }
+            if let Some(s) = &plan.score {
+                parts.push(format!("score={}", s.render()));
+            }
+            if let Some(s) = &plan.select {
+                parts.push(format!("select={}", s.render()));
+            }
+            if parts.is_empty() {
+                "norecompute".into()
+            } else {
+                parts.join(";")
+            }
+        }
+    }
+}
+
+// -- JSON form ---------------------------------------------------------------
+
+pub(super) fn plan_to_json(plan: &QueryPlan) -> Json {
+    let mut entries: Vec<(&str, Json)> = vec![(
+        "prefill",
+        Json::from(match plan.prefill {
+            PrefillMode::Full => "full",
+            PrefillMode::Chunked => "chunked",
+        }),
+    )];
+    if let Some(n) = &plan.name {
+        entries.push(("name", Json::from(n.clone())));
+    }
+    if let Some(r) = &plan.reorder {
+        entries.push(("reorder", Json::from(r.score.render())));
+    }
+    if let Some(s) = &plan.score {
+        entries.push(("score", Json::from(s.render())));
+    }
+    if let Some(s) = &plan.select {
+        entries.push(("select", Json::from(s.render())));
+    }
+    Json::obj(entries)
+}
+
+pub(super) fn plan_from_json(j: &Json) -> Result<QueryPlan> {
+    let reg = Registry::global();
+    // Unknown keys are rejected, not dropped: a typo'd stage key must be an
+    // error, never a silently weaker plan.
+    for key in j.as_obj()?.keys() {
+        if !matches!(key.as_str(), "prefill" | "name" | "reorder" | "score" | "select") {
+            bail!(
+                "unknown plan key '{key}' (expected prefill, name, reorder, score, select)"
+            );
+        }
+    }
+    let mut builder = match j.get("prefill")?.as_str()? {
+        "full" => PlanBuilder::full(),
+        "chunked" => PlanBuilder::chunked(),
+        other => bail!("unknown prefill mode '{other}' (full|chunked)"),
+    };
+    if let Some(n) = j.opt("name") {
+        builder = builder.named(n.as_str()?);
+    }
+    if let Some(r) = j.opt("reorder") {
+        builder = builder.reorder(ReorderStage::by_score(
+            reg.make_score(&reorder_score_atom(r.as_str()?))?,
+        ));
+    }
+    if let Some(s) = j.opt("score") {
+        builder = builder.score(reg.make_score(s.as_str()?)?);
+    }
+    if let Some(s) = j.opt("select") {
+        builder = builder.select(reg.make_select(s.as_str()?)?);
+    }
+    builder.build()
+}

@@ -1,0 +1,577 @@
+//! `QueryPlan` — the composable policy-stage API of the method layer.
+//!
+//! The paper's six inference strategies (§6.1) are not monoliths: each is a
+//! point in a space of orthogonal stages — a scoring signal
+//! ([`ScorePolicy`]: attention-norm under a RoPE geometry, CacheBlend's
+//! shallow-layer deviation, EPIC's positional prior), a selection rule over
+//! scores ([`SelectPolicy`]: global top-k of Eq. 8, per-chunk
+//! water-filling, explicit/oracle rows, seeded random), and an optional
+//! §4.3 chunk reorder ([`ReorderPolicy`], itself driven by a score policy).
+//! A [`QueryPlan`] is a validated composition of those stages, and the
+//! single currency from CLI to pipeline:
+//!
+//! ```text
+//!   "reorder=deviation;score=norm:layer2,geom=global;select=topk:16"
+//!        │ QueryPlan::parse (grammar, see plan::grammar)
+//!        ▼
+//!   QueryPlan { reorder, score, select }          (also a JSON form)
+//!        │ Pipeline::answer_plan — the stage driver
+//!        ▼
+//!   assemble → [reorder] → [score] → [select → recompute] → decode
+//! ```
+//!
+//! The historical [`MethodSpec`](crate::config::MethodSpec) enum survives
+//! as a thin, deprecated facade: [`MethodSpec::to_plan`] lowers every
+//! variant onto this API, and the golden conformance grid pins the lowered
+//! plans to the exact pre-plan behaviour.  New strategies (hybrids like a
+//! deviation-scored reorder, or an entirely new scoring signal registered
+//! in [`grammar::Registry`]) need no pipeline changes at all.
+
+pub mod grammar;
+pub mod policy;
+pub mod select;
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::config::{MethodSpec, DEFAULT_NORM_LAYER};
+use crate::geometry::RopeGeometry;
+use crate::manifest::ModelDims;
+use crate::util::json::Json;
+
+pub use grammar::{geom_code, Registry};
+pub use policy::{
+    ByScore, DeviationScore, NormScore, PositionalPrior, ReorderPolicy, ScorePolicy,
+    StageCtx,
+};
+pub use select::{EpicSplit, Explicit, RandomSel, SelectPolicy, TopK};
+
+/// How the context enters the model: chunk-cached (everything except the
+/// paper's Baseline) or one exact full-context prefill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillMode {
+    Full,
+    Chunked,
+}
+
+/// The §4.3 reorder stage: a scoring signal (run under the *reorder* pass,
+/// before selection) plus the rule turning scores into a chunk permutation.
+#[derive(Clone)]
+pub struct ReorderStage {
+    pub score: Box<dyn ScorePolicy>,
+    pub policy: Box<dyn ReorderPolicy>,
+}
+
+impl ReorderStage {
+    /// A score-driven reorder using the given signal.
+    pub fn by_score(score: Box<dyn ScorePolicy>) -> ReorderStage {
+        ReorderStage { score, policy: Box::new(ByScore) }
+    }
+
+    /// The paper's stage-1 configuration: attention norms under HL-TP
+    /// (chunk-local RoPE, so no chunk is favored for sitting near the
+    /// prompt) at the default norm layer.
+    pub fn default_norm() -> ReorderStage {
+        ReorderStage::by_score(Box::new(NormScore {
+            geometry: RopeGeometry::HlTp,
+            norm_layer: DEFAULT_NORM_LAYER,
+        }))
+    }
+}
+
+impl fmt::Debug for ReorderStage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ReorderStage({}, {})", self.score.render(), self.policy.name())
+    }
+}
+
+/// A validated, serializable composition of policy stages — one inference
+/// strategy.  Build with [`PlanBuilder`], [`QueryPlan::parse`], or
+/// [`MethodSpec::to_plan`]; run with `Pipeline::answer_plan`.
+#[derive(Clone)]
+pub struct QueryPlan {
+    /// Display name for tables/metrics; `None` falls back to the rendered
+    /// grammar string.  Not part of plan equality.
+    pub name: Option<String>,
+    pub prefill: PrefillMode,
+    pub reorder: Option<ReorderStage>,
+    pub score: Option<Box<dyn ScorePolicy>>,
+    pub select: Option<Box<dyn SelectPolicy>>,
+}
+
+impl QueryPlan {
+    /// Parse a plan grammar string (see [`grammar`] for the syntax).
+    pub fn parse(s: &str) -> Result<QueryPlan> {
+        grammar::parse_plan(s)
+    }
+
+    /// Parse either a legacy method shorthand (`ours:16`, `cacheblend`, ...)
+    /// or a full plan grammar string — the `--method` CLI entry point.
+    /// Shorthands win on collisions (`"reorder"` means `ours_reorder`, not
+    /// the grammar's reorder-only plan), so grammar-first surfaces like
+    /// `--plan` should call [`QueryPlan::parse`] directly.
+    pub fn parse_cli(s: &str, default_budget: usize) -> Result<QueryPlan> {
+        if let Ok(m) = MethodSpec::parse(s, default_budget) {
+            return Ok(m.to_plan());
+        }
+        QueryPlan::parse(s)
+    }
+
+    /// Canonical grammar string; `parse(render(p))` reconstructs `p`.
+    pub fn render(&self) -> String {
+        grammar::render_plan(self)
+    }
+
+    /// Display name for tables and logs.
+    pub fn display_name(&self) -> String {
+        self.name.clone().unwrap_or_else(|| self.render())
+    }
+
+    /// JSON form (stage atoms under `reorder`/`score`/`select` keys).
+    pub fn to_json(&self) -> Json {
+        grammar::plan_to_json(self)
+    }
+
+    pub fn from_json(j: &Json) -> Result<QueryPlan> {
+        grammar::plan_from_json(j)
+    }
+
+    /// Names of the policy stages this plan will run, in driver order.
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        if self.reorder.is_some() {
+            out.push("reorder");
+        }
+        if self.score.is_some() {
+            out.push("score");
+        }
+        if self.select.is_some() {
+            out.push("select");
+        }
+        out
+    }
+
+    /// Structural validation: stages must compose (a score-consuming select
+    /// needs a score stage; a score stage needs a consumer; a full-prefill
+    /// plan admits no stages).  [`PlanBuilder::build`] runs this.
+    pub fn check(&self) -> Result<()> {
+        if self.prefill == PrefillMode::Full {
+            if self.reorder.is_some() || self.score.is_some() || self.select.is_some() {
+                bail!("a full-prefill (baseline) plan admits no policy stages");
+            }
+            return Ok(());
+        }
+        if let Some(sel) = &self.select {
+            if sel.needs_scores() && self.score.is_none() {
+                bail!(
+                    "select={} consumes scores but the plan has no score stage",
+                    sel.render()
+                );
+            }
+            if !sel.needs_scores() && self.score.is_some() {
+                bail!(
+                    "score stage feeds nothing: select={} ignores scores",
+                    sel.render()
+                );
+            }
+        } else if self.score.is_some() {
+            bail!("score stage feeds nothing: the plan has no select stage");
+        }
+        Ok(())
+    }
+
+    /// Validate the plan against a loaded model: budgets must fit the
+    /// largest context bucket, geometry/norm-layer constraints must hold.
+    /// CLI entry points call this; the pipeline driver itself keeps the
+    /// historical clamping behaviour for facade parity.
+    pub fn validate_for(&self, dims: &ModelDims, max_bucket: usize) -> Result<()> {
+        self.check()?;
+        if let Some(r) = &self.reorder {
+            r.score.validate_for(dims)?;
+        }
+        if let Some(s) = &self.score {
+            s.validate_for(dims)?;
+        }
+        if let Some(s) = &self.select {
+            s.validate_for(max_bucket)?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for QueryPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "QueryPlan({})", self.render())
+    }
+}
+
+/// Plans are behaviorally equal iff their canonical renders are equal
+/// (display names are presentation, not behaviour).
+impl PartialEq for QueryPlan {
+    fn eq(&self, other: &Self) -> bool {
+        self.render() == other.render()
+    }
+}
+
+/// Builder with stage validation: duplicate stages and invalid compositions
+/// are reported at [`PlanBuilder::build`] time.
+pub struct PlanBuilder {
+    name: Option<String>,
+    prefill: PrefillMode,
+    reorder: Option<ReorderStage>,
+    score: Option<Box<dyn ScorePolicy>>,
+    select: Option<Box<dyn SelectPolicy>>,
+    errors: Vec<String>,
+}
+
+impl PlanBuilder {
+    pub fn chunked() -> PlanBuilder {
+        PlanBuilder {
+            name: None,
+            prefill: PrefillMode::Chunked,
+            reorder: None,
+            score: None,
+            select: None,
+            errors: Vec::new(),
+        }
+    }
+
+    pub fn full() -> PlanBuilder {
+        PlanBuilder { prefill: PrefillMode::Full, ..PlanBuilder::chunked() }
+    }
+
+    pub fn prefill(mut self, mode: PrefillMode) -> PlanBuilder {
+        self.prefill = mode;
+        self
+    }
+
+    pub fn named(mut self, name: &str) -> PlanBuilder {
+        self.name = Some(name.to_string());
+        self
+    }
+
+    pub fn reorder(mut self, stage: ReorderStage) -> PlanBuilder {
+        if self.reorder.is_some() {
+            self.errors.push("duplicate reorder stage".into());
+        }
+        self.reorder = Some(stage);
+        self
+    }
+
+    pub fn score(mut self, policy: Box<dyn ScorePolicy>) -> PlanBuilder {
+        if self.score.is_some() {
+            self.errors.push("duplicate score stage".into());
+        }
+        self.score = Some(policy);
+        self
+    }
+
+    pub fn select(mut self, policy: Box<dyn SelectPolicy>) -> PlanBuilder {
+        if self.select.is_some() {
+            self.errors.push("duplicate select stage".into());
+        }
+        self.select = Some(policy);
+        self
+    }
+
+    pub fn build(self) -> Result<QueryPlan> {
+        if let Some(e) = self.errors.first() {
+            bail!("invalid plan: {e}");
+        }
+        let plan = QueryPlan {
+            name: self.name,
+            prefill: self.prefill,
+            reorder: self.reorder,
+            score: self.score,
+            select: self.select,
+        };
+        plan.check()?;
+        Ok(plan)
+    }
+}
+
+// -- MethodSpec lowering -----------------------------------------------------
+
+impl MethodSpec {
+    /// Lower this method onto the plan API.  The lowering is exact: the
+    /// stage driver runs the same passes in the same order as the old
+    /// hard-coded `run_selective`, and the golden conformance grid pins the
+    /// results bit-for-bit.
+    pub fn to_plan(&self) -> QueryPlan {
+        let builder = match *self {
+            MethodSpec::Baseline => PlanBuilder::full(),
+            MethodSpec::NoRecompute => PlanBuilder::chunked(),
+            MethodSpec::Ours { budget, geometry, norm_layer, reorder } => {
+                let mut b = PlanBuilder::chunked()
+                    .score(Box::new(NormScore { geometry, norm_layer }))
+                    .select(Box::new(TopK { budget }));
+                if reorder {
+                    b = b.reorder(ReorderStage::by_score(Box::new(NormScore {
+                        geometry: RopeGeometry::HlTp,
+                        norm_layer,
+                    })));
+                }
+                b
+            }
+            MethodSpec::CacheBlend { budget } => PlanBuilder::chunked()
+                .score(Box::new(DeviationScore))
+                .select(Box::new(TopK { budget })),
+            MethodSpec::Epic { budget } => {
+                PlanBuilder::chunked().select(Box::new(EpicSplit { budget }))
+            }
+        };
+        builder
+            .named(&self.name())
+            .build()
+            .expect("MethodSpec lowering is always a valid plan")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 144,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 128,
+            rope_theta: 10000.0,
+            chunk: 8,
+            prompt_len: 4,
+            sel_budget: 8,
+            answer_buf: 3,
+            dev_layers: 2,
+        }
+    }
+
+    #[test]
+    fn lowering_renders_the_expected_grammar() {
+        assert_eq!(MethodSpec::Baseline.to_plan().render(), "baseline");
+        assert_eq!(MethodSpec::NoRecompute.to_plan().render(), "norecompute");
+        assert_eq!(
+            MethodSpec::ours(16).to_plan().render(),
+            "score=norm:layer2,geom=global;select=topk:16"
+        );
+        assert_eq!(
+            MethodSpec::ours_reorder(16).to_plan().render(),
+            "reorder=norm:layer2,geom=hltp;score=norm:layer2,geom=global;select=topk:16"
+        );
+        assert_eq!(
+            MethodSpec::CacheBlend { budget: 8 }.to_plan().render(),
+            "score=deviation;select=topk:8"
+        );
+        assert_eq!(MethodSpec::Epic { budget: 8 }.to_plan().render(), "select=epic:8");
+    }
+
+    #[test]
+    fn lowering_keeps_paper_table_names() {
+        for m in [
+            MethodSpec::Baseline,
+            MethodSpec::NoRecompute,
+            MethodSpec::ours(8),
+            MethodSpec::ours_reorder(8),
+            MethodSpec::CacheBlend { budget: 8 },
+            MethodSpec::Epic { budget: 8 },
+        ] {
+            assert_eq!(m.to_plan().display_name(), m.name());
+        }
+    }
+
+    #[test]
+    fn parse_render_roundtrip_on_canonical_strings() {
+        for s in [
+            "baseline",
+            "norecompute",
+            "score=norm:layer2,geom=global;select=topk:16",
+            "reorder=norm:layer2,geom=hltp;score=norm:layer2,geom=global;select=topk:16",
+            "score=deviation;select=topk:8",
+            "select=epic:8",
+            "select=random:8,seed=42",
+            "select=explicit:3+9+12",
+            "reorder=deviation;select=epic:8",
+            "score=positional;select=topk:4",
+            "reorder=norm:layer1,geom=tltp",
+        ] {
+            let p = QueryPlan::parse(s).unwrap();
+            assert_eq!(p.render(), s, "canonical strings must round-trip");
+            assert_eq!(QueryPlan::parse(&p.render()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn parse_normalizes_defaults_and_order() {
+        // defaults made explicit
+        let p = QueryPlan::parse("score=norm;select=topk:16").unwrap();
+        assert_eq!(p.render(), "score=norm:layer2,geom=global;select=topk:16");
+        // bare reorder gets the paper's stage-1 configuration
+        let p = QueryPlan::parse("reorder").unwrap();
+        assert_eq!(p.render(), "reorder=norm:layer2,geom=hltp");
+        // clause order is free; render is canonical
+        let a = QueryPlan::parse("select=topk:8;score=deviation").unwrap();
+        let b = QueryPlan::parse("score=deviation;select=topk:8").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reorder_norm_atoms_default_to_the_reorder_geometry() {
+        // `reorder=norm:layer1` must stay the §4.3 reorder (HL-TP) at a
+        // different layer — NOT silently switch to norm's selection-pass
+        // default of GLOBAL.
+        let p = QueryPlan::parse("reorder=norm:layer1").unwrap();
+        assert_eq!(p.render(), "reorder=norm:layer1,geom=hltp");
+        let p = QueryPlan::parse("reorder=norm").unwrap();
+        assert_eq!(p.render(), "reorder=norm:layer2,geom=hltp");
+        // ...while an explicit geometry always wins,
+        let p = QueryPlan::parse("reorder=norm:layer1,geom=global").unwrap();
+        assert_eq!(p.render(), "reorder=norm:layer1,geom=global");
+        // and the score stage keeps its GLOBAL default.
+        let p = QueryPlan::parse("score=norm:layer1;select=topk:8").unwrap();
+        assert_eq!(p.render(), "score=norm:layer1,geom=global;select=topk:8");
+        // the JSON form applies the same default
+        let j = Json::obj(vec![
+            ("prefill", Json::from("chunked")),
+            ("reorder", Json::from("norm:layer1")),
+        ]);
+        assert_eq!(
+            QueryPlan::from_json(&j).unwrap().render(),
+            "reorder=norm:layer1,geom=hltp"
+        );
+    }
+
+    #[test]
+    fn invalid_compositions_are_rejected() {
+        // topk without scores
+        assert!(QueryPlan::parse("select=topk:8").is_err());
+        // score feeding nothing
+        assert!(QueryPlan::parse("score=norm").is_err());
+        assert!(QueryPlan::parse("score=norm;select=epic:8").is_err());
+        // baseline admits no stages
+        assert!(QueryPlan::parse("baseline;select=epic:8").is_err());
+        assert!(QueryPlan::parse("norecompute;select=epic:8").is_err());
+        // duplicates
+        assert!(QueryPlan::parse("score=norm;score=deviation;select=topk:8").is_err());
+        // unknown names / clauses
+        assert!(QueryPlan::parse("select=wat:8").is_err());
+        assert!(QueryPlan::parse("score=wat;select=topk:8").is_err());
+        assert!(QueryPlan::parse("frobnicate").is_err());
+        assert!(QueryPlan::parse("").is_err());
+        // malformed options
+        assert!(QueryPlan::parse("select=topk").is_err());
+        assert!(QueryPlan::parse("score=norm:layerX;select=topk:8").is_err());
+        assert!(QueryPlan::parse("score=norm:geom=nope;select=topk:8").is_err());
+        assert!(QueryPlan::parse("select=random:4,tacos=1").is_err());
+    }
+
+    #[test]
+    fn parse_cli_accepts_legacy_shorthands() {
+        assert_eq!(
+            QueryPlan::parse_cli("ours:32", 16).unwrap(),
+            MethodSpec::ours(32).to_plan()
+        );
+        assert_eq!(
+            QueryPlan::parse_cli("reorder", 16).unwrap(),
+            MethodSpec::ours_reorder(16).to_plan()
+        );
+        assert_eq!(
+            QueryPlan::parse_cli("baseline", 16).unwrap(),
+            MethodSpec::Baseline.to_plan()
+        );
+        // and full grammar strings
+        let p = QueryPlan::parse_cli("reorder=deviation;select=epic:8", 16).unwrap();
+        assert_eq!(p.render(), "reorder=deviation;select=epic:8");
+        assert!(QueryPlan::parse_cli("definitely-not-a-plan", 16).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for s in [
+            "baseline",
+            "norecompute",
+            "reorder=deviation;score=norm:layer1,geom=hlhp;select=topk:8",
+            "select=random:8,seed=7",
+        ] {
+            let p = QueryPlan::parse(s).unwrap();
+            let j = p.to_json();
+            let back = QueryPlan::from_json(&j).unwrap();
+            assert_eq!(back, p, "JSON round-trip for '{s}'");
+        }
+        // names survive the JSON form
+        let named = MethodSpec::ours(8).to_plan();
+        let back = QueryPlan::from_json(&named.to_json()).unwrap();
+        assert_eq!(back.display_name(), "Our");
+        // and the JSON text itself parses back through the Json layer
+        let text = named.to_json().to_string_pretty();
+        let re = QueryPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re, named);
+        // unknown keys are rejected, not silently dropped (a typo'd stage
+        // key must never yield a weaker plan)
+        let bad = Json::obj(vec![
+            ("prefill", Json::from("chunked")),
+            ("reorde", Json::from("deviation")),
+        ]);
+        let e = QueryPlan::from_json(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("reorde"), "{e:#}");
+    }
+
+    #[test]
+    fn validate_for_checks_model_constraints() {
+        let d = dims();
+        // fine: budget fits, layer in range
+        QueryPlan::parse("score=norm:layer2;select=topk:16")
+            .unwrap()
+            .validate_for(&d, 512)
+            .unwrap();
+        // budget larger than the largest bucket
+        let e = QueryPlan::parse("select=epic:4096")
+            .unwrap()
+            .validate_for(&d, 512)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("bucket"), "{e:#}");
+        // norm layer out of range (model has 4 layers)
+        let e = QueryPlan::parse("score=norm:layer9;select=topk:8")
+            .unwrap()
+            .validate_for(&d, 512)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("layer"), "{e:#}");
+        // reorder score policies are validated too
+        assert!(QueryPlan::parse("reorder=norm:layer9")
+            .unwrap()
+            .validate_for(&d, 512)
+            .is_err());
+    }
+
+    #[test]
+    fn stage_names_follow_driver_order() {
+        let p = QueryPlan::parse(
+            "reorder=deviation;score=norm:layer2,geom=global;select=topk:8",
+        )
+        .unwrap();
+        assert_eq!(p.stage_names(), vec!["reorder", "score", "select"]);
+        assert_eq!(QueryPlan::parse("select=epic:8").unwrap().stage_names(), vec!["select"]);
+        assert!(MethodSpec::Baseline.to_plan().stage_names().is_empty());
+    }
+
+    #[test]
+    fn registry_lists_builtin_policies() {
+        let reg = Registry::global();
+        for n in ["norm", "deviation", "positional"] {
+            assert!(reg.score_names().contains(&n), "missing score policy {n}");
+        }
+        for n in ["topk", "epic", "random", "explicit"] {
+            assert!(reg.select_names().contains(&n), "missing select policy {n}");
+        }
+    }
+
+    #[test]
+    fn explicit_rows_roundtrip_including_empty() {
+        let p = QueryPlan::parse("select=explicit:").unwrap();
+        assert_eq!(p.render(), "select=explicit:");
+        let p = QueryPlan::parse("select=explicit:0+5+2").unwrap();
+        assert_eq!(p.render(), "select=explicit:0+5+2");
+    }
+}

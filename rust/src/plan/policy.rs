@@ -1,0 +1,187 @@
+//! The policy-stage traits and the built-in scoring / reordering policies.
+//!
+//! A [`ScorePolicy`] turns an assembled context into one f32 per context row
+//! (the paper's Eq. 7 attention norms, CacheBlend's shallow-layer deviation,
+//! or EPIC's positional prior).  A [`ReorderPolicy`] turns stage-1 scores
+//! into a §4.3 chunk permutation.  Both are object-safe, cloneable and
+//! cheap to share across the coordinator's worker threads.
+//!
+//! Policies hold *parameters* only; the heavy lifting (executable dispatch,
+//! layout math) stays in [`Pipeline`], which every policy reaches through
+//! the [`StageCtx`] it is handed at stage time.
+
+use anyhow::Result;
+
+use crate::geometry::{self, RopeGeometry};
+use crate::kvcache::AssembledContext;
+use crate::pipeline::Pipeline;
+use crate::tensor::TensorI;
+
+use super::grammar::geom_code;
+
+/// Everything a stage may need about the query being answered: the worker's
+/// pipeline (session + kernels), the padded context buffer, and the prompt.
+pub struct StageCtx<'a> {
+    pub pipeline: &'a Pipeline,
+    pub bucket: usize,
+    /// Padded prompt tokens, `[prompt_len]`.
+    pub prompt: &'a TensorI,
+    pub ctx: &'a AssembledContext,
+}
+
+/// A scoring signal over context rows.  Returns one score per row (length
+/// `ctx.n()` or the full bucket — consumers mask with `ctx.valid`).
+pub trait ScorePolicy: Send + Sync {
+    /// Registry name of this policy family (e.g. `"norm"`).
+    fn name(&self) -> &'static str;
+    /// Canonical grammar atom, e.g. `norm:layer2,geom=global`; parsing the
+    /// rendered atom reconstructs an identical policy.
+    fn render(&self) -> String;
+    fn score(&self, cx: &StageCtx<'_>) -> Result<Vec<f32>>;
+    /// Optional CLI-time validation against the loaded model.
+    fn validate_for(&self, dims: &crate::manifest::ModelDims) -> Result<()> {
+        let _ = dims;
+        Ok(())
+    }
+    fn clone_box(&self) -> Box<dyn ScorePolicy>;
+}
+
+impl Clone for Box<dyn ScorePolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// A chunk-reorder rule over stage-1 scores (the back half of §4.3).
+pub trait ReorderPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// The permutation `order` such that `new_chunks[i] = old_chunks[order[i]]`.
+    fn order(&self, scores: &[f32], valid: &[f32], chunk_lens: &[usize]) -> Vec<usize>;
+    fn clone_box(&self) -> Box<dyn ReorderPolicy>;
+}
+
+impl Clone for Box<dyn ReorderPolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// -- score policies ----------------------------------------------------------
+
+/// Attention-norm scoring (paper Eq. 7) under a RoPE selection geometry —
+/// the "InfoFlow" signal.
+#[derive(Clone, Debug)]
+pub struct NormScore {
+    pub geometry: RopeGeometry,
+    /// Which layer's norms to read (clamped to the backbone's depth at
+    /// score time, matching the historical `MethodSpec` behaviour).
+    pub norm_layer: usize,
+}
+
+impl ScorePolicy for NormScore {
+    fn name(&self) -> &'static str {
+        "norm"
+    }
+
+    fn render(&self) -> String {
+        format!("norm:layer{},geom={}", self.norm_layer, geom_code(self.geometry))
+    }
+
+    fn score(&self, cx: &StageCtx<'_>) -> Result<Vec<f32>> {
+        cx.pipeline
+            .score_pass(cx.bucket, cx.prompt, cx.ctx, self.geometry, self.norm_layer)
+    }
+
+    fn validate_for(&self, dims: &crate::manifest::ModelDims) -> Result<()> {
+        if self.norm_layer >= dims.n_layers {
+            anyhow::bail!(
+                "norm layer {} out of range for a {}-layer backbone",
+                self.norm_layer,
+                dims.n_layers
+            );
+        }
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn ScorePolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// CacheBlend-style shallow-layer KV deviation under the GLOBAL layout.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviationScore;
+
+impl ScorePolicy for DeviationScore {
+    fn name(&self) -> &'static str {
+        "deviation"
+    }
+
+    fn render(&self) -> String {
+        "deviation".into()
+    }
+
+    fn score(&self, cx: &StageCtx<'_>) -> Result<Vec<f32>> {
+        let prompt_len = cx.pipeline.dims().prompt_len;
+        let global =
+            geometry::layout(RopeGeometry::Global, &cx.ctx.chunk_lens, prompt_len);
+        cx.pipeline.deviation_pass(cx.bucket, cx.ctx, &global)
+    }
+
+    fn clone_box(&self) -> Box<dyn ScorePolicy> {
+        Box::new(*self)
+    }
+}
+
+/// EPIC's positional prior as a *score*: chunk-initial rows score highest
+/// (`1 / (1 + local_pos)`), monotonically decaying into each chunk.  Under
+/// `select=topk` this approximates EPIC; the exact per-chunk water-filling
+/// lives in the `epic` select policy.  Mostly useful for hybrids (e.g.
+/// positional-scored reorder).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PositionalPrior;
+
+impl ScorePolicy for PositionalPrior {
+    fn name(&self) -> &'static str {
+        "positional"
+    }
+
+    fn render(&self) -> String {
+        "positional".into()
+    }
+
+    fn score(&self, cx: &StageCtx<'_>) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(cx.ctx.n());
+        for &len in &cx.ctx.chunk_lens {
+            for t in 0..len {
+                out.push(1.0 / (1.0 + t as f32));
+            }
+        }
+        Ok(out)
+    }
+
+    fn clone_box(&self) -> Box<dyn ScorePolicy> {
+        Box::new(*self)
+    }
+}
+
+// -- reorder policies --------------------------------------------------------
+
+/// The §4.3 rule: ascending chunk importance (sum of each chunk's top-m
+/// token scores), so the most informative chunk lands next to the prompt.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByScore;
+
+impl ReorderPolicy for ByScore {
+    fn name(&self) -> &'static str {
+        "byscore"
+    }
+
+    fn order(&self, scores: &[f32], valid: &[f32], chunk_lens: &[usize]) -> Vec<usize> {
+        crate::reorder::reorder_chunks(scores, valid, chunk_lens)
+    }
+
+    fn clone_box(&self) -> Box<dyn ReorderPolicy> {
+        Box::new(*self)
+    }
+}

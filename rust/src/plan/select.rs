@@ -1,0 +1,202 @@
+//! Selection policies: which context rows get their KV recomputed.
+//!
+//! Each policy maps (optional scores, validity mask, chunk lengths) to a
+//! list of buffer row indices.  The policies here are the selection rules
+//! the paper sweeps — global top-k (Eq. 8), EPIC's per-chunk water-filling,
+//! explicit/oracle rows, and seeded-random rows for ablation floors.
+
+use anyhow::{anyhow, Result};
+
+use crate::selection;
+use crate::util::rng::Rng;
+
+/// A selection rule over (scored) context rows.
+pub trait SelectPolicy: Send + Sync {
+    /// Registry name of this policy family (e.g. `"topk"`).
+    fn name(&self) -> &'static str;
+    /// Canonical grammar atom, e.g. `topk:16`.
+    fn render(&self) -> String;
+    /// Whether the plan must run a score stage to feed this policy.
+    fn needs_scores(&self) -> bool {
+        false
+    }
+    /// Recomputation budget, when this policy is budgeted.
+    fn budget(&self) -> Option<usize> {
+        None
+    }
+    /// Rows to recompute, in selection order.  `scores` is `Some` exactly
+    /// when [`SelectPolicy::needs_scores`] is true and a score stage ran.
+    fn select(
+        &self,
+        scores: Option<&[f32]>,
+        valid: &[f32],
+        chunk_lens: &[usize],
+    ) -> Result<Vec<usize>>;
+    /// Optional CLI-time validation against the loaded model.
+    fn validate_for(&self, max_bucket: usize) -> Result<()> {
+        if let Some(b) = self.budget() {
+            if b > max_bucket {
+                anyhow::bail!(
+                    "select={}: budget {b} exceeds the largest context bucket ({max_bucket})",
+                    self.render()
+                );
+            }
+        }
+        Ok(())
+    }
+    fn clone_box(&self) -> Box<dyn SelectPolicy>;
+}
+
+impl Clone for Box<dyn SelectPolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Global top-k over the score stage's output (paper Eq. 8).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    pub budget: usize,
+}
+
+impl SelectPolicy for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn render(&self) -> String {
+        format!("topk:{}", self.budget)
+    }
+
+    fn needs_scores(&self) -> bool {
+        true
+    }
+
+    fn budget(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+
+    fn select(
+        &self,
+        scores: Option<&[f32]>,
+        valid: &[f32],
+        _chunk_lens: &[usize],
+    ) -> Result<Vec<usize>> {
+        let scores =
+            scores.ok_or_else(|| anyhow!("select=topk requires a score stage"))?;
+        Ok(selection::topk(scores, valid, self.budget))
+    }
+
+    fn clone_box(&self) -> Box<dyn SelectPolicy> {
+        Box::new(*self)
+    }
+}
+
+/// EPIC's fixed positional rule: the budget water-filled across chunk-initial
+/// tokens — score-free, so plans using it carry no score stage.
+#[derive(Clone, Copy, Debug)]
+pub struct EpicSplit {
+    pub budget: usize,
+}
+
+impl SelectPolicy for EpicSplit {
+    fn name(&self) -> &'static str {
+        "epic"
+    }
+
+    fn render(&self) -> String {
+        format!("epic:{}", self.budget)
+    }
+
+    fn budget(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+
+    fn select(
+        &self,
+        _scores: Option<&[f32]>,
+        _valid: &[f32],
+        chunk_lens: &[usize],
+    ) -> Result<Vec<usize>> {
+        Ok(selection::epic(chunk_lens, self.budget))
+    }
+
+    fn clone_box(&self) -> Box<dyn SelectPolicy> {
+        Box::new(*self)
+    }
+}
+
+/// Externally supplied buffer rows (oracle ablations, `answer_with_rows`).
+/// Out-of-range rows are dropped, matching the historical behaviour.
+#[derive(Clone, Debug)]
+pub struct Explicit {
+    pub rows: Vec<usize>,
+}
+
+impl SelectPolicy for Explicit {
+    fn name(&self) -> &'static str {
+        "explicit"
+    }
+
+    fn render(&self) -> String {
+        let rows: Vec<String> = self.rows.iter().map(|r| r.to_string()).collect();
+        format!("explicit:{}", rows.join("+"))
+    }
+
+    fn select(
+        &self,
+        _scores: Option<&[f32]>,
+        _valid: &[f32],
+        chunk_lens: &[usize],
+    ) -> Result<Vec<usize>> {
+        let n: usize = chunk_lens.iter().sum();
+        Ok(self.rows.iter().copied().filter(|&r| r < n).collect())
+    }
+
+    fn clone_box(&self) -> Box<dyn SelectPolicy> {
+        Box::new(self.clone())
+    }
+}
+
+/// Seeded-random selection of `budget` valid rows — the ablation floor for
+/// any scored policy, deterministic per (seed, context shape).
+#[derive(Clone, Copy, Debug)]
+pub struct RandomSel {
+    pub budget: usize,
+    pub seed: u64,
+}
+
+impl SelectPolicy for RandomSel {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn render(&self) -> String {
+        format!("random:{},seed={}", self.budget, self.seed)
+    }
+
+    fn budget(&self) -> Option<usize> {
+        Some(self.budget)
+    }
+
+    fn select(
+        &self,
+        _scores: Option<&[f32]>,
+        valid: &[f32],
+        chunk_lens: &[usize],
+    ) -> Result<Vec<usize>> {
+        let n: usize = chunk_lens.iter().sum();
+        let rows: Vec<usize> = (0..n).filter(|&i| valid[i] > 0.0).collect();
+        let k = self.budget.min(rows.len());
+        let mut rng = Rng::new(self.seed);
+        Ok(rng
+            .choose_distinct(rows.len(), k)
+            .into_iter()
+            .map(|i| rows[i])
+            .collect())
+    }
+
+    fn clone_box(&self) -> Box<dyn SelectPolicy> {
+        Box::new(*self)
+    }
+}

@@ -93,7 +93,7 @@ fn all_methods_answer_and_select_within_bounds() {
         assert!(r.timing.total_s > 0.0);
         if method.budget().is_some() {
             assert!(
-                r.timing.recompute_s > 0.0,
+                r.timing.recompute_s() > 0.0,
                 "{}: recompute stage missing",
                 method.name()
             );

@@ -1,0 +1,380 @@
+//! Plan-lowering equivalence + plan-grammar conformance, on the stub
+//! runtime (always executed, no artifacts needed).
+//!
+//! Three guarantees, layered:
+//!
+//! 1. **Lowering equivalence** — every legacy `MethodSpec` lowers to a
+//!    `QueryPlan` whose `QueryResult` is bit-identical to the facade path,
+//!    *through the grammar*: the plan is rendered to its canonical string,
+//!    re-parsed, JSON round-tripped, and still answers identically.
+//! 2. **Grammar round-trip** — `parse ∘ render == id` over a randomized
+//!    space of valid plans (property test).
+//! 3. **Hybrid plans** — stage recombinations the old enum could not
+//!    express (deviation-scored reorder, positional-scored top-k) run end
+//!    to end, are pinned by the `tests/golden/plans.snap` snapshot, and
+//!    flow through the full serving stack with per-stage timings visible
+//!    in `metrics_json`.
+//!
+//! Golden file: `tests/golden/plans.snap` — bootstraps on first run (after
+//! proving run-to-run determinism); commit it to lock plan behaviour
+//! across PRs.  `UPDATE_GOLDEN=1` rewrites it intentionally.
+//!
+//! Every grid row prints a `plan-grid: <name> -> <grammar>` line so the CI
+//! job summary can list the plans the conformance grid exercised.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use infoflow_kv::config::MethodSpec;
+use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::pipeline::{Pipeline, QueryResult};
+use infoflow_kv::plan::QueryPlan;
+use infoflow_kv::runtime::exec::ModelSession;
+use infoflow_kv::runtime::Runtime;
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::workload::{Episode, EpisodeGen};
+
+const STUB_SEED: u64 = 2603;
+const BUDGET: usize = 8;
+
+fn stub_pipeline() -> (Arc<Runtime>, Pipeline) {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let p = Pipeline::new(ModelSession::new(rt.clone(), "stub").unwrap()).unwrap();
+    (rt, p)
+}
+
+fn episodes(p: &Pipeline, rt: &Runtime) -> Vec<Episode> {
+    let genr = EpisodeGen::new(p.vocab.clone(), rt.manifest.model.chunk);
+    [(101u64, 4usize), (102, 3)]
+        .iter()
+        .map(|(seed, n_chunks)| {
+            let mut rng = Rng::new(*seed);
+            genr.onehop(&mut rng, *n_chunks)
+        })
+        .collect()
+}
+
+fn answer_plan(p: &Pipeline, e: &Episode, plan: &QueryPlan) -> QueryResult {
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
+    p.answer_plan(&chunks, &e.prompt, plan).unwrap()
+}
+
+fn assert_same_result(a: &QueryResult, b: &QueryResult, what: &str) {
+    assert_eq!(a.answer, b.answer, "{what}: answer drifted");
+    assert_eq!(a.selected, b.selected, "{what}: selection drifted");
+    assert_eq!(
+        a.selected_positions, b.selected_positions,
+        "{what}: selected positions drifted"
+    );
+    assert_eq!(a.chunk_order, b.chunk_order, "{what}: chunk order drifted");
+}
+
+fn all_methods() -> Vec<MethodSpec> {
+    vec![
+        MethodSpec::Baseline,
+        MethodSpec::NoRecompute,
+        MethodSpec::ours(BUDGET),
+        MethodSpec::ours_reorder(BUDGET),
+        MethodSpec::CacheBlend { budget: BUDGET },
+        MethodSpec::Epic { budget: BUDGET },
+    ]
+}
+
+/// Hybrid plans: stage recombinations the closed enum could not express.
+fn hybrid_plans() -> Vec<(&'static str, &'static str)> {
+    vec![
+        // §4.3 reorder driven by CacheBlend's deviation signal, then the
+        // paper's norm-scored top-k selection.
+        (
+            "dev-reorder",
+            "reorder=deviation;score=norm:layer2,geom=global;select=topk:8",
+        ),
+        // EPIC's positional prior as a score feeding global top-k.
+        ("positional-topk", "score=positional;select=topk:8"),
+        // Norm-scored reorder composed with EPIC's split selection.
+        ("reorder-epic", "reorder=norm:layer2,geom=hltp;select=epic:8"),
+        // Seeded-random selection floor.
+        ("random-floor", "select=random:8,seed=13"),
+    ]
+}
+
+#[test]
+fn every_method_lowers_to_an_equivalent_plan() {
+    let (rt, p) = stub_pipeline();
+    for e in &episodes(&p, &rt) {
+        for m in all_methods() {
+            let facade = {
+                let store = ChunkStore::new(1 << 30);
+                let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
+                p.answer(&chunks, &e.prompt, m).unwrap()
+            };
+            let plan = m.to_plan();
+            // Through the grammar: render → parse must preserve behaviour.
+            let reparsed = QueryPlan::parse(&plan.render()).unwrap();
+            assert_same_result(
+                &facade,
+                &answer_plan(&p, e, &reparsed),
+                &format!("{} via grammar", plan.render()),
+            );
+            // And through the JSON form.
+            let rejson = QueryPlan::from_json(&plan.to_json()).unwrap();
+            assert_same_result(
+                &facade,
+                &answer_plan(&p, e, &rejson),
+                &format!("{} via JSON", plan.render()),
+            );
+        }
+    }
+}
+
+#[test]
+fn answer_with_rows_is_the_explicit_select_policy() {
+    let (rt, p) = stub_pipeline();
+    let e = &episodes(&p, &rt)[0];
+    let rows = vec![3usize, 9, 12, 700]; // 700 is out of range -> dropped
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
+    let facade = p.answer_with_rows(&chunks, &e.prompt, rows.clone()).unwrap();
+    let plan = QueryPlan::parse("select=explicit:3+9+12+700").unwrap();
+    let via_plan = p.answer_plan(&chunks, &e.prompt, &plan).unwrap();
+    assert_same_result(&facade, &via_plan, "explicit rows");
+    assert_eq!(facade.selected, vec![3, 9, 12], "out-of-range row must drop");
+}
+
+#[test]
+fn grammar_roundtrip_property() {
+    // parse ∘ render == id over a randomized space of valid plans.
+    let mut rng = Rng::new(0xB1A5);
+    let geoms = ["global", "hlhp", "hltp", "tltp"];
+    for _ in 0..200 {
+        let mut clauses: Vec<String> = Vec::new();
+        if rng.chance(0.5) {
+            let atom = match rng.below(3) {
+                0 => format!(
+                    "norm:layer{},geom={}",
+                    rng.below(4),
+                    geoms[rng.below(4)]
+                ),
+                1 => "deviation".to_string(),
+                _ => "positional".to_string(),
+            };
+            clauses.push(format!("reorder={atom}"));
+        }
+        // select (+ score when the select consumes one)
+        match rng.below(4) {
+            0 => {
+                let score = match rng.below(3) {
+                    0 => format!(
+                        "norm:layer{},geom={}",
+                        rng.below(4),
+                        geoms[rng.below(4)]
+                    ),
+                    1 => "deviation".to_string(),
+                    _ => "positional".to_string(),
+                };
+                clauses.push(format!("score={score}"));
+                clauses.push(format!("select=topk:{}", 1 + rng.below(64)));
+            }
+            1 => clauses.push(format!("select=epic:{}", 1 + rng.below(64))),
+            2 => clauses.push(format!(
+                "select=random:{},seed={}",
+                1 + rng.below(64),
+                rng.below(1000)
+            )),
+            _ => {
+                let rows: Vec<String> =
+                    (0..rng.below(6)).map(|_| rng.below(512).to_string()).collect();
+                clauses.push(format!("select=explicit:{}", rows.join("+")));
+            }
+        }
+        let s = clauses.join(";");
+        let plan = QueryPlan::parse(&s).expect(&s);
+        let rendered = plan.render();
+        let reparsed = QueryPlan::parse(&rendered).unwrap();
+        assert_eq!(
+            reparsed.render(),
+            rendered,
+            "parse∘render must be the identity (input '{s}')"
+        );
+        assert_eq!(reparsed, plan, "round-tripped plan must be equal (input '{s}')");
+        // the JSON form is equivalent to the grammar form
+        assert_eq!(QueryPlan::from_json(&plan.to_json()).unwrap(), plan);
+    }
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("plans.snap")
+}
+
+fn fmt_ids(ids: &[i32]) -> String {
+    ids.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn fmt_usizes(ids: &[usize]) -> String {
+    ids.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// The plan conformance grid: the six paper methods (as lowered plans) plus
+/// the hybrid plans, over seeded episodes.
+fn snapshot() -> String {
+    let (rt, p) = stub_pipeline();
+    let mut grid: Vec<(String, QueryPlan)> = all_methods()
+        .into_iter()
+        .map(|m| {
+            let plan = m.to_plan();
+            (plan.display_name(), plan)
+        })
+        .collect();
+    for (name, s) in hybrid_plans() {
+        grid.push((name.to_string(), QueryPlan::parse(s).unwrap()));
+    }
+    let mut out = String::new();
+    writeln!(out, "# plan conformance snapshot (stub seed {STUB_SEED}, budget {BUDGET})")
+        .unwrap();
+    for (ei, e) in episodes(&p, &rt).iter().enumerate() {
+        for (name, plan) in &grid {
+            let r = answer_plan(&p, e, plan);
+            writeln!(
+                out,
+                "ep={ei} plan=\"{}\" name=\"{name}\" answer=[{}] selected=[{}] order=[{}]",
+                plan.render(),
+                fmt_ids(&r.answer),
+                fmt_usizes(&r.selected),
+                fmt_usizes(&r.chunk_order),
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_plan_grid_is_pinned() {
+    let actual = snapshot();
+
+    // Surface the exercised plans for the CI job summary.
+    for m in all_methods() {
+        let plan = m.to_plan();
+        eprintln!("plan-grid: {} -> {}", plan.display_name(), plan.render());
+    }
+    for (name, s) in hybrid_plans() {
+        eprintln!("plan-grid: {name} -> {s}");
+    }
+
+    // Structural sanity: every plan row appears once per episode.
+    let n_plans = all_methods().len() + hybrid_plans().len();
+    for ei in 0..2 {
+        assert_eq!(
+            actual.matches(&format!("ep={ei} plan=")).count(),
+            n_plans,
+            "episode {ei} must cover the whole plan grid"
+        );
+    }
+
+    // Determinism: an independent runtime/pipeline/store must reproduce
+    // the snapshot bit-for-bit.
+    assert_eq!(actual, snapshot(), "plan snapshot is not deterministic");
+
+    let path = golden_path();
+    if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &actual).unwrap();
+        eprintln!("plan_equivalence: wrote {} (bootstrap)", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    if expected != actual {
+        for (i, (e, a)) in expected.lines().zip(actual.lines()).enumerate() {
+            if e != a {
+                eprintln!("line {i}:\n  expected: {e}\n  actual:   {a}");
+            }
+        }
+        panic!(
+            "plan snapshot drifted from {} — if the change is intentional, \
+             regenerate with UPDATE_GOLDEN=1",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn hybrid_plans_recombine_stages_not_outcomes() {
+    // The hybrids must actually behave like recombinations: a
+    // deviation-scored reorder keeps the norm-scored selection's *signal*
+    // but may order chunks differently than the pure paper method; and
+    // every budgeted hybrid respects its budget.
+    let (rt, p) = stub_pipeline();
+    for e in &episodes(&p, &rt) {
+        for (name, s) in hybrid_plans() {
+            let plan = QueryPlan::parse(s).unwrap();
+            let r = answer_plan(&p, e, &plan);
+            if let Some(sel) = &plan.select {
+                if let Some(b) = sel.budget() {
+                    assert!(
+                        r.selected.len() <= b,
+                        "{name}: budget exceeded ({} > {b})",
+                        r.selected.len()
+                    );
+                }
+            }
+            // reorder stages must still output a permutation
+            let mut order = r.chunk_order.clone();
+            order.sort_unstable();
+            assert_eq!(
+                order,
+                (0..e.chunks.len()).collect::<Vec<_>>(),
+                "{name}: chunk order must be a permutation"
+            );
+        }
+    }
+}
+
+#[test]
+fn hybrid_plan_serves_end_to_end_with_stage_metrics() {
+    use infoflow_kv::coordinator::{Server, ServerConfig};
+    // A hybrid plan (inexpressible under the old enum) through the full
+    // serving stack: router → batcher → worker pool → pipeline, with
+    // per-stage latency blocks keyed by stage name in metrics_json.
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let mk = || Pipeline::new(ModelSession::new(rt.clone(), "stub").unwrap()).unwrap();
+    let workers = vec![mk(), mk()];
+    let genr = EpisodeGen::new(workers[0].vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        workers,
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let plan =
+        QueryPlan::parse("reorder=deviation;score=norm:layer2,geom=global;select=topk:8")
+            .unwrap();
+    // Reference: the same plan answered directly on a local pipeline must
+    // match what comes back through the serving stack.
+    let reference = mk();
+    let mut rng = Rng::new(77);
+    for _ in 0..4 {
+        let e = genr.onehop(&mut rng, 3);
+        let store = ChunkStore::new(1 << 30);
+        let (chunks, _) = reference.prepare_chunks(&store, &e.chunks).unwrap();
+        let expect = reference.answer_plan(&chunks, &e.prompt, &plan).unwrap();
+        let resp = server.query_plan(e, plan.clone()).unwrap();
+        assert_eq!(resp.answer, expect.answer, "served answer drifted from local");
+        // the response carries the per-stage breakdown of its own plan
+        let names: Vec<&str> = resp.stages.iter().map(|(n, _)| *n).collect();
+        for want in ["reorder_score", "reorder", "score", "select", "recompute", "prompt", "decode"] {
+            assert!(names.contains(&want), "response missing stage '{want}' ({names:?})");
+        }
+    }
+    let dump = server.metrics_json().to_string_pretty();
+    for want in ["stage_score", "stage_select", "stage_recompute", "stage_reorder"] {
+        assert!(
+            dump.contains(want),
+            "metrics_json missing per-stage latency block '{want}'"
+        );
+    }
+    server.shutdown();
+}
