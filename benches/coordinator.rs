@@ -179,6 +179,7 @@ fn worker_scaling() {
             ServerConfig {
                 batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
                 queue_cap: n_requests,
+                ..ServerConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -196,6 +197,7 @@ fn worker_scaling() {
                         },
                         plan: MethodSpec::Baseline.to_plan(),
                         respond: rtx,
+                        stream: None,
                     })
                     .unwrap();
                 rrx

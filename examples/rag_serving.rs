@@ -12,7 +12,6 @@ use std::path::Path;
 use std::sync::Arc;
 
 use infoflow_kv::config::MethodSpec;
-use infoflow_kv::coordinator::batcher::BatcherConfig;
 use infoflow_kv::coordinator::{Server, ServerConfig};
 use infoflow_kv::eval::token_f1;
 use infoflow_kv::kvcache::ChunkStore;
@@ -54,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     let server = Server::spawn_pool(
         pipelines,
         ChunkStore::new(256 << 20),
-        ServerConfig { batch: BatcherConfig::default(), queue_cap: 128 },
+        ServerConfig { queue_cap: 128, ..ServerConfig::default() },
     );
 
     let t0 = std::time::Instant::now();

@@ -144,6 +144,11 @@ pub struct ServeConfig {
     /// spill files are evicted once the directory exceeds it.  `None`
     /// leaves the tier unbounded.
     pub spill_budget_bytes: Option<u64>,
+    /// Continuous-batching width (`repro serve --max-interleave`): how many
+    /// in-flight answers one worker interleaves token-by-token.  Also the
+    /// fairness bound — no parked decode goes more than this many scheduler
+    /// ticks without a step.
+    pub max_interleave: usize,
 }
 
 impl Default for ServeConfig {
@@ -160,6 +165,7 @@ impl Default for ServeConfig {
             prefetch_threads: 1,
             spill_dir: None,
             spill_budget_bytes: None,
+            max_interleave: 8,
         }
     }
 }

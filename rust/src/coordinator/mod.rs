@@ -4,16 +4,23 @@
 //!
 //! (The image's offline crate mirror has no tokio, so the event loop is
 //! built on std threads + channels — same architecture, first-party
-//! machinery: the router drains the request queue into batches and hands
-//! them to N worker threads over a bounded work channel; each worker owns a
-//! `ModelSession`, and the chunk store synchronizes internally per shard.)
+//! machinery: the router drains the request queue into dispatch waves and
+//! feeds them, one request at a time, to N worker threads over a bounded
+//! work channel; each worker owns a `ModelSession`, and the chunk store
+//! synchronizes internally per shard.)
 
 pub mod batcher;
 pub mod metrics;
+pub mod prefetch;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::MetricsRegistry;
-pub use server::{Handler, PrefetchFn, Request, Response, Served, Server, ServerConfig};
+pub use prefetch::PrefetchQueue;
+pub use scheduler::DecodeScheduler;
+pub use server::{
+    Handler, PrefetchFn, Request, Response, Served, Server, ServerConfig, TokenSink,
+};
 pub use session::SessionTable;

@@ -1,0 +1,278 @@
+//! Priority prefetch queue: the router's background-warm jobs, ordered by
+//! **distance to dispatch** instead of arrival.
+//!
+//! The old job channel was FIFO, so a burst's last request warmed no later
+//! than its first — even though the first is about to hit a worker and the
+//! last will sit through several batch windows.  Here every job carries the
+//! owning request's position in the batcher queue (0 = next to dispatch),
+//! the prefetchers always pop the smallest distance, and the router's
+//! post-dispatch re-peek RE-prioritizes jobs already queued (a request that
+//! just moved to the front of the line pulls its chunks' warm forward).
+//!
+//! Mechanics: slot-addressed jobs + a lazy-deletion binary heap keyed by
+//! `(priority, seq)` — seq keeps FIFO order within a priority and
+//! invalidates superseded heap entries after a reprioritize.  `pop` blocks
+//! on a condvar; after [`PrefetchQueue::close`] it drains what is queued
+//! and then returns `None`, which is what lets server shutdown finish every
+//! scheduled warm instead of dropping the tail.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::{Condvar, Mutex};
+
+use crate::kvcache::ChunkId;
+
+/// A prefetch job: one request's chunk token lists (minus anything already
+/// queued for prefetch), plus their content ids so the prefetcher can clear
+/// the router's queued-set when the warm completes.
+pub struct PrefetchJob {
+    pub ids: Vec<ChunkId>,
+    pub chunks: Vec<Vec<i32>>,
+}
+
+struct QueuedJob {
+    job: PrefetchJob,
+    prio: u64,
+    /// seq of this slot's newest heap entry; older entries are stale.
+    seq: u64,
+}
+
+struct State {
+    /// Slot-addressed jobs (`None` = vacant; stale heap entries may still
+    /// name the slot and are skipped on pop).
+    slots: Vec<Option<QueuedJob>>,
+    free: Vec<usize>,
+    /// Min-heap of (priority, seq, slot): smallest distance-to-dispatch
+    /// first, FIFO within a priority.
+    heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    /// Any queued chunk id → the slot of the job carrying it (jobs never
+    /// share an id: the router's queued-set dedups at admission).
+    by_id: HashMap<ChunkId, usize>,
+    seq: u64,
+    len: usize,
+    cap: usize,
+    closed: bool,
+}
+
+/// Bounded, closable, priority-ordered MPMC job queue.
+pub struct PrefetchQueue {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl PrefetchQueue {
+    pub fn new(cap: usize) -> PrefetchQueue {
+        PrefetchQueue {
+            state: Mutex::new(State {
+                slots: Vec::new(),
+                free: Vec::new(),
+                heap: BinaryHeap::new(),
+                by_id: HashMap::new(),
+                seq: 0,
+                len: 0,
+                cap: cap.max(1),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue a job at `prio` (0 = dispatching next).  A full or closed
+    /// queue hands the job back — the router drops the hint (and un-queues
+    /// its ids) rather than ever stalling on the prefetch path.
+    pub fn push(&self, job: PrefetchJob, prio: u64) -> Result<(), PrefetchJob> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.len >= st.cap {
+            return Err(job);
+        }
+        let slot = match st.free.pop() {
+            Some(s) => s,
+            None => {
+                st.slots.push(None);
+                st.slots.len() - 1
+            }
+        };
+        st.seq += 1;
+        let seq = st.seq;
+        for &id in &job.ids {
+            st.by_id.insert(id, slot);
+        }
+        st.slots[slot] = Some(QueuedJob { job, prio, seq });
+        st.heap.push(Reverse((prio, seq, slot)));
+        st.len += 1;
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Pull the queued job containing `id` forward to `prio` if that is
+    /// MORE urgent than its current priority (a re-peek can only move work
+    /// earlier; arrival order never worsens).  Returns whether anything
+    /// changed — `false` also covers ids that are mid-warm or unknown.
+    pub fn reprioritize(&self, id: ChunkId, prio: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let Some(&slot) = st.by_id.get(&id) else {
+            return false;
+        };
+        st.seq += 1;
+        let seq = st.seq;
+        let Some(qj) = st.slots[slot].as_mut() else {
+            return false;
+        };
+        if prio >= qj.prio {
+            return false;
+        }
+        qj.prio = prio;
+        qj.seq = seq;
+        st.heap.push(Reverse((prio, seq, slot)));
+        drop(st);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Blocking pop of the most urgent job.  `None` only after
+    /// [`PrefetchQueue::close`] AND the queue has drained — every job
+    /// admitted before close is still handed out.
+    pub fn pop(&self) -> Option<PrefetchJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            while let Some(Reverse((_prio, seq, slot))) = st.heap.pop() {
+                let live = st.slots[slot]
+                    .as_ref()
+                    .is_some_and(|qj| qj.seq == seq);
+                if !live {
+                    continue; // stale (superseded or already popped) entry
+                }
+                let qj = st.slots[slot].take().expect("checked live above");
+                st.free.push(slot);
+                st.len -= 1;
+                for id in &qj.job.ids {
+                    st.by_id.remove(id);
+                }
+                return Some(qj.job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admission and wake every parked popper; queued jobs keep being
+    /// served until the queue is empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn job(tag: i32, ids: &[u64]) -> PrefetchJob {
+        PrefetchJob {
+            ids: ids.to_vec(),
+            chunks: vec![vec![tag, tag + 1, tag + 2]],
+        }
+    }
+
+    #[test]
+    fn pops_by_distance_to_dispatch_not_arrival() {
+        let q = PrefetchQueue::new(8);
+        q.push(job(10, &[1]), 5).unwrap();
+        q.push(job(20, &[2]), 0).unwrap();
+        q.push(job(30, &[3]), 2).unwrap();
+        q.close();
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop())
+            .map(|j| j.chunks[0][0])
+            .collect();
+        assert_eq!(order, vec![20, 30, 10], "front-of-queue requests warm first");
+    }
+
+    #[test]
+    fn fifo_within_a_priority() {
+        let q = PrefetchQueue::new(8);
+        for (tag, id) in [(10, 1u64), (20, 2), (30, 3)] {
+            q.push(job(tag, &[id]), 7).unwrap();
+        }
+        q.close();
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop())
+            .map(|j| j.chunks[0][0])
+            .collect();
+        assert_eq!(order, vec![10, 20, 30], "equal priorities keep arrival order");
+    }
+
+    #[test]
+    fn repeek_reprioritization_pulls_a_job_forward() {
+        let q = PrefetchQueue::new(8);
+        q.push(job(10, &[1]), 1).unwrap();
+        q.push(job(20, &[2, 3]), 3).unwrap();
+        // the re-peek finds the second request now heading the batcher
+        assert!(q.reprioritize(3, 0), "queued id must be movable");
+        // worsening is refused; unknown ids are a no-op
+        assert!(!q.reprioritize(2, 9));
+        assert!(!q.reprioritize(77, 0));
+        q.close();
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop())
+            .map(|j| j.chunks[0][0])
+            .collect();
+        assert_eq!(order, vec![20, 10], "reprioritized job must jump the line");
+        assert!(!q.reprioritize(3, 0), "popped ids are no longer addressable");
+    }
+
+    #[test]
+    fn capacity_bounds_and_closed_queue_reject() {
+        let q = PrefetchQueue::new(1);
+        q.push(job(10, &[1]), 0).unwrap();
+        assert!(q.push(job(20, &[2]), 0).is_err(), "full queue hands the job back");
+        assert_eq!(q.len(), 1);
+        q.close();
+        assert!(q.push(job(30, &[3]), 0).is_err(), "closed queue rejects admission");
+        assert!(q.pop().is_some(), "close still drains what was queued");
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn blocked_pop_wakes_on_push_and_on_close() {
+        let q = Arc::new(PrefetchQueue::new(4));
+        let qc = q.clone();
+        let h = std::thread::spawn(move || {
+            let first = qc.pop().map(|j| j.chunks[0][0]);
+            let second = qc.pop().map(|j| j.chunks[0][0]);
+            (first, second)
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(job(10, &[1]), 0).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        let (first, second) = h.join().unwrap();
+        assert_eq!(first, Some(10), "parked pop must wake on push");
+        assert_eq!(second, None, "parked pop must wake on close");
+    }
+
+    #[test]
+    fn slots_are_recycled_across_churn() {
+        let q = PrefetchQueue::new(2);
+        for round in 0..50u64 {
+            q.push(job(round as i32, &[round * 2]), round % 3).unwrap();
+            q.push(job(round as i32, &[round * 2 + 1]), round % 5).unwrap();
+            assert!(q.pop().is_some());
+            assert!(q.pop().is_some());
+        }
+        assert_eq!(q.state.lock().unwrap().slots.len(), 2, "slots must be reused");
+        q.close();
+        assert!(q.pop().is_none());
+    }
+}

@@ -1,0 +1,289 @@
+//! Continuous-batching decode scheduler: the structure a worker parks its
+//! in-flight [`QueryTask`](crate::pipeline::QueryTask)s in once their prep
+//! phase is done, so per-token decode work round-robins across EVERY live
+//! query instead of one query monopolizing the worker until its last token.
+//!
+//! ```text
+//!   prep done ──admit()──▶ ┌───────────── in-flight ─────────────┐
+//!                          │ task₀  task₁  task₂ … task_{W-1}    │
+//!        tick: begin_tick  │   │      │      │        │          │
+//!              (visit all) │   ▼      ▼      ▼        ▼          │
+//!              step/batch  │ emit + one decode step each         │
+//!              end_tick    │ finished tasks retire ──▶ responses  │
+//!                          └─────────────────────────────────────┘
+//! ```
+//!
+//! The scheduler is pure bookkeeping (admission, rotation, starvation
+//! accounting, retirement) — deliberately free of model types, so the
+//! fairness and lifecycle properties are testable with synthetic tasks and
+//! the same machinery can interleave anything steppable.  The worker owns
+//! the model side of a tick: it drains each task's split-phase emission
+//! ([`QueryTask::begin_step`](crate::pipeline::QueryTask::begin_step)),
+//! folds the slate's pending model work into ONE
+//! [`decode_step_many`](crate::runtime::exec::ModelSession::decode_step_many)
+//! call, and completes each task.
+//!
+//! **Fairness contract**: `max_interleave` bounds both the number of
+//! concurrently interleaved tasks (admission capacity) and the tolerated
+//! starvation — every in-flight task is visited on every tick, so the gap
+//! between consecutive visits (tracked in [`DecodeScheduler::max_starve_ticks`])
+//! never exceeds one tick, well inside the `max_interleave`-tick bound the
+//! property tests assert.
+
+use std::collections::VecDeque;
+
+struct Slot<T> {
+    task: T,
+    /// Tick at which this task was last visited (admission counts as a
+    /// visit: a freshly parked task must be stepped promptly too).
+    last_visit: u64,
+    /// Marked finished by a convenience [`DecodeScheduler::tick`].
+    done: bool,
+}
+
+/// Round-robin interleaver over parked decode tasks.  See the module doc
+/// for the tick protocol.
+pub struct DecodeScheduler<T> {
+    slots: VecDeque<Slot<T>>,
+    max_interleave: usize,
+    tick: u64,
+    in_tick: bool,
+    max_starve: u64,
+    admitted: u64,
+    retired: u64,
+}
+
+impl<T> DecodeScheduler<T> {
+    /// `max_interleave` is clamped to at least 1 (a zero-width scheduler
+    /// could never drain).
+    pub fn new(max_interleave: usize) -> DecodeScheduler<T> {
+        DecodeScheduler {
+            slots: VecDeque::new(),
+            max_interleave: max_interleave.max(1),
+            tick: 0,
+            in_tick: false,
+            max_starve: 0,
+            admitted: 0,
+            retired: 0,
+        }
+    }
+
+    pub fn max_interleave(&self) -> usize {
+        self.max_interleave
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Whether another task may be admitted (in-flight < `max_interleave`).
+    pub fn has_capacity(&self) -> bool {
+        self.slots.len() < self.max_interleave
+    }
+
+    /// Park a prepped task.  At capacity the task is handed back so the
+    /// caller can hold it in its pending queue (admission happens between
+    /// ticks, never mid-tick).
+    pub fn admit(&mut self, task: T) -> Result<(), T> {
+        assert!(!self.in_tick, "admission must happen between ticks");
+        if !self.has_capacity() {
+            return Err(task);
+        }
+        self.admitted += 1;
+        self.slots.push_back(Slot { task, last_visit: self.tick, done: false });
+        Ok(())
+    }
+
+    /// Open a tick: every in-flight task counts as visited (starvation
+    /// accounting), and the slate becomes available through
+    /// [`DecodeScheduler::tasks`] / [`DecodeScheduler::tasks_mut`].
+    pub fn begin_tick(&mut self) {
+        assert!(!self.in_tick, "begin_tick while a tick is already open");
+        self.in_tick = true;
+        self.tick += 1;
+        for slot in self.slots.iter_mut() {
+            self.max_starve = self.max_starve.max(self.tick - slot.last_visit);
+            slot.last_visit = self.tick;
+        }
+    }
+
+    /// The slate in service order (stable between `begin_tick` and
+    /// `end_tick`, so two passes align positionally).
+    pub fn tasks(&self) -> impl Iterator<Item = &T> {
+        self.slots.iter().map(|s| &s.task)
+    }
+
+    pub fn tasks_mut(&mut self) -> impl Iterator<Item = &mut T> {
+        self.slots.iter_mut().map(|s| &mut s.task)
+    }
+
+    /// Close a tick: retire every task `finished` reports done (plus any a
+    /// convenience [`DecodeScheduler::tick`] marked), rotate the head so no
+    /// task permanently owns the front of the service order, and hand the
+    /// retired tasks back for response delivery.
+    pub fn end_tick(&mut self, mut finished: impl FnMut(&T) -> bool) -> Vec<T> {
+        assert!(self.in_tick, "end_tick without begin_tick");
+        self.in_tick = false;
+        let mut retired = Vec::new();
+        let mut keep: VecDeque<Slot<T>> = VecDeque::with_capacity(self.slots.len());
+        for slot in self.slots.drain(..) {
+            if slot.done || finished(&slot.task) {
+                retired.push(slot.task);
+            } else {
+                keep.push_back(slot);
+            }
+        }
+        self.slots = keep;
+        self.retired += retired.len() as u64;
+        if self.slots.len() > 1 {
+            let front = self.slots.pop_front().expect("len > 1");
+            self.slots.push_back(front);
+        }
+        retired
+    }
+
+    /// Convenience serial tick: visit every task once through `step`
+    /// (returning `true` retires it) — what callers without a batched model
+    /// entry point (and the property tests) drive.
+    pub fn tick(&mut self, mut step: impl FnMut(&mut T) -> bool) -> Vec<T> {
+        self.begin_tick();
+        for slot in self.slots.iter_mut() {
+            slot.done = step(&mut slot.task);
+        }
+        self.end_tick(|_| false)
+    }
+
+    /// Take every parked task (shutdown hand-off: the worker keeps ticking
+    /// a drained scheduler's tasks to completion, it never drops them).
+    pub fn drain(&mut self) -> Vec<T> {
+        assert!(!self.in_tick, "drain mid-tick");
+        self.slots.drain(..).map(|s| s.task).collect()
+    }
+
+    /// Ticks opened so far.
+    pub fn ticks(&self) -> u64 {
+        self.tick
+    }
+
+    /// Worst observed gap (in ticks) between consecutive visits of any
+    /// task, admission included.  The fairness property: this never
+    /// exceeds `max_interleave` (in practice it is 1 — every tick visits
+    /// every task).
+    pub fn max_starve_ticks(&self) -> u64 {
+        self.max_starve
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    pub fn retired(&self) -> u64 {
+        self.retired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic task: finishes after `need` steps, records the tick of
+    /// each visit.
+    struct Fake {
+        id: usize,
+        need: usize,
+        steps: usize,
+    }
+
+    impl Fake {
+        fn new(id: usize, need: usize) -> Fake {
+            Fake { id, need, steps: 0 }
+        }
+    }
+
+    #[test]
+    fn capacity_bounds_admission() {
+        let mut s: DecodeScheduler<Fake> = DecodeScheduler::new(2);
+        assert!(s.admit(Fake::new(0, 1)).is_ok());
+        assert!(s.admit(Fake::new(1, 1)).is_ok());
+        assert!(!s.has_capacity());
+        let bounced = s.admit(Fake::new(2, 1));
+        assert!(bounced.is_err(), "third task must bounce at max_interleave=2");
+        assert_eq!(bounced.err().unwrap().id, 2, "the bounced task is handed back");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn every_task_steps_every_tick_and_retires_on_completion() {
+        let mut s: DecodeScheduler<Fake> = DecodeScheduler::new(8);
+        for (id, need) in [(0usize, 3usize), (1, 1), (2, 2)] {
+            s.admit(Fake::new(id, need)).unwrap();
+        }
+        let mut done = Vec::new();
+        while !s.is_empty() {
+            let retired = s.tick(|t| {
+                t.steps += 1;
+                t.steps >= t.need
+            });
+            done.extend(retired.into_iter().map(|t| (t.id, t.steps)));
+        }
+        // short tasks retire first (tick counts = their needs), none over-step
+        done.sort_unstable();
+        assert_eq!(done, vec![(0, 3), (1, 1), (2, 2)]);
+        assert_eq!(s.ticks(), 3, "longest task needs 3 all-visit ticks");
+        assert_eq!(s.retired(), 3);
+        assert!(
+            s.max_starve_ticks() <= 1,
+            "all-visit ticks must never starve a task ({})",
+            s.max_starve_ticks()
+        );
+    }
+
+    #[test]
+    fn split_phase_tick_sees_a_stable_slate() {
+        let mut s: DecodeScheduler<Fake> = DecodeScheduler::new(4);
+        for id in 0..3 {
+            s.admit(Fake::new(id, 2)).unwrap();
+        }
+        s.begin_tick();
+        let order1: Vec<usize> = s.tasks().map(|t| t.id).collect();
+        for t in s.tasks_mut() {
+            t.steps += 1;
+        }
+        let order2: Vec<usize> = s.tasks().map(|t| t.id).collect();
+        assert_eq!(order1, order2, "slate order must hold across the two passes");
+        let retired = s.end_tick(|t| t.steps >= t.need);
+        assert!(retired.is_empty());
+        // head rotation: the next tick starts from a different task
+        s.begin_tick();
+        let order3: Vec<usize> = s.tasks().map(|t| t.id).collect();
+        assert_ne!(order1, order3, "service order must rotate between ticks");
+        let _ = s.end_tick(|_| true);
+    }
+
+    #[test]
+    fn admission_between_ticks_is_visited_promptly() {
+        let mut s: DecodeScheduler<Fake> = DecodeScheduler::new(4);
+        s.admit(Fake::new(0, 10)).unwrap();
+        for round in 0..6 {
+            if round == 3 {
+                s.admit(Fake::new(1, 10)).unwrap();
+            }
+            s.tick(|t| {
+                t.steps += 1;
+                false
+            });
+        }
+        assert_eq!(s.len(), 2);
+        assert!(
+            s.max_starve_ticks() <= 1,
+            "late-admitted task must join the very next tick"
+        );
+        let drained = s.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(s.is_empty());
+    }
+}

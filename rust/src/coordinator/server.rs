@@ -15,30 +15,55 @@
 //!                                  prefill or answer)
 //! ```
 //!
-//! Worker count is the caller's choice: one pipeline handler per worker
-//! (see [`Server::spawn_pool`]).  Each drained batch is split evenly across
-//! the pool (a worker serves its sub-batch sequentially), so a burst never
+//! Worker count is the caller's choice: one pipeline worker per pipeline
+//! (see [`Server::spawn_pool`]).  The work channel is REQUEST-granular:
+//! each worker pulls exactly as much as it can schedule (a serial handler
+//! one request at a time, a scheduled worker up to its free interleave
+//! width), so a drained burst distributes itself across the pool and never
 //! serializes onto one worker.  The chunk store is sharded and internally
 //! synchronized, so concurrent requests overlap end-to-end; only cache
 //! lookups/inserts serialize, and only within a shard.
+//!
+//! **Continuous-batching decode** (see [`scheduled_worker_loop`]): a
+//! pipeline-backed worker no longer owns a request for its lifetime.  It
+//! runs the PREP phase (`prepare_chunks` + `Pipeline::begin_plan`, i.e.
+//! everything up to the first answer token) and parks the resulting
+//! [`QueryTask`] in its per-worker
+//! [`DecodeScheduler`](crate::coordinator::scheduler::DecodeScheduler);
+//! each scheduler tick then emits ONE token from EVERY in-flight task
+//! (streamed immediately when the request carries a [`TokenSink`]) and
+//! advances all of them with a single batched
+//! [`decode_step_many`](crate::runtime::exec::ModelSession::decode_step_many)
+//! call.  A short query queued behind a long answer now interleaves with it
+//! instead of waiting out every one of its decode steps; answers are
+//! bit-identical to the serial path.  New work is admitted between ticks,
+//! bounded by `max_interleave` (also the fairness bound — no parked task
+//! goes more than that many ticks without a step).
 //!
 //! **Queue-driven prefetch** (see [`Server::spawn_pool_with_prefetch`]): the
 //! router peeks queued requests' chunk lists — once when a request arrives
 //! and again for the next dispatch wave after each dispatch — and feeds
 //! them to a background prefetcher pool that warms misses through the chunk
-//! store's lifecycle API (`get_or_load`).  The single-flight registry makes
-//! the worker/prefetcher race harmless: whoever starts a chunk's load first
-//! owns it, everyone else shares the result, so a steady-state query finds
-//! its chunks resident.
+//! store's lifecycle API (`get_or_load`).  Jobs are ordered by the owning
+//! request's **distance to dispatch** (a
+//! [`PrefetchQueue`](crate::coordinator::prefetch::PrefetchQueue), not a
+//! FIFO channel), and the post-dispatch re-peek re-prioritizes queued jobs,
+//! so the next request to hit a worker always warms first.  The
+//! single-flight registry makes the worker/prefetcher race harmless:
+//! whoever starts a chunk's load first owns it, everyone else shares the
+//! result, so a steady-state query finds its chunks resident.
 //!
 //! Shutdown is graceful and prompt: dropping the real request sender makes
 //! the router observe `Disconnected` immediately, drain what is queued into
-//! the work channel, and hang up on the workers AND the prefetchers (their
-//! job channel's sender lives in the router), which drain and exit.
+//! the work channel, hang up on the workers (which finish every parked
+//! decode task, delivering responses and closing stream channels), and
+//! close the prefetch queue (prefetchers drain it and exit).
 
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
 use std::panic::AssertUnwindSafe;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -48,9 +73,12 @@ use anyhow::{anyhow, Result};
 use crate::config::MethodSpec;
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::MetricsRegistry;
+use crate::coordinator::prefetch::{PrefetchJob, PrefetchQueue};
+use crate::coordinator::scheduler::DecodeScheduler;
 use crate::kvcache::{ChunkId, ChunkKv, ChunkStore, PoolStats};
-use crate::pipeline::Pipeline;
+use crate::pipeline::{Pipeline, QueryTask, StepOutcome};
 use crate::plan::QueryPlan;
+use crate::runtime::exec::DecodeBatchItem;
 use crate::util::json::Json;
 use crate::workload::Episode;
 
@@ -58,12 +86,34 @@ use crate::workload::Episode;
 /// the parked `recv_timeout` wakes immediately when the sender drops.
 const IDLE_PARK: Duration = Duration::from_millis(50);
 
+/// Initial park of an IDLE scheduled worker between work polls.  Scheduled
+/// workers must never block inside the shared receiver's mutex (a busy
+/// sibling's between-tick `try_recv` would stall behind it, freezing its
+/// in-flight decodes), so idle ones poll-and-park with exponential backoff
+/// instead: a worker going idle reacts within ~0.5 ms, while a long-idle
+/// pool decays to [`WORKER_IDLE_POLL_MAX`] wakeups so an unloaded server
+/// is not a busy loop.
+const WORKER_IDLE_POLL: Duration = Duration::from_micros(500);
+
+/// Backoff ceiling of the idle poll — also the worst-case admission (and
+/// shutdown-observation) latency of a long-idle scheduled worker.
+const WORKER_IDLE_POLL_MAX: Duration = Duration::from_millis(4);
+
+/// Streaming sink: answer tokens are delivered one by one as the decode
+/// scheduler emits them.  The channel closing (sender dropped at
+/// retirement) is the end-of-stream signal; the final [`Response`] still
+/// arrives on the request's `respond` channel, unchanged.
+pub type TokenSink = Sender<i32>;
+
 /// One queued query: the episode plus the [`QueryPlan`] to answer it under
-/// (legacy callers lower a `MethodSpec` via [`Server::query`]).
+/// (legacy callers lower a `MethodSpec` via [`Server::query`]), and an
+/// optional streaming sink.
 pub struct Request {
     pub episode: Episode,
     pub plan: QueryPlan,
     pub respond: SyncSender<Response>,
+    /// `Some` to stream tokens at emission (see [`Server::query_plan_stream`]).
+    pub stream: Option<TokenSink>,
 }
 
 #[derive(Clone, Debug)]
@@ -101,12 +151,19 @@ pub type Handler = Box<dyn FnMut(&Request) -> Result<Served> + Send>;
 /// pipeline; tests inject synthetic ones.
 pub type PrefetchFn = Box<dyn FnMut(&[Vec<i32>]) + Send>;
 
-/// A prefetch job: one request's chunk token lists (minus anything already
-/// queued for prefetch), plus their content ids so the prefetcher can clear
-/// the queued-set when the warm completes.
-struct PrefetchJob {
-    ids: Vec<ChunkId>,
-    chunks: Vec<Vec<i32>>,
+/// One worker thread's flavor.
+enum WorkerKind {
+    /// Arbitrary request→[`Served`] closure serving its batch serially —
+    /// the artifact-free seam tests and benches inject.
+    Serial(Handler),
+    /// Pipeline-backed continuous-batching worker: prep to first token,
+    /// park the [`QueryTask`] in a per-worker `DecodeScheduler`,
+    /// interleave decode steps across all in-flight queries.
+    Scheduled {
+        pipeline: Pipeline,
+        store: Arc<ChunkStore>,
+        max_interleave: usize,
+    },
 }
 
 /// Queueing/batching knobs for a server instance.
@@ -115,15 +172,30 @@ pub struct ServerConfig {
     pub batch: BatcherConfig,
     /// Bound of the ingress request queue (backpressure limit).
     pub queue_cap: usize,
+    /// Per-worker cap on concurrently interleaved decodes (the
+    /// continuous-batching width of a scheduled worker's
+    /// `DecodeScheduler`); doubles as the fairness bound — no parked task
+    /// goes more than this many scheduler ticks without a step.
+    pub max_interleave: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { batch: BatcherConfig::default(), queue_cap: 64 }
+        ServerConfig {
+            batch: BatcherConfig::default(),
+            queue_cap: 64,
+            max_interleave: 8,
+        }
     }
 }
 
-type Batch = Vec<(Request, Instant)>;
+/// One unit of dispatched work: a request plus its enqueue instant.  The
+/// work channel is REQUEST-granular: each worker pulls exactly as much as
+/// it can schedule (a serial worker one request at a time, a scheduled
+/// worker up to its free interleave width), so a drained batch distributes
+/// dynamically across the pool and no worker ever strands requests in a
+/// private queue while a sibling idles.
+type WorkItem = (Request, Instant);
 
 struct Shared {
     metrics: MetricsRegistry,
@@ -141,9 +213,13 @@ pub struct Server {
     shared: Arc<Shared>,
     router: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    /// Background prefetcher threads (their job sender lives inside the
-    /// router, so they observe disconnect as soon as the router exits).
+    /// Background prefetcher threads, parked in [`PrefetchQueue::pop`].
     prefetchers: Vec<JoinHandle<()>>,
+    /// The prefetch job queue.  The router closes it on normal exit;
+    /// `finish` closes it AGAIN (idempotent) after joining the router, so a
+    /// router panic that unwound past the close can never leave the
+    /// prefetchers parked forever and hang the join below.
+    prefetch_q: Option<Arc<PrefetchQueue>>,
     store: Option<Arc<ChunkStore>>,
     /// Per-worker buffer-pool counters (pipeline-backed servers only).  The
     /// pools themselves move into the worker threads with their pipelines;
@@ -163,7 +239,7 @@ impl Server {
         Server::spawn_pool(
             vec![pipeline],
             store,
-            ServerConfig { batch: batch_cfg, queue_cap },
+            ServerConfig { batch: batch_cfg, queue_cap, ..ServerConfig::default() },
         )
     }
 
@@ -177,10 +253,15 @@ impl Server {
         Server::spawn_pool_with_prefetch(pipelines, Vec::new(), store, cfg)
     }
 
-    /// Spawn a router + one worker per pipeline + one background prefetcher
-    /// per prefetch pipeline, all sharing `store`.  Sessions are per-thread
-    /// (each `Pipeline` owns its `ModelSession`); weights and compiled
-    /// executables are shared through the `Runtime`.
+    /// Spawn a router + one CONTINUOUS-BATCHING worker per pipeline + one
+    /// background prefetcher per prefetch pipeline, all sharing `store`.
+    /// Sessions are per-thread (each `Pipeline` owns its `ModelSession`);
+    /// weights and compiled executables are shared through the `Runtime`.
+    ///
+    /// Workers run each request's prep phase to its first token, then park
+    /// the decode in a per-worker scheduler that interleaves up to
+    /// `cfg.max_interleave` answers token-by-token (see the module doc) —
+    /// a short answer is never serialized behind a long one.
     ///
     /// Prefetchers warm queued requests' chunks through the store's
     /// lifecycle API before a worker picks the request up; the store's
@@ -195,28 +276,15 @@ impl Server {
         let store = Arc::new(store);
         // Each worker keeps its own scratch-buffer pool (inside its
         // Pipeline); grab the stat handles before the pipelines move into
-        // the worker closures.
+        // the worker threads.
         let pool_stats: Vec<Arc<PoolStats>> =
             pipelines.iter().map(|p| p.pool.stats()).collect();
-        let handlers: Vec<Handler> = pipelines
+        let workers: Vec<WorkerKind> = pipelines
             .into_iter()
-            .map(|p| {
-                let st = store.clone();
-                Box::new(move |req: &Request| -> Result<Served> {
-                    // The store lock lives inside get/insert; the batch is
-                    // served over pinned Arcs with no lock held.
-                    let (chunks, _) = p.prepare_chunks(&st, &req.episode.chunks)?;
-                    let r = p.answer_plan(&chunks, &req.episode.prompt, &req.plan)?;
-                    let mut stages = r.timing.stages.clone();
-                    stages.push(("prompt", r.timing.prompt_s));
-                    stages.push(("decode", r.timing.decode_s));
-                    Ok(Served {
-                        answer: r.answer,
-                        ttft_s: r.timing.ttft_s(),
-                        total_s: r.timing.total_s,
-                        stages,
-                    })
-                }) as Handler
+            .map(|p| WorkerKind::Scheduled {
+                pipeline: p,
+                store: store.clone(),
+                max_interleave: cfg.max_interleave,
             })
             .collect();
         let prefetchers: Vec<PrefetchFn> = prefetch_pipelines
@@ -247,7 +315,7 @@ impl Server {
                 }) as PrefetchFn
             })
             .collect();
-        let mut server = Server::spawn_handlers_with_prefetch(handlers, prefetchers, cfg);
+        let mut server = Server::spawn_workers(workers, prefetchers, cfg);
         server.store = Some(store);
         server.pool_stats = pool_stats;
         server
@@ -266,88 +334,117 @@ impl Server {
         prefetchers: Vec<PrefetchFn>,
         cfg: ServerConfig,
     ) -> Server {
-        assert!(!handlers.is_empty(), "server needs at least one worker");
+        let workers = handlers.into_iter().map(WorkerKind::Serial).collect();
+        Server::spawn_workers(workers, prefetchers, cfg)
+    }
+
+    /// The common spawn core: router + worker threads (serial handlers or
+    /// continuous-batching scheduled workers) + the priority prefetch pool.
+    fn spawn_workers(
+        workers: Vec<WorkerKind>,
+        prefetchers: Vec<PrefetchFn>,
+        cfg: ServerConfig,
+    ) -> Server {
+        assert!(!workers.is_empty(), "server needs at least one worker");
         let (tx, rx) = sync_channel::<(Request, Instant)>(cfg.queue_cap);
         let shared = Arc::new(Shared {
             metrics: MetricsRegistry::new(),
             prefetch_queued: Mutex::new(HashSet::new()),
         });
-        let n_workers = handlers.len();
+        let n_workers = workers.len();
         // Bounded so the router backpressures instead of buffering
         // unbounded batches ahead of slow workers.
-        let (work_tx, work_rx) = sync_channel::<Batch>(n_workers * 2);
+        let (work_tx, work_rx) = sync_channel::<WorkItem>(n_workers * 2);
         let work_rx = Arc::new(Mutex::new(work_rx));
-        let mut workers = Vec::with_capacity(n_workers);
-        for (i, mut handler) in handlers.into_iter().enumerate() {
+        let mut worker_threads = Vec::with_capacity(n_workers);
+        for (i, worker) in workers.into_iter().enumerate() {
             let wrx = work_rx.clone();
             let sh = shared.clone();
-            workers.push(
+            worker_threads.push(
                 std::thread::Builder::new()
                     .name(format!("ifkv-worker-{i}"))
-                    .spawn(move || worker_loop(&mut handler, &wrx, &sh))
+                    .spawn(move || match worker {
+                        WorkerKind::Serial(mut handler) => {
+                            worker_loop(&mut handler, &wrx, &sh)
+                        }
+                        WorkerKind::Scheduled { pipeline, store, max_interleave } => {
+                            scheduled_worker_loop(
+                                &pipeline,
+                                &store,
+                                max_interleave,
+                                &wrx,
+                                &sh,
+                            )
+                        }
+                    })
                     .expect("spawning worker thread"),
             );
         }
-        // Prefetchers share one bounded job channel; its sender moves into
-        // the router, so prefetchers drain and exit when the router does.
+        // Prefetchers share one priority job queue, ordered by the owning
+        // request's distance to dispatch; the router closes it on exit, so
+        // prefetchers drain what was scheduled and stop.
         let mut prefetch_threads = Vec::with_capacity(prefetchers.len());
-        let prefetch_tx = if prefetchers.is_empty() {
+        let prefetch_q = if prefetchers.is_empty() {
             None
         } else {
-            let (ptx, prx) = sync_channel::<PrefetchJob>(cfg.queue_cap.max(16));
-            let prx = Arc::new(Mutex::new(prx));
+            let q = Arc::new(PrefetchQueue::new(cfg.queue_cap.max(16)));
             for (i, mut warm) in prefetchers.into_iter().enumerate() {
-                let rx = prx.clone();
+                let jobs = q.clone();
                 let sh = shared.clone();
                 prefetch_threads.push(
                     std::thread::Builder::new()
                         .name(format!("ifkv-prefetch-{i}"))
-                        .spawn(move || loop {
-                            let job = match rx.lock().unwrap().recv() {
-                                Ok(j) => j,
-                                Err(_) => break, // router gone: drain done
-                            };
-                            // Contain warm panics (like serve_batch does for
-                            // handlers): the ids MUST leave the queued-set on
-                            // every path, or those chunks would be deduped —
-                            // i.e. never prefetched again — forever.  While
-                            // the warm is in progress, a re-submission of the
-                            // same chunks still dedups instead of re-queueing.
-                            let outcome = std::panic::catch_unwind(
-                                AssertUnwindSafe(|| warm(&job.chunks)),
-                            );
-                            {
-                                let mut queued = sh.prefetch_queued.lock().unwrap();
-                                for id in &job.ids {
-                                    queued.remove(id);
+                        .spawn(move || {
+                            // `pop` yields by urgency until the router closes
+                            // the queue AND it has drained.
+                            while let Some(job) = jobs.pop() {
+                                // Contain warm panics (like serve_one does
+                                // for handlers): the ids MUST leave the
+                                // queued-set on every path, or those chunks
+                                // would be deduped — i.e. never prefetched
+                                // again — forever.  While the warm is in
+                                // progress, a re-submission of the same
+                                // chunks still dedups instead of re-queueing.
+                                let outcome = std::panic::catch_unwind(
+                                    AssertUnwindSafe(|| warm(&job.chunks)),
+                                );
+                                {
+                                    let mut queued = sh.prefetch_queued.lock().unwrap();
+                                    for id in &job.ids {
+                                        queued.remove(id);
+                                    }
                                 }
-                            }
-                            match outcome {
-                                Ok(()) => sh.metrics.incr("prefetch_jobs"),
-                                Err(_) => {
-                                    sh.metrics.incr("prefetch_panics");
-                                    eprintln!(
-                                        "[server] prefetch warm panicked; prefetcher continues"
-                                    );
+                                match outcome {
+                                    Ok(()) => sh.metrics.incr("prefetch_jobs"),
+                                    Err(_) => {
+                                        sh.metrics.incr("prefetch_panics");
+                                        eprintln!(
+                                            "[server] prefetch warm panicked; prefetcher continues"
+                                        );
+                                    }
                                 }
                             }
                         })
                         .expect("spawning prefetch thread"),
                 );
             }
-            Some(ptx)
+            Some(q)
         };
         let sh = shared.clone();
         let router = std::thread::Builder::new()
             .name("ifkv-router".into())
-            .spawn(move || router_loop(cfg.batch, rx, work_tx, prefetch_tx, sh, n_workers))
+            .spawn({
+                let prefetch_q = prefetch_q.clone();
+                move || router_loop(cfg.batch, rx, work_tx, prefetch_q, sh)
+            })
             .expect("spawning router thread");
         Server {
             tx: Some(tx),
             shared,
             router: Some(router),
-            workers,
+            workers: worker_threads,
             prefetchers: prefetch_threads,
+            prefetch_q,
             store: None,
             pool_stats: Vec::new(),
         }
@@ -378,8 +475,23 @@ impl Server {
     /// Submit a plan-typed query and wait for the answer.
     pub fn query_plan(&self, episode: Episode, plan: QueryPlan) -> Result<Response> {
         let (rtx, rrx) = sync_channel(1);
-        self.submit(Request { episode, plan, respond: rtx })?;
+        self.submit(Request { episode, plan, respond: rtx, stream: None })?;
         rrx.recv().map_err(|_| anyhow!("worker dropped the request"))
+    }
+
+    /// Submit a plan-typed query and STREAM it: the first receiver yields
+    /// answer tokens as the decode scheduler emits them (channel close =
+    /// end of stream), the second delivers the final [`Response`] —
+    /// identical, token for token, to what [`Server::query_plan`] returns.
+    pub fn query_plan_stream(
+        &self,
+        episode: Episode,
+        plan: QueryPlan,
+    ) -> Result<(Receiver<i32>, Receiver<Response>)> {
+        let (ttx, trx) = channel();
+        let (rtx, rrx) = sync_channel(1);
+        self.submit(Request { episode, plan, respond: rtx, stream: Some(ttx) })?;
+        Ok((trx, rrx))
     }
 
     pub fn metrics(&self) -> &MetricsRegistry {
@@ -429,6 +541,12 @@ impl Server {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // Normally a no-op (the router closed the queue on exit) — but if
+        // the router PANICKED past its close, this is what unparks the
+        // prefetchers so the joins below cannot hang.
+        if let Some(q) = &self.prefetch_q {
+            q.close();
+        }
         for h in self.prefetchers.drain(..) {
             let _ = h.join();
         }
@@ -444,10 +562,9 @@ impl Drop for Server {
 fn router_loop(
     batch_cfg: BatcherConfig,
     rx: Receiver<(Request, Instant)>,
-    work_tx: SyncSender<Batch>,
-    prefetch_tx: Option<SyncSender<PrefetchJob>>,
+    work_tx: SyncSender<WorkItem>,
+    prefetch_q: Option<Arc<PrefetchQueue>>,
     shared: Arc<Shared>,
-    n_workers: usize,
 ) {
     let mut batcher: Batcher<(Request, Instant)> = Batcher::new(batch_cfg);
     loop {
@@ -455,7 +572,9 @@ fn router_loop(
         let timeout = batcher.time_to_deadline(now).unwrap_or(IDLE_PARK);
         match rx.recv_timeout(timeout) {
             Ok(item) => {
-                schedule_prefetch(&prefetch_tx, &item.0, &shared);
+                // Arrival priority = the batcher position the request is
+                // about to occupy (its distance to dispatch).
+                schedule_prefetch(&prefetch_q, &item.0, batcher.len() as u64, &shared);
                 batcher.push(item, Instant::now());
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
@@ -464,43 +583,51 @@ fn router_loop(
                 // flush the remaining queue to the workers and stop.
                 shared.metrics.incr("router_disconnect_drain");
                 while !batcher.is_empty() {
-                    dispatch(&mut batcher, &work_tx, &shared, n_workers);
+                    dispatch(&mut batcher, &work_tx, &shared);
                 }
                 break;
             }
         }
         // opportunistically drain everything already queued
         while let Ok(item) = rx.try_recv() {
-            schedule_prefetch(&prefetch_tx, &item.0, &shared);
+            schedule_prefetch(&prefetch_q, &item.0, batcher.len() as u64, &shared);
             batcher.push(item, Instant::now());
         }
         if batcher.ready(Instant::now()) {
-            dispatch(&mut batcher, &work_tx, &shared, n_workers);
+            dispatch(&mut batcher, &work_tx, &shared);
             // Re-peek the NEXT dispatch wave so the prefetchers keep its
-            // chunks warm (idempotent — resident chunks are skipped).
-            // Bounded to one batch: re-scheduling the whole queue would
-            // clone every queued request's chunk list per dispatch on the
-            // serial router thread for mostly-duplicate hints.
-            for item in batcher.iter().take(batch_cfg.max_batch) {
-                schedule_prefetch(&prefetch_tx, &item.0, &shared);
+            // chunks warm (idempotent — resident chunks are skipped) AND
+            // re-prioritize: what just moved to the front of the line pulls
+            // its queued warm jobs forward.  Bounded to one batch:
+            // re-scheduling the whole queue would clone every queued
+            // request's chunk list per dispatch on the serial router thread
+            // for mostly-duplicate hints.
+            for (dist, item) in batcher.iter().take(batch_cfg.max_batch).enumerate() {
+                schedule_prefetch(&prefetch_q, &item.0, dist as u64, &shared);
             }
         }
     }
-    // work_tx (and the prefetch job sender) drop here; workers and
-    // prefetchers drain their channels and exit.
+    // work_tx drops here (workers finish their in-flight decodes and exit);
+    // closing the prefetch queue lets prefetchers drain it and exit.
+    if let Some(q) = &prefetch_q {
+        q.close();
+    }
 }
 
-/// Best-effort prefetch scheduling: a full job channel drops the hint (the
-/// worker will resolve the miss itself) rather than ever stalling the
+/// Best-effort prefetch scheduling at `prio` = the owning request's
+/// distance to dispatch (0 = next wave).  A full job queue drops the hint
+/// (the worker will resolve the miss itself) rather than ever stalling the
 /// router.  Admission dedup: chunk ids already sitting in the prefetch
-/// queue (or being warmed right now) are skipped, so a hot chunk referenced
-/// by many queued requests is scheduled once.
+/// queue (or being warmed right now) are not re-queued — but a still-queued
+/// job is RE-prioritized when its request now sits nearer dispatch, so the
+/// post-dispatch re-peek keeps the warm order aligned with the serve order.
 fn schedule_prefetch(
-    tx: &Option<SyncSender<PrefetchJob>>,
+    queue: &Option<Arc<PrefetchQueue>>,
     req: &Request,
+    prio: u64,
     shared: &Shared,
 ) {
-    let Some(tx) = tx else { return };
+    let Some(queue) = queue else { return };
     if req.episode.chunks.is_empty() {
         return;
     }
@@ -511,7 +638,11 @@ fn schedule_prefetch(
         for toks in &req.episode.chunks {
             let id = ChunkKv::content_id(toks);
             if queued.contains(&id) || ids.contains(&id) {
-                shared.metrics.incr("prefetch_deduped");
+                if queue.reprioritize(id, prio) {
+                    shared.metrics.incr("prefetch_repositioned");
+                } else {
+                    shared.metrics.incr("prefetch_deduped");
+                }
                 continue;
             }
             ids.push(id);
@@ -524,9 +655,9 @@ fn schedule_prefetch(
             queued.insert(id);
         }
     }
-    match tx.try_send(PrefetchJob { ids, chunks }) {
+    match queue.push(PrefetchJob { ids, chunks }, prio) {
         Ok(()) => shared.metrics.incr("prefetch_scheduled"),
-        Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => {
+        Err(job) => {
             shared.metrics.incr("prefetch_dropped");
             // The hint is gone; un-queue the ids so a later request (or the
             // post-dispatch re-peek) can schedule them again.
@@ -540,24 +671,18 @@ fn schedule_prefetch(
 
 fn dispatch(
     batcher: &mut Batcher<(Request, Instant)>,
-    work_tx: &SyncSender<Batch>,
+    work_tx: &SyncSender<WorkItem>,
     shared: &Shared,
-    n_workers: usize,
 ) {
     shared.metrics.observe_s("queue_depth", batcher.len() as f64);
     let batch = batcher.drain_batch();
     shared.metrics.observe_s("batch_size", batch.len() as f64);
-    // A worker serves its sub-batch sequentially, so a drained burst is
-    // split across the pool instead of serializing onto one worker while
-    // the rest sit idle.
-    let per = batch.len().div_ceil(n_workers).max(1);
-    let mut remaining = batch;
-    while !remaining.is_empty() {
-        let tail = remaining.split_off(per.min(remaining.len()));
-        let sub = remaining;
-        remaining = tail;
-        shared.metrics.incr("batches_dispatched");
-        if work_tx.send(sub).is_err() {
+    shared.metrics.incr("batches_dispatched");
+    // Request-granular hand-off: each worker pulls exactly what it can
+    // schedule, so a drained burst distributes itself across the pool
+    // instead of serializing onto one worker while the rest sit idle.
+    for item in batch {
+        if work_tx.send(item).is_err() {
             // every worker died; the dropped requests close their respond
             // channels, failing the callers' recv
             shared.metrics.incr("batches_dropped");
@@ -566,21 +691,21 @@ fn dispatch(
     }
 }
 
-fn worker_loop(handler: &mut Handler, work_rx: &Mutex<Receiver<Batch>>, shared: &Shared) {
+fn worker_loop(handler: &mut Handler, work_rx: &Mutex<Receiver<WorkItem>>, shared: &Shared) {
     loop {
         // Standard shared-receiver pattern: the lock is held across the
         // blocking recv, which just moves the other idle workers' wait
         // from the channel to the mutex.
-        let batch = match work_rx.lock().unwrap().recv() {
-            Ok(b) => b,
+        let item = match work_rx.lock().unwrap().recv() {
+            Ok(item) => item,
             Err(_) => break, // router hung up: no more work is coming
         };
-        serve_batch(handler, batch, shared);
+        serve_one(handler, item, shared);
     }
 }
 
-fn serve_batch(handler: &mut Handler, batch: Batch, shared: &Shared) {
-    for (req, enq) in batch {
+fn serve_one(handler: &mut Handler, (req, enq): WorkItem, shared: &Shared) {
+    {
         let queue_s = enq.elapsed().as_secs_f64();
         // A panicking handler must not take the worker (and with it the
         // whole pool, silently) down: contain it, fail the one request.
@@ -595,6 +720,14 @@ fn serve_batch(handler: &mut Handler, batch: Batch, shared: &Shared) {
                 // `metrics_json` breaks serving time down by plan stage.
                 for (name, secs) in &s.stages {
                     shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+                }
+                // A serial handler has no per-token emission points; honor
+                // a streaming request by delivering the finished answer
+                // (then closing the sink when `req` drops below).
+                if let Some(stream) = &req.stream {
+                    for &tok in &s.answer {
+                        let _ = stream.send(tok);
+                    }
                 }
                 let _ = req.respond.send(Response {
                     answer: s.answer,
@@ -611,15 +744,256 @@ fn serve_batch(handler: &mut Handler, batch: Batch, shared: &Shared) {
             Err(panic) => {
                 shared.metrics.incr("requests_failed");
                 shared.metrics.incr("handler_panics");
-                let msg = panic
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| panic.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "non-string panic payload".into());
-                eprintln!("[server] handler panicked ({msg}); worker continues");
+                eprintln!(
+                    "[server] handler panicked ({}); worker continues",
+                    panic_message(&panic)
+                );
             }
         }
     }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
+// -- the continuous-batching worker ------------------------------------------
+
+/// One in-flight (prepped) query parked in a scheduled worker.
+struct InflightQuery {
+    task: QueryTask,
+    respond: SyncSender<Response>,
+    stream: Option<TokenSink>,
+    queue_s: f64,
+    /// Wall clock of the previous token emission (drives the `tbt` series).
+    last_emit: Option<Instant>,
+    /// A decode-phase error retires the task without a response (the
+    /// caller's `recv` fails, like a failed serial request).
+    failed: bool,
+}
+
+/// The scheduled worker: prep each incoming request to its first token,
+/// park it, and interleave one decode step per in-flight query per tick.
+/// Exits only when the router has hung up AND every parked task has been
+/// driven to completion — shutdown never strands a decode or leaves a
+/// stream channel open.
+fn scheduled_worker_loop(
+    pipeline: &Pipeline,
+    store: &Arc<ChunkStore>,
+    max_interleave: usize,
+    work_rx: &Mutex<Receiver<WorkItem>>,
+    shared: &Shared,
+) {
+    let mut sched: DecodeScheduler<InflightQuery> = DecodeScheduler::new(max_interleave);
+    let width = sched.max_interleave(); // clamped to >= 1
+    let mut pending: VecDeque<WorkItem> = VecDeque::new();
+    let mut idle_park = WORKER_IDLE_POLL;
+    let mut disconnected = false;
+    loop {
+        // Acquire work up to the interleave width and NEVER beyond it: the
+        // excess stays in the shared channel where a sibling worker takes
+        // it immediately, instead of stranding behind this worker's long
+        // decodes in a private queue.  Never a blocking recv — the receiver
+        // mutex must stay available to busy siblings (see WORKER_IDLE_POLL).
+        while sched.len() + pending.len() < width {
+            match work_rx.lock().unwrap().try_recv() {
+                Ok(item) => {
+                    pending.push_back(item);
+                    idle_park = WORKER_IDLE_POLL;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if sched.is_empty() && pending.is_empty() {
+            // Fully drained: exit once the router has hung up, otherwise
+            // park with backoff so an idle pool is not a busy loop.
+            if disconnected {
+                break;
+            }
+            std::thread::sleep(idle_park);
+            idle_park = (idle_park * 2).min(WORKER_IDLE_POLL_MAX);
+            continue;
+        }
+        // Admission happens BETWEEN ticks (prep is the expensive phase —
+        // it runs here, never inside a tick).
+        while sched.has_capacity() {
+            let Some((req, enq)) = pending.pop_front() else { break };
+            if let Some(q) = prep_query(pipeline, store, req, enq, shared) {
+                sched
+                    .admit(q)
+                    .unwrap_or_else(|_| panic!("admission after capacity check"));
+            }
+        }
+        // One interleaved decode tick across every in-flight task.
+        if !sched.is_empty() {
+            tick_decode(pipeline, &mut sched, shared);
+        }
+    }
+}
+
+/// Prep one request (chunk lifecycle + plan stages + prompt pass) into a
+/// parked [`InflightQuery`].  Errors and panics are contained: they fail
+/// this one request (dropping its respond/stream channels) and the worker
+/// moves on.
+fn prep_query(
+    pipeline: &Pipeline,
+    store: &ChunkStore,
+    req: Request,
+    enq: Instant,
+    shared: &Shared,
+) -> Option<InflightQuery> {
+    let queue_s = enq.elapsed().as_secs_f64();
+    let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<QueryTask> {
+        // The store lock lives inside get/insert; the query is prepped over
+        // pinned Arcs with no lock held.
+        let (chunks, _) = pipeline.prepare_chunks(store, &req.episode.chunks)?;
+        pipeline.begin_plan(&chunks, &req.episode.prompt, &req.plan)
+    }));
+    match outcome {
+        Ok(Ok(task)) => Some(InflightQuery {
+            task,
+            respond: req.respond,
+            stream: req.stream,
+            queue_s,
+            last_emit: None,
+            failed: false,
+        }),
+        Ok(Err(e)) => {
+            shared.metrics.incr("requests_failed");
+            eprintln!("[server] request failed: {e:#}");
+            None
+        }
+        Err(panic) => {
+            shared.metrics.incr("requests_failed");
+            shared.metrics.incr("handler_panics");
+            eprintln!(
+                "[server] prep panicked ({}); worker continues",
+                panic_message(&panic)
+            );
+            None
+        }
+    }
+}
+
+/// One decode tick: emit every in-flight task's pending token (streamed at
+/// the moment of emission — this is where measured TTFT/TBT are observed),
+/// advance all of them with ONE batched `decode_step_many`, then retire and
+/// answer whatever finished.
+fn tick_decode(
+    pipeline: &Pipeline,
+    sched: &mut DecodeScheduler<InflightQuery>,
+    shared: &Shared,
+) {
+    let t0 = Instant::now();
+    sched.begin_tick();
+    // Phase 1 (host-only): emissions.
+    for q in sched.tasks_mut() {
+        if q.failed {
+            continue;
+        }
+        if let StepOutcome::Emitted { token, .. } = q.task.begin_step() {
+            if let Some(stream) = &q.stream {
+                // A dropped receiver just means nobody is listening.
+                let _ = stream.send(token);
+            }
+            let now = Instant::now();
+            if let Some(prev) = q.last_emit.replace(now) {
+                shared
+                    .metrics
+                    .observe_s("tbt", now.duration_since(prev).as_secs_f64());
+            }
+        }
+    }
+    // Phase 2: one batched model call for every task that wants another
+    // token.  Output order == slate order (both passes walk the scheduler's
+    // stable tick slate).
+    let items: Vec<DecodeBatchItem> =
+        sched.tasks().filter_map(|q| q.task.pending_model()).collect();
+    let outs = if items.is_empty() {
+        Ok(Vec::new())
+    } else {
+        shared.metrics.incr("decode_ticks");
+        shared.metrics.observe_s("tick_width", items.len() as f64);
+        pipeline.session.decode_step_many(&items)
+    };
+    drop(items); // release the slate borrows before mutating tasks
+    match outs {
+        Ok(outs) => {
+            let mut outs = outs.into_iter();
+            for q in sched.tasks_mut() {
+                if q.task.has_pending_model() {
+                    let out = outs.next().expect("one decode output per pending task");
+                    if let Err(e) = q.task.complete_step(&out) {
+                        eprintln!("[server] decode step failed: {e:#}");
+                        q.failed = true;
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            // The batch failed as a unit; every task that had work in it
+            // fails (their callers' recv errors), the others keep going.
+            eprintln!("[server] batched decode failed: {e:#}");
+            for q in sched.tasks_mut() {
+                if q.task.has_pending_model() {
+                    q.failed = true;
+                }
+            }
+        }
+    }
+    // Attribute the tick's wall time evenly across the slate (the batched
+    // analog of the serial per-step decode timer).
+    let share = t0.elapsed().as_secs_f64() / sched.len().max(1) as f64;
+    for q in sched.tasks_mut() {
+        q.task.record_decode_s(share);
+    }
+    for q in sched.end_tick(|q| q.failed || q.task.is_finished()) {
+        finish_query(q, shared);
+    }
+}
+
+/// Retire one query: record serving metrics and deliver the final
+/// [`Response`].  Dropping the stream sender here closes the token channel
+/// — the receiver drains any buffered tokens and then observes end-of-
+/// stream.  Failed tasks deliver nothing: dropping `respond` fails the
+/// caller's `recv`, exactly like a failed serial request.
+fn finish_query(q: InflightQuery, shared: &Shared) {
+    let InflightQuery { task, respond, stream, queue_s, failed, .. } = q;
+    if failed {
+        shared.metrics.incr("requests_failed");
+        return;
+    }
+    let r = task.into_result();
+    let mut stages = r.timing.stages.clone();
+    stages.push(("prompt", r.timing.prompt_s));
+    stages.push(("decode", r.timing.decode_s));
+    let ttft_s = r.timing.ttft_s();
+    shared.metrics.incr("requests_ok");
+    // Measured wall-clock reservoirs (emission-stamped), plus the
+    // historical stage-sum for attribution comparisons.
+    shared.metrics.observe_s("ttft", ttft_s);
+    shared.metrics.observe_s("ttft_stage_sum", r.timing.stage_ttft_s());
+    shared.metrics.observe_s("total", r.timing.total_s);
+    shared.metrics.observe_s("queue", queue_s);
+    for (name, secs) in &stages {
+        shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+    }
+    drop(stream);
+    let _ = respond.send(Response {
+        answer: r.answer,
+        ttft_s,
+        total_s: r.timing.total_s,
+        queue_s,
+        stages,
+    });
 }
 
 #[cfg(test)]
@@ -651,6 +1025,7 @@ mod tests {
                 episode: test_episode(),
                 plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
+                stream: None,
             })
             .unwrap();
         rrx
@@ -710,6 +1085,7 @@ mod tests {
             // max_batch 1 so the two requests land in separate batches.
             batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
             queue_cap: 16,
+            ..ServerConfig::default()
         };
         let server = Server::spawn_handlers(
             vec![
@@ -749,6 +1125,7 @@ mod tests {
         let cfg = ServerConfig {
             batch: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
             queue_cap: 16,
+            ..ServerConfig::default()
         };
         let server = Server::spawn_handlers(
             vec![
@@ -843,6 +1220,7 @@ mod tests {
         let cfg = ServerConfig {
             batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
             queue_cap: 16,
+            ..ServerConfig::default()
         };
         let server = Server::spawn_handlers_with_prefetch(vec![handler], vec![warm_fn], cfg);
         let mk_req = |tag: i32| Episode {
@@ -854,11 +1232,11 @@ mod tests {
         };
         let (rtx1, rrx1) = sync_channel(1);
         server
-            .submit(Request { episode: mk_req(10), plan: MethodSpec::Baseline.to_plan(), respond: rtx1 })
+            .submit(Request { episode: mk_req(10), plan: MethodSpec::Baseline.to_plan(), respond: rtx1, stream: None })
             .unwrap();
         let (rtx2, rrx2) = sync_channel(1);
         server
-            .submit(Request { episode: mk_req(20), plan: MethodSpec::Baseline.to_plan(), respond: rtx2 })
+            .submit(Request { episode: mk_req(20), plan: MethodSpec::Baseline.to_plan(), respond: rtx2, stream: None })
             .unwrap();
         // Wait for the prefetcher to warm the second request's chunks, then
         // release the worker for both requests.
@@ -911,6 +1289,7 @@ mod tests {
                         },
                         plan: MethodSpec::Baseline.to_plan(),
                         respond: rtx,
+                        stream: None,
                     })
                     .unwrap();
                 rrx
@@ -987,6 +1366,7 @@ mod tests {
         let cfg = ServerConfig {
             batch: BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
             queue_cap: 1,
+            ..ServerConfig::default()
         };
         let server = Server::spawn_handlers(vec![handler], cfg);
         let mut rejected = 0u64;
@@ -997,6 +1377,7 @@ mod tests {
                 episode: test_episode(),
                 plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
+                stream: None,
             }) {
                 Ok(()) => receivers.push(rrx),
                 Err(_) => {

@@ -41,6 +41,7 @@ USAGE:
                 [--workers W] [--shards S] [--cache-mb MB] [--queue-cap N]
                 [--max-batch N] [--batch-window-ms MS]
                 [--spill-dir DIR] [--spill-mb MB] [--prefetch-threads N]
+                [--stream] [--max-interleave N]
   repro bench   table1|...|table6|fig2|fig3|fig4|ablation|all [--samples N]
   repro cache   save|load [--path kvcache.bin] [--docs N]
 
@@ -62,7 +63,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "warmup"])?;
+    let args = Args::from_env(&["verbose", "warmup", "stream"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -282,6 +283,9 @@ fn serve(args: &Args) -> Result<()> {
     let queue_cap = args.usize_or("queue-cap", serve_defaults.queue_cap)?;
     let prefetch_threads =
         args.usize_or("prefetch-threads", serve_defaults.prefetch_threads)?;
+    let max_interleave =
+        args.usize_or("max-interleave", serve_defaults.max_interleave)?.max(1);
+    let stream = args.flag("stream");
     let spill_dir = args
         .get("spill-dir")
         .map(std::path::PathBuf::from)
@@ -330,12 +334,13 @@ fn serve(args: &Args) -> Result<()> {
         pipelines,
         prefetch_pipelines,
         store,
-        ServerConfig { batch, queue_cap },
+        ServerConfig { batch, queue_cap, max_interleave },
     );
 
     println!(
         "serving {} requests (poisson rate {}/s, {} docs, plan {} [{}], {n_workers} workers, \
-         {shards} shards, {prefetch_threads} prefetchers, spill {})...",
+         {shards} shards, {prefetch_threads} prefetchers, spill {}, interleave {max_interleave}, \
+         stream {})...",
         cfg.n_requests,
         cfg.rate,
         cfg.doc_pool,
@@ -344,11 +349,19 @@ fn serve(args: &Args) -> Result<()> {
         spill_dir
             .as_ref()
             .map(|d| d.display().to_string())
-            .unwrap_or_else(|| "off".into())
+            .unwrap_or_else(|| "off".into()),
+        if stream { "on" } else { "off" },
     );
+    // Submissions are paced by the trace but NOT awaited in line — requests
+    // overlap across workers and, with interleaved decode, within a worker.
+    struct Inflight {
+        gold: Vec<i32>,
+        resp: std::sync::mpsc::Receiver<infoflow_kv::coordinator::Response>,
+        tokens: Option<std::sync::mpsc::Receiver<i32>>,
+    }
     let t0 = std::time::Instant::now();
-    let mut ok = 0usize;
-    let mut f1_sum = 0.0;
+    let mut inflight: Vec<Inflight> = Vec::new();
+    let mut rejected = 0usize;
     for req in trace {
         // pace according to the trace
         let wait = req.at_s - t0.elapsed().as_secs_f64();
@@ -356,21 +369,60 @@ fn serve(args: &Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs_f64(wait));
         }
         let gold = req.episode.answer.clone();
-        match server.query_plan(req.episode, plan.clone()) {
+        let submitted = if stream {
+            server
+                .query_plan_stream(req.episode, plan.clone())
+                .map(|(tokens, resp)| Inflight { gold, resp, tokens: Some(tokens) })
+        } else {
+            let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+            server
+                .submit(infoflow_kv::coordinator::Request {
+                    episode: req.episode,
+                    plan: plan.clone(),
+                    respond: rtx,
+                    stream: None,
+                })
+                .map(|()| Inflight { gold, resp: rrx, tokens: None })
+        };
+        match submitted {
+            Ok(p) => inflight.push(p),
+            Err(e) => {
+                rejected += 1;
+                eprintln!("request rejected: {e}");
+            }
+        }
+    }
+    let mut ok = 0usize;
+    let mut f1_sum = 0.0;
+    let mut streamed = 0usize;
+    for p in inflight {
+        match p.resp.recv() {
             Ok(resp) => {
                 ok += 1;
-                f1_sum += infoflow_kv::eval::token_f1(&resp.answer, &gold);
+                f1_sum += infoflow_kv::eval::token_f1(&resp.answer, &p.gold);
+                if let Some(tokens) = &p.tokens {
+                    // The worker closed the stream before sending the final
+                    // response, so this drains without blocking.
+                    let toks: Vec<i32> = tokens.iter().collect();
+                    streamed += toks.len();
+                    if toks != resp.answer {
+                        eprintln!("stream/answer mismatch: {toks:?} vs {:?}", resp.answer);
+                    }
+                }
             }
-            Err(e) => eprintln!("request failed: {e}"),
+            Err(_) => eprintln!("request failed (worker dropped it)"),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "done: {ok}/{} ok in {wall:.1}s ({:.2} req/s), mean F1 {:.3}",
+        "done: {ok}/{} ok ({rejected} rejected) in {wall:.1}s ({:.2} req/s), mean F1 {:.3}",
         cfg.n_requests,
         ok as f64 / wall,
         f1_sum / ok.max(1) as f64
     );
+    if stream {
+        println!("streamed {streamed} tokens across {ok} responses");
+    }
     println!("metrics: {}", server.metrics_json().to_string_pretty());
     server.shutdown();
     Ok(())

@@ -25,10 +25,21 @@
 //! ```
 //!
 //! The stage sequence is data, not code: a [`QueryPlan`] names the policies
-//! and [`Pipeline::answer_plan`] drives them generically, recording one
+//! and [`Pipeline::begin_plan`] drives them generically, recording one
 //! [`Timing`] entry per stage.  The historical [`MethodSpec`] entry points
 //! ([`Pipeline::answer`], [`Pipeline::answer_with_rows`]) remain as thin
 //! facades that lower onto plans.
+//!
+//! **Resumable decode**: `begin_plan` runs the prep phase (everything up to
+//! the first answer token's logits) and returns a [`QueryTask`] — a parked
+//! query whose [`DecodeState`] owns the resident decode KV and emits ONE
+//! token per [`QueryTask::step`].  A continuous-batching scheduler (see
+//! `coordinator::scheduler`) interleaves `step()` across many in-flight
+//! tasks, using the split-phase API ([`QueryTask::begin_step`] /
+//! [`QueryTask::pending_model`] / [`QueryTask::complete_step`]) so one
+//! batched `decode_step_many` call advances every task per tick.
+//! [`Pipeline::answer_plan`] survives as the drive-to-completion wrapper:
+//! token-for-token identical to the pre-refactor monolith.
 //!
 //! Memory architecture: each worker's `Pipeline` owns a
 //! [`BufferPool`](crate::kvcache::BufferPool) of reusable assembly buffers,
@@ -47,7 +58,7 @@ use crate::config::MethodSpec;
 use crate::geometry::{self, RopeGeometry};
 use crate::kvcache::{AssembledContext, BufferPool, ChunkKv, ChunkStore};
 use crate::plan::{Explicit, PlanBuilder, PrefillMode, QueryPlan, StageCtx};
-use crate::runtime::exec::ModelSession;
+use crate::runtime::exec::{DecodeBatchItem, DecodeOut, ModelSession};
 use crate::runtime::resident::ResidentDecodeKv;
 use crate::tensor::{TensorF, TensorI};
 use crate::vocab::{self, Vocab};
@@ -64,6 +75,12 @@ pub struct Timing {
     pub prompt_s: f64,
     pub decode_s: f64,
     pub total_s: f64,
+    /// Measured wall-clock seconds from query start to the FIRST answer
+    /// token's emission.  Under interleaved decode a parked task's first
+    /// token can trail the prep stages by whole scheduler ticks, so stage
+    /// sums no longer bound TTFT — this is the real number.  `None` until a
+    /// token has been emitted.
+    pub first_token_s: Option<f64>,
     /// Per-stage seconds, keyed by stage name, in execution order.
     pub stages: Vec<(&'static str, f64)>,
 }
@@ -102,8 +119,17 @@ impl Timing {
         self.stage_s("recompute")
     }
 
-    /// Time to first token: everything before decode of the 2nd token.
+    /// Time to first token.  Prefers the measured wall-clock first-token
+    /// time (recorded at emission); falls back to the historical stage-sum
+    /// estimate when no token was ever emitted (e.g. an immediate EOS).
     pub fn ttft_s(&self) -> f64 {
+        self.first_token_s.unwrap_or_else(|| self.stage_ttft_s())
+    }
+
+    /// The historical stage-sum TTFT estimate: everything before decode of
+    /// the 2nd token.  Kept for stage-attribution analysis; under
+    /// interleaved decode this no longer bounds the measured TTFT.
+    pub fn stage_ttft_s(&self) -> f64 {
         self.chunk_prefill_s
             + self.stages.iter().map(|(_, s)| s).sum::<f64>()
             + self.prompt_s
@@ -123,6 +149,284 @@ pub struct QueryResult {
     pub chunk_order: Vec<usize>,
 }
 
+/// Outcome of one [`QueryTask::step`] (or split-phase `begin_step`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// One answer token was emitted.  `finished: true` means the task
+    /// retired on this very step (last requested token, or the model just
+    /// produced EOS) — no further `step()` will emit anything.
+    Emitted { token: i32, finished: bool },
+    /// The task was already finished; nothing was produced.
+    Finished,
+}
+
+/// What phase 1 of a split step decided (see [`DecodeState::begin_step`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase1 {
+    /// Already finished (or terminated without emitting: EOS / zero-length
+    /// answer budget).
+    Finished,
+    /// Emitted the final token; no model work follows.
+    Last { token: i32 },
+    /// Emitted a token AND the model must now be stepped with `tok` at
+    /// `pos` before the next emission (the pending-model phase).
+    Model { token: i32 },
+}
+
+/// The resumable decode half of a query: the resident KV plus exactly the
+/// loop state of the reference [`greedy_decode`], advanced one token per
+/// `step()` instead of run to completion.  Splitting a step into
+/// `begin_step` (emit, host-only) and `complete_step` (fold one
+/// [`DecodeOut`] back in) lets a scheduler stream the emission immediately
+/// and batch the model calls of many tasks into one `decode_step_many`.
+pub struct DecodeState {
+    kv: ResidentDecodeKv,
+    bucket: usize,
+    answer: Vec<i32>,
+    answer_len: usize,
+    /// The token the next `begin_step` will emit (greedy argmax of the last
+    /// model call, or the prompt pass's first token).
+    next_tok: i32,
+    /// Set between `begin_step` returning [`Phase1::Model`] and the
+    /// matching `complete_step`: the (tok, pos) the model must consume.
+    pending: Option<(i32, i32)>,
+    done: bool,
+    /// EOS terminates decode (the reference semantics).  Load-generation
+    /// harnesses flip this off to guarantee long decodes.
+    stop_on_eos: bool,
+}
+
+impl DecodeState {
+    fn new(kv: ResidentDecodeKv, bucket: usize, first_tok: i32, answer_len: usize) -> DecodeState {
+        DecodeState {
+            kv,
+            bucket,
+            answer: Vec::with_capacity(answer_len),
+            answer_len,
+            next_tok: first_tok,
+            pending: None,
+            done: false,
+            stop_on_eos: true,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.done
+    }
+
+    pub fn answer(&self) -> &[i32] {
+        &self.answer
+    }
+
+    /// Phase 1: emit the pending token (if the task is still live).  When
+    /// the result is [`Phase1::Model`], a model call described by
+    /// [`DecodeState::pending_model`] MUST complete (via `complete_step`)
+    /// before the next `begin_step`.
+    fn begin_step(&mut self) -> Phase1 {
+        assert!(self.pending.is_none(), "begin_step before completing the prior step");
+        if self.done {
+            return Phase1::Finished;
+        }
+        if self.answer.len() >= self.answer_len
+            || (self.stop_on_eos && self.next_tok == vocab::EOS)
+        {
+            self.done = true;
+            return Phase1::Finished;
+        }
+        let token = self.next_tok;
+        self.answer.push(token);
+        if self.answer.len() == self.answer_len {
+            self.done = true;
+            return Phase1::Last { token };
+        }
+        self.pending = Some((token, self.kv.next_pos));
+        Phase1::Model { token }
+    }
+
+    /// The batched-decode descriptor of the model work `begin_step` queued
+    /// (None when this task has nothing pending this tick).
+    pub fn pending_model(&self) -> Option<DecodeBatchItem<'_>> {
+        self.pending.map(|(tok, pos)| DecodeBatchItem {
+            bucket: self.bucket,
+            tok,
+            pos,
+            kv: &self.kv,
+        })
+    }
+
+    /// Phase 2: fold the model's output back in — append the new KV row and
+    /// greedily pick the next token.  Mirrors the step closure the
+    /// reference `greedy_decode` drives.
+    fn complete_step(&mut self, out: &DecodeOut) -> Result<()> {
+        let (_tok, _pos) = self
+            .pending
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("complete_step without a pending model step"))?;
+        self.kv.append(&out.new_k, &out.new_v)?;
+        self.next_tok = out.logits.argmax() as i32;
+        // Greedy EOS is never emitted; retiring here (instead of on the
+        // next begin_step) saves the scheduler a no-op tick.  Identical to
+        // the reference: it would exit its loop at the same point.
+        if self.stop_on_eos && self.next_tok == vocab::EOS {
+            self.done = true;
+        }
+        Ok(())
+    }
+
+}
+
+/// A query parked between prep and completion: prep stage outputs plus the
+/// resumable [`DecodeState`].  Produced by [`Pipeline::begin_plan`]; driven
+/// either to completion in place ([`QueryTask::drive`], what `answer_plan`
+/// does) or one token at a time by a decode scheduler.
+pub struct QueryTask {
+    state: DecodeState,
+    timing: Timing,
+    t_start: Instant,
+    selected: Vec<usize>,
+    selected_positions: Vec<i64>,
+    chunk_order: Vec<usize>,
+}
+
+impl QueryTask {
+    pub fn is_finished(&self) -> bool {
+        self.state.is_finished()
+    }
+
+    /// Tokens emitted so far (the full answer once finished).
+    pub fn answer(&self) -> &[i32] {
+        self.state.answer()
+    }
+
+    /// Wall-clock seconds since this query's prep began.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t_start.elapsed().as_secs_f64()
+    }
+
+    fn note_emit(&mut self) {
+        if self.timing.first_token_s.is_none() {
+            self.timing.first_token_s = Some(self.t_start.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Emit one token and advance the model by one decode step.  The
+    /// first-token stamp lands at EMISSION (before the model call computes
+    /// the next token), exactly like the scheduler's split-phase path, so
+    /// `ttft` means the same thing on both.
+    pub fn step(&mut self, session: &ModelSession) -> Result<StepOutcome> {
+        let t0 = Instant::now();
+        let out = self.begin_step();
+        let result = if let StepOutcome::Emitted { token, finished: false } = out {
+            let (tok, pos) = self
+                .state
+                .pending
+                .expect("an unfinished emission queues model work");
+            let step = session.decode_step(self.state.bucket, tok, pos, &self.state.kv)?;
+            self.state.complete_step(&step)?;
+            StepOutcome::Emitted { token, finished: self.state.done }
+        } else {
+            out
+        };
+        self.timing.decode_s += t0.elapsed().as_secs_f64();
+        Ok(result)
+    }
+
+    /// Split-phase tick, part 1: emit this task's pending token.  Host-only
+    /// (stream the token immediately); the model work it queues is exposed
+    /// by [`QueryTask::pending_model`].
+    pub fn begin_step(&mut self) -> StepOutcome {
+        match self.state.begin_step() {
+            Phase1::Finished => StepOutcome::Finished,
+            Phase1::Last { token } => {
+                self.note_emit();
+                StepOutcome::Emitted { token, finished: true }
+            }
+            Phase1::Model { token } => {
+                self.note_emit();
+                StepOutcome::Emitted { token, finished: false }
+            }
+        }
+    }
+
+    /// Split-phase tick: the queued model call, if any (see
+    /// [`DecodeState::pending_model`]).
+    pub fn pending_model(&self) -> Option<DecodeBatchItem<'_>> {
+        self.state.pending_model()
+    }
+
+    pub fn has_pending_model(&self) -> bool {
+        self.state.pending.is_some()
+    }
+
+    /// Split-phase tick, part 2: fold one batched decode output back in.
+    pub fn complete_step(&mut self, out: &DecodeOut) -> Result<()> {
+        self.state.complete_step(out)
+    }
+
+    /// Attribute `seconds` of (possibly shared, batched) model time to this
+    /// task's decode phase — the scheduler's analog of the per-step timer.
+    pub fn record_decode_s(&mut self, seconds: f64) {
+        self.timing.decode_s += seconds;
+    }
+
+    /// Run the remaining decode to completion on `session` (the serial
+    /// drive `answer_plan` uses).
+    pub fn drive(&mut self, session: &ModelSession) -> Result<()> {
+        loop {
+            match self.step(session)? {
+                StepOutcome::Finished | StepOutcome::Emitted { finished: true, .. } => {
+                    return Ok(())
+                }
+                StepOutcome::Emitted { finished: false, .. } => {}
+            }
+        }
+    }
+
+    /// Load-generation knob (benches / stress tests): request exactly `n`
+    /// answer tokens, clamped to the resident buffer's remaining capacity.
+    /// Production callers keep the vocab's answer length.
+    pub fn with_answer_len(mut self, n: usize) -> QueryTask {
+        self.state.answer_len = n.min(self.state.kv.remaining_capacity() + 1);
+        self
+    }
+
+    /// Load-generation knob: treat EOS as an ordinary token so decode
+    /// always runs the full answer length (benches want deterministic
+    /// long/short asymmetry, not content).
+    pub fn decode_exhaustively(mut self) -> QueryTask {
+        self.state.stop_on_eos = false;
+        self
+    }
+
+    /// Finish the query: stamps the total wall clock and packages the
+    /// accumulated prep/decode bookkeeping as a [`QueryResult`].
+    pub fn into_result(mut self) -> QueryResult {
+        self.timing.total_s = self.t_start.elapsed().as_secs_f64();
+        QueryResult {
+            answer: self.state.answer,
+            timing: self.timing,
+            selected: self.selected,
+            selected_positions: self.selected_positions,
+            chunk_order: self.chunk_order,
+        }
+    }
+
+    /// The per-stage timing accumulated so far (prep stages + decode).
+    pub fn timing(&self) -> &Timing {
+        &self.timing
+    }
+}
+
+/// What the prep phase hands the decode state machine.
+struct Prep {
+    kv: ResidentDecodeKv,
+    bucket: usize,
+    first_logits: TensorF,
+    selected: Vec<usize>,
+    selected_positions: Vec<i64>,
+    chunk_order: Vec<usize>,
+}
+
 /// Pipeline: a model session + vocab + per-worker buffer pool, stateless
 /// across queries apart from the recycled scratch buffers (the chunk store
 /// is passed in so callers control sharing/eviction).
@@ -135,12 +439,13 @@ pub struct Pipeline {
     pub pool: BufferPool,
 }
 
-/// Greedy token loop, pure over a `step` closure so the termination rules
-/// are unit-testable without a model session.  EOS is a terminator, never
-/// an emitted token (a trailing EOS in the answer pollutes token-match
-/// eval); a first-token EOS yields an empty answer.  `step` is called once
-/// per token actually needed beyond the first.
-fn greedy_decode(
+/// Greedy token loop, pure over a `step` closure — the REFERENCE SPEC the
+/// incremental [`DecodeState`] must match token-for-token (a property test
+/// below diffs them over scripted token streams).  EOS is a terminator,
+/// never an emitted token (a trailing EOS in the answer pollutes
+/// token-match eval); a first-token EOS yields an empty answer.  `step` is
+/// called once per token actually needed beyond the first.
+pub fn greedy_decode(
     first: i32,
     answer_len: usize,
     mut step: impl FnMut(i32) -> Result<i32>,
@@ -197,26 +502,48 @@ impl Pipeline {
         Ok((out, spent))
     }
 
-    /// Answer one query over prepared chunks by driving the plan's stages:
-    /// `assemble → [reorder] → [score] → [select → recompute] → decode`.
-    /// This is the one method-dispatch point in the serving stack.
+    /// Run one query's PREP phase — the plan's stages `assemble → [reorder]
+    /// → [score] → [select → recompute] → prompt pass` — and park it as a
+    /// resumable [`QueryTask`] holding the resident decode KV and the first
+    /// answer token.  This is the one method-dispatch point in the serving
+    /// stack; schedulers interleave the returned tasks' `step()`s.
+    pub fn begin_plan(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        plan: &QueryPlan,
+    ) -> Result<QueryTask> {
+        let t_start = Instant::now();
+        let mut timing = Timing::default();
+        let prep = match plan.prefill {
+            PrefillMode::Full => self.prep_baseline(chunks, prompt_body, &mut timing)?,
+            PrefillMode::Chunked => {
+                self.prep_staged(chunks, prompt_body, plan, &mut timing)?
+            }
+        };
+        let first = prep.first_logits.argmax() as i32;
+        Ok(QueryTask {
+            state: DecodeState::new(prep.kv, prep.bucket, first, self.vocab.answer_len),
+            timing,
+            t_start,
+            selected: prep.selected,
+            selected_positions: prep.selected_positions,
+            chunk_order: prep.chunk_order,
+        })
+    }
+
+    /// Answer one query over prepared chunks: prep + drive-to-completion.
+    /// Token-for-token identical to stepping the [`QueryTask`] through a
+    /// scheduler — this wrapper IS `begin_plan` + `drive`.
     pub fn answer_plan(
         &self,
         chunks: &[Arc<ChunkKv>],
         prompt_body: &[i32],
         plan: &QueryPlan,
     ) -> Result<QueryResult> {
-        let t_start = Instant::now();
-        let mut timing = Timing::default();
-        let mut res = match plan.prefill {
-            PrefillMode::Full => self.run_baseline(chunks, prompt_body, &mut timing)?,
-            PrefillMode::Chunked => {
-                self.run_staged(chunks, prompt_body, plan, &mut timing)?
-            }
-        };
-        timing.total_s = t_start.elapsed().as_secs_f64();
-        res.timing = timing;
-        Ok(res)
+        let mut task = self.begin_plan(chunks, prompt_body, plan)?;
+        task.drive(&self.session)?;
+        Ok(task.into_result())
     }
 
     /// Answer one query under a legacy [`MethodSpec`] — a deprecated facade
@@ -248,12 +575,12 @@ impl Pipeline {
     }
 
     // -- full-context prefill (the paper's Baseline) -------------------------
-    fn run_baseline(
+    fn prep_baseline(
         &self,
         chunks: &[Arc<ChunkKv>],
         prompt_body: &[i32],
         timing: &mut Timing,
-    ) -> Result<QueryResult> {
+    ) -> Result<Prep> {
         let d = self.dims().clone();
         let n: usize = chunks.iter().map(|c| c.len()).sum();
         let bucket = self.session.runtime.manifest.bucket_for(n)?;
@@ -292,13 +619,12 @@ impl Pipeline {
         timing.prompt_s = t0.elapsed().as_secs_f64();
 
         let next_pos = (n + d.prompt_len) as i32;
-        let mut kv =
+        let kv =
             ResidentDecodeKv::from_parts(&d, &out.k, &out.v, &pos, &valid, next_pos)?;
-        let answer = self.decode_answer(bucket, &mut kv, &out.last_logits, timing)?;
-        Ok(QueryResult {
-            answer,
-            // placeholder: answer_plan installs the accumulated Timing
-            timing: Timing::default(),
+        Ok(Prep {
+            kv,
+            bucket,
+            first_logits: out.last_logits,
             selected: vec![],
             selected_positions: vec![],
             chunk_order: (0..chunks.len()).collect(),
@@ -306,13 +632,13 @@ impl Pipeline {
     }
 
     // -- the chunked stage driver: every non-baseline plan -------------------
-    fn run_staged(
+    fn prep_staged(
         &self,
         chunks: &[Arc<ChunkKv>],
         prompt_body: &[i32],
         plan: &QueryPlan,
         timing: &mut Timing,
-    ) -> Result<QueryResult> {
+    ) -> Result<Prep> {
         let d = self.dims().clone();
         let n: usize = chunks.iter().map(|c| c.len()).sum();
         let bucket = self.session.runtime.manifest.bucket_for(n)?;
@@ -386,17 +712,15 @@ impl Pipeline {
 
         // Promote the context into the resident decode literal (the one
         // full-KV copy of the query), then give the scratch buffer back to
-        // the pool before the long decode loop.
-        let mut kv = ResidentDecodeKv::from_context(
+        // the pool before the (possibly long-parked) decode phase.
+        let kv = ResidentDecodeKv::from_context(
             &d, &ctx, &score_out.prompt_k, &score_out.prompt_v, &decode_layout.prompt_pos,
         )?;
         drop(ctx);
-        let answer =
-            self.decode_answer(bucket, &mut kv, &score_out.last_logits, timing)?;
-        Ok(QueryResult {
-            answer,
-            // placeholder: answer_plan installs the accumulated Timing
-            timing: Timing::default(),
+        Ok(Prep {
+            kv,
+            bucket,
+            first_logits: score_out.last_logits,
             selected,
             selected_positions,
             chunk_order,
@@ -514,27 +838,6 @@ impl Pipeline {
         Ok(())
     }
 
-    /// Greedy decode: first token from the prompt logits, then resident
-    /// decode steps (one appended KV row per token).
-    fn decode_answer(
-        &self,
-        bucket: usize,
-        kv: &mut ResidentDecodeKv,
-        first_logits: &TensorF,
-        timing: &mut Timing,
-    ) -> Result<Vec<i32>> {
-        let answer_len = self.vocab.answer_len;
-        let first = first_logits.argmax() as i32;
-        let t0 = Instant::now();
-        let answer = greedy_decode(first, answer_len, |tok| {
-            let pos = kv.next_pos;
-            let out = self.session.decode_step(bucket, tok, pos, kv)?;
-            kv.append(&out.new_k, &out.new_v)?;
-            Ok(out.logits.argmax() as i32)
-        })?;
-        timing.decode_s += t0.elapsed().as_secs_f64();
-        Ok(answer)
-    }
 }
 
 #[cfg(test)]
@@ -594,7 +897,164 @@ mod tests {
         assert_eq!(t.recompute_s(), 1.5);
         t.chunk_prefill_s = 0.5;
         t.prompt_s = 0.25;
+        // no emission recorded yet: fall back to the stage-sum estimate
         assert_eq!(t.ttft_s(), 0.5 + 0.75 + 0.375 + 1.5 + 0.25);
         assert_eq!(t.stage_s("nope"), 0.0);
+        // a measured first-token time wins over the stage sum (interleaved
+        // decode can park a task for ticks the stages never see)
+        t.first_token_s = Some(9.5);
+        assert_eq!(t.ttft_s(), 9.5);
+        assert_eq!(t.stage_ttft_s(), 0.5 + 0.75 + 0.375 + 1.5 + 0.25);
+    }
+
+    // -- DecodeState vs the greedy_decode reference spec ---------------------
+
+    fn tiny_dims() -> crate::manifest::ModelDims {
+        crate::manifest::ModelDims {
+            vocab: 144,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 32,
+            rope_theta: 10000.0,
+            chunk: 4,
+            prompt_len: 2,
+            sel_budget: 4,
+            answer_buf: 16,
+            dev_layers: 1,
+        }
+    }
+
+    fn scripted_state(first: i32, answer_len: usize) -> DecodeState {
+        let d = tiny_dims();
+        let x = 4usize;
+        let k = TensorF::zeros(&[d.n_layers, x, d.n_heads, d.head_dim]);
+        let v = k.clone();
+        let gpos: Vec<i32> = (0..x as i32).collect();
+        let valid = vec![1.0f32; x];
+        let kv = crate::runtime::resident::ResidentDecodeKv::from_parts(
+            &d, &k, &v, &gpos, &valid, x as i32,
+        )
+        .unwrap();
+        DecodeState::new(kv, x, first, answer_len)
+    }
+
+    fn scripted_out(next: i32) -> DecodeOut {
+        let d = tiny_dims();
+        let mut logits = TensorF::zeros(&[d.vocab]);
+        logits.data_mut()[next as usize] = 1.0;
+        DecodeOut {
+            logits,
+            new_k: TensorF::zeros(&[d.n_layers, d.n_heads, d.head_dim]),
+            new_v: TensorF::zeros(&[d.n_layers, d.n_heads, d.head_dim]),
+        }
+    }
+
+    /// Drive a DecodeState over a scripted model-token stream; returns the
+    /// emitted answer and how many model calls were consumed.
+    fn drive_scripted(first: i32, answer_len: usize, script: &[i32]) -> (Vec<i32>, usize) {
+        let mut st = scripted_state(first, answer_len);
+        let mut calls = 0usize;
+        loop {
+            match st.begin_step() {
+                Phase1::Finished | Phase1::Last { .. } => break,
+                Phase1::Model { .. } => {
+                    assert!(st.pending_model().is_some(), "Model phase must queue work");
+                    st.complete_step(&scripted_out(script[calls])).unwrap();
+                    calls += 1;
+                }
+            }
+        }
+        assert!(st.is_finished());
+        // once finished, further steps are inert
+        assert_eq!(st.begin_step(), Phase1::Finished);
+        (st.answer().to_vec(), calls)
+    }
+
+    #[test]
+    fn decode_state_matches_greedy_reference_on_scripted_streams() {
+        // (first token, scripted model stream, answer budget)
+        let cases: Vec<(i32, Vec<i32>, usize)> = vec![
+            (10, vec![11, 12, 13, 14, 15, 16, 17, 18], 8),
+            (10, vec![11, vocab::EOS, 99, 99, 99, 99, 99, 99], 8),
+            (vocab::EOS, vec![99; 8], 8),
+            (10, vec![11, 12, 13, 14, 15, 16, 17, 18], 3),
+            (10, vec![11, 12], 1),
+            (10, vec![11, 12], 0),
+            (10, vec![vocab::EOS, 99, 99], 5),
+        ];
+        for (first, script, answer_len) in cases {
+            let mut i = 0usize;
+            let reference = greedy_decode(first, answer_len, |_| {
+                let t = script[i];
+                i += 1;
+                Ok(t)
+            })
+            .unwrap();
+            let (incremental, calls) = drive_scripted(first, answer_len, &script);
+            assert_eq!(
+                incremental, reference,
+                "first={first} len={answer_len}: token streams diverged"
+            );
+            assert_eq!(
+                calls, i,
+                "first={first} len={answer_len}: model-call counts diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_state_exhaustive_mode_ignores_eos() {
+        let mut st = scripted_state(10, 4);
+        st.stop_on_eos = false;
+        let script = [vocab::EOS, vocab::EOS, 7];
+        let mut calls = 0;
+        loop {
+            match st.begin_step() {
+                Phase1::Finished | Phase1::Last { .. } => break,
+                Phase1::Model { .. } => {
+                    st.complete_step(&scripted_out(script[calls])).unwrap();
+                    calls += 1;
+                }
+            }
+        }
+        assert_eq!(st.answer(), &[10, vocab::EOS, vocab::EOS, 7]);
+        assert_eq!(calls, 3, "exhaustive decode runs the full answer budget");
+    }
+
+    #[test]
+    fn answer_plan_records_measured_ttft_within_total() {
+        use crate::kvcache::ChunkStore;
+        use crate::runtime::Runtime;
+        use crate::util::rng::Rng;
+        use crate::workload::EpisodeGen;
+        let rt = Arc::new(Runtime::stub(9));
+        let p = Pipeline::new(ModelSession::new(rt.clone(), "stub").unwrap()).unwrap();
+        let genr = EpisodeGen::new(p.vocab.clone(), rt.manifest.model.chunk);
+        let store = ChunkStore::new(1 << 30);
+        let plan = MethodSpec::ours(4).to_plan();
+        let mut emitted = 0usize;
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(seed);
+            let e = genr.onehop(&mut rng, 2);
+            let (chunks, _) = p.prepare_chunks(&store, &e.chunks).unwrap();
+            let r = p.answer_plan(&chunks, &e.prompt, &plan).unwrap();
+            if r.answer.is_empty() {
+                // first-token EOS: nothing emitted, ttft falls back to the
+                // stage-sum estimate
+                assert!(r.timing.first_token_s.is_none());
+                continue;
+            }
+            emitted += 1;
+            let ttft = r.timing.first_token_s.expect("first emission must be stamped");
+            assert!(
+                ttft <= r.timing.total_s,
+                "measured ttft {ttft} exceeds total {}",
+                r.timing.total_s
+            );
+            assert_eq!(r.timing.ttft_s(), ttft, "ttft_s() must report the measured value");
+        }
+        assert!(emitted > 0, "no stub episode produced any tokens");
     }
 }

@@ -51,6 +51,16 @@ pub struct DecodeOut {
     pub new_v: TensorF,
 }
 
+/// One query's slot in a batched decode tick (see
+/// [`ModelSession::decode_step_many`]): which bucket's executable serves
+/// it, the token/position to step with, and the query's resident KV.
+pub struct DecodeBatchItem<'a> {
+    pub bucket: usize,
+    pub tok: i32,
+    pub pos: i32,
+    pub kv: &'a ResidentDecodeKv,
+}
+
 /// Outputs of `full_prefill` (the exact baseline).
 pub struct FullPrefillOut {
     /// [n_layers, N+P, H, Dh]
@@ -98,6 +108,12 @@ impl ModelSession {
         args: &[&xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
         let exe = self.runtime.executable(name, bucket)?;
+        self.run_exe(&exe, args)
+    }
+
+    /// Execute an already-fetched executable (the batched decode path
+    /// fetches each bucket's executable once per tick, not once per query).
+    fn run_exe(&self, exe: &Executable, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
         let weights = self
             .weights
             .as_ref()
@@ -229,6 +245,52 @@ impl ModelSession {
             new_k: literal_to_tensor_f(&out[1])?,
             new_v: literal_to_tensor_f(&out[2])?,
         })
+    }
+
+    /// Advance N resident decode states in one call — the entry point a
+    /// continuous-batching scheduler amortizes its tick into.  Outputs are
+    /// positionally aligned with `items`.
+    ///
+    /// Stub backend: loops the per-query mini-attention, so numerics are
+    /// IDENTICAL to N separate [`ModelSession::decode_step`] calls and
+    /// interleaved decode stays bit-equal to serial decode (the streaming
+    /// conformance suite relies on this).  PJRT backend: items are served
+    /// bucket-by-bucket so each bucket's compiled executable is fetched
+    /// from the compile cache once per tick instead of once per query; a
+    /// genuinely fused multi-query decode executable needs a new AOT
+    /// artifact and is gated on one shipping (like everything PJRT).
+    pub fn decode_step_many(&self, items: &[DecodeBatchItem]) -> Result<Vec<DecodeOut>> {
+        if let Some(stub) = self.runtime.stub_model() {
+            return stub.decode_step_many(items);
+        }
+        let mut out: Vec<Option<DecodeOut>> = (0..items.len()).map(|_| None).collect();
+        // Bucket-sorted service order; results land back at their item's
+        // position so callers can zip them with their tasks.
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| items[i].bucket);
+        let mut cached: Option<(usize, Arc<Executable>)> = None;
+        for &i in &order {
+            let item = &items[i];
+            let stale = match &cached {
+                Some((b, _)) => *b != item.bucket,
+                None => true,
+            };
+            if stale {
+                let e = self.runtime.executable("decode", Some(item.bucket))?;
+                cached = Some((item.bucket, e));
+            }
+            let (_, exe) = cached.as_ref().expect("populated above");
+            let t = xla::Literal::scalar(item.tok);
+            let p = xla::Literal::scalar(item.pos);
+            let [k_all, v_all, k_gpos, k_valid] = item.kv.literals();
+            let o = self.run_exe(exe, &[&t, &p, k_all, v_all, k_gpos, k_valid])?;
+            out[i] = Some(DecodeOut {
+                logits: literal_to_tensor_f(&o[0])?,
+                new_k: literal_to_tensor_f(&o[1])?,
+                new_v: literal_to_tensor_f(&o[2])?,
+            });
+        }
+        Ok(out.into_iter().map(|o| o.expect("every batch item is served")).collect())
     }
 
     /// CacheBlend-style shallow-layer deviation probe. Returns [N] scores.

@@ -15,8 +15,8 @@ pub mod resident;
 pub mod stub;
 
 pub use exec::{
-    DecodeExec, DeviationExec, FullPrefillExec, PrefillChunkExec, RecomputeExec,
-    ScoreExec,
+    DecodeBatchItem, DecodeExec, DeviationExec, FullPrefillExec, PrefillChunkExec,
+    RecomputeExec, ScoreExec,
 };
 pub use literal::{literal_to_tensor_f, literal_to_tensor_i, tensor_f_to_literal,
                   tensor_i_to_literal};

@@ -166,6 +166,14 @@ impl ResidentDecodeKv {
         self.t_total
     }
 
+    /// Decode rows still free — how many more tokens [`Self::append`] can
+    /// take before the buffer is full.  A parked query's answer budget is
+    /// clamped to `remaining_capacity() + 1` (the first token needs no
+    /// appended row).
+    pub fn remaining_capacity(&self) -> usize {
+        self.t_total - self.next_row
+    }
+
     /// Append a generated token's KV row in place: one `write_sub` per
     /// layer per tensor instead of a whole-buffer rebuild.
     pub fn append(&mut self, new_k: &TensorF, new_v: &TensorF) -> Result<()> {

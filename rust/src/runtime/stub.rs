@@ -22,7 +22,7 @@
 
 use anyhow::{bail, Result};
 
-use super::exec::{DecodeOut, FullPrefillOut, RecomputeOut, ScoreOut};
+use super::exec::{DecodeBatchItem, DecodeOut, FullPrefillOut, RecomputeOut, ScoreOut};
 use super::resident::ResidentDecodeKv;
 use crate::manifest::ModelDims;
 use crate::rope;
@@ -426,6 +426,17 @@ impl StubModel {
         })
     }
 
+    /// Batched decode tick: advance each item's resident KV by one step.
+    /// A plain loop over [`StubModel::decode_step`] — bit-identical to N
+    /// serial calls by construction, which is exactly the contract the
+    /// streaming conformance suite locks in.
+    pub fn decode_step_many(&self, items: &[DecodeBatchItem]) -> Result<Vec<DecodeOut>> {
+        items
+            .iter()
+            .map(|item| self.decode_step(item.tok, item.pos, item.kv))
+            .collect()
+    }
+
     /// CacheBlend-style shallow-layer deviation: how far each stored value
     /// row is from what a full-context recompute at the target positions
     /// would produce.
@@ -659,6 +670,33 @@ mod tests {
         let orig = &v.data()[8 * row..9 * row];
         let fresh = &out.new_v.data()[..row];
         assert_ne!(orig, fresh, "recompute must change the value row");
+    }
+
+    #[test]
+    fn decode_step_many_is_bit_identical_to_serial_steps() {
+        use crate::runtime::resident::ResidentDecodeKv;
+        let m = model();
+        let d = default_dims();
+        let toks: Vec<i32> = (16..32).collect();
+        let (k, v) = m.prefill_chunk(&toks).unwrap();
+        let gpos: Vec<i32> = (0..16).collect();
+        let valid = vec![1.0f32; 16];
+        let kv1 = ResidentDecodeKv::from_parts(&d, &k, &v, &gpos, &valid, 16).unwrap();
+        let kv2 = ResidentDecodeKv::from_parts(&d, &k, &v, &gpos, &valid, 16).unwrap();
+        let items = [
+            DecodeBatchItem { bucket: 16, tok: 20, pos: 16, kv: &kv1 },
+            DecodeBatchItem { bucket: 16, tok: 33, pos: 17, kv: &kv2 },
+        ];
+        let batched = m.decode_step_many(&items).unwrap();
+        let s1 = m.decode_step(20, 16, &kv1).unwrap();
+        let s2 = m.decode_step(33, 17, &kv2).unwrap();
+        assert_eq!(batched.len(), 2);
+        assert_eq!(batched[0].logits.data(), s1.logits.data());
+        assert_eq!(batched[0].new_k.data(), s1.new_k.data());
+        assert_eq!(batched[0].new_v.data(), s1.new_v.data());
+        assert_eq!(batched[1].logits.data(), s2.logits.data());
+        assert_eq!(batched[1].new_k.data(), s2.new_k.data());
+        assert_eq!(batched[1].new_v.data(), s2.new_v.data());
     }
 
     #[test]
