@@ -1,0 +1,179 @@
+//! The lint control comments:
+//!
+//! * `// lint:allow(<rule>, reason="…")` — suppress diagnostics of `<rule>`
+//!   on the comment's line and the line after it.  The reason string is
+//!   mandatory and must be non-empty; an allow without one is itself a
+//!   diagnostic (`allow-syntax`), so suppressions always carry their
+//!   justification into the tree.
+//! * `// lint:requires(flight)` — marks the function declared on (or just
+//!   below) the comment as one whose CALLERS must hold the chunk's
+//!   flight slot; the flight-critical-section rule exempts the marked
+//!   body and checks call sites instead.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::Comment;
+
+/// Per-file suppression table: rule name -> suppressed lines.
+#[derive(Default, Debug)]
+pub struct Allows {
+    map: HashMap<String, HashSet<u32>>,
+}
+
+impl Allows {
+    pub fn suppresses(&self, rule: &str, line: u32) -> bool {
+        self.map.get(rule).is_some_and(|s| s.contains(&line))
+    }
+}
+
+/// Parse every `lint:allow(...)` in `comments`.  Returns the suppression
+/// table plus `(line, message)` pairs for malformed allows.
+pub fn parse_allows(comments: &[Comment]) -> (Allows, Vec<(u32, String)>) {
+    let mut allows = Allows::default();
+    let mut bad = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            rest = &rest[pos + "lint:allow(".len()..];
+            match parse_one(rest) {
+                Ok((rule, consumed)) => {
+                    let lines = allows.map.entry(rule).or_default();
+                    lines.insert(c.line);
+                    lines.insert(c.line + 1);
+                    rest = &rest[consumed..];
+                }
+                Err(msg) => {
+                    bad.push((c.line, msg));
+                    // skip past this occurrence and keep scanning
+                }
+            }
+        }
+    }
+    (allows, bad)
+}
+
+/// Parse `<rule>, reason="…")` (the part after `lint:allow(`).  Returns the
+/// rule name and the byte length consumed on success.
+fn parse_one(s: &str) -> Result<(String, usize), String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    let rule_start = i;
+    while i < b.len() && (b[i].is_ascii_lowercase() || b[i].is_ascii_digit() || b[i] == b'-') {
+        i += 1;
+    }
+    let rule = s[rule_start..i].to_string();
+    if rule.is_empty() {
+        return Err("lint:allow(...) needs a rule name".into());
+    }
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b')' {
+        return Err(format!("lint:allow({rule}) needs a non-empty reason=\"...\""));
+    }
+    if i >= b.len() || b[i] != b',' {
+        return Err(format!("lint:allow({rule}, ...): expected `, reason=\"...\"`"));
+    }
+    i += 1;
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if !s[i..].starts_with("reason") {
+        return Err(format!("lint:allow({rule}, ...): expected `reason=\"...\"`"));
+    }
+    i += "reason".len();
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= b.len() || b[i] != b'=' {
+        return Err(format!("lint:allow({rule}, ...): expected `=` after `reason`"));
+    }
+    i += 1;
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= b.len() || b[i] != b'"' {
+        return Err(format!("lint:allow({rule}, ...): reason must be a quoted string"));
+    }
+    i += 1;
+    let reason_start = i;
+    while i < b.len() && b[i] != b'"' {
+        i += 1;
+    }
+    if i >= b.len() {
+        return Err(format!("lint:allow({rule}, ...): unterminated reason string"));
+    }
+    let reason = &s[reason_start..i];
+    i += 1;
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= b.len() || b[i] != b')' {
+        return Err(format!("lint:allow({rule}, ...): expected closing `)`"));
+    }
+    i += 1;
+    if reason.trim().is_empty() {
+        return Err(format!("lint:allow({rule}) needs a non-empty reason=\"...\""));
+    }
+    Ok((rule, i))
+}
+
+/// Lines bearing a `lint:requires(flight)` marker.
+pub fn requires_flight_lines(comments: &[Comment]) -> HashSet<u32> {
+    comments
+        .iter()
+        .filter(|c| {
+            c.text.find("lint:requires(").is_some_and(|p| {
+                c.text[p + "lint:requires(".len()..].trim_start().starts_with("flight")
+            })
+        })
+        .map(|c| c.line)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm(line: u32, text: &str) -> Comment {
+        Comment { line, text: text.to_string() }
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_two_lines() {
+        let (a, bad) =
+            parse_allows(&[cm(10, "// lint:allow(panic-surface, reason=\"spawn is fatal\")")]);
+        assert!(bad.is_empty());
+        assert!(a.suppresses("panic-surface", 10));
+        assert!(a.suppresses("panic-surface", 11));
+        assert!(!a.suppresses("panic-surface", 12));
+        assert!(!a.suppresses("guard-across-blocking", 10));
+    }
+
+    #[test]
+    fn allow_without_reason_is_malformed() {
+        let (a, bad) = parse_allows(&[cm(3, "// lint:allow(panic-surface)")]);
+        assert!(!a.suppresses("panic-surface", 3));
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].1.contains("non-empty reason"));
+    }
+
+    #[test]
+    fn reason_may_contain_parens() {
+        let (a, bad) = parse_allows(&[cm(
+            7,
+            "// lint:allow(guard-across-blocking, reason=\"inside the critical section (PR-4)\")",
+        )]);
+        assert!(bad.is_empty());
+        assert!(a.suppresses("guard-across-blocking", 7));
+    }
+
+    #[test]
+    fn requires_flight_marker() {
+        let lines = requires_flight_lines(&[cm(5, "// lint:requires(flight)"), cm(9, "// plain")]);
+        assert!(lines.contains(&5) && !lines.contains(&9));
+    }
+}

@@ -1,0 +1,248 @@
+//! Hand-rolled Rust lexer for the lint pass.
+//!
+//! Produces a flat code-token stream (comments split out, since the lint
+//! control comments — `lint:allow` / `lint:requires` — live there) with
+//! 1-based line numbers.  This is a *lint* lexer, not a compiler lexer: it
+//! only needs to be exact about the things scope tracking and rule matching
+//! depend on — string/char/lifetime disambiguation, raw strings, nested
+//! block comments, and identifier boundaries.
+
+/// Token classification.  `Punct` tokens are single characters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A comment (line or block) with the line it starts on.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into (code tokens, comments).  Never fails: unknown bytes
+/// become single-character `Punct` tokens, so a pathological file degrades
+/// to noise instead of aborting the whole lint run.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let push = |toks: &mut Vec<Tok>, kind, text: &str, line| {
+        toks.push(Tok { kind, text: text.to_string(), line });
+    };
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let j = src[i..].find('\n').map_or(n, |o| i + o);
+            comments.push(Comment { line, text: src[i..j].to_string() });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: src[i..j].to_string() });
+            i = j;
+            continue;
+        }
+        // string literals, incl. raw (r"", r#""#) and byte (b"", br"") forms
+        if c == b'"' || c == b'r' || c == b'b' {
+            let mut j = i;
+            let mut is_raw = false;
+            let mut hashes = 0usize;
+            if j < n && b[j] == b'b' {
+                j += 1;
+            }
+            if j < n && b[j] == b'r' {
+                is_raw = true;
+                j += 1;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == b'"' {
+                j += 1;
+                let start_line = line;
+                let k = if is_raw {
+                    let mut closer = String::from("\"");
+                    for _ in 0..hashes {
+                        closer.push('#');
+                    }
+                    let k = src[j..].find(&closer).map_or(n, |o| j + o);
+                    line += src[i..k].matches('\n').count() as u32;
+                    (k + closer.len()).min(n)
+                } else {
+                    let mut k = j;
+                    while k < n {
+                        match b[k] {
+                            b'\\' => k += 2,
+                            b'"' => {
+                                k += 1;
+                                break;
+                            }
+                            b'\n' => {
+                                line += 1;
+                                k += 1;
+                            }
+                            _ => k += 1,
+                        }
+                    }
+                    k.min(n)
+                };
+                push(&mut toks, TokKind::Str, &src[i..k], start_line);
+                i = k;
+                continue;
+            }
+            // fall through: identifier starting with r/b, or a bare `"` never
+            // reaches here
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            let j = i + 1;
+            if j < n && b[j] == b'\\' {
+                let k = src[j + 1..].find('\'').map_or(j + 1, |o| j + 1 + o);
+                let end = (k + 1).min(n);
+                push(&mut toks, TokKind::Char, &src[i..end], line);
+                i = end;
+                continue;
+            }
+            if j + 1 < n && b[j + 1] == b'\'' && b[j] != b'\'' {
+                push(&mut toks, TokKind::Char, &src[i..j + 2], line);
+                i = j + 2;
+                continue;
+            }
+            let mut k = j;
+            while k < n && is_ident_cont(b[k]) {
+                k += 1;
+            }
+            push(&mut toks, TokKind::Lifetime, &src[i..k], line);
+            i = k;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            push(&mut toks, TokKind::Ident, &src[i..j], line);
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                if is_ident_cont(b[j]) {
+                    j += 1;
+                    continue;
+                }
+                // keep a decimal point only when it is followed by a digit
+                // (stops at `..` ranges and method calls on literals)
+                if b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            push(&mut toks, TokKind::Num, &src[i..j], line);
+            i = j;
+            continue;
+        }
+        // consume a full char so slicing stays on UTF-8 boundaries even for
+        // non-ASCII bytes in code position
+        let ch_len = src[i..].chars().next().map_or(1, char::len_utf8);
+        push(&mut toks, TokKind::Punct, &src[i..i + ch_len], line);
+        i += ch_len;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn strings_chars_lifetimes() {
+        let ts = kinds(r#"let s = "a\"b"; let c = 'x'; fn f<'a>() {}"#);
+        assert!(ts.contains(&(TokKind::Str, "\"a\\\"b\"".into())));
+        assert!(ts.contains(&(TokKind::Char, "'x'".into())));
+        assert!(ts.contains(&(TokKind::Lifetime, "'a".into())));
+    }
+
+    #[test]
+    fn raw_strings_and_comments() {
+        let (ts, cs) = lex("let s = r#\"no \" end\"#; // tail\n/* b /* nest */ */ x");
+        assert!(ts.iter().any(|t| t.kind == TokKind::Str && t.text.starts_with("r#")));
+        assert_eq!(cs.len(), 2);
+        assert!(ts.iter().any(|t| t.text == "x" && t.line == 2));
+    }
+
+    #[test]
+    fn non_ascii_degrades_to_punct_without_panicking() {
+        let (ts, cs) = lex("let § = 1; // π comment\nlet x = \"résumé ✨\";");
+        assert!(ts.iter().any(|t| t.kind == TokKind::Punct && t.text == "§"));
+        assert!(ts.iter().any(|t| t.text == "x" && t.line == 2));
+        assert_eq!(cs.len(), 1);
+    }
+
+    #[test]
+    fn line_numbers_advance() {
+        let (ts, _) = lex("a\nb\n\nc");
+        let lines: Vec<u32> = ts.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+}

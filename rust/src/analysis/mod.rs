@@ -1,0 +1,282 @@
+//! # pallas-lint: the in-repo invariant lint pass
+//!
+//! A zero-external-dependency static-analysis subsystem (hand-rolled Rust
+//! lexer + brace/scope tracker, in the same artifact-free spirit as the
+//! stub runtime) that mechanically enforces the concurrency invariants
+//! PRs 1–5 learned the hard way.  Five rules:
+//!
+//! | rule | invariant | burned by |
+//! |------|-----------|-----------|
+//! | `guard-across-blocking` | no lock guard live across a blocking call | PR 1 |
+//! | `panic-surface` | no unwrap/expect/panic!/debug_assert! in gated dirs | PR 2/4 |
+//! | `counter-discipline` | no orphaned metrics counters / tripwires | PR 3 |
+//! | `channel-hygiene` | stored senders must die on a shutdown path | PR 1/5 |
+//! | `flight-critical-section` | tier file ops stay inside flight/index scope | PR 4 |
+//!
+//! Deliberate violations carry `// lint:allow(<rule>, reason="…")`; a
+//! missing or empty reason is itself a diagnostic (`allow-syntax`).
+//! Functions whose *callers* must hold a chunk's flight slot are marked
+//! `// lint:requires(flight)` and checked at their call sites.
+//!
+//! Run via `cargo run --bin pallas_lint -- --root . [--format json]`; the
+//! driver walks `rust/src`, `rust/xla-stub`, `rust/tests` and `benches/`,
+//! prints `file:line: rule: message` diagnostics, and exits non-zero when
+//! any survive suppression.
+
+pub mod allow;
+pub mod lexer;
+pub mod rules;
+pub mod scope;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::Result;
+
+use allow::Allows;
+use rules::counter_discipline::CounterState;
+use rules::ALL_RULES;
+
+/// One lint finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diag {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diag {
+    pub fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Directories gated by the `panic-surface` rule.
+const PANIC_GATED: [&str; 4] = [
+    "rust/src/coordinator/",
+    "rust/src/kvcache/",
+    "rust/src/runtime/",
+    "rust/src/plan/",
+];
+
+/// Whole-tree lint state: create, feed every file through
+/// [`TreeLint::check_source`], then [`TreeLint::finish`].
+#[derive(Default)]
+pub struct TreeLint {
+    diags: Vec<Diag>,
+    counters: CounterState,
+    allows_by_file: HashMap<String, Allows>,
+    files_scanned: usize,
+}
+
+impl TreeLint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lint one file's source.  `rel` is the repo-relative path (forward
+    /// slashes) — rule applicability is scoped by it.
+    pub fn check_source(&mut self, rel: &str, src: &str) {
+        self.files_scanned += 1;
+        let (toks, comments) = lexer::lex(src);
+        let test_regions = scope::find_test_regions(&toks);
+        let fns = scope::find_fns(&toks);
+        let (allows, bad_allows) = allow::parse_allows(&comments);
+        let requires = allow::requires_flight_lines(&comments);
+
+        let is_test_file = rel.starts_with("rust/tests/") || rel.starts_with("benches/");
+        let in_src = rel.starts_with("rust/src/");
+
+        let mut local: Vec<Diag> = bad_allows
+            .into_iter()
+            .map(|(line, message)| Diag {
+                file: rel.to_string(),
+                line,
+                rule: rules::ALLOW_SYNTAX,
+                message,
+            })
+            .collect();
+
+        if !is_test_file && (in_src || rel.starts_with("rust/xla-stub/")) {
+            rules::guard_blocking::check(rel, &toks, &test_regions, &mut local);
+        }
+        if PANIC_GATED.iter().any(|d| rel.starts_with(d)) {
+            rules::panic_surface::check(rel, &toks, &test_regions, &mut local);
+        }
+        if !is_test_file && rel.starts_with("rust/src/coordinator/") {
+            rules::channel_hygiene::check(rel, &toks, &test_regions, &fns, &mut local);
+        }
+        if !is_test_file && in_src {
+            rules::flight_section::check(rel, &toks, &test_regions, &fns, &requires, &mut local);
+        }
+        rules::counter_discipline::collect(rel, &toks, &test_regions, in_src, &mut self.counters);
+
+        for d in local {
+            // `allow-syntax` cannot be suppressed: a malformed allow must
+            // always surface.
+            let suppressed =
+                d.rule != rules::ALLOW_SYNTAX && allows.suppresses(d.rule, d.line);
+            if !suppressed {
+                self.diags.push(d);
+            }
+        }
+        self.allows_by_file.insert(rel.to_string(), allows);
+    }
+
+    /// Resolve cross-file rules (counter discipline) and produce the final
+    /// sorted report.
+    pub fn finish(mut self) -> LintReport {
+        let mut cross: Vec<Diag> = Vec::new();
+        rules::counter_discipline::finish(&self.counters, |file, line, message| {
+            cross.push(Diag {
+                file: file.to_string(),
+                line,
+                rule: rules::COUNTER_DISCIPLINE,
+                message,
+            });
+        });
+        for d in cross {
+            let suppressed = self
+                .allows_by_file
+                .get(&d.file)
+                .is_some_and(|a| a.suppresses(d.rule, d.line));
+            if !suppressed {
+                self.diags.push(d);
+            }
+        }
+        self.diags.sort_by(|a, b| {
+            (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+        });
+        LintReport { diags: self.diags, files_scanned: self.files_scanned }
+    }
+}
+
+/// Lint a single source string under a virtual path — the fixture-suite
+/// entry point.  Cross-file rules resolve over just this one file.
+pub fn lint_str(virtual_path: &str, src: &str) -> Vec<Diag> {
+    let mut tl = TreeLint::new();
+    tl.check_source(virtual_path, src);
+    tl.finish().diags
+}
+
+/// The directories the driver walks, relative to the repo root.
+pub const WALK_ROOTS: [&str; 4] = ["rust/src", "rust/xla-stub", "rust/tests", "benches"];
+
+/// Walk the repo tree at `root` and lint every `.rs` file under the
+/// standard roots, in sorted order (deterministic output).
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for base in WALK_ROOTS {
+        let dir = root.join(base);
+        if dir.is_dir() {
+            collect_rs_files(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut tl = TreeLint::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| crate::anyhow!("reading {}: {e}", f.display()))?;
+        tl.check_source(&rel, &src);
+    }
+    Ok(tl.finish())
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            // never descend into build output
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The finished, sorted lint report.
+pub struct LintReport {
+    pub diags: Vec<Diag>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Per-rule violation counts over every known rule (zeros included, so
+    /// CI summaries always show the full table).
+    pub fn counts(&self) -> Vec<(&'static str, usize)> {
+        ALL_RULES
+            .iter()
+            .map(|&r| (r, self.diags.iter().filter(|d| d.rule == r).count()))
+            .collect()
+    }
+
+    /// Machine-readable report; round-trips through `util::json::Json`.
+    pub fn to_json(&self) -> Json {
+        let violations: Vec<Json> = self
+            .diags
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::from(d.file.as_str())),
+                    ("line", Json::from(d.line as usize)),
+                    ("rule", Json::from(d.rule)),
+                    ("message", Json::from(d.message.as_str())),
+                ])
+            })
+            .collect();
+        let counts: Vec<(&str, Json)> =
+            self.counts().into_iter().map(|(r, c)| (r, Json::from(c))).collect();
+        Json::obj(vec![
+            ("files_scanned", Json::from(self.files_scanned)),
+            ("counts", Json::obj(counts)),
+            ("violations", Json::arr(violations)),
+        ])
+    }
+
+    /// Plain `file:line: rule: message` lines.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown for CI job summaries: a per-rule count
+    /// table (all zeros when clean) followed by the diagnostics.
+    pub fn render_summary(&self) -> String {
+        let mut out = String::from("### pallas-lint\n\n| rule | violations |\n|---|---:|\n");
+        for (rule, count) in self.counts() {
+            out.push_str(&format!("| `{rule}` | {count} |\n"));
+        }
+        out.push_str(&format!(
+            "| **total** | **{}** | \n\n{} file(s) scanned.\n",
+            self.diags.len(),
+            self.files_scanned
+        ));
+        if !self.diags.is_empty() {
+            out.push_str("\n```text\n");
+            out.push_str(&self.render_text());
+            out.push_str("```\n");
+        }
+        out
+    }
+}

@@ -1,0 +1,145 @@
+//! L4 `channel-hygiene` — a thread-owning struct in `coordinator/` must be
+//! able to drop/close every channel it stores, on an explicit shutdown
+//! path.
+//!
+//! The PR-1 and PR-5 hang class: `Server::shutdown` joined the workers
+//! while a cloned `SyncSender` stored in a field kept the work channel
+//! open, so the router never saw the hangup and join blocked forever.  The
+//! rule looks at structs that own `JoinHandle`s (the shapes that join on
+//! shutdown) and requires every `Sender`/`SyncSender` field — and every
+//! closeable queue field (`PrefetchQueue`) — to be touched
+//! (`take`/`drop`/`close`/reassign) inside a function named `shutdown`,
+//! `finish`, `close`, `stop`, or `drop` (`impl Drop`).
+
+use super::super::lexer::{Tok, TokKind};
+use super::super::scope::{in_regions, FnSpan, Region};
+use super::CHANNEL_HYGIENE;
+use crate::analysis::Diag;
+
+const SHUTDOWN_FNS: [&str; 5] = ["shutdown", "finish", "close", "stop", "drop"];
+/// Types with an explicit `close()` lifecycle in this repo.
+const CLOSEABLE_TYPES: [&str; 1] = ["PrefetchQueue"];
+
+struct Field {
+    name: String,
+    ty: Vec<String>,
+    line: u32,
+}
+
+fn type_has_sender(ty: &[String]) -> bool {
+    ty.windows(2)
+        .any(|w| (w[0] == "Sender" || w[0] == "SyncSender") && w[1] == "<")
+}
+
+fn type_has(ty: &[String], what: &str) -> bool {
+    ty.iter().any(|t| t == what)
+}
+
+pub fn check(
+    path: &str,
+    toks: &[Tok],
+    test_regions: &[Region],
+    fns: &[FnSpan],
+    diags: &mut Vec<Diag>,
+) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let is_struct = toks[i].kind == TokKind::Ident
+            && toks[i].text == "struct"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident
+            && !in_regions(i, test_regions);
+        if !is_struct {
+            i += 1;
+            continue;
+        }
+        let sname = toks[i + 1].text.clone();
+        let mut j = i + 2;
+        while j < n && toks[j].text != "{" && toks[j].text != ";" && toks[j].text != "(" {
+            j += 1;
+        }
+        if j >= n || toks[j].text != "{" {
+            i = j + 1;
+            continue;
+        }
+        let mut d = 0i32;
+        let mut k = j;
+        while k < n {
+            if toks[k].text == "{" {
+                d += 1;
+            } else if toks[k].text == "}" {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        // parse `name: Type,` fields
+        let mut fields: Vec<Field> = Vec::new();
+        let mut m = j + 1;
+        while m < k {
+            if toks[m].kind == TokKind::Ident && m + 1 < n && toks[m + 1].text == ":" {
+                let fname = toks[m].text.clone();
+                let fline = toks[m].line;
+                let mut d2 = 0i32;
+                let mut ty = Vec::new();
+                let mut p = m + 2;
+                while p < k {
+                    let tx = toks[p].text.as_str();
+                    if tx == "<" || tx == "(" || tx == "[" {
+                        d2 += 1;
+                    } else if tx == ">" || tx == ")" || tx == "]" {
+                        d2 -= 1;
+                    } else if tx == "," && d2 <= 0 {
+                        break;
+                    }
+                    ty.push(toks[p].text.clone());
+                    p += 1;
+                }
+                fields.push(Field { name: fname, ty, line: fline });
+                m = p + 1;
+            } else {
+                m += 1;
+            }
+        }
+        let has_join = fields.iter().any(|f| type_has(&f.ty, "JoinHandle"));
+        if has_join {
+            for f in &fields {
+                let is_sender = type_has_sender(&f.ty);
+                let is_closeable = CLOSEABLE_TYPES.iter().any(|c| type_has(&f.ty, c));
+                if !is_sender && !is_closeable {
+                    continue;
+                }
+                // `self.<field>` inside any shutdown-path fn in this file
+                let handled = fns.iter().filter(|fnsp| SHUTDOWN_FNS.contains(&fnsp.name.as_str())).any(
+                    |fnsp| {
+                        (fnsp.body.0..=fnsp.body.1).any(|q| {
+                            toks[q].kind == TokKind::Ident
+                                && toks[q].text == f.name
+                                && q >= 2
+                                && toks[q - 1].text == "."
+                                && toks[q - 2].text == "self"
+                        })
+                    },
+                );
+                if !handled {
+                    let what = if is_sender { "sender" } else { "closeable queue" };
+                    diags.push(Diag {
+                        file: path.to_string(),
+                        line: f.line,
+                        rule: CHANNEL_HYGIENE,
+                        message: format!(
+                            "struct `{sname}` owns thread handles but {what} field `{}` is \
+                             never dropped/closed in a shutdown path \
+                             (shutdown/finish/close/stop/Drop)",
+                            f.name
+                        ),
+                    });
+                }
+            }
+        }
+        i = k + 1;
+    }
+}

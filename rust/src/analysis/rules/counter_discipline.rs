@@ -1,0 +1,240 @@
+//! L3 `counter-discipline` — metrics counters and lifecycle atomics must
+//! not silently orphan.
+//!
+//! Counters like `duplicate_prefills` and `prefetch_deduped` are load-
+//! bearing test tripwires: a conformance test reads them to prove a race
+//! did not happen.  If a refactor removes the last increment site, the
+//! counter stays readable, permanently zero, and the tripwire goes blind —
+//! nothing fails.  Two checks close that hole:
+//!
+//! * **registry names** — every literal name passed to a `MetricsRegistry`
+//!   read API (`counter`, `observations`, `latency_summary`) from non-test
+//!   code must have ≥1 non-test write site (`incr`, `add`, `observe_s`).
+//!   Test-site reads accept any write site (a test exercising the registry
+//!   itself writes its own keys).  Dynamic (`format!`-built) names are not
+//!   checkable and are skipped.  Export is structural: `dump()` emits every
+//!   key ever written, so a written counter always appears in
+//!   `metrics_json`.
+//! * **lifecycle atomics** — every `AtomicU64`/`AtomicUsize` struct field
+//!   under `rust/src/` must have a non-test bump site (`fetch_add`/`store`)
+//!   and be consumed somewhere: either its name appears as a string literal
+//!   (a JSON-export key) or a non-test `.load(…)` feeds an accessor.
+
+use std::collections::HashSet;
+
+use super::super::lexer::{Tok, TokKind};
+use super::super::scope::{in_regions, Region};
+use super::is_call;
+
+const WRITE_FNS: [&str; 3] = ["incr", "add", "observe_s"];
+const READ_FNS: [&str; 3] = ["counter", "observations", "latency_summary"];
+const ATOMIC_TYPES: [&str; 3] = ["AtomicU64", "AtomicUsize", "AtomicU32"];
+
+/// A literal-name registry read or write site.
+#[derive(Clone, Debug)]
+pub struct Site {
+    pub name: String,
+    pub file: String,
+    pub line: u32,
+    pub in_test: bool,
+}
+
+/// Cross-file state accumulated during the walk and resolved in
+/// `TreeLint::finish`.
+#[derive(Default)]
+pub struct CounterState {
+    pub writes: Vec<Site>,
+    pub reads: Vec<Site>,
+    /// Declared atomic counter fields: (field, file, line).
+    pub atomic_decls: Vec<(String, String, u32)>,
+    /// Fields with a non-test `fetch_add`/`store` site.
+    pub atomic_bumped: HashSet<String>,
+    /// Fields consumed: string-literal export keys plus non-test `.load(`
+    /// receivers.
+    pub atomic_consumed: HashSet<String>,
+}
+
+/// Collect registry read/write sites from one file (all files walk through
+/// here) and, when `collect_atomics` (files under `rust/src/`), atomic
+/// declarations and uses.
+pub fn collect(
+    path: &str,
+    toks: &[Tok],
+    test_regions: &[Region],
+    collect_atomics: bool,
+    state: &mut CounterState,
+) {
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if collect_atomics && t.kind == TokKind::Str && t.text.starts_with('"') {
+            state.atomic_consumed.insert(t.text[1..t.text.len() - 1].to_string());
+        }
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let name = t.text.as_str();
+        // registry sites: `.incr("x"…`, `.counter("x")`, …
+        if (WRITE_FNS.contains(&name) || READ_FNS.contains(&name))
+            && i >= 1
+            && toks[i - 1].text == "."
+            && is_call(toks, i)
+            && i + 2 < n
+        {
+            let arg = &toks[i + 2];
+            if arg.kind == TokKind::Str && arg.text.starts_with('"') {
+                let site = Site {
+                    name: arg.text[1..arg.text.len() - 1].to_string(),
+                    file: path.to_string(),
+                    line: arg.line,
+                    in_test: in_regions(i, test_regions),
+                };
+                if WRITE_FNS.contains(&name) {
+                    state.writes.push(site);
+                } else {
+                    state.reads.push(site);
+                }
+            }
+        }
+        if collect_atomics
+            && i >= 2
+            && toks[i - 1].text == "."
+            && toks[i - 2].kind == TokKind::Ident
+            && is_call(toks, i)
+            && !in_regions(i, test_regions)
+        {
+            match name {
+                "fetch_add" | "store" => {
+                    state.atomic_bumped.insert(toks[i - 2].text.clone());
+                }
+                "load" => {
+                    state.atomic_consumed.insert(toks[i - 2].text.clone());
+                }
+                _ => {}
+            }
+        }
+    }
+    if collect_atomics {
+        collect_atomic_decls(path, toks, test_regions, state);
+    }
+}
+
+fn collect_atomic_decls(
+    path: &str,
+    toks: &[Tok],
+    test_regions: &[Region],
+    state: &mut CounterState,
+) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let is_struct = toks[i].kind == TokKind::Ident
+            && toks[i].text == "struct"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident
+            && !in_regions(i, test_regions);
+        if !is_struct {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < n && toks[j].text != "{" && toks[j].text != ";" && toks[j].text != "(" {
+            j += 1;
+        }
+        if j >= n || toks[j].text != "{" {
+            i = j + 1;
+            continue;
+        }
+        let mut d = 0i32;
+        let mut k = j;
+        while k < n {
+            if toks[k].text == "{" {
+                d += 1;
+            } else if toks[k].text == "}" {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        let mut m = j + 1;
+        while m < k {
+            if toks[m].kind == TokKind::Ident && m + 1 < n && toks[m + 1].text == ":" {
+                let fname = toks[m].text.clone();
+                let fline = toks[m].line;
+                let mut d2 = 0i32;
+                let mut p = m + 2;
+                let mut is_atomic = false;
+                while p < k {
+                    let tx = toks[p].text.as_str();
+                    if tx == "<" || tx == "(" || tx == "[" {
+                        d2 += 1;
+                    } else if tx == ">" || tx == ")" || tx == "]" {
+                        d2 -= 1;
+                    } else if tx == "," && d2 <= 0 {
+                        break;
+                    }
+                    if ATOMIC_TYPES.contains(&tx) {
+                        is_atomic = true;
+                    }
+                    p += 1;
+                }
+                if is_atomic {
+                    state.atomic_decls.push((fname, path.to_string(), fline));
+                }
+                m = p + 1;
+            } else {
+                m += 1;
+            }
+        }
+        i = k + 1;
+    }
+}
+
+/// Resolve the cross-file state into diagnostics via `emit(file, line,
+/// message)`.
+pub fn finish(state: &CounterState, mut emit: impl FnMut(&str, u32, String)) {
+    let prod_writes: HashSet<&str> =
+        state.writes.iter().filter(|w| !w.in_test).map(|w| w.name.as_str()).collect();
+    let any_writes: HashSet<&str> = state.writes.iter().map(|w| w.name.as_str()).collect();
+    let mut seen: HashSet<(&str, &str, u32)> = HashSet::new();
+    for r in &state.reads {
+        let ok =
+            if r.in_test { any_writes.contains(r.name.as_str()) } else { prod_writes.contains(r.name.as_str()) };
+        if ok || !seen.insert((r.name.as_str(), r.file.as_str(), r.line)) {
+            continue;
+        }
+        let hint = if any_writes.contains(r.name.as_str()) {
+            " (only test code writes it)"
+        } else {
+            ""
+        };
+        emit(
+            &r.file,
+            r.line,
+            format!(
+                "counter/series \"{}\" is read here but never written by non-test code{hint} \
+                 — orphaned tripwire",
+                r.name
+            ),
+        );
+    }
+    for (name, file, line) in &state.atomic_decls {
+        if !state.atomic_bumped.contains(name) {
+            emit(
+                file,
+                *line,
+                format!(
+                    "atomic counter `{name}` is declared but never bumped by non-test code \
+                     — orphaned tripwire"
+                ),
+            );
+        } else if !state.atomic_consumed.contains(name) {
+            emit(
+                file,
+                *line,
+                format!("atomic counter `{name}` is never exported or read (no \"{name}\" JSON key and no load site)"),
+            );
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! L5 `flight-critical-section` — spill-tier rename/index/unlink and
+//! `ChunkStore` admit/evict plumbing must happen inside the chunk's
+//! flight-slot or index-lock scope.
+//!
+//! The PR-4 race class: an eviction unlinked a victim's spill file outside
+//! the index critical section, racing a concurrent re-spill of the same id
+//! into deleting the freshly published file.  The fix was to make
+//! rename + index-insert + victim-unlink ONE critical section and to
+//! serialize every other file touch under the chunk's flight slot; this
+//! rule keeps it that way:
+//!
+//! * calls to flight-required operations (`tier.spill/take/discard`,
+//!   `spill_one`, `insert_under_flight`) must be lexically inside a live
+//!   `FlightGuard` binding or index-lock guard scope, OR inside a function
+//!   itself marked `// lint:requires(flight)` (whose call sites are then
+//!   checked the same way);
+//! * inside `tier.rs`, raw `fs::rename`/`fs::remove_file` calls must sit
+//!   inside an index-lock guard scope or a flight-required function.
+
+use std::collections::HashSet;
+
+use super::super::lexer::{Tok, TokKind};
+use super::super::scope::{classify_guard_context, in_regions, FnSpan, GuardCtx, Region};
+use super::{is_call, is_method_call, receiver_name, FLIGHT_CRITICAL_SECTION};
+use crate::analysis::Diag;
+
+/// Methods that require the chunk's flight when called on a spill tier.
+const TIER_METHODS: [&str; 3] = ["spill", "take", "discard"];
+/// Store helpers that require the caller to hold the flight, any receiver.
+const FLIGHT_HELPERS: [&str; 2] = ["insert_under_flight", "spill_one"];
+
+fn tier_ish(recv: &str) -> bool {
+    recv == "tier" || recv.ends_with("_tier") || recv == "spill"
+}
+
+fn basename(path: &str) -> &str {
+    path.rsplit('/').next().unwrap_or(path)
+}
+
+/// Does the function starting at `line` carry a `lint:requires(flight)`
+/// marker on its own line or up to three lines above (doc comments may sit
+/// between the marker and the `fn`)?
+fn fn_requires_flight(fnsp: &FnSpan, requires_lines: &HashSet<u32>) -> bool {
+    (fnsp.line.saturating_sub(3)..=fnsp.line).any(|l| requires_lines.contains(&l))
+}
+
+pub fn check(
+    path: &str,
+    toks: &[Tok],
+    test_regions: &[Region],
+    fns: &[FnSpan],
+    requires_lines: &HashSet<u32>,
+    diags: &mut Vec<Diag>,
+) {
+    let in_tier_rs = basename(path) == "tier.rs";
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_regions(i, test_regions) || !is_call(toks, i) {
+            continue;
+        }
+        let name = t.text.as_str();
+        let sensitive = if TIER_METHODS.contains(&name) && is_method_call(toks, i) {
+            matches!(receiver_name(toks, i - 1), Some(r) if tier_ish(r))
+        } else if FLIGHT_HELPERS.contains(&name) && i >= 1 && toks[i - 1].text == "." {
+            true
+        } else {
+            in_tier_rs
+                && (name == "rename" || name == "remove_file")
+                && i >= 2
+                && toks[i - 1].text == ":"
+        };
+        if !sensitive {
+            continue;
+        }
+        // innermost enclosing fn (outer fns precede nested ones in `fns`)
+        let Some(encl) = fns.iter().rfind(|f| f.body.0 <= i && i <= f.body.1) else {
+            continue;
+        };
+        if fn_requires_flight(encl, requires_lines) {
+            continue;
+        }
+        if inside_guard_scope(toks, encl.body.0, i) {
+            continue;
+        }
+        diags.push(Diag {
+            file: path.to_string(),
+            line: t.line,
+            rule: FLIGHT_CRITICAL_SECTION,
+            message: format!(
+                "`{name}` outside any flight-slot/index-lock scope (and `{}` is not marked \
+                 lint:requires(flight))",
+                encl.name
+            ),
+        });
+    }
+}
+
+/// Is there a live `FlightGuard` binding or a named index-lock guard whose
+/// brace scope still encloses token `i`?  A binding at depth `d0` encloses
+/// `i` iff the depth never drops below `d0` between the binding and `i`.
+fn inside_guard_scope(toks: &[Tok], body_start: usize, i: usize) -> bool {
+    let mut depth_at = Vec::with_capacity(i - body_start);
+    let mut d = 0i32;
+    for tok in toks.iter().take(i).skip(body_start) {
+        if tok.text == "{" {
+            d += 1;
+        } else if tok.text == "}" {
+            d -= 1;
+        }
+        depth_at.push(d);
+    }
+    for j in body_start..i {
+        let tj = &toks[j];
+        let hit = if tj.kind == TokKind::Ident && tj.text == "FlightGuard" {
+            true
+        } else {
+            tj.kind == TokKind::Ident
+                && (tj.text == "lock" || tj.text == "lock_shard")
+                && is_method_call(toks, j)
+                && matches!(classify_guard_context(toks, j), GuardCtx::Let(_))
+        };
+        if !hit {
+            continue;
+        }
+        let d0 = depth_at[j - body_start];
+        if (j..i).all(|k| depth_at[k - body_start] >= d0) {
+            return true;
+        }
+    }
+    false
+}

@@ -1,0 +1,202 @@
+//! L1 `guard-across-blocking` — a `Mutex`/`RwLock` guard whose live scope
+//! contains a call that can block (channel recv, thread join, queue pop,
+//! model/pipeline entry points, file I/O).
+//!
+//! The PR-1 bug class: `answer` was called with a registry lock held,
+//! serializing the whole worker pool behind one query.  The rule models
+//! Rust's guard lifetimes (named `let` bindings to end of block, match-
+//! scrutinee temporaries through the whole match, condition temporaries
+//! dying at the `{`, plain temporaries at the `;`) and flags any blocking
+//! call lexically inside the live region.
+
+use super::super::lexer::{Tok, TokKind};
+use super::super::scope::{
+    block_after, classify_guard_context, enclosing_block_end, in_regions, stmt_end, GuardCtx,
+    Region,
+};
+use super::{args_empty, is_call, is_method_call, receiver_name, GUARD_ACROSS_BLOCKING};
+use crate::analysis::Diag;
+
+/// Methods whose zero-arg poisoning-propagating call produces a guard.
+const GUARD_FNS: [&str; 4] = ["lock", "read", "write", "lock_shard"];
+
+/// How a blocklist entry matches.
+enum Mode {
+    /// Any call by this name.
+    Any,
+    /// Only zero-argument calls (disambiguates `JoinHandle::join()` from
+    /// `Path::join(x)`, `FlightSlot::wait()` from `Condvar::wait(g)`).
+    Zero,
+    /// Zero-arg method call on a queue-ish receiver (`q`, `queue`, `jobs`,
+    /// `*_q`, …) — disambiguates `PrefetchQueue::pop` from `Vec::pop`.
+    QueueRecv,
+}
+
+const BLOCKING: [(&str, Mode); 19] = [
+    ("read_exact", Mode::Any),
+    ("sync_all", Mode::Zero),
+    ("recv", Mode::Zero),
+    ("recv_timeout", Mode::Any),
+    ("join", Mode::Zero),
+    ("wait", Mode::Zero),
+    ("pop", Mode::QueueRecv),
+    ("get_or_load", Mode::Any),
+    ("answer", Mode::Any),
+    ("answer_plan", Mode::Any),
+    ("answer_with_rows", Mode::Any),
+    ("begin_plan", Mode::Any),
+    ("decode_step", Mode::Any),
+    ("decode_step_many", Mode::Any),
+    ("prefill_chunk", Mode::Any),
+    ("read_to_string", Mode::Any),
+    ("read_to_end", Mode::Any),
+    ("write_all", Mode::Any),
+    ("flush", Mode::Zero),
+];
+
+/// `module::fn` path calls that hit the filesystem.
+const FS_PATHS: [(&str, &str); 11] = [
+    ("fs", "rename"),
+    ("fs", "remove_file"),
+    ("fs", "read"),
+    ("fs", "write"),
+    ("fs", "read_to_string"),
+    ("fs", "create_dir_all"),
+    ("fs", "read_dir"),
+    ("fs", "metadata"),
+    ("fs", "copy"),
+    ("File", "open"),
+    ("File", "create"),
+];
+
+fn queue_ish(recv: &str) -> bool {
+    recv == "q"
+        || recv == "queue"
+        || recv == "jobs"
+        || recv.ends_with("_q")
+        || recv.ends_with("_queue")
+        || recv.ends_with("_jobs")
+}
+
+/// Is token `i` a guard-acquiring call?  `.lock()`/`.read()`/`.write()`
+/// must be zero-arg AND chased by `.unwrap()`, `.expect(…)`, or `?` (the
+/// poisoning-propagation chain) so that io::Read/Write methods with the
+/// same names never misfire; `lock_shard` is repo-specific and always a
+/// guard.
+pub(crate) fn is_guard_acquisition(toks: &[Tok], i: usize) -> bool {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident || !GUARD_FNS.contains(&t.text.as_str()) {
+        return false;
+    }
+    if !is_call(toks, i) || i == 0 || toks[i - 1].text != "." {
+        return false;
+    }
+    if t.text == "lock_shard" {
+        return true;
+    }
+    if !args_empty(toks, i + 1) {
+        return false;
+    }
+    // token after the `)`
+    let j = i + 3;
+    let nxt = toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+    let nxt2 = toks.get(j + 1).map(|t| t.text.as_str()).unwrap_or("");
+    nxt == "?" || (nxt == "." && (nxt2 == "unwrap" || nxt2 == "expect"))
+}
+
+/// If token `i` is a call into the blocklist, the display name of the
+/// blocking call.
+fn blocking_call(toks: &[Tok], i: usize) -> Option<String> {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    let name = t.text.as_str();
+    // path form: `fs::rename(…)`, `File::open(…)`
+    if i >= 3 && toks[i - 1].text == ":" && toks[i - 2].text == ":" {
+        let seg = toks[i - 3].text.as_str();
+        if FS_PATHS.iter().any(|&(s, f)| s == seg && f == name) {
+            return Some(format!("{seg}::{name}"));
+        }
+    }
+    let mode = BLOCKING.iter().find(|(n, _)| *n == name).map(|(_, m)| m)?;
+    if !is_call(toks, i) {
+        return None;
+    }
+    match mode {
+        Mode::Any => {}
+        Mode::Zero => {
+            if !args_empty(toks, i + 1) {
+                return None;
+            }
+        }
+        Mode::QueueRecv => {
+            if !is_method_call(toks, i) || !args_empty(toks, i + 1) {
+                return None;
+            }
+            match receiver_name(toks, i - 1) {
+                Some(r) if queue_ish(r) => {}
+                _ => return None,
+            }
+        }
+    }
+    Some(name.to_string())
+}
+
+pub fn check(path: &str, toks: &[Tok], test_regions: &[Region], diags: &mut Vec<Diag>) {
+    let n = toks.len();
+    for i in 0..n {
+        if in_regions(i, test_regions) || !is_guard_acquisition(toks, i) {
+            continue;
+        }
+        let acquired_line = toks[i].line;
+        let (lo, mut hi, scope_kind) = match classify_guard_context(toks, i) {
+            GuardCtx::Let(bind) => {
+                let lo = stmt_end(toks, i, n) + 1;
+                let hi = enclosing_block_end(toks, i, n);
+                (lo, hi, format!("guard `{bind}`"))
+            }
+            GuardCtx::MatchScrutinee => {
+                let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.1);
+                (i + 1, hi, "match-scrutinee lock temporary".to_string())
+            }
+            GuardCtx::Cond => {
+                let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.0);
+                (i + 1, hi, "condition lock temporary".to_string())
+            }
+            GuardCtx::LetCond => {
+                let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.1);
+                (i + 1, hi, "if-let/while-let lock temporary".to_string())
+            }
+            GuardCtx::Temp => (i + 1, stmt_end(toks, i, n), "statement lock temporary".to_string()),
+        };
+        // an explicit `drop(<guard>)` ends a named guard's live scope
+        if let GuardCtx::Let(bind) = classify_guard_context(toks, i) {
+            if bind != "<pat>" {
+                for j in lo..hi {
+                    if toks[j].kind == TokKind::Ident
+                        && toks[j].text == "drop"
+                        && toks.get(j + 1).is_some_and(|t| t.text == "(")
+                        && toks.get(j + 2).is_some_and(|t| t.text == bind)
+                    {
+                        hi = j;
+                        break;
+                    }
+                }
+            }
+        }
+        for j in lo..hi.min(n) {
+            if let Some(blk) = blocking_call(toks, j) {
+                diags.push(Diag {
+                    file: path.to_string(),
+                    line: toks[j].line,
+                    rule: GUARD_ACROSS_BLOCKING,
+                    message: format!(
+                        "{scope_kind} (acquired line {acquired_line}) is held across \
+                         blocking call `{blk}`"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! The five repo-specific lint rules, one module per rule, plus the call-
+//! shape helpers they share.  Each rule encodes an invariant this codebase
+//! was burned by in an earlier PR — see CONTRIBUTING.md "Invariants &
+//! lints" for the rule-by-rule history.
+
+pub mod channel_hygiene;
+pub mod counter_discipline;
+pub mod flight_section;
+pub mod guard_blocking;
+pub mod panic_surface;
+
+use super::lexer::{Tok, TokKind};
+
+/// Rule identifiers as they appear in diagnostics and `lint:allow(...)`.
+pub const GUARD_ACROSS_BLOCKING: &str = "guard-across-blocking";
+pub const PANIC_SURFACE: &str = "panic-surface";
+pub const COUNTER_DISCIPLINE: &str = "counter-discipline";
+pub const CHANNEL_HYGIENE: &str = "channel-hygiene";
+pub const FLIGHT_CRITICAL_SECTION: &str = "flight-critical-section";
+/// Malformed `lint:allow` comments (missing/empty reason) — not
+/// suppressible, by design.
+pub const ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// Every rule, in reporting order.
+pub const ALL_RULES: [&str; 6] = [
+    GUARD_ACROSS_BLOCKING,
+    PANIC_SURFACE,
+    COUNTER_DISCIPLINE,
+    CHANNEL_HYGIENE,
+    FLIGHT_CRITICAL_SECTION,
+    ALLOW_SYNTAX,
+];
+
+/// Is token `i` immediately followed by `(`?
+pub(crate) fn is_call(toks: &[Tok], i: usize) -> bool {
+    toks.get(i + 1).is_some_and(|t| t.text == "(")
+}
+
+/// Does the call whose `(` is at `open_idx` have zero arguments?
+pub(crate) fn args_empty(toks: &[Tok], open_idx: usize) -> bool {
+    toks.get(open_idx + 1).is_some_and(|t| t.text == ")")
+}
+
+/// Is token `i` a method call (`.name(`)?
+pub(crate) fn is_method_call(toks: &[Tok], i: usize) -> bool {
+    i >= 1 && toks[i - 1].text == "." && is_call(toks, i)
+}
+
+/// The identifier immediately before the `.` at `dot_idx` — the last
+/// segment of the receiver.  `None` for chained-call receivers (`…)(.`).
+pub(crate) fn receiver_name(toks: &[Tok], dot_idx: usize) -> Option<&str> {
+    if dot_idx == 0 {
+        return None;
+    }
+    let prev = &toks[dot_idx - 1];
+    if prev.kind == TokKind::Ident {
+        Some(&prev.text)
+    } else {
+        None
+    }
+}

@@ -1,0 +1,90 @@
+//! L2 `panic-surface` — `unwrap()`/`expect()`/`panic!`/`debug_assert!` are
+//! forbidden in non-test code under `coordinator/`, `kvcache/`, `runtime/`
+//! and `plan/`.
+//!
+//! The PR-2/PR-4 lesson: `debug_assert!` silently vanishes in release
+//! builds, and an uncontained panic in a worker or prefetcher takes a whole
+//! thread (and with it part of the pool) down.  Checked `Result` paths or a
+//! contained failure (fail one request, keep the thread) are the accepted
+//! replacements; `assert!` stays legal because it *is* the checked form.
+//!
+//! Built-in exemption: `.unwrap()`/`.expect(…)` immediately chasing a
+//! zero-arg `.lock()`/`.read()`/`.write()`/`.wait(…)`/`.lock_shard(…)` call
+//! propagates lock poisoning — it can only fire if another thread already
+//! panicked, so it does not *originate* a panic and is allowed.
+
+use super::super::lexer::{Tok, TokKind};
+use super::super::scope::{in_regions, Region};
+use super::{is_call, PANIC_SURFACE};
+use crate::analysis::Diag;
+
+const PANIC_MACROS: [&str; 7] = [
+    "panic",
+    "unreachable",
+    "todo",
+    "unimplemented",
+    "debug_assert",
+    "debug_assert_eq",
+    "debug_assert_ne",
+];
+
+/// Methods whose `Result` is a poisoning propagation, not a new panic.
+const POISON_SOURCES: [&str; 5] = ["lock", "read", "write", "wait", "lock_shard"];
+
+/// Does the receiver chain of the `.unwrap`/`.expect` at `i` end in a
+/// poisoning source call?  Pattern: `… .lock() .unwrap(` — walk back over
+/// the `( … )` just before the `.` and look at the method name.
+fn propagates_poisoning(toks: &[Tok], i: usize) -> bool {
+    if i < 2 || toks[i - 2].text != ")" {
+        return false;
+    }
+    let mut d = 0i32;
+    let mut k = i as isize - 2;
+    while k >= 0 {
+        let t = &toks[k as usize].text;
+        if t == ")" {
+            d += 1;
+        } else if t == "(" {
+            d -= 1;
+            if d == 0 {
+                break;
+            }
+        }
+        k -= 1;
+    }
+    let m = k - 1;
+    m >= 0
+        && toks[m as usize].kind == TokKind::Ident
+        && POISON_SOURCES.contains(&toks[m as usize].text.as_str())
+}
+
+pub fn check(path: &str, toks: &[Tok], test_regions: &[Region], diags: &mut Vec<Diag>) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || in_regions(i, test_regions) {
+            continue;
+        }
+        let name = t.text.as_str();
+        if (name == "unwrap" || name == "expect")
+            && i >= 1
+            && toks[i - 1].text == "."
+            && is_call(toks, i)
+        {
+            if propagates_poisoning(toks, i) {
+                continue;
+            }
+            diags.push(Diag {
+                file: path.to_string(),
+                line: t.line,
+                rule: PANIC_SURFACE,
+                message: format!("`.{name}()` on a non-poisoning result in lint-gated module"),
+            });
+        } else if PANIC_MACROS.contains(&name) && toks.get(i + 1).is_some_and(|t| t.text == "!") {
+            diags.push(Diag {
+                file: path.to_string(),
+                line: t.line,
+                rule: PANIC_SURFACE,
+                message: format!("`{name}!` in lint-gated module"),
+            });
+        }
+    }
+}

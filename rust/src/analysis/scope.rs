@@ -1,0 +1,356 @@
+//! Brace/scope tracking over the lexed token stream: `#[cfg(test)]` region
+//! detection, function spans, statement boundaries, and the guard-lifetime
+//! classifier that encodes Rust's temporary-scope rules for lock guards
+//! (the part PR 1 got wrong by hand).
+
+use super::lexer::{Tok, TokKind};
+
+/// Inclusive token-index range.
+pub type Region = (usize, usize);
+
+pub fn in_regions(idx: usize, regions: &[Region]) -> bool {
+    regions.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Token ranges covered by `#[cfg(test)]`-attributed items (the attribute
+/// through the item's closing brace or terminating semicolon).
+pub fn find_test_regions(toks: &[Tok]) -> Vec<Region> {
+    let n = toks.len();
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let is_attr = toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && i + 1 < n
+            && toks[i + 1].text == "[";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        // collect the attribute's inner text
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut inner = String::new();
+        while j < n {
+            let t = &toks[j].text;
+            if t == "[" {
+                depth += 1;
+            } else if t == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if depth >= 1 {
+                inner.push_str(t);
+            }
+            j += 1;
+        }
+        if inner != "cfg(test)" {
+            i = j + 1;
+            continue;
+        }
+        // the attributed item spans to its matching close brace (or `;`);
+        // skip any further attributes between the cfg and the item
+        let mut k = j + 1;
+        while k < n && toks[k].text == "#" && k + 1 < n && toks[k + 1].text == "[" {
+            let mut d = 0i32;
+            while k < n {
+                if toks[k].text == "[" {
+                    d += 1;
+                } else if toks[k].text == "]" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        let mut d = 0i32;
+        let mut started = false;
+        while k < n {
+            let t = &toks[k].text;
+            if t == "{" {
+                d += 1;
+                started = true;
+            } else if t == "}" {
+                d -= 1;
+                if started && d == 0 {
+                    break;
+                }
+            } else if t == ";" && !started {
+                break;
+            }
+            k += 1;
+        }
+        regions.push((i, k));
+        i = k + 1;
+    }
+    regions
+}
+
+/// A function definition with a body.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// Token indices of the body's `{` and its matching `}`.
+    pub body: (usize, usize),
+    /// Line of the `fn` keyword.
+    pub line: u32,
+}
+
+/// All `fn name ... { ... }` spans, outer functions before the functions
+/// nested inside them (so "last span containing an index" is innermost).
+pub fn find_fns(toks: &[Tok]) -> Vec<FnSpan> {
+    let n = toks.len();
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let is_fn = toks[i].kind == TokKind::Ident
+            && toks[i].text == "fn"
+            && i + 1 < n
+            && toks[i + 1].kind == TokKind::Ident;
+        if !is_fn {
+            i += 1;
+            continue;
+        }
+        let line = toks[i].line;
+        let mut j = i + 2;
+        let mut paren = 0i32;
+        let mut body = None;
+        while j < n {
+            let t = &toks[j].text;
+            if t == "(" {
+                paren += 1;
+            } else if t == ")" {
+                paren -= 1;
+            } else if t == "{" && paren == 0 {
+                body = Some(j);
+                break;
+            } else if t == ";" && paren == 0 {
+                break;
+            }
+            j += 1;
+        }
+        let Some(b0) = body else {
+            i += 1;
+            continue;
+        };
+        let mut d = 0i32;
+        let mut k = b0;
+        while k < n {
+            if toks[k].text == "{" {
+                d += 1;
+            } else if toks[k].text == "}" {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        fns.push(FnSpan { name: toks[i + 1].text.clone(), body: (b0, k), line });
+        i = b0 + 1; // descend so nested fns are found too
+    }
+    fns
+}
+
+/// Index of the `;` (or unmatched `}`) ending the statement containing
+/// token `i`, treating nested braces as opaque.
+pub fn stmt_end(toks: &[Tok], i: usize, hi: usize) -> usize {
+    let mut d = 0i32;
+    let mut j = i;
+    while j < hi {
+        let t = &toks[j].text;
+        if t == "{" {
+            d += 1;
+        } else if t == "}" {
+            if d == 0 {
+                return j;
+            }
+            d -= 1;
+        } else if t == ";" && d == 0 {
+            return j;
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// End of the innermost brace block containing `i` (the first unmatched
+/// `}` scanning forward).
+pub fn enclosing_block_end(toks: &[Tok], i: usize, hi: usize) -> usize {
+    let mut d = 0i32;
+    let mut j = i;
+    while j < hi {
+        let t = &toks[j].text;
+        if t == "{" {
+            d += 1;
+        } else if t == "}" {
+            if d == 0 {
+                return j;
+            }
+            d -= 1;
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// First token of the statement containing token `i`.
+pub fn stmt_start(toks: &[Tok], i: usize) -> usize {
+    let mut d = 0i32;
+    let mut j = i as isize - 1;
+    while j >= 0 {
+        let t = &toks[j as usize].text;
+        if t == ")" {
+            d += 1;
+        } else if t == "(" {
+            d -= 1;
+        } else if (t == ";" || t == "{" || t == "}") && d == 0 {
+            return j as usize + 1;
+        }
+        j -= 1;
+    }
+    0
+}
+
+/// How long a lock guard produced at token `i` stays alive.  This encodes
+/// Rust's temporary-scope rules (edition 2021), which is exactly the part
+/// that makes guard-across-blocking hard to review by eye.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GuardCtx {
+    /// `let g = x.lock()…;` — named guard, lives to the end of the
+    /// enclosing block (or an explicit `drop(g)`).
+    Let(String),
+    /// Acquired in a `match` scrutinee — the temporary lives through the
+    /// whole match expression.
+    MatchScrutinee,
+    /// Plain `if`/`while` condition — the temporary dies at the `{`.
+    Cond,
+    /// `if let` / `while let` scrutinee — lives through the body block.
+    LetCond,
+    /// Plain expression statement — dies at the `;`.
+    Temp,
+}
+
+pub fn classify_guard_context(toks: &[Tok], i: usize) -> GuardCtx {
+    let s = stmt_start(toks, i);
+    // a `match` between statement start and the acquisition wins: the
+    // temporary is a scrutinee even when the match is a `let` initializer
+    let mut d = 0i32;
+    for tok in toks.iter().take(i).skip(s) {
+        let t = &tok.text;
+        if t == "(" || t == "[" {
+            d += 1;
+        } else if t == ")" || t == "]" {
+            d -= 1;
+        } else if tok.kind == TokKind::Ident && t == "match" && d == 0 {
+            return GuardCtx::MatchScrutinee;
+        }
+    }
+    let first = toks.get(s).map(|t| t.text.as_str()).unwrap_or("");
+    let second = toks.get(s + 1).map(|t| t.text.as_str()).unwrap_or("");
+    match first {
+        "if" | "while" => {
+            if second == "let" {
+                GuardCtx::LetCond
+            } else {
+                GuardCtx::Cond
+            }
+        }
+        "let" => {
+            let mut k = s + 1;
+            while k < i && toks[k].text == "mut" {
+                k += 1;
+            }
+            let name = if k < i && toks[k].kind == TokKind::Ident {
+                toks[k].text.clone()
+            } else {
+                "<pat>".to_string()
+            };
+            GuardCtx::Let(name)
+        }
+        _ => GuardCtx::Temp,
+    }
+}
+
+/// The first `{ … }` block at paren depth 0 after token `i`:
+/// `(open_idx, close_idx)`.
+pub fn block_after(toks: &[Tok], i: usize, hi: usize) -> Option<(usize, usize)> {
+    let mut d = 0i32;
+    let mut j = i;
+    while j < hi {
+        let t = &toks[j].text;
+        if t == "(" || t == "[" {
+            d += 1;
+        } else if t == ")" || t == "]" {
+            d -= 1;
+        } else if t == "{" && d == 0 {
+            let mut bd = 0i32;
+            let mut k = j;
+            while k < hi {
+                if toks[k].text == "{" {
+                    bd += 1;
+                } else if toks[k].text == "}" {
+                    bd -= 1;
+                    if bd == 0 {
+                        return Some((j, k));
+                    }
+                }
+                k += 1;
+            }
+            return Some((j, hi));
+        }
+        j += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    #[test]
+    fn cfg_test_region_covers_mod() {
+        let (toks, _) = lex("fn a() {}\n#[cfg(test)]\nmod tests { fn t() {} }\nfn b() {}");
+        let regions = find_test_regions(&toks);
+        assert_eq!(regions.len(), 1);
+        let a = toks.iter().position(|t| t.text == "t").unwrap();
+        assert!(in_regions(a, &regions));
+        let b = toks.iter().position(|t| t.text == "b").unwrap();
+        assert!(!in_regions(b, &regions));
+    }
+
+    #[test]
+    fn guard_contexts() {
+        let (toks, _) = lex(
+            "fn f() { let g = m.lock().unwrap(); \
+             let x = match q.lock().unwrap().recv() { _ => 0 }; \
+             if m.lock().unwrap().is_empty() { } \
+             m.lock().unwrap().push(1); }",
+        );
+        let locks: Vec<usize> = toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.text == "lock")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(classify_guard_context(&toks, locks[0]), GuardCtx::Let("g".into()));
+        assert_eq!(classify_guard_context(&toks, locks[1]), GuardCtx::MatchScrutinee);
+        assert_eq!(classify_guard_context(&toks, locks[2]), GuardCtx::Cond);
+        assert_eq!(classify_guard_context(&toks, locks[3]), GuardCtx::Temp);
+    }
+
+    #[test]
+    fn fn_spans_nest() {
+        let (toks, _) = lex("fn outer() { fn inner() { } }");
+        let fns = find_fns(&toks);
+        assert_eq!(fns.len(), 2);
+        assert_eq!(fns[0].name, "outer");
+        assert_eq!(fns[1].name, "inner");
+        assert!(fns[0].body.0 < fns[1].body.0 && fns[1].body.1 < fns[0].body.1);
+    }
+}

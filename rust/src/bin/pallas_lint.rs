@@ -1,0 +1,88 @@
+//! `pallas-lint` — the repo's invariant lint driver.
+//!
+//! ```text
+//! pallas_lint [--root DIR] [--format text|json|summary]
+//! ```
+//!
+//! Walks `rust/src`, `rust/xla-stub`, `rust/tests` and `benches/` under the
+//! repo root, runs the five invariant rules (see `src/analysis/`), and
+//! prints diagnostics.  Exit codes: 0 clean, 1 violations found, 2 usage or
+//! I/O error.  `--root` defaults to the current directory, falling back to
+//! the parent when invoked from inside `rust/` (so `cargo run --bin
+//! pallas_lint` works from either level).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use infoflow_kv::analysis;
+
+enum Format {
+    Text,
+    Json,
+    Summary,
+}
+
+fn usage() -> ExitCode {
+    eprintln!("usage: pallas_lint [--root DIR] [--format text|json|summary]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut format = Format::Text;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(d) => root = Some(PathBuf::from(d)),
+                None => return usage(),
+            },
+            "--format" => match args.next().as_deref() {
+                Some("text") => format = Format::Text,
+                Some("json") => format = Format::Json,
+                Some("summary") => format = Format::Summary,
+                _ => return usage(),
+            },
+            "--help" | "-h" => {
+                println!("usage: pallas_lint [--root DIR] [--format text|json|summary]");
+                return ExitCode::SUCCESS;
+            }
+            _ => return usage(),
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        // `cargo run` from inside rust/ leaves the walk roots one level up
+        let here = PathBuf::from(".");
+        if here.join("rust/src").is_dir() {
+            here
+        } else if PathBuf::from("../rust/src").is_dir() {
+            PathBuf::from("..")
+        } else {
+            here
+        }
+    });
+    let report = match analysis::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    match format {
+        Format::Text => {
+            print!("{}", report.render_text());
+            eprintln!(
+                "pallas-lint: {} file(s) scanned, {} violation(s)",
+                report.files_scanned,
+                report.diags.len()
+            );
+        }
+        Format::Json => println!("{}", report.to_json().to_string_pretty()),
+        Format::Summary => print!("{}", report.render_summary()),
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

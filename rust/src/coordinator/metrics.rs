@@ -68,8 +68,7 @@ struct SeriesSnapshot {
 
 impl SeriesSnapshot {
     fn summarize(mut self) -> (u64, f64, f64, f64) {
-        self.samples
-            .sort_by(|a, b| a.partial_cmp(b).expect("latency samples are finite"));
+        self.samples.sort_by(f64::total_cmp);
         let p50 = percentile(&self.samples, 0.5);
         let p95 = percentile(&self.samples, 0.95);
         (self.seen, self.mean, p50, p95)

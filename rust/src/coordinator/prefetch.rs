@@ -151,7 +151,9 @@ impl PrefetchQueue {
                 if !live {
                     continue; // stale (superseded or already popped) entry
                 }
-                let qj = st.slots[slot].take().expect("checked live above");
+                let Some(qj) = st.slots[slot].take() else {
+                    continue; // unreachable given `live`, but stay panic-free
+                };
                 st.free.push(slot);
                 st.len -= 1;
                 for id in &qj.job.ids {

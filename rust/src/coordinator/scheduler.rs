@@ -140,8 +140,7 @@ impl<T> DecodeScheduler<T> {
         self.slots = keep;
         self.retired += retired.len() as u64;
         if self.slots.len() > 1 {
-            let front = self.slots.pop_front().expect("len > 1");
-            self.slots.push_back(front);
+            self.slots.rotate_left(1);
         }
         retired
     }

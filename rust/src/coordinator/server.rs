@@ -377,6 +377,7 @@ impl Server {
                             )
                         }
                     })
+                    // lint:allow(panic-surface, reason="thread spawn failure at startup is unrecoverable; surfacing it as a panic is deliberate")
                     .expect("spawning worker thread"),
             );
         }
@@ -425,6 +426,7 @@ impl Server {
                                 }
                             }
                         })
+                        // lint:allow(panic-surface, reason="thread spawn failure at startup is unrecoverable; surfacing it as a panic is deliberate")
                         .expect("spawning prefetch thread"),
                 );
             }
@@ -437,6 +439,7 @@ impl Server {
                 let prefetch_q = prefetch_q.clone();
                 move || router_loop(cfg.batch, rx, work_tx, prefetch_q, sh)
             })
+            // lint:allow(panic-surface, reason="thread spawn failure at startup is unrecoverable; surfacing it as a panic is deliberate")
             .expect("spawning router thread");
         Server {
             tx: Some(tx),
@@ -696,6 +699,7 @@ fn worker_loop(handler: &mut Handler, work_rx: &Mutex<Receiver<WorkItem>>, share
         // Standard shared-receiver pattern: the lock is held across the
         // blocking recv, which just moves the other idle workers' wait
         // from the channel to the mutex.
+        // lint:allow(guard-across-blocking, reason="shared-receiver pattern: idle workers park on the mutex instead of the channel; no other lock is ever taken while it is held")
         let item = match work_rx.lock().unwrap().recv() {
             Ok(item) => item,
             Err(_) => break, // router hung up: no more work is coming
@@ -827,9 +831,14 @@ fn scheduled_worker_loop(
         while sched.has_capacity() {
             let Some((req, enq)) = pending.pop_front() else { break };
             if let Some(q) = prep_query(pipeline, store, req, enq, shared) {
-                sched
-                    .admit(q)
-                    .unwrap_or_else(|_| panic!("admission after capacity check"));
+                if sched.admit(q).is_err() {
+                    // Only reachable if has_capacity lied (a logic bug):
+                    // dropping the query fails that one request via its
+                    // closed respond/stream channels instead of taking the
+                    // whole worker down.
+                    shared.metrics.incr("admit_rejected");
+                    eprintln!("[server] admission rejected after capacity check");
+                }
             }
         }
         // One interleaved decode tick across every in-flight task.
@@ -930,7 +939,13 @@ fn tick_decode(
             let mut outs = outs.into_iter();
             for q in sched.tasks_mut() {
                 if q.task.has_pending_model() {
-                    let out = outs.next().expect("one decode output per pending task");
+                    let Some(out) = outs.next() else {
+                        // Output slate shorter than the task slate: a model
+                        // contract breach.  Fail this task, keep the tick.
+                        eprintln!("[server] decode output missing for pending task");
+                        q.failed = true;
+                        continue;
+                    };
                     if let Err(e) = q.task.complete_step(&out) {
                         eprintln!("[server] decode step failed: {e:#}");
                         q.failed = true;

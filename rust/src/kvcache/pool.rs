@@ -169,12 +169,14 @@ pub struct PooledContext<'a> {
 impl Deref for PooledContext<'_> {
     type Target = AssembledContext;
     fn deref(&self) -> &AssembledContext {
+        // lint:allow(panic-surface, reason="Deref cannot return Result; ctx is only None after Drop runs, which ends all borrows")
         self.ctx.as_ref().expect("checked out context present until drop")
     }
 }
 
 impl DerefMut for PooledContext<'_> {
     fn deref_mut(&mut self) -> &mut AssembledContext {
+        // lint:allow(panic-surface, reason="DerefMut cannot return Result; ctx is only None after Drop runs, which ends all borrows")
         self.ctx.as_mut().expect("checked out context present until drop")
     }
 }

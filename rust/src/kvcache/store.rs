@@ -544,6 +544,7 @@ impl ChunkStore {
     /// Write one evicted chunk to the tier.  MUST be called with the
     /// chunk's flight held.  Re-checks residency around the write so an
     /// insert racing the eviction always ends with exactly one live copy.
+    // lint:requires(flight)
     fn spill_one(&self, tier: &Arc<SpillTier>, chunk: &Arc<ChunkKv>) {
         if self.probe(chunk.id).is_some() {
             return; // re-inserted between eviction and spill
@@ -570,6 +571,7 @@ impl ChunkStore {
     /// live working set), spill it under our own flight — `spill_victims`
     /// had to skip it because the slot was taken (by us) — so the chunk is
     /// moved to disk instead of silently dropped.
+    // lint:requires(flight)
     fn insert_under_flight(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
         let id = chunk.id;
         let arc = self.insert(chunk);

@@ -151,6 +151,7 @@ impl SpillTier {
             while index.bytes > budget_bytes {
                 let Some(&(_, id, _)) = oldest.next() else { break };
                 if index.remove(id).is_some() {
+                    // lint:allow(guard-across-blocking, reason="startup trim: unlink must stay inside the index critical section (PR-4 re-spill race class)")
                     let _ = fs::remove_file(tier.path(id));
                     tier.evictions.fetch_add(1, Ordering::Relaxed);
                 }
@@ -220,10 +221,12 @@ impl SpillTier {
         // above stays outside the lock; only rename/unlink sit inside.
         {
             let mut index = self.index.lock().unwrap();
+            // lint:allow(guard-across-blocking, reason="publish rename must sit inside the index critical section; splitting it reintroduces the PR-4 re-spill race")
             fs::rename(&tmp, &final_path)
                 .map_err(|e| anyhow!("renaming into {}: {e}", final_path.display()))?;
             index.insert(chunk.id, size);
             for id in index.evict_to(self.budget_bytes) {
+                // lint:allow(guard-across-blocking, reason="victim unlink must sit inside the same critical section as the rename (PR-4 re-spill race)")
                 let _ = fs::remove_file(self.path(id));
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
@@ -236,6 +239,7 @@ impl SpillTier {
     /// spilled).  The index entry and the file are both gone before this
     /// returns — corrupt files included, so a bad record cannot wedge its
     /// id (the caller just falls back to a re-prefill).
+    // lint:requires(flight)
     pub fn take(&self, id: ChunkId) -> Result<Option<ChunkKv>> {
         if self.index.lock().unwrap().remove(id).is_none() {
             return Ok(None);
@@ -248,6 +252,7 @@ impl SpillTier {
     }
 
     /// Drop a spilled chunk without reading it; `true` if one was indexed.
+    // lint:requires(flight)
     pub fn discard(&self, id: ChunkId) -> bool {
         if self.index.lock().unwrap().remove(id).is_none() {
             return false;

@@ -28,7 +28,10 @@
 //!   score → select → recompute → decode), driven by a plan.
 //! * [`coordinator::Server`] — threaded request loop with dynamic batching.
 //! * [`bench_harness`] — `repro bench table1..table6 fig2..fig4`.
+//! * [`analysis`] — `pallas-lint`, the in-repo invariant lint pass
+//!   (`cargo run --bin pallas_lint`).
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod eval;

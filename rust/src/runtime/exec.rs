@@ -271,26 +271,27 @@ impl ModelSession {
         let mut cached: Option<(usize, Arc<Executable>)> = None;
         for &i in &order {
             let item = &items[i];
-            let stale = match &cached {
-                Some((b, _)) => *b != item.bucket,
-                None => true,
+            let exe = match &cached {
+                Some((b, e)) if *b == item.bucket => e.clone(),
+                _ => {
+                    let e = self.runtime.executable("decode", Some(item.bucket))?;
+                    cached = Some((item.bucket, e.clone()));
+                    e
+                }
             };
-            if stale {
-                let e = self.runtime.executable("decode", Some(item.bucket))?;
-                cached = Some((item.bucket, e));
-            }
-            let (_, exe) = cached.as_ref().expect("populated above");
             let t = xla::Literal::scalar(item.tok);
             let p = xla::Literal::scalar(item.pos);
             let [k_all, v_all, k_gpos, k_valid] = item.kv.literals();
-            let o = self.run_exe(exe, &[&t, &p, k_all, v_all, k_gpos, k_valid])?;
+            let o = self.run_exe(&exe, &[&t, &p, k_all, v_all, k_gpos, k_valid])?;
             out[i] = Some(DecodeOut {
                 logits: literal_to_tensor_f(&o[0])?,
                 new_k: literal_to_tensor_f(&o[1])?,
                 new_v: literal_to_tensor_f(&o[2])?,
             });
         }
-        Ok(out.into_iter().map(|o| o.expect("every batch item is served")).collect())
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("decode batch left an item unserved")))
+            .collect()
     }
 
     /// CacheBlend-style shallow-layer deviation probe. Returns [N] scores.

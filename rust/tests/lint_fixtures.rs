@@ -1,0 +1,529 @@
+//! Fixture suite for `pallas-lint` (`src/analysis/`).
+//!
+//! For each rule: at least one snippet that MUST trigger it and one
+//! near-miss that must NOT, exercising the exact scope/lifetime reasoning
+//! the rule encodes.  Plus: `lint:allow` escape-hatch behavior, the
+//! `allow-syntax` meta-rule, a JSON round-trip through the repo's own
+//! `util/json.rs` parser, and a self-check that the whole tree lints
+//! clean (the dogfood gate CI relies on).
+//!
+//! Snippets are linted under *virtual paths* because rule applicability is
+//! path-scoped (e.g. `panic-surface` only fires under the gated dirs).
+
+use infoflow_kv::analysis::{lint_str, Diag, TreeLint};
+use infoflow_kv::util::json::Json;
+
+/// Virtual path inside the panic-gated coordinator dir.
+const COORD: &str = "rust/src/coordinator/fixture.rs";
+/// Virtual path inside kvcache (flight rules; panic-gated too).
+const KVCACHE: &str = "rust/src/kvcache/fixture.rs";
+/// Virtual path with the `tier.rs` basename (raw-fs-op checks).
+const TIER: &str = "rust/src/kvcache/tier.rs";
+
+fn rule_diags<'a>(diags: &'a [Diag], rule: &str) -> Vec<&'a Diag> {
+    diags.iter().filter(|d| d.rule == rule).collect()
+}
+
+// ---------------------------------------------------------------- L1
+
+#[test]
+fn guard_across_blocking_triggers_on_recv_under_guard() {
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(m: &Mutex<Vec<u8>>, rx: &Receiver<u8>) {
+    let g = m.lock().unwrap();
+    let v = rx.recv();
+    drop(g);
+    let _ = v;
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "guard-across-blocking");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert_eq!(hits[0].line, 4);
+    assert!(hits[0].message.contains("guard `g`"));
+    assert!(hits[0].message.contains("`recv`"));
+}
+
+#[test]
+fn guard_across_blocking_near_miss_guard_dropped_first() {
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(m: &Mutex<Vec<u8>>, rx: &Receiver<u8>) {
+    let g = m.lock().unwrap();
+    drop(g);
+    let _ = rx.recv();
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "guard-across-blocking").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn guard_across_blocking_triggers_on_match_scrutinee_temporary() {
+    // The PR-1 worker_loop shape: the scrutinee temporary lives through
+    // the whole match, so the lock IS held across the recv.
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(work: &Mutex<Receiver<u8>>) -> u8 {
+    match work.lock().unwrap().recv() {
+        Ok(v) => v,
+        Err(_) => 0,
+    }
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "guard-across-blocking");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("match-scrutinee"));
+}
+
+#[test]
+fn guard_across_blocking_near_miss_condition_temporary_dies_at_brace() {
+    // A plain `if` condition's lock temporary drops before the body runs,
+    // so blocking inside the body is fine.
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(m: &Mutex<Vec<u8>>, rx: &Receiver<u8>) {
+    if m.lock().unwrap().is_empty() {
+        let _ = rx.recv();
+    }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "guard-across-blocking").is_empty(), "{diags:?}");
+}
+
+// ---------------------------------------------------------------- L2
+
+#[test]
+fn panic_surface_triggers_on_unwrap_in_gated_dir() {
+    let diags = lint_str(COORD, "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    let hits = rule_diags(&diags, "panic-surface");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains(".unwrap()"));
+}
+
+#[test]
+fn panic_surface_triggers_on_debug_assert() {
+    let diags = lint_str(COORD, "fn f(n: usize) { debug_assert!(n > 0); }\n");
+    assert_eq!(rule_diags(&diags, "panic-surface").len(), 1, "{diags:?}");
+    // plain assert! is the checked form and stays legal
+    let diags = lint_str(COORD, "fn f(n: usize) { assert!(n > 0); }\n");
+    assert!(rule_diags(&diags, "panic-surface").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn panic_surface_near_miss_lock_poisoning_is_exempt() {
+    let diags = lint_str(
+        COORD,
+        "fn f(m: &Mutex<u8>) -> u8 { *m.lock().unwrap() }\n",
+    );
+    assert!(rule_diags(&diags, "panic-surface").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn panic_surface_near_miss_outside_gated_dirs() {
+    let diags = lint_str("rust/src/util/fixture.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    assert!(rule_diags(&diags, "panic-surface").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn panic_surface_near_miss_in_cfg_test_mod() {
+    let diags = lint_str(
+        COORD,
+        r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t(x: Option<u8>) { x.unwrap(); }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "panic-surface").is_empty(), "{diags:?}");
+}
+
+// ------------------------------------------------- lint:allow escape hatch
+
+#[test]
+fn allow_with_reason_suppresses() {
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(x: Option<u8>) -> u8 {
+    // lint:allow(panic-surface, reason="fixture: invariant by construction")
+    x.unwrap()
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "panic-surface").is_empty(), "{diags:?}");
+    assert!(rule_diags(&diags, "allow-syntax").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn allow_without_reason_is_rejected_and_does_not_suppress() {
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(x: Option<u8>) -> u8 {
+    // lint:allow(panic-surface)
+    x.unwrap()
+}
+"#,
+    );
+    assert_eq!(rule_diags(&diags, "allow-syntax").len(), 1, "{diags:?}");
+    assert_eq!(rule_diags(&diags, "panic-surface").len(), 1, "{diags:?}");
+}
+
+#[test]
+fn allow_for_the_wrong_rule_does_not_suppress() {
+    let diags = lint_str(
+        COORD,
+        r#"
+fn f(x: Option<u8>) -> u8 {
+    // lint:allow(guard-across-blocking, reason="wrong rule")
+    x.unwrap()
+}
+"#,
+    );
+    assert_eq!(rule_diags(&diags, "panic-surface").len(), 1, "{diags:?}");
+}
+
+// ---------------------------------------------------------------- L3
+
+#[test]
+fn counter_discipline_triggers_on_orphaned_read() {
+    let diags = lint_str(COORD, "fn f(m: &Metrics) -> u64 { m.counter(\"ghost\") }\n");
+    let hits = rule_diags(&diags, "counter-discipline");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("\"ghost\""));
+}
+
+#[test]
+fn counter_discipline_near_miss_with_increment_site() {
+    let diags = lint_str(
+        COORD,
+        r#"
+fn bump(m: &Metrics) { m.incr("ghost"); }
+fn read(m: &Metrics) -> u64 { m.counter("ghost") }
+"#,
+    );
+    assert!(rule_diags(&diags, "counter-discipline").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn counter_discipline_test_reads_accept_test_writes() {
+    // A test that writes its own keys and reads them back is exercising
+    // the registry, not consuming a production tripwire.
+    let diags = lint_str(
+        COORD,
+        r#"
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let m = Metrics::new();
+        m.incr("req");
+        assert_eq!(m.counter("req"), 1);
+    }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "counter-discipline").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn counter_discipline_triggers_on_unbumped_atomic() {
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+struct Stats {
+    hits: AtomicU64,
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "counter-discipline");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("never bumped"));
+}
+
+#[test]
+fn counter_discipline_triggers_on_unconsumed_atomic() {
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+struct Stats {
+    hits: AtomicU64,
+}
+impl Stats {
+    fn hit(&self) { self.hits.fetch_add(1, Ordering::Relaxed); }
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "counter-discipline");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("never exported"));
+}
+
+#[test]
+fn counter_discipline_near_miss_bumped_and_loaded_atomic() {
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+struct Stats {
+    hits: AtomicU64,
+}
+impl Stats {
+    fn hit(&self) { self.hits.fetch_add(1, Ordering::Relaxed); }
+    fn total(&self) -> u64 { self.hits.load(Ordering::Relaxed) }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "counter-discipline").is_empty(), "{diags:?}");
+}
+
+// ---------------------------------------------------------------- L4
+
+#[test]
+fn channel_hygiene_triggers_on_undroppable_sender() {
+    let diags = lint_str(
+        COORD,
+        r#"
+pub struct Srv {
+    tx: Option<SyncSender<u8>>,
+    workers: Vec<JoinHandle<()>>,
+}
+impl Srv {
+    pub fn run(&mut self) {}
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "channel-hygiene");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("`tx`"));
+}
+
+#[test]
+fn channel_hygiene_triggers_on_unclosed_queue() {
+    let diags = lint_str(
+        COORD,
+        r#"
+pub struct Srv {
+    prefetch_q: Option<Arc<PrefetchQueue>>,
+    workers: Vec<JoinHandle<()>>,
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "channel-hygiene");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("closeable queue"));
+}
+
+#[test]
+fn channel_hygiene_near_miss_sender_taken_in_finish() {
+    let diags = lint_str(
+        COORD,
+        r#"
+pub struct Srv {
+    tx: Option<SyncSender<u8>>,
+    workers: Vec<JoinHandle<()>>,
+}
+impl Srv {
+    pub fn finish(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "channel-hygiene").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn channel_hygiene_near_miss_struct_without_thread_handles() {
+    // Plain request/response shapes own senders but no threads — dropping
+    // them is the receiver's signal, not a shutdown obligation.
+    let diags = lint_str(
+        COORD,
+        r#"
+pub struct Request {
+    respond: SyncSender<u8>,
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "channel-hygiene").is_empty(), "{diags:?}");
+}
+
+// ---------------------------------------------------------------- L5
+
+#[test]
+fn flight_section_triggers_outside_any_guard() {
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+fn evict(tier: &SpillTier, id: u64) {
+    tier.discard(id);
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "flight-critical-section");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("`discard`"));
+    assert!(hits[0].message.contains("`evict`"));
+}
+
+#[test]
+fn flight_section_near_miss_under_flight_guard() {
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+fn evict(store: &Store, tier: &SpillTier, id: u64) {
+    let _g = FlightGuard { flights: &store.flights, id };
+    tier.discard(id);
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "flight-critical-section").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn flight_section_near_miss_with_requires_marker() {
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+// lint:requires(flight)
+fn evict(tier: &SpillTier, id: u64) {
+    tier.discard(id);
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "flight-critical-section").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn flight_section_guard_scope_must_still_enclose_the_call() {
+    // The guard's block closes before the call — not a live scope.
+    let diags = lint_str(
+        KVCACHE,
+        r#"
+fn evict(store: &Store, tier: &SpillTier, id: u64) {
+    {
+        let _g = FlightGuard { flights: &store.flights, id };
+    }
+    tier.discard(id);
+}
+"#,
+    );
+    assert_eq!(rule_diags(&diags, "flight-critical-section").len(), 1, "{diags:?}");
+}
+
+#[test]
+fn flight_section_tier_fs_ops_require_index_lock() {
+    let diags = lint_str(
+        TIER,
+        r#"
+impl SpillTier {
+    fn nuke(&self, id: u64) {
+        let _ = fs::remove_file(self.path(id));
+    }
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "flight-critical-section");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("`remove_file`"));
+}
+
+#[test]
+fn flight_section_near_miss_fs_op_inside_index_lock() {
+    let diags = lint_str(
+        TIER,
+        r#"
+impl SpillTier {
+    fn nuke(&self, id: u64) {
+        let mut index = self.index.lock().unwrap();
+        index.remove(id);
+        let _ = fs::remove_file(self.path(id));
+    }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "flight-critical-section").is_empty(), "{diags:?}");
+    // …and the unlink-under-lock correctly surfaces as guard-across-blocking
+    // instead (the two rules deliberately pull against each other here; the
+    // real tier.rs carries the PR-4 lint:allow justification).
+    assert_eq!(rule_diags(&diags, "guard-across-blocking").len(), 1, "{diags:?}");
+}
+
+// ------------------------------------------------- report plumbing
+
+#[test]
+fn json_output_round_trips_through_util_json() {
+    let mut tl = TreeLint::new();
+    tl.check_source(COORD, "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    tl.check_source(
+        "rust/src/coordinator/other.rs",
+        "fn g(n: usize) { debug_assert!(n > 0); }\n",
+    );
+    let report = tl.finish();
+    assert_eq!(report.files_scanned, 2);
+    assert!(!report.is_clean());
+
+    let rendered = report.to_json().to_string_pretty();
+    let parsed = Json::parse(&rendered).expect("pallas-lint JSON must parse with util/json.rs");
+    assert_eq!(parsed.get("files_scanned").unwrap().as_usize().unwrap(), 2);
+    let counts = parsed.get("counts").unwrap();
+    assert_eq!(counts.get("panic-surface").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(counts.get("guard-across-blocking").unwrap().as_usize().unwrap(), 0);
+    let violations = parsed.get("violations").unwrap().as_arr().unwrap();
+    assert_eq!(violations.len(), 2);
+    assert_eq!(violations[0].get("file").unwrap().as_str().unwrap(), COORD);
+    assert_eq!(violations[0].get("rule").unwrap().as_str().unwrap(), "panic-surface");
+    assert!(violations[0].get("line").unwrap().as_usize().unwrap() >= 1);
+    assert!(!violations[0].get("message").unwrap().as_str().unwrap().is_empty());
+}
+
+#[test]
+fn summary_lists_every_rule_with_counts() {
+    let mut tl = TreeLint::new();
+    tl.check_source(COORD, "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    let report = tl.finish();
+    let summary = report.render_summary();
+    for rule in [
+        "guard-across-blocking",
+        "panic-surface",
+        "counter-discipline",
+        "channel-hygiene",
+        "flight-critical-section",
+        "allow-syntax",
+    ] {
+        assert!(summary.contains(rule), "summary missing {rule}:\n{summary}");
+    }
+    assert!(summary.contains("| `panic-surface` | 1 |"), "{summary}");
+}
+
+// ------------------------------------------------- the dogfood gate
+
+#[test]
+fn whole_tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level below the repo root");
+    let report = infoflow_kv::analysis::lint_tree(root).expect("tree walk");
+    assert!(
+        report.is_clean(),
+        "pallas-lint violations in the tree:\n{}",
+        report.render_text()
+    );
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned ({}) — walk roots moved?",
+        report.files_scanned
+    );
+}
