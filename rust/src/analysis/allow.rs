@@ -9,15 +9,42 @@
 //!   below) the comment as one whose CALLERS must hold the chunk's
 //!   flight slot; the flight-critical-section rule exempts the marked
 //!   body and checks call sites instead.
+//! * `// lint:nonblocking(reason="…")` — asserts the function declared just
+//!   below never blocks; the call-graph may-block fixpoint stops
+//!   propagating through it.  Reason mandatory, like `lint:allow`.
+//! * `// lint:domain(local|global|unrotated)` — seeds the position-domain
+//!   dataflow: the fn (or struct field) declared just below carries RoPE
+//!   positions in that domain.
+//! * `// lint:converts(<from>-><to>)` — declares the fn below a legal
+//!   position-domain conversion point (e.g. re-rotation `local->global`).
+//!
+//! Only *control comments* are parsed — the comment text must begin with
+//! `lint:` once the comment sigils (`//`, `//!`, `/*`, leading `*`) are
+//! stripped.  A trailing comment after code still qualifies; prose that
+//! merely mentions the syntax (these docs included) does not.
 
 use std::collections::{HashMap, HashSet};
 
 use super::lexer::Comment;
 
-/// Per-file suppression table: rule name -> suppressed lines.
+/// One parsed waiver/marker site, retained for `--list-allows` auditing.
+#[derive(Clone, Debug)]
+pub struct WaiverSite {
+    pub line: u32,
+    /// `allow` / `requires` / `nonblocking`.
+    pub kind: &'static str,
+    /// The suppressed rule for allows; `flight` for requires; empty for
+    /// nonblocking.
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Per-file suppression table: rule name -> suppressed lines, plus the
+/// audit-facing entry list (reasons retained).
 #[derive(Default, Debug)]
 pub struct Allows {
     map: HashMap<String, HashSet<u32>>,
+    pub entries: Vec<WaiverSite>,
 }
 
 impl Allows {
@@ -26,20 +53,40 @@ impl Allows {
     }
 }
 
+/// Is this comment a lint *control* comment — one whose text, after the
+/// comment sigils (`/`, `!`, `*`) and leading whitespace, begins with
+/// `lint:`?  Only control comments are parsed for markers; prose that
+/// merely *mentions* the syntax (like this module's own docs, which quote
+/// `lint:allow(<rule>, reason="…")` verbatim) must never be parsed, or the
+/// lint would flag its own documentation as malformed.
+fn is_control_comment(text: &str) -> bool {
+    text.trim_start_matches(['/', '!', '*', ' ', '\t'])
+        .starts_with("lint:")
+}
+
 /// Parse every `lint:allow(...)` in `comments`.  Returns the suppression
 /// table plus `(line, message)` pairs for malformed allows.
 pub fn parse_allows(comments: &[Comment]) -> (Allows, Vec<(u32, String)>) {
     let mut allows = Allows::default();
     let mut bad = Vec::new();
     for c in comments {
+        if !is_control_comment(&c.text) {
+            continue;
+        }
         let mut rest = c.text.as_str();
         while let Some(pos) = rest.find("lint:allow(") {
             rest = &rest[pos + "lint:allow(".len()..];
             match parse_one(rest) {
-                Ok((rule, consumed)) => {
-                    let lines = allows.map.entry(rule).or_default();
+                Ok((rule, reason, consumed)) => {
+                    let lines = allows.map.entry(rule.clone()).or_default();
                     lines.insert(c.line);
                     lines.insert(c.line + 1);
+                    allows.entries.push(WaiverSite {
+                        line: c.line,
+                        kind: "allow",
+                        rule,
+                        reason,
+                    });
                     rest = &rest[consumed..];
                 }
                 Err(msg) => {
@@ -53,8 +100,8 @@ pub fn parse_allows(comments: &[Comment]) -> (Allows, Vec<(u32, String)>) {
 }
 
 /// Parse `<rule>, reason="…")` (the part after `lint:allow(`).  Returns the
-/// rule name and the byte length consumed on success.
-fn parse_one(s: &str) -> Result<(String, usize), String> {
+/// rule name, the reason, and the byte length consumed on success.
+fn parse_one(s: &str) -> Result<(String, String, usize), String> {
     let b = s.as_bytes();
     let mut i = 0usize;
     while i < b.len() && b[i].is_ascii_whitespace() {
@@ -118,13 +165,14 @@ fn parse_one(s: &str) -> Result<(String, usize), String> {
     if reason.trim().is_empty() {
         return Err(format!("lint:allow({rule}) needs a non-empty reason=\"...\""));
     }
-    Ok((rule, i))
+    Ok((rule, reason.to_string(), i))
 }
 
 /// Lines bearing a `lint:requires(flight)` marker.
 pub fn requires_flight_lines(comments: &[Comment]) -> HashSet<u32> {
     comments
         .iter()
+        .filter(|c| is_control_comment(&c.text))
         .filter(|c| {
             c.text.find("lint:requires(").is_some_and(|p| {
                 c.text[p + "lint:requires(".len()..].trim_start().starts_with("flight")
@@ -132,6 +180,126 @@ pub fn requires_flight_lines(comments: &[Comment]) -> HashSet<u32> {
         })
         .map(|c| c.line)
         .collect()
+}
+
+/// Parse `lint:nonblocking(reason="…")` markers.  Returns `(line, reason)`
+/// pairs for well-formed markers and `(line, message)` for malformed ones
+/// (a nonblocking assertion without a reason is an `allow-syntax`
+/// diagnostic, same policy as `lint:allow`).
+pub fn parse_nonblocking(comments: &[Comment]) -> (Vec<(u32, String)>, Vec<(u32, String)>) {
+    let mut ok = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        if !is_control_comment(&c.text) {
+            continue;
+        }
+        let Some(pos) = c.text.find("lint:nonblocking(") else {
+            continue;
+        };
+        let rest = &c.text[pos + "lint:nonblocking(".len()..];
+        match parse_reason_paren(rest) {
+            Ok(reason) => ok.push((c.line, reason)),
+            Err(msg) => bad.push((c.line, format!("lint:nonblocking(...): {msg}"))),
+        }
+    }
+    (ok, bad)
+}
+
+/// Parse `reason="…")` — the shared tail of `lint:nonblocking(`.
+fn parse_reason_paren(s: &str) -> Result<String, String> {
+    let t = s.trim_start();
+    let Some(t) = t.strip_prefix("reason") else {
+        return Err("expected `reason=\"...\"`".into());
+    };
+    let t = t.trim_start();
+    let Some(t) = t.strip_prefix('=') else {
+        return Err("expected `=` after `reason`".into());
+    };
+    let t = t.trim_start();
+    let Some(t) = t.strip_prefix('"') else {
+        return Err("reason must be a quoted string".into());
+    };
+    let Some(end) = t.find('"') else {
+        return Err("unterminated reason string".into());
+    };
+    let reason = &t[..end];
+    if !t[end + 1..].trim_start().starts_with(')') {
+        return Err("expected closing `)`".into());
+    }
+    if reason.trim().is_empty() {
+        return Err("needs a non-empty reason=\"...\"".into());
+    }
+    Ok(reason.to_string())
+}
+
+/// The position domains the `position-domain` rule knows.
+pub const DOMAINS: [&str; 3] = ["local", "global", "unrotated"];
+
+/// A parsed `lint:domain(...)` / `lint:converts(...)` seed annotation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DomainMark {
+    /// `lint:domain(d)` — the fn/field below carries positions in domain d.
+    Domain(String),
+    /// `lint:converts(a->b)` — the fn below legally crosses a into b.
+    Converts(String, String),
+}
+
+/// Parse `lint:domain(...)` and `lint:converts(...)` seeds.  Returns
+/// `(line, mark)` pairs plus `(line, message)` for malformed seeds.
+pub fn parse_domain_marks(comments: &[Comment]) -> (Vec<(u32, DomainMark)>, Vec<(u32, String)>) {
+    let mut ok = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        if !is_control_comment(&c.text) {
+            continue;
+        }
+        if let Some(pos) = c.text.find("lint:domain(") {
+            let rest = &c.text[pos + "lint:domain(".len()..];
+            match rest.find(')') {
+                Some(end) => {
+                    let d = rest[..end].trim();
+                    if DOMAINS.contains(&d) {
+                        ok.push((c.line, DomainMark::Domain(d.to_string())));
+                    } else {
+                        bad.push((
+                            c.line,
+                            format!("lint:domain({d}): unknown domain (expected one of {DOMAINS:?})"),
+                        ));
+                    }
+                }
+                None => bad.push((c.line, "lint:domain(...): expected closing `)`".into())),
+            }
+        }
+        if let Some(pos) = c.text.find("lint:converts(") {
+            let rest = &c.text[pos + "lint:converts(".len()..];
+            match rest.find(')') {
+                Some(end) => {
+                    let body = rest[..end].trim();
+                    let parts: Vec<&str> = body.split("->").map(str::trim).collect();
+                    if parts.len() == 2
+                        && DOMAINS.contains(&parts[0])
+                        && DOMAINS.contains(&parts[1])
+                        && parts[0] != parts[1]
+                    {
+                        ok.push((
+                            c.line,
+                            DomainMark::Converts(parts[0].to_string(), parts[1].to_string()),
+                        ));
+                    } else {
+                        bad.push((
+                            c.line,
+                            format!(
+                                "lint:converts({body}): expected `<from>-><to>` over distinct \
+                                 domains in {DOMAINS:?}"
+                            ),
+                        ));
+                    }
+                }
+                None => bad.push((c.line, "lint:converts(...): expected closing `)`".into())),
+            }
+        }
+    }
+    (ok, bad)
 }
 
 #[cfg(test)]
@@ -175,5 +343,40 @@ mod tests {
     fn requires_flight_marker() {
         let lines = requires_flight_lines(&[cm(5, "// lint:requires(flight)"), cm(9, "// plain")]);
         assert!(lines.contains(&5) && !lines.contains(&9));
+    }
+
+    #[test]
+    fn allows_retain_audit_entries_with_reasons() {
+        let (a, _) =
+            parse_allows(&[cm(4, "// lint:allow(lock-order, reason=\"single-flight waiver\")")]);
+        assert_eq!(a.entries.len(), 1);
+        assert_eq!(a.entries[0].rule, "lock-order");
+        assert_eq!(a.entries[0].reason, "single-flight waiver");
+        assert_eq!(a.entries[0].kind, "allow");
+    }
+
+    #[test]
+    fn nonblocking_needs_reason() {
+        let (ok, bad) = parse_nonblocking(&[
+            cm(2, "// lint:nonblocking(reason=\"pure in-memory map update\")"),
+            cm(8, "// lint:nonblocking()"),
+        ]);
+        assert_eq!(ok, vec![(2, "pure in-memory map update".to_string())]);
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].1.contains("reason"));
+    }
+
+    #[test]
+    fn domain_marks_parse_and_validate() {
+        let (ok, bad) = parse_domain_marks(&[
+            cm(1, "// lint:domain(global)"),
+            cm(2, "// lint:converts(local->global)"),
+            cm(3, "// lint:domain(sideways)"),
+            cm(4, "// lint:converts(global->global)"),
+        ]);
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[0].1, DomainMark::Domain("global".into()));
+        assert_eq!(ok[1].1, DomainMark::Converts("local".into(), "global".into()));
+        assert_eq!(bad.len(), 2);
     }
 }

@@ -1,0 +1,362 @@
+//! Call graph + may-block fixpoint over the [`SymbolTable`].
+//!
+//! Resolution is name-based with two disambiguators (this is a lexical
+//! lint, not a type checker):
+//!
+//! * **impl owners** — `self.f(…)` prefers a def of `f` owned by the
+//!   enclosing fn's impl type; `Type::f(…)` prefers a def owned by `Type`.
+//! * **ambient names** — std-library method names that alias half the
+//!   ecosystem (`insert`, `get`, `pop`, `take`, `wait`, …) are NEVER
+//!   resolved by bare name; they resolve only through an owner match or a
+//!   receiver-name hint (`tier.take(…)` → `SpillTier::take`).  Without
+//!   this, every `Vec::pop` in the tree would alias `PrefetchQueue::pop`
+//!   and the may-block set would explode.
+//!
+//! The may-block set is seeded from the direct blocking-call list in
+//! `rules/guard_blocking.rs` and propagated up the call graph to a
+//! fixpoint; `// lint:nonblocking(reason="…")` on a fn stops propagation
+//! through it (the reasoned escape hatch for false aliases).
+
+use std::collections::HashSet;
+
+use super::lexer::{Tok, TokKind};
+use super::rules::guard_blocking::blocking_call;
+use super::rules::is_call;
+use super::symbols::{FnId, SymbolTable};
+
+/// Std-library-ish names never resolved by bare name (owner/hint match
+/// only).  `load` is here because loader *closures* are conventionally
+/// bound as `load` and invoked bare — aliasing them to `ChunkStore::load`
+/// would thread the whole persistence path into every lifecycle caller.
+const AMBIENT: [&str; 45] = [
+    "new", "default", "clone", "drop", "fmt", "from", "into", "eq", "ne", "hash", "cmp",
+    "partial_cmp", "deref", "deref_mut", "as_ref", "as_mut", "borrow", "index", "index_mut",
+    "next", "next_back", "len", "is_empty", "contains", "contains_key", "insert", "remove",
+    "get", "get_mut", "entry", "push", "pop", "take", "replace", "swap", "clear", "extend",
+    "drain", "retain", "iter", "collect", "wait", "add", "close", "load",
+];
+
+/// Receiver-name → impl-owner hints for disambiguating ambient names:
+/// `tier.take(…)` resolves to `SpillTier::take` even though `take` is
+/// ambient.  A receiver matches on exact name or `*_<name>` suffix.
+const RECEIVER_HINTS: [(&str, &str); 10] = [
+    ("tier", "SpillTier"),
+    ("spill", "SpillTier"),
+    ("index", "TierIndex"),
+    ("store", "ChunkStore"),
+    ("flights", "Flights"),
+    ("slot", "FlightSlot"),
+    ("metrics", "MetricsRegistry"),
+    ("pool", "BufferPool"),
+    ("queue", "PrefetchQueue"),
+    ("sched", "DecodeScheduler"),
+];
+
+/// Rust keywords/builtins that look like calls but never are.
+const NON_CALLS: [&str; 14] = [
+    "if", "while", "for", "match", "return", "loop", "fn", "let", "move", "else", "unsafe",
+    "Some", "Ok", "Err",
+];
+
+fn ambient(name: &str) -> bool {
+    AMBIENT.contains(&name)
+}
+
+fn hint_owner(recv: &str) -> Option<&'static str> {
+    RECEIVER_HINTS
+        .iter()
+        .find(|(pat, _)| recv == *pat || recv.ends_with(&format!("_{pat}")))
+        .map(|&(_, ty)| ty)
+}
+
+/// The last *named* segment of the receiver chain before the `.` at
+/// `dot_idx`, skipping balanced `(..)` / `[..]` groups:
+/// `self.shards[i].lock()` → `shards`, `self.tier.spill(…)` → `tier`.
+pub(crate) fn receiver_chain_name(toks: &[Tok], dot_idx: usize) -> Option<&str> {
+    let mut j = dot_idx as isize - 1;
+    let mut depth = 0i32;
+    while j >= 0 {
+        let t = &toks[j as usize];
+        match t.text.as_str() {
+            ")" | "]" => depth += 1,
+            "(" | "[" => {
+                depth -= 1;
+                if depth < 0 {
+                    return None;
+                }
+            }
+            _ => {
+                if depth == 0 {
+                    return if t.kind == TokKind::Ident { Some(&t.text) } else { None };
+                }
+            }
+        }
+        j -= 1;
+    }
+    None
+}
+
+/// One resolved call site inside a fn body.
+#[derive(Clone, Debug)]
+pub struct CallSite {
+    pub callee: FnId,
+    pub tok_idx: usize,
+    pub line: u32,
+}
+
+/// Why a fn is in the may-block set.
+#[derive(Clone, Debug)]
+pub enum BlockVia {
+    /// The body directly contains this blocking call at this line.
+    Direct(String, u32),
+    /// The body calls this may-block fn at this line.
+    Call(FnId, u32),
+}
+
+/// The interprocedural call graph, indexed by [`FnId`].
+pub struct CallGraph {
+    /// Resolved outgoing call sites per fn.
+    pub calls: Vec<Vec<CallSite>>,
+    /// May-block witness per fn (`None` = cannot block).
+    pub may_block: Vec<Option<BlockVia>>,
+    /// Fns asserted `lint:nonblocking` (propagation stops here).
+    pub nonblocking: HashSet<FnId>,
+}
+
+impl CallGraph {
+    /// Build the graph.  `toks_by_file[i]` must be the token stream of the
+    /// file registered as `file_idx == i` in `st`; `nonblocking` the FnIds
+    /// carrying a reasoned `lint:nonblocking` marker.
+    pub fn build(st: &SymbolTable, toks_by_file: &[&[Tok]], nonblocking: HashSet<FnId>) -> Self {
+        let n = st.fns.len();
+        let mut calls: Vec<Vec<CallSite>> = vec![Vec::new(); n];
+        let mut may_block: Vec<Option<BlockVia>> = vec![None; n];
+
+        for id in 0..n {
+            let def = st.def(id);
+            let toks = toks_by_file[def.file_idx];
+            let owner = def.owner.clone();
+            for i in own_token_indices(st, id) {
+                if toks[i].kind != TokKind::Ident {
+                    continue;
+                }
+                // direct blocking seeds (independent of resolution)
+                if may_block[id].is_none() && !nonblocking.contains(&id) {
+                    if let Some(b) = blocking_call(toks, i) {
+                        may_block[id] = Some(BlockVia::Direct(b, toks[i].line));
+                    }
+                }
+                if !is_call(toks, i) || NON_CALLS.contains(&toks[i].text.as_str()) {
+                    continue;
+                }
+                if i >= 1 && toks[i - 1].text == "fn" {
+                    continue; // a nested fn's header, not a call
+                }
+                for callee in resolve(st, toks, i, owner.as_deref()) {
+                    if callee == id {
+                        continue; // self-recursion adds nothing
+                    }
+                    calls[id].push(CallSite { callee, tok_idx: i, line: toks[i].line });
+                }
+            }
+        }
+
+        // may-block fixpoint: propagate up the graph until stable
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for id in 0..n {
+                if may_block[id].is_some() || nonblocking.contains(&id) {
+                    continue;
+                }
+                if let Some(site) =
+                    calls[id].iter().find(|s| may_block[s.callee].is_some())
+                {
+                    may_block[id] = Some(BlockVia::Call(site.callee, site.line));
+                    changed = true;
+                }
+            }
+        }
+
+        CallGraph { calls, may_block, nonblocking }
+    }
+
+    pub fn is_may_block(&self, id: FnId) -> bool {
+        self.may_block[id].is_some()
+    }
+
+    /// Human-readable witness chain, e.g. `spill_one -> spill -> fs::rename`.
+    pub fn block_chain(&self, st: &SymbolTable, id: FnId) -> String {
+        let mut parts = vec![st.def(id).name.clone()];
+        let mut cur = id;
+        let mut seen = HashSet::from([id]);
+        loop {
+            match &self.may_block[cur] {
+                Some(BlockVia::Direct(name, _)) => {
+                    parts.push(name.clone());
+                    break;
+                }
+                Some(BlockVia::Call(next, _)) => {
+                    if !seen.insert(*next) {
+                        break; // recursion cycle in the witness path
+                    }
+                    parts.push(st.def(*next).name.clone());
+                    cur = *next;
+                }
+                None => break,
+            }
+        }
+        parts.join(" -> ")
+    }
+}
+
+/// Token indices of fn `id`'s own statements: its body, minus the bodies
+/// of fns nested inside it (their code runs when *they* are called).
+pub(crate) fn own_token_indices(st: &SymbolTable, id: FnId) -> Vec<usize> {
+    let def = st.def(id);
+    let (b0, b1) = def.body;
+    let nested: Vec<(usize, usize)> = st
+        .fns_in_file(def.file_idx)
+        .iter()
+        .map(|&o| st.def(o).body)
+        .filter(|&(a, b)| b0 < a && b < b1)
+        .collect();
+    let mut out = Vec::with_capacity(b1.saturating_sub(b0));
+    let mut i = b0 + 1;
+    while i < b1 {
+        if let Some(&(_, nb)) = nested.iter().find(|&&(a, b)| a <= i && i <= b) {
+            i = nb + 1;
+            continue;
+        }
+        out.push(i);
+        i += 1;
+    }
+    out
+}
+
+/// Resolve the call at token `i` to candidate definitions.
+fn resolve(st: &SymbolTable, toks: &[Tok], i: usize, enclosing_owner: Option<&str>) -> Vec<FnId> {
+    let name = toks[i].text.as_str();
+    // path call `Seg::name(…)`
+    if i >= 3 && toks[i - 1].text == ":" && toks[i - 2].text == ":" {
+        let seg = &toks[i - 3];
+        if seg.kind == TokKind::Ident {
+            if let Some(id) = st.def_owned(name, &seg.text) {
+                return vec![id];
+            }
+            // lowercase segment = module path (`geometry::layout`); an
+            // uppercase one was a type with no matching def — stop there
+            if seg.text.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+                return Vec::new();
+            }
+        }
+        return if ambient(name) { Vec::new() } else { st.defs_named(name).to_vec() };
+    }
+    // method call `recv.name(…)`
+    if i >= 1 && toks[i - 1].text == "." {
+        let recv = receiver_chain_name(toks, i - 1);
+        if recv == Some("self") {
+            if let Some(owner) = enclosing_owner {
+                if let Some(id) = st.def_owned(name, owner) {
+                    return vec![id];
+                }
+            }
+        } else if let Some(r) = recv {
+            if let Some(ty) = hint_owner(r) {
+                if let Some(id) = st.def_owned(name, ty) {
+                    return vec![id];
+                }
+            }
+        }
+        return if ambient(name) { Vec::new() } else { st.defs_named(name).to_vec() };
+    }
+    // free call `name(…)`
+    if ambient(name) {
+        Vec::new()
+    } else {
+        st.defs_named(name).to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::super::scope::{find_fns, find_test_regions};
+    use super::*;
+
+    fn graph(src: &str) -> (SymbolTable, CallGraph, Vec<Tok>) {
+        let (toks, _) = lex(src);
+        let fns = find_fns(&toks);
+        let regions = find_test_regions(&toks);
+        let mut st = SymbolTable::default();
+        st.add_file(0, "rust/src/x.rs", &toks, &fns, &regions);
+        let cg = CallGraph::build(&st, &[&toks], HashSet::new());
+        (st, cg, toks)
+    }
+
+    fn id_of(st: &SymbolTable, name: &str) -> FnId {
+        st.defs_named(name)[0]
+    }
+
+    #[test]
+    fn three_deep_transitive_chain_propagates() {
+        let (st, cg, _) = graph(
+            "fn c(rx: &Receiver<u32>) { let _ = rx.recv(); }\n\
+             fn b(rx: &Receiver<u32>) { c(rx); }\n\
+             fn a(rx: &Receiver<u32>) { b(rx); }\n\
+             fn pure() { let x = 1 + 1; }",
+        );
+        assert!(cg.is_may_block(id_of(&st, "c")));
+        assert!(cg.is_may_block(id_of(&st, "b")));
+        assert!(cg.is_may_block(id_of(&st, "a")));
+        assert!(!cg.is_may_block(id_of(&st, "pure")));
+        assert_eq!(cg.block_chain(&st, id_of(&st, "a")), "a -> b -> c -> recv");
+    }
+
+    #[test]
+    fn nonblocking_marker_stops_propagation() {
+        let (toks, _) = lex(
+            "fn c(rx: &Receiver<u32>) { let _ = rx.recv(); }\n\
+             fn b(rx: &Receiver<u32>) { c(rx); }\n\
+             fn a(rx: &Receiver<u32>) { b(rx); }",
+        );
+        let fns = find_fns(&toks);
+        let mut st = SymbolTable::default();
+        st.add_file(0, "rust/src/x.rs", &toks, &fns, &[]);
+        let b = st.defs_named("b")[0];
+        let cg = CallGraph::build(&st, &[&toks], HashSet::from([b]));
+        assert!(cg.is_may_block(st.defs_named("c")[0]));
+        assert!(!cg.is_may_block(b));
+        assert!(!cg.is_may_block(st.defs_named("a")[0]));
+    }
+
+    #[test]
+    fn ambient_names_need_an_owner_or_hint() {
+        let (st, cg, _) = graph(
+            "struct SpillTier; impl SpillTier {\n\
+               fn take(&self, id: u64) { fs::read(id); }\n\
+             }\n\
+             fn uses_vec(v: &mut Vec<u32>) { v.take(); v.pop(); }\n\
+             fn uses_tier(tier: &SpillTier) { tier.take(3); }",
+        );
+        // `v.take()` must NOT alias SpillTier::take (ambient, no hint) …
+        assert!(!cg.is_may_block(id_of(&st, "uses_vec")));
+        // … while the `tier` receiver hint resolves it
+        assert!(cg.is_may_block(id_of(&st, "uses_tier")));
+        assert_eq!(
+            cg.block_chain(&st, id_of(&st, "uses_tier")),
+            "uses_tier -> take -> fs::read"
+        );
+    }
+
+    #[test]
+    fn self_calls_resolve_through_the_impl_owner() {
+        let (st, cg, _) = graph(
+            "struct S; impl S {\n\
+               fn inner(&self) { self.rx.recv_timeout(t); }\n\
+               fn outer(&self) { self.inner(); }\n\
+             }",
+        );
+        assert!(cg.is_may_block(id_of(&st, "outer")));
+    }
+}

@@ -172,6 +172,13 @@ pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
         }
         if is_ident_start(c) {
             let mut j = i;
+            // raw identifier (`r#type`, `r#match`): keep the `r#` prefix in
+            // the token text so keyword matching (`match`, `fn`, …) never
+            // fires on it, and the `#` never escapes as a stray Punct that
+            // would desync attribute/scope tracking
+            if c == b'r' && j + 2 < n && b[j + 1] == b'#' && is_ident_start(b[j + 2]) {
+                j += 2;
+            }
             while j < n && is_ident_cont(b[j]) {
                 j += 1;
             }
@@ -237,6 +244,21 @@ mod tests {
         assert!(ts.iter().any(|t| t.kind == TokKind::Punct && t.text == "§"));
         assert!(ts.iter().any(|t| t.text == "x" && t.line == 2));
         assert_eq!(cs.len(), 1);
+    }
+
+    #[test]
+    fn raw_identifiers_stay_single_tokens() {
+        // `r#type` must be ONE ident (prefix kept, so it never matches the
+        // `type` keyword) and must not leak a stray `#` Punct
+        let ts = kinds("let r#type = r#match.r#fn(); let r = 1; let s = r#\"raw\"#;");
+        assert!(ts.contains(&(TokKind::Ident, "r#type".into())));
+        assert!(ts.contains(&(TokKind::Ident, "r#match".into())));
+        assert!(ts.contains(&(TokKind::Ident, "r#fn".into())));
+        // plain `r` ident and raw strings are untouched
+        assert!(ts.contains(&(TokKind::Ident, "r".into())));
+        assert!(ts.iter().any(|t| t.0 == TokKind::Str && t.1 == "r#\"raw\"#"));
+        // no `#` escaped as punctuation
+        assert!(!ts.contains(&(TokKind::Punct, "#".into())));
     }
 
     #[test]

@@ -2,41 +2,60 @@
 //!
 //! A zero-external-dependency static-analysis subsystem (hand-rolled Rust
 //! lexer + brace/scope tracker, in the same artifact-free spirit as the
-//! stub runtime) that mechanically enforces the concurrency invariants
-//! PRs 1–5 learned the hard way.  Five rules:
+//! stub runtime) that mechanically enforces the concurrency and geometry
+//! invariants PRs 1–6 learned the hard way.  Eight rules:
 //!
 //! | rule | invariant | burned by |
 //! |------|-----------|-----------|
-//! | `guard-across-blocking` | no lock guard live across a blocking call | PR 1 |
+//! | `guard-across-blocking` | no lock guard live across a (transitively) blocking call | PR 1 |
 //! | `panic-surface` | no unwrap/expect/panic!/debug_assert! in gated dirs | PR 2/4 |
 //! | `counter-discipline` | no orphaned metrics counters / tripwires | PR 3 |
 //! | `channel-hygiene` | stored senders must die on a shutdown path | PR 1/5 |
 //! | `flight-critical-section` | tier file ops stay inside flight/index scope | PR 4 |
+//! | `lock-order` | the named-lock-class graph stays acyclic | PR 5 |
+//! | `position-domain` | RoPE positions cross local/global/unrotated only via declared converters | paper §4.1 |
+//! | `allow-syntax` | every waiver/marker is well-formed and reasoned | — |
+//!
+//! The pass is **two-phase**: per-file rules run as each file is fed in;
+//! then a cross-file [`symbols::SymbolTable`] + [`callgraph::CallGraph`]
+//! is built over the non-test sources and the interprocedural rules
+//! (transitive `guard-across-blocking`, `lock-order`, `position-domain`)
+//! run in [`TreeLint::finish`].
 //!
 //! Deliberate violations carry `// lint:allow(<rule>, reason="…")`; a
 //! missing or empty reason is itself a diagnostic (`allow-syntax`).
 //! Functions whose *callers* must hold a chunk's flight slot are marked
-//! `// lint:requires(flight)` and checked at their call sites.
+//! `// lint:requires(flight)`; fns asserted to never block carry
+//! `// lint:nonblocking(reason="…")`; position-domain seeds are
+//! `// lint:domain(d)` / `// lint:converts(a->b)`.
 //!
-//! Run via `cargo run --bin pallas_lint -- --root . [--format json]`; the
-//! driver walks `rust/src`, `rust/xla-stub`, `rust/tests` and `benches/`,
-//! prints `file:line: rule: message` diagnostics, and exits non-zero when
-//! any survive suppression.
+//! Run via `cargo run --bin pallas_lint -- --root . [--format json|sarif]
+//! [--list-allows] [--graph]`; the driver walks `rust/src`,
+//! `rust/xla-stub`, `rust/tests` and `benches/`, prints
+//! `file:line: rule: message` diagnostics, and exits non-zero when any
+//! survive suppression.
 
 pub mod allow;
+pub mod callgraph;
 pub mod lexer;
 pub mod rules;
 pub mod scope;
+pub mod symbols;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 use crate::Result;
 
-use allow::Allows;
+use allow::{Allows, DomainMark, WaiverSite};
+use callgraph::CallGraph;
+use lexer::Tok;
 use rules::counter_discipline::CounterState;
+use rules::position_domain::DomainTable;
 use rules::ALL_RULES;
+use scope::{FnSpan, Region};
+use symbols::{FnId, SymbolTable};
 
 /// One lint finding.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -63,6 +82,21 @@ const PANIC_GATED: [&str; 4] = [
     "rust/src/plan/",
 ];
 
+/// Everything [`TreeLint::finish`] needs to re-visit a file for the
+/// interprocedural passes.
+struct FileData {
+    rel: String,
+    toks: Vec<Tok>,
+    test_regions: Vec<Region>,
+    fns: Vec<FnSpan>,
+    /// Well-formed `lint:nonblocking` markers: `(line, reason)`.
+    nonblocking: Vec<(u32, String)>,
+    /// Well-formed `lint:domain`/`lint:converts` seeds.
+    marks: Vec<(u32, DomainMark)>,
+    /// Participates in the cross-file symbol table (non-test source).
+    interproc: bool,
+}
+
 /// Whole-tree lint state: create, feed every file through
 /// [`TreeLint::check_source`], then [`TreeLint::finish`].
 #[derive(Default)]
@@ -70,7 +104,8 @@ pub struct TreeLint {
     diags: Vec<Diag>,
     counters: CounterState,
     allows_by_file: HashMap<String, Allows>,
-    files_scanned: usize,
+    waivers: Vec<(String, WaiverSite)>,
+    files: Vec<FileData>,
 }
 
 impl TreeLint {
@@ -81,18 +116,22 @@ impl TreeLint {
     /// Lint one file's source.  `rel` is the repo-relative path (forward
     /// slashes) — rule applicability is scoped by it.
     pub fn check_source(&mut self, rel: &str, src: &str) {
-        self.files_scanned += 1;
         let (toks, comments) = lexer::lex(src);
         let test_regions = scope::find_test_regions(&toks);
         let fns = scope::find_fns(&toks);
         let (allows, bad_allows) = allow::parse_allows(&comments);
         let requires = allow::requires_flight_lines(&comments);
+        let (nonblocking, bad_nonblocking) = allow::parse_nonblocking(&comments);
+        let (marks, bad_marks) = allow::parse_domain_marks(&comments);
 
         let is_test_file = rel.starts_with("rust/tests/") || rel.starts_with("benches/");
         let in_src = rel.starts_with("rust/src/");
+        let interproc = !is_test_file && (in_src || rel.starts_with("rust/xla-stub/"));
 
         let mut local: Vec<Diag> = bad_allows
             .into_iter()
+            .chain(bad_nonblocking)
+            .chain(bad_marks)
             .map(|(line, message)| Diag {
                 file: rel.to_string(),
                 line,
@@ -101,9 +140,6 @@ impl TreeLint {
             })
             .collect();
 
-        if !is_test_file && (in_src || rel.starts_with("rust/xla-stub/")) {
-            rules::guard_blocking::check(rel, &toks, &test_regions, &mut local);
-        }
         if PANIC_GATED.iter().any(|d| rel.starts_with(d)) {
             rules::panic_surface::check(rel, &toks, &test_regions, &mut local);
         }
@@ -124,11 +160,108 @@ impl TreeLint {
                 self.diags.push(d);
             }
         }
+        // waiver audit trail for `--list-allows`
+        for e in &allows.entries {
+            self.waivers.push((rel.to_string(), e.clone()));
+        }
+        let mut req_lines: Vec<u32> = requires.iter().copied().collect();
+        req_lines.sort_unstable();
+        for line in req_lines {
+            self.waivers.push((
+                rel.to_string(),
+                WaiverSite { line, kind: "requires", rule: "flight".into(), reason: String::new() },
+            ));
+        }
+        for (line, reason) in &nonblocking {
+            self.waivers.push((
+                rel.to_string(),
+                WaiverSite { line: *line, kind: "nonblocking", rule: String::new(), reason: reason.clone() },
+            ));
+        }
         self.allows_by_file.insert(rel.to_string(), allows);
+        self.files.push(FileData {
+            rel: rel.to_string(),
+            toks,
+            test_regions,
+            fns,
+            nonblocking,
+            marks,
+            interproc,
+        });
     }
 
-    /// Resolve cross-file rules (counter discipline) and produce the final
-    /// sorted report.
+    /// Build the cross-file symbol table + call graph over the retained
+    /// non-test sources.  Also resolves `lint:nonblocking` markers to FnIds
+    /// (unattached markers become `allow-syntax` diags).
+    fn build_interproc(&self, syntax: &mut Vec<Diag>) -> (SymbolTable, CallGraph) {
+        let mut st = SymbolTable::default();
+        for (idx, f) in self.files.iter().enumerate() {
+            if f.interproc {
+                st.add_file(idx, &f.rel, &f.toks, &f.fns, &f.test_regions);
+            }
+        }
+        let mut nonblocking: HashSet<FnId> = HashSet::new();
+        for (idx, f) in self.files.iter().enumerate() {
+            for (m, _) in &f.nonblocking {
+                let attached = st
+                    .fns_in_file(idx)
+                    .iter()
+                    .copied()
+                    .find(|&id| {
+                        let l = st.def(id).line;
+                        *m <= l && l <= m + 3
+                    });
+                match attached {
+                    Some(id) => {
+                        nonblocking.insert(id);
+                    }
+                    None if f.interproc => syntax.push(Diag {
+                        file: f.rel.clone(),
+                        line: *m,
+                        rule: rules::ALLOW_SYNTAX,
+                        message: "lint:nonblocking mark attaches to no fn within 3 lines"
+                            .to_string(),
+                    }),
+                    None => {}
+                }
+            }
+        }
+        let toks_refs: Vec<&[Tok]> = self.files.iter().map(|f| f.toks.as_slice()).collect();
+        let cg = CallGraph::build(&st, &toks_refs, nonblocking);
+        (st, cg)
+    }
+
+    /// Human-readable dump of the call graph and may-block/may-acquire
+    /// state — the `--graph` debugging view.
+    pub fn render_graph(&self) -> String {
+        let mut syntax = Vec::new();
+        let (st, cg) = self.build_interproc(&mut syntax);
+        let mut out = String::new();
+        for id in 0..st.fns.len() {
+            let d = st.def(id);
+            let owner = d.owner.as_deref().map(|o| format!("{o}::")).unwrap_or_default();
+            out.push_str(&format!("fn {}{} ({}:{})", owner, d.name, d.file, d.line));
+            if cg.is_may_block(id) {
+                out.push_str(&format!("  [may-block: {}]", cg.block_chain(&st, id)));
+            }
+            out.push('\n');
+            for site in &cg.calls[id] {
+                let c = st.def(site.callee);
+                let cowner =
+                    c.owner.as_deref().map(|o| format!("{o}::")).unwrap_or_default();
+                out.push_str(&format!("  -> {cowner}{} (line {})\n", c.name, site.line));
+            }
+        }
+        out.push_str(&format!(
+            "{} fn(s), {} call edge(s), {} may-block\n",
+            st.fns.len(),
+            cg.calls.iter().map(Vec::len).sum::<usize>(),
+            (0..st.fns.len()).filter(|&i| cg.is_may_block(i)).count(),
+        ));
+        out
+    }
+
+    /// Run the interprocedural rules and produce the final sorted report.
     pub fn finish(mut self) -> LintReport {
         let mut cross: Vec<Diag> = Vec::new();
         rules::counter_discipline::finish(&self.counters, |file, line, message| {
@@ -139,6 +272,43 @@ impl TreeLint {
                 message,
             });
         });
+
+        // phase 2: cross-file table + call graph, then the interprocedural
+        // rules.  `allow-syntax` from unattached markers bypasses allows.
+        let mut syntax: Vec<Diag> = Vec::new();
+        let (st, cg) = self.build_interproc(&mut syntax);
+        let toks_refs: Vec<&[Tok]> = self.files.iter().map(|f| f.toks.as_slice()).collect();
+
+        for (idx, f) in self.files.iter().enumerate() {
+            if f.interproc {
+                rules::guard_blocking::check(
+                    &f.rel,
+                    idx,
+                    &f.toks,
+                    &f.test_regions,
+                    Some((&st, &cg)),
+                    &mut cross,
+                );
+            }
+        }
+
+        let allows_map: BTreeMap<String, &Allows> =
+            self.allows_by_file.iter().map(|(k, v)| (k.clone(), v)).collect();
+        rules::lock_order::check(&st, &cg, &toks_refs, &allows_map, &mut cross);
+
+        let mut table = DomainTable::default();
+        for f in self.files.iter().filter(|f| f.interproc) {
+            for (line, message) in table.add_file(&f.marks, &f.toks, &f.fns) {
+                syntax.push(Diag {
+                    file: f.rel.clone(),
+                    line,
+                    rule: rules::ALLOW_SYNTAX,
+                    message,
+                });
+            }
+        }
+        rules::position_domain::check(&st, &toks_refs, &table, &mut cross);
+
         for d in cross {
             let suppressed = self
                 .allows_by_file
@@ -148,10 +318,13 @@ impl TreeLint {
                 self.diags.push(d);
             }
         }
+        self.diags.extend(syntax);
         self.diags.sort_by(|a, b| {
             (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
         });
-        LintReport { diags: self.diags, files_scanned: self.files_scanned }
+        self.waivers.sort_by(|a, b| (&a.0, a.1.line).cmp(&(&b.0, b.1.line)));
+        let files_scanned = self.files.len();
+        LintReport { diags: self.diags, files_scanned, waivers: self.waivers }
     }
 }
 
@@ -166,9 +339,11 @@ pub fn lint_str(virtual_path: &str, src: &str) -> Vec<Diag> {
 /// The directories the driver walks, relative to the repo root.
 pub const WALK_ROOTS: [&str; 4] = ["rust/src", "rust/xla-stub", "rust/tests", "benches"];
 
-/// Walk the repo tree at `root` and lint every `.rs` file under the
-/// standard roots, in sorted order (deterministic output).
-pub fn lint_tree(root: &Path) -> Result<LintReport> {
+/// Walk the repo tree at `root` and feed every `.rs` file under the
+/// standard roots into a [`TreeLint`], in sorted order (deterministic
+/// output).  Call [`TreeLint::finish`] (or [`TreeLint::render_graph`]) on
+/// the result.
+pub fn scan_tree(root: &Path) -> Result<TreeLint> {
     let mut files: Vec<PathBuf> = Vec::new();
     for base in WALK_ROOTS {
         let dir = root.join(base);
@@ -188,7 +363,12 @@ pub fn lint_tree(root: &Path) -> Result<LintReport> {
             .map_err(|e| crate::anyhow!("reading {}: {e}", f.display()))?;
         tl.check_source(&rel, &src);
     }
-    Ok(tl.finish())
+    Ok(tl)
+}
+
+/// Walk + lint in one call (the common driver path).
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    Ok(scan_tree(root)?.finish())
 }
 
 fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
@@ -211,6 +391,9 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
 pub struct LintReport {
     pub diags: Vec<Diag>,
     pub files_scanned: usize,
+    /// Every waiver/marker site in the tree, sorted by file then line —
+    /// the `--list-allows` audit view.
+    pub waivers: Vec<(String, WaiverSite)>,
 }
 
 impl LintReport {
@@ -247,7 +430,84 @@ impl LintReport {
             ("files_scanned", Json::from(self.files_scanned)),
             ("counts", Json::obj(counts)),
             ("violations", Json::arr(violations)),
+            ("waiver_count", Json::from(self.waivers.len())),
         ])
+    }
+
+    /// SARIF 2.1.0, minimal profile — enough for GitHub code-scanning
+    /// upload to render inline annotations.
+    pub fn to_sarif(&self) -> Json {
+        let rules: Vec<Json> = ALL_RULES
+            .iter()
+            .map(|&r| Json::obj(vec![("id", Json::from(r))]))
+            .collect();
+        let results: Vec<Json> = self
+            .diags
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("ruleId", Json::from(d.rule)),
+                    ("level", Json::from("error")),
+                    ("message", Json::obj(vec![("text", Json::from(d.message.as_str()))])),
+                    (
+                        "locations",
+                        Json::arr(vec![Json::obj(vec![(
+                            "physicalLocation",
+                            Json::obj(vec![
+                                (
+                                    "artifactLocation",
+                                    Json::obj(vec![("uri", Json::from(d.file.as_str()))]),
+                                ),
+                                (
+                                    "region",
+                                    Json::obj(vec![(
+                                        "startLine",
+                                        Json::from(d.line as usize),
+                                    )]),
+                                ),
+                            ]),
+                        )])]),
+                    ),
+                ])
+            })
+            .collect();
+        let driver = Json::obj(vec![
+            ("name", Json::from("pallas-lint")),
+            ("informationUri", Json::from("https://example.invalid/pallas-lint")),
+            ("rules", Json::arr(rules)),
+        ]);
+        Json::obj(vec![
+            ("version", Json::from("2.1.0")),
+            (
+                "$schema",
+                Json::from("https://json.schemastore.org/sarif-2.1.0.json"),
+            ),
+            (
+                "runs",
+                Json::arr(vec![Json::obj(vec![
+                    ("tool", Json::obj(vec![("driver", driver)])),
+                    ("results", Json::arr(results)),
+                ])]),
+            ),
+        ])
+    }
+
+    /// The `--list-allows` audit: every waiver site with its reason, plus a
+    /// trailing machine-grepable total (CI diffs it against the committed
+    /// baseline in `rust/lint_waivers.baseline`).
+    pub fn render_allows(&self) -> String {
+        let mut out = String::new();
+        for (file, w) in &self.waivers {
+            let what = match w.kind {
+                "allow" => format!("allow({})", w.rule),
+                "requires" => format!("requires({})", w.rule),
+                _ => w.kind.to_string(),
+            };
+            let reason = if w.reason.is_empty() { "-" } else { w.reason.as_str() };
+            out.push_str(&format!("{file}:{}: {what}: {reason}\n", w.line));
+        }
+        out.push_str(&format!("total_waivers {}\n", self.waivers.len()));
+        out
     }
 
     /// Plain `file:line: rule: message` lines.
@@ -268,9 +528,10 @@ impl LintReport {
             out.push_str(&format!("| `{rule}` | {count} |\n"));
         }
         out.push_str(&format!(
-            "| **total** | **{}** | \n\n{} file(s) scanned.\n",
+            "| **total** | **{}** | \n\n{} file(s) scanned, {} waiver site(s).\n",
             self.diags.len(),
-            self.files_scanned
+            self.files_scanned,
+            self.waivers.len()
         ));
         if !self.diags.is_empty() {
             out.push_str("\n```text\n");

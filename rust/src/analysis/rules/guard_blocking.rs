@@ -8,12 +8,20 @@
 //! scrutinee temporaries through the whole match, condition temporaries
 //! dying at the `{`, plain temporaries at the `;`) and flags any blocking
 //! call lexically inside the live region.
+//!
+//! Since the interprocedural upgrade, "blocking" is the transitive
+//! may-block set from `analysis::callgraph` (seeded by the direct list
+//! below), so a guard held across a helper that eventually calls `recv`
+//! three frames down is flagged with the full witness chain.  A fn marked
+//! `// lint:nonblocking(reason="…")` is excluded from the set.
 
+use super::super::callgraph::CallGraph;
 use super::super::lexer::{Tok, TokKind};
 use super::super::scope::{
     block_after, classify_guard_context, enclosing_block_end, in_regions, stmt_end, GuardCtx,
     Region,
 };
+use super::super::symbols::SymbolTable;
 use super::{args_empty, is_call, is_method_call, receiver_name, GUARD_ACROSS_BLOCKING};
 use crate::analysis::Diag;
 
@@ -105,8 +113,9 @@ pub(crate) fn is_guard_acquisition(toks: &[Tok], i: usize) -> bool {
 }
 
 /// If token `i` is a call into the blocklist, the display name of the
-/// blocking call.
-fn blocking_call(toks: &[Tok], i: usize) -> Option<String> {
+/// blocking call.  Also the direct-blocking seed test for the cross-file
+/// may-block fixpoint (`analysis::callgraph`).
+pub(crate) fn blocking_call(toks: &[Tok], i: usize) -> Option<String> {
     let t = &toks[i];
     if t.kind != TokKind::Ident {
         return None;
@@ -143,49 +152,70 @@ fn blocking_call(toks: &[Tok], i: usize) -> Option<String> {
     Some(name.to_string())
 }
 
-pub fn check(path: &str, toks: &[Tok], test_regions: &[Region], diags: &mut Vec<Diag>) {
+/// The live token range `(lo, hi)` and display name of the guard acquired
+/// at token `i` — named `let` bindings to end of block (truncated by an
+/// explicit `drop(bind)`), match-scrutinee temporaries through the match,
+/// condition temporaries to the `{`, plain temporaries to the `;`.
+/// Shared with the `lock-order` rule, which needs the same lifetimes.
+pub(crate) fn guard_live_range(toks: &[Tok], i: usize) -> (usize, usize, String) {
+    let n = toks.len();
+    let (lo, mut hi, scope_kind) = match classify_guard_context(toks, i) {
+        GuardCtx::Let(bind) => {
+            let lo = stmt_end(toks, i, n) + 1;
+            let hi = enclosing_block_end(toks, i, n);
+            (lo, hi, format!("guard `{bind}`"))
+        }
+        GuardCtx::MatchScrutinee => {
+            let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.1);
+            (i + 1, hi, "match-scrutinee lock temporary".to_string())
+        }
+        GuardCtx::Cond => {
+            let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.0);
+            (i + 1, hi, "condition lock temporary".to_string())
+        }
+        GuardCtx::LetCond => {
+            let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.1);
+            (i + 1, hi, "if-let/while-let lock temporary".to_string())
+        }
+        GuardCtx::Temp => (i + 1, stmt_end(toks, i, n), "statement lock temporary".to_string()),
+    };
+    // an explicit `drop(<guard>)` ends a named guard's live scope
+    if let GuardCtx::Let(bind) = classify_guard_context(toks, i) {
+        if bind != "<pat>" {
+            for j in lo..hi {
+                if toks[j].kind == TokKind::Ident
+                    && toks[j].text == "drop"
+                    && toks.get(j + 1).is_some_and(|t| t.text == "(")
+                    && toks.get(j + 2).is_some_and(|t| t.text == bind)
+                {
+                    hi = j;
+                    break;
+                }
+            }
+        }
+    }
+    (lo, hi.min(n), scope_kind)
+}
+
+/// Check one file.  `inter` carries the cross-file may-block results; when
+/// present, calls into *transitively* blocking fns are flagged too, with
+/// the full witness chain in the message.
+pub fn check(
+    path: &str,
+    file_idx: usize,
+    toks: &[Tok],
+    test_regions: &[Region],
+    inter: Option<(&SymbolTable, &CallGraph)>,
+    diags: &mut Vec<Diag>,
+) {
     let n = toks.len();
     for i in 0..n {
         if in_regions(i, test_regions) || !is_guard_acquisition(toks, i) {
             continue;
         }
         let acquired_line = toks[i].line;
-        let (lo, mut hi, scope_kind) = match classify_guard_context(toks, i) {
-            GuardCtx::Let(bind) => {
-                let lo = stmt_end(toks, i, n) + 1;
-                let hi = enclosing_block_end(toks, i, n);
-                (lo, hi, format!("guard `{bind}`"))
-            }
-            GuardCtx::MatchScrutinee => {
-                let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.1);
-                (i + 1, hi, "match-scrutinee lock temporary".to_string())
-            }
-            GuardCtx::Cond => {
-                let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.0);
-                (i + 1, hi, "condition lock temporary".to_string())
-            }
-            GuardCtx::LetCond => {
-                let hi = block_after(toks, i, n).map_or_else(|| stmt_end(toks, i, n), |b| b.1);
-                (i + 1, hi, "if-let/while-let lock temporary".to_string())
-            }
-            GuardCtx::Temp => (i + 1, stmt_end(toks, i, n), "statement lock temporary".to_string()),
-        };
-        // an explicit `drop(<guard>)` ends a named guard's live scope
-        if let GuardCtx::Let(bind) = classify_guard_context(toks, i) {
-            if bind != "<pat>" {
-                for j in lo..hi {
-                    if toks[j].kind == TokKind::Ident
-                        && toks[j].text == "drop"
-                        && toks.get(j + 1).is_some_and(|t| t.text == "(")
-                        && toks.get(j + 2).is_some_and(|t| t.text == bind)
-                    {
-                        hi = j;
-                        break;
-                    }
-                }
-            }
-        }
-        for j in lo..hi.min(n) {
+        let (lo, hi, scope_kind) = guard_live_range(toks, i);
+        for j in lo..hi {
             if let Some(blk) = blocking_call(toks, j) {
                 diags.push(Diag {
                     file: path.to_string(),
@@ -194,6 +224,38 @@ pub fn check(path: &str, toks: &[Tok], test_regions: &[Region], diags: &mut Vec<
                     message: format!(
                         "{scope_kind} (acquired line {acquired_line}) is held across \
                          blocking call `{blk}`"
+                    ),
+                });
+            }
+        }
+        // transitive pass: resolved call sites into the may-block set that
+        // fall inside the live range (call sites live on the enclosing fn,
+        // so a nested fn's body inside the lexical range is correctly NOT
+        // attributed to this guard)
+        let Some((st, cg)) = inter else {
+            continue;
+        };
+        let Some(owner_fn) = st.enclosing(file_idx, i) else {
+            continue;
+        };
+        for site in &cg.calls[owner_fn] {
+            if site.tok_idx < lo || site.tok_idx >= hi {
+                continue;
+            }
+            // a direct seed at the same token already produced a diag
+            if blocking_call(toks, site.tok_idx).is_some() {
+                continue;
+            }
+            if cg.is_may_block(site.callee) {
+                diags.push(Diag {
+                    file: path.to_string(),
+                    line: site.line,
+                    rule: GUARD_ACROSS_BLOCKING,
+                    message: format!(
+                        "{scope_kind} (acquired line {acquired_line}) is held across \
+                         `{}`, which may block: {}",
+                        st.def(site.callee).name,
+                        cg.block_chain(st, site.callee),
                     ),
                 });
             }

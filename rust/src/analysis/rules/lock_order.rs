@@ -1,0 +1,286 @@
+//! L7 `lock-order` — deadlock detection over named lock classes.
+//!
+//! Every guard acquisition is classified into a lock class by its
+//! receiver (`self.shards[i].lock()` → `store-shard`, `index.lock()` →
+//! `tier-index`, a `FlightGuard { … }` adoption → `flight-slot`, …; an
+//! unknown receiver gets its own `mutex:<name>` class so new locks
+//! participate automatically).  While a guard of class A is live, any
+//! acquisition of class B — directly in the same body, or transitively
+//! inside a resolved callee (the `may-acquire` fixpoint) — records an
+//! ordering edge A → B.  A cycle in the resulting graph is a potential
+//! ABBA deadlock and is reported with the full witness path.
+//!
+//! `// lint:allow(lock-order, reason="…")` on an acquisition line removes
+//! that acquisition from the graph entirely (it stops seeding
+//! may-acquire, so every edge whose witness chain passes through it dies
+//! with it); on a call-site line it stops propagation through that call.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::super::allow::Allows;
+use super::super::callgraph::{own_token_indices, receiver_chain_name, CallGraph};
+use super::super::lexer::{Tok, TokKind};
+use super::super::symbols::{FnId, SymbolTable};
+use super::guard_blocking::{guard_live_range, is_guard_acquisition};
+use super::LOCK_ORDER;
+use crate::analysis::Diag;
+
+/// Receiver-name → lock-class table.  Extend this when adding a mutex: an
+/// unlisted receiver still participates as `mutex:<receiver>`, but a named
+/// class makes cycle reports (and waivers) legible.
+const CLASS_BY_RECEIVER: [(&str, &str); 13] = [
+    ("shards", "store-shard"),
+    ("shard", "store-shard"),
+    ("sh", "store-shard"),
+    ("slots", "flight-registry"),
+    ("done", "flight-wait"),
+    ("index", "tier-index"),
+    ("idle", "pool"),
+    ("state", "prefetch-heap"),
+    ("inner", "metrics"),
+    ("work_rx", "scheduler"),
+    ("prefetch_queued", "prefetch-queued"),
+    ("compiled", "runtime-cache"),
+    ("weights", "runtime-cache"),
+];
+
+/// One classified acquisition site.
+struct Acq {
+    tok_idx: usize,
+    line: u32,
+    class: String,
+}
+
+/// If token `i` acquires a lock, its class.
+fn classify(toks: &[Tok], i: usize) -> Option<String> {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident {
+        return None;
+    }
+    // The single-flight slot is classified at its RAII adoption point —
+    // `FlightGuard { … }` construction — NOT at `flights.begin(…)` /
+    // `try_begin(…)`.  The reservation call and the guard that adopts it
+    // are one acquisition; counting both would fabricate a flight-slot
+    // self-edge at every leader arm.  (A begin without a guard is a leak,
+    // which Flights::end-less code paths would show up elsewhere anyway.)
+    if t.text == "FlightGuard" && toks.get(i + 1).is_some_and(|n| n.text == "{") {
+        let prev = i.checked_sub(1).map(|p| toks[p].text.as_str()).unwrap_or("");
+        if prev != "struct" && prev != "for" && prev != "impl" {
+            return Some("flight-slot".to_string());
+        }
+    }
+    if !is_guard_acquisition(toks, i) {
+        return None;
+    }
+    if t.text == "lock_shard" {
+        return Some("store-shard".to_string());
+    }
+    let recv = receiver_chain_name(toks, i - 1)?;
+    let class = CLASS_BY_RECEIVER
+        .iter()
+        .find(|(pat, _)| recv == *pat)
+        .map(|&(_, c)| c.to_string())
+        .unwrap_or_else(|| format!("mutex:{recv}"));
+    Some(class)
+}
+
+fn allowed(allows: &BTreeMap<String, &Allows>, file: &str, line: u32) -> bool {
+    allows.get(file).is_some_and(|a| a.suppresses(LOCK_ORDER, line))
+}
+
+/// Run the rule over the whole table.  `toks_by_file[i]` is the token
+/// stream of file index `i`; `allows` the per-file suppression tables
+/// keyed by repo-relative path.
+pub fn check(
+    st: &SymbolTable,
+    cg: &CallGraph,
+    toks_by_file: &[&[Tok]],
+    allows: &BTreeMap<String, &Allows>,
+    diags: &mut Vec<Diag>,
+) {
+    // 1. classified, un-waived acquisitions per fn
+    let nfns = st.fns.len();
+    let mut acqs: Vec<Vec<Acq>> = Vec::with_capacity(nfns);
+    for id in 0..nfns {
+        let def = st.def(id);
+        let toks = toks_by_file[def.file_idx];
+        let mut v = Vec::new();
+        for i in own_token_indices(st, id) {
+            if let Some(class) = classify(toks, i) {
+                if !allowed(allows, &def.file, toks[i].line) {
+                    v.push(Acq { tok_idx: i, line: toks[i].line, class });
+                }
+            }
+        }
+        acqs.push(v);
+    }
+
+    // 2. may-acquire fixpoint: class -> witness chain, per fn
+    let mut may_acquire: Vec<BTreeMap<String, String>> = (0..nfns)
+        .map(|id| {
+            let def = st.def(id);
+            acqs[id]
+                .iter()
+                .map(|a| (a.class.clone(), format!("acquired at {}:{}", def.file, a.line)))
+                .collect()
+        })
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for id in 0..nfns {
+            let def = st.def(id);
+            let mut add: Vec<(String, String)> = Vec::new();
+            for site in &cg.calls[id] {
+                if allowed(allows, &def.file, site.line) {
+                    continue;
+                }
+                for (class, wit) in &may_acquire[site.callee] {
+                    if !may_acquire[id].contains_key(class) {
+                        add.push((
+                            class.clone(),
+                            format!(
+                                "via `{}` ({}:{}) {}",
+                                st.def(site.callee).name,
+                                def.file,
+                                site.line,
+                                wit
+                            ),
+                        ));
+                    }
+                }
+            }
+            for (class, wit) in add {
+                if !may_acquire[id].contains_key(&class) {
+                    may_acquire[id].insert(class, wit);
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    // 3. acquired-while-holding edges, with one representative witness each
+    let mut edges: BTreeMap<(String, String), String> = BTreeMap::new();
+    for id in 0..nfns {
+        let def = st.def(id);
+        let toks = toks_by_file[def.file_idx];
+        for a in &acqs[id] {
+            let (lo, hi, _) = guard_live_range(toks, a.tok_idx);
+            let holder = format!(
+                "`{}` holds {} (acquired {}:{})",
+                def.name, a.class, def.file, a.line
+            );
+            for b in &acqs[id] {
+                if b.tok_idx >= lo && b.tok_idx < hi {
+                    edges
+                        .entry((a.class.clone(), b.class.clone()))
+                        .or_insert_with(|| {
+                            format!("{holder}, then acquires at {}:{}", def.file, b.line)
+                        });
+                }
+            }
+            for site in &cg.calls[id] {
+                if site.tok_idx < lo || site.tok_idx >= hi {
+                    continue;
+                }
+                if allowed(allows, &def.file, site.line) {
+                    continue;
+                }
+                for (class, wit) in &may_acquire[site.callee] {
+                    edges.entry((a.class.clone(), class.clone())).or_insert_with(|| {
+                        format!("{holder}, then {wit}")
+                    });
+                }
+            }
+        }
+    }
+
+    // 4. cycle detection over the class graph
+    for cycle in find_cycles(&edges) {
+        let mut msg = String::from("lock-order cycle: ");
+        for (k, (from, to)) in cycle.iter().enumerate() {
+            let wit = &edges[&(from.clone(), to.clone())];
+            if k > 0 {
+                msg.push_str("; then ");
+            }
+            msg.push_str(&format!("{from} -> {to} [{wit}]"));
+        }
+        // anchor the diag at the first edge's witness acquisition line
+        let (file, line) = witness_site(&edges[&cycle[0]]);
+        diags.push(Diag { file, line, rule: LOCK_ORDER, message: msg });
+    }
+}
+
+/// Pull the last `path:line` out of a witness string (the innermost
+/// acquisition site) to anchor the diagnostic.
+fn witness_site(wit: &str) -> (String, u32) {
+    let mut best = ("<unknown>".to_string(), 0u32);
+    for tok in wit.split_whitespace() {
+        let t = tok.trim_end_matches(&[',', ')', ']'][..]);
+        if let Some((path, line)) = t.rsplit_once(':') {
+            if path.contains('/') || path.ends_with(".rs") {
+                if let Ok(l) = line.parse::<u32>() {
+                    best = (path.trim_start_matches('(').to_string(), l);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Minimal deterministic cycle enumeration: one representative cycle per
+/// strongly-connected component (plus self-loops), as edge lists.
+fn find_cycles(edges: &BTreeMap<(String, String), String>) -> Vec<Vec<(String, String)>> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from).or_default().insert(to);
+    }
+    let mut cycles = Vec::new();
+    let mut covered: BTreeSet<&str> = BTreeSet::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for &start in &nodes {
+        if covered.contains(start) {
+            continue;
+        }
+        // DFS from `start` looking for a path back to `start`
+        if let Some(path) = dfs_back_to(start, &adj) {
+            let mut cyc = Vec::new();
+            for w in path.windows(2) {
+                cyc.push((w[0].to_string(), w[1].to_string()));
+            }
+            for n in &path {
+                covered.insert(n);
+            }
+            cycles.push(cyc);
+        }
+    }
+    cycles
+}
+
+/// A simple path `start -> … -> start`, if one exists.
+fn dfs_back_to<'a>(
+    start: &'a str,
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+) -> Option<Vec<&'a str>> {
+    // self-loop is the shortest cycle
+    if adj.get(start).is_some_and(|s| s.contains(start)) {
+        return Some(vec![start, start]);
+    }
+    let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, vec![start])];
+    let mut visited: BTreeSet<&str> = BTreeSet::new();
+    while let Some((node, path)) = stack.pop() {
+        for &next in adj.get(node).into_iter().flatten() {
+            if next == start {
+                let mut full = path.clone();
+                full.push(start);
+                return Some(full);
+            }
+            if visited.insert(next) {
+                let mut p = path.clone();
+                p.push(next);
+                stack.push((next, p));
+            }
+        }
+    }
+    None
+}

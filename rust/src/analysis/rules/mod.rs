@@ -1,13 +1,17 @@
-//! The five repo-specific lint rules, one module per rule, plus the call-
-//! shape helpers they share.  Each rule encodes an invariant this codebase
-//! was burned by in an earlier PR — see CONTRIBUTING.md "Invariants &
-//! lints" for the rule-by-rule history.
+//! The repo-specific lint rules, one module per rule, plus the call-shape
+//! helpers they share.  Each rule encodes an invariant this codebase was
+//! burned by in an earlier PR — see CONTRIBUTING.md "Invariants & lints"
+//! for the rule-by-rule history.  Rules L1–L5 are per-file; L7
+//! (`lock-order`) and L8 (`position-domain`) plus the transitive half of
+//! L1 run over the cross-file call graph (`analysis::{symbols,callgraph}`).
 
 pub mod channel_hygiene;
 pub mod counter_discipline;
 pub mod flight_section;
 pub mod guard_blocking;
+pub mod lock_order;
 pub mod panic_surface;
+pub mod position_domain;
 
 use super::lexer::{Tok, TokKind};
 
@@ -17,17 +21,22 @@ pub const PANIC_SURFACE: &str = "panic-surface";
 pub const COUNTER_DISCIPLINE: &str = "counter-discipline";
 pub const CHANNEL_HYGIENE: &str = "channel-hygiene";
 pub const FLIGHT_CRITICAL_SECTION: &str = "flight-critical-section";
-/// Malformed `lint:allow` comments (missing/empty reason) — not
-/// suppressible, by design.
+pub const LOCK_ORDER: &str = "lock-order";
+pub const POSITION_DOMAIN: &str = "position-domain";
+/// Malformed `lint:allow`/`lint:nonblocking`/`lint:domain` comments
+/// (missing reason, bad domain, unattached mark) — not suppressible, by
+/// design.
 pub const ALLOW_SYNTAX: &str = "allow-syntax";
 
 /// Every rule, in reporting order.
-pub const ALL_RULES: [&str; 6] = [
+pub const ALL_RULES: [&str; 8] = [
     GUARD_ACROSS_BLOCKING,
     PANIC_SURFACE,
     COUNTER_DISCIPLINE,
     CHANNEL_HYGIENE,
     FLIGHT_CRITICAL_SECTION,
+    LOCK_ORDER,
+    POSITION_DOMAIN,
     ALLOW_SYNTAX,
 ];
 

@@ -1,0 +1,393 @@
+//! L8 `position-domain` — RoPE position-domain provenance dataflow.
+//!
+//! The paper's §4.1 invariant: the attention-norm signal is only reliable
+//! under an *inference-consistent RoPE geometry*.  Mixing chunk-local
+//! stored positions (`local`), packed target-frame positions (`global`),
+//! and position-free KV (`unrotated`, the LazyAttention direction ROADMAP
+//! item 5 adopts) is exactly the bug class no test grid can cover
+//! exhaustively — so this rule makes it mechanical.
+//!
+//! Seeds: `// lint:domain(d)` on a fn (its return value carries positions
+//! in domain `d`; its position arguments must be in `d`) or on a struct
+//! field; `// lint:converts(a->b)` declares a fn a legal conversion point
+//! (re-rotation).  Provenance then flows through `let` bindings, plain
+//! assignments, field reads (an unannotated field keeps its parent's
+//! domain; an annotated one overrides), and domain-preserving postfix
+//! chains (`.clone()`, indexing, casts).  A flow that lands a value of
+//! domain `x` in a slot declared `y` without passing through a declared
+//! converter is a diagnostic.
+//!
+//! The pass is intraprocedural over each fn body, against the cross-file
+//! annotation table — deep enough to catch the real hazard (a
+//! `local_positions` result handed to a `global` consumer), shallow
+//! enough to stay lexical.
+
+use std::collections::HashMap;
+
+use super::super::allow::DomainMark;
+use super::super::callgraph::own_token_indices;
+use super::super::lexer::{Tok, TokKind};
+use super::super::scope::{stmt_end, FnSpan};
+use super::super::symbols::SymbolTable;
+use super::{is_call, POSITION_DOMAIN};
+use crate::analysis::Diag;
+
+/// Postfix methods that preserve a value's position domain.
+const KEEP_METHODS: [&str; 14] = [
+    "clone", "to_vec", "to_owned", "as_slice", "as_ref", "as_mut_slice", "copied", "cloned",
+    "iter", "iter_mut", "into_iter", "collect", "data", "data_mut",
+];
+
+/// The cross-file annotation table the dataflow runs against.
+#[derive(Default, Debug)]
+pub struct DomainTable {
+    /// fn name -> declared domain of its return value / position args.
+    pub fn_domains: HashMap<String, String>,
+    /// fn name -> (from, to) declared conversion.
+    pub converts: HashMap<String, (String, String)>,
+    /// struct field name -> declared domain.
+    pub field_domains: HashMap<String, String>,
+}
+
+impl DomainTable {
+    /// Attach one file's parsed marks.  A mark binds to the fn declared on
+    /// one of the next three lines, or to the first struct-field
+    /// declaration (`ident :` outside any fn body) within two lines —
+    /// whichever is on the *nearer* line, so a mark sitting directly above
+    /// a field is not stolen by a fn two lines further down.
+    /// Returns `(line, message)` for marks that attach to nothing.
+    pub fn add_file(
+        &mut self,
+        marks: &[(u32, DomainMark)],
+        toks: &[Tok],
+        fns: &[FnSpan],
+    ) -> Vec<(u32, String)> {
+        let mut bad = Vec::new();
+        for (line, mark) in marks {
+            // field form: `[pub] name : Type` at item level
+            let field = toks.iter().enumerate().find(|(i, t)| {
+                t.kind == TokKind::Ident
+                    && t.line >= *line
+                    && t.line <= line + 2
+                    && toks.get(i + 1).is_some_and(|n| n.text == ":")
+                    && !toks.get(i + 2).is_some_and(|n| n.text == ":")
+                    && (*i == 0 || toks[*i - 1].text != ":")
+                    && !fns.iter().any(|f| f.body.0 <= *i && *i <= f.body.1)
+            });
+            let cand_fn = fns.iter().find(|f| *line <= f.line && f.line <= line + 3);
+            let attach_fn = match (cand_fn, &field) {
+                (Some(f), Some((_, t))) if f.line <= t.line => Some(f),
+                (Some(f), None) => Some(f),
+                _ => None,
+            };
+            if let Some(f) = attach_fn {
+                match mark {
+                    DomainMark::Domain(d) => {
+                        self.fn_domains.insert(f.name.clone(), d.clone());
+                    }
+                    DomainMark::Converts(a, b) => {
+                        self.converts.insert(f.name.clone(), (a.clone(), b.clone()));
+                    }
+                }
+                continue;
+            }
+            match (field, mark) {
+                (Some((_, t)), DomainMark::Domain(d)) => {
+                    self.field_domains.insert(t.text.clone(), d.clone());
+                }
+                (Some(_), DomainMark::Converts(..)) => bad.push((
+                    *line,
+                    "lint:converts(...) must annotate a fn, not a field".to_string(),
+                )),
+                (None, _) => bad.push((
+                    *line,
+                    "lint:domain/lint:converts mark attaches to no fn or field within 3 lines"
+                        .to_string(),
+                )),
+            }
+        }
+        bad
+    }
+
+    /// Domain of a call's return value, when declared.
+    fn call_out(&self, name: &str) -> Option<&str> {
+        if let Some((_, to)) = self.converts.get(name) {
+            return Some(to);
+        }
+        self.fn_domains.get(name).map(String::as_str)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fn_domains.is_empty() && self.converts.is_empty() && self.field_domains.is_empty()
+    }
+}
+
+/// Matching `)` for the `(` at `open`, bounded by `hi`.
+fn close_paren(toks: &[Tok], open: usize, hi: usize) -> usize {
+    let mut d = 0i32;
+    let mut j = open;
+    while j < hi {
+        match toks[j].text.as_str() {
+            "(" | "[" => d += 1,
+            ")" | "]" => {
+                d -= 1;
+                if d == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    hi
+}
+
+/// Infer the position domain of the expression spanning `[lo, hi)`.
+/// `None` = unknown (the pass stays quiet on anything it can't prove).
+fn infer(
+    table: &DomainTable,
+    env: &HashMap<String, String>,
+    toks: &[Tok],
+    lo: usize,
+    hi: usize,
+) -> Option<String> {
+    let mut i = lo;
+    while i < hi && matches!(toks[i].text.as_str(), "&" | "*" | "mut") {
+        i += 1;
+    }
+    if i >= hi || toks[i].kind != TokKind::Ident {
+        return None;
+    }
+    // leading path segments: `geometry::layout`
+    let mut name = toks[i].text.as_str();
+    let mut j = i + 1;
+    while j + 2 < hi && toks[j].text == ":" && toks[j + 1].text == ":" {
+        if toks[j + 2].kind != TokKind::Ident {
+            return None;
+        }
+        name = &toks[j + 2].text;
+        j += 3;
+    }
+    let mut dom: String;
+    if j < hi && toks[j].text == "(" {
+        dom = table.call_out(name)?.to_string();
+        j = close_paren(toks, j, hi) + 1;
+    } else {
+        dom = env.get(name)?.clone();
+    }
+    // postfix chain: keep, override, or bail
+    while j < hi {
+        match toks[j].text.as_str() {
+            "." => {
+                let m = toks.get(j + 1)?;
+                if m.kind != TokKind::Ident {
+                    return None;
+                }
+                if toks.get(j + 2).is_some_and(|t| t.text == "(") {
+                    // method call
+                    if KEEP_METHODS.contains(&m.text.as_str()) {
+                        j = close_paren(toks, j + 2, hi) + 1;
+                    } else if let Some(d) = table.call_out(&m.text) {
+                        dom = d.to_string();
+                        j = close_paren(toks, j + 2, hi) + 1;
+                    } else {
+                        return None;
+                    }
+                } else {
+                    // field read: annotated field overrides, others keep
+                    if let Some(d) = table.field_domains.get(&m.text) {
+                        dom = d.clone();
+                    }
+                    j += 2;
+                }
+            }
+            "[" => j = close_paren(toks, j, hi) + 1,
+            "?" => j += 1,
+            "as" => return Some(dom), // numeric cast keeps the domain
+            _ => return None, // arithmetic etc.: provenance is gone
+        }
+    }
+    Some(dom)
+}
+
+/// Top-level argument ranges of the call whose `(` is at `open`.
+fn arg_ranges(toks: &[Tok], open: usize, close: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut d = 0i32;
+    let mut start = open + 1;
+    for j in open..=close.min(toks.len().saturating_sub(1)) {
+        match toks[j].text.as_str() {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => {
+                d -= 1;
+                if d == 0 && j > start {
+                    out.push((start, j));
+                }
+            }
+            "," if d == 1 => {
+                if j > start {
+                    out.push((start, j));
+                }
+                start = j + 1;
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Run the dataflow over every fn in the table.
+pub fn check(
+    st: &SymbolTable,
+    toks_by_file: &[&[Tok]],
+    table: &DomainTable,
+    diags: &mut Vec<Diag>,
+) {
+    if table.is_empty() {
+        return;
+    }
+    for id in 0..st.fns.len() {
+        let def = st.def(id);
+        let toks = toks_by_file[def.file_idx];
+        let own = own_token_indices(st, id);
+        let mut env: HashMap<String, String> = HashMap::new();
+        for &i in &own {
+            let t = &toks[i];
+            // `let [mut] name = expr;` — bind provenance
+            if t.kind == TokKind::Ident && t.text == "let" {
+                let mut k = i + 1;
+                while k < toks.len() && toks[k].text == "mut" {
+                    k += 1;
+                }
+                if toks.get(k).is_some_and(|t| t.kind == TokKind::Ident)
+                    && toks.get(k + 1).is_some_and(|t| t.text == "=")
+                    && !toks.get(k + 2).is_some_and(|t| t.text == "=")
+                {
+                    let end = stmt_end(toks, i, toks.len());
+                    let name = toks[k].text.clone();
+                    match infer(table, &env, toks, k + 2, end) {
+                        Some(d) => {
+                            env.insert(name, d);
+                        }
+                        None => {
+                            env.remove(&name); // shadowed by an unknown
+                        }
+                    }
+                }
+                continue;
+            }
+            // assignments: `lhs = expr;` (skip ==, <=, +=, …)
+            if t.text == "="
+                && i > 0
+                && !toks.get(i + 1).is_some_and(|n| n.text == "=")
+                && !matches!(
+                    toks[i - 1].text.as_str(),
+                    "=" | "!" | "<" | ">" | "+" | "-" | "*" | "/" | "%" | "&" | "|" | "^"
+                )
+            {
+                let end = stmt_end(toks, i, toks.len());
+                let rhs = infer(table, &env, toks, i + 1, end);
+                // plain variable rebind
+                if toks[i - 1].kind == TokKind::Ident
+                    && (i < 2 || toks[i - 2].text != ".")
+                    && env.contains_key(&toks[i - 1].text)
+                {
+                    match &rhs {
+                        Some(d) => env.insert(toks[i - 1].text.clone(), d.clone()),
+                        None => env.remove(&toks[i - 1].text),
+                    };
+                    continue;
+                }
+                // field store: any annotated field in the lhs chain is the
+                // declared domain of the written slot
+                if let (Some(d2), Some((field, fd))) =
+                    (&rhs, lhs_annotated_field(table, toks, i))
+                {
+                    if *d2 != fd {
+                        diags.push(Diag {
+                            file: def.file.clone(),
+                            line: t.line,
+                            rule: POSITION_DOMAIN,
+                            message: format!(
+                                "stores a {d2}-domain value into field `{field}` declared \
+                                 lint:domain({fd}) — route it through a declared converter"
+                            ),
+                        });
+                    }
+                }
+                continue;
+            }
+            // call-argument checks against annotated fns / converters
+            if t.kind == TokKind::Ident && is_call(toks, i) {
+                let expected: Option<(String, bool)> = table
+                    .converts
+                    .get(&t.text)
+                    .map(|(a, _)| (a.clone(), true))
+                    .or_else(|| table.fn_domains.get(&t.text).map(|d| (d.clone(), false)));
+                let Some((expected, is_conv)) = expected else {
+                    continue;
+                };
+                let close = close_paren(toks, i + 1, toks.len());
+                for (a, b) in arg_ranges(toks, i + 1, close) {
+                    let Some(got) = infer(table, &env, toks, a, b) else {
+                        continue;
+                    };
+                    if got != expected {
+                        let what = if is_conv {
+                            format!("converter `{}` declared lint:converts({expected}->…)", t.text)
+                        } else {
+                            format!("`{}` declared lint:domain({expected})", t.text)
+                        };
+                        diags.push(Diag {
+                            file: def.file.clone(),
+                            line: t.line,
+                            rule: POSITION_DOMAIN,
+                            message: format!(
+                                "passes a {got}-domain value to {what} — cross-domain flow \
+                                 without a declared conversion"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Walk the assignment LHS ending at the `=` at `eq`; the innermost
+/// annotated field in the chain, if any.
+fn lhs_annotated_field(
+    table: &DomainTable,
+    toks: &[Tok],
+    eq: usize,
+) -> Option<(String, String)> {
+    let mut j = eq as isize - 1;
+    let mut depth = 0i32;
+    let mut found: Option<(String, String)> = None;
+    while j >= 0 {
+        let t = &toks[j as usize];
+        match t.text.as_str() {
+            ")" | "]" => depth += 1,
+            "(" | "[" => {
+                depth -= 1;
+                if depth < 0 {
+                    break;
+                }
+            }
+            ";" | "{" | "}" | "=" | "let" => break,
+            _ => {
+                if depth == 0 && t.kind == TokKind::Ident {
+                    if let Some(d) = table.field_domains.get(&t.text) {
+                        // keep the LAST (outermost-walked) match: fields
+                        // nearer the `=` win, so only set when unset
+                        if found.is_none() {
+                            found = Some((t.text.clone(), d.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        j -= 1;
+    }
+    found
+}

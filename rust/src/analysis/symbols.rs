@@ -1,0 +1,233 @@
+//! Cross-file symbol table for the interprocedural passes.
+//!
+//! Maps every non-test `fn` in the walked tree to a [`FnDef`] carrying its
+//! defining file, body token span, and — when the fn sits inside an
+//! `impl Type { … }` / `impl Trait for Type { … }` block — the owning type
+//! name.  Resolution stays *lexical* (this is a lint, not a type checker):
+//! calls are matched by name, with impl owners and receiver-name hints
+//! used to disambiguate the ubiquitous std method names (`insert`, `take`,
+//! `wait`, …) that would otherwise alias half the standard library.
+
+use std::collections::HashMap;
+
+use super::lexer::{Tok, TokKind};
+use super::scope::{in_regions, FnSpan, Region};
+
+/// Index into [`SymbolTable::fns`].
+pub type FnId = usize;
+
+/// One function definition known to the cross-file table.
+#[derive(Clone, Debug)]
+pub struct FnDef {
+    /// Repo-relative path of the defining file.
+    pub file: String,
+    /// Index of the defining file in the analyzer's file list.
+    pub file_idx: usize,
+    pub name: String,
+    /// `impl` owner type, when the fn is defined inside an impl block.
+    pub owner: Option<String>,
+    /// Token indices of the body `{ … }` in the defining file.
+    pub body: (usize, usize),
+    /// Line of the `fn` keyword.
+    pub line: u32,
+}
+
+/// The cross-file function table.
+#[derive(Default)]
+pub struct SymbolTable {
+    pub fns: Vec<FnDef>,
+    by_name: HashMap<String, Vec<FnId>>,
+    /// Per file index: FnIds defined there, outer fns before nested ones.
+    by_file: HashMap<usize, Vec<FnId>>,
+}
+
+impl SymbolTable {
+    /// Register every non-`#[cfg(test)]` fn of one file.
+    pub fn add_file(
+        &mut self,
+        file_idx: usize,
+        rel: &str,
+        toks: &[Tok],
+        fns: &[FnSpan],
+        test_regions: &[Region],
+    ) {
+        let owners = impl_owner_spans(toks);
+        for f in fns {
+            if in_regions(f.body.0, test_regions) {
+                continue;
+            }
+            // innermost impl block containing the body, if any
+            let owner = owners
+                .iter()
+                .rev()
+                .find(|(a, b, _)| *a <= f.body.0 && f.body.1 <= *b)
+                .map(|(_, _, o)| o.clone());
+            let id = self.fns.len();
+            self.fns.push(FnDef {
+                file: rel.to_string(),
+                file_idx,
+                name: f.name.clone(),
+                owner,
+                body: f.body,
+                line: f.line,
+            });
+            self.by_name.entry(f.name.clone()).or_default().push(id);
+            self.by_file.entry(file_idx).or_default().push(id);
+        }
+    }
+
+    pub fn def(&self, id: FnId) -> &FnDef {
+        &self.fns[id]
+    }
+
+    /// Every definition of `name`, across all files.
+    pub fn defs_named(&self, name: &str) -> &[FnId] {
+        self.by_name.get(name).map_or(&[], |v| v.as_slice())
+    }
+
+    /// A definition of `name` owned by impl type `owner`, if one exists.
+    pub fn def_owned(&self, name: &str, owner: &str) -> Option<FnId> {
+        self.defs_named(name)
+            .iter()
+            .copied()
+            .find(|&id| self.fns[id].owner.as_deref() == Some(owner))
+    }
+
+    /// FnIds defined in file `file_idx`, outer before nested.
+    pub fn fns_in_file(&self, file_idx: usize) -> &[FnId] {
+        self.by_file.get(&file_idx).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Innermost fn of `file_idx` whose body contains token `tok_idx`.
+    pub fn enclosing(&self, file_idx: usize, tok_idx: usize) -> Option<FnId> {
+        self.fns_in_file(file_idx)
+            .iter()
+            .copied()
+            .rev()
+            .find(|&id| {
+                let (a, b) = self.fns[id].body;
+                a <= tok_idx && tok_idx <= b
+            })
+    }
+}
+
+/// `(open_brace_idx, close_brace_idx, owner_type)` for every
+/// `impl [Trait for] Type { … }` block in the token stream.
+fn impl_owner_spans(toks: &[Tok]) -> Vec<(usize, usize, String)> {
+    let n = toks.len();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !(toks[i].kind == TokKind::Ident && toks[i].text == "impl") {
+            i += 1;
+            continue;
+        }
+        // scan the header up to the `{` at angle/paren depth 0, remembering
+        // the first type ident after `impl` (skipping generic params) and
+        // the first after `for` — the latter wins when present
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut first_ty: Option<String> = None;
+        let mut after_for: Option<String> = None;
+        let mut saw_for = false;
+        let mut open = None;
+        while j < n {
+            let t = &toks[j].text;
+            if t == "<" || t == "(" || t == "[" {
+                depth += 1;
+            } else if t == ">" || t == ")" || t == "]" {
+                depth -= 1;
+            } else if t == "{" && depth <= 0 {
+                open = Some(j);
+                break;
+            } else if t == ";" && depth <= 0 {
+                break;
+            } else if toks[j].kind == TokKind::Ident && depth <= 0 {
+                if t == "for" {
+                    saw_for = true;
+                } else if saw_for {
+                    if after_for.is_none() {
+                        after_for = Some(t.clone());
+                    }
+                } else if first_ty.is_none() && t != "dyn" {
+                    first_ty = Some(t.clone());
+                }
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            i = j + 1;
+            continue;
+        };
+        let mut d = 0i32;
+        let mut k = open;
+        while k < n {
+            if toks[k].text == "{" {
+                d += 1;
+            } else if toks[k].text == "}" {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        if let Some(owner) = after_for.or(first_ty) {
+            spans.push((open, k, owner));
+        }
+        i = open + 1; // impls don't nest in practice, but stay safe
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::super::scope::{find_fns, find_test_regions};
+    use super::*;
+
+    fn table(src: &str) -> SymbolTable {
+        let (toks, _) = lex(src);
+        let fns = find_fns(&toks);
+        let regions = find_test_regions(&toks);
+        let mut st = SymbolTable::default();
+        st.add_file(0, "rust/src/x.rs", &toks, &fns, &regions);
+        st
+    }
+
+    #[test]
+    fn impl_owners_resolve() {
+        let st = table(
+            "struct A; impl A { fn go(&self) {} }\n\
+             impl Clone for A { fn clone(&self) -> A { A } }\n\
+             fn free() {}",
+        );
+        assert_eq!(st.fns.len(), 3);
+        let go = st.def_owned("go", "A").unwrap();
+        assert_eq!(st.def(go).owner.as_deref(), Some("A"));
+        let clone = st.def_owned("clone", "A").unwrap();
+        assert_eq!(st.def(clone).name, "clone");
+        assert_eq!(st.defs_named("free").len(), 1);
+        assert_eq!(st.def(st.defs_named("free")[0]).owner, None);
+    }
+
+    #[test]
+    fn generic_impl_headers_and_nesting() {
+        let st = table(
+            "impl<T: Clone> Holder<T> { fn put(&self, t: T) { fn inner() {} } }",
+        );
+        let put = st.def_owned("put", "Holder").unwrap();
+        assert_eq!(st.def(put).owner.as_deref(), Some("Holder"));
+        // nested fn is registered too, and `enclosing` picks the innermost
+        let inner = st.defs_named("inner")[0];
+        let mid = st.def(inner).body.0 + 1;
+        assert_eq!(st.enclosing(0, mid), Some(inner));
+    }
+
+    #[test]
+    fn test_region_fns_are_excluded() {
+        let st = table("fn real() {}\n#[cfg(test)]\nmod t { fn fake() {} }");
+        assert_eq!(st.defs_named("real").len(), 1);
+        assert!(st.defs_named("fake").is_empty());
+    }
+}

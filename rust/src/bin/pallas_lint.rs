@@ -1,15 +1,21 @@
 //! `pallas-lint` — the repo's invariant lint driver.
 //!
 //! ```text
-//! pallas_lint [--root DIR] [--format text|json|summary]
+//! pallas_lint [--root DIR] [--format text|json|summary|sarif]
+//!             [--list-allows] [--graph]
 //! ```
 //!
 //! Walks `rust/src`, `rust/xla-stub`, `rust/tests` and `benches/` under the
-//! repo root, runs the five invariant rules (see `src/analysis/`), and
-//! prints diagnostics.  Exit codes: 0 clean, 1 violations found, 2 usage or
-//! I/O error.  `--root` defaults to the current directory, falling back to
-//! the parent when invoked from inside `rust/` (so `cargo run --bin
-//! pallas_lint` works from either level).
+//! repo root, runs the eight invariant rules (see `src/analysis/`), and
+//! prints diagnostics.  `--list-allows` prints the waiver audit (every
+//! `lint:allow`/`lint:requires`/`lint:nonblocking` site with its reason,
+//! plus a `total_waivers N` trailer CI diffs against the committed
+//! baseline) instead of diagnostics; `--graph` dumps the interprocedural
+//! call graph with may-block chains.  Exit codes: 0 clean, 1 violations
+//! found, 2 usage or I/O error (`--list-allows`/`--graph` always exit 0
+//! unless I/O fails).  `--root` defaults to the current directory, falling
+//! back to the parent when invoked from inside `rust/` (so `cargo run
+//! --bin pallas_lint` works from either level).
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -20,16 +26,27 @@ enum Format {
     Text,
     Json,
     Summary,
+    Sarif,
 }
 
+enum Mode {
+    Lint,
+    ListAllows,
+    Graph,
+}
+
+const USAGE: &str = "usage: pallas_lint [--root DIR] \
+                     [--format text|json|summary|sarif] [--list-allows] [--graph]";
+
 fn usage() -> ExitCode {
-    eprintln!("usage: pallas_lint [--root DIR] [--format text|json|summary]");
+    eprintln!("{USAGE}");
     ExitCode::from(2)
 }
 
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut format = Format::Text;
+    let mut mode = Mode::Lint;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
@@ -41,10 +58,13 @@ fn main() -> ExitCode {
                 Some("text") => format = Format::Text,
                 Some("json") => format = Format::Json,
                 Some("summary") => format = Format::Summary,
+                Some("sarif") => format = Format::Sarif,
                 _ => return usage(),
             },
+            "--list-allows" => mode = Mode::ListAllows,
+            "--graph" => mode = Mode::Graph,
             "--help" | "-h" => {
-                println!("usage: pallas_lint [--root DIR] [--format text|json|summary]");
+                println!("{USAGE}");
                 return ExitCode::SUCCESS;
             }
             _ => return usage(),
@@ -61,24 +81,35 @@ fn main() -> ExitCode {
             here
         }
     });
-    let report = match analysis::lint_tree(&root) {
-        Ok(r) => r,
+    let tl = match analysis::scan_tree(&root) {
+        Ok(t) => t,
         Err(e) => {
             eprintln!("pallas-lint: {e:#}");
             return ExitCode::from(2);
         }
     };
+    if let Mode::Graph = mode {
+        print!("{}", tl.render_graph());
+        return ExitCode::SUCCESS;
+    }
+    let report = tl.finish();
+    if let Mode::ListAllows = mode {
+        print!("{}", report.render_allows());
+        return ExitCode::SUCCESS;
+    }
     match format {
         Format::Text => {
             print!("{}", report.render_text());
             eprintln!(
-                "pallas-lint: {} file(s) scanned, {} violation(s)",
+                "pallas-lint: {} file(s) scanned, {} violation(s), {} waiver site(s)",
                 report.files_scanned,
-                report.diags.len()
+                report.diags.len(),
+                report.waivers.len()
             );
         }
         Format::Json => println!("{}", report.to_json().to_string_pretty()),
         Format::Summary => print!("{}", report.render_summary()),
+        Format::Sarif => println!("{}", report.to_sarif().to_string_pretty()),
     }
     if report.is_clean() {
         ExitCode::SUCCESS

@@ -59,11 +59,18 @@ pub struct Layout {
     /// Per context-row delta = target - stored(chunk-local) position; what
     /// the re-rotation kernel applies to cached keys.
     pub ctx_delta: Vec<i32>,
-    /// Prompt token positions.
+    /// Prompt token positions, always in the target coordinate frame the
+    /// attention kernel consumes (never chunk-local).
+    // lint:domain(global)
     pub prompt_pos: Vec<i32>,
 }
 
+// ctx_pos / ctx_delta are deliberately NOT domain-annotated: their domain
+// depends on which `RopeGeometry` built the layout (Global -> packed-global,
+// HL-* -> chunk-local, TL-TP -> tail-packed), so no single seed is truthful.
+
 /// Chunk lengths -> chunk-local (stored) position of every context row.
+// lint:domain(local)
 pub fn local_positions(chunk_lens: &[usize]) -> Vec<i32> {
     let mut out = Vec::with_capacity(chunk_lens.iter().sum());
     for &len in chunk_lens {
@@ -73,6 +80,7 @@ pub fn local_positions(chunk_lens: &[usize]) -> Vec<i32> {
 }
 
 /// Packed global offset of each chunk (retrieval order).
+// lint:domain(global)
 pub fn global_offsets(chunk_lens: &[usize]) -> Vec<usize> {
     let mut out = Vec::with_capacity(chunk_lens.len());
     let mut acc = 0;
@@ -121,6 +129,11 @@ pub fn layout(geometry: RopeGeometry, chunk_lens: &[usize], prompt_len: usize) -
 /// cached keys as stored (chunk-local positions, delta 0), prompt at its
 /// packed-global position.  Recomputed rows get their global positions
 /// patched in by the pipeline.
+///
+/// `layout()` above carries no domain seed (its output domain depends on the
+/// geometry argument); this one is always stored/chunk-local for context rows,
+/// so it is the `local` anchor of the position-domain lattice.
+// lint:domain(local)
 pub fn decode_layout(chunk_lens: &[usize], prompt_len: usize) -> Layout {
     let n: usize = chunk_lens.iter().sum();
     let local = local_positions(chunk_lens);

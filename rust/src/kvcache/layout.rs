@@ -32,6 +32,9 @@ pub struct AssembledContext {
     pub tokens: TensorI, // [bucket]
     pub k: TensorF,      // [L, bucket, H, Dh]
     pub v: TensorF,      // [L, bucket, H, Dh]
+    // `gpos` carries no position-domain seed on purpose: it is mixed-domain
+    // by design (chunk-local until `patch` writes global positions over the
+    // recomputed rows), so neither `local` nor `global` would be truthful.
     pub gpos: TensorI,   // [bucket] decode-phase positions
     pub valid: TensorF,  // [bucket]
     dims: (usize, usize, usize),
@@ -253,7 +256,10 @@ impl AssembledContext {
     /// `new_k/new_v[:, i]` and its decode position becomes `sel_gpos[i]`.
     /// Slots >= bucket (padding of the selection) are skipped.  Shape
     /// mismatches are hard errors — a silent partial patch corrupts the
-    /// decode cache.
+    /// decode cache.  `sel_gpos` must already be target-frame (global)
+    /// positions — patching stored chunk-local positions here would poison
+    /// the decode cache with un-re-rotated coordinates.
+    // lint:domain(global)
     pub fn patch(
         &mut self,
         slots: &[i32],

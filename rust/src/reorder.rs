@@ -8,6 +8,11 @@
 //! for sitting closer to the prompt), derives chunk-level importance, and
 //! produces an order that places informative chunks nearest the prompt.
 //! Stage 2 (in the pipeline) re-scores under GLOBAL in the new order.
+//!
+//! No `lint:domain` seeds here on purpose: this module moves chunk *scores*
+//! and permutation indices, never position vectors — the position-domain
+//! lattice (see `geometry.rs`, `rope.rs`) only annotates values that actually
+//! carry RoPE positions, so the rule stays truthful instead of broad.
 
 use crate::selection::chunk_scores;
 

@@ -21,6 +21,7 @@ pub fn frequencies(head_dim: usize, theta: f64) -> Vec<f64> {
 /// Cosine similarity between two such vectors depends only on the position
 /// *difference* filtered through the frequency bank — the purely geometric
 /// reachability signal Table 2 measures.
+// lint:domain(global)
 pub fn position_embedding(pos: i64, head_dim: usize, theta: f64) -> Vec<f64> {
     let freqs = frequencies(head_dim, theta);
     let norm = 1.0 / (freqs.len() as f64).sqrt();
@@ -36,6 +37,7 @@ pub fn position_embedding(pos: i64, head_dim: usize, theta: f64) -> Vec<f64> {
 
 /// Cosine similarity of the RoPE embeddings of two positions.
 /// Equal to mean_i cos((a - b) * f_i) — symmetric, 1.0 at a == b.
+// lint:domain(global)
 pub fn position_similarity(a: i64, b: i64, head_dim: usize, theta: f64) -> f64 {
     let freqs = frequencies(head_dim, theta);
     let d = (a - b) as f64;
@@ -43,6 +45,10 @@ pub fn position_similarity(a: i64, b: i64, head_dim: usize, theta: f64) -> f64 {
 }
 
 /// Rotate one head vector (rotate-half convention) by `delta` positions.
+/// This is the canonical re-rotation step that moves a key cached at its
+/// stored chunk-local position to its target position — i.e. the sanctioned
+/// crossing from the `local` position domain into `global`.
+// lint:converts(local->global)
 pub fn rotate(vec: &mut [f32], delta: i64, theta: f64) {
     let d = vec.len();
     let half = d / 2;
@@ -66,6 +72,7 @@ pub struct SimilarityStats {
     pub max: f64,
 }
 
+// lint:domain(global)
 pub fn similarity_stats(
     prompt_positions: &[i64],
     selected_positions: &[i64],

@@ -461,6 +461,301 @@ impl SpillTier {
     assert_eq!(rule_diags(&diags, "guard-across-blocking").len(), 1, "{diags:?}");
 }
 
+// ---------------------------------------------------------------- L6
+// transitive blocking: the guard rule sees through resolved calls
+
+#[test]
+fn transitive_blocking_triggers_through_call_chain() {
+    // Three-deep: top holds the lock across mid -> leaf -> recv.
+    let diags = lint_str(
+        COORD,
+        r#"
+fn leaf(rx: &Receiver<u8>) -> u8 { rx.recv().unwrap_or(0) }
+fn mid(rx: &Receiver<u8>) -> u8 { leaf(rx) }
+fn top(m: &Mutex<u8>, rx: &Receiver<u8>) -> u8 {
+    let g = m.lock().unwrap();
+    let v = mid(rx);
+    drop(g);
+    v
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "guard-across-blocking");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert_eq!(hits[0].line, 6);
+    assert!(hits[0].message.contains("`mid`"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("mid -> leaf -> recv"), "{}", hits[0].message);
+}
+
+#[test]
+fn transitive_blocking_near_miss_nonblocking_marker_cuts_the_chain() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:nonblocking(reason="fixture: a peer thread guarantees a queued item")
+fn leaf(rx: &Receiver<u8>) -> u8 { rx.recv().unwrap_or(0) }
+fn mid(rx: &Receiver<u8>) -> u8 { leaf(rx) }
+fn top(m: &Mutex<u8>, rx: &Receiver<u8>) -> u8 {
+    let g = m.lock().unwrap();
+    let v = mid(rx);
+    drop(g);
+    v
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "guard-across-blocking").is_empty(), "{diags:?}");
+}
+
+// ---------------------------------------------------------------- L7
+
+#[test]
+fn lock_order_triggers_on_abba_cycle() {
+    let diags = lint_str(
+        COORD,
+        r#"
+impl Pool {
+    fn a(&self) {
+        let index = self.index.lock().unwrap();
+        let idle = self.idle.lock().unwrap();
+        drop(idle);
+        drop(index);
+    }
+    fn b(&self) {
+        let idle = self.idle.lock().unwrap();
+        let index = self.index.lock().unwrap();
+        drop(index);
+        drop(idle);
+    }
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "lock-order");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("lock-order cycle"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("tier-index"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("pool"), "{}", hits[0].message);
+}
+
+#[test]
+fn lock_order_near_miss_consistent_order() {
+    let diags = lint_str(
+        COORD,
+        r#"
+impl Pool {
+    fn a(&self) {
+        let index = self.index.lock().unwrap();
+        let idle = self.idle.lock().unwrap();
+        drop(idle);
+        drop(index);
+    }
+    fn b(&self) {
+        let index = self.index.lock().unwrap();
+        let idle = self.idle.lock().unwrap();
+        drop(idle);
+        drop(index);
+    }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "lock-order").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn lock_order_sees_acquisitions_through_callees() {
+    // `a` never touches `idle` directly — the edge comes from the
+    // may-acquire fixpoint through `grab_idle`.
+    let diags = lint_str(
+        COORD,
+        r#"
+impl Pool {
+    fn grab_idle(&self) {
+        let idle = self.idle.lock().unwrap();
+        drop(idle);
+    }
+    fn a(&self) {
+        let index = self.index.lock().unwrap();
+        self.grab_idle();
+        drop(index);
+    }
+    fn b(&self) {
+        let idle = self.idle.lock().unwrap();
+        let index = self.index.lock().unwrap();
+        drop(index);
+        drop(idle);
+    }
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "lock-order");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("lock-order cycle"), "{}", hits[0].message);
+}
+
+#[test]
+fn lock_order_waiver_breaks_the_cycle() {
+    let diags = lint_str(
+        COORD,
+        r#"
+impl Pool {
+    fn a(&self) {
+        let index = self.index.lock().unwrap();
+        // lint:allow(lock-order, reason="fixture: b never runs concurrently with a")
+        let idle = self.idle.lock().unwrap();
+        drop(idle);
+        drop(index);
+    }
+    fn b(&self) {
+        let idle = self.idle.lock().unwrap();
+        let index = self.index.lock().unwrap();
+        drop(index);
+        drop(idle);
+    }
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "lock-order").is_empty(), "{diags:?}");
+    assert!(rule_diags(&diags, "allow-syntax").is_empty(), "{diags:?}");
+}
+
+// ---------------------------------------------------------------- L8
+
+#[test]
+fn position_domain_triggers_on_unconverted_flow() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(local)
+fn stored_positions(lens: &[usize]) -> Vec<i32> { Vec::new() }
+// lint:domain(global)
+fn emit(positions: &[i32]) -> usize { positions.len() }
+fn f(lens: &[usize]) -> usize {
+    let p = stored_positions(lens);
+    emit(&p)
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "position-domain");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("local-domain"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("`emit`"), "{}", hits[0].message);
+}
+
+#[test]
+fn position_domain_near_miss_flow_through_converter() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(local)
+fn stored_positions(lens: &[usize]) -> Vec<i32> { Vec::new() }
+// lint:converts(local->global)
+fn to_global(p: Vec<i32>) -> Vec<i32> { p }
+// lint:domain(global)
+fn emit(positions: &[i32]) -> usize { positions.len() }
+fn f(lens: &[usize]) -> usize {
+    let p = stored_positions(lens);
+    let g = to_global(p);
+    emit(&g)
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "position-domain").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn position_domain_triggers_on_field_store() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(local)
+fn stored_positions(lens: &[usize]) -> Vec<i32> { Vec::new() }
+struct Buf {
+    // lint:domain(global)
+    gpos: Vec<i32>,
+}
+fn f(b: &mut Buf, lens: &[usize]) {
+    let p = stored_positions(lens);
+    b.gpos = p;
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "position-domain");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("field `gpos`"), "{}", hits[0].message);
+}
+
+#[test]
+fn position_domain_near_miss_field_store_through_converter() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(local)
+fn stored_positions(lens: &[usize]) -> Vec<i32> { Vec::new() }
+// lint:converts(local->global)
+fn to_global(p: Vec<i32>) -> Vec<i32> { p }
+struct Buf {
+    // lint:domain(global)
+    gpos: Vec<i32>,
+}
+fn f(b: &mut Buf, lens: &[usize]) {
+    let p = stored_positions(lens);
+    b.gpos = to_global(p);
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "position-domain").is_empty(), "{diags:?}");
+}
+
+#[test]
+fn position_domain_converter_rejects_wrong_domain_input() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(global)
+fn packed_offsets(lens: &[usize]) -> Vec<i32> { Vec::new() }
+// lint:converts(local->global)
+fn to_global(p: Vec<i32>) -> Vec<i32> { p }
+fn f(lens: &[usize]) -> Vec<i32> {
+    let g = packed_offsets(lens);
+    to_global(g)
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "position-domain");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("converter `to_global`"), "{}", hits[0].message);
+}
+
+// ------------------------------------------------- control comments
+
+#[test]
+fn prose_mentioning_lint_syntax_is_not_parsed() {
+    // Documentation (like the analyzer's own) may quote marker syntax;
+    // only comments that *start* with `lint:` are control comments.
+    let diags = lint_str(
+        COORD,
+        r#"
+//! Waive a finding with `lint:allow(panic-surface)` plus a reason, mark a
+//! seed with `lint:domain(nonsense)`, or `lint:converts(x)` on a fn.
+fn f() -> u8 { 0 }
+"#,
+    );
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn malformed_control_comment_is_still_flagged() {
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(sideways)
+fn f() -> u8 { 0 }
+"#,
+    );
+    let hits = rule_diags(&diags, "allow-syntax");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("unknown domain"), "{}", hits[0].message);
+}
+
 // ------------------------------------------------- report plumbing
 
 #[test]
@@ -501,11 +796,75 @@ fn summary_lists_every_rule_with_counts() {
         "counter-discipline",
         "channel-hygiene",
         "flight-critical-section",
+        "lock-order",
+        "position-domain",
         "allow-syntax",
     ] {
         assert!(summary.contains(rule), "summary missing {rule}:\n{summary}");
     }
     assert!(summary.contains("| `panic-surface` | 1 |"), "{summary}");
+}
+
+#[test]
+fn sarif_output_parses_with_util_json() {
+    let mut tl = TreeLint::new();
+    tl.check_source(COORD, "fn f(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    let report = tl.finish();
+    let rendered = report.to_sarif().to_string_pretty();
+    let parsed = Json::parse(&rendered).expect("SARIF must parse with util/json.rs");
+    assert_eq!(parsed.get("version").unwrap().as_str().unwrap(), "2.1.0");
+    let runs = parsed.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 1);
+    let driver = runs[0].get("tool").unwrap().get("driver").unwrap();
+    assert_eq!(driver.get("name").unwrap().as_str().unwrap(), "pallas-lint");
+    assert_eq!(driver.get("rules").unwrap().as_arr().unwrap().len(), 8);
+    let results = runs[0].get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].get("ruleId").unwrap().as_str().unwrap(), "panic-surface");
+    let loc = results[0].get("locations").unwrap().as_arr().unwrap()[0]
+        .get("physicalLocation")
+        .unwrap();
+    assert_eq!(
+        loc.get("artifactLocation").unwrap().get("uri").unwrap().as_str().unwrap(),
+        COORD
+    );
+}
+
+#[test]
+fn list_allows_renders_sites_and_total() {
+    let mut tl = TreeLint::new();
+    tl.check_source(
+        COORD,
+        r#"
+fn f(x: Option<u8>) -> u8 {
+    // lint:allow(panic-surface, reason="fixture: audited")
+    x.unwrap()
+}
+"#,
+    );
+    let report = tl.finish();
+    assert!(report.is_clean(), "{:?}", report.diags);
+    let audit = report.render_allows();
+    assert!(audit.contains("allow(panic-surface)"), "{audit}");
+    assert!(audit.contains("fixture: audited"), "{audit}");
+    assert!(audit.contains("total_waivers 1"), "{audit}");
+}
+
+#[test]
+fn graph_dump_shows_edges_and_may_block() {
+    let mut tl = TreeLint::new();
+    tl.check_source(
+        COORD,
+        r#"
+fn leaf(rx: &Receiver<u8>) -> u8 { rx.recv().unwrap_or(0) }
+fn top(rx: &Receiver<u8>) -> u8 { leaf(rx) }
+"#,
+    );
+    let graph = tl.render_graph();
+    assert!(graph.contains("fn leaf"), "{graph}");
+    assert!(graph.contains("-> leaf"), "{graph}");
+    assert!(graph.contains("[may-block: top -> leaf -> recv]"), "{graph}");
+    assert!(graph.contains("2 fn(s), 1 call edge(s), 2 may-block"), "{graph}");
 }
 
 // ------------------------------------------------- the dogfood gate
