@@ -198,6 +198,7 @@ fn worker_scaling() {
                         plan: MethodSpec::Baseline.to_plan(),
                         respond: rtx,
                         stream: None,
+                        session_id: None,
                     })
                     .unwrap();
                 rrx

@@ -1,0 +1,111 @@
+//! Session-reuse bench: the TTFT story multi-turn sessions exist for.
+//!
+//! Stub-runtime serving loop, 8 sessions of 2 turns each where both turns
+//! retrieve the SAME document set (the trace generator's session mode).
+//! Turn 1 preps cold — reorder/score/select/recompute plus the prompt pass;
+//! turn 2 lands on the session's sticky worker, matches the cached prep
+//! fingerprint and runs ONLY the prompt pass before decoding.  Acceptance
+//! bar: median turn-2 TTFT < 0.5x median turn-1 TTFT (expected far lower —
+//! prep dominates time-to-first-token on chunked plans).
+
+use std::sync::Arc;
+
+use infoflow_kv::config::MethodSpec;
+use infoflow_kv::coordinator::{Server, ServerConfig};
+use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::manifest::ModelDims;
+use infoflow_kv::pipeline::Pipeline;
+use infoflow_kv::runtime::exec::ModelSession;
+use infoflow_kv::runtime::Runtime;
+use infoflow_kv::util::stats::percentile;
+use infoflow_kv::workload::traces::{self, TraceConfig};
+
+const N_SESSIONS: usize = 8;
+const CHUNKS_PER_SESSION: usize = 6;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 144,
+        d_model: 32,
+        n_layers: 3,
+        n_heads: 2,
+        head_dim: 8,
+        d_ff: 64,
+        rope_theta: 10000.0,
+        chunk: 16,
+        prompt_len: 4,
+        sel_budget: 8,
+        answer_buf: 16,
+        dev_layers: 2,
+    }
+}
+
+fn median(xs: &[f64]) -> f64 {
+    let mut xs = xs.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&xs, 0.5)
+}
+
+fn main() {
+    let rt = Arc::new(Runtime::stub_with(dims(), vec![16, 32, 64, 128], 77));
+    let mk = || Pipeline::new(ModelSession::new(rt.clone(), "stub").unwrap()).unwrap();
+    let vocab = mk().vocab.clone();
+    let plan = MethodSpec::ours(8).to_plan();
+    let server = Server::spawn_pool(
+        vec![mk(), mk()],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+
+    // 2 turns per session over an identical retrieved set; arrival pacing is
+    // irrelevant here (turns are submitted back-to-back per session), only
+    // the episodes are taken from the trace.
+    let cfg = TraceConfig {
+        rate: 1e9, // pacing unused
+        n_requests: N_SESSIONS,
+        doc_pool: 24,
+        chunks_per_request: CHUNKS_PER_SESSION,
+        seed: 41,
+    };
+    let trace = traces::generate_sessions(&vocab, rt.manifest.model.chunk, &cfg, 2);
+
+    let sids: Vec<u64> = (0..N_SESSIONS).map(|_| server.open_session()).collect();
+    let mut turn_ttft: Vec<Vec<f64>> = vec![Vec::new(), Vec::new()];
+    // The trace interleaves sessions within a turn wave (turn 1 of every
+    // session, then turn 2 of every session), so each session's turn 2
+    // strictly follows its turn 1.
+    let mut seen: Vec<usize> = vec![0; N_SESSIONS];
+    for t in trace {
+        let turn = seen[t.session];
+        seen[t.session] += 1;
+        let resp = server
+            .query_plan_in(sids[t.session], t.episode, plan.clone())
+            .expect("bench request failed");
+        turn_ttft[turn].push(resp.ttft_s);
+    }
+    for sid in &sids {
+        server.close_session(*sid);
+    }
+    let skipped = server.metrics().counter("session_prep_skipped");
+    server.shutdown();
+
+    let t1 = median(&turn_ttft[0]);
+    let t2 = median(&turn_ttft[1]);
+    let ratio = t2 / t1;
+    println!(
+        "bench session_reuse: {N_SESSIONS} sessions x 2 turns, \
+         {CHUNKS_PER_SESSION} chunks each"
+    );
+    println!("  turn-1 median ttft (cold prep)    {:>8.3} ms", t1 * 1e3);
+    println!("  turn-2 median ttft (prep skipped) {:>8.3} ms", t2 * 1e3);
+    println!("  ratio {ratio:.3} (bar: < 0.5), prep skipped on {skipped} turns");
+    assert_eq!(
+        skipped, N_SESSIONS as u64,
+        "every turn 2 must hit the cached prep context"
+    );
+    assert!(
+        ratio < 0.5,
+        "turn-2 ttft is {ratio:.3}x turn-1 — the cached prep context is not \
+         paying for itself"
+    );
+}

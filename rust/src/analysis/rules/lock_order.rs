@@ -28,7 +28,8 @@ use crate::analysis::Diag;
 /// Receiver-name → lock-class table.  Extend this when adding a mutex: an
 /// unlisted receiver still participates as `mutex:<receiver>`, but a named
 /// class makes cycle reports (and waivers) legible.
-const CLASS_BY_RECEIVER: [(&str, &str); 13] = [
+const CLASS_BY_RECEIVER: [(&str, &str); 14] = [
+    ("sessions", "session"),
     ("shards", "store-shard"),
     ("shard", "store-shard"),
     ("sh", "store-shard"),

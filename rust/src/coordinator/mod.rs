@@ -23,4 +23,4 @@ pub use scheduler::DecodeScheduler;
 pub use server::{
     Handler, PrefetchFn, Request, Response, Served, Server, ServerConfig, TokenSink,
 };
-pub use session::SessionTable;
+pub use session::{Session, SessionTable};

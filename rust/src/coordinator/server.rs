@@ -75,8 +75,9 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::MetricsRegistry;
 use crate::coordinator::prefetch::{PrefetchJob, PrefetchQueue};
 use crate::coordinator::scheduler::DecodeScheduler;
+use crate::coordinator::session::SessionTable;
 use crate::kvcache::{ChunkId, ChunkKv, ChunkStore, PoolStats};
-use crate::pipeline::{Pipeline, QueryTask, StepOutcome};
+use crate::pipeline::{prep_fingerprint, Pipeline, PreparedContext, QueryTask, StepOutcome};
 use crate::plan::QueryPlan;
 use crate::runtime::exec::DecodeBatchItem;
 use crate::util::json::Json;
@@ -114,6 +115,12 @@ pub struct Request {
     pub respond: SyncSender<Response>,
     /// `Some` to stream tokens at emission (see [`Server::query_plan_stream`]).
     pub stream: Option<TokenSink>,
+    /// Multi-turn session this request belongs to (see
+    /// [`Server::open_session`]): the router routes it to the session's
+    /// sticky worker, the worker re-pins its retrieved set and — when the
+    /// retrieval is unchanged from the previous turn — skips the entire
+    /// prep phase against the session's cached context.
+    pub session_id: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -177,6 +184,11 @@ pub struct ServerConfig {
     /// `DecodeScheduler`); doubles as the fairness bound — no parked task
     /// goes more than this many scheduler ticks without a step.
     pub max_interleave: usize,
+    /// Idle TTL for multi-turn sessions: a session with no request for this
+    /// long is reaped by the router tick, releasing its chunk pins to LRU
+    /// (clients that vanish without `close_session` cannot leak pins
+    /// forever).  `Duration::ZERO` disables the sweep.
+    pub session_ttl: Duration,
 }
 
 impl Default for ServerConfig {
@@ -185,6 +197,7 @@ impl Default for ServerConfig {
             batch: BatcherConfig::default(),
             queue_cap: 64,
             max_interleave: 8,
+            session_ttl: Duration::from_secs(300),
         }
     }
 }
@@ -197,12 +210,21 @@ impl Default for ServerConfig {
 /// private queue while a sibling idles.
 type WorkItem = (Request, Instant);
 
+/// Capacity of one worker's sticky (session-affinity) channel.  Small: a
+/// session serves one turn at a time in practice, and a full channel just
+/// backpressures the router like the shared work channel does.
+const STICKY_QUEUE_CAP: usize = 8;
+
 struct Shared {
     metrics: MetricsRegistry,
     /// Chunk ids currently sitting in the prefetch job queue (or being
     /// warmed right now).  Admission dedup: a hot chunk referenced by many
     /// queued requests is scheduled once, not once per request.
     prefetch_queued: Mutex<HashSet<ChunkId>>,
+    /// Live multi-turn sessions (lock class `session`).  Lock scopes are
+    /// kept tight everywhere: store pin/unpin calls — which can evict and
+    /// therefore spill to disk — always run AFTER this lock is released.
+    sessions: Mutex<SessionTable>,
 }
 
 /// A running server instance.
@@ -225,6 +247,9 @@ pub struct Server {
     /// pools themselves move into the worker threads with their pipelines;
     /// these shared handles let `metrics_json` report reuse rates.
     pool_stats: Vec<Arc<PoolStats>>,
+    /// How many workers have a sticky (session-affinity) channel — the
+    /// scheduled workers, which occupy indices `0..n_sticky`.
+    n_sticky: usize,
 }
 
 impl Server {
@@ -315,8 +340,7 @@ impl Server {
                 }) as PrefetchFn
             })
             .collect();
-        let mut server = Server::spawn_workers(workers, prefetchers, cfg);
-        server.store = Some(store);
+        let mut server = Server::spawn_workers(workers, prefetchers, cfg, Some(store));
         server.pool_stats = pool_stats;
         server
     }
@@ -335,7 +359,7 @@ impl Server {
         cfg: ServerConfig,
     ) -> Server {
         let workers = handlers.into_iter().map(WorkerKind::Serial).collect();
-        Server::spawn_workers(workers, prefetchers, cfg)
+        Server::spawn_workers(workers, prefetchers, cfg, None)
     }
 
     /// The common spawn core: router + worker threads (serial handlers or
@@ -344,12 +368,14 @@ impl Server {
         workers: Vec<WorkerKind>,
         prefetchers: Vec<PrefetchFn>,
         cfg: ServerConfig,
+        store: Option<Arc<ChunkStore>>,
     ) -> Server {
         assert!(!workers.is_empty(), "server needs at least one worker");
         let (tx, rx) = sync_channel::<(Request, Instant)>(cfg.queue_cap);
         let shared = Arc::new(Shared {
             metrics: MetricsRegistry::new(),
             prefetch_queued: Mutex::new(HashSet::new()),
+            sessions: Mutex::new(SessionTable::new()),
         });
         let n_workers = workers.len();
         // Bounded so the router backpressures instead of buffering
@@ -357,7 +383,20 @@ impl Server {
         let (work_tx, work_rx) = sync_channel::<WorkItem>(n_workers * 2);
         let work_rx = Arc::new(Mutex::new(work_rx));
         let mut worker_threads = Vec::with_capacity(n_workers);
+        // Scheduled workers additionally get a private sticky channel so
+        // the router can honor session affinity; the senders move into the
+        // router and drop when it exits (the workers' disconnect signal).
+        let mut sticky_txs: Vec<Option<SyncSender<WorkItem>>> =
+            Vec::with_capacity(n_workers);
         for (i, worker) in workers.into_iter().enumerate() {
+            let (sticky_tx, sticky_rx) = match &worker {
+                WorkerKind::Scheduled { .. } => {
+                    let (t, r) = sync_channel::<WorkItem>(STICKY_QUEUE_CAP);
+                    (Some(t), Some(r))
+                }
+                WorkerKind::Serial(_) => (None, None),
+            };
+            sticky_txs.push(sticky_tx);
             let wrx = work_rx.clone();
             let sh = shared.clone();
             worker_threads.push(
@@ -373,6 +412,7 @@ impl Server {
                                 &store,
                                 max_interleave,
                                 &wrx,
+                                sticky_rx.as_ref(),
                                 &sh,
                             )
                         }
@@ -381,6 +421,7 @@ impl Server {
                     .expect("spawning worker thread"),
             );
         }
+        let n_sticky = sticky_txs.iter().filter(|t| t.is_some()).count();
         // Prefetchers share one priority job queue, ordered by the owning
         // request's distance to dispatch; the router closes it on exit, so
         // prefetchers drain what was scheduled and stop.
@@ -437,7 +478,19 @@ impl Server {
             .name("ifkv-router".into())
             .spawn({
                 let prefetch_q = prefetch_q.clone();
-                move || router_loop(cfg.batch, rx, work_tx, prefetch_q, sh)
+                let router_store = store.clone();
+                move || {
+                    router_loop(
+                        cfg.batch,
+                        cfg.session_ttl,
+                        rx,
+                        work_tx,
+                        sticky_txs,
+                        router_store,
+                        prefetch_q,
+                        sh,
+                    )
+                }
             })
             // lint:allow(panic-surface, reason="thread spawn failure at startup is unrecoverable; surfacing it as a panic is deliberate")
             .expect("spawning router thread");
@@ -448,8 +501,9 @@ impl Server {
             workers: worker_threads,
             prefetchers: prefetch_threads,
             prefetch_q,
-            store: None,
+            store,
             pool_stats: Vec::new(),
+            n_sticky,
         }
     }
 
@@ -478,7 +532,7 @@ impl Server {
     /// Submit a plan-typed query and wait for the answer.
     pub fn query_plan(&self, episode: Episode, plan: QueryPlan) -> Result<Response> {
         let (rtx, rrx) = sync_channel(1);
-        self.submit(Request { episode, plan, respond: rtx, stream: None })?;
+        self.submit(Request { episode, plan, respond: rtx, stream: None, session_id: None })?;
         rrx.recv().map_err(|_| anyhow!("worker dropped the request"))
     }
 
@@ -493,8 +547,63 @@ impl Server {
     ) -> Result<(Receiver<i32>, Receiver<Response>)> {
         let (ttx, trx) = channel();
         let (rtx, rrx) = sync_channel(1);
-        self.submit(Request { episode, plan, respond: rtx, stream: Some(ttx) })?;
+        self.submit(Request {
+            episode,
+            plan,
+            respond: rtx,
+            stream: Some(ttx),
+            session_id: None,
+        })?;
         Ok((trx, rrx))
+    }
+
+    /// Open a multi-turn session: assigns sticky worker affinity round-robin
+    /// across the scheduled workers and returns the session id to pass as
+    /// [`Request::session_id`] (or to [`Server::query_plan_in`]).
+    pub fn open_session(&self) -> u64 {
+        self.shared.metrics.incr("sessions_opened");
+        // Scheduled workers occupy indices 0..n_sticky (a pool is built from
+        // one worker kind), so the table's round-robin cursor maps directly.
+        self.shared.sessions.lock().unwrap().open_sticky(self.n_sticky)
+    }
+
+    /// Close a session, releasing its chunk pins back to the store's LRU
+    /// and dropping its cached prep context.  False if the id is unknown
+    /// (already closed or expired).
+    pub fn close_session(&self, id: u64) -> bool {
+        // Remove under the table lock; unpin (which can evict → spill to
+        // disk) strictly after it is released.
+        let removed = { self.shared.sessions.lock().unwrap().remove(id) };
+        match removed {
+            Some(mut s) => {
+                if let Some(store) = self.store.as_deref() {
+                    s.release_pins(store);
+                }
+                self.shared.metrics.incr("sessions_closed");
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Submit a plan-typed query WITHIN a session and wait for the answer:
+    /// routed to the session's sticky worker, retrieved chunks pinned across
+    /// turns, and prep skipped entirely when the retrieval is unchanged.
+    pub fn query_plan_in(
+        &self,
+        session_id: u64,
+        episode: Episode,
+        plan: QueryPlan,
+    ) -> Result<Response> {
+        let (rtx, rrx) = sync_channel(1);
+        self.submit(Request {
+            episode,
+            plan,
+            respond: rtx,
+            stream: None,
+            session_id: Some(session_id),
+        })?;
+        rrx.recv().map_err(|_| anyhow!("worker dropped the request"))
     }
 
     pub fn metrics(&self) -> &MetricsRegistry {
@@ -522,6 +631,17 @@ impl Server {
             }
             entries.push(("buffer_pool", agg.json()));
         }
+        let (live, pinned_bytes) = {
+            let tab = self.shared.sessions.lock().unwrap();
+            (tab.len(), tab.pinned_bytes())
+        };
+        entries.push((
+            "sessions",
+            Json::obj(vec![
+                ("live", Json::from(live)),
+                ("pinned_bytes", Json::from(pinned_bytes)),
+            ]),
+        ));
         Json::obj(entries)
     }
 
@@ -564,12 +684,19 @@ impl Drop for Server {
 
 fn router_loop(
     batch_cfg: BatcherConfig,
+    session_ttl: Duration,
     rx: Receiver<(Request, Instant)>,
     work_tx: SyncSender<WorkItem>,
+    sticky_txs: Vec<Option<SyncSender<WorkItem>>>,
+    store: Option<Arc<ChunkStore>>,
     prefetch_q: Option<Arc<PrefetchQueue>>,
     shared: Arc<Shared>,
 ) {
     let mut batcher: Batcher<(Request, Instant)> = Batcher::new(batch_cfg);
+    // Sweep idle sessions a few times per TTL (capped at 1 Hz): precise
+    // enough for expiry, cheap enough for the serial router thread.
+    let sweep_every = (session_ttl / 4).min(Duration::from_secs(1));
+    let mut last_sweep = Instant::now();
     loop {
         let now = Instant::now();
         let timeout = batcher.time_to_deadline(now).unwrap_or(IDLE_PARK);
@@ -586,7 +713,7 @@ fn router_loop(
                 // flush the remaining queue to the workers and stop.
                 shared.metrics.incr("router_disconnect_drain");
                 while !batcher.is_empty() {
-                    dispatch(&mut batcher, &work_tx, &shared);
+                    dispatch(&mut batcher, &work_tx, &sticky_txs, &shared);
                 }
                 break;
             }
@@ -596,8 +723,12 @@ fn router_loop(
             schedule_prefetch(&prefetch_q, &item.0, batcher.len() as u64, &shared);
             batcher.push(item, Instant::now());
         }
+        if session_ttl > Duration::ZERO && last_sweep.elapsed() >= sweep_every {
+            last_sweep = Instant::now();
+            sweep_sessions(session_ttl, store.as_deref(), &shared);
+        }
         if batcher.ready(Instant::now()) {
-            dispatch(&mut batcher, &work_tx, &shared);
+            dispatch(&mut batcher, &work_tx, &sticky_txs, &shared);
             // Re-peek the NEXT dispatch wave so the prefetchers keep its
             // chunks warm (idempotent — resident chunks are skipped) AND
             // re-prioritize: what just moved to the front of the line pulls
@@ -672,9 +803,40 @@ fn schedule_prefetch(
     }
 }
 
+/// Reap sessions idle past the TTL.  The table lock is held only for the
+/// removal; releasing pins (which can evict → spill to disk) happens after.
+fn sweep_sessions(ttl: Duration, store: Option<&ChunkStore>, shared: &Shared) {
+    let expired = { shared.sessions.lock().unwrap().take_expired(ttl) };
+    for (_id, mut s) in expired {
+        if let Some(store) = store {
+            s.release_pins(store);
+        }
+        shared.metrics.incr("expired_sessions");
+    }
+}
+
+/// Resolve a request's sticky worker: the session's assigned worker index,
+/// stamping its activity.  Unknown ids (closed/expired) fall back to the
+/// shared channel and are counted.
+fn route_session(session_id: u64, shared: &Shared) -> Option<usize> {
+    let worker = {
+        let mut tab = shared.sessions.lock().unwrap();
+        tab.get_mut(session_id).map(|s| {
+            s.touch();
+            s.queries_served += 1;
+            s.worker
+        })
+    };
+    if worker.is_none() {
+        shared.metrics.incr("session_unknown");
+    }
+    worker
+}
+
 fn dispatch(
     batcher: &mut Batcher<(Request, Instant)>,
     work_tx: &SyncSender<WorkItem>,
+    sticky_txs: &[Option<SyncSender<WorkItem>>],
     shared: &Shared,
 ) {
     shared.metrics.observe_s("queue_depth", batcher.len() as f64);
@@ -684,8 +846,20 @@ fn dispatch(
     // Request-granular hand-off: each worker pulls exactly what it can
     // schedule, so a drained burst distributes itself across the pool
     // instead of serializing onto one worker while the rest sit idle.
+    // Session requests are the exception: they go to their session's sticky
+    // worker so its cached prep context and warm scheduler state are
+    // actually reachable.
     for item in batch {
-        if work_tx.send(item).is_err() {
+        let sticky = item
+            .0
+            .session_id
+            .and_then(|sid| route_session(sid, shared))
+            .and_then(|w| sticky_txs.get(w).and_then(|t| t.as_ref()));
+        let sent = match sticky {
+            Some(tx) => tx.send(item).is_ok(),
+            None => work_tx.send(item).is_ok(),
+        };
+        if !sent {
             // every worker died; the dropped requests close their respond
             // channels, failing the callers' recv
             shared.metrics.incr("batches_dropped");
@@ -790,6 +964,7 @@ fn scheduled_worker_loop(
     store: &Arc<ChunkStore>,
     max_interleave: usize,
     work_rx: &Mutex<Receiver<WorkItem>>,
+    sticky_rx: Option<&Receiver<WorkItem>>,
     shared: &Shared,
 ) {
     let mut sched: DecodeScheduler<InflightQuery> = DecodeScheduler::new(max_interleave);
@@ -797,7 +972,23 @@ fn scheduled_worker_loop(
     let mut pending: VecDeque<WorkItem> = VecDeque::new();
     let mut idle_park = WORKER_IDLE_POLL;
     let mut disconnected = false;
+    let mut sticky_done = sticky_rx.is_none();
     loop {
+        // Sticky (session-affinity) work first: it can only run HERE, so it
+        // must never starve behind shared-channel intake.  This channel is
+        // private — no mutex, and no sibling to leave work for.
+        if let Some(srx) = sticky_rx {
+            while !sticky_done && sched.len() + pending.len() < width {
+                match srx.try_recv() {
+                    Ok(item) => {
+                        pending.push_back(item);
+                        idle_park = WORKER_IDLE_POLL;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => sticky_done = true,
+                }
+            }
+        }
         // Acquire work up to the interleave width and NEVER beyond it: the
         // excess stays in the shared channel where a sibling worker takes
         // it immediately, instead of stranding behind this worker's long
@@ -817,9 +1008,12 @@ fn scheduled_worker_loop(
             }
         }
         if sched.is_empty() && pending.is_empty() {
-            // Fully drained: exit once the router has hung up, otherwise
-            // park with backoff so an idle pool is not a busy loop.
-            if disconnected {
+            // Fully drained: exit once the router has hung up on BOTH
+            // channels, otherwise park with backoff so an idle pool is not
+            // a busy loop.  (The router drops the shared and sticky senders
+            // together, but each channel still yields its buffered items
+            // before reporting Disconnected.)
+            if disconnected && sticky_done {
                 break;
             }
             std::thread::sleep(idle_park);
@@ -864,7 +1058,10 @@ fn prep_query(
         // The store lock lives inside get/insert; the query is prepped over
         // pinned Arcs with no lock held.
         let (chunks, _) = pipeline.prepare_chunks(store, &req.episode.chunks)?;
-        pipeline.begin_plan(&chunks, &req.episode.prompt, &req.plan)
+        match req.session_id {
+            None => pipeline.begin_plan(&chunks, &req.episode.prompt, &req.plan),
+            Some(sid) => prep_session_query(pipeline, store, sid, &chunks, &req, shared),
+        }
     }));
     match outcome {
         Ok(Ok(task)) => Some(InflightQuery {
@@ -888,6 +1085,107 @@ fn prep_query(
                 panic_message(&panic)
             );
             None
+        }
+    }
+}
+
+/// Prep a turn of a session-affine request.  If the session's cached
+/// [`PreparedContext`] fingerprint matches this turn's (chunk ids, plan),
+/// the prep stages are skipped ENTIRELY — only the prompt pass runs
+/// ([`Pipeline::begin_from_prepared`]); the response's stage breakdown shows
+/// no reorder/score/select/recompute work.  Otherwise a normal prep runs
+/// with capture on, and the fresh context is cached for the next turn.
+/// Either way the session's pins are re-pointed at this turn's chunks.
+fn prep_session_query(
+    pipeline: &Pipeline,
+    store: &ChunkStore,
+    sid: u64,
+    chunks: &[Arc<ChunkKv>],
+    req: &Request,
+    shared: &Shared,
+) -> Result<QueryTask> {
+    let ids: Vec<u64> = chunks.iter().map(|c| c.id).collect();
+    let fp = prep_fingerprint(&ids, &req.plan);
+    // Take (not clone) the cached context: a hit consumes it, and
+    // `bind_session` puts it back once the turn's task is built.  Concurrent
+    // turns of one session therefore race benignly — the loser preps cold.
+    let (live, cached) = {
+        let mut tab = shared.sessions.lock().unwrap();
+        match tab.get_mut(sid) {
+            Some(s) if s.prepared.as_ref().is_some_and(|p| p.fingerprint() == fp) => {
+                (true, s.prepared.take())
+            }
+            Some(_) => (true, None),
+            None => (false, None),
+        }
+    };
+    if !live {
+        // Closed/expired id (the router already counted it): serve cold with
+        // no capture — there is no session left to cache for.
+        return pipeline.begin_plan(chunks, &req.episode.prompt, &req.plan);
+    }
+    let (task, prepared) = match cached {
+        Some(prepared) => {
+            let task = pipeline.begin_from_prepared(&prepared, &req.episode.prompt)?;
+            shared.metrics.incr("session_prep_skipped");
+            (task, Some(prepared))
+        }
+        None => pipeline.begin_plan_cached(chunks, &req.episode.prompt, &req.plan)?,
+    };
+    bind_session(store, shared, sid, chunks, prepared);
+    Ok(task)
+}
+
+/// Stash `prepared` on the session and re-point its pins at this turn's
+/// chunk set.  All store pin/unpin traffic runs AFTER the `sessions` lock is
+/// dropped: an unpin can trigger eviction and a spill to disk, which must
+/// never happen under the table lock (lock class `session` guards no I/O).
+fn bind_session(
+    store: &ChunkStore,
+    shared: &Shared,
+    sid: u64,
+    chunks: &[Arc<ChunkKv>],
+    prepared: Option<PreparedContext>,
+) {
+    let keep: Vec<(ChunkId, usize)> = chunks.iter().map(|c| (c.id, c.nbytes())).collect();
+    let (fresh, stale) = {
+        let mut tab = shared.sessions.lock().unwrap();
+        let Some(s) = tab.get_mut(sid) else {
+            // Session closed while this turn was in flight; nothing to bind.
+            return;
+        };
+        s.prepared = prepared;
+        s.swap_pins(&keep)
+    };
+    // We still hold this turn's chunk Arcs, so the entries are resident and
+    // pin can only fail if an insert self-evicted one under budget pressure.
+    let mut failed = Vec::new();
+    for id in fresh {
+        if !store.pin(id) {
+            failed.push(id);
+        }
+    }
+    for id in stale {
+        store.unpin(id);
+    }
+    if !failed.is_empty() {
+        for _ in &failed {
+            shared.metrics.incr("session_pin_misses");
+        }
+        let mut tab = shared.sessions.lock().unwrap();
+        if let Some(s) = tab.get_mut(sid) {
+            s.forget_pins(&failed);
+        }
+    }
+    // Close/expiry may have raced between swap_pins and the store calls
+    // above, walking off with the session (and unpinning its PREVIOUS pin
+    // set) while we pinned the new one.  Re-check liveness and release our
+    // pins if the session is gone — a double unpin is harmless (the store
+    // guards against underflow), a leaked pin is not.
+    let live = shared.sessions.lock().unwrap().get(sid).is_some();
+    if !live {
+        for (id, _) in &keep {
+            store.unpin(*id);
         }
     }
 }
@@ -1041,6 +1339,7 @@ mod tests {
                 plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
                 stream: None,
+                session_id: None,
             })
             .unwrap();
         rrx
@@ -1247,11 +1546,11 @@ mod tests {
         };
         let (rtx1, rrx1) = sync_channel(1);
         server
-            .submit(Request { episode: mk_req(10), plan: MethodSpec::Baseline.to_plan(), respond: rtx1, stream: None })
+            .submit(Request { episode: mk_req(10), plan: MethodSpec::Baseline.to_plan(), respond: rtx1, stream: None, session_id: None })
             .unwrap();
         let (rtx2, rrx2) = sync_channel(1);
         server
-            .submit(Request { episode: mk_req(20), plan: MethodSpec::Baseline.to_plan(), respond: rtx2, stream: None })
+            .submit(Request { episode: mk_req(20), plan: MethodSpec::Baseline.to_plan(), respond: rtx2, stream: None, session_id: None })
             .unwrap();
         // Wait for the prefetcher to warm the second request's chunks, then
         // release the worker for both requests.
@@ -1305,6 +1604,7 @@ mod tests {
                         plan: MethodSpec::Baseline.to_plan(),
                         respond: rtx,
                         stream: None,
+                        session_id: None,
                     })
                     .unwrap();
                 rrx
@@ -1393,6 +1693,7 @@ mod tests {
                 plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
                 stream: None,
+                session_id: None,
             }) {
                 Ok(()) => receivers.push(rrx),
                 Err(_) => {

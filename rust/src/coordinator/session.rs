@@ -1,22 +1,131 @@
-//! Session table: multi-query sessions pin their retrieved documents so the
-//! chunk store keeps them resident between queries (the paper's interactive
-//! / multi-query amortization setting).
+//! Session table: multi-turn sessions with store-accounted chunk pins and a
+//! cached prep context (the paper's interactive / multi-query amortization
+//! setting).
+//!
+//! A session owns three things:
+//!
+//! 1. **Pins** — ref-counted pin marks on the shared [`ChunkStore`], NOT
+//!    private `Arc`s.  The store's shard budget therefore accounts pinned
+//!    bytes inside `bytes`/`budget_bytes` (a pinned chunk can never be
+//!    resident-AND-spilled), and N sessions pinning one viral document share
+//!    a single resident copy.  The session records only `id → nbytes` so it
+//!    can report `pinned_bytes` and balance every `pin` with one `unpin`.
+//! 2. **A prepared context** — the previous turn's post-stage assembly
+//!    buffer ([`PreparedContext`]), keyed by a fingerprint of (chunk ids,
+//!    plan).  A follow-up turn with a matching fingerprint skips the prep
+//!    stages entirely ([`crate::pipeline::Pipeline::begin_from_prepared`]).
+//! 3. **Liveness** — a last-activity stamp.  Clients that vanish without
+//!    `close` are reaped by [`SessionTable::sweep_expired`] on the router
+//!    tick, which releases their pins back to LRU.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::kvcache::{ChunkId, ChunkKv};
+use crate::kvcache::{ChunkId, ChunkStore};
+use crate::pipeline::PreparedContext;
 
-#[derive(Default)]
 pub struct Session {
-    /// Pinned chunks (Arc keeps them out of LRU eviction).
-    pinned: HashMap<ChunkId, Arc<ChunkKv>>,
+    /// Store-pinned chunks: id → nbytes at pin time (for reporting; the
+    /// authoritative pin count lives in the store's shard entries).
+    pinned: HashMap<ChunkId, usize>,
     pub queries_served: u64,
+    /// Sticky worker index assigned at open — the router routes every turn
+    /// of this session to the same worker so its scheduler/pool state stays
+    /// warm.
+    pub worker: usize,
+    /// Stamped by [`Session::touch`] on every request; input to the
+    /// idle-TTL sweep.
+    pub last_activity: Instant,
+    /// Cached post-prep context from the latest turn (None until a chunked
+    /// turn completes prep, or after retrieval changes).
+    pub prepared: Option<PreparedContext>,
 }
 
 impl Session {
-    pub fn pin(&mut self, chunk: Arc<ChunkKv>) {
-        self.pinned.insert(chunk.id, chunk);
+    pub fn new(worker: usize) -> Session {
+        Session {
+            pinned: HashMap::new(),
+            queries_served: 0,
+            worker,
+            last_activity: Instant::now(),
+            prepared: None,
+        }
+    }
+
+    pub fn touch(&mut self) {
+        self.last_activity = Instant::now();
+    }
+
+    /// Pin `id` in the store on this session's behalf.  Idempotent per
+    /// session (a session holds at most one pin per chunk); returns whether
+    /// the chunk was resident to pin.  Callers should pin while still
+    /// holding the `Arc` from `get_or_load`, so the entry cannot be evicted
+    /// between lookup and pin.
+    pub fn pin(&mut self, store: &ChunkStore, id: ChunkId, nbytes: usize) -> bool {
+        if self.pinned.contains_key(&id) {
+            return true;
+        }
+        if store.pin(id) {
+            self.pinned.insert(id, nbytes);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record-only half of a repin: re-point this session's bookkeeping at
+    /// `keep` and return `(fresh, stale)` — ids the caller must now
+    /// `store.pin` resp. `store.unpin`.  Split from the store calls so the
+    /// server can run the (potentially spilling, hence blocking) store side
+    /// AFTER dropping the `sessions` lock.
+    pub fn swap_pins(&mut self, keep: &[(ChunkId, usize)]) -> (Vec<ChunkId>, Vec<ChunkId>) {
+        let wanted: HashMap<ChunkId, usize> = keep.iter().copied().collect();
+        let stale: Vec<ChunkId> =
+            self.pinned.keys().copied().filter(|id| !wanted.contains_key(id)).collect();
+        for id in &stale {
+            self.pinned.remove(id);
+        }
+        let mut fresh = Vec::new();
+        for (&id, &nb) in &wanted {
+            if self.pinned.insert(id, nb).is_none() {
+                fresh.push(id);
+            }
+        }
+        (fresh, stale)
+    }
+
+    /// Roll back bookkeeping for pins that failed at the store (the chunk
+    /// was evicted between retrieval and pin).
+    pub fn forget_pins(&mut self, ids: &[ChunkId]) {
+        for id in ids {
+            self.pinned.remove(id);
+        }
+    }
+
+    /// Re-point this session's pins at `keep`: unpin everything not in the
+    /// new set, pin what is newly retrieved.  Returns how many pins the
+    /// session holds afterwards.  Convenience wrapper over
+    /// [`Session::swap_pins`] for callers that are not holding a lock.
+    pub fn repin(&mut self, store: &ChunkStore, keep: &[(ChunkId, usize)]) -> usize {
+        let (fresh, stale) = self.swap_pins(keep);
+        let mut failed = Vec::new();
+        for id in fresh {
+            if !store.pin(id) {
+                failed.push(id);
+            }
+        }
+        for id in stale {
+            store.unpin(id);
+        }
+        self.forget_pins(&failed);
+        self.pinned.len()
+    }
+
+    /// Release every pin back to the store's LRU (close / expiry path).
+    pub fn release_pins(&mut self, store: &ChunkStore) {
+        for (id, _) in self.pinned.drain() {
+            store.unpin(id);
+        }
     }
 
     pub fn pinned_ids(&self) -> Vec<ChunkId> {
@@ -24,15 +133,19 @@ impl Session {
     }
 
     pub fn pinned_bytes(&self) -> usize {
-        self.pinned.values().map(|c| c.nbytes()).sum()
+        self.pinned.values().sum()
     }
 }
 
-/// Registry of live sessions.
+/// Registry of live sessions.  Shared behind a mutex named `sessions` in the
+/// server (lock class `session` — see CONTRIBUTING's lock-order table); all
+/// methods are plain `&mut self` so lock scopes stay in the caller's hands.
 #[derive(Default)]
 pub struct SessionTable {
     sessions: HashMap<u64, Session>,
     next_id: u64,
+    /// Round-robin cursor for [`SessionTable::open_sticky`] affinity.
+    next_worker: usize,
 }
 
 impl SessionTable {
@@ -40,19 +153,87 @@ impl SessionTable {
         Self::default()
     }
 
-    pub fn open(&mut self) -> u64 {
+    /// Open a session with sticky affinity to `worker`.
+    pub fn open_on(&mut self, worker: usize) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.sessions.insert(id, Session::default());
+        self.sessions.insert(id, Session::new(worker));
         id
+    }
+
+    /// Open with no particular affinity (worker 0).
+    pub fn open(&mut self) -> u64 {
+        self.open_on(0)
+    }
+
+    /// Open with round-robin affinity over `n_sticky` sticky workers
+    /// (worker 0 when there are none).
+    pub fn open_sticky(&mut self, n_sticky: usize) -> u64 {
+        let worker = if n_sticky == 0 {
+            0
+        } else {
+            let w = self.next_worker % n_sticky;
+            self.next_worker = self.next_worker.wrapping_add(1);
+            w
+        };
+        self.open_on(worker)
     }
 
     pub fn get_mut(&mut self, id: u64) -> Option<&mut Session> {
         self.sessions.get_mut(&id)
     }
 
-    pub fn close(&mut self, id: u64) -> bool {
-        self.sessions.remove(&id).is_some()
+    pub fn get(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    /// Remove a session from the table WITHOUT touching the store — the
+    /// caller releases its pins after dropping the table lock.
+    pub fn remove(&mut self, id: u64) -> Option<Session> {
+        self.sessions.remove(&id)
+    }
+
+    /// Detach every session idle longer than `ttl` — pins are still held;
+    /// the caller releases them after dropping the table lock.
+    pub fn take_expired(&mut self, ttl: Duration) -> Vec<(u64, Session)> {
+        let dead: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.last_activity.elapsed() > ttl)
+            .map(|(&id, _)| id)
+            .collect();
+        dead.into_iter()
+            .filter_map(|id| self.sessions.remove(&id).map(|s| (id, s)))
+            .collect()
+    }
+
+    /// Close a session, releasing its pins to LRU.  False if unknown.
+    /// Lock-free convenience wrapper over [`SessionTable::remove`].
+    pub fn close(&mut self, id: u64, store: &ChunkStore) -> bool {
+        match self.remove(id) {
+            Some(mut s) => {
+                s.release_pins(store);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Reap sessions idle longer than `ttl`, releasing their pins.  Returns
+    /// how many expired.  Lock-free convenience wrapper over
+    /// [`SessionTable::take_expired`].
+    pub fn sweep_expired(&mut self, store: &ChunkStore, ttl: Duration) -> u64 {
+        let expired = self.take_expired(ttl);
+        let n = expired.len() as u64;
+        for (_, mut s) in expired {
+            s.release_pins(store);
+        }
+        n
+    }
+
+    /// Total bytes pinned across live sessions (metrics).
+    pub fn pinned_bytes(&self) -> usize {
+        self.sessions.values().map(|s| s.pinned_bytes()).sum()
     }
 
     pub fn len(&self) -> usize {
@@ -67,41 +248,110 @@ impl SessionTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::ChunkKv;
     use crate::tensor::TensorF;
 
-    fn chunk(id: u64) -> Arc<ChunkKv> {
-        Arc::new(ChunkKv {
+    fn chunk(id: u64) -> ChunkKv {
+        ChunkKv {
             id,
             tokens: vec![1, 2],
             k: TensorF::zeros(&[1, 2, 1, 2]),
             v: TensorF::zeros(&[1, 2, 1, 2]),
-        })
+        }
+    }
+
+    fn one() -> usize {
+        chunk(0).nbytes()
     }
 
     #[test]
     fn lifecycle() {
+        let store = ChunkStore::new(1 << 20);
+        let c = store.insert(chunk(5));
         let mut t = SessionTable::new();
-        let a = t.open();
+        let a = t.open_on(1);
         let b = t.open();
         assert_ne!(a, b);
         assert_eq!(t.len(), 2);
-        t.get_mut(a).unwrap().pin(chunk(5));
-        t.get_mut(a).unwrap().queries_served += 1;
-        assert_eq!(t.get_mut(a).unwrap().pinned_ids(), vec![5]);
-        assert!(t.close(a));
-        assert!(!t.close(a));
+        assert_eq!(t.get(a).unwrap().worker, 1);
+        let s = t.get_mut(a).unwrap();
+        assert!(s.pin(&store, c.id, c.nbytes()));
+        assert!(s.pin(&store, c.id, c.nbytes()), "re-pin is idempotent");
+        s.queries_served += 1;
+        assert_eq!(s.pinned_ids(), vec![5]);
+        assert_eq!(s.pinned_bytes(), c.nbytes());
+        assert_eq!(t.pinned_bytes(), c.nbytes());
+        assert_eq!(store.stats().pinned_chunks, 1, "one store pin despite re-pin");
+        assert!(t.close(a, &store));
+        assert!(!t.close(a, &store));
+        assert_eq!(store.stats().pinned_chunks, 0, "close releases the pin");
         assert_eq!(t.len(), 1);
+
+        let mut t2 = SessionTable::new();
+        let assigned: Vec<usize> = (0..4)
+            .map(|_| {
+                let id = t2.open_sticky(3);
+                t2.get(id).unwrap().worker
+            })
+            .collect();
+        assert_eq!(assigned, vec![0, 1, 2, 0], "sticky affinity round-robins");
+        let id = t2.open_sticky(0);
+        assert_eq!(t2.get(id).unwrap().worker, 0, "no sticky workers => 0");
     }
 
     #[test]
-    fn pinning_keeps_arc_alive() {
+    fn pin_of_nonresident_chunk_is_refused() {
+        let store = ChunkStore::new(1 << 20);
         let mut t = SessionTable::new();
         let s = t.open();
-        let c = chunk(9);
-        let weak = Arc::downgrade(&c);
-        t.get_mut(s).unwrap().pin(c);
-        assert!(weak.upgrade().is_some());
-        t.close(s);
-        assert!(weak.upgrade().is_none(), "closing releases pins");
+        assert!(!t.get_mut(s).unwrap().pin(&store, 77, 1056));
+        assert_eq!(t.get_mut(s).unwrap().pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn repin_diffs_against_the_previous_turn() {
+        let store = ChunkStore::new(1 << 20);
+        let a = store.insert(chunk(1));
+        let b = store.insert(chunk(2));
+        let c = store.insert(chunk(3));
+        let mut t = SessionTable::new();
+        let sid = t.open();
+        let s = t.get_mut(sid).unwrap();
+        assert_eq!(s.repin(&store, &[(a.id, a.nbytes()), (b.id, b.nbytes())]), 2);
+        assert_eq!(store.stats().pinned_chunks, 2);
+        // turn 2 keeps b, drops a, adds c
+        assert_eq!(s.repin(&store, &[(b.id, b.nbytes()), (c.id, c.nbytes())]), 2);
+        let mut ids = s.pinned_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 3]);
+        assert_eq!(store.stats().pinned_chunks, 2, "a's pin was released");
+    }
+
+    #[test]
+    fn expired_session_releases_pins_to_lru() {
+        // Budget fits exactly one chunk: while the session pin is live the
+        // pinned chunk survives eviction pressure; once the TTL sweep reaps
+        // the session, the next insert evicts it.
+        let store = ChunkStore::with_shards(one(), 1);
+        let c = store.insert(chunk(1));
+        let mut t = SessionTable::new();
+        let sid = t.open();
+        assert!(t.get_mut(sid).unwrap().pin(&store, c.id, c.nbytes()));
+        drop(c);
+        store.insert(chunk(2)); // over budget, but 1 is pinned → 2 self-evicts
+        assert!(store.contains(1), "pinned chunk survives pressure");
+
+        // a fresh request keeps the session alive across a sweep
+        t.get_mut(sid).unwrap().touch();
+        assert_eq!(t.sweep_expired(&store, Duration::from_secs(3600)), 0);
+        assert_eq!(t.len(), 1);
+
+        // idle past the TTL: reaped, pin released, LRU can evict again
+        assert_eq!(t.sweep_expired(&store, Duration::ZERO), 1);
+        assert!(t.is_empty());
+        assert_eq!(store.stats().pinned_chunks, 0);
+        store.insert(chunk(3));
+        assert!(!store.contains(1), "expired session's pin no longer blocks LRU");
+        assert!(store.contains(3));
     }
 }

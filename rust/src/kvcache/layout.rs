@@ -168,6 +168,34 @@ impl AssembledContext {
         self.chunk_lens.iter().sum()
     }
 
+    /// Approximate heap footprint of the buffers, for session accounting.
+    pub fn nbytes(&self) -> usize {
+        (self.k.data().len() + self.v.data().len() + self.valid.data().len()) * 4
+            + (self.tokens.data().len() + self.gpos.data().len()) * 4
+    }
+
+    /// An owned copy of this buffer for retention beyond the pool checkout
+    /// (session prep reuse).  This is a deliberate full-context copy and
+    /// allocation, counted as both so the hot-path budget stays honest —
+    /// it is paid once per session turn that opts into caching, not per
+    /// query.
+    pub fn snapshot(&self) -> Self {
+        counters::bump(|s| {
+            s.ctx_allocs += 1;
+            s.full_kv_copies += 1;
+        });
+        AssembledContext {
+            bucket: self.bucket,
+            chunk_lens: self.chunk_lens.clone(),
+            tokens: self.tokens.clone(),
+            k: self.k.clone(),
+            v: self.v.clone(),
+            gpos: self.gpos.clone(),
+            valid: self.valid.clone(),
+            dims: self.dims,
+        }
+    }
+
     /// Apply the §4.3 reorder permutation to the assembled chunks IN PLACE:
     /// afterwards chunk slot `i` holds what was chunk `order[i]`, exactly as
     /// if the buffer had been reassembled from the permuted chunk list —

@@ -97,6 +97,15 @@ pub struct StoreStats {
     pub insertions: u64,
     pub evictions: u64,
     pub bytes: usize,
+    /// Byte budget actually assigned (sums exactly to the requested total
+    /// across shards — no remainder is dropped by the shard split).
+    pub budget_bytes: usize,
+    /// Resident bytes held by pin-counted entries.  Pinned bytes live
+    /// INSIDE `bytes`/`budget_bytes` accounting: a pinned chunk is counted
+    /// resident, exempt from eviction, and can never be spilled.
+    pub pinned_bytes: usize,
+    /// Resident entries with a non-zero pin count.
+    pub pinned_chunks: u64,
 }
 
 impl StoreStats {
@@ -106,6 +115,9 @@ impl StoreStats {
         self.insertions += other.insertions;
         self.evictions += other.evictions;
         self.bytes += other.bytes;
+        self.budget_bytes += other.budget_bytes;
+        self.pinned_bytes += other.pinned_bytes;
+        self.pinned_chunks += other.pinned_chunks;
     }
 }
 
@@ -224,6 +236,11 @@ struct Entry {
     chunk: Arc<ChunkKv>,
     /// Shard-local recency tick; larger = more recently used.
     last_used: u64,
+    /// Store-level pin count ([`ChunkStore::pin`]).  Non-zero exempts the
+    /// entry from eviction (so it can never spill) while keeping its bytes
+    /// inside the shard's budget accounting — unlike a caller-held `Arc`,
+    /// which also blocks eviction but is invisible to `metrics_json`.
+    pins: u32,
 }
 
 struct Shard {
@@ -260,7 +277,7 @@ impl Shard {
                 .iter()
                 .filter(|entry| {
                     let unpinned = if inserting == Some(*entry.0) { 2 } else { 1 };
-                    Arc::strong_count(&entry.1.chunk) == unpinned
+                    entry.1.pins == 0 && Arc::strong_count(&entry.1.chunk) == unpinned
                 })
                 .min_by_key(|entry| entry.1.last_used)
                 .map(|entry| *entry.0);
@@ -278,6 +295,21 @@ impl Shard {
         }
         victims
     }
+}
+
+/// Copy a shard's counters plus its live residency/pin/budget state (read
+/// under the caller's shard lock).
+fn snapshot_shard(g: &Shard) -> StoreStats {
+    let mut s = g.stats;
+    s.bytes = g.bytes;
+    s.budget_bytes = g.budget_bytes;
+    for e in g.entries.values() {
+        if e.pins > 0 {
+            s.pinned_chunks += 1;
+            s.pinned_bytes += e.chunk.nbytes();
+        }
+    }
+    s
 }
 
 /// Sharded LRU chunk cache with a byte budget, safe to share across worker
@@ -298,6 +330,13 @@ pub struct ChunkStore {
     /// Per-chunk single-flight slots for miss resolution and spill writes.
     flights: Flights,
     life: LifecycleStats,
+    /// Inserts that evicted the chunk they had just inserted: the shard
+    /// budget is below one chunk, so the store is thrashing instead of
+    /// caching.  Degenerate-budget warning counter (`stats_json`).
+    thrash_evictions: AtomicU64,
+    /// True when the constructor clamped the shard count down to keep
+    /// per-shard budgets non-zero (budget below one byte per shard).
+    shards_clamped: bool,
 }
 
 impl ChunkStore {
@@ -305,18 +344,40 @@ impl ChunkStore {
         ChunkStore::with_shards(budget_bytes, DEFAULT_SHARDS)
     }
 
-    /// `n_shards` is rounded up to a power of two (min 1); each shard gets
-    /// `budget_bytes / n_shards`.
+    /// `n_shards` is rounded up to a power of two (min 1); the byte budget
+    /// is distributed EXACTLY across shards — the first `budget % n` shards
+    /// take one extra byte, so per-shard budgets sum to `budget_bytes`
+    /// instead of silently dropping up to `n - 1` bytes.  A degenerate
+    /// budget below one byte per shard clamps the shard count down (to the
+    /// largest power of two with a non-zero per-shard budget) instead of
+    /// creating 0-byte shards that evict every insert instantly; the clamp
+    /// is warned once and surfaced as `shards_clamped` in `stats_json`.
     pub fn with_shards(budget_bytes: usize, n_shards: usize) -> ChunkStore {
-        let n = n_shards.max(1).next_power_of_two();
-        let per_shard = budget_bytes / n;
+        let mut n = n_shards.max(1).next_power_of_two();
+        let mut clamped = false;
+        while n > 1 && budget_bytes / n == 0 {
+            n /= 2;
+            clamped = true;
+        }
+        if clamped {
+            eprintln!(
+                "[kvcache] budget {budget_bytes}B is below one byte per shard; \
+                 clamping {n_shards} shards down to {n}"
+            );
+        }
+        let base = budget_bytes / n;
+        let extra = budget_bytes % n;
         ChunkStore {
-            shards: (0..n).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
+            shards: (0..n)
+                .map(|i| Mutex::new(Shard::new(base + usize::from(i < extra))))
+                .collect(),
             shard_mask: n - 1,
             lock_wait_ns: AtomicU64::new(0),
             spill: None,
             flights: Flights::default(),
             life: LifecycleStats::default(),
+            thrash_evictions: AtomicU64::new(0),
+            shards_clamped: clamped,
         }
     }
 
@@ -384,10 +445,7 @@ impl ChunkStore {
     pub fn stats(&self) -> StoreStats {
         let mut total = StoreStats::default();
         for shard in &self.shards {
-            let g = shard.lock().unwrap();
-            let mut s = g.stats;
-            s.bytes = g.bytes;
-            total.merge(&s);
+            total.merge(&snapshot_shard(&shard.lock().unwrap()));
         }
         total
     }
@@ -396,12 +454,7 @@ impl ChunkStore {
     pub fn shard_stats(&self) -> Vec<StoreStats> {
         self.shards
             .iter()
-            .map(|shard| {
-                let g = shard.lock().unwrap();
-                let mut s = g.stats;
-                s.bytes = g.bytes;
-                s
-            })
+            .map(|shard| snapshot_shard(&shard.lock().unwrap()))
             .collect()
     }
 
@@ -426,6 +479,14 @@ impl ChunkStore {
             ("insertions", Json::from(agg.insertions as f64)),
             ("evictions", Json::from(agg.evictions as f64)),
             ("bytes", Json::from(agg.bytes)),
+            ("budget_bytes", Json::from(agg.budget_bytes)),
+            ("pinned_bytes", Json::from(agg.pinned_bytes)),
+            ("pinned_chunks", Json::from(agg.pinned_chunks as f64)),
+            (
+                "thrash_evictions",
+                Json::from(self.thrash_evictions.load(Ordering::Relaxed) as f64),
+            ),
+            ("shards_clamped", Json::from(self.shards_clamped)),
             ("lock_wait_ms", Json::from(self.lock_wait_s() * 1e3)),
             ("shards", Json::Arr(shard_objs)),
             ("lifecycle", self.life.json()),
@@ -483,6 +544,46 @@ impl ChunkStore {
         })
     }
 
+    /// Pin a resident chunk: while any pin is held the entry is exempt from
+    /// eviction (and therefore can never be spilled), and its bytes stay
+    /// inside the shard's `bytes`/`budget_bytes` accounting — visible as
+    /// `pinned_bytes`/`pinned_chunks` in [`ChunkStore::stats_json`].
+    /// Returns `false` when the id is not resident (callers should fall
+    /// back to re-loading rather than assuming residency).
+    pub fn pin(&self, id: ChunkId) -> bool {
+        let mut guard = self.lock_shard(id);
+        match guard.entries.get_mut(&id) {
+            Some(e) => {
+                e.pins = e.pins.saturating_add(1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one pin.  Returns `false` when the id was absent or had no
+    /// pins (pin/unpin calls must balance; unpin never underflows).  When
+    /// the last pin drops, the entry rejoins LRU order and the shard is
+    /// settled back under its budget immediately (victims spill as usual).
+    pub fn unpin(&self, id: ChunkId) -> bool {
+        let (released, victims) = {
+            let mut guard = self.lock_shard(id);
+            let sh = &mut *guard;
+            let released = match sh.entries.get_mut(&id) {
+                Some(e) if e.pins > 0 => {
+                    e.pins -= 1;
+                    true
+                }
+                _ => false,
+            };
+            let victims =
+                if released { sh.evict_to_budget(None) } else { Vec::new() };
+            (released, victims)
+        };
+        self.spill_evicted(victims);
+        released
+    }
+
     pub fn insert(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
         let id = chunk.id;
         let arc = Arc::new(chunk);
@@ -490,7 +591,10 @@ impl ChunkStore {
             let mut guard = self.lock_shard(id);
             let sh = &mut *guard;
             sh.tick += 1;
-            let entry = Entry { chunk: arc.clone(), last_used: sh.tick };
+            // A replaced entry keeps its pin count: ids are content hashes,
+            // so the bytes (and the pinned contract) carry over unchanged.
+            let pins = sh.entries.get(&id).map(|e| e.pins).unwrap_or(0);
+            let entry = Entry { chunk: arc.clone(), last_used: sh.tick, pins };
             sh.bytes += arc.nbytes();
             if let Some(old) = sh.entries.insert(id, entry) {
                 // Concurrent workers may race to prefill the same content id;
@@ -500,6 +604,11 @@ impl ChunkStore {
             sh.stats.insertions += 1;
             sh.evict_to_budget(Some(id))
         };
+        if victims.iter().any(|v| v.id == id) {
+            // The insert evicted the chunk it just inserted: this shard's
+            // budget is below one chunk and the store is thrashing.
+            self.thrash_evictions.fetch_add(1, Ordering::Relaxed);
+        }
         self.spill_victims(id, victims);
         arc
     }
@@ -530,6 +639,13 @@ impl ChunkStore {
                 }
             }
         }
+        self.spill_evicted(victims);
+    }
+
+    /// Write evicted chunks to the disk tier, outside every shard lock.
+    /// Shared by insert-driven eviction and unpin-driven settling.
+    fn spill_evicted(&self, victims: Vec<Arc<ChunkKv>>) {
+        let Some(tier) = &self.spill else { return };
         for v in victims {
             if !self.flights.try_begin(v.id) {
                 // Someone is resolving this id right now; spilling a chunk
@@ -1220,6 +1336,107 @@ mod tests {
         assert_eq!(live.restore_from(&path).unwrap(), 2);
         assert_eq!(live.len(), 2);
         assert_eq!(live.lifecycle().restores.load(Ordering::Relaxed), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn with_shards_distributes_the_remainder_instead_of_dropping_it() {
+        // Regression: `per_shard = budget / n` silently dropped up to n-1
+        // bytes.  With budget `2*one - 1` over 2 shards the old split gave
+        // every shard `one - 1` bytes — NO shard could hold a chunk, so
+        // every insert thrashed.  The exact split gives the first shard
+        // `one` bytes, which must retain a resident chunk.
+        let one = mk_chunk(0, 8).nbytes();
+        let s = ChunkStore::with_shards(2 * one - 1, 2);
+        assert_eq!(
+            s.stats().budget_bytes,
+            2 * one - 1,
+            "per-shard budgets must sum exactly to the requested total"
+        );
+        for id in 0..16u64 {
+            s.insert(mk_chunk(id, 8));
+        }
+        assert!(
+            !s.is_empty(),
+            "a budget that fits a chunk must keep at least one resident"
+        );
+        assert!(s.stats().bytes <= 2 * one - 1);
+    }
+
+    #[test]
+    fn tiny_budget_clamps_shard_count_instead_of_zero_byte_shards() {
+        // Regression: `budget_bytes < n_shards` yielded 0-byte shards whose
+        // eviction loop discarded every insert instantly.  The constructor
+        // now clamps the shard count so per-shard budgets stay non-zero.
+        let s = ChunkStore::with_shards(4, 8);
+        assert_eq!(s.n_shards(), 4, "8 shards over 4 bytes must clamp to 4");
+        assert_eq!(s.stats().budget_bytes, 4);
+        // A budget below one chunk still cannot cache anything — but it
+        // must say so through the thrash counter, not silently.
+        let one = mk_chunk(1, 8).nbytes();
+        let s = ChunkStore::with_shards(one / 2, 1);
+        s.insert(mk_chunk(1, 8));
+        assert!(!s.contains(1));
+        assert_eq!(s.stats().bytes, 0, "thrashed insert leaves balanced bytes");
+        let dump = s.stats_json().to_string_pretty();
+        assert!(dump.contains("\"thrash_evictions\": 1"), "got: {dump}");
+    }
+
+    #[test]
+    fn store_pins_block_eviction_and_are_visible_in_stats() {
+        let one = mk_chunk(1, 8).nbytes();
+        let s = ChunkStore::with_shards(2 * one, 1);
+        drop(s.insert(mk_chunk(1, 8))); // no caller Arc: only the pin holds it
+        assert!(s.pin(1));
+        assert!(!s.pin(99), "absent ids cannot be pinned");
+        s.insert(mk_chunk(2, 8));
+        s.insert(mk_chunk(3, 8)); // over budget: 2 must go, never pinned 1
+        assert!(s.contains(1), "pinned entry survives eviction pressure");
+        assert!(!s.contains(2));
+        let st = s.stats();
+        assert_eq!((st.pinned_chunks, st.pinned_bytes), (1, one));
+        assert!(
+            st.bytes <= st.budget_bytes,
+            "pinned bytes stay inside the budget accounting"
+        );
+        assert!(s.unpin(1));
+        assert!(!s.unpin(1), "pin/unpin must balance — no underflow");
+        s.insert(mk_chunk(4, 8));
+        assert!(!s.contains(1), "unpinned entry rejoins LRU order");
+        assert_eq!(s.stats().pinned_chunks, 0);
+    }
+
+    #[test]
+    fn reinsert_preserves_pin_count() {
+        let s = ChunkStore::with_shards(usize::MAX, 1);
+        s.insert(mk_chunk(5, 8));
+        assert!(s.pin(5));
+        // A racing prefill re-inserts the same content id; the pin must
+        // carry over to the replacing entry.
+        s.insert(mk_chunk(5, 8));
+        assert_eq!(s.stats().pinned_chunks, 1);
+        assert!(s.unpin(5));
+        assert!(!s.unpin(5));
+    }
+
+    #[test]
+    fn pinned_entries_never_spill_and_rejoin_the_lifecycle_on_release() {
+        let dir = std::env::temp_dir()
+            .join(format!("ifkv_store_unpin_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let one = mk_chunk(1, 8).nbytes();
+        let tier = Arc::new(SpillTier::new(&dir).unwrap());
+        let s = ChunkStore::with_spill(one, 1, tier.clone());
+        drop(s.insert(mk_chunk(1, 8)));
+        assert!(s.pin(1));
+        drop(s.insert(mk_chunk(2, 8))); // over budget; only 2 is evictable
+        assert!(s.contains(1), "pinned entry survives eviction pressure");
+        assert!(!tier.contains(1), "a pinned chunk is never resident AND spilled");
+        assert!(tier.contains(2), "the unpinned victim spilled instead");
+        assert!(s.unpin(1));
+        drop(s.insert(mk_chunk(3, 8))); // now 1 is the evictable LRU
+        assert!(!s.contains(1) && s.contains(3));
+        assert!(tier.contains(1), "released entry rejoins the spill lifecycle");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -42,6 +42,10 @@ USAGE:
                 [--max-batch N] [--batch-window-ms MS]
                 [--spill-dir DIR] [--spill-mb MB] [--prefetch-threads N]
                 [--stream] [--max-interleave N]
+                [--sessions] [--turns T] [--session-ttl-s S]
+                  (--sessions serves a multi-turn trace: --requests sessions
+                   x --turns turns each, sticky-routed with cross-turn
+                   chunk pinning and prep reuse)
   repro bench   table1|...|table6|fig2|fig3|fig4|ablation|all [--samples N]
   repro cache   save|load [--path kvcache.bin] [--docs N]
 
@@ -63,7 +67,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "warmup", "stream"])?;
+    let args = Args::from_env(&["verbose", "warmup", "stream", "sessions"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -314,6 +318,10 @@ fn serve(args: &Args) -> Result<()> {
     }
     let vocab = pipelines[0].vocab.clone();
     let plan = pick_plan(&rt, args)?;
+    let sessions_mode = args.flag("sessions");
+    let turns = args.usize_or("turns", 3)?.max(1);
+    let session_ttl =
+        std::time::Duration::from_secs(args.u64_or("session-ttl-s", 300)?);
     let cfg = TraceConfig {
         rate: args.f64_or("rate", 8.0)?,
         n_requests: args.usize_or("requests", 24)?,
@@ -321,7 +329,6 @@ fn serve(args: &Args) -> Result<()> {
         chunks_per_request: args.usize_or("chunks", 4)?,
         seed: args.u64_or("seed", 5)?,
     };
-    let trace = traces::generate(&vocab, rt.manifest.model.chunk, &cfg);
     let mut store = ChunkStore::with_shards(cache_bytes, shards);
     if let Some(dir) = &spill_dir {
         let tier = match spill_budget {
@@ -334,14 +341,41 @@ fn serve(args: &Args) -> Result<()> {
         pipelines,
         prefetch_pipelines,
         store,
-        ServerConfig { batch, queue_cap, max_interleave },
+        ServerConfig { batch, queue_cap, max_interleave, session_ttl },
     );
 
+    // Session mode serves a multi-turn trace: --requests sessions x --turns
+    // turns, each session's turns retrieving an identical document set so
+    // the sticky worker's cached prep context and pins get exercised.
+    // Sessions must be opened on the live server, so the trace is built
+    // after spawn; `paced` unifies both modes for the submission loop.
+    let mut session_ids: Vec<u64> = Vec::new();
+    let paced: Vec<(f64, infoflow_kv::workload::Episode, Option<u64>)> = if sessions_mode {
+        let trace =
+            traces::generate_sessions(&vocab, rt.manifest.model.chunk, &cfg, turns);
+        session_ids = (0..cfg.n_requests.max(1)).map(|_| server.open_session()).collect();
+        trace
+            .into_iter()
+            .map(|t| (t.at_s, t.episode, Some(session_ids[t.session])))
+            .collect()
+    } else {
+        traces::generate(&vocab, rt.manifest.model.chunk, &cfg)
+            .into_iter()
+            .map(|r| (r.at_s, r.episode, None))
+            .collect()
+    };
+    let total = paced.len();
+
     println!(
-        "serving {} requests (poisson rate {}/s, {} docs, plan {} [{}], {n_workers} workers, \
+        "serving {} requests{} (poisson rate {}/s, {} docs, plan {} [{}], {n_workers} workers, \
          {shards} shards, {prefetch_threads} prefetchers, spill {}, interleave {max_interleave}, \
          stream {})...",
-        cfg.n_requests,
+        total,
+        if sessions_mode {
+            format!(" [{} sessions x {turns} turns]", session_ids.len())
+        } else {
+            String::new()
+        },
         cfg.rate,
         cfg.doc_pool,
         plan.display_name(),
@@ -362,28 +396,29 @@ fn serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut inflight: Vec<Inflight> = Vec::new();
     let mut rejected = 0usize;
-    for req in trace {
+    for (at_s, episode, session_id) in paced {
         // pace according to the trace
-        let wait = req.at_s - t0.elapsed().as_secs_f64();
+        let wait = at_s - t0.elapsed().as_secs_f64();
         if wait > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(wait));
         }
-        let gold = req.episode.answer.clone();
-        let submitted = if stream {
-            server
-                .query_plan_stream(req.episode, plan.clone())
-                .map(|(tokens, resp)| Inflight { gold, resp, tokens: Some(tokens) })
+        let gold = episode.answer.clone();
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        let (ttx, trx) = if stream {
+            let (t, r) = std::sync::mpsc::channel();
+            (Some(t), Some(r))
         } else {
-            let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-            server
-                .submit(infoflow_kv::coordinator::Request {
-                    episode: req.episode,
-                    plan: plan.clone(),
-                    respond: rtx,
-                    stream: None,
-                })
-                .map(|()| Inflight { gold, resp: rrx, tokens: None })
+            (None, None)
         };
+        let submitted = server
+            .submit(infoflow_kv::coordinator::Request {
+                episode,
+                plan: plan.clone(),
+                respond: rtx,
+                stream: ttx,
+                session_id,
+            })
+            .map(|()| Inflight { gold, resp: rrx, tokens: trx });
         match submitted {
             Ok(p) => inflight.push(p),
             Err(e) => {
@@ -415,13 +450,23 @@ fn serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "done: {ok}/{} ok ({rejected} rejected) in {wall:.1}s ({:.2} req/s), mean F1 {:.3}",
-        cfg.n_requests,
+        "done: {ok}/{total} ok ({rejected} rejected) in {wall:.1}s ({:.2} req/s), mean F1 {:.3}",
         ok as f64 / wall,
         f1_sum / ok.max(1) as f64
     );
     if stream {
         println!("streamed {streamed} tokens across {ok} responses");
+    }
+    if sessions_mode {
+        println!(
+            "sessions: {} opened, prep skipped on {} of {} turns",
+            session_ids.len(),
+            server.metrics().counter("session_prep_skipped"),
+            total,
+        );
+        for sid in &session_ids {
+            server.close_session(*sid);
+        }
     }
     println!("metrics: {}", server.metrics_json().to_string_pretty());
     server.shutdown();

@@ -425,6 +425,58 @@ struct Prep {
     selected: Vec<usize>,
     selected_positions: Vec<i64>,
     chunk_order: Vec<usize>,
+    /// Owned copy of the post-stage context, present only when the caller
+    /// asked for one (session caching).  `None` on the baseline path — its
+    /// fused prefill never materializes a stage-processed context buffer.
+    snapshot: Option<AssembledContext>,
+}
+
+/// A session's cached prep output: the stage-processed context buffer
+/// (owned, NOT a pool checkout) plus the stage bookkeeping, keyed by a
+/// fingerprint of (retrieved chunk ids, plan).  When a follow-up turn's
+/// fingerprint matches, [`Pipeline::begin_from_prepared`] rebuilds the
+/// resident decode KV from this buffer with ONE prompt pass — zero prep
+/// stages (no assemble, reorder, score, select, or recompute).
+pub struct PreparedContext {
+    ctx: AssembledContext,
+    bucket: usize,
+    selected: Vec<usize>,
+    selected_positions: Vec<i64>,
+    chunk_order: Vec<usize>,
+    fingerprint: u64,
+}
+
+impl PreparedContext {
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Approximate heap footprint, for session accounting/metrics.
+    pub fn nbytes(&self) -> usize {
+        self.ctx.nbytes()
+    }
+}
+
+/// Fingerprint of one turn's prep inputs: the retrieved chunk ids in request
+/// order plus the rendered plan.  Two turns with equal fingerprints run the
+/// exact same prep stages over the exact same bytes, so the cached
+/// [`PreparedContext`] substitutes bit-for-bit.  (FNV-1a; the prompt is NOT
+/// included — it only enters at the prompt pass, which always re-runs.)
+pub fn prep_fingerprint(chunk_ids: &[u64], plan: &QueryPlan) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for &id in chunk_ids {
+        for b in id.to_le_bytes() {
+            eat(b);
+        }
+    }
+    for b in plan.render().bytes() {
+        eat(b);
+    }
+    h
 }
 
 /// Pipeline: a model session + vocab + per-worker buffer pool, stateless
@@ -513,22 +565,107 @@ impl Pipeline {
         prompt_body: &[i32],
         plan: &QueryPlan,
     ) -> Result<QueryTask> {
+        let (task, _) = self.begin_plan_inner(chunks, prompt_body, plan, false)?;
+        Ok(task)
+    }
+
+    /// [`Pipeline::begin_plan`] plus an owned snapshot of the post-stage
+    /// context for session reuse.  The snapshot is `None` for baseline
+    /// (fused-prefill) plans, which have no stage-processed buffer to cache.
+    /// Costs one extra full-context copy (counted) when it captures.
+    pub fn begin_plan_cached(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        plan: &QueryPlan,
+    ) -> Result<(QueryTask, Option<PreparedContext>)> {
+        let (task, snapshot) = self.begin_plan_inner(chunks, prompt_body, plan, true)?;
+        let prepared = snapshot.map(|(ctx, bucket)| PreparedContext {
+            ctx,
+            bucket,
+            selected: task.selected.clone(),
+            selected_positions: task.selected_positions.clone(),
+            chunk_order: task.chunk_order.clone(),
+            fingerprint: prep_fingerprint(
+                &chunks.iter().map(|c| c.id).collect::<Vec<_>>(),
+                plan,
+            ),
+        });
+        Ok((task, prepared))
+    }
+
+    fn begin_plan_inner(
+        &self,
+        chunks: &[Arc<ChunkKv>],
+        prompt_body: &[i32],
+        plan: &QueryPlan,
+        capture: bool,
+    ) -> Result<(QueryTask, Option<(AssembledContext, usize)>)> {
         let t_start = Instant::now();
         let mut timing = Timing::default();
         let prep = match plan.prefill {
             PrefillMode::Full => self.prep_baseline(chunks, prompt_body, &mut timing)?,
             PrefillMode::Chunked => {
-                self.prep_staged(chunks, prompt_body, plan, &mut timing)?
+                self.prep_staged(chunks, prompt_body, plan, &mut timing, capture)?
             }
         };
         let first = prep.first_logits.argmax() as i32;
-        Ok(QueryTask {
+        let bucket = prep.bucket;
+        let snapshot = prep.snapshot.map(|ctx| (ctx, bucket));
+        let task = QueryTask {
             state: DecodeState::new(prep.kv, prep.bucket, first, self.vocab.answer_len),
             timing,
             t_start,
             selected: prep.selected,
             selected_positions: prep.selected_positions,
             chunk_order: prep.chunk_order,
+        };
+        Ok((task, snapshot))
+    }
+
+    /// The session fast path: rebuild a parked query from a cached
+    /// [`PreparedContext`] whose fingerprint matched this turn's retrieval.
+    /// Runs exactly ONE model pass — the prompt pass over the cached buffer
+    /// (the prompt itself changes every turn) — and the resident-KV
+    /// promotion.  NO prep stage runs and NO stage key is recorded, so
+    /// `Timing::stages` of the returned task is empty until decode: that is
+    /// the property the session tests assert.
+    ///
+    /// Bit-identity: the cached buffer is a byte-exact copy of the
+    /// post-stage context the cold path produced, and both the prompt pass
+    /// and decode are deterministic, so the answer matches a cold run
+    /// token-for-token.
+    pub fn begin_from_prepared(
+        &self,
+        prepared: &PreparedContext,
+        prompt_body: &[i32],
+    ) -> Result<QueryTask> {
+        let t_start = Instant::now();
+        let mut timing = Timing::default();
+        let d = self.dims().clone();
+        let bucket = prepared.bucket;
+        let ctx = &prepared.ctx;
+        let prompt =
+            TensorI::from_vec(&[d.prompt_len], self.vocab.pad_prompt(prompt_body, d.prompt_len))?;
+        let decode_layout = geometry::decode_layout(&ctx.chunk_lens, d.prompt_len);
+        let ppos = TensorI::from_vec(&[d.prompt_len], decode_layout.prompt_pos.clone())?;
+        let zero_delta = TensorI::zeros(&[bucket]);
+        let t0 = Instant::now();
+        let score_out = self.session.score(
+            bucket, &prompt, &ppos, &ctx.k, &ctx.v, &zero_delta, &ctx.gpos, &ctx.valid,
+        )?;
+        timing.prompt_s += t0.elapsed().as_secs_f64();
+        let kv = ResidentDecodeKv::from_context(
+            &d, ctx, &score_out.prompt_k, &score_out.prompt_v, &decode_layout.prompt_pos,
+        )?;
+        let first = score_out.last_logits.argmax() as i32;
+        Ok(QueryTask {
+            state: DecodeState::new(kv, bucket, first, self.vocab.answer_len),
+            timing,
+            t_start,
+            selected: prepared.selected.clone(),
+            selected_positions: prepared.selected_positions.clone(),
+            chunk_order: prepared.chunk_order.clone(),
         })
     }
 
@@ -628,6 +765,7 @@ impl Pipeline {
             selected: vec![],
             selected_positions: vec![],
             chunk_order: (0..chunks.len()).collect(),
+            snapshot: None,
         })
     }
 
@@ -638,6 +776,7 @@ impl Pipeline {
         prompt_body: &[i32],
         plan: &QueryPlan,
         timing: &mut Timing,
+        capture: bool,
     ) -> Result<Prep> {
         let d = self.dims().clone();
         let n: usize = chunks.iter().map(|c| c.len()).sum();
@@ -716,6 +855,10 @@ impl Pipeline {
         let kv = ResidentDecodeKv::from_context(
             &d, &ctx, &score_out.prompt_k, &score_out.prompt_v, &decode_layout.prompt_pos,
         )?;
+        // Session caching: copy the post-stage buffer out BEFORE the pooled
+        // checkout is returned — the pool will overwrite it on the next
+        // query.  The copy is counted inside `snapshot()`.
+        let snapshot = if capture { Some(ctx.snapshot()) } else { None };
         drop(ctx);
         Ok(Prep {
             kv,
@@ -724,6 +867,7 @@ impl Pipeline {
             selected,
             selected_positions,
             chunk_order,
+            snapshot,
         })
     }
 

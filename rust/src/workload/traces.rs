@@ -75,6 +75,71 @@ pub fn generate(vocab: &Vocab, chunk: usize, cfg: &TraceConfig) -> Vec<TracedReq
     out
 }
 
+/// One turn of a session trace: like [`TracedRequest`] but tagged with the
+/// session it belongs to.
+#[derive(Clone, Debug)]
+pub struct TracedTurn {
+    /// Arrival time in seconds from trace start.
+    pub at_s: f64,
+    /// Session index in `0..n_sessions` — the caller maps it to a server
+    /// session id.
+    pub session: usize,
+    pub episode: Episode,
+}
+
+/// Generate a multi-turn session trace: `n_sessions` sessions of `turns`
+/// turns each.  Every turn of a session retrieves the SAME document set
+/// (the session's "conversation context"), in the same order, but asks a
+/// different question about it — exactly the overlap a session's cached
+/// prep context and pinned chunks amortize.  Arrivals interleave across
+/// sessions (Poisson per trace, round-robin turn order), so consecutive
+/// submissions usually belong to DIFFERENT sessions and affinity actually
+/// gets exercised.  `cfg.n_requests` is reinterpreted as `n_sessions`.
+pub fn generate_sessions(
+    vocab: &Vocab,
+    chunk: usize,
+    cfg: &TraceConfig,
+    turns: usize,
+) -> Vec<TracedTurn> {
+    let mut rng = Rng::new(cfg.seed);
+    let genr = EpisodeGen::new(vocab.clone(), chunk);
+    let mut docs: Vec<(Vec<i32>, Vec<i32>, Vec<i32>)> = Vec::new(); // (chunk, prompt, answer)
+    for _ in 0..cfg.doc_pool {
+        let e = genr.onehop(&mut rng, 1);
+        docs.push((e.chunks[0].clone(), e.prompt.clone(), e.answer.clone()));
+    }
+
+    // Each session fixes its retrieved set once.
+    let n_sessions = cfg.n_requests.max(1);
+    let picks: Vec<Vec<usize>> = (0..n_sessions)
+        .map(|_| rng.choose_distinct(docs.len(), cfg.chunks_per_request.min(docs.len())))
+        .collect();
+
+    let mut out = Vec::with_capacity(n_sessions * turns);
+    let mut t = 0.0;
+    for _ in 0..turns.max(1) {
+        for (session, pick) in picks.iter().enumerate() {
+            t += rng.exponential(cfg.rate);
+            // a different needle doc each turn: same context, new question
+            let needle_slot = rng.below(pick.len());
+            let chunks: Vec<Vec<i32>> = pick.iter().map(|&i| docs[i].0.clone()).collect();
+            let (_, prompt, answer) = &docs[pick[needle_slot]];
+            out.push(TracedTurn {
+                at_s: t,
+                session,
+                episode: Episode {
+                    chunks,
+                    prompt: prompt.clone(),
+                    answer: answer.clone(),
+                    needle_chunks: vec![needle_slot],
+                    task: "trace-session",
+                },
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +162,27 @@ mod tests {
             }
         }
         assert!(seen.len() <= 5, "documents must be shared across requests");
+    }
+
+    #[test]
+    fn session_trace_repeats_retrieval_within_a_session() {
+        let v = Vocab::default();
+        let cfg = TraceConfig { n_requests: 4, doc_pool: 8, ..Default::default() };
+        let tr = generate_sessions(&v, 64, &cfg, 3);
+        assert_eq!(tr.len(), 12);
+        for w in tr.windows(2) {
+            assert!(w[1].at_s > w[0].at_s);
+        }
+        // every turn of a session retrieves the SAME chunk set, in order
+        for sid in 0..4 {
+            let turns: Vec<_> = tr.iter().filter(|r| r.session == sid).collect();
+            assert_eq!(turns.len(), 3);
+            for t in &turns[1..] {
+                assert_eq!(t.episode.chunks, turns[0].episode.chunks);
+            }
+        }
+        // consecutive arrivals belong to different sessions (interleaved)
+        assert_ne!(tr[0].session, tr[1].session);
     }
 
     #[test]

@@ -308,6 +308,7 @@ fn front_of_queue_request_wins_the_prefetch_race() {
                 plan: MethodSpec::Baseline.to_plan(),
                 respond: rtx,
                 stream: None,
+                session_id: None,
             })
             .unwrap();
         rrx

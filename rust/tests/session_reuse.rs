@@ -1,0 +1,195 @@
+//! Multi-turn session conformance, artifact-free (stub runtime).
+//!
+//! Sessions must be a pure latency optimization: a follow-up turn served
+//! from the session's cached prep context is token-for-token identical to
+//! the same query served cold, while doing ZERO prep-stage work (its stage
+//! breakdown carries only the fixed `prompt`/`decode` phases).  And the
+//! pins a session holds on its retrieved chunks must all flow back to the
+//! store's LRU on close — including under concurrent churn — or the cache
+//! budget slowly walks away from the configuration.
+//!
+//! Each test prints a `session-test: <name> ok` marker; CI tallies them
+//! into the job summary so a silently-skipped session suite is visible.
+
+use std::sync::Arc;
+
+use infoflow_kv::config::MethodSpec;
+use infoflow_kv::coordinator::{Server, ServerConfig};
+use infoflow_kv::geometry::RopeGeometry;
+use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::pipeline::Pipeline;
+use infoflow_kv::runtime::exec::ModelSession;
+use infoflow_kv::runtime::Runtime;
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::workload::EpisodeGen;
+
+const STUB_SEED: u64 = 2603;
+const BUDGET: usize = 8;
+
+fn stub_pipeline(rt: &Arc<Runtime>) -> Pipeline {
+    Pipeline::new(ModelSession::new(rt.clone(), "stub").unwrap()).unwrap()
+}
+
+#[test]
+fn turn_two_is_bit_identical_to_cold_and_skips_prep() {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let reference = stub_pipeline(&rt);
+    let genr = EpisodeGen::new(reference.vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    for (gi, geometry) in RopeGeometry::ALL.into_iter().enumerate() {
+        let mut rng = Rng::new(700 + gi as u64);
+        let e = genr.onehop(&mut rng, 3);
+        let plan = MethodSpec::Ours {
+            budget: BUDGET,
+            geometry,
+            norm_layer: 2,
+            reorder: false,
+        }
+        .to_plan();
+        // Cold ground truth on a fresh local store.
+        let store = ChunkStore::new(1 << 30);
+        let (chunks, _) = reference.prepare_chunks(&store, &e.chunks).unwrap();
+        let expect = reference.answer_plan(&chunks, &e.prompt, &plan).unwrap();
+
+        let skipped_before = server.metrics().counter("session_prep_skipped");
+        let sid = server.open_session();
+        let turn1 = server.query_plan_in(sid, e.clone(), plan.clone()).unwrap();
+        assert_eq!(
+            turn1.answer,
+            expect.answer,
+            "geom={}: turn 1 != cold answer_plan",
+            geometry.name()
+        );
+        assert!(
+            turn1.stages.iter().any(|(name, _)| !matches!(*name, "prompt" | "decode")),
+            "geom={}: turn 1 must run the plan's prep stages, got {:?}",
+            geometry.name(),
+            turn1.stages
+        );
+        // Same retrieved set, same plan: the cached prep context is reused
+        // and the prep stages are skipped ENTIRELY.
+        let turn2 = server.query_plan_in(sid, e.clone(), plan.clone()).unwrap();
+        assert_eq!(
+            turn2.answer,
+            expect.answer,
+            "geom={}: turn 2 (prep-skipped) != cold answer_plan",
+            geometry.name()
+        );
+        assert!(
+            turn2.stages.iter().all(|(name, _)| matches!(*name, "prompt" | "decode")),
+            "geom={}: turn 2 must do zero prep-stage work, got {:?}",
+            geometry.name(),
+            turn2.stages
+        );
+        assert_eq!(
+            server.metrics().counter("session_prep_skipped"),
+            skipped_before + 1,
+            "geom={}: exactly turn 2 skips prep",
+            geometry.name()
+        );
+        assert!(server.close_session(sid));
+        println!(
+            "session-test: turn2_bit_identical geom={} tokens={} ok",
+            geometry.name(),
+            turn2.answer.len()
+        );
+    }
+    let dump = server.metrics_json().to_string_pretty();
+    assert!(dump.contains("\"sessions\""), "metrics_json must report sessions");
+    assert!(dump.contains("pinned_bytes"), "metrics_json must report pinned bytes");
+    server.shutdown();
+}
+
+#[test]
+fn retrieval_change_invalidates_the_cached_prep() {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let genr = EpisodeGen::new(stub_pipeline(&rt).vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let plan = MethodSpec::ours(BUDGET).to_plan();
+    let mut rng = Rng::new(900);
+    let e1 = genr.onehop(&mut rng, 3);
+    let e2 = genr.onehop(&mut rng, 3); // different documents
+    let sid = server.open_session();
+    server.query_plan_in(sid, e1, plan.clone()).unwrap();
+    let skipped_before = server.metrics().counter("session_prep_skipped");
+    let turn2 = server.query_plan_in(sid, e2, plan).unwrap();
+    assert!(
+        turn2.stages.iter().any(|(name, _)| !matches!(*name, "prompt" | "decode")),
+        "changed retrieval must re-run prep, got {:?}",
+        turn2.stages
+    );
+    assert_eq!(
+        server.metrics().counter("session_prep_skipped"),
+        skipped_before,
+        "a fingerprint miss must not count as a skip"
+    );
+    server.close_session(sid);
+    println!("session-test: retrieval_change_invalidates ok");
+}
+
+#[test]
+fn pins_release_on_close_under_concurrent_churn() {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let genr = EpisodeGen::new(stub_pipeline(&rt).vocab.clone(), rt.manifest.model.chunk);
+    // Two workers so sessions actually spread across sticky channels.
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt), stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let plan = MethodSpec::ours(BUDGET).to_plan();
+    std::thread::scope(|scope| {
+        for t in 0..6u64 {
+            let server = &server;
+            let plan = plan.clone();
+            let genr = &genr;
+            scope.spawn(move || {
+                let mut rng = Rng::new(1000 + t);
+                let e = genr.onehop(&mut rng, 2);
+                let sid = server.open_session();
+                for _ in 0..3 {
+                    server.query_plan_in(sid, e.clone(), plan.clone()).unwrap();
+                }
+                assert!(server.close_session(sid));
+            });
+        }
+    });
+    let stats = server.store().expect("pool server owns a store").stats();
+    assert_eq!(stats.pinned_chunks, 0, "closed sessions must release every pin");
+    assert_eq!(stats.pinned_bytes, 0, "pinned byte accounting must drain to zero");
+    assert_eq!(server.metrics().counter("sessions_closed"), 6);
+    // 6 sessions x 3 turns: every turn past the first per session skips prep.
+    assert_eq!(server.metrics().counter("session_prep_skipped"), 12);
+    server.shutdown();
+    println!("session-test: churn_pins_released ok");
+}
+
+#[test]
+fn unknown_session_falls_back_to_the_shared_queue() {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let genr = EpisodeGen::new(stub_pipeline(&rt).vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let mut rng = Rng::new(1100);
+    let e = genr.onehop(&mut rng, 2);
+    // A closed/expired (here: never-opened) session id still serves — it
+    // just loses affinity and preps cold.
+    let resp = server
+        .query_plan_in(424242, e, MethodSpec::Baseline.to_plan())
+        .expect("unknown session must not fail the request");
+    assert!(!resp.answer.is_empty());
+    assert!(server.metrics().counter("session_unknown") >= 1);
+    server.shutdown();
+    println!("session-test: unknown_session_fallback ok");
+}
