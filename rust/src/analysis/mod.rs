@@ -75,8 +75,9 @@ impl Diag {
 }
 
 /// Directories gated by the `panic-surface` rule.
-const PANIC_GATED: [&str; 4] = [
+const PANIC_GATED: [&str; 5] = [
     "rust/src/coordinator/",
+    "rust/src/guide/",
     "rust/src/kvcache/",
     "rust/src/runtime/",
     "rust/src/plan/",

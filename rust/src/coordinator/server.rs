@@ -896,8 +896,14 @@ fn serve_one(handler: &mut Handler, (req, enq): WorkItem, shared: &Shared) {
                 shared.metrics.observe_s("queue", queue_s);
                 // Per-stage latency series, keyed by stage name, so
                 // `metrics_json` breaks serving time down by plan stage.
+                // `guide_compile` keeps its literal key: the guided
+                // conformance suite reads it as its compile-once tripwire.
                 for (name, secs) in &s.stages {
-                    shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+                    if *name == "guide_compile" {
+                        shared.metrics.observe_s("stage_guide_compile", *secs);
+                    } else {
+                        shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+                    }
                 }
                 // A serial handler has no per-token emission points; honor
                 // a streaming request by delivering the finished answer
@@ -1054,6 +1060,7 @@ fn prep_query(
     shared: &Shared,
 ) -> Option<InflightQuery> {
     let queue_s = enq.elapsed().as_secs_f64();
+    let guided = req.plan.decode.is_some();
     let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<QueryTask> {
         // The store lock lives inside get/insert; the query is prepped over
         // pinned Arcs with no lock held.
@@ -1064,14 +1071,19 @@ fn prep_query(
         }
     }));
     match outcome {
-        Ok(Ok(task)) => Some(InflightQuery {
-            task,
-            respond: req.respond,
-            stream: req.stream,
-            queue_s,
-            last_emit: None,
-            failed: false,
-        }),
+        Ok(Ok(task)) => {
+            if guided {
+                shared.metrics.incr("guided_queries");
+            }
+            Some(InflightQuery {
+                task,
+                respond: req.respond,
+                stream: req.stream,
+                queue_s,
+                last_emit: None,
+                failed: false,
+            })
+        }
         Ok(Err(e)) => {
             shared.metrics.incr("requests_failed");
             eprintln!("[server] request failed: {e:#}");
@@ -1284,20 +1296,32 @@ fn finish_query(q: InflightQuery, shared: &Shared) {
         shared.metrics.incr("requests_failed");
         return;
     }
+    // A guided task whose cursor did NOT retire in an accepting DFA state
+    // (dead-state termination or answer-budget truncation mid-pattern).
+    let guide_unsatisfied = matches!(task.guide_satisfied(), Some(false));
     let r = task.into_result();
     let mut stages = r.timing.stages.clone();
     stages.push(("prompt", r.timing.prompt_s));
     stages.push(("decode", r.timing.decode_s));
     let ttft_s = r.timing.ttft_s();
     shared.metrics.incr("requests_ok");
+    if guide_unsatisfied {
+        shared.metrics.incr("guide_rejections");
+    }
     // Measured wall-clock reservoirs (emission-stamped), plus the
     // historical stage-sum for attribution comparisons.
     shared.metrics.observe_s("ttft", ttft_s);
     shared.metrics.observe_s("ttft_stage_sum", r.timing.stage_ttft_s());
     shared.metrics.observe_s("total", r.timing.total_s);
     shared.metrics.observe_s("queue", queue_s);
+    // `guide_compile` keeps its literal key: the guided conformance suite
+    // reads it as its compile-once tripwire.
     for (name, secs) in &stages {
-        shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+        if *name == "guide_compile" {
+            shared.metrics.observe_s("stage_guide_compile", *secs);
+        } else {
+            shared.metrics.observe_s(&format!("stage_{name}"), *secs);
+        }
     }
     drop(stream);
     let _ = respond.send(Response {

@@ -1,0 +1,282 @@
+//! Subset-construction determinization: ε-NFA → [`Guide`], the per-state
+//! token-mask DFA the decode loop consults.
+//!
+//! Each DFA state carries two precomputed views of the same transition
+//! function: a `Vec<u64>` allowed-token bitmask (`n_words` = ⌈vocab/64⌉
+//! words — 3 for the 144-token vocab) applied to the logits before argmax,
+//! and a dense `u32` next-state row ([`DEAD`] = no edge) followed once per
+//! emitted token.  EOS is set ONLY in accepting states' masks, so masked
+//! greedy decode can terminate exactly when — and only when — the pattern
+//! is complete.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::vocab::{self, Vocab};
+
+use super::nfa::Nfa;
+
+/// Transition-table sentinel: no outgoing edge on that token.
+pub const DEAD: u32 = u32::MAX;
+
+/// Subset-construction state cap — orders of magnitude above any real
+/// guide; a backstop so a pathological pattern fails with an error instead
+/// of unbounded memory.
+const MAX_STATES: usize = 4096;
+
+/// Process-wide count of NFA→DFA compilations.  This is the conformance
+/// suite's compile-once witness: serving N guided queries adds exactly N,
+/// session prep reuse adds none, and no decode tick ever recompiles.
+static GUIDE_COMPILES: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide [`GUIDE_COMPILES`] counter.
+pub fn compiles() -> u64 {
+    GUIDE_COMPILES.load(Ordering::Relaxed)
+}
+
+/// A compiled guide: a DFA over the fact vocabulary with a precomputed
+/// allowed-token bitmask per state.  State 0 is the start state.  Compiled
+/// once per query prep (reused across session turns); consulted per tick
+/// at the cost of one mask lookup plus one transition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Guide {
+    pub(super) pattern: String,
+    pub(super) vocab: u32,
+    pub(super) n_words: u32,
+    pub(super) accepting: Vec<bool>,
+    /// `n_states * n_words` mask words, row-major by state.
+    pub(super) masks: Vec<u64>,
+    /// `n_states * vocab` transition entries, row-major by state; [`DEAD`]
+    /// marks a missing edge.
+    pub(super) next: Vec<u32>,
+}
+
+impl Guide {
+    /// Parse + Thompson NFA + subset construction.  The ONE compilation
+    /// entry point — prep calls it once per query (or once per session
+    /// under prep reuse) and the decode loop never does.
+    pub fn compile(pattern: &str, v: &Vocab) -> Result<Guide> {
+        let nfa = Nfa::compile(pattern, v)?;
+        let g = determinize(pattern, v, &nfa)?;
+        GUIDE_COMPILES.fetch_add(1, Ordering::Relaxed);
+        Ok(g)
+    }
+
+    /// The verbatim source pattern (also the canonical `decode=` rendering).
+    pub fn pattern(&self) -> &str {
+        &self.pattern
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab as usize
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.n_words as usize
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.accepting.len()
+    }
+
+    pub fn is_accepting(&self, state: u32) -> bool {
+        self.accepting.get(state as usize).copied().unwrap_or(false)
+    }
+
+    /// The allowed-token mask of `state`.  A bogus id yields the empty
+    /// slice — callers treat that as an all-masked dead state, never a
+    /// panic.
+    pub fn mask_of(&self, state: u32) -> &[u64] {
+        let w = self.n_words as usize;
+        let a = (state as usize).saturating_mul(w);
+        self.masks.get(a..a + w).unwrap_or(&[])
+    }
+
+    /// Follow one DFA transition; `None` when the token has no edge (or is
+    /// outside the vocab).
+    pub fn next_of(&self, state: u32, tok: i32) -> Option<u32> {
+        if tok < 0 || tok as usize >= self.vocab as usize {
+            return None;
+        }
+        let row = (state as usize).saturating_mul(self.vocab as usize);
+        match self.next.get(row + tok as usize) {
+            Some(&n) if n != DEAD => Some(n),
+            _ => None,
+        }
+    }
+
+    /// Does the guide's language contain this token string?  EOS is a
+    /// terminator, not part of the string — exactly the decode contract.
+    pub fn accepts(&self, toks: &[i32]) -> bool {
+        let mut at = 0u32;
+        for &t in toks {
+            match self.next_of(at, t) {
+                Some(n) => at = n,
+                None => return false,
+            }
+        }
+        self.is_accepting(at)
+    }
+
+    /// Assemble a guide from already-validated raw parts (the IFG1 reader).
+    pub(super) fn from_raw(
+        pattern: String,
+        vocab: u32,
+        n_words: u32,
+        accepting: Vec<bool>,
+        masks: Vec<u64>,
+        next: Vec<u32>,
+    ) -> Guide {
+        Guide {
+            pattern,
+            vocab,
+            n_words,
+            accepting,
+            masks,
+            next,
+        }
+    }
+}
+
+fn determinize(pattern: &str, v: &Vocab, nfa: &Nfa) -> Result<Guide> {
+    let n_words = v.mask_words();
+    let start: Vec<usize> = nfa.start_closure().into_iter().collect();
+    let mut ids: HashMap<Vec<usize>, u32> = HashMap::new();
+    ids.insert(start.clone(), 0);
+    let mut subsets: Vec<Vec<usize>> = vec![start];
+    let mut accepting: Vec<bool> = Vec::new();
+    let mut masks: Vec<u64> = Vec::new();
+    let mut next: Vec<u32> = Vec::new();
+    let mut qi = 0usize;
+    while qi < subsets.len() {
+        let from: BTreeSet<usize> = subsets[qi].iter().copied().collect();
+        let mut row = vec![DEAD; v.vocab];
+        let mut mask = vec![0u64; n_words];
+        for t in 0..v.vocab as i32 {
+            let tgt = nfa.step_set(&from, t);
+            if tgt.is_empty() {
+                continue;
+            }
+            let key: Vec<usize> = tgt.into_iter().collect();
+            let id = match ids.get(&key) {
+                Some(&id) => id,
+                None => {
+                    if subsets.len() >= MAX_STATES {
+                        bail!("guide '{pattern}': DFA exceeded {MAX_STATES} states");
+                    }
+                    let id = subsets.len() as u32;
+                    ids.insert(key.clone(), id);
+                    subsets.push(key);
+                    id
+                }
+            };
+            let ti = t as usize;
+            if let Some(slot) = row.get_mut(ti) {
+                *slot = id;
+            }
+            if let Some(w) = mask.get_mut(ti / 64) {
+                *w |= 1u64 << (ti % 64);
+            }
+        }
+        let acc = from.contains(&nfa.accept_state());
+        if acc {
+            // EOS is admitted exactly in accepting states: the pattern is
+            // complete, so the answer may terminate here.
+            let e = vocab::EOS as usize;
+            if let Some(w) = mask.get_mut(e / 64) {
+                *w |= 1u64 << (e % 64);
+            }
+        }
+        accepting.push(acc);
+        masks.extend_from_slice(&mask);
+        next.extend_from_slice(&row);
+        qi += 1;
+    }
+    Ok(Guide {
+        pattern: pattern.to_string(),
+        vocab: v.vocab as u32,
+        n_words: n_words as u32,
+        accepting,
+        masks,
+        next,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::guide::mask_allows;
+
+    fn v() -> Vocab {
+        Vocab::default()
+    }
+
+    #[test]
+    fn compile_counts_each_determinization_once() {
+        let before = compiles();
+        let _a = Guide::compile("val.val", &v()).unwrap();
+        let _b = Guide::compile("key|filler", &v()).unwrap();
+        assert!(compiles() >= before + 2);
+    }
+
+    #[test]
+    fn masks_mirror_transitions_and_gate_eos_on_acceptance() {
+        let vb = v();
+        let g = Guide::compile("key.val", &vb).unwrap();
+        assert_eq!(g.n_words(), vb.mask_words());
+        assert_eq!(g.vocab_size(), vb.vocab);
+        for s in 0..g.n_states() as u32 {
+            let mask = g.mask_of(s);
+            for t in 0..vb.vocab as i32 {
+                if t == vocab::EOS {
+                    assert_eq!(
+                        mask_allows(mask, t),
+                        g.is_accepting(s),
+                        "state {s}: EOS admitted iff accepting"
+                    );
+                } else {
+                    assert_eq!(
+                        mask_allows(mask, t),
+                        g.next_of(s, t).is_some(),
+                        "state {s} token {t}: mask bit == has-edge"
+                    );
+                }
+            }
+        }
+        // Start state: only keys allowed, not accepting.
+        assert!(!g.is_accepting(0));
+        assert!(mask_allows(g.mask_of(0), vb.key_base));
+        assert!(!mask_allows(g.mask_of(0), vb.val_base));
+    }
+
+    #[test]
+    fn dfa_acceptance_matches_simple_walks() {
+        let vb = v();
+        let g = Guide::compile("key.(val|filler)*", &vb).unwrap();
+        assert!(g.accepts(&[vb.key_base]));
+        assert!(g.accepts(&[vb.key_base, vb.val_base, vb.filler_base]));
+        assert!(!g.accepts(&[vb.val_base]));
+        assert!(!g.accepts(&[]));
+        assert!(!g.accepts(&[vb.key_base, vb.key_base]));
+    }
+
+    #[test]
+    fn bogus_state_ids_degrade_to_dead_not_panic() {
+        let g = Guide::compile("val", &v()).unwrap();
+        let far = g.n_states() as u32 + 7;
+        assert!(g.mask_of(far).is_empty());
+        assert_eq!(g.next_of(far, 64), None);
+        assert!(!g.is_accepting(far));
+        assert_eq!(g.next_of(0, -1), None);
+        assert_eq!(g.next_of(0, 10_000), None);
+    }
+
+    #[test]
+    fn json_shape_pattern_compiles_small() {
+        let g = Guide::compile("key.val.val", &v()).unwrap();
+        assert_eq!(g.n_states(), 4, "a 3-symbol chain is 4 DFA states");
+        assert!(g.is_accepting(3));
+    }
+}

@@ -1,0 +1,349 @@
+//! The guide language: a token-class regex over the fact vocabulary.
+//!
+//! ```text
+//! alt     := cat ('|' cat)*
+//! cat     := rep ('.' rep)*            # '.' is concatenation
+//! rep     := atom ('*' | '+' | '?')?
+//! atom    := '(' alt ')' | class | literal
+//! class   := key | val | filler | any  # any = key ∪ val ∪ filler
+//! literal := k<i> | v<i> | f<i>        # one concrete class token, e.g. v3
+//! ```
+//!
+//! Atoms denote token SETS drawn from the fact vocabulary — never the
+//! special tokens, and never EOS (EOS admission is the DFA's
+//! accepting-state rule, not a pattern symbol).  The canonical spelling of
+//! a pattern is the pattern itself: the `decode=` atom renders the input
+//! verbatim, so `parse ∘ render == id` holds by construction and two
+//! spellings of the same language are distinct plans (matching the
+//! row-order semantics of `select=explicit:`).
+//!
+//! The character set is deliberately tight — lowercase identifiers, digits
+//! and `.|*+?()` only.  Whitespace, `;` and `:` are lexer errors, which
+//! keeps a pattern from ever splitting a plan clause or a policy atom.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Which token class an atom draws from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClassKind {
+    Key,
+    Val,
+    Filler,
+    /// Any fact token: key ∪ val ∪ filler.
+    Any,
+}
+
+/// Guide-pattern AST.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// A whole token class (`key`, `val`, `filler`, `any`).
+    Class(ClassKind),
+    /// One concrete class token (`k3`, `v7`, `f1`).  The index is validated
+    /// against the live vocab at guide-compile time, not parse time.
+    Lit(ClassKind, usize),
+    Cat(Vec<Expr>),
+    Alt(Vec<Expr>),
+    Star(Box<Expr>),
+    Plus(Box<Expr>),
+    Opt(Box<Expr>),
+}
+
+/// Parenthesis-nesting cap: a backstop so a pathological pattern cannot
+/// blow the recursive-descent stack.
+const MAX_DEPTH: usize = 32;
+
+/// Parse a guide pattern into its AST.
+pub fn parse(pattern: &str) -> Result<Expr> {
+    if pattern.is_empty() {
+        bail!("empty guide pattern (try 'val.val' or 'key.(val|filler)*')");
+    }
+    let toks = lex(pattern)?;
+    let mut p = Parser { toks, at: 0, depth: 0 };
+    let e = p.alt()?;
+    if p.at != p.toks.len() {
+        bail!(
+            "guide pattern: trailing '{}' after a complete pattern",
+            p.toks[p.at].render()
+        );
+    }
+    Ok(e)
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum PTok {
+    Ident(String),
+    LParen,
+    RParen,
+    Pipe,
+    Dot,
+    Star,
+    Plus,
+    Quest,
+}
+
+impl PTok {
+    fn render(&self) -> String {
+        match self {
+            PTok::Ident(s) => s.clone(),
+            PTok::LParen => "(".into(),
+            PTok::RParen => ")".into(),
+            PTok::Pipe => "|".into(),
+            PTok::Dot => ".".into(),
+            PTok::Star => "*".into(),
+            PTok::Plus => "+".into(),
+            PTok::Quest => "?".into(),
+        }
+    }
+}
+
+fn lex(s: &str) -> Result<Vec<PTok>> {
+    let mut out = Vec::new();
+    let b = s.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'(' => {
+                out.push(PTok::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(PTok::RParen);
+                i += 1;
+            }
+            b'|' => {
+                out.push(PTok::Pipe);
+                i += 1;
+            }
+            b'.' => {
+                out.push(PTok::Dot);
+                i += 1;
+            }
+            b'*' => {
+                out.push(PTok::Star);
+                i += 1;
+            }
+            b'+' => {
+                out.push(PTok::Plus);
+                i += 1;
+            }
+            b'?' => {
+                out.push(PTok::Quest);
+                i += 1;
+            }
+            b'a'..=b'z' | b'0'..=b'9' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_lowercase() || b[i].is_ascii_digit()) {
+                    i += 1;
+                }
+                out.push(PTok::Ident(s[start..i].to_string()));
+            }
+            c => bail!(
+                "guide pattern: unexpected character '{}' at byte {i} (patterns \
+                 use only [a-z0-9.|*+?()]; no whitespace, ';' or ':')",
+                c as char
+            ),
+        }
+    }
+    Ok(out)
+}
+
+struct Parser {
+    toks: Vec<PTok>,
+    at: usize,
+    depth: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&PTok> {
+        self.toks.get(self.at)
+    }
+
+    fn alt(&mut self) -> Result<Expr> {
+        let mut arms = vec![self.cat()?];
+        while self.peek() == Some(&PTok::Pipe) {
+            self.at += 1;
+            arms.push(self.cat()?);
+        }
+        if arms.len() == 1 {
+            Ok(arms.remove(0))
+        } else {
+            Ok(Expr::Alt(arms))
+        }
+    }
+
+    fn cat(&mut self) -> Result<Expr> {
+        let mut parts = vec![self.rep()?];
+        while self.peek() == Some(&PTok::Dot) {
+            self.at += 1;
+            parts.push(self.rep()?);
+        }
+        if parts.len() == 1 {
+            Ok(parts.remove(0))
+        } else {
+            Ok(Expr::Cat(parts))
+        }
+    }
+
+    fn rep(&mut self) -> Result<Expr> {
+        let a = self.atom()?;
+        match self.peek() {
+            Some(PTok::Star) => {
+                self.at += 1;
+                Ok(Expr::Star(Box::new(a)))
+            }
+            Some(PTok::Plus) => {
+                self.at += 1;
+                Ok(Expr::Plus(Box::new(a)))
+            }
+            Some(PTok::Quest) => {
+                self.at += 1;
+                Ok(Expr::Opt(Box::new(a)))
+            }
+            _ => Ok(a),
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.toks.get(self.at).cloned() {
+            Some(PTok::LParen) => {
+                self.depth += 1;
+                if self.depth > MAX_DEPTH {
+                    bail!("guide pattern: parentheses nested deeper than {MAX_DEPTH}");
+                }
+                self.at += 1;
+                let e = self.alt()?;
+                if self.toks.get(self.at) != Some(&PTok::RParen) {
+                    bail!("guide pattern: unclosed '('");
+                }
+                self.at += 1;
+                self.depth -= 1;
+                Ok(e)
+            }
+            Some(PTok::Ident(id)) => {
+                self.at += 1;
+                ident_atom(&id)
+            }
+            Some(t) => bail!("guide pattern: expected an atom, found '{}'", t.render()),
+            None => bail!("guide pattern: expected an atom, found end of pattern"),
+        }
+    }
+}
+
+fn ident_atom(id: &str) -> Result<Expr> {
+    match id {
+        "key" => return Ok(Expr::Class(ClassKind::Key)),
+        "val" => return Ok(Expr::Class(ClassKind::Val)),
+        "filler" => return Ok(Expr::Class(ClassKind::Filler)),
+        "any" => return Ok(Expr::Class(ClassKind::Any)),
+        _ => {}
+    }
+    let (class, idx) = match id.split_at(1) {
+        ("k", rest) => (ClassKind::Key, rest),
+        ("v", rest) => (ClassKind::Val, rest),
+        ("f", rest) => (ClassKind::Filler, rest),
+        _ => bail!(
+            "guide pattern: unknown atom '{id}' (expected key, val, filler, any, \
+             or a literal like k3/v7/f1)"
+        ),
+    };
+    if idx.is_empty() || !idx.bytes().all(|b| b.is_ascii_digit()) {
+        bail!("guide pattern: bad literal '{id}' (expected k<i>/v<i>/f<i>)");
+    }
+    let i: usize = idx
+        .parse()
+        .map_err(|e| anyhow!("guide pattern: literal '{id}': {e}"))?;
+    Ok(Expr::Lit(class, i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_literals_and_operators_parse() {
+        assert_eq!(parse("val").unwrap(), Expr::Class(ClassKind::Val));
+        assert_eq!(parse("v3").unwrap(), Expr::Lit(ClassKind::Val, 3));
+        assert_eq!(
+            parse("key.val").unwrap(),
+            Expr::Cat(vec![Expr::Class(ClassKind::Key), Expr::Class(ClassKind::Val)])
+        );
+        assert_eq!(
+            parse("key|f12").unwrap(),
+            Expr::Alt(vec![
+                Expr::Class(ClassKind::Key),
+                Expr::Lit(ClassKind::Filler, 12)
+            ])
+        );
+        assert_eq!(
+            parse("any*").unwrap(),
+            Expr::Star(Box::new(Expr::Class(ClassKind::Any)))
+        );
+        assert_eq!(
+            parse("(key|val)+.filler?").unwrap(),
+            Expr::Cat(vec![
+                Expr::Plus(Box::new(Expr::Alt(vec![
+                    Expr::Class(ClassKind::Key),
+                    Expr::Class(ClassKind::Val)
+                ]))),
+                Expr::Opt(Box::new(Expr::Class(ClassKind::Filler))),
+            ])
+        );
+    }
+
+    #[test]
+    fn concatenation_binds_tighter_than_alternation() {
+        // key.val|filler  ==  (key.val)|filler
+        assert_eq!(
+            parse("key.val|filler").unwrap(),
+            Expr::Alt(vec![
+                Expr::Cat(vec![
+                    Expr::Class(ClassKind::Key),
+                    Expr::Class(ClassKind::Val)
+                ]),
+                Expr::Class(ClassKind::Filler),
+            ])
+        );
+    }
+
+    #[test]
+    fn bad_patterns_are_rejected_with_errors() {
+        for bad in [
+            "",
+            " ",
+            "key val",
+            "key;val",
+            "regex:val",
+            "Key",
+            "val..val",
+            "val|",
+            "|val",
+            "*val",
+            "(key",
+            "key)",
+            "()",
+            "k",
+            "kx",
+            "k1x",
+            "x7",
+            "val val",
+            "val,val",
+        ] {
+            assert!(parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn double_postfix_requires_parens() {
+        assert!(parse("val**").is_err());
+        assert!(parse("(val*)*").is_ok());
+    }
+
+    #[test]
+    fn deep_nesting_is_capped() {
+        let deep = format!("{}val{}", "(".repeat(40), ")".repeat(40));
+        let err = parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nested deeper"), "got: {err}");
+        let ok = format!("{}val{}", "(".repeat(30), ")".repeat(30));
+        assert!(parse(&ok).is_ok());
+    }
+}

@@ -1,0 +1,60 @@
+//! Guided decoding: compile a token-class regex (or the `json` preset) into
+//! a DFA whose per-state token masks constrain greedy decode — structured
+//! output as a *plan stage* (`decode=regex:<pattern>` / `decode=json`),
+//! composing with every existing prep/score/select/session mechanism
+//! instead of bypassing them.
+//!
+//! Pipeline: [`lang`] (pattern → AST) → [`nfa`] (Thompson construction) →
+//! [`dfa`] (subset determinization → [`Guide`]: per-state `Vec<u64>` token
+//! masks + dense transition rows) → [`state`] ([`GuideState`]: one cursor
+//! per query, advanced one transition per emitted token) → [`serial`] (the
+//! `IFG1` byte form).  [`policy::GuidePolicy`] is the plan-registry
+//! front-end (`regex`/`json` atoms of the `decode=` slot).
+//!
+//! Cost model: compilation runs ONCE per query prep (and is reused across
+//! session turns via `PreparedContext`); each decode tick pays one mask
+//! lookup plus one DFA transition.  Masked greedy argmax is deterministic
+//! on the stub runtime, so guided answers are bit-identical between serial
+//! and scheduled serving.  A dead/all-masked state terminates the answer
+//! (the coordinator counts it under `guide_rejections`) — never a panic;
+//! this module is pallas-lint panic-surface gated.
+
+pub mod dfa;
+pub mod lang;
+pub mod nfa;
+pub mod policy;
+pub mod serial;
+pub mod state;
+
+pub use dfa::{compiles, Guide, DEAD};
+pub use nfa::Nfa;
+pub use policy::{GuidePolicy, JSON_SHAPE};
+pub use state::{masked_argmax, GuideState};
+
+/// Is `tok`'s bit set in a token-mask word vector?  Out-of-range tokens
+/// (negative, or beyond the words the mask covers) are never allowed.
+pub fn mask_allows(mask: &[u64], tok: i32) -> bool {
+    if tok < 0 {
+        return false;
+    }
+    let i = tok as usize;
+    mask.get(i / 64).is_some_and(|w| (w >> (i % 64)) & 1 == 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_allows_checks_bounds_and_bits() {
+        let mask = [0b101u64, 1u64 << 63];
+        assert!(mask_allows(&mask, 0));
+        assert!(!mask_allows(&mask, 1));
+        assert!(mask_allows(&mask, 2));
+        assert!(mask_allows(&mask, 127));
+        assert!(!mask_allows(&mask, 126));
+        assert!(!mask_allows(&mask, -1));
+        assert!(!mask_allows(&mask, 128), "past the mask words: never allowed");
+        assert!(!mask_allows(&[], 0));
+    }
+}

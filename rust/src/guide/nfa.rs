@@ -1,0 +1,293 @@
+//! Thompson construction: guide AST → ε-NFA over token-set edges.
+//!
+//! The NFA doubles as the determinization *reference*: [`Nfa::accepts`]
+//! simulates it directly (ε-closure + set step), and the conformance suite
+//! checks the compiled DFA agrees with it on randomized token strings —
+//! the classic subset-construction correctness property.
+//!
+//! Literal index ranges (`k3`, `v7`, `f1`) are validated here against the
+//! live [`Vocab`], so a plan that names a token the serving vocab does not
+//! have fails at guide-compile time with a range error, not at decode time.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::vocab::Vocab;
+
+use super::lang::{self, ClassKind, Expr};
+use super::mask_allows;
+
+/// One symbol edge: a token bitmask and the target state.
+type Edge = (Vec<u64>, usize);
+
+/// A Thompson ε-NFA with exactly one accept state.
+pub struct Nfa {
+    /// Symbol edges per state.
+    edges: Vec<Vec<Edge>>,
+    /// ε edges per state.
+    eps: Vec<Vec<usize>>,
+    start: usize,
+    accept: usize,
+}
+
+impl Nfa {
+    /// Parse `pattern` and lower it through Thompson construction.
+    pub fn compile(pattern: &str, v: &Vocab) -> Result<Nfa> {
+        let ast = lang::parse(pattern)?;
+        let mut b = Builder {
+            v,
+            n_words: v.mask_words(),
+            edges: Vec::new(),
+            eps: Vec::new(),
+        };
+        let (start, accept) = b.frag(&ast)?;
+        Ok(Nfa {
+            edges: b.edges,
+            eps: b.eps,
+            start,
+            accept,
+        })
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub(super) fn accept_state(&self) -> usize {
+        self.accept
+    }
+
+    /// ε-closure of a seed state set, as a sorted set.
+    fn closure(&self, seed: impl IntoIterator<Item = usize>) -> BTreeSet<usize> {
+        let mut set: BTreeSet<usize> = BTreeSet::new();
+        let mut work: Vec<usize> = seed.into_iter().collect();
+        while let Some(s) = work.pop() {
+            if set.insert(s) {
+                for &t in self.eps.get(s).map(Vec::as_slice).unwrap_or(&[]) {
+                    work.push(t);
+                }
+            }
+        }
+        set
+    }
+
+    /// The DFA start subset: ε-closure of the NFA start state.
+    pub(super) fn start_closure(&self) -> BTreeSet<usize> {
+        self.closure([self.start])
+    }
+
+    /// Symbol step + ε-closure: every state reachable from `from` on `tok`.
+    pub(super) fn step_set(&self, from: &BTreeSet<usize>, tok: i32) -> BTreeSet<usize> {
+        let mut hit = Vec::new();
+        for &s in from {
+            for (mask, tgt) in self.edges.get(s).map(Vec::as_slice).unwrap_or(&[]) {
+                if mask_allows(mask, tok) {
+                    hit.push(*tgt);
+                }
+            }
+        }
+        self.closure(hit)
+    }
+
+    /// Reference acceptance: direct NFA simulation (no determinization).
+    pub fn accepts(&self, toks: &[i32]) -> bool {
+        let mut cur = self.start_closure();
+        for &t in toks {
+            cur = self.step_set(&cur, t);
+            if cur.is_empty() {
+                return false;
+            }
+        }
+        cur.contains(&self.accept)
+    }
+}
+
+struct Builder<'a> {
+    v: &'a Vocab,
+    n_words: usize,
+    edges: Vec<Vec<Edge>>,
+    eps: Vec<Vec<usize>>,
+}
+
+impl Builder<'_> {
+    fn state(&mut self) -> usize {
+        self.edges.push(Vec::new());
+        self.eps.push(Vec::new());
+        self.edges.len() - 1
+    }
+
+    fn symbol(&mut self, mask: Vec<u64>) -> (usize, usize) {
+        let s = self.state();
+        let a = self.state();
+        self.edges[s].push((mask, a));
+        (s, a)
+    }
+
+    /// Lower one AST node to an NFA fragment, returning (start, accept).
+    fn frag(&mut self, e: &Expr) -> Result<(usize, usize)> {
+        match e {
+            Expr::Class(c) => Ok(self.symbol(class_mask(self.v, *c, self.n_words))),
+            Expr::Lit(c, i) => {
+                let m = lit_mask(self.v, *c, *i, self.n_words)?;
+                Ok(self.symbol(m))
+            }
+            Expr::Cat(parts) => {
+                let mut cur: Option<(usize, usize)> = None;
+                for p in parts {
+                    let f = self.frag(p)?;
+                    cur = Some(match cur {
+                        None => f,
+                        Some((s, a)) => {
+                            self.eps[a].push(f.0);
+                            (s, f.1)
+                        }
+                    });
+                }
+                match cur {
+                    Some(f) => Ok(f),
+                    None => bail!("guide pattern: empty concatenation"),
+                }
+            }
+            Expr::Alt(arms) => {
+                let s = self.state();
+                let a = self.state();
+                for arm in arms {
+                    let f = self.frag(arm)?;
+                    self.eps[s].push(f.0);
+                    self.eps[f.1].push(a);
+                }
+                Ok((s, a))
+            }
+            Expr::Star(x) => {
+                let s = self.state();
+                let a = self.state();
+                let f = self.frag(x)?;
+                self.eps[s].push(f.0);
+                self.eps[s].push(a);
+                self.eps[f.1].push(f.0);
+                self.eps[f.1].push(a);
+                Ok((s, a))
+            }
+            Expr::Plus(x) => {
+                let s = self.state();
+                let a = self.state();
+                let f = self.frag(x)?;
+                self.eps[s].push(f.0);
+                self.eps[f.1].push(f.0);
+                self.eps[f.1].push(a);
+                Ok((s, a))
+            }
+            Expr::Opt(x) => {
+                let s = self.state();
+                let a = self.state();
+                let f = self.frag(x)?;
+                self.eps[s].push(f.0);
+                self.eps[s].push(a);
+                self.eps[f.1].push(a);
+                Ok((s, a))
+            }
+        }
+    }
+}
+
+fn set_bit(words: &mut [u64], tok: i32) {
+    let i = tok as usize;
+    if let Some(w) = words.get_mut(i / 64) {
+        *w |= 1u64 << (i % 64);
+    }
+}
+
+fn class_mask(v: &Vocab, c: ClassKind, n_words: usize) -> Vec<u64> {
+    let mut m = vec![0u64; n_words];
+    let toks: Vec<i32> = match c {
+        ClassKind::Key => v.keys().collect(),
+        ClassKind::Val => v.vals().collect(),
+        ClassKind::Filler => v.fillers().collect(),
+        ClassKind::Any => v.keys().chain(v.vals()).chain(v.fillers()).collect(),
+    };
+    for t in toks {
+        set_bit(&mut m, t);
+    }
+    m
+}
+
+fn lit_mask(v: &Vocab, c: ClassKind, i: usize, n_words: usize) -> Result<Vec<u64>> {
+    let (tok, count, label) = match c {
+        ClassKind::Key => (v.key_base + i as i32, v.num_keys, 'k'),
+        ClassKind::Val => (v.val_base + i as i32, v.num_vals, 'v'),
+        ClassKind::Filler => (v.filler_base + i as i32, v.num_filler, 'f'),
+        ClassKind::Any => bail!("guide pattern: 'any' has no literal form"),
+    };
+    if i >= count {
+        bail!("guide pattern: literal {label}{i} out of range (vocab has {count} {label}-class tokens)");
+    }
+    let mut m = vec![0u64; n_words];
+    set_bit(&mut m, tok);
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vocab {
+        Vocab::default()
+    }
+
+    #[test]
+    fn simulation_matches_the_pattern_language() {
+        let vb = v();
+        let n = Nfa::compile("key.(val|filler)*", &vb).unwrap();
+        let k = vb.key_base;
+        let val = vb.val_base;
+        let f = vb.filler_base;
+        assert!(n.accepts(&[k]));
+        assert!(n.accepts(&[k, val]));
+        assert!(n.accepts(&[k, f, val, val]));
+        assert!(!n.accepts(&[]));
+        assert!(!n.accepts(&[val]));
+        assert!(!n.accepts(&[k, k]));
+    }
+
+    #[test]
+    fn literals_pin_exactly_one_token() {
+        let vb = v();
+        let n = Nfa::compile("v3", &vb).unwrap();
+        assert!(n.accepts(&[vb.val_base + 3]));
+        assert!(!n.accepts(&[vb.val_base + 4]));
+        assert!(!n.accepts(&[vb.key_base + 3]));
+    }
+
+    #[test]
+    fn plus_and_opt_cover_their_counts() {
+        let vb = v();
+        let n = Nfa::compile("val+.key?", &vb).unwrap();
+        let val = vb.val_base;
+        let k = vb.key_base;
+        assert!(!n.accepts(&[]));
+        assert!(n.accepts(&[val]));
+        assert!(n.accepts(&[val, val, k]));
+        assert!(!n.accepts(&[k]));
+        assert!(!n.accepts(&[val, k, k]));
+    }
+
+    #[test]
+    fn out_of_range_literals_fail_compile() {
+        let vb = v();
+        let err = Nfa::compile("k48", &vb).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "got: {err}");
+        assert!(Nfa::compile("k47", &vb).is_ok());
+        assert!(Nfa::compile("f32", &vb).is_err());
+        assert!(Nfa::compile("v100", &vb).is_err());
+    }
+
+    #[test]
+    fn classes_never_admit_special_tokens() {
+        let vb = v();
+        let n = Nfa::compile("any", &vb).unwrap();
+        for special in 0..vb.key_base {
+            assert!(!n.accepts(&[special]), "special token {special} admitted");
+        }
+    }
+}

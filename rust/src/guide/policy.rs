@@ -1,0 +1,121 @@
+//! The `regex`/`json` decode policies — the guide subsystem's plan-registry
+//! front-ends.
+//!
+//! These are the first policies registered through the runtime-extensible
+//! `Registry` rather than compiled into an enum: the plan layer only sees
+//! the `DecodePolicy` trait, and an out-of-tree policy family registered
+//! via `Registry::with_policies` is indistinguishable from these.
+
+use anyhow::Result;
+
+use crate::plan::DecodePolicy;
+use crate::vocab::Vocab;
+
+use super::dfa::Guide;
+use super::lang;
+
+/// The `json` preset's expansion: one key token then the fact's two value
+/// tokens — the fact-vocabulary analog of `{"key": [v1, v2]}`, matching
+/// the value-fact payload shape the eval tasks emit.
+pub const JSON_SHAPE: &str = "key.val.val";
+
+#[derive(Clone, Debug, PartialEq)]
+enum Kind {
+    Regex(String),
+    Json,
+}
+
+/// A `decode=` plan stage backed by a compiled [`Guide`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct GuidePolicy {
+    kind: Kind,
+}
+
+impl GuidePolicy {
+    /// `decode=regex:<pattern>` — the pattern is syntax-checked here, at
+    /// plan-parse time; literal index ranges are checked against the live
+    /// vocab when the guide compiles at prep time.
+    pub fn regex(pattern: &str) -> Result<GuidePolicy> {
+        lang::parse(pattern)?;
+        Ok(GuidePolicy {
+            kind: Kind::Regex(pattern.to_string()),
+        })
+    }
+
+    /// `decode=json` — the fixed [`JSON_SHAPE`] preset.  Renders as the
+    /// preset name, not its expansion, so the canonical form round-trips.
+    pub fn json() -> GuidePolicy {
+        GuidePolicy { kind: Kind::Json }
+    }
+
+    /// The guide-language pattern this policy compiles.
+    pub fn pattern(&self) -> &str {
+        match &self.kind {
+            Kind::Regex(p) => p,
+            Kind::Json => JSON_SHAPE,
+        }
+    }
+}
+
+impl DecodePolicy for GuidePolicy {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            Kind::Regex(_) => "regex",
+            Kind::Json => "json",
+        }
+    }
+
+    fn render(&self) -> String {
+        match &self.kind {
+            Kind::Regex(p) => format!("regex:{p}"),
+            Kind::Json => "json".into(),
+        }
+    }
+
+    fn compile(&self, vocab: &Vocab) -> Result<Guide> {
+        Guide::compile(self.pattern(), vocab)
+    }
+
+    fn clone_box(&self) -> Box<dyn DecodePolicy> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regex_policy_syntax_checks_at_construction() {
+        assert!(GuidePolicy::regex("val.val").is_ok());
+        assert!(GuidePolicy::regex("val;val").is_err());
+        assert!(GuidePolicy::regex("").is_err());
+    }
+
+    #[test]
+    fn renders_are_canonical_atoms() {
+        let r = GuidePolicy::regex("key.(val|filler)*").unwrap();
+        assert_eq!(r.render(), "regex:key.(val|filler)*");
+        assert_eq!(r.name(), "regex");
+        let j = GuidePolicy::json();
+        assert_eq!(j.render(), "json");
+        assert_eq!(j.name(), "json");
+        assert_eq!(j.pattern(), JSON_SHAPE);
+    }
+
+    #[test]
+    fn json_preset_compiles_to_the_shape_guide() {
+        let v = Vocab::default();
+        let viaj = GuidePolicy::json().compile(&v).unwrap();
+        let direct = Guide::compile(JSON_SHAPE, &v).unwrap();
+        assert_eq!(viaj, direct);
+        assert!(viaj.accepts(&[v.key_base, v.val_base, v.val_base + 1]));
+        assert!(!viaj.accepts(&[v.key_base, v.val_base]));
+    }
+
+    #[test]
+    fn out_of_range_literal_fails_at_compile_not_parse() {
+        let p = GuidePolicy::regex("k99").unwrap();
+        assert!(p.compile(&Vocab::default()).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! `IFG1` — the fixed-field serialized byte form of a compiled [`Guide`].
+//!
+//! Layout (all integers little-endian; fixed offsets + per-record layout,
+//! in the style of outlines-core's `INDEX_BINARY_FORMAT` doc):
+//!
+//! ```text
+//! offset  size       field
+//! 0       4          magic "IFG1"
+//! 4       4          u32 vocab size V
+//! 8       4          u32 mask words per state W (must equal ⌈V/64⌉)
+//! 12      4          u32 state count S (≥ 1; state 0 = start)
+//! 16      4          u32 pattern byte length P
+//! 20      P          pattern, UTF-8
+//! 20+P    S records  per state, in id order:
+//!                      1      u8  accepting flag (0|1)
+//!                      8*W    mask words (u64 LE)
+//!                      4*V    transition row (u32 LE; 0xFFFF_FFFF = no
+//!                             edge, anything else must be < S)
+//! ```
+//!
+//! `from_bytes` validates structure (magic, exact length, flag bytes,
+//! transition targets) but deliberately does NOT cross-check masks against
+//! transition rows: the mask is authoritative for token *choice* and the
+//! row for *advancement*, and the decode loop tolerates a mismatch by
+//! terminating the answer (the dead-state path) — which is exactly what
+//! the conformance suite's hand-crafted dead-state guide exercises.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::dfa::{Guide, DEAD};
+
+/// The four magic bytes every serialized guide starts with.
+pub const MAGIC: [u8; 4] = *b"IFG1";
+
+impl Guide {
+    /// Serialize to the `IFG1` byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let v = self.vocab as usize;
+        let w = self.n_words as usize;
+        let s = self.accepting.len();
+        let mut out = Vec::with_capacity(20 + self.pattern.len() + s * (1 + 8 * w + 4 * v));
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&self.vocab.to_le_bytes());
+        out.extend_from_slice(&self.n_words.to_le_bytes());
+        out.extend_from_slice(&(s as u32).to_le_bytes());
+        out.extend_from_slice(&(self.pattern.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.pattern.as_bytes());
+        for st in 0..s {
+            out.push(u8::from(self.accepting[st]));
+            for word in &self.masks[st * w..(st + 1) * w] {
+                out.extend_from_slice(&word.to_le_bytes());
+            }
+            for entry in &self.next[st * v..(st + 1) * v] {
+                out.extend_from_slice(&entry.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize an `IFG1` blob, validating every field; malformed input
+    /// yields an error, never a panic.
+    pub fn from_bytes(b: &[u8]) -> Result<Guide> {
+        let mut c = Cur { b, at: 0 };
+        if c.take(4)? != MAGIC {
+            bail!("IFG1: bad magic (not a serialized guide)");
+        }
+        let vocab = c.u32()?;
+        let n_words = c.u32()?;
+        let n_states = c.u32()?;
+        let plen = c.u32()? as usize;
+        if vocab == 0 || n_states == 0 {
+            bail!("IFG1: empty vocab or state table");
+        }
+        if u64::from(n_words) != u64::from(vocab).div_ceil(64) {
+            bail!("IFG1: mask width {n_words} does not cover a {vocab}-token vocab");
+        }
+        let pattern = String::from_utf8(c.take(plen)?.to_vec())
+            .map_err(|e| anyhow!("IFG1: pattern is not UTF-8: {e}"))?;
+        let record = 1u64 + 8 * u64::from(n_words) + 4 * u64::from(vocab);
+        let want = c.at as u64 + record * u64::from(n_states);
+        if b.len() as u64 != want {
+            bail!("IFG1: byte length {} != expected {want}", b.len());
+        }
+        let states = n_states as usize;
+        let mut accepting = Vec::with_capacity(states);
+        let mut masks = Vec::with_capacity(states * n_words as usize);
+        let mut next = Vec::with_capacity(states * vocab as usize);
+        for st in 0..n_states {
+            let acc = c.u8()?;
+            if acc > 1 {
+                bail!("IFG1: state {st}: bad accepting flag {acc}");
+            }
+            accepting.push(acc == 1);
+            for _ in 0..n_words {
+                masks.push(c.u64()?);
+            }
+            for t in 0..vocab {
+                let n = c.u32()?;
+                if n != DEAD && n >= n_states {
+                    bail!("IFG1: state {st}, token {t}: transition to missing state {n}");
+                }
+                next.push(n);
+            }
+        }
+        Ok(Guide::from_raw(pattern, vocab, n_words, accepting, masks, next))
+    }
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        match self.b.get(self.at..self.at.saturating_add(n)) {
+            Some(s) => {
+                self.at += n;
+                Ok(s)
+            }
+            None => bail!("IFG1: truncated at byte {} (wanted {n} more)", self.at),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let s = self.take(1)?;
+        Ok(s[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vocab::Vocab;
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let v = Vocab::default();
+        for pat in ["val.val.val", "key.(val|filler)*", "v3|k0.any?", "key.val.val"] {
+            let g = Guide::compile(pat, &v).unwrap();
+            let bytes = g.to_bytes();
+            assert_eq!(&bytes[..4], b"IFG1");
+            let back = Guide::from_bytes(&bytes).unwrap();
+            assert_eq!(back, g, "roundtrip of '{pat}'");
+        }
+    }
+
+    #[test]
+    fn corrupt_blobs_error_instead_of_panicking() {
+        let v = Vocab::default();
+        let g = Guide::compile("val.val", &v).unwrap();
+        let bytes = g.to_bytes();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Guide::from_bytes(&bad).is_err());
+        // Truncation at every prefix length still errors cleanly.
+        for cut in [0, 3, 4, 12, 19, bytes.len() - 1] {
+            assert!(Guide::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(Guide::from_bytes(&long).is_err());
+        // Transition pointing past the state table.
+        let mut wild = bytes.clone();
+        let tail = wild.len() - 4;
+        wild[tail..].copy_from_slice(&1234u32.to_le_bytes());
+        assert!(Guide::from_bytes(&wild).is_err());
+        // Accepting flag that is neither 0 nor 1.
+        let pat_end = 20 + g.pattern().len();
+        let mut flag = bytes.clone();
+        flag[pat_end] = 9;
+        assert!(Guide::from_bytes(&flag).is_err());
+    }
+
+    #[test]
+    fn mask_width_must_match_the_vocab() {
+        let v = Vocab::default();
+        let g = Guide::compile("val", &v).unwrap();
+        let mut bytes = g.to_bytes();
+        bytes[8..12].copy_from_slice(&7u32.to_le_bytes());
+        let err = Guide::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("mask width"), "got: {err}");
+    }
+}

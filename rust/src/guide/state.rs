@@ -1,0 +1,206 @@
+//! [`GuideState`] — the per-query DFA cursor — and the masked greedy
+//! argmax it applies to each decode step's logits.
+//!
+//! One cursor lives inside each guided `DecodeState`.  Per decode tick the
+//! cost is exactly one mask lookup ([`GuideState::choose`]) plus one DFA
+//! transition ([`GuideState::advance`]); the scheduler interleaves guided
+//! and free-form queries with no extra bookkeeping because the cursor
+//! travels with the query's own state.
+
+use std::sync::Arc;
+
+use crate::vocab;
+
+use super::dfa::Guide;
+use super::mask_allows;
+
+/// Greedy argmax restricted to mask-allowed tokens, first-max-wins — the
+/// same tie-breaking as `TensorF::argmax`, so a guide whose mask admits the
+/// unguided winner picks the identical token.  `None` when the mask admits
+/// nothing (the dead/all-masked case).
+pub fn masked_argmax(logits: &[f32], mask: &[u64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in logits.iter().enumerate() {
+        if !mask_allows(mask, i as i32) {
+            continue;
+        }
+        best = match best {
+            Some(b) if logits[b] >= x => Some(b),
+            _ => Some(i),
+        };
+    }
+    best
+}
+
+/// A query's position in its guide: the current DFA state plus a sticky
+/// rejection flag.  Rejection — an emitted token with no edge, or a state
+/// admitting nothing — is terminal and never panics: the decode loop ends
+/// the answer and the coordinator counts it under `guide_rejections`.
+#[derive(Clone, Debug)]
+pub struct GuideState {
+    guide: Arc<Guide>,
+    at: u32,
+    rejected: bool,
+}
+
+impl GuideState {
+    /// A fresh cursor at the guide's start state.
+    pub fn new(guide: Arc<Guide>) -> GuideState {
+        GuideState {
+            guide,
+            at: 0,
+            rejected: false,
+        }
+    }
+
+    pub fn guide(&self) -> &Arc<Guide> {
+        &self.guide
+    }
+
+    /// The current state's allowed-token mask (empty once rejected).
+    pub fn mask(&self) -> &[u64] {
+        if self.rejected {
+            &[]
+        } else {
+            self.guide.mask_of(self.at)
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        self.rejected
+    }
+
+    /// Is the answer walked so far a complete match?  EOS may only be
+    /// chosen here, and retiring here satisfies the guide.
+    pub fn is_accepting(&self) -> bool {
+        !self.rejected && self.guide.is_accepting(self.at)
+    }
+
+    /// Advance one DFA transition for an emitted token.  EOS is a
+    /// terminator, not a symbol: it never moves the cursor (and in an
+    /// accepting state it is exactly where the answer should stop).
+    pub fn advance(&mut self, tok: i32) {
+        if self.rejected || tok == vocab::EOS {
+            return;
+        }
+        match self.guide.next_of(self.at, tok) {
+            Some(s) => self.at = s,
+            None => self.rejected = true,
+        }
+    }
+
+    /// Masked greedy choice of the next token.  `None` marks this cursor
+    /// rejected (dead/all-masked state): the caller terminates the answer.
+    pub fn choose(&mut self, logits: &[f32]) -> Option<i32> {
+        if self.rejected {
+            return None;
+        }
+        match masked_argmax(logits, self.guide.mask_of(self.at)) {
+            Some(t) => Some(t as i32),
+            None => {
+                self.rejected = true;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vocab::{Vocab, EOS};
+
+    fn v() -> Vocab {
+        Vocab::default()
+    }
+
+    #[test]
+    fn masked_argmax_is_first_max_wins_under_the_mask() {
+        // Tokens 0..4; mask admits 1 and 3 only.
+        let mask = [0b1010u64];
+        let logits = [9.0, 1.0, 9.0, 1.0];
+        assert_eq!(masked_argmax(&logits, &mask), Some(1), "ties break to the first");
+        let logits2 = [9.0, 1.0, 9.0, 2.0];
+        assert_eq!(masked_argmax(&logits2, &mask), Some(3));
+        assert_eq!(masked_argmax(&logits, &[0u64]), None, "empty mask");
+        assert_eq!(masked_argmax(&[], &mask), None, "no logits");
+    }
+
+    #[test]
+    fn masked_argmax_agrees_with_unmasked_when_winner_is_allowed() {
+        let logits: Vec<f32> = (0..144).map(|i| ((i * 37) % 91) as f32).collect();
+        let all = [u64::MAX, u64::MAX, u64::MAX];
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        assert_eq!(masked_argmax(&logits, &all), Some(best));
+    }
+
+    #[test]
+    fn cursor_walks_accepts_and_terminates() {
+        let vb = v();
+        let g = Arc::new(Guide::compile("key.val.val", &vb).unwrap());
+        let mut s = GuideState::new(g);
+        assert!(!s.is_accepting());
+        // Start state admits keys only.
+        let uniform = vec![1.0f32; vb.vocab];
+        let first = s.choose(&uniform).unwrap();
+        assert!(vb.is_key(first));
+        s.advance(first);
+        s.advance(vb.val_base);
+        s.advance(vb.val_base + 1);
+        assert!(s.is_accepting());
+        // In the accepting state the mask admits EOS.
+        assert!(mask_allows(s.mask(), EOS));
+        // EOS never moves the cursor.
+        s.advance(EOS);
+        assert!(s.is_accepting());
+    }
+
+    #[test]
+    fn wrong_token_rejects_sticky_and_silent() {
+        let vb = v();
+        let g = Arc::new(Guide::compile("val.val", &vb).unwrap());
+        let mut s = GuideState::new(g);
+        s.advance(vb.key_base); // not a val: no edge
+        assert!(s.is_rejected());
+        assert!(!s.is_accepting());
+        assert!(s.mask().is_empty());
+        assert_eq!(s.choose(&vec![1.0f32; vb.vocab]), None);
+        // Still rejected after more advances.
+        s.advance(vb.val_base);
+        assert!(s.is_rejected());
+    }
+
+    #[test]
+    fn dead_state_choose_returns_none_once() {
+        let vb = v();
+        // Hand-built guide: state 0 admits v0 with an edge to state 1;
+        // state 1 is non-accepting with an empty mask and no edges — a
+        // genuine dead state unreachable through Thompson construction.
+        let w = vb.mask_words();
+        let mut masks = vec![0u64; 2 * w];
+        let v0 = vb.val_base as usize;
+        masks[v0 / 64] |= 1u64 << (v0 % 64);
+        let mut next = vec![super::super::DEAD; 2 * vb.vocab];
+        next[v0] = 1;
+        let g = Arc::new(Guide::from_raw(
+            "crafted".into(),
+            vb.vocab as u32,
+            w as u32,
+            vec![false, false],
+            masks,
+            next,
+        ));
+        let mut s = GuideState::new(g);
+        let uniform = vec![1.0f32; vb.vocab];
+        assert_eq!(s.choose(&uniform), Some(vb.val_base));
+        s.advance(vb.val_base);
+        assert!(!s.is_rejected());
+        assert_eq!(s.choose(&uniform), None, "all-masked state ends the answer");
+        assert!(s.is_rejected());
+    }
+}

@@ -26,6 +26,9 @@
 //!   from the legacy [`config::MethodSpec`] facade.
 //! * [`pipeline::Pipeline`] — one query end-to-end (assemble → reorder →
 //!   score → select → recompute → decode), driven by a plan.
+//! * [`guide::Guide`] — guided (constrained) decoding: token-class regexes
+//!   compiled NFA→DFA into per-state token masks, served as the plan's
+//!   `decode=` stage.
 //! * [`coordinator::Server`] — threaded request loop with dynamic batching.
 //! * [`bench_harness`] — `repro bench table1..table6 fig2..fig4`.
 //! * [`analysis`] — `pallas-lint`, the in-repo invariant lint pass
@@ -36,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod geometry;
+pub mod guide;
 pub mod kvcache;
 pub mod manifest;
 pub mod pipeline;

@@ -53,11 +53,16 @@ Methods (legacy shorthands): baseline | norecompute | ours[:budget] |
   reorder[:budget] | cacheblend[:budget] | epic[:budget]
 
 Plans (--plan, composable stage grammar; overrides --method):
-  clauses joined by ';' — reorder[=SCORE] | score=SCORE | select=SELECT,
-  or the complete plans 'baseline' / 'norecompute'.
+  clauses joined by ';' — reorder[=SCORE] | score=SCORE | select=SELECT |
+  decode=DECODE, or the complete plans 'baseline' / 'norecompute'.
   SCORE : norm[:layerK][,geom=global|hlhp|hltp|tltp] | deviation | positional
   SELECT: topk:B | epic:B | random:B[,seed=S] | explicit:R+R+...
-  e.g. --plan 'reorder=deviation;score=norm:layer2,geom=global;select=topk:16'";
+  DECODE: regex:PATTERN | json  (guided decoding: the answer is constrained
+          to a token-class pattern over key/val/filler/any classes and
+          k<i>/v<i>/f<i> literals with . | * + ? and (); 'json' is the
+          key.val.val fact shape)
+  e.g. --plan 'reorder=deviation;score=norm:layer2,geom=global;select=topk:16'
+       --plan 'select=topk:8;decode=regex:key.(val|filler)*'";
 
 fn main() {
     if let Err(e) = run() {

@@ -56,6 +56,7 @@ use anyhow::Result;
 
 use crate::config::MethodSpec;
 use crate::geometry::{self, RopeGeometry};
+use crate::guide::{Guide, GuideState};
 use crate::kvcache::{AssembledContext, BufferPool, ChunkKv, ChunkStore};
 use crate::plan::{Explicit, PlanBuilder, PrefillMode, QueryPlan, StageCtx};
 use crate::runtime::exec::{DecodeBatchItem, DecodeOut, ModelSession};
@@ -194,10 +195,21 @@ pub struct DecodeState {
     /// EOS terminates decode (the reference semantics).  Load-generation
     /// harnesses flip this off to guarantee long decodes.
     stop_on_eos: bool,
+    /// Guided decoding: the query's DFA cursor.  Advanced one transition
+    /// per emitted token in `begin_step`; masks the greedy choice in
+    /// `complete_step`.  `None` = free-form decode, byte-for-byte the
+    /// pre-guide behaviour.
+    guide: Option<GuideState>,
 }
 
 impl DecodeState {
-    fn new(kv: ResidentDecodeKv, bucket: usize, first_tok: i32, answer_len: usize) -> DecodeState {
+    fn new(
+        kv: ResidentDecodeKv,
+        bucket: usize,
+        first_tok: i32,
+        answer_len: usize,
+        guide: Option<GuideState>,
+    ) -> DecodeState {
         DecodeState {
             kv,
             bucket,
@@ -207,6 +219,7 @@ impl DecodeState {
             pending: None,
             done: false,
             stop_on_eos: true,
+            guide,
         }
     }
 
@@ -235,6 +248,12 @@ impl DecodeState {
         }
         let token = self.next_tok;
         self.answer.push(token);
+        // One DFA transition per emitted token — at emission, so once the
+        // task retires the cursor has walked the complete answer and
+        // acceptance is a plain state check.
+        if let Some(g) = &mut self.guide {
+            g.advance(token);
+        }
         if self.answer.len() == self.answer_len {
             self.done = true;
             return Phase1::Last { token };
@@ -263,7 +282,21 @@ impl DecodeState {
             .take()
             .ok_or_else(|| anyhow::anyhow!("complete_step without a pending model step"))?;
         self.kv.append(&out.new_k, &out.new_v)?;
-        self.next_tok = out.logits.argmax() as i32;
+        self.next_tok = match &mut self.guide {
+            None => out.logits.argmax() as i32,
+            // One mask lookup per tick: masked greedy over the current DFA
+            // state's allowed set (first-max-wins, same tie-breaking as the
+            // free-form argmax).
+            Some(g) => match g.choose(out.logits.data()) {
+                Some(t) => t,
+                None => {
+                    // Dead/all-masked state: terminate the answer — the
+                    // coordinator counts the rejection; never a panic.
+                    self.done = true;
+                    vocab::EOS
+                }
+            },
+        };
         // Greedy EOS is never emitted; retiring here (instead of on the
         // next begin_step) saves the scheduler a no-op tick.  Identical to
         // the reference: it would exit its loop at the same point.
@@ -415,6 +448,15 @@ impl QueryTask {
     pub fn timing(&self) -> &Timing {
         &self.timing
     }
+
+    /// Guided-decode verdict: `None` for free-form queries; `Some(true)`
+    /// when the emitted answer left the guide's DFA in an accepting state;
+    /// `Some(false)` when it did not (dead-state termination, truncation
+    /// mid-pattern, or a rejected transition).  The coordinator counts
+    /// `Some(false)` retirements as `guide_rejections`.
+    pub fn guide_satisfied(&self) -> Option<bool> {
+        self.state.guide.as_ref().map(|g| g.is_accepting())
+    }
 }
 
 /// What the prep phase hands the decode state machine.
@@ -444,6 +486,11 @@ pub struct PreparedContext {
     selected_positions: Vec<i64>,
     chunk_order: Vec<usize>,
     fingerprint: u64,
+    /// The turn's compiled decode guide, if the plan carried a `decode=`
+    /// stage.  The fingerprint covers the rendered plan (including the
+    /// decode atom), so a hit implies the SAME guide — follow-up turns skip
+    /// the NFA→DFA compile along with the prep stages.
+    guide: Option<Arc<Guide>>,
 }
 
 impl PreparedContext {
@@ -565,7 +612,7 @@ impl Pipeline {
         prompt_body: &[i32],
         plan: &QueryPlan,
     ) -> Result<QueryTask> {
-        let (task, _) = self.begin_plan_inner(chunks, prompt_body, plan, false)?;
+        let (task, _, _) = self.begin_plan_inner(chunks, prompt_body, plan, false)?;
         Ok(task)
     }
 
@@ -579,7 +626,7 @@ impl Pipeline {
         prompt_body: &[i32],
         plan: &QueryPlan,
     ) -> Result<(QueryTask, Option<PreparedContext>)> {
-        let (task, snapshot) = self.begin_plan_inner(chunks, prompt_body, plan, true)?;
+        let (task, snapshot, guide) = self.begin_plan_inner(chunks, prompt_body, plan, true)?;
         let prepared = snapshot.map(|(ctx, bucket)| PreparedContext {
             ctx,
             bucket,
@@ -590,6 +637,7 @@ impl Pipeline {
                 &chunks.iter().map(|c| c.id).collect::<Vec<_>>(),
                 plan,
             ),
+            guide,
         });
         Ok((task, prepared))
     }
@@ -600,27 +648,46 @@ impl Pipeline {
         prompt_body: &[i32],
         plan: &QueryPlan,
         capture: bool,
-    ) -> Result<(QueryTask, Option<(AssembledContext, usize)>)> {
+    ) -> Result<(QueryTask, Option<(AssembledContext, usize)>, Option<Arc<Guide>>)> {
         let t_start = Instant::now();
         let mut timing = Timing::default();
+        // Guided decoding compiles ONCE per prep (NFA→DFA subset
+        // construction), before any model pass; the decode loop only pays a
+        // mask lookup + one DFA transition per tick.  Session turns reuse
+        // the compiled guide through [`PreparedContext`].
+        let guide = match &plan.decode {
+            Some(dp) => {
+                let t0 = Instant::now();
+                let g = Arc::new(dp.compile(&self.vocab)?);
+                timing.record("guide_compile", t0.elapsed().as_secs_f64());
+                Some(g)
+            }
+            None => None,
+        };
         let prep = match plan.prefill {
             PrefillMode::Full => self.prep_baseline(chunks, prompt_body, &mut timing)?,
             PrefillMode::Chunked => {
                 self.prep_staged(chunks, prompt_body, plan, &mut timing, capture)?
             }
         };
-        let first = prep.first_logits.argmax() as i32;
+        let mut gs = guide.as_ref().map(|g| GuideState::new(g.clone()));
+        let first = match &mut gs {
+            None => prep.first_logits.argmax() as i32,
+            // An all-masked start state (empty-language guide) seeds EOS:
+            // the task retires with an empty answer instead of panicking.
+            Some(g) => g.choose(prep.first_logits.data()).unwrap_or(vocab::EOS),
+        };
         let bucket = prep.bucket;
         let snapshot = prep.snapshot.map(|ctx| (ctx, bucket));
         let task = QueryTask {
-            state: DecodeState::new(prep.kv, prep.bucket, first, self.vocab.answer_len),
+            state: DecodeState::new(prep.kv, prep.bucket, first, self.vocab.answer_len, gs),
             timing,
             t_start,
             selected: prep.selected,
             selected_positions: prep.selected_positions,
             chunk_order: prep.chunk_order,
         };
-        Ok((task, snapshot))
+        Ok((task, snapshot, guide))
     }
 
     /// The session fast path: rebuild a parked query from a cached
@@ -658,9 +725,17 @@ impl Pipeline {
         let kv = ResidentDecodeKv::from_context(
             &d, ctx, &score_out.prompt_k, &score_out.prompt_v, &decode_layout.prompt_pos,
         )?;
-        let first = score_out.last_logits.argmax() as i32;
+        // Session reuse includes the guide: the fingerprint covered the
+        // rendered decode atom, so the cached compile is the right automaton
+        // — turn 2+ pays zero guide compiles (a property the conformance
+        // tests assert via the `stage_guide_compile` metric).
+        let mut gs = prepared.guide.as_ref().map(|g| GuideState::new(g.clone()));
+        let first = match &mut gs {
+            None => score_out.last_logits.argmax() as i32,
+            Some(g) => g.choose(score_out.last_logits.data()).unwrap_or(vocab::EOS),
+        };
         Ok(QueryTask {
-            state: DecodeState::new(kv, bucket, first, self.vocab.answer_len),
+            state: DecodeState::new(kv, bucket, first, self.vocab.answer_len, gs),
             timing,
             t_start,
             selected: prepared.selected.clone(),
@@ -1070,7 +1145,7 @@ mod tests {
         }
     }
 
-    fn scripted_state(first: i32, answer_len: usize) -> DecodeState {
+    fn scripted_kv() -> (crate::runtime::resident::ResidentDecodeKv, usize) {
         let d = tiny_dims();
         let x = 4usize;
         let k = TensorF::zeros(&[d.n_layers, x, d.n_heads, d.head_dim]);
@@ -1081,7 +1156,40 @@ mod tests {
             &d, &k, &v, &gpos, &valid, x as i32,
         )
         .unwrap();
-        DecodeState::new(kv, x, first, answer_len)
+        (kv, x)
+    }
+
+    fn scripted_state(first: i32, answer_len: usize) -> DecodeState {
+        let (kv, x) = scripted_kv();
+        DecodeState::new(kv, x, first, answer_len, None)
+    }
+
+    /// A scripted DecodeState whose first token is the guide-masked greedy
+    /// pick over a one-hot logits vector (mirroring `begin_plan_inner`).
+    fn guided_state(pattern: &str, first_winner: i32, answer_len: usize) -> DecodeState {
+        let v = crate::vocab::Vocab::default();
+        let g = Arc::new(crate::guide::Guide::compile(pattern, &v).unwrap());
+        let mut gs = GuideState::new(g);
+        let mut logits = vec![0.0f32; v.vocab];
+        logits[first_winner as usize] = 1.0;
+        let first = gs.choose(&logits).unwrap_or(vocab::EOS);
+        let (kv, x) = scripted_kv();
+        DecodeState::new(kv, x, first, answer_len, Some(gs))
+    }
+
+    fn drive_guided(st: &mut DecodeState, script: &[i32]) -> usize {
+        let mut calls = 0usize;
+        loop {
+            match st.begin_step() {
+                Phase1::Finished | Phase1::Last { .. } => break,
+                Phase1::Model { .. } => {
+                    st.complete_step(&scripted_out(script[calls])).unwrap();
+                    calls += 1;
+                }
+            }
+        }
+        assert!(st.is_finished());
+        calls
     }
 
     fn scripted_out(next: i32) -> DecodeOut {
@@ -1165,6 +1273,65 @@ mod tests {
         }
         assert_eq!(st.answer(), &[10, vocab::EOS, vocab::EOS, 7]);
         assert_eq!(calls, 3, "exhaustive decode runs the full answer budget");
+    }
+
+    // -- guided decode over scripted streams ---------------------------------
+
+    #[test]
+    fn guided_decode_masks_every_greedy_choice() {
+        // Default vocab: keys 16..64, vals 64..112, fillers 112..144.  The
+        // model "wants" a filler first (112) and an off-pattern key next
+        // (20); the key.val.val guide overrides both to the best ALLOWED
+        // token (first-max-wins over all-zero logits → the class base).
+        let mut st = guided_state("key.val.val", 112, 3);
+        let calls = drive_guided(&mut st, &[20, 70]);
+        assert_eq!(st.answer(), &[16, 64, 70], "masked picks: key base, val base, then the model's in-class winner");
+        assert_eq!(calls, 2);
+        let g = st.guide.as_ref().unwrap();
+        assert!(g.is_accepting(), "a fully walked pattern accepts");
+    }
+
+    #[test]
+    fn guided_accepting_state_unmasks_only_eos() {
+        // Single-literal pattern: after emitting k0 the DFA is accepting
+        // with no outgoing edges, so the only unmasked token is EOS — the
+        // scripted model's preference (99) is overridden and decode retires
+        // with the one-token answer.
+        let mut st = guided_state("k0", 99, 3);
+        let calls = drive_guided(&mut st, &[99, 99]);
+        assert_eq!(st.answer(), &[16]);
+        assert_eq!(calls, 1, "EOS retires the task on the first model step");
+        assert!(st.guide.as_ref().unwrap().is_accepting());
+    }
+
+    #[test]
+    fn guided_truncation_leaves_the_guide_unsatisfied() {
+        // Pattern longer than the answer budget: decode stops at 3 tokens
+        // mid-pattern; the cursor is healthy but non-accepting, which the
+        // coordinator surfaces as a guide rejection.
+        let mut st = guided_state("val.val.val.val", 64, 3);
+        drive_guided(&mut st, &[64, 64, 64]);
+        assert_eq!(st.answer(), &[64, 64, 64]);
+        assert!(!st.guide.as_ref().unwrap().is_accepting());
+        assert!(!st.guide.as_ref().unwrap().is_rejected());
+    }
+
+    #[test]
+    fn guided_dead_cursor_terminates_with_eos_not_a_panic() {
+        // Force the choose-returns-None arm: a cursor knocked into the
+        // rejected (dead) state yields no admissible token, so
+        // complete_step terminates the answer with a synthetic EOS.
+        let v = crate::vocab::Vocab::default();
+        let g = Arc::new(crate::guide::Guide::compile("k0.k1", &v).unwrap());
+        let mut gs = GuideState::new(g);
+        gs.advance(99); // off-pattern token → sticky rejection
+        assert!(gs.is_rejected());
+        let (kv, x) = scripted_kv();
+        let mut st = DecodeState::new(kv, x, 16, 4, Some(gs));
+        let calls = drive_guided(&mut st, &[17, 17, 17]);
+        assert_eq!(st.answer(), &[16], "the dead cursor ends the answer after one emission");
+        assert_eq!(calls, 1);
+        assert!(!st.guide.as_ref().unwrap().is_accepting());
     }
 
     #[test]

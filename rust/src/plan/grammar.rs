@@ -9,21 +9,27 @@
 //!                                #   (default: norm:layer2,geom=hltp)
 //! score=<score-atom>             # scoring signal feeding the select stage
 //! select=<select-atom>           # which rows get recomputed
+//! decode=<decode-atom>           # constrained decoding (guided output)
 //! ```
 //!
 //! Score atoms: `norm[:layer<K>][,geom=<global|hlhp|hltp|tltp>]`,
 //! `deviation`, `positional`.  Select atoms: `topk:<budget>`,
 //! `epic:<budget>`, `random:<budget>[,seed=<S>]`,
-//! `explicit:<row>+<row>+...`.
+//! `explicit:<row>+<row>+...`.  Decode atoms: `regex:<pattern>` (the guide
+//! token-class regex language), `json` (the fact-shape preset).
 //!
 //! `parse` ∘ `render` is the identity on rendered plans; `render` emits the
-//! canonical spelling (stages in reorder→score→select order, all defaults
-//! made explicit), so two plans are behaviorally equal iff their renders
-//! are string-equal.
+//! canonical spelling (stages in reorder→score→select→decode order, all
+//! defaults made explicit), so two plans are behaviorally equal iff their
+//! renders are string-equal.
 //!
 //! The [`Registry`] is the extension surface: a stage name maps to a
 //! constructor that parses the atom's options, and everything above it
 //! (grammar, CLI, coordinator, benches) picks up new policies for free.
+//! [`Registry::global`] holds the built-ins; [`Registry::with_policies`]
+//! extends them at runtime so an out-of-tree policy family plugs in through
+//! [`QueryPlan::parse_with`](super::QueryPlan::parse_with) without touching
+//! this module.
 
 use std::sync::OnceLock;
 
@@ -31,9 +37,10 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::DEFAULT_NORM_LAYER;
 use crate::geometry::RopeGeometry;
+use crate::guide::GuidePolicy;
 use crate::util::json::Json;
 
-use super::policy::{DeviationScore, NormScore, PositionalPrior, ScorePolicy};
+use super::policy::{DecodePolicy, DeviationScore, NormScore, PositionalPrior, ScorePolicy};
 use super::select::{EpicSplit, Explicit, RandomSel, SelectPolicy, TopK};
 use super::{PlanBuilder, PrefillMode, QueryPlan, ReorderStage};
 
@@ -48,20 +55,24 @@ pub fn geom_code(g: RopeGeometry) -> &'static str {
     }
 }
 
-type ScoreCtor = fn(&str) -> Result<Box<dyn ScorePolicy>>;
-type SelectCtor = fn(&str) -> Result<Box<dyn SelectPolicy>>;
+/// Constructor of a score policy from its atom options.
+pub type ScoreCtor = fn(&str) -> Result<Box<dyn ScorePolicy>>;
+/// Constructor of a select policy from its atom options.
+pub type SelectCtor = fn(&str) -> Result<Box<dyn SelectPolicy>>;
+/// Constructor of a decode policy from its atom options.
+pub type DecodeCtor = fn(&str) -> Result<Box<dyn DecodePolicy>>;
 
 /// Name → stage-constructor registry for the plan grammar.
 pub struct Registry {
     score: Vec<(&'static str, ScoreCtor)>,
     select: Vec<(&'static str, SelectCtor)>,
+    decode: Vec<(&'static str, DecodeCtor)>,
 }
 
 impl Registry {
-    /// The process-wide registry of built-in policies.
-    pub fn global() -> &'static Registry {
-        static REG: OnceLock<Registry> = OnceLock::new();
-        REG.get_or_init(|| Registry {
+    /// A fresh registry holding exactly the built-in policies.
+    pub fn builtin() -> Registry {
+        Registry {
             score: vec![
                 ("norm", mk_norm as ScoreCtor),
                 ("deviation", mk_deviation as ScoreCtor),
@@ -73,7 +84,37 @@ impl Registry {
                 ("random", mk_random as SelectCtor),
                 ("explicit", mk_explicit as SelectCtor),
             ],
-        })
+            decode: vec![
+                ("regex", mk_regex as DecodeCtor),
+                ("json", mk_json as DecodeCtor),
+            ],
+        }
+    }
+
+    /// The process-wide registry of built-in policies.
+    pub fn global() -> &'static Registry {
+        static REG: OnceLock<Registry> = OnceLock::new();
+        REG.get_or_init(Registry::builtin)
+    }
+
+    /// The built-ins extended with caller-supplied policy families — the
+    /// runtime extension surface.  Lookup is first-match, so a built-in
+    /// name always wins a collision; pick fresh names for extensions.
+    /// Thread the result through [`QueryPlan::parse_with`] /
+    /// [`QueryPlan::from_json_with`](super::QueryPlan::from_json_with) to
+    /// serve the extended grammar.
+    ///
+    /// [`QueryPlan::parse_with`]: super::QueryPlan::parse_with
+    pub fn with_policies(
+        score: &[(&'static str, ScoreCtor)],
+        select: &[(&'static str, SelectCtor)],
+        decode: &[(&'static str, DecodeCtor)],
+    ) -> Registry {
+        let mut r = Registry::builtin();
+        r.score.extend_from_slice(score);
+        r.select.extend_from_slice(select);
+        r.decode.extend_from_slice(decode);
+        r
     }
 
     pub fn score_names(&self) -> Vec<&'static str> {
@@ -82,6 +123,10 @@ impl Registry {
 
     pub fn select_names(&self) -> Vec<&'static str> {
         self.select.iter().map(|(n, _)| *n).collect()
+    }
+
+    pub fn decode_names(&self) -> Vec<&'static str> {
+        self.decode.iter().map(|(n, _)| *n).collect()
     }
 
     /// Build a score policy from an atom like `norm:layer2,geom=global`.
@@ -113,6 +158,23 @@ impl Registry {
                 anyhow!(
                     "unknown select policy '{name}' (known: {})",
                     self.select_names().join(", ")
+                )
+            })?;
+        ctor(opts)
+    }
+
+    /// Build a decode policy from an atom like `regex:val.val` or `json`.
+    pub fn make_decode(&self, atom: &str) -> Result<Box<dyn DecodePolicy>> {
+        let (name, opts) = split_atom(atom);
+        let ctor = self
+            .decode
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, c)| *c)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown decode policy '{name}' (known: {})",
+                    self.decode_names().join(", ")
                 )
             })?;
         ctor(opts)
@@ -218,10 +280,23 @@ fn mk_explicit(opts: &str) -> Result<Box<dyn SelectPolicy>> {
     Ok(Box::new(Explicit { rows: rows? }))
 }
 
+fn mk_regex(opts: &str) -> Result<Box<dyn DecodePolicy>> {
+    if opts.is_empty() {
+        bail!("regex needs a pattern, e.g. regex:key.val.val");
+    }
+    Ok(Box::new(GuidePolicy::regex(opts)?))
+}
+
+fn mk_json(opts: &str) -> Result<Box<dyn DecodePolicy>> {
+    if !opts.is_empty() {
+        bail!("json takes no options, got '{opts}' (it is a fixed shape preset)");
+    }
+    Ok(Box::new(GuidePolicy::json()))
+}
+
 // -- plan string <-> QueryPlan ----------------------------------------------
 
-pub(super) fn parse_plan(s: &str) -> Result<QueryPlan> {
-    let reg = Registry::global();
+pub(super) fn parse_plan(s: &str, reg: &Registry) -> Result<QueryPlan> {
     let mut builder = PlanBuilder::chunked();
     let mut full = false;
     let mut bare_chunked = false;
@@ -246,10 +321,12 @@ pub(super) fn parse_plan(s: &str) -> Result<QueryPlan> {
                     builder = builder.score(reg.make_score(atom)?);
                 } else if let Some(atom) = clause.strip_prefix("select=") {
                     builder = builder.select(reg.make_select(atom)?);
+                } else if let Some(atom) = clause.strip_prefix("decode=") {
+                    builder = builder.decode(reg.make_decode(atom)?);
                 } else {
                     bail!(
                         "unknown plan clause '{clause}' (expected baseline, norecompute, \
-                         reorder[=...], score=..., or select=...)"
+                         reorder[=...], score=..., select=..., or decode=...)"
                     );
                 }
             }
@@ -284,6 +361,9 @@ pub(super) fn render_plan(plan: &QueryPlan) -> String {
             if let Some(s) = &plan.select {
                 parts.push(format!("select={}", s.render()));
             }
+            if let Some(d) = &plan.decode {
+                parts.push(format!("decode={}", d.render()));
+            }
             if parts.is_empty() {
                 "norecompute".into()
             } else {
@@ -315,17 +395,23 @@ pub(super) fn plan_to_json(plan: &QueryPlan) -> Json {
     if let Some(s) = &plan.select {
         entries.push(("select", Json::from(s.render())));
     }
+    if let Some(d) = &plan.decode {
+        entries.push(("decode", Json::from(d.render())));
+    }
     Json::obj(entries)
 }
 
-pub(super) fn plan_from_json(j: &Json) -> Result<QueryPlan> {
-    let reg = Registry::global();
+pub(super) fn plan_from_json(j: &Json, reg: &Registry) -> Result<QueryPlan> {
     // Unknown keys are rejected, not dropped: a typo'd stage key must be an
     // error, never a silently weaker plan.
     for key in j.as_obj()?.keys() {
-        if !matches!(key.as_str(), "prefill" | "name" | "reorder" | "score" | "select") {
+        if !matches!(
+            key.as_str(),
+            "prefill" | "name" | "reorder" | "score" | "select" | "decode"
+        ) {
             bail!(
-                "unknown plan key '{key}' (expected prefill, name, reorder, score, select)"
+                "unknown plan key '{key}' (expected prefill, name, reorder, score, \
+                 select, decode)"
             );
         }
     }
@@ -347,6 +433,9 @@ pub(super) fn plan_from_json(j: &Json) -> Result<QueryPlan> {
     }
     if let Some(s) = j.opt("select") {
         builder = builder.select(reg.make_select(s.as_str()?)?);
+    }
+    if let Some(d) = j.opt("decode") {
+        builder = builder.decode(reg.make_decode(d.as_str()?)?);
     }
     builder.build()
 }

@@ -40,10 +40,10 @@ use crate::geometry::RopeGeometry;
 use crate::manifest::ModelDims;
 use crate::util::json::Json;
 
-pub use grammar::{geom_code, Registry};
+pub use grammar::{geom_code, DecodeCtor, Registry, ScoreCtor, SelectCtor};
 pub use policy::{
-    ByScore, DeviationScore, NormScore, PositionalPrior, ReorderPolicy, ScorePolicy,
-    StageCtx,
+    ByScore, DecodePolicy, DeviationScore, NormScore, PositionalPrior, ReorderPolicy,
+    ScorePolicy, StageCtx,
 };
 pub use select::{EpicSplit, Explicit, RandomSel, SelectPolicy, TopK};
 
@@ -98,12 +98,21 @@ pub struct QueryPlan {
     pub reorder: Option<ReorderStage>,
     pub score: Option<Box<dyn ScorePolicy>>,
     pub select: Option<Box<dyn SelectPolicy>>,
+    /// Constrained-decoding stage: compiled once at prep into a guide DFA
+    /// whose per-state masks gate every emitted token.
+    pub decode: Option<Box<dyn DecodePolicy>>,
 }
 
 impl QueryPlan {
     /// Parse a plan grammar string (see [`grammar`] for the syntax).
     pub fn parse(s: &str) -> Result<QueryPlan> {
-        grammar::parse_plan(s)
+        grammar::parse_plan(s, Registry::global())
+    }
+
+    /// Parse against an extended registry (see [`Registry::with_policies`])
+    /// — the entry point for runtime-registered policy families.
+    pub fn parse_with(s: &str, reg: &Registry) -> Result<QueryPlan> {
+        grammar::parse_plan(s, reg)
     }
 
     /// Parse either a legacy method shorthand (`ours:16`, `cacheblend`, ...)
@@ -134,7 +143,13 @@ impl QueryPlan {
     }
 
     pub fn from_json(j: &Json) -> Result<QueryPlan> {
-        grammar::plan_from_json(j)
+        grammar::plan_from_json(j, Registry::global())
+    }
+
+    /// JSON parse against an extended registry (the runtime-extension
+    /// counterpart of [`QueryPlan::parse_with`]).
+    pub fn from_json_with(j: &Json, reg: &Registry) -> Result<QueryPlan> {
+        grammar::plan_from_json(j, reg)
     }
 
     /// Names of the policy stages this plan will run, in driver order.
@@ -149,6 +164,9 @@ impl QueryPlan {
         if self.select.is_some() {
             out.push("select");
         }
+        if self.decode.is_some() {
+            out.push("decode");
+        }
         out
     }
 
@@ -157,7 +175,11 @@ impl QueryPlan {
     /// plan admits no stages).  [`PlanBuilder::build`] runs this.
     pub fn check(&self) -> Result<()> {
         if self.prefill == PrefillMode::Full {
-            if self.reorder.is_some() || self.score.is_some() || self.select.is_some() {
+            if self.reorder.is_some()
+                || self.score.is_some()
+                || self.select.is_some()
+                || self.decode.is_some()
+            {
                 bail!("a full-prefill (baseline) plan admits no policy stages");
             }
             return Ok(());
@@ -196,6 +218,9 @@ impl QueryPlan {
         if let Some(s) = &self.select {
             s.validate_for(max_bucket)?;
         }
+        if let Some(d) = &self.decode {
+            d.validate_for(dims)?;
+        }
         Ok(())
     }
 }
@@ -222,6 +247,7 @@ pub struct PlanBuilder {
     reorder: Option<ReorderStage>,
     score: Option<Box<dyn ScorePolicy>>,
     select: Option<Box<dyn SelectPolicy>>,
+    decode: Option<Box<dyn DecodePolicy>>,
     errors: Vec<String>,
 }
 
@@ -233,6 +259,7 @@ impl PlanBuilder {
             reorder: None,
             score: None,
             select: None,
+            decode: None,
             errors: Vec::new(),
         }
     }
@@ -275,6 +302,14 @@ impl PlanBuilder {
         self
     }
 
+    pub fn decode(mut self, policy: Box<dyn DecodePolicy>) -> PlanBuilder {
+        if self.decode.is_some() {
+            self.errors.push("duplicate decode stage".into());
+        }
+        self.decode = Some(policy);
+        self
+    }
+
     pub fn build(self) -> Result<QueryPlan> {
         if let Some(e) = self.errors.first() {
             bail!("invalid plan: {e}");
@@ -285,6 +320,7 @@ impl PlanBuilder {
             reorder: self.reorder,
             score: self.score,
             select: self.select,
+            decode: self.decode,
         };
         plan.check()?;
         Ok(plan)
@@ -397,6 +433,11 @@ mod tests {
             "reorder=deviation;select=epic:8",
             "score=positional;select=topk:4",
             "reorder=norm:layer1,geom=tltp",
+            "decode=regex:val.val.val",
+            "decode=json",
+            "select=epic:8;decode=regex:key.(val|filler)*",
+            "reorder=deviation;score=norm:layer2,geom=global;select=topk:16;decode=json",
+            "decode=regex:v3|k0.any?",
         ] {
             let p = QueryPlan::parse(s).unwrap();
             assert_eq!(p.render(), s, "canonical strings must round-trip");
@@ -466,6 +507,15 @@ mod tests {
         assert!(QueryPlan::parse("score=norm:layerX;select=topk:8").is_err());
         assert!(QueryPlan::parse("score=norm:geom=nope;select=topk:8").is_err());
         assert!(QueryPlan::parse("select=random:4,tacos=1").is_err());
+        // decode: complete plans admit no decode stage either
+        assert!(QueryPlan::parse("baseline;decode=json").is_err());
+        assert!(QueryPlan::parse("norecompute;decode=json").is_err());
+        // duplicate decode, unknown decode family, bad patterns
+        assert!(QueryPlan::parse("decode=json;decode=regex:val").is_err());
+        assert!(QueryPlan::parse("decode=cfg:val").is_err());
+        assert!(QueryPlan::parse("decode=regex:").is_err());
+        assert!(QueryPlan::parse("decode=regex:val..val").is_err());
+        assert!(QueryPlan::parse("decode=json:extra").is_err());
     }
 
     #[test]
@@ -495,6 +545,8 @@ mod tests {
             "norecompute",
             "reorder=deviation;score=norm:layer1,geom=hlhp;select=topk:8",
             "select=random:8,seed=7",
+            "decode=json",
+            "select=epic:8;decode=regex:key.val.val",
         ] {
             let p = QueryPlan::parse(s).unwrap();
             let j = p.to_json();
@@ -555,6 +607,12 @@ mod tests {
         assert_eq!(p.stage_names(), vec!["reorder", "score", "select"]);
         assert_eq!(QueryPlan::parse("select=epic:8").unwrap().stage_names(), vec!["select"]);
         assert!(MethodSpec::Baseline.to_plan().stage_names().is_empty());
+        let p = QueryPlan::parse("select=epic:8;decode=json").unwrap();
+        assert_eq!(p.stage_names(), vec!["select", "decode"]);
+        assert_eq!(
+            QueryPlan::parse("decode=regex:val").unwrap().stage_names(),
+            vec!["decode"]
+        );
     }
 
     #[test]
@@ -566,6 +624,49 @@ mod tests {
         for n in ["topk", "epic", "random", "explicit"] {
             assert!(reg.select_names().contains(&n), "missing select policy {n}");
         }
+        for n in ["regex", "json"] {
+            assert!(reg.decode_names().contains(&n), "missing decode policy {n}");
+        }
+    }
+
+    #[test]
+    fn with_policies_extends_without_touching_builtins() {
+        // A custom decode family, registered at runtime the way an
+        // out-of-tree crate would do it.
+        #[derive(Clone)]
+        struct Fixed;
+        impl DecodePolicy for Fixed {
+            fn name(&self) -> &'static str {
+                "fixedvals"
+            }
+            fn render(&self) -> String {
+                "fixedvals".into()
+            }
+            fn compile(&self, vocab: &crate::vocab::Vocab) -> Result<crate::guide::Guide> {
+                crate::guide::Guide::compile("val.val.val", vocab)
+            }
+            fn clone_box(&self) -> Box<dyn DecodePolicy> {
+                Box::new(self.clone())
+            }
+        }
+        fn mk_fixed(opts: &str) -> Result<Box<dyn DecodePolicy>> {
+            if !opts.is_empty() {
+                bail!("fixedvals takes no options");
+            }
+            Ok(Box::new(Fixed))
+        }
+        let reg = Registry::with_policies(&[], &[], &[("fixedvals", mk_fixed)]);
+        // The extension parses through parse_with...
+        let p = QueryPlan::parse_with("decode=fixedvals", &reg).unwrap();
+        assert_eq!(p.render(), "decode=fixedvals");
+        // ...round-trips through the JSON form with the same registry...
+        let back = QueryPlan::from_json_with(&p.to_json(), &reg).unwrap();
+        assert_eq!(back, p);
+        // ...is invisible to the sealed global registry...
+        assert!(QueryPlan::parse("decode=fixedvals").is_err());
+        // ...and built-ins still resolve through the extended registry.
+        assert!(QueryPlan::parse_with("decode=json", &reg).is_ok());
+        assert!(reg.decode_names().contains(&"fixedvals"));
     }
 
     #[test]

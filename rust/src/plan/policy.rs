@@ -52,6 +52,35 @@ impl Clone for Box<dyn ScorePolicy> {
     }
 }
 
+/// A constrained-decode policy: compiles — once, at prep time — to a
+/// [`Guide`](crate::guide::Guide), the DFA token-mask automaton the decode
+/// loop consults per emitted token.  Guides are the interchange currency:
+/// any policy family, in-tree or registered at runtime through
+/// [`Registry::with_policies`](super::Registry::with_policies), produces
+/// one, and the pipeline/scheduler never learn which front-end built it.
+pub trait DecodePolicy: Send + Sync {
+    /// Registry name of this policy family (e.g. `"regex"`).
+    fn name(&self) -> &'static str;
+    /// Canonical grammar atom, e.g. `regex:key.val.val`; parsing the
+    /// rendered atom reconstructs an identical policy.
+    fn render(&self) -> String;
+    /// Compile the mask automaton against the serving vocab.  Called once
+    /// per query prep (and reused across session turns), never per tick.
+    fn compile(&self, vocab: &crate::vocab::Vocab) -> Result<crate::guide::Guide>;
+    /// Optional CLI-time validation against the loaded model.
+    fn validate_for(&self, dims: &crate::manifest::ModelDims) -> Result<()> {
+        let _ = dims;
+        Ok(())
+    }
+    fn clone_box(&self) -> Box<dyn DecodePolicy>;
+}
+
+impl Clone for Box<dyn DecodePolicy> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
 /// A chunk-reorder rule over stage-1 scores (the back half of §4.3).
 pub trait ReorderPolicy: Send + Sync {
     fn name(&self) -> &'static str;

@@ -95,6 +95,31 @@ impl Vocab {
         self.filler_base + (i % self.num_filler) as i32
     }
 
+    /// `u64` words needed for a per-state token bitmask over this vocab
+    /// (⌈vocab/64⌉ — 3 for the default 144-token layout).  The guide
+    /// subsystem sizes every DFA state's mask with this.
+    pub fn mask_words(&self) -> usize {
+        self.vocab.div_ceil(64)
+    }
+
+    /// All key tokens, in id order.
+    pub fn keys(&self) -> impl Iterator<Item = i32> {
+        let base = self.key_base;
+        (0..self.num_keys as i32).map(move |i| base + i)
+    }
+
+    /// All value tokens, in id order.
+    pub fn vals(&self) -> impl Iterator<Item = i32> {
+        let base = self.val_base;
+        (0..self.num_vals as i32).map(move |i| base + i)
+    }
+
+    /// All filler tokens, in id order.
+    pub fn fillers(&self) -> impl Iterator<Item = i32> {
+        let base = self.filler_base;
+        (0..self.num_filler as i32).map(move |i| base + i)
+    }
+
     pub fn is_value(&self, t: i32) -> bool {
         t >= self.val_base && t < self.val_base + self.num_vals as i32
     }
@@ -214,6 +239,37 @@ mod tests {
             v.pad_answer(&[v.val(1), v.val(2)]),
             vec![v.val(1), v.val(2), EOS]
         );
+    }
+
+    #[test]
+    fn mask_words_covers_the_vocab() {
+        let v = Vocab::default();
+        assert_eq!(v.mask_words(), 3);
+        let tight = Vocab { vocab: 128, ..Vocab::default() };
+        assert_eq!(tight.mask_words(), 2);
+        let over = Vocab { vocab: 129, ..Vocab::default() };
+        assert_eq!(over.mask_words(), 3);
+    }
+
+    #[test]
+    fn class_iterators_cover_exact_ranges() {
+        let v = Vocab::default();
+        let keys: Vec<i32> = v.keys().collect();
+        let vals: Vec<i32> = v.vals().collect();
+        let fillers: Vec<i32> = v.fillers().collect();
+        assert_eq!(keys.len(), v.num_keys);
+        assert_eq!(vals.len(), v.num_vals);
+        assert_eq!(fillers.len(), v.num_filler);
+        assert!(keys.iter().all(|&t| v.is_key(t)));
+        assert!(vals.iter().all(|&t| v.is_value(t)));
+        assert!(fillers.iter().all(|&t| v.is_filler(t)));
+        assert_eq!(keys.first().copied(), Some(v.key_base));
+        assert_eq!(keys.last().copied(), Some(v.key_base + v.num_keys as i32 - 1));
+        assert_eq!(fillers.last().copied(), Some(v.vocab as i32 - 1));
+        // Every class token is in-vocab and none is a special.
+        for t in keys.iter().chain(&vals).chain(&fillers) {
+            assert!(*t >= v.key_base && (*t as usize) < v.vocab, "token {t} out of bounds");
+        }
     }
 
     #[test]

@@ -1,0 +1,338 @@
+//! Guided-decoding conformance, artifact-free (stub runtime).
+//!
+//! The `decode=` plan stage must be (a) CORRECT — every served answer of a
+//! guided query matches its pattern, with the guide compiled exactly once
+//! per prep and reused across session turns — and (b) INVISIBLE to the rest
+//! of the stack: a guided query served through the interleaving scheduler,
+//! alongside free-form traffic, is token-for-token identical to
+//! `Pipeline::answer_plan` run locally, and a guide that can no longer
+//! admit any token ends the answer instead of wedging or panicking the
+//! worker.  The DFA the serving path consults is pinned to the NFA
+//! simulation semantics by a randomized determinization property, and the
+//! `IFG1` wire format round-trips the compiled automaton bit-for-bit.
+//!
+//! Each test prints a `guide-test: <name> ok` marker; CI tallies them into
+//! the job summary so a silently-skipped guide suite is visible.
+
+use std::sync::Arc;
+
+use infoflow_kv::coordinator::{Server, ServerConfig};
+use infoflow_kv::geometry::RopeGeometry;
+use infoflow_kv::guide::{Guide, GuideState, Nfa};
+use infoflow_kv::kvcache::ChunkStore;
+use infoflow_kv::pipeline::Pipeline;
+use infoflow_kv::plan::{geom_code, QueryPlan};
+use infoflow_kv::runtime::exec::ModelSession;
+use infoflow_kv::runtime::Runtime;
+use infoflow_kv::util::rng::Rng;
+use infoflow_kv::vocab::Vocab;
+use infoflow_kv::workload::EpisodeGen;
+
+const STUB_SEED: u64 = 2603;
+
+fn stub_pipeline(rt: &Arc<Runtime>) -> Pipeline {
+    Pipeline::new(ModelSession::new(rt.clone(), "stub").unwrap()).unwrap()
+}
+
+/// The guided grid: per geometry, three guided plans (two full-stage, one
+/// decode-only) plus their free-form companion.  Returns (plan string,
+/// guide pattern or None).
+fn grid_plans(geometry: RopeGeometry) -> Vec<(String, Option<&'static str>)> {
+    let g = geom_code(geometry);
+    vec![
+        (
+            format!("score=norm:layer2,geom={g};select=topk:8;decode=regex:val.val.val"),
+            Some("val.val.val"),
+        ),
+        (
+            format!("score=norm:layer2,geom={g};select=topk:8;decode=json"),
+            Some(infoflow_kv::guide::JSON_SHAPE),
+        ),
+        ("decode=regex:(key|val)*".to_string(), Some("(key|val)*")),
+        (format!("score=norm:layer2,geom={g};select=topk:8"), None),
+    ]
+}
+
+#[test]
+fn guided_grid_is_bit_identical_and_compiles_once_per_query() {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let reference = stub_pipeline(&rt);
+    let vocab = reference.vocab.clone();
+    let genr = EpisodeGen::new(vocab.clone(), rt.manifest.model.chunk);
+    // ONE worker, wide interleave: all 16 grid queries decode concurrently,
+    // guided cursors interleaved with free-form argmax through the same
+    // scheduler ticks — the hardest case for bit-equality.
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig { max_interleave: 32, ..ServerConfig::default() },
+    );
+
+    struct Case {
+        label: String,
+        pattern: Option<&'static str>,
+        expect: Vec<i32>,
+        tokens: std::sync::mpsc::Receiver<i32>,
+        resp: std::sync::mpsc::Receiver<infoflow_kv::coordinator::Response>,
+    }
+    let mut cases: Vec<Case> = Vec::new();
+    let mut n_guided = 0u64;
+    for (gi, geometry) in RopeGeometry::ALL.into_iter().enumerate() {
+        for (plan_str, pattern) in grid_plans(geometry) {
+            let mut rng = Rng::new(2600 + gi as u64);
+            let e = genr.onehop(&mut rng, 3);
+            let plan = QueryPlan::parse(&plan_str).unwrap();
+            n_guided += u64::from(pattern.is_some());
+            // Local reference on a fresh store: the ground truth answer.
+            let store = ChunkStore::new(1 << 30);
+            let (chunks, _) = reference.prepare_chunks(&store, &e.chunks).unwrap();
+            let expect = reference.answer_plan(&chunks, &e.prompt, &plan).unwrap();
+            let (tokens, resp) = server.query_plan_stream(e, plan).unwrap();
+            cases.push(Case {
+                label: format!("geom={} plan='{plan_str}'", geometry.name()),
+                pattern,
+                expect: expect.answer,
+                tokens,
+                resp,
+            });
+        }
+    }
+    for c in cases {
+        let resp = c.resp.recv().unwrap_or_else(|_| panic!("{}: dropped", c.label));
+        assert_eq!(resp.answer, c.expect, "{}: served != local answer_plan", c.label);
+        let streamed: Vec<i32> = c.tokens.iter().collect();
+        assert_eq!(streamed, c.expect, "{}: streamed tokens != final answer", c.label);
+        if let Some(p) = c.pattern {
+            let g = Guide::compile(p, &vocab).unwrap();
+            assert!(
+                g.accepts(&resp.answer),
+                "{}: answer {:?} does not match its guide",
+                c.label,
+                resp.answer
+            );
+            // A guided query's stage breakdown carries the one-off compile.
+            assert!(
+                resp.stages.iter().any(|(name, _)| *name == "guide_compile"),
+                "{}: guided prep must record guide_compile, got {:?}",
+                c.label,
+                resp.stages
+            );
+        }
+        println!("guide-test: guided_grid {} tokens={} ok", c.label, streamed.len());
+    }
+    // Compile-once: the guide is built at prep, never per tick — one
+    // `stage_guide_compile` observation per GUIDED query, while decode
+    // ticked far more often than that.
+    let m = server.metrics();
+    assert_eq!(
+        m.observations("stage_guide_compile"),
+        n_guided,
+        "exactly one guide compile per guided query"
+    );
+    assert_eq!(m.counter("guided_queries"), n_guided);
+    assert_eq!(m.counter("guide_rejections"), 0, "grid guides all fit the answer budget");
+    assert!(
+        m.counter("decode_ticks") > n_guided,
+        "per-tick work must not include compilation"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn determinization_agrees_with_nfa_simulation() {
+    let v = Vocab::default();
+    let patterns = [
+        "key.val.val",
+        "(key|val)*",
+        "key.(val|filler)*",
+        "v3|k0.any?",
+        "filler*.key.val+",
+        "(k0.v1)|(k1.v2.v2)",
+        "any.any.any",
+    ];
+    let mut rng = Rng::new(0x61D3);
+    // Alphabet: in-class tokens plus specials/out-of-range, so the property
+    // covers both admitted and never-admitted symbols.
+    let alphabet: Vec<i32> = (0..v.vocab as i32).collect();
+    let mut checked = 0u64;
+    for p in patterns {
+        let nfa = Nfa::compile(p, &v).unwrap();
+        let dfa = Guide::compile(p, &v).unwrap();
+        for _ in 0..300 {
+            let len = rng.below(6);
+            let s: Vec<i32> =
+                (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+            assert_eq!(
+                dfa.accepts(&s),
+                nfa.accepts(&s),
+                "pattern '{p}': DFA and NFA disagree on {s:?}"
+            );
+            checked += 1;
+        }
+        // The empty string and a guaranteed-accepted walk are always in the
+        // sample (random strings rarely hit long patterns).
+        assert_eq!(dfa.accepts(&[]), nfa.accepts(&[]), "pattern '{p}': empty string");
+    }
+    println!("guide-test: determinization strings={checked} ok");
+}
+
+#[test]
+fn ifg1_roundtrip_preserves_the_serving_automaton() {
+    let v = Vocab::default();
+    for p in ["key.val.val", "(key|val)*", "v3|k0.any?", "filler+.k7"] {
+        let g = Guide::compile(p, &v).unwrap();
+        let bytes = g.to_bytes();
+        assert_eq!(&bytes[..4], b"IFG1");
+        let back = Guide::from_bytes(&bytes).unwrap();
+        assert_eq!(back, g, "pattern '{p}': deserialized guide differs");
+        // The deserialized automaton SERVES identically: walk both cursors
+        // over the same uniform logits and compare every choice.
+        let mut a = GuideState::new(Arc::new(g));
+        let mut b = GuideState::new(Arc::new(back));
+        let uniform = vec![1.0f32; v.vocab];
+        for step in 0..8 {
+            let ta = a.choose(&uniform);
+            let tb = b.choose(&uniform);
+            assert_eq!(ta, tb, "pattern '{p}' step {step}: choices diverged");
+            match ta {
+                Some(t) if t != infoflow_kv::vocab::EOS => {
+                    a.advance(t);
+                    b.advance(t);
+                }
+                _ => break,
+            }
+            assert_eq!(a.is_accepting(), b.is_accepting(), "pattern '{p}' step {step}");
+        }
+        // Corruption fails loudly, never a panic.
+        let mut bad = g.to_bytes();
+        bad[0] ^= 0xFF;
+        assert!(Guide::from_bytes(&bad).is_err(), "pattern '{p}': bad magic accepted");
+        assert!(
+            Guide::from_bytes(&g.to_bytes()[..10]).is_err(),
+            "pattern '{p}': truncation accepted"
+        );
+    }
+    println!("guide-test: ifg1_roundtrip ok");
+}
+
+#[test]
+fn dead_or_truncated_guides_terminate_and_count_rejections() {
+    // Unit half: a hand-crafted IFG1 blob with a GENUINE dead state (non-
+    // accepting, all-masked, no edges) — unreachable through Thompson
+    // construction, exactly what a hostile/buggy external guide could ship.
+    let v = Vocab::default();
+    let n_words = v.mask_words() as u32;
+    let pattern = b"crafted";
+    let mut blob: Vec<u8> = Vec::new();
+    blob.extend_from_slice(b"IFG1");
+    blob.extend_from_slice(&(v.vocab as u32).to_le_bytes());
+    blob.extend_from_slice(&n_words.to_le_bytes());
+    blob.extend_from_slice(&2u32.to_le_bytes()); // n_states
+    blob.extend_from_slice(&(pattern.len() as u32).to_le_bytes());
+    blob.extend_from_slice(pattern);
+    // State 0: admits exactly val0, edge to state 1.
+    blob.push(0);
+    let val0 = 64usize;
+    for w in 0..n_words as usize {
+        let mut word = 0u64;
+        if val0 / 64 == w {
+            word |= 1u64 << (val0 % 64);
+        }
+        blob.extend_from_slice(&word.to_le_bytes());
+    }
+    for t in 0..v.vocab {
+        let row = if t == val0 { 1u32 } else { u32::MAX };
+        blob.extend_from_slice(&row.to_le_bytes());
+    }
+    // State 1: the dead state — nothing admitted, nowhere to go.
+    blob.push(0);
+    for _ in 0..n_words {
+        blob.extend_from_slice(&0u64.to_le_bytes());
+    }
+    for _ in 0..v.vocab {
+        blob.extend_from_slice(&u32::MAX.to_le_bytes());
+    }
+    let g = Guide::from_bytes(&blob).expect("crafted blob must parse");
+    let mut s = GuideState::new(Arc::new(g));
+    let uniform = vec![1.0f32; v.vocab];
+    assert_eq!(s.choose(&uniform), Some(val0 as i32));
+    s.advance(val0 as i32);
+    assert_eq!(s.choose(&uniform), None, "the dead state must yield no token");
+    assert!(s.is_rejected());
+    assert!(!s.is_accepting());
+
+    // Serving half: a pattern LONGER than the answer budget (answer_len 3 <
+    // four vals) retires mid-pattern — non-accepting, counted, and the
+    // worker stays healthy for the next request.
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let genr = EpisodeGen::new(stub_pipeline(&rt).vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let mut rng = Rng::new(2700);
+    let e = genr.onehop(&mut rng, 2);
+    let plan = QueryPlan::parse("select=topk:8;decode=regex:val.val.val.val").unwrap();
+    let resp = server.query_plan(e.clone(), plan).unwrap();
+    assert!(!resp.answer.is_empty(), "truncation still serves the walked prefix");
+    assert_eq!(server.metrics().counter("guide_rejections"), 1);
+    assert_eq!(server.metrics().counter("requests_ok"), 1, "a rejection is NOT a failure");
+    // The worker survives: an unguided follow-up serves normally.
+    let resp2 = server.query_plan(e, QueryPlan::parse("select=topk:8").unwrap()).unwrap();
+    assert!(!resp2.answer.is_empty());
+    assert_eq!(server.metrics().counter("guide_rejections"), 1);
+    server.shutdown();
+    println!("guide-test: dead_state rejections_counted ok");
+}
+
+#[test]
+fn guided_session_turn_two_reuses_the_compiled_guide() {
+    let rt = Arc::new(Runtime::stub(STUB_SEED));
+    let reference = stub_pipeline(&rt);
+    let genr = EpisodeGen::new(reference.vocab.clone(), rt.manifest.model.chunk);
+    let server = Server::spawn_pool(
+        vec![stub_pipeline(&rt)],
+        ChunkStore::new(1 << 30),
+        ServerConfig::default(),
+    );
+    let mut rng = Rng::new(2800);
+    let e = genr.onehop(&mut rng, 3);
+    let plan =
+        QueryPlan::parse("score=norm:layer2,geom=global;select=topk:8;decode=json").unwrap();
+    // Cold ground truth on a fresh local store.
+    let store = ChunkStore::new(1 << 30);
+    let (chunks, _) = reference.prepare_chunks(&store, &e.chunks).unwrap();
+    let expect = reference.answer_plan(&chunks, &e.prompt, &plan).unwrap();
+
+    let sid = server.open_session();
+    let turn1 = server.query_plan_in(sid, e.clone(), plan.clone()).unwrap();
+    assert_eq!(turn1.answer, expect.answer, "turn 1 != cold answer_plan");
+    assert!(
+        turn1.stages.iter().any(|(name, _)| *name == "guide_compile"),
+        "turn 1 compiles the guide, got {:?}",
+        turn1.stages
+    );
+    // Same retrieval, same plan (the fingerprint covers the decode atom):
+    // turn 2 reuses the prepared context AND its compiled guide — the
+    // prompt pass and decode are the only work left.
+    let turn2 = server.query_plan_in(sid, e, plan).unwrap();
+    assert_eq!(turn2.answer, expect.answer, "turn 2 (prep-skipped) != cold answer_plan");
+    assert!(
+        turn2.stages.iter().all(|(name, _)| matches!(*name, "prompt" | "decode")),
+        "turn 2 must do zero prep work — guide compile included — got {:?}",
+        turn2.stages
+    );
+    let m = server.metrics();
+    assert_eq!(m.counter("session_prep_skipped"), 1);
+    assert_eq!(
+        m.observations("stage_guide_compile"),
+        1,
+        "two guided turns, ONE compile"
+    );
+    assert_eq!(m.counter("guided_queries"), 2);
+    assert_eq!(m.counter("guide_rejections"), 0);
+    assert!(server.close_session(sid));
+    server.shutdown();
+    println!("guide-test: guided_session turn2_reuse ok");
+}

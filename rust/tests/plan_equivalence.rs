@@ -189,6 +189,20 @@ fn grammar_roundtrip_property() {
                 clauses.push(format!("select=explicit:{}", rows.join("+")));
             }
         }
+        // Optionally a guided-decode stage: any chunked plan composes with
+        // decode=, and the canonical render keeps the pattern verbatim.
+        let decodes = [
+            "decode=json",
+            "decode=regex:val.val",
+            "decode=regex:key.(val|filler)*",
+            "decode=regex:v3|k0.any?",
+            "decode=regex:(key|val)*",
+            "decode=regex:f0.f1.f2",
+        ];
+        let guided = rng.chance(0.5);
+        if guided {
+            clauses.push(decodes[rng.below(decodes.len())].to_string());
+        }
         let s = clauses.join(";");
         let plan = QueryPlan::parse(&s).expect(&s);
         let rendered = plan.render();
@@ -201,6 +215,17 @@ fn grammar_roundtrip_property() {
         assert_eq!(reparsed, plan, "round-tripped plan must be equal (input '{s}')");
         // the JSON form is equivalent to the grammar form
         assert_eq!(QueryPlan::from_json(&plan.to_json()).unwrap(), plan);
+        // Unguided plans must render EXACTLY as they did before the decode
+        // stage existed: no decode clause, no reordering of the others.
+        if guided {
+            assert!(rendered.contains("decode="), "guided plan lost its decode clause ('{s}')");
+        } else {
+            assert!(
+                !rendered.contains("decode"),
+                "unguided plan '{s}' rendered a decode clause: '{rendered}'"
+            );
+            assert_eq!(rendered, s, "unguided render must be byte-identical to its input");
+        }
     }
 }
 
