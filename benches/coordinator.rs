@@ -6,7 +6,7 @@ use std::time::Instant;
 
 use infoflow_kv::coordinator::batcher::{Batcher, BatcherConfig};
 use infoflow_kv::geometry::{self, RopeGeometry};
-use infoflow_kv::kvcache::{AssembledContext, ChunkKv, ChunkStore};
+use infoflow_kv::kvcache::{AssembledContext, ChunkKv, ChunkStore, KeyDomain};
 use infoflow_kv::manifest::ModelDims;
 use infoflow_kv::selection;
 use infoflow_kv::tensor::TensorF;
@@ -29,6 +29,7 @@ fn mk_chunk(rng: &mut Rng, id: u64, d: &ModelDims) -> std::sync::Arc<ChunkKv> {
         tokens: (0..d.chunk).map(|_| 16 + rng.below(120) as i32).collect(),
         k: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
         v: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
+        key_domain: KeyDomain::Unrotated,
     })
 }
 
@@ -91,6 +92,7 @@ fn main() {
                 tokens: vec![1; 64],
                 k: TensorF::zeros(&[4, 64, 4, 16]),
                 v: TensorF::zeros(&[4, 64, 4, 16]),
+                key_domain: KeyDomain::Unrotated,
             });
             let _ = store.get(r.below(i as usize + 1) as u64);
         }
@@ -112,6 +114,7 @@ fn main() {
                         tokens: vec![1; 64],
                         k: TensorF::zeros(&[4, 64, 4, 16]),
                         v: TensorF::zeros(&[4, 64, 4, 16]),
+                        key_domain: KeyDomain::Unrotated,
                     });
                     let _ = store.get(r.below(256) as u64);
                 }
@@ -152,6 +155,7 @@ fn worker_scaling() {
             tokens: c.tokens.clone(),
             k: c.k.clone(),
             v: c.v.clone(),
+            key_domain: c.key_domain,
         });
     }
 

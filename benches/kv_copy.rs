@@ -1,29 +1,49 @@
 //! Copy-count bench for the assemble-once, pooled context-buffer path
 //! (pure host — no model artifacts needed).
 //!
-//! Measures one simulated query's buffer work under two regimes and prints
-//! the `kvcache::counters` deltas alongside wall time:
+//! Three sections, each with `kvcache::counters` deltas alongside wall time:
 //!
 //! * `legacy`: assemble → reassemble after reorder → host DecodeBuffer →
 //!   whole-buffer literal conversion per decode step (the pre-refactor
 //!   shape: 3 full-context copies + T-sized uploads every token).
-//! * `pooled`: pool checkout (reused allocation) → in-place permutation →
+//! * `pooled`: pool checkout (reused allocation) → metadata-only reorder →
 //!   in-place patch → resident decode literal built once → one-row updates
 //!   per token (1 full-context copy, 1 full upload, done).
+//! * `reorder`: metadata-only `reorder_chunks` vs the eager in-place
+//!   permutation reference at 64 chunks x 4 KiB rows — the deferred-RoPE
+//!   headline number.  The metadata path must win by >= 10x.
+//!
+//! Results are also written to `BENCH_kv_copy.json` (median seconds +
+//! counter deltas) so CI can upload them as an artifact.
 
 use std::sync::Arc;
 
-use infoflow_kv::kvcache::{counters, AssembledContext, BufferPool, ChunkKv, DecodeBuffer};
+use infoflow_kv::kvcache::counters::CopySnapshot;
+use infoflow_kv::kvcache::{
+    counters, AssembledContext, BufferPool, ChunkKv, DecodeBuffer, KeyDomain,
+};
 use infoflow_kv::manifest::ModelDims;
 use infoflow_kv::runtime::resident::ResidentDecodeKv;
 use infoflow_kv::runtime::tensor_f_to_literal;
 use infoflow_kv::tensor::TensorF;
+use infoflow_kv::util::json::Json;
 use infoflow_kv::util::rng::Rng;
-use infoflow_kv::util::stats::Bench;
+use infoflow_kv::util::stats::{Bench, Summary};
 
 fn dims() -> ModelDims {
     ModelDims {
         vocab: 144, d_model: 64, n_layers: 4, n_heads: 4, head_dim: 16,
+        d_ff: 128, rope_theta: 10000.0, chunk: 64, prompt_len: 16,
+        sel_budget: 64, answer_buf: 8, dev_layers: 2,
+    }
+}
+
+/// Geometry for the reorder headline: one row of one layer's K is
+/// `n_heads * head_dim * 4 = 4096` bytes — the "4 KiB row" in the bench
+/// name — and 64 chunks x 64 rows fill a 4096 bucket (~64 MiB of K+V).
+fn reorder_dims() -> ModelDims {
+    ModelDims {
+        vocab: 144, d_model: 1024, n_layers: 2, n_heads: 8, head_dim: 128,
         d_ff: 128, rope_theta: 10000.0, chunk: 64, prompt_len: 16,
         sel_budget: 64, answer_buf: 8, dev_layers: 2,
     }
@@ -37,7 +57,24 @@ fn mk_chunk(rng: &mut Rng, id: u64, d: &ModelDims) -> Arc<ChunkKv> {
         tokens: (0..d.chunk).map(|_| 16 + rng.below(120) as i32).collect(),
         k: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
         v: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect()).unwrap(),
+        key_domain: KeyDomain::Unrotated,
     })
+}
+
+fn delta_json(d: &CopySnapshot) -> Json {
+    Json::obj(vec![
+        ("full_kv_copies", Json::from(d.full_kv_copies as i64)),
+        ("ctx_allocs", Json::from(d.ctx_allocs as i64)),
+        ("ctx_assembles", Json::from(d.ctx_assembles as i64)),
+        ("inplace_permutes", Json::from(d.inplace_permutes as i64)),
+        ("meta_reorders", Json::from(d.meta_reorders as i64)),
+        ("decode_uploads_full", Json::from(d.decode_uploads_full as i64)),
+        ("decode_row_updates", Json::from(d.decode_row_updates as i64)),
+    ])
+}
+
+fn section_json(s: &Summary, delta: &CopySnapshot) -> Json {
+    Json::obj(vec![("time", s.json()), ("counters", delta_json(delta))])
 }
 
 fn main() {
@@ -79,13 +116,13 @@ fn main() {
     let before = counters::snapshot();
     legacy();
     let legacy_delta = counters::snapshot().since(&before);
-    let _ = bench.run("kv_copy/legacy 8x64->512 reorder+patch", legacy);
+    let legacy_t = bench.run("kv_copy/legacy 8x64->512 reorder+patch", legacy).unwrap();
 
-    // -- pooled: assemble once, mutate in place, resident decode ------------
+    // -- pooled: assemble once, metadata reorder, resident decode -----------
     let pool = BufferPool::new();
     let pooled = || {
         let mut ctx = pool.checkout(&d, bucket, &chunks).unwrap();
-        ctx.permute_chunks_in_place(&order).unwrap();
+        ctx.reorder_chunks(&order).unwrap();
         ctx.patch(&slots, &slots, s, &nk, &nv).unwrap();
         let mut kv = ResidentDecodeKv::from_context(&d, &ctx, &pk, &pv, &ppos).unwrap();
         drop(ctx);
@@ -98,7 +135,7 @@ fn main() {
     let before = counters::snapshot();
     pooled();
     let pooled_delta = counters::snapshot().since(&before);
-    let _ = bench.run("kv_copy/pooled 8x64->512 reorder+patch", pooled);
+    let pooled_t = bench.run("kv_copy/pooled 8x64->512 reorder+patch", pooled).unwrap();
 
     println!(
         "      legacy: {} full KV copies, {} ctx allocs, 2x{} per-step full-buffer \
@@ -106,9 +143,11 @@ fn main() {
         legacy_delta.full_kv_copies, legacy_delta.ctx_allocs, n_steps
     );
     println!(
-        "      pooled: {} full KV copies, {} ctx allocs, {} full uploads, {} row updates / query",
+        "      pooled: {} full KV copies, {} ctx allocs, {} meta reorders, \
+         {} full uploads, {} row updates / query",
         pooled_delta.full_kv_copies,
         pooled_delta.ctx_allocs,
+        pooled_delta.meta_reorders,
         pooled_delta.decode_uploads_full,
         pooled_delta.decode_row_updates
     );
@@ -121,5 +160,83 @@ fn main() {
         pooled_delta.decode_uploads_full, 1,
         "resident decode must build its literal exactly once"
     );
+    assert_eq!(
+        pooled_delta.meta_reorders, 1,
+        "the §4.3 reorder must be a single metadata mutation"
+    );
     assert_eq!(legacy_delta.full_kv_copies, 3, "the legacy path really was 3 copies");
+
+    // -- reorder headline: metadata vs eager at 64 chunks x 4 KiB rows ------
+    let rd = reorder_dims();
+    let big_bucket = 4096usize;
+    let big_chunks: Vec<_> = (0..64).map(|i| mk_chunk(&mut rng, 1000 + i, &rd)).collect();
+    // Deterministic non-identity shuffle of the 64 chunk slots.
+    let mut big_order: Vec<usize> = (0..big_chunks.len()).collect();
+    for i in (1..big_order.len()).rev() {
+        let j = rng.below(i + 1);
+        big_order.swap(i, j);
+    }
+    if big_order.iter().enumerate().all(|(i, &o)| i == o) {
+        big_order.rotate_left(1);
+    }
+
+    let mut meta_ctx = AssembledContext::new(&rd, big_bucket, &big_chunks).unwrap();
+    let before = counters::snapshot();
+    meta_ctx.reorder_chunks(&big_order).unwrap();
+    let meta_delta = counters::snapshot().since(&before);
+    let meta_t = bench
+        .run("kv_copy/reorder-meta 64x64 4KiB rows", || {
+            meta_ctx.reorder_chunks(&big_order).unwrap()
+        })
+        .unwrap();
+
+    let mut eager_ctx = AssembledContext::new(&rd, big_bucket, &big_chunks).unwrap();
+    let before = counters::snapshot();
+    eager_ctx.eager_permute_chunks_in_place(&big_order).unwrap();
+    let eager_delta = counters::snapshot().since(&before);
+    let eager_t = bench
+        .run("kv_copy/reorder-eager 64x64 4KiB rows", || {
+            eager_ctx.eager_permute_chunks_in_place(&big_order).unwrap()
+        })
+        .unwrap();
+
+    let speedup = eager_t.median_s / meta_t.median_s;
+    println!(
+        "      reorder: meta {:.3} us vs eager {:.3} ms -> {:.0}x \
+         ({} meta reorders, {} full copies, {} ctx allocs on the meta path)",
+        meta_t.median_s * 1e6,
+        eager_t.median_s * 1e3,
+        speedup,
+        meta_delta.meta_reorders,
+        meta_delta.full_kv_copies,
+        meta_delta.ctx_allocs
+    );
+    assert_eq!(meta_delta.meta_reorders, 1, "metadata reorder must bump its counter");
+    assert_eq!(
+        meta_delta.full_kv_copies, 0,
+        "metadata reorder must move ZERO context bytes"
+    );
+    assert_eq!(meta_delta.ctx_allocs, 0, "metadata reorder must not allocate");
+    assert_eq!(
+        eager_delta.inplace_permutes, 1,
+        "eager reference must take the in-place permutation path"
+    );
+    assert!(
+        speedup >= 10.0,
+        "metadata reorder must beat the eager permutation by >= 10x at \
+         64 chunks x 4 KiB rows (got {speedup:.1}x)"
+    );
+
+    // -- machine-readable results (CI uploads this file) --------------------
+    let results = Json::obj(vec![
+        ("bench", Json::from("kv_copy")),
+        ("legacy", section_json(&legacy_t, &legacy_delta)),
+        ("pooled", section_json(&pooled_t, &pooled_delta)),
+        ("reorder_meta", section_json(&meta_t, &meta_delta)),
+        ("reorder_eager", section_json(&eager_t, &eager_delta)),
+        ("reorder_speedup", Json::from(speedup)),
+    ]);
+    let out = "BENCH_kv_copy.json";
+    std::fs::write(out, results.to_string_pretty()).expect("write bench results");
+    println!("      wrote {out}");
 }

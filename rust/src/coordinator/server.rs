@@ -332,7 +332,13 @@ impl Server {
                         // worker; single-flight still applies.
                         if let Err(e) = st.get_or_load(id, || {
                             let (k, v) = p.session.prefill_chunk(toks)?;
-                            Ok(ChunkKv { id, tokens: toks.clone(), k, v })
+                            Ok(ChunkKv {
+                                id,
+                                tokens: toks.clone(),
+                                k,
+                                v,
+                                key_domain: crate::kvcache::KeyDomain::Unrotated,
+                            })
                         }) {
                             eprintln!("[server] prefetch of chunk {id:#018x} failed: {e:#}");
                         }

@@ -257,6 +257,7 @@ mod tests {
             tokens: vec![1, 2],
             k: TensorF::zeros(&[1, 2, 1, 2]),
             v: TensorF::zeros(&[1, 2, 1, 2]),
+            key_domain: crate::kvcache::KeyDomain::Unrotated,
         }
     }
 

@@ -28,6 +28,10 @@ pub struct CopySnapshot {
     /// In-place chunk permutations (§4.3 reorder) that did NOT fall back to
     /// a full-buffer copy.
     pub inplace_permutes: u64,
+    /// Metadata-only §4.3 reorders: the `PositionMap` mutated, ZERO context
+    /// bytes moved.  The deferred-RoPE serving path pays one of these per
+    /// reordering query instead of an O(bytes) permutation.
+    pub meta_reorders: u64,
     /// Whole decode-buffer (`[L, T, H, Dh]`) conversions to a literal.  The
     /// resident path pays exactly one per query (the initial build); the
     /// pre-refactor path paid one per decode step.
@@ -44,6 +48,7 @@ impl CopySnapshot {
             ctx_allocs: self.ctx_allocs - earlier.ctx_allocs,
             ctx_assembles: self.ctx_assembles - earlier.ctx_assembles,
             inplace_permutes: self.inplace_permutes - earlier.inplace_permutes,
+            meta_reorders: self.meta_reorders - earlier.meta_reorders,
             decode_uploads_full: self.decode_uploads_full - earlier.decode_uploads_full,
             decode_row_updates: self.decode_row_updates - earlier.decode_row_updates,
         }
@@ -56,6 +61,7 @@ thread_local! {
         ctx_allocs: 0,
         ctx_assembles: 0,
         inplace_permutes: 0,
+        meta_reorders: 0,
         decode_uploads_full: 0,
         decode_row_updates: 0,
     }) };

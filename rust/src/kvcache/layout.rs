@@ -1,13 +1,26 @@
 //! Per-query KV assembly: padded context buffers for a bucket, in-place row
-//! patching with recomputed KV states, in-place §4.3 chunk permutation, and
-//! the decode buffer (context + prompt + generated rows).
+//! patching with recomputed KV states, the metadata-only §4.3 chunk reorder,
+//! and the decode buffer (context + prompt + generated rows).
 //!
 //! The serving path assembles each query's chunks ONCE into a pooled
-//! [`AssembledContext`] (see [`super::pool::BufferPool`]), permutes and
-//! patches that same buffer in place, and then hands it to the resident
+//! [`AssembledContext`] (see [`super::pool::BufferPool`]), reorders it by
+//! mutating only its [`PositionMap`] (O(chunks), zero byte movement),
+//! patches the same buffer in place, and then hands it to the resident
 //! decode state (`runtime::resident`) — one full-context copy per query.
 //! [`DecodeBuffer`] remains as the fresh-allocation host-side reference
 //! implementation that the equivalence property tests diff against.
+//!
+//! **Deferred RoPE.** Context key rows are stored POSITION-FREE (the
+//! `unrotated` domain): raw, unrotated, unquantized.  The rotary embedding
+//! is applied only at the attention boundary — the stub mini-attention and
+//! the [`DecodeBuffer`] / `ResidentDecodeKv` build seam — via
+//! [`crate::rope::materialize_row`], using each row's storage position from
+//! `gpos`.  Because no byte of the buffer encodes its position, the §4.3
+//! reorder no longer has to move bytes at all: [`AssembledContext::
+//! reorder_chunks`] permutes the logical order vector and nothing else.
+//! The old physical permutation survives only as
+//! [`AssembledContext::eager_permute_chunks_in_place`], the reference the
+//! equivalence properties and the `kv_copy` bench diff against.
 //!
 //! Every full-context copy and allocation is recorded in
 //! [`super::counters`] so tests can assert the copy budget instead of
@@ -20,23 +33,87 @@ use anyhow::{bail, Result};
 use crate::kvcache::counters;
 use crate::kvcache::store::ChunkKv;
 use crate::manifest::ModelDims;
+use crate::rope;
 use crate::tensor::{TensorF, TensorI};
 
+/// The logical chunk order of an assembled context, kept SEPARATE from the
+/// physical buffer: logical chunk slot `j` is served by the storage-order
+/// chunk `order[j]`.  A §4.3 reorder mutates this vector and nothing else,
+/// which is what makes the reorder O(chunks) instead of O(bytes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PositionMap {
+    order: Vec<usize>,
+}
+
+impl PositionMap {
+    pub fn identity(n: usize) -> PositionMap {
+        PositionMap { order: (0..n).collect() }
+    }
+
+    /// `order()[j]` = index (in storage order) of the chunk serving logical
+    /// slot `j`.
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.order.iter().enumerate().all(|(i, &o)| i == o)
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Compose a further logical permutation onto the map: afterwards
+    /// logical slot `j` is served by what was logical slot `perm[j]` —
+    /// exactly the semantics the physical permutation had, minus the bytes.
+    pub fn apply(&mut self, perm: &[usize]) -> Result<()> {
+        let n = self.order.len();
+        if perm.len() != n {
+            bail!("permutation of {} entries for {n} chunks", perm.len());
+        }
+        let mut seen = vec![false; n];
+        for &o in perm {
+            if o >= n || seen[o] {
+                bail!("order {perm:?} is not a permutation of 0..{n}");
+            }
+            seen[o] = true;
+        }
+        self.order = perm.iter().map(|&p| self.order[p]).collect();
+        Ok(())
+    }
+}
+
 /// A retrieved context assembled for one query: chunk KVs concatenated in
-/// order and padded to the bucket size.  `gpos` starts at the *stored*
-/// (chunk-local) positions — the decode-time truth for non-recomputed rows —
-/// and is updated as recomputed rows are patched in at global positions.
+/// STORAGE order and padded to the bucket size, plus the [`PositionMap`]
+/// giving the logical (post-reorder) chunk order.  `gpos` starts at the
+/// *stored* (chunk-local) positions — the decode-time truth for
+/// non-recomputed rows, and the seam's materialization position — and is
+/// updated as recomputed rows are patched in at global positions.
 pub struct AssembledContext {
     pub bucket: usize,
+    /// Per-chunk lengths in STORAGE order (see [`AssembledContext::
+    /// logical_chunk_lens`] for the reordered view).
     pub chunk_lens: Vec<usize>,
     pub tokens: TensorI, // [bucket]
+    /// Position-free key rows: raw and unrotated, exactly as the chunk
+    /// store holds them.  Rotation happens at the attention seam.
+    // lint:domain(unrotated)
     pub k: TensorF,      // [L, bucket, H, Dh]
     pub v: TensorF,      // [L, bucket, H, Dh]
     // `gpos` carries no position-domain seed on purpose: it is mixed-domain
     // by design (chunk-local until `patch` writes global positions over the
     // recomputed rows), so neither `local` nor `global` would be truthful.
+    // It is also the seam's storage-position input: row r's key materializes
+    // at `gpos[r]`.
     pub gpos: TensorI,   // [bucket] decode-phase positions
     pub valid: TensorF,  // [bucket]
+    /// Logical chunk order; identity right after assembly.
+    pub pos_map: PositionMap,
     dims: (usize, usize, usize),
 }
 
@@ -95,6 +172,7 @@ impl AssembledContext {
             v: TensorF::zeros(&[l, bucket, h, dh]),
             gpos: TensorI::zeros(&[bucket]),
             valid: TensorF::zeros(&[bucket]),
+            pos_map: PositionMap::identity(0),
             dims: (l, h, dh),
         }
     }
@@ -160,12 +238,43 @@ impl AssembledContext {
             self.v.data_mut()[pad..end].fill(0.0);
         }
         self.chunk_lens = chunks.iter().map(|c| c.len()).collect();
+        self.pos_map = PositionMap::identity(chunks.len());
         Ok(())
     }
 
     /// Number of real (non-padding) context rows.
     pub fn n(&self) -> usize {
         self.chunk_lens.iter().sum()
+    }
+
+    /// Chunk lengths in LOGICAL (post-reorder) order — what the positional
+    /// geometry layouts consume.
+    pub fn logical_chunk_lens(&self) -> Vec<usize> {
+        self.pos_map
+            .order()
+            .iter()
+            .map(|&s| self.chunk_lens[s])
+            .collect()
+    }
+
+    /// Row-level logical→physical map: entry `j` is the storage row holding
+    /// the row that is logically `j`-th.  Padding rows `[n, bucket)` map to
+    /// themselves.  This is the gather order the attention seams walk, and
+    /// the `order` operand handed to the executables.
+    pub fn logical_row_order(&self) -> Vec<i32> {
+        let mut offsets = Vec::with_capacity(self.chunk_lens.len());
+        let mut acc = 0usize;
+        for &len in &self.chunk_lens {
+            offsets.push(acc);
+            acc += len;
+        }
+        let mut out = Vec::with_capacity(self.bucket);
+        for &s in self.pos_map.order() {
+            let base = offsets[s];
+            out.extend((base..base + self.chunk_lens[s]).map(|r| r as i32));
+        }
+        out.extend((out.len()..self.bucket).map(|r| r as i32));
+        out
     }
 
     /// Approximate heap footprint of the buffers, for session accounting.
@@ -192,20 +301,44 @@ impl AssembledContext {
             v: self.v.clone(),
             gpos: self.gpos.clone(),
             valid: self.valid.clone(),
+            pos_map: self.pos_map.clone(),
             dims: self.dims,
         }
     }
 
-    /// Apply the §4.3 reorder permutation to the assembled chunks IN PLACE:
-    /// afterwards chunk slot `i` holds what was chunk `order[i]`, exactly as
-    /// if the buffer had been reassembled from the permuted chunk list —
-    /// without the second full-context allocation + copy.
-    ///
-    /// Must be called before any rows are patched (patched `gpos` entries
-    /// refer to the pre-permutation layout).  Equal-length chunks (the only
-    /// kind the chunk store produces) move cycle-by-cycle with one chunk of
-    /// scratch; unequal lengths fall back to a counted full-buffer gather.
-    pub fn permute_chunks_in_place(&mut self, order: &[usize]) -> Result<()> {
+    /// The §4.3 reorder, metadata-only: afterwards LOGICAL chunk slot `i`
+    /// is served by what was logical chunk `order[i]` — exactly the layout
+    /// a physical permutation (or a reassembly from the permuted chunk
+    /// list) would have produced, but achieved by mutating the
+    /// [`PositionMap`] alone.  O(chunks) work, ZERO context bytes moved;
+    /// possible because stored key rows are position-free, so no byte of
+    /// the buffer depends on where its chunk sits in the logical order.
+    pub fn reorder_chunks(&mut self, order: &[usize]) -> Result<()> {
+        if order.len() != self.chunk_lens.len() {
+            bail!(
+                "permutation of {} entries for {} chunks",
+                order.len(),
+                self.chunk_lens.len()
+            );
+        }
+        if order.iter().enumerate().all(|(i, &o)| i == o) {
+            return Ok(());
+        }
+        self.pos_map.apply(order)?;
+        counters::bump(|s| s.meta_reorders += 1);
+        Ok(())
+    }
+
+    /// REFERENCE implementation of the §4.3 reorder: physically permute the
+    /// assembled chunk blocks so storage order equals logical order.  Kept
+    /// only for the equivalence property tests and the `kv_copy` bench to
+    /// diff [`AssembledContext::reorder_chunks`] against; the serving path
+    /// never calls it.  Supports equal-length chunks only (the variable-
+    /// length gather fallback is gone — the metadata reorder handles any
+    /// mix of lengths for free) and requires an identity [`PositionMap`]
+    /// (mixing physical and metadata reorders on one buffer would double-
+    /// apply the permutation).
+    pub fn eager_permute_chunks_in_place(&mut self, order: &[usize]) -> Result<()> {
         let nc = self.chunk_lens.len();
         if order.len() != nc {
             bail!("permutation of {} entries for {nc} chunks", order.len());
@@ -217,76 +350,44 @@ impl AssembledContext {
             }
             seen[o] = true;
         }
+        if !self.pos_map.is_identity() {
+            bail!("eager permutation on a metadata-reordered buffer");
+        }
         if order.iter().enumerate().all(|(i, &o)| i == o) {
             return Ok(());
         }
+        if self.chunk_lens.iter().any(|&c| c != self.chunk_lens[0]) {
+            bail!(
+                "eager permutation requires equal-length chunks (lens {:?}); \
+                 use the metadata reorder",
+                self.chunk_lens
+            );
+        }
         let (l, h, dh) = self.dims;
         let row = h * dh;
-        let equal = self.chunk_lens.iter().all(|&c| c == self.chunk_lens[0]);
-        if equal {
-            let clen = self.chunk_lens[0];
-            let kv_bases: Vec<usize> = (0..l).map(|li| li * self.bucket * row).collect();
-            permute_equal_blocks(self.k.data_mut(), &kv_bases, clen * row, order);
-            permute_equal_blocks(self.v.data_mut(), &kv_bases, clen * row, order);
-            permute_equal_blocks(self.tokens.data_mut(), &[0], clen, order);
-            permute_equal_blocks(self.gpos.data_mut(), &[0], clen, order);
-            permute_equal_blocks(self.valid.data_mut(), &[0], clen, order);
-            counters::bump(|s| s.inplace_permutes += 1);
-        } else {
-            // Variable-length blocks cannot rotate in place; gather into a
-            // fresh buffer and swap (counted as a full-context copy AND an
-            // allocation, so the hot-path accounting stays honest when this
-            // slow path kicks in).
-            counters::bump(|s| s.ctx_allocs += 1);
-            let mut offsets = Vec::with_capacity(nc);
-            let mut acc = 0usize;
-            for &len in &self.chunk_lens {
-                offsets.push(acc);
-                acc += len;
-            }
-            let mut nk = TensorF::zeros(&[l, self.bucket, h, dh]);
-            let mut nv = TensorF::zeros(&[l, self.bucket, h, dh]);
-            let mut nt = TensorI::zeros(&[self.bucket]);
-            let mut ng = TensorI::zeros(&[self.bucket]);
-            let mut nva = TensorF::zeros(&[self.bucket]);
-            let mut at = 0usize;
-            for &src_chunk in order {
-                let clen = self.chunk_lens[src_chunk];
-                let src = offsets[src_chunk];
-                nt.data_mut()[at..at + clen]
-                    .copy_from_slice(&self.tokens.data()[src..src + clen]);
-                ng.data_mut()[at..at + clen]
-                    .copy_from_slice(&self.gpos.data()[src..src + clen]);
-                nva.data_mut()[at..at + clen]
-                    .copy_from_slice(&self.valid.data()[src..src + clen]);
-                for li in 0..l {
-                    let s = (li * self.bucket + src) * row;
-                    let d = (li * self.bucket + at) * row;
-                    nk.data_mut()[d..d + clen * row]
-                        .copy_from_slice(&self.k.data()[s..s + clen * row]);
-                    nv.data_mut()[d..d + clen * row]
-                        .copy_from_slice(&self.v.data()[s..s + clen * row]);
-                }
-                at += clen;
-            }
-            self.k = nk;
-            self.v = nv;
-            self.tokens = nt;
-            self.gpos = ng;
-            self.valid = nva;
-            counters::bump(|s| s.full_kv_copies += 1);
-        }
+        let clen = self.chunk_lens[0];
+        let kv_bases: Vec<usize> = (0..l).map(|li| li * self.bucket * row).collect();
+        permute_equal_blocks(self.k.data_mut(), &kv_bases, clen * row, order);
+        permute_equal_blocks(self.v.data_mut(), &kv_bases, clen * row, order);
+        permute_equal_blocks(self.tokens.data_mut(), &[0], clen, order);
+        permute_equal_blocks(self.gpos.data_mut(), &[0], clen, order);
+        permute_equal_blocks(self.valid.data_mut(), &[0], clen, order);
+        counters::bump(|s| s.inplace_permutes += 1);
         self.chunk_lens = order.iter().map(|&i| self.chunk_lens[i]).collect();
         Ok(())
     }
 
-    /// Patch recomputed rows into the buffers: row `slots[i]` receives
-    /// `new_k/new_v[:, i]` and its decode position becomes `sel_gpos[i]`.
-    /// Slots >= bucket (padding of the selection) are skipped.  Shape
-    /// mismatches are hard errors — a silent partial patch corrupts the
-    /// decode cache.  `sel_gpos` must already be target-frame (global)
-    /// positions — patching stored chunk-local positions here would poison
-    /// the decode cache with un-re-rotated coordinates.
+    /// Patch recomputed rows into the buffers: LOGICAL row `slots[i]`
+    /// receives `new_k/new_v[:, i]` and its decode position becomes
+    /// `sel_gpos[i]`.  Slots are logical (post-reorder) indices — the index
+    /// space scores and selections live in — and are mapped through the
+    /// [`PositionMap`] to storage rows here.  Slots >= bucket (padding of
+    /// the selection) are skipped.  Shape mismatches are hard errors — a
+    /// silent partial patch corrupts the decode cache.  `sel_gpos` must
+    /// already be target-frame (global) positions — patching stored
+    /// chunk-local positions here would poison the decode cache with
+    /// un-re-rotated coordinates.  `new_k` rows are position-free
+    /// (unrotated), like every other key row in the buffer.
     // lint:domain(global)
     pub fn patch(
         &mut self,
@@ -323,20 +424,22 @@ impl AssembledContext {
                 sel_gpos.len()
             );
         }
+        let lro = self.logical_row_order();
         for (i, (&slot, &gp)) in slots.iter().zip(sel_gpos).take(count).enumerate() {
             let slot = slot as usize;
             if slot >= self.bucket {
                 continue;
             }
+            let phys = lro[slot] as usize;
             for li in 0..l {
                 let src = (li * s_cap + i) * row;
-                let dst = (li * self.bucket + slot) * row;
+                let dst = (li * self.bucket + phys) * row;
                 self.k.data_mut()[dst..dst + row]
                     .copy_from_slice(&new_k.data()[src..src + row]);
                 self.v.data_mut()[dst..dst + row]
                     .copy_from_slice(&new_v.data()[src..src + row]);
             }
-            self.gpos.data_mut()[slot] = gp;
+            self.gpos.data_mut()[phys] = gp;
         }
         Ok(())
     }
@@ -361,6 +464,15 @@ pub struct DecodeBuffer {
 }
 
 impl DecodeBuffer {
+    /// Build the decode buffer from an assembled context.  This is one of
+    /// the two attention seams of the deferred-RoPE design: context rows are
+    /// gathered in LOGICAL order (through the context's [`PositionMap`])
+    /// during the one full copy this build already pays, and each key row is
+    /// converted from the position-free storage domain to the attention
+    /// domain by [`rope::materialize_row`] at its storage position
+    /// `ctx.gpos[r]`.  The resulting bytes are identical to what the old
+    /// eager path stored (it kept `snap(rotate(raw, pos))` in the buffer and
+    /// copied verbatim), so downstream decode executables are unchanged.
     pub fn new(
         dims: &ModelDims,
         ctx: &AssembledContext,
@@ -377,14 +489,25 @@ impl DecodeBuffer {
         let mut v = TensorF::zeros(&[l, t_total, h, dh]);
         let mut gpos = TensorI::zeros(&[t_total]);
         let mut valid = TensorF::zeros(&[t_total]);
+        let lro = ctx.logical_row_order();
         for li in 0..l {
-            // context rows [0, bucket)
-            let src = (li * ctx.bucket) * row;
-            let dst = (li * t_total) * row;
-            k.data_mut()[dst..dst + ctx.bucket * row]
-                .copy_from_slice(&ctx.k.data()[src..src + ctx.bucket * row]);
-            v.data_mut()[dst..dst + ctx.bucket * row]
-                .copy_from_slice(&ctx.v.data()[src..src + ctx.bucket * row]);
+            // context rows [0, bucket): logical gather + key materialization
+            for (j, &pr) in lro.iter().enumerate() {
+                let r = pr as usize;
+                let src = (li * ctx.bucket + r) * row;
+                let dst = (li * t_total + j) * row;
+                k.data_mut()[dst..dst + row]
+                    .copy_from_slice(&ctx.k.data()[src..src + row]);
+                rope::materialize_row(
+                    &mut k.data_mut()[dst..dst + row],
+                    h,
+                    dh,
+                    ctx.gpos.data()[r] as i64,
+                    dims.rope_theta,
+                );
+                v.data_mut()[dst..dst + row]
+                    .copy_from_slice(&ctx.v.data()[src..src + row]);
+            }
             // prompt rows [bucket, bucket + p)
             let psrc = (li * p) * row;
             let pdst = (li * t_total + ctx.bucket) * row;
@@ -393,8 +516,11 @@ impl DecodeBuffer {
             v.data_mut()[pdst..pdst + p * row]
                 .copy_from_slice(&prompt_v.data()[psrc..psrc + p * row]);
         }
-        gpos.data_mut()[..ctx.bucket].copy_from_slice(ctx.gpos.data());
-        valid.data_mut()[..ctx.bucket].copy_from_slice(ctx.valid.data());
+        for (j, &pr) in lro.iter().enumerate() {
+            let r = pr as usize;
+            gpos.data_mut()[j] = ctx.gpos.data()[r];
+            valid.data_mut()[j] = ctx.valid.data()[r];
+        }
         for (i, &pp) in prompt_pos.iter().enumerate() {
             gpos.data_mut()[ctx.bucket + i] = pp;
             valid.data_mut()[ctx.bucket + i] = 1.0;
@@ -501,6 +627,7 @@ impl DecodeBuffer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::store::KeyDomain;
     use crate::util::{prop, rng::Rng};
 
     fn dims() -> ModelDims {
@@ -529,6 +656,7 @@ mod tests {
             tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
             k: TensorF::from_vec(&shape, vec![fill; n]).unwrap(),
             v: TensorF::from_vec(&shape, vec![fill * 10.0; n]).unwrap(),
+            key_domain: KeyDomain::Unrotated,
         })
     }
 
@@ -547,7 +675,36 @@ mod tests {
             tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
             k: TensorF::from_vec(&shape, kv).unwrap(),
             v: TensorF::from_vec(&shape, vv).unwrap(),
+            key_domain: KeyDomain::Unrotated,
         })
+    }
+
+    /// Logical-order view of a context's per-row data (tokens, gpos, valid,
+    /// k, v) — what a downstream consumer walking the [`PositionMap`]
+    /// observes, independent of physical storage order.
+    fn logical_view(ctx: &AssembledContext) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let lro = ctx.logical_row_order();
+        let (l, row) = (ctx.k.shape()[0], ctx.k.shape()[2] * ctx.k.shape()[3]);
+        let mut toks = Vec::new();
+        let mut gpos = Vec::new();
+        let mut valid = Vec::new();
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for &pr in &lro {
+            let r = pr as usize;
+            toks.push(ctx.tokens.data()[r]);
+            gpos.push(ctx.gpos.data()[r]);
+            valid.push(ctx.valid.data()[r]);
+        }
+        for li in 0..l {
+            for &pr in &lro {
+                let r = pr as usize;
+                let s = (li * ctx.bucket + r) * row;
+                k.extend_from_slice(&ctx.k.data()[s..s + row]);
+                v.extend_from_slice(&ctx.v.data()[s..s + row]);
+            }
+        }
+        (toks, gpos, valid, k, v)
     }
 
     fn assert_ctx_eq(a: &AssembledContext, b: &AssembledContext, what: &str) {
@@ -617,25 +774,27 @@ mod tests {
     }
 
     #[test]
-    fn inplace_permutation_matches_reassembly() {
+    fn eager_permutation_matches_reassembly() {
         let d = dims();
         let mut rng = Rng::new(42);
         let chunks: Vec<_> = (0..4).map(|i| distinct_chunk(&mut rng, i, 8)).collect();
         let order = vec![2usize, 0, 3, 1];
         let mut inplace = AssembledContext::new(&d, 64, &chunks).unwrap();
-        inplace.permute_chunks_in_place(&order).unwrap();
+        inplace.eager_permute_chunks_in_place(&order).unwrap();
         let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
         let reference = AssembledContext::new(&d, 64, &permuted).unwrap();
         assert_ctx_eq(&inplace, &reference, "in-place vs reassembled");
     }
 
     #[test]
-    fn inplace_permutation_random_property() {
+    fn metadata_reorder_random_property() {
+        // The metadata reorder must present, through its logical view,
+        // exactly what reassembling from the permuted chunk list would have
+        // produced physically — for ANY mix of chunk lengths (the old
+        // physical gather fallback is gone; variable lengths are free now).
         let d = dims();
         prop::check(60, |rng: &mut Rng| {
             let nc = 1 + rng.below(6);
-            // equal-length chunks exercise the cycle path; a second pass
-            // with mixed lengths exercises the gather fallback
             for &mixed in &[false, true] {
                 let chunks: Vec<_> = (0..nc)
                     .map(|i| {
@@ -649,22 +808,36 @@ mod tests {
                 let mut order: Vec<usize> = (0..nc).collect();
                 let keys: Vec<u64> = (0..nc).map(|_| rng.next_u64()).collect();
                 order.sort_by_key(|&i| keys[i]);
-                let mut inplace = AssembledContext::new(&d, bucket, &chunks).unwrap();
-                inplace.permute_chunks_in_place(&order).unwrap();
+                let mut meta = AssembledContext::new(&d, bucket, &chunks).unwrap();
+                meta.reorder_chunks(&order).unwrap();
                 let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
                 let reference = AssembledContext::new(&d, bucket, &permuted).unwrap();
                 prop::assert_prop(
-                    inplace.k.data() == reference.k.data()
-                        && inplace.v.data() == reference.v.data()
-                        && inplace.tokens.data() == reference.tokens.data()
-                        && inplace.gpos.data() == reference.gpos.data()
-                        && inplace.valid.data() == reference.valid.data()
-                        && inplace.chunk_lens == reference.chunk_lens,
-                    format!("permute mismatch (mixed={mixed}, order={order:?})"),
+                    logical_view(&meta) == logical_view(&reference)
+                        && meta.logical_chunk_lens() == reference.chunk_lens,
+                    format!("reorder mismatch (mixed={mixed}, order={order:?})"),
                 )?;
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn metadata_reorder_composes_like_repeated_permutation() {
+        // Two stacked reorders must equal reassembling with the composed
+        // permutation — the §4.3 policy may fire more than once per buffer.
+        let d = dims();
+        let mut rng = Rng::new(7);
+        let chunks: Vec<_> = (0..5).map(|i| distinct_chunk(&mut rng, i, 4)).collect();
+        let mut meta = AssembledContext::new(&d, 32, &chunks).unwrap();
+        let p1 = vec![4usize, 2, 0, 1, 3];
+        let p2 = vec![1usize, 0, 4, 3, 2];
+        meta.reorder_chunks(&p1).unwrap();
+        meta.reorder_chunks(&p2).unwrap();
+        let composed: Vec<usize> = p2.iter().map(|&j| p1[j]).collect();
+        let permuted: Vec<_> = composed.iter().map(|&i| chunks[i].clone()).collect();
+        let reference = AssembledContext::new(&d, 32, &permuted).unwrap();
+        assert_eq!(logical_view(&meta), logical_view(&reference));
     }
 
     #[test]
@@ -673,10 +846,39 @@ mod tests {
         let chunks: Vec<_> = (0..4).map(|i| chunk(i, 8, i as f32 + 1.0)).collect();
         let mut ctx = AssembledContext::new(&d, 32, &chunks).unwrap();
         let before = counters::snapshot();
-        ctx.permute_chunks_in_place(&[3, 1, 0, 2]).unwrap();
+        ctx.eager_permute_chunks_in_place(&[3, 1, 0, 2]).unwrap();
         let delta = counters::snapshot().since(&before);
         assert_eq!(delta.full_kv_copies, 0, "equal chunks must permute in place");
         assert_eq!(delta.inplace_permutes, 1);
+    }
+
+    #[test]
+    fn metadata_reorder_moves_zero_bytes() {
+        let d = dims();
+        let mut rng = Rng::new(3);
+        let chunks: Vec<_> = (0..4).map(|i| distinct_chunk(&mut rng, i, 8)).collect();
+        let mut ctx = AssembledContext::new(&d, 32, &chunks).unwrap();
+        let k_before = ctx.k.data().to_vec();
+        let before = counters::snapshot();
+        ctx.reorder_chunks(&[3, 1, 0, 2]).unwrap();
+        let delta = counters::snapshot().since(&before);
+        assert_eq!(delta.meta_reorders, 1);
+        assert_eq!(delta.full_kv_copies, 0, "metadata reorder must not copy");
+        assert_eq!(delta.ctx_allocs, 0, "metadata reorder must not allocate");
+        assert_eq!(delta.inplace_permutes, 0);
+        assert_eq!(ctx.k.data(), &k_before[..], "buffer bytes must be untouched");
+        assert_eq!(ctx.pos_map.order(), &[3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn identity_reorder_is_free() {
+        let d = dims();
+        let mut ctx =
+            AssembledContext::new(&d, 32, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)]).unwrap();
+        let before = counters::snapshot();
+        ctx.reorder_chunks(&[0, 1]).unwrap();
+        assert_eq!(counters::snapshot().since(&before).meta_reorders, 0);
+        assert!(ctx.pos_map.is_identity());
     }
 
     #[test]
@@ -684,9 +886,20 @@ mod tests {
         let d = dims();
         let mut ctx =
             AssembledContext::new(&d, 32, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)]).unwrap();
-        assert!(ctx.permute_chunks_in_place(&[0]).is_err(), "wrong length");
-        assert!(ctx.permute_chunks_in_place(&[0, 0]).is_err(), "duplicate");
-        assert!(ctx.permute_chunks_in_place(&[0, 2]).is_err(), "out of range");
+        assert!(ctx.reorder_chunks(&[0]).is_err(), "wrong length");
+        assert!(ctx.reorder_chunks(&[0, 0]).is_err(), "duplicate");
+        assert!(ctx.reorder_chunks(&[0, 2]).is_err(), "out of range");
+        assert!(ctx.eager_permute_chunks_in_place(&[0]).is_err(), "wrong length");
+        assert!(ctx.eager_permute_chunks_in_place(&[0, 0]).is_err(), "duplicate");
+        assert!(ctx.eager_permute_chunks_in_place(&[0, 2]).is_err(), "out of range");
+        // the eager reference refuses to stack on a metadata reorder
+        ctx.reorder_chunks(&[1, 0]).unwrap();
+        assert!(ctx.eager_permute_chunks_in_place(&[1, 0]).is_err());
+        // and refuses variable-length chunks (its gather fallback is gone)
+        let mut varied =
+            AssembledContext::new(&d, 32, &[chunk(1, 8, 1.0), chunk(2, 4, 2.0)]).unwrap();
+        assert!(varied.eager_permute_chunks_in_place(&[1, 0]).is_err());
+        assert!(varied.reorder_chunks(&[1, 0]).is_ok(), "metadata path handles it");
     }
 
     #[test]
@@ -706,6 +919,77 @@ mod tests {
         // neighbours untouched
         assert_eq!(ctx.k.at(&[0, 4, 0, 0]), 1.0);
         assert_eq!(ctx.gpos.data()[10], 2);
+    }
+
+    #[test]
+    fn patch_maps_logical_slots_through_the_reorder() {
+        let d = dims();
+        let mut ctx =
+            AssembledContext::new(&d, 16, &[chunk(1, 8, 1.0), chunk(2, 8, 2.0)]).unwrap();
+        ctx.reorder_chunks(&[1, 0]).unwrap();
+        let s = 1usize;
+        let shape = [d.n_layers, s, d.n_heads, d.head_dim];
+        // logical slot 2 now lives in chunk 2, physical row 8 + 2 = 10
+        ctx.patch(&[2], &[42], 1, &TensorF::full(&shape, 7.0), &TensorF::full(&shape, 9.0))
+            .unwrap();
+        assert_eq!(ctx.k.at(&[0, 10, 0, 0]), 7.0, "physical row of logical slot 2");
+        assert_eq!(ctx.gpos.data()[10], 42);
+        assert_eq!(ctx.k.at(&[0, 2, 0, 0]), 1.0, "physical row 2 untouched");
+        assert_eq!(ctx.gpos.data()[2], 2);
+    }
+
+    #[test]
+    fn decode_buffer_from_metadata_reorder_matches_reference() {
+        // The decode-build seam must normalize a metadata-reordered buffer
+        // into exactly the bytes the physically-reassembled reference
+        // produces: logical gather + key materialization at storage
+        // positions.
+        let d = dims();
+        let mut rng = Rng::new(11);
+        let chunks: Vec<_> = (0..2).map(|i| distinct_chunk(&mut rng, i, 6)).collect();
+        let order = vec![1usize, 0];
+        let mut meta = AssembledContext::new(&d, 16, &chunks).unwrap();
+        meta.reorder_chunks(&order).unwrap();
+        let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
+        let reference = AssembledContext::new(&d, 16, &permuted).unwrap();
+        let p_shape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+        let pk = TensorF::full(&p_shape, 5.0);
+        let pv = TensorF::full(&p_shape, 6.0);
+        let ppos: Vec<i32> = (12..16).collect();
+        let a = DecodeBuffer::new(&d, &meta, &pk, &pv, &ppos);
+        let b = DecodeBuffer::new(&d, &reference, &pk, &pv, &ppos);
+        assert_eq!(a.k.data(), b.k.data(), "materialized keys");
+        assert_eq!(a.v.data(), b.v.data());
+        assert_eq!(a.gpos.data(), b.gpos.data());
+        assert_eq!(a.valid.data(), b.valid.data());
+    }
+
+    #[test]
+    fn decode_buffer_materializes_keys_at_storage_positions() {
+        let d = dims();
+        let ctx = AssembledContext::new(&d, 8, &[chunk(1, 4, 1.0)]).unwrap();
+        let p_shape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+        let buf = DecodeBuffer::new(
+            &d,
+            &ctx,
+            &TensorF::zeros(&p_shape),
+            &TensorF::zeros(&p_shape),
+            &[4, 5, 6, 7],
+        );
+        // Row 3 stores raw 1.0s at chunk-local position 3: the buffer must
+        // hold snap(rotate(raw, 3)), not the raw bytes.
+        let row = d.n_heads * d.head_dim;
+        let mut want = vec![1.0f32; row];
+        rope::materialize_row(&mut want, d.n_heads, d.head_dim, 3, d.rope_theta);
+        let got: Vec<f32> = (0..row)
+            .map(|i| buf.k.at(&[0, 3, i / d.head_dim, i % d.head_dim]))
+            .collect();
+        assert_eq!(got, want);
+        // ...and position 0 rows are snapped too (eager always quantized).
+        let got0 = buf.k.at(&[0, 0, 0, 0]);
+        assert_eq!(got0, rope::snap(1.0));
+        // values are copied untouched
+        assert_eq!(buf.v.at(&[0, 3, 0, 0]), 10.0);
     }
 
     #[test]

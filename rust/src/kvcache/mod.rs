@@ -15,7 +15,10 @@ pub mod store;
 pub mod tier;
 
 pub use counters::CopySnapshot;
-pub use layout::{AssembledContext, DecodeBuffer};
+pub use layout::{AssembledContext, DecodeBuffer, PositionMap};
 pub use pool::{BufferPool, PoolStats, PooledContext};
-pub use store::{ChunkId, ChunkKv, ChunkStore, LifecycleStats, StoreStats, DEFAULT_SHARDS};
+pub use store::{
+    ChunkId, ChunkKv, ChunkStore, KeyDomain, LifecycleStats, StoreStats,
+    DEFAULT_SHARDS,
+};
 pub use tier::SpillTier;

@@ -222,6 +222,7 @@ mod tests {
             tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
             k: TensorF::from_vec(&shape, vec![fill; n]).unwrap(),
             v: TensorF::from_vec(&shape, vec![fill * 10.0; n]).unwrap(),
+            key_domain: crate::kvcache::store::KeyDomain::Unrotated,
         })
     }
 

@@ -39,6 +39,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::kvcache::tier::SpillTier;
+use crate::rope;
 use crate::tensor::TensorF;
 use crate::util::json::Json;
 
@@ -52,15 +53,46 @@ pub const DEFAULT_SHARDS: usize = 8;
 /// rank 4); guards `load` against allocating from garbage headers.
 const MAX_RANK: usize = 8;
 
-/// An immutable prefilled chunk: tokens + chunk-local KV states.
+/// Positional provenance of a chunk's stored key rows — the IFKV record
+/// domain flag.  The serving paths produce and expect [`KeyDomain::Unrotated`]
+/// everywhere; [`KeyDomain::RotatedLocal`] survives only long enough for the
+/// store-level migration of legacy `IFKV1` records to un-rotate it away.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KeyDomain {
+    /// Keys rotated to their chunk-local positions at prefill time — the
+    /// pre-deferred-RoPE storage format, produced only by legacy `IFKV1`
+    /// records on read.
+    RotatedLocal = 0,
+    /// Position-free keys: raw, unrotated, unquantized.  RoPE is applied at
+    /// the attention boundary ([`rope::materialize_row`]), which is what
+    /// lets the same bytes serve ANY positional layout.
+    #[default]
+    Unrotated = 1,
+}
+
+impl KeyDomain {
+    pub fn from_u32(x: u32) -> Option<KeyDomain> {
+        match x {
+            0 => Some(KeyDomain::RotatedLocal),
+            1 => Some(KeyDomain::Unrotated),
+            _ => None,
+        }
+    }
+}
+
+/// An immutable prefilled chunk: tokens + position-free KV states.
 #[derive(Clone, Debug)]
 pub struct ChunkKv {
     pub id: ChunkId,
     pub tokens: Vec<i32>,
-    /// [n_layers, C, H, Dh] keys under chunk-local RoPE.
+    /// [n_layers, C, H, Dh] keys, position-free (see `key_domain`): raw
+    /// unrotated rows that every positional layout shares.
+    // lint:domain(unrotated)
     pub k: TensorF,
     /// [n_layers, C, H, Dh] values.
     pub v: TensorF,
+    /// Positional provenance of `k` (the IFKV record domain flag).
+    pub key_domain: KeyDomain,
 }
 
 impl ChunkKv {
@@ -144,6 +176,10 @@ pub struct LifecycleStats {
     /// Chunks admitted through [`ChunkStore::admit`] (bulk restores routed
     /// through the flight-aware lifecycle path).
     pub restores: AtomicU64,
+    /// Legacy `IFKV1` records migrated to the position-free key domain on
+    /// entry: their chunk-local RoPE was inverted host-side so every resident
+    /// chunk is uniformly [`KeyDomain::Unrotated`].
+    pub migrations: AtomicU64,
 }
 
 impl LifecycleStats {
@@ -157,6 +193,7 @@ impl LifecycleStats {
             ("spill_errors", g(&self.spill_errors)),
             ("single_flight_waits", g(&self.single_flight_waits)),
             ("restores", g(&self.restores)),
+            ("migrations", g(&self.migrations)),
         ])
     }
 }
@@ -337,6 +374,12 @@ pub struct ChunkStore {
     /// True when the constructor clamped the shard count down to keep
     /// per-shard budgets non-zero (budget below one byte per shard).
     shards_clamped: bool,
+    /// RoPE theta used to invert chunk-local rotation when migrating legacy
+    /// `IFKV1` ([`KeyDomain::RotatedLocal`]) records.  The legacy record
+    /// format never persisted theta, so deployments that prefilled with a
+    /// non-default base must set it via [`ChunkStore::set_migration_theta`]
+    /// before restoring old snapshots.
+    migration_theta: f64,
 }
 
 impl ChunkStore {
@@ -378,7 +421,49 @@ impl ChunkStore {
             life: LifecycleStats::default(),
             thrash_evictions: AtomicU64::new(0),
             shards_clamped: clamped,
+            migration_theta: 10000.0,
         }
+    }
+
+    /// Override the RoPE base used to un-rotate legacy `IFKV1` records (the
+    /// v1 format did not persist theta).  Irrelevant for `IFKV2` records,
+    /// which are already position-free on disk.
+    pub fn set_migration_theta(&mut self, theta: f64) {
+        self.migration_theta = theta;
+    }
+
+    /// Normalize a chunk entering the store to the position-free key domain.
+    ///
+    /// Legacy `IFKV1` records stored `quantize(rotate(raw, t))` per row; the
+    /// serving path now expects raw unrotated keys, so we invert the
+    /// chunk-local rotation host-side.  Rotation is an isometry, so the
+    /// inverse is exact up to the quantization noise already baked into the
+    /// legacy bytes (< 2^-12 per element) — acceptable for legacy-only data,
+    /// and re-snapped onto the grid at the attention seam anyway.
+    fn migrate_domain(&self, mut chunk: ChunkKv) -> ChunkKv {
+        if chunk.key_domain != KeyDomain::RotatedLocal {
+            return chunk;
+        }
+        let shape = chunk.k.shape().to_vec();
+        if shape.len() != 4 {
+            // Unknown layout: leave the record untouched rather than guess.
+            return chunk;
+        }
+        let (layers, c, heads, dh) = (shape[0], shape[1], shape[2], shape[3]);
+        let data = chunk.k.data_mut();
+        for li in 0..layers {
+            for t in 0..c {
+                let base = (li * c + t) * heads * dh;
+                for h in 0..heads {
+                    let s = base + h * dh;
+                    // lint:allow(position-domain, reason="legacy IFKV1 migration runs the local->global converter backwards (negative delta) to STRIP chunk-local rotation from stored keys; this is the one sanctioned un-rotation site")
+                    rope::rotate(&mut data[s..s + dh], -(t as i64), self.migration_theta);
+                }
+            }
+        }
+        chunk.key_domain = KeyDomain::Unrotated;
+        self.life.migrations.fetch_add(1, Ordering::Relaxed);
+        chunk
     }
 
     /// A sharded store with a disk spill tier attached.
@@ -740,6 +825,7 @@ impl ChunkStore {
                         match tier.take(id) {
                             Ok(Some(chunk)) => {
                                 self.life.spill_admits.fetch_add(1, Ordering::Relaxed);
+                                let chunk = self.migrate_domain(chunk);
                                 return Ok(self.insert_under_flight(chunk));
                             }
                             Ok(None) => {}
@@ -792,6 +878,7 @@ impl ChunkStore {
     /// If the id is already resident the existing entry is returned
     /// untouched (ids are content hashes, so the copies are identical).
     pub fn admit(&self, chunk: ChunkKv) -> Arc<ChunkKv> {
+        let chunk = self.migrate_domain(chunk);
         let id = chunk.id;
         loop {
             match self.flights.begin(id) {
@@ -824,9 +911,14 @@ impl ChunkStore {
 
     // -- persistence ---------------------------------------------------------
     // Record format (little-endian), shared with the spill tier
-    // (`kvcache::tier`): magic "IFKV1\0\0\0" once per file, then per chunk:
-    //   id u64 | n_tokens u32 | k_rank u32 | k dims u32* | tokens i32* |
-    //   k f32* | v f32*   (v has the same dims as k)
+    // (`kvcache::tier`): magic "IFKV2\0\0\0" once per file, then per chunk:
+    //   id u64 | n_tokens u32 | k_rank u32 | key_domain u32 | k dims u32* |
+    //   tokens i32* | k f32* | v f32*   (v has the same dims as k)
+    //
+    // Writers always emit v2.  Readers also accept legacy "IFKV1\0\0\0"
+    // files, whose records have no key_domain field and whose keys carry
+    // chunk-local RoPE; those records are migrated to the position-free
+    // domain on admission (`migrate_domain`).
 
     pub fn save(&self, path: &Path) -> Result<()> {
         // Snapshot under per-shard locks, write outside them.  Entries go
@@ -881,12 +973,16 @@ impl ChunkStore {
         let mut r = BufReader::new(f);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
-        if &magic != STORE_MAGIC {
+        let v2 = if &magic == STORE_MAGIC {
+            true
+        } else if &magic == STORE_MAGIC_V1 {
+            false
+        } else {
             bail!("{}: bad magic", path.display());
-        }
+        };
         let mut n = 0usize;
         let mut remaining = total - 8;
-        while let Some(chunk) = read_chunk_record(&mut r, &mut remaining)
+        while let Some(chunk) = read_chunk_record(&mut r, &mut remaining, v2)
             .map_err(|e| anyhow!("{}: {e:#}", path.display()))?
         {
             self.admit(chunk);
@@ -896,13 +992,20 @@ impl ChunkStore {
     }
 }
 
-pub(crate) const STORE_MAGIC: &[u8; 8] = b"IFKV1\0\0\0";
+/// Current on-disk format: records carry a key-domain flag, keys are stored
+/// position-free.  Written by every save/spill path.
+pub(crate) const STORE_MAGIC: &[u8; 8] = b"IFKV2\0\0\0";
+
+/// Legacy on-disk format: no domain flag, keys under chunk-local RoPE.
+/// Accepted on read only; records are migrated on admission.
+pub(crate) const STORE_MAGIC_V1: &[u8; 8] = b"IFKV1\0\0\0";
 
 /// Serialize one chunk record (no magic — that is per file) to `w`.
 pub(crate) fn write_chunk_record<W: Write>(w: &mut W, c: &ChunkKv) -> Result<()> {
     w.write_all(&c.id.to_le_bytes())?;
     w.write_all(&(c.tokens.len() as u32).to_le_bytes())?;
     w.write_all(&(c.k.shape().len() as u32).to_le_bytes())?;
+    w.write_all(&(c.key_domain as u32).to_le_bytes())?;
     for &d in c.k.shape() {
         w.write_all(&(d as u32).to_le_bytes())?;
     }
@@ -962,6 +1065,7 @@ fn rd_f32s<R: Read>(r: &mut R, n: usize, remaining: &mut u64) -> Result<Vec<f32>
 pub(crate) fn read_chunk_record<R: Read>(
     r: &mut R,
     remaining: &mut u64,
+    v2: bool,
 ) -> Result<Option<ChunkKv>> {
     let mut idb = [0u8; 8];
     if !read_full_or_eof(r, &mut idb)? {
@@ -974,6 +1078,14 @@ pub(crate) fn read_chunk_record<R: Read>(
     if rank > MAX_RANK {
         bail!("implausible tensor rank {rank} (corrupt file?)");
     }
+    let key_domain = if v2 {
+        let raw = rd_u32(r, remaining)?;
+        KeyDomain::from_u32(raw)
+            .ok_or_else(|| anyhow!("unknown key domain {raw} (corrupt file?)"))?
+    } else {
+        // v1 records predate the flag: keys carry chunk-local RoPE.
+        KeyDomain::RotatedLocal
+    };
     let mut dims = Vec::with_capacity(rank);
     for _ in 0..rank {
         dims.push(rd_u32(r, remaining)? as usize);
@@ -1002,7 +1114,7 @@ pub(crate) fn read_chunk_record<R: Read>(
         .collect();
     let k = TensorF::from_vec(&dims, rd_f32s(r, n_kv, remaining)?)?;
     let v = TensorF::from_vec(&dims, rd_f32s(r, n_kv, remaining)?)?;
-    Ok(Some(ChunkKv { id, tokens, k, v }))
+    Ok(Some(ChunkKv { id, tokens, k, v, key_domain }))
 }
 
 #[cfg(test)]
@@ -1018,6 +1130,7 @@ mod tests {
             tokens: (0..c as i32).collect(),
             k: TensorF::from_vec(&dims, (0..n).map(|x| x as f32).collect()).unwrap(),
             v: TensorF::from_vec(&dims, (0..n).map(|x| (x * 2) as f32).collect()).unwrap(),
+            key_domain: KeyDomain::Unrotated,
         }
     }
 
@@ -1109,6 +1222,92 @@ mod tests {
         let orig = mk_chunk(7, 4);
         assert_eq!(c.k.max_abs_diff(&orig.k), 0.0);
         assert_eq!(c.v.max_abs_diff(&orig.v), 0.0);
+        assert_eq!(c.key_domain, KeyDomain::Unrotated);
+        assert_eq!(l.lifecycle().migrations.load(Ordering::Relaxed), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Serialize one record in the LEGACY v1 layout (no key_domain field).
+    fn write_v1_record(v: &mut Vec<u8>, c: &ChunkKv) {
+        v.extend_from_slice(&c.id.to_le_bytes());
+        v.extend_from_slice(&(c.tokens.len() as u32).to_le_bytes());
+        v.extend_from_slice(&(c.k.shape().len() as u32).to_le_bytes());
+        for &d in c.k.shape() {
+            v.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &t in &c.tokens {
+            v.extend_from_slice(&t.to_le_bytes());
+        }
+        for &x in c.k.data() {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        for &x in c.v.data() {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn legacy_v1_records_migrate_to_unrotated_on_load() {
+        let dir = std::env::temp_dir().join("ifkv_store_v1_migrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.bin");
+        // Raw position-free chunk, then its legacy twin with every key row
+        // rotated to its chunk-local position (what v1 prefill stored).
+        let (layers, c, heads, dh) = (2usize, 4usize, 2usize, 4usize);
+        let mut rng = Rng::new(42);
+        let n = layers * c * heads * dh;
+        let raw_k: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut legacy_k = raw_k.clone();
+        for li in 0..layers {
+            for t in 0..c {
+                let base = (li * c + t) * heads * dh;
+                for h in 0..heads {
+                    let s = base + h * dh;
+                    crate::rope::rotate(&mut legacy_k[s..s + dh], t as i64, 10000.0);
+                }
+            }
+        }
+        let dims = [layers, c, heads, dh];
+        let legacy = ChunkKv {
+            id: 11,
+            tokens: (0..c as i32).collect(),
+            k: TensorF::from_vec(&dims, legacy_k).unwrap(),
+            v: TensorF::from_vec(&dims, (0..n).map(|x| x as f32).collect()).unwrap(),
+            key_domain: KeyDomain::RotatedLocal,
+        };
+        let mut bytes = b"IFKV1\0\0\0".to_vec();
+        write_v1_record(&mut bytes, &legacy);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let l = ChunkStore::load(&path, usize::MAX).unwrap();
+        let got = l.get(11).unwrap();
+        assert_eq!(got.key_domain, KeyDomain::Unrotated);
+        assert_eq!(l.lifecycle().migrations.load(Ordering::Relaxed), 1);
+        // Un-rotation inverts the legacy rotation up to f32 rounding.
+        let raw = TensorF::from_vec(&dims, raw_k).unwrap();
+        let err = got.k.max_abs_diff(&raw);
+        assert!(err < 1e-4, "migration residual {err}");
+        assert_eq!(got.v.max_abs_diff(&legacy.v), 0.0, "values must be untouched");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_records_round_trip_domain_flag_bit_identically() {
+        let dir = std::env::temp_dir().join("ifkv_store_v2_domain");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v2.bin");
+        let s = ChunkStore::new(usize::MAX);
+        s.insert(mk_chunk(3, 4));
+        s.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"IFKV2\0\0\0", "writers must emit v2");
+        let l = ChunkStore::load(&path, usize::MAX).unwrap();
+        let got = l.get(3).unwrap();
+        assert_eq!(got.key_domain, KeyDomain::Unrotated);
+        // No migration ran: the record was already position-free, and its
+        // key bytes round-tripped untouched.
+        assert_eq!(l.lifecycle().migrations.load(Ordering::Relaxed), 0);
+        assert_eq!(got.k.max_abs_diff(&mk_chunk(3, 4).k), 0.0);
         std::fs::remove_file(&path).ok();
     }
 

@@ -32,7 +32,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Result};
 
 use crate::kvcache::store::{
-    read_chunk_record, write_chunk_record, ChunkId, ChunkKv, STORE_MAGIC,
+    read_chunk_record, write_chunk_record, ChunkId, ChunkKv, STORE_MAGIC, STORE_MAGIC_V1,
 };
 use crate::util::json::Json;
 
@@ -289,11 +289,18 @@ fn read_spill_file(path: &std::path::Path, id: ChunkId) -> Result<ChunkKv> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)
         .map_err(|e| anyhow!("{}: reading magic: {e}", path.display()))?;
-    if &magic != STORE_MAGIC {
+    let v2 = if &magic == STORE_MAGIC {
+        true
+    } else if &magic == STORE_MAGIC_V1 {
+        // Legacy pre-domain-flag spill file left by an older process.  The
+        // tier stays dumb: it surfaces the record's domain as read
+        // (`RotatedLocal`) and lets the store's admission path migrate it.
+        false
+    } else {
         bail!("{}: bad magic", path.display());
-    }
+    };
     let mut remaining = total.saturating_sub(8);
-    let chunk = read_chunk_record(&mut r, &mut remaining)
+    let chunk = read_chunk_record(&mut r, &mut remaining, v2)
         .map_err(|e| anyhow!("{}: {e:#}", path.display()))?
         .ok_or_else(|| anyhow!("{}: empty spill file", path.display()))?;
     if chunk.id != id {
@@ -332,6 +339,7 @@ mod tests {
                 .unwrap(),
             v: TensorF::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
                 .unwrap(),
+            key_domain: crate::kvcache::store::KeyDomain::Unrotated,
         }
     }
 
@@ -347,6 +355,7 @@ mod tests {
         let back = tier.take(chunk.id).unwrap().expect("chunk was spilled");
         assert_eq!(back.id, chunk.id);
         assert_eq!(back.tokens, chunk.tokens);
+        assert_eq!(back.key_domain, chunk.key_domain, "domain flag must survive the tier");
         // bit-identical, not approximately equal
         assert_eq!(back.k.shape(), chunk.k.shape());
         assert_eq!(back.k.data(), chunk.k.data());

@@ -57,7 +57,7 @@ use anyhow::Result;
 use crate::config::MethodSpec;
 use crate::geometry::{self, RopeGeometry};
 use crate::guide::{Guide, GuideState};
-use crate::kvcache::{AssembledContext, BufferPool, ChunkKv, ChunkStore};
+use crate::kvcache::{AssembledContext, BufferPool, ChunkKv, ChunkStore, KeyDomain};
 use crate::plan::{Explicit, PlanBuilder, PrefillMode, QueryPlan, StageCtx};
 use crate::runtime::exec::{DecodeBatchItem, DecodeOut, ModelSession};
 use crate::runtime::resident::ResidentDecodeKv;
@@ -594,7 +594,14 @@ impl Pipeline {
                 let t0 = Instant::now();
                 let (k, v) = self.session.prefill_chunk(toks)?;
                 spent += t0.elapsed().as_secs_f64();
-                Ok(ChunkKv { id, tokens: toks.clone(), k, v })
+                // prefill_chunk emits position-free keys (deferred RoPE)
+                Ok(ChunkKv {
+                    id,
+                    tokens: toks.clone(),
+                    k,
+                    v,
+                    key_domain: KeyDomain::Unrotated,
+                })
             })?;
             out.push(chunk);
         }
@@ -714,12 +721,15 @@ impl Pipeline {
         let ctx = &prepared.ctx;
         let prompt =
             TensorI::from_vec(&[d.prompt_len], self.vocab.pad_prompt(prompt_body, d.prompt_len))?;
-        let decode_layout = geometry::decode_layout(&ctx.chunk_lens, d.prompt_len);
+        let decode_layout =
+            geometry::decode_layout(&ctx.logical_chunk_lens(), d.prompt_len);
         let ppos = TensorI::from_vec(&[d.prompt_len], decode_layout.prompt_pos.clone())?;
         let zero_delta = TensorI::zeros(&[bucket]);
+        let order = TensorI::from_vec(&[bucket], ctx.logical_row_order())?;
         let t0 = Instant::now();
         let score_out = self.session.score(
-            bucket, &prompt, &ppos, &ctx.k, &ctx.v, &zero_delta, &ctx.gpos, &ctx.valid,
+            bucket, &prompt, &ppos, &ctx.k, &ctx.v, &zero_delta, &ctx.gpos,
+            &ctx.valid, &ctx.gpos, &order,
         )?;
         timing.prompt_s += t0.elapsed().as_secs_f64();
         let kv = ResidentDecodeKv::from_context(
@@ -863,10 +873,10 @@ impl Pipeline {
         // later stage mutates this same buffer in place.
         let mut ctx = self.pool.checkout(&d, bucket, chunks)?;
 
-        // §4.3 reorder stage — an in-place permutation of the assembled
-        // buffer, not a second assembly.  The stage scores under its own
-        // policy (HL-TP norms for the paper's method; any registered signal
-        // for hybrids).
+        // §4.3 reorder stage — a metadata-only PositionMap mutation of the
+        // assembled buffer: O(chunks) index writes, zero KV bytes moved.
+        // The stage scores under its own policy (HL-TP norms for the
+        // paper's method; any registered signal for hybrids).
         let mut chunk_order: Vec<usize> = (0..chunks.len()).collect();
         if let Some(stage) = &plan.reorder {
             let t0 = Instant::now();
@@ -878,15 +888,20 @@ impl Pipeline {
             })?;
             timing.record("reorder_score", t0.elapsed().as_secs_f64());
             let t1 = Instant::now();
-            chunk_order = stage.policy.order(&scores, ctx.valid.data(), &ctx.chunk_lens);
-            ctx.permute_chunks_in_place(&chunk_order)?;
+            chunk_order =
+                stage.policy.order(&scores, ctx.valid.data(), &ctx.logical_chunk_lens());
+            ctx.reorder_chunks(&chunk_order)?;
             timing.record("reorder", t1.elapsed().as_secs_f64());
         }
 
         // Score + select + recompute (rows patched into the same buffer).
         let (mut selected, mut selected_positions) = (vec![], vec![]);
         if let Some(sel) = &plan.select {
-            let global = geometry::layout(RopeGeometry::Global, &ctx.chunk_lens, d.prompt_len);
+            let global = geometry::layout(
+                RopeGeometry::Global,
+                &ctx.logical_chunk_lens(),
+                d.prompt_len,
+            );
             let scores: Option<Vec<f32>> = match &plan.score {
                 Some(sp) if sel.needs_scores() => {
                     let t0 = Instant::now();
@@ -902,7 +917,8 @@ impl Pipeline {
                 _ => None,
             };
             let t1 = Instant::now();
-            let rows = sel.select(scores.as_deref(), ctx.valid.data(), &ctx.chunk_lens)?;
+            let rows =
+                sel.select(scores.as_deref(), ctx.valid.data(), &ctx.logical_chunk_lens())?;
             timing.record("select", t1.elapsed().as_secs_f64());
             if !rows.is_empty() {
                 let t2 = Instant::now();
@@ -915,12 +931,15 @@ impl Pipeline {
 
         // Decode-phase prompt prefill over the (possibly patched) cache:
         // stored positions as-is => delta 0.
-        let decode_layout = geometry::decode_layout(&ctx.chunk_lens, d.prompt_len);
+        let decode_layout =
+            geometry::decode_layout(&ctx.logical_chunk_lens(), d.prompt_len);
         let ppos = TensorI::from_vec(&[d.prompt_len], decode_layout.prompt_pos.clone())?;
         let zero_delta = TensorI::zeros(&[bucket]);
+        let order = TensorI::from_vec(&[bucket], ctx.logical_row_order())?;
         let t3 = Instant::now();
         let score_out = self.session.score(
-            bucket, &prompt, &ppos, &ctx.k, &ctx.v, &zero_delta, &ctx.gpos, &ctx.valid,
+            bucket, &prompt, &ppos, &ctx.k, &ctx.v, &zero_delta, &ctx.gpos,
+            &ctx.valid, &ctx.gpos, &order,
         )?;
         timing.prompt_s += t3.elapsed().as_secs_f64();
 
@@ -958,7 +977,7 @@ impl Pipeline {
         norm_layer: usize,
     ) -> Result<Vec<f32>> {
         let d = self.dims();
-        let lay = geometry::layout(g, &ctx.chunk_lens, d.prompt_len);
+        let lay = geometry::layout(g, &ctx.logical_chunk_lens(), d.prompt_len);
         let mut delta = lay.ctx_delta.clone();
         let mut gpos = lay.ctx_pos.clone();
         delta.resize(bucket, 0);
@@ -972,6 +991,8 @@ impl Pipeline {
             &TensorI::from_vec(&[bucket], delta)?,
             &TensorI::from_vec(&[bucket], gpos)?,
             &ctx.valid,
+            &ctx.gpos,
+            &TensorI::from_vec(&[bucket], ctx.logical_row_order())?,
         )?;
         let n_rows = out.scores.shape()[1];
         let layer = norm_layer.min(d.n_layers - 1);
@@ -1007,6 +1028,8 @@ impl Pipeline {
             &ks,
             &vs,
             &TensorI::from_vec(&[bucket], delta)?,
+            &ctx.gpos,
+            &TensorI::from_vec(&[bucket], ctx.logical_row_order())?,
         )?;
         Ok(scores.into_vec())
     }
@@ -1022,6 +1045,10 @@ impl Pipeline {
     ) -> Result<()> {
         let d = self.dims();
         let s_cap = d.sel_budget;
+        // Selected `rows` are LOGICAL; the buffer is storage-ordered, so
+        // token reads go through the logical row order (patch() does the
+        // same mapping internally for the row writes).
+        let lro = ctx.logical_row_order();
         // Process in global-position order, in sel_budget-sized waves.
         let mut rows: Vec<usize> = rows.to_vec();
         rows.sort_by_key(|&r| global.ctx_pos[r]);
@@ -1031,7 +1058,7 @@ impl Pipeline {
             let mut ss = vec![bucket as i32; s_cap]; // out-of-range => pad
             let mut sv = vec![0.0f32; s_cap];
             for (i, &r) in wave.iter().enumerate() {
-                st[i] = ctx.tokens.data()[r];
+                st[i] = ctx.tokens.data()[lro[r] as usize];
                 sg[i] = global.ctx_pos[r];
                 ss[i] = r as i32;
                 sv[i] = 1.0;
@@ -1040,6 +1067,8 @@ impl Pipeline {
             let mut gpos = global.ctx_pos.clone();
             delta.resize(bucket, 0);
             gpos.resize(bucket, 0);
+            // ctx.gpos (storage positions) is re-serialized every wave on
+            // purpose: the inter-wave patch updates it.
             let out = self.session.recompute(
                 bucket,
                 &TensorI::from_vec(&[s_cap], st)?,
@@ -1051,6 +1080,8 @@ impl Pipeline {
                 &TensorI::from_vec(&[bucket], delta)?,
                 &TensorI::from_vec(&[bucket], gpos)?,
                 &ctx.valid,
+                &ctx.gpos,
+                &TensorI::from_vec(&[bucket], lro.clone())?,
             )?;
             ctx.patch(&ss, &sg, wave.len(), &out.new_k, &out.new_v)?;
         }

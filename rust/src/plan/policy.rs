@@ -152,8 +152,11 @@ impl ScorePolicy for DeviationScore {
 
     fn score(&self, cx: &StageCtx<'_>) -> Result<Vec<f32>> {
         let prompt_len = cx.pipeline.dims().prompt_len;
-        let global =
-            geometry::layout(RopeGeometry::Global, &cx.ctx.chunk_lens, prompt_len);
+        let global = geometry::layout(
+            RopeGeometry::Global,
+            &cx.ctx.logical_chunk_lens(),
+            prompt_len,
+        );
         cx.pipeline.deviation_pass(cx.bucket, cx.ctx, &global)
     }
 
@@ -180,8 +183,9 @@ impl ScorePolicy for PositionalPrior {
     }
 
     fn score(&self, cx: &StageCtx<'_>) -> Result<Vec<f32>> {
+        // scores are LOGICAL-ordered, like every stage signal
         let mut out = Vec::with_capacity(cx.ctx.n());
-        for &len in &cx.ctx.chunk_lens {
+        for len in cx.ctx.logical_chunk_lens() {
             for t in 0..len {
                 out.push(1.0 / (1.0 + t as f32));
             }

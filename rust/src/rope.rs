@@ -63,6 +63,39 @@ pub fn rotate(vec: &mut [f32], delta: i64, theta: f64) {
     }
 }
 
+/// The attention-time quantization grid shared by every key materialization
+/// site (the stub mini-attention and the decode-buffer build seams).  2^-12
+/// matches the stub runtime's historical output quantization, so a key
+/// materialized at the seam is bit-identical to one the eager path rotated
+/// and quantized at prefill time.
+pub const ROTATION_GRID: f32 = 4096.0;
+
+/// Snap one value onto the attention-time quantization grid.
+pub fn snap(x: f32) -> f32 {
+    (x * ROTATION_GRID).round() / ROTATION_GRID
+}
+
+/// Materialize an attention-domain key row from an **unrotated**
+/// (position-free) stored row: rotate every head of the `[n_heads *
+/// head_dim]` row to `pos`, then snap all elements onto [`ROTATION_GRID`].
+///
+/// This is the single sanctioned crossing from the `unrotated` storage
+/// domain into the attention (`global`) domain.  Both attention seams — the
+/// stub mini-attention's key preparation and the `DecodeBuffer` /
+/// `ResidentDecodeKv` build — call exactly this function, which is what
+/// makes the deferred-RoPE path bit-identical to the old eager-rotation
+/// storage format: eager stored `snap(rotate(raw, t))`; deferred stores
+/// `raw` and computes the identical bytes here.
+// lint:converts(unrotated->global)
+pub fn materialize_row(row: &mut [f32], n_heads: usize, head_dim: usize, pos: i64, theta: f64) {
+    for h in 0..n_heads {
+        rotate(&mut row[h * head_dim..(h + 1) * head_dim], pos, theta);
+    }
+    for x in row.iter_mut() {
+        *x = snap(*x);
+    }
+}
+
 /// Table-2 statistics: for each prompt position, the max RoPE similarity to
 /// any selected-token position; reported as the mean over prompt positions
 /// (MoM) and the global max.
@@ -169,6 +202,37 @@ mod tests {
         let orig = v.clone();
         rotate(&mut v, 0, THETA);
         assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn materialize_row_is_per_head_rotate_then_snap() {
+        let heads = 2;
+        let dh = 8;
+        let mut rng = Rng::new(9);
+        let raw: Vec<f32> = (0..heads * dh).map(|_| rng.normal() as f32).collect();
+        let mut got = raw.clone();
+        materialize_row(&mut got, heads, dh, 37, THETA);
+        let mut want = raw;
+        for h in 0..heads {
+            rotate(&mut want[h * dh..(h + 1) * dh], 37, THETA);
+        }
+        for x in want.iter_mut() {
+            *x = snap(*x);
+        }
+        assert_eq!(got, want);
+        // snapping is on the 2^-12 grid
+        for &x in &got {
+            assert_eq!(x, (x * ROTATION_GRID).round() / ROTATION_GRID);
+        }
+    }
+
+    #[test]
+    fn materialize_at_zero_still_snaps() {
+        // Position 0 is a no-op rotation but NOT a no-op materialization:
+        // eager storage always quantized, so the seam must too.
+        let mut row = vec![0.300_000_1_f32, -0.123_456_7];
+        materialize_row(&mut row, 1, 2, 0, THETA);
+        assert_eq!(row, vec![snap(0.300_000_1), snap(-0.123_456_7)]);
     }
 
     #[test]

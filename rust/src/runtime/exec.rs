@@ -122,7 +122,15 @@ impl ModelSession {
     }
 
     /// Chunk-local prefill: `tokens` must be exactly `chunk` long.
-    /// Returns (k, v) of shape [L, C, H, Dh] under chunk-local RoPE.
+    /// Returns (k, v) of shape [L, C, H, Dh]; keys are POSITION-FREE (raw
+    /// unrotated embeds) under the deferred-RoPE storage contract.
+    ///
+    /// PJRT note: pre-deferred AOT `prefill_chunk` artifacts emit keys
+    /// rotated at chunk-local positions.  Until rebuilt artifacts ship, a
+    /// PJRT deployment must either un-rotate the returned keys host-side
+    /// (the same backward `rope::rotate` the store's IFKV1 migration runs)
+    /// or tag the produced chunks `KeyDomain::RotatedLocal` and let the
+    /// store migrate them on admission.
     pub fn prefill_chunk(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
         let c = self.runtime.manifest.model.chunk;
         if tokens.len() != c {
@@ -138,22 +146,38 @@ impl ModelSession {
     }
 
     /// Prompt scoring over a cached context under a positional layout.
+    ///
+    /// Deferred-RoPE convention (all context-consuming entry points):
+    /// `ctx_k`/`ctx_v`/`ctx_valid`/`ctx_spos` are in STORAGE order with
+    /// position-free keys and `ctx_spos` holding each row's storage
+    /// position (the buffer's `gpos` tensor — what the eager path had baked
+    /// into the stored bytes); `ctx_order` gathers logical row j from
+    /// storage row `ctx_order[j]` (see
+    /// `AssembledContext::logical_row_order`); `ctx_delta` and `ctx_gpos`
+    /// (target positions) stay LOGICAL-indexed and outputs land at logical
+    /// indices.
+    ///
+    /// PJRT note: the spos/order operands are appended LAST in the literal
+    /// list; pre-deferred AOT artifacts (which expect physically-ordered,
+    /// eagerly rotated context and neither operand) need a rebuild.
     #[allow(clippy::too_many_arguments)]
     pub fn score(
         &self,
         bucket: usize,
         prompt: &TensorI,       // [P]
         prompt_pos: &TensorI,   // [P]
-        ctx_k: &TensorF,        // [L, N, H, Dh]
-        ctx_v: &TensorF,        // [L, N, H, Dh]
-        ctx_delta: &TensorI,    // [N]
-        ctx_gpos: &TensorI,     // [N]
-        ctx_valid: &TensorF,    // [N]
+        ctx_k: &TensorF,        // [L, N, H, Dh] position-free, storage order
+        ctx_v: &TensorF,        // [L, N, H, Dh] storage order
+        ctx_delta: &TensorI,    // [N] logical-indexed
+        ctx_gpos: &TensorI,     // [N] target positions (unused by score)
+        ctx_valid: &TensorF,    // [N] storage order
+        ctx_spos: &TensorI,     // [N] storage positions
+        ctx_order: &TensorI,    // [N] logical -> storage row gather
     ) -> Result<ScoreOut> {
         if let Some(stub) = self.runtime.stub_model() {
             return stub.score(
                 bucket, prompt, prompt_pos, ctx_k, ctx_v, ctx_delta, ctx_gpos,
-                ctx_valid,
+                ctx_valid, ctx_spos, ctx_order,
             );
         }
         let p = self.runtime.manifest.model.prompt_len;
@@ -165,10 +189,12 @@ impl ModelSession {
         let a5 = tensor_i_to_literal(ctx_delta)?;
         let a6 = tensor_i_to_literal(ctx_gpos)?;
         let a7 = tensor_f_to_literal(ctx_valid)?;
+        let a8 = tensor_i_to_literal(ctx_spos)?;
+        let a9 = tensor_i_to_literal(ctx_order)?;
         let out = self.run(
             "score",
             Some(bucket),
-            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7],
+            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7, &a8, &a9],
         )?;
         Ok(ScoreOut {
             scores: literal_to_tensor_f(&out[0])?,
@@ -187,16 +213,18 @@ impl ModelSession {
         sel_gpos: &TensorI,   // [S]
         sel_slot: &TensorI,   // [S] row index in the ctx buffer (>= N: pad)
         sel_valid: &TensorF,  // [S]
-        ctx_k: &TensorF,
-        ctx_v: &TensorF,
-        ctx_delta: &TensorI,
-        ctx_gpos: &TensorI,
-        ctx_valid: &TensorF,
+        ctx_k: &TensorF,      // storage order, position-free keys
+        ctx_v: &TensorF,      // storage order
+        ctx_delta: &TensorI,  // logical-indexed
+        ctx_gpos: &TensorI,   // target positions, logical-indexed
+        ctx_valid: &TensorF,  // storage order
+        ctx_spos: &TensorI,   // storage positions
+        ctx_order: &TensorI,  // logical -> storage row gather
     ) -> Result<RecomputeOut> {
         if let Some(stub) = self.runtime.stub_model() {
             return stub.recompute(
                 bucket, sel_tokens, sel_gpos, sel_slot, sel_valid, ctx_k, ctx_v,
-                ctx_delta, ctx_gpos, ctx_valid,
+                ctx_delta, ctx_gpos, ctx_valid, ctx_spos, ctx_order,
             );
         }
         let a0 = tensor_i_to_literal(sel_tokens)?;
@@ -208,10 +236,12 @@ impl ModelSession {
         let a6 = tensor_i_to_literal(ctx_delta)?;
         let a7 = tensor_i_to_literal(ctx_gpos)?;
         let a8 = tensor_f_to_literal(ctx_valid)?;
+        let a9 = tensor_i_to_literal(ctx_spos)?;
+        let a10 = tensor_i_to_literal(ctx_order)?;
         let out = self.run(
             "recompute",
             Some(bucket),
-            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7, &a8],
+            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7, &a8, &a9, &a10],
         )?;
         Ok(RecomputeOut {
             new_k: literal_to_tensor_f(&out[0])?,
@@ -294,21 +324,26 @@ impl ModelSession {
             .collect()
     }
 
-    /// CacheBlend-style shallow-layer deviation probe. Returns [N] scores.
+    /// CacheBlend-style shallow-layer deviation probe. Returns [N] scores
+    /// at LOGICAL indices (same storage-order + `ctx_order` convention as
+    /// [`ModelSession::score`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn deviation(
         &self,
         bucket: usize,
-        ctx_tokens: &TensorI,  // [N]
-        ctx_gpos: &TensorI,    // [N] target (global) positions
-        ctx_valid: &TensorF,   // [N]
-        ctx_k_shallow: &TensorF, // [dev_layers, N, H, Dh]
+        ctx_tokens: &TensorI,  // [N] storage order
+        ctx_gpos: &TensorI,    // [N] target positions, logical-indexed
+        ctx_valid: &TensorF,   // [N] storage order
+        ctx_k_shallow: &TensorF, // [dev_layers, N, H, Dh] position-free
         ctx_v_shallow: &TensorF, // [dev_layers, N, H, Dh]
-        ctx_delta: &TensorI,   // [N]
+        ctx_delta: &TensorI,   // [N] logical-indexed
+        ctx_spos: &TensorI,    // [N] storage positions
+        ctx_order: &TensorI,   // [N] logical -> storage row gather
     ) -> Result<TensorF> {
         if let Some(stub) = self.runtime.stub_model() {
             return stub.deviation(
                 bucket, ctx_tokens, ctx_gpos, ctx_valid, ctx_k_shallow,
-                ctx_v_shallow, ctx_delta,
+                ctx_v_shallow, ctx_delta, ctx_spos, ctx_order,
             );
         }
         let a0 = tensor_i_to_literal(ctx_tokens)?;
@@ -317,10 +352,12 @@ impl ModelSession {
         let a3 = tensor_f_to_literal(ctx_k_shallow)?;
         let a4 = tensor_f_to_literal(ctx_v_shallow)?;
         let a5 = tensor_i_to_literal(ctx_delta)?;
+        let a6 = tensor_i_to_literal(ctx_spos)?;
+        let a7 = tensor_i_to_literal(ctx_order)?;
         let out = self.run(
             "deviation",
             Some(bucket),
-            &[&a0, &a1, &a2, &a3, &a4, &a5],
+            &[&a0, &a1, &a2, &a3, &a4, &a5, &a6, &a7],
         )?;
         literal_to_tensor_f(&out[0])
     }

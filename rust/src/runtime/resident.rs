@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 use crate::kvcache::counters;
 use crate::kvcache::AssembledContext;
 use crate::manifest::ModelDims;
+use crate::rope;
 use crate::runtime::literal::{literal_to_tensor_f, literal_to_tensor_i, vec_to_literal};
 use crate::tensor::{TensorF, TensorI};
 
@@ -34,9 +35,17 @@ pub struct ResidentDecodeKv {
 
 impl ResidentDecodeKv {
     /// Build the decode literal directly from the assembled (already
-    /// permuted/patched) context and the prompt KV from the score pass:
+    /// reordered/patched) context and the prompt KV from the score pass:
     /// context rows, then prompt rows, then zeroed answer slots — one
     /// allocation, one pass, no intermediate host decode buffer.
+    ///
+    /// This is the production attention seam of the deferred-RoPE design:
+    /// context rows are gathered in LOGICAL order (through the context's
+    /// `PositionMap`) during the one pass this build already makes, and
+    /// each position-free key row is converted to the attention domain by
+    /// [`rope::materialize_row`] at its storage position `ctx.gpos[r]` —
+    /// the same per-row conversion `DecodeBuffer::new` performs, so the two
+    /// stay bit-identical.
     pub fn from_context(
         dims: &ModelDims,
         ctx: &AssembledContext,
@@ -66,12 +75,24 @@ impl ResidentDecodeKv {
         let bucket = ctx.bucket;
         let t_total = bucket + p + dims.answer_buf;
         counters::bump(|s| s.decode_uploads_full += 1);
+        let lro = ctx.logical_row_order();
         let mut kd: Vec<f32> = Vec::with_capacity(l * t_total * row);
         let mut vd: Vec<f32> = Vec::with_capacity(l * t_total * row);
         for li in 0..l {
-            let cs = li * bucket * row;
-            kd.extend_from_slice(&ctx.k.data()[cs..cs + bucket * row]);
-            vd.extend_from_slice(&ctx.v.data()[cs..cs + bucket * row]);
+            for &pr in &lro {
+                let r = pr as usize;
+                let cs = (li * bucket + r) * row;
+                let at = kd.len();
+                kd.extend_from_slice(&ctx.k.data()[cs..cs + row]);
+                rope::materialize_row(
+                    &mut kd[at..at + row],
+                    h,
+                    dh,
+                    ctx.gpos.data()[r] as i64,
+                    dims.rope_theta,
+                );
+                vd.extend_from_slice(&ctx.v.data()[cs..cs + row]);
+            }
             let ps = li * p * row;
             kd.extend_from_slice(&prompt_k.data()[ps..ps + p * row]);
             vd.extend_from_slice(&prompt_v.data()[ps..ps + p * row]);
@@ -79,11 +100,11 @@ impl ResidentDecodeKv {
             vd.resize((li + 1) * t_total * row, 0.0);
         }
         let mut gd: Vec<i32> = Vec::with_capacity(t_total);
-        gd.extend_from_slice(ctx.gpos.data());
+        gd.extend(lro.iter().map(|&pr| ctx.gpos.data()[pr as usize]));
         gd.extend_from_slice(prompt_pos);
         gd.resize(t_total, 0);
         let mut vald: Vec<f32> = Vec::with_capacity(t_total);
-        vald.extend_from_slice(ctx.valid.data());
+        vald.extend(lro.iter().map(|&pr| ctx.valid.data()[pr as usize]));
         vald.resize(bucket + p, 1.0);
         vald.resize(t_total, 0.0);
         Ok(ResidentDecodeKv {
@@ -275,6 +296,7 @@ mod tests {
             tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
             k: rand_tensor(rng, &shape),
             v: rand_tensor(rng, &shape),
+            key_domain: crate::kvcache::store::KeyDomain::Unrotated,
         })
     }
 
@@ -313,6 +335,29 @@ mod tests {
         let nk = rand_tensor(&mut rng, &rshape);
         assert!(kv.append(&nk, &nk).is_err());
         assert!(reference.append(&nk, &nk).is_err());
+    }
+
+    #[test]
+    fn resident_matches_reference_after_metadata_reorder() {
+        // Both seams must perform the same logical gather + key
+        // materialization, so a metadata-reordered context produces
+        // bit-identical decode state through either path.
+        let d = dims();
+        let mut rng = Rng::new(29);
+        let chunks = [
+            rand_chunk(&mut rng, 1, 8),
+            rand_chunk(&mut rng, 2, 8),
+            rand_chunk(&mut rng, 3, 8),
+        ];
+        let mut ctx = crate::kvcache::AssembledContext::new(&d, 32, &chunks).unwrap();
+        ctx.reorder_chunks(&[2, 0, 1]).unwrap();
+        let pshape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+        let pk = rand_tensor(&mut rng, &pshape);
+        let pv = rand_tensor(&mut rng, &pshape);
+        let ppos: Vec<i32> = (24..28).collect();
+        let kv = ResidentDecodeKv::from_context(&d, &ctx, &pk, &pv, &ppos).unwrap();
+        let reference = DecodeBuffer::new(&d, &ctx, &pk, &pv, &ppos);
+        assert_matches_reference(&kv, &reference, "reordered build");
     }
 
     #[test]

@@ -14,6 +14,17 @@
 //!   actually changes answers — the full method matrix is exercisable
 //!   end to end.
 //!
+//! **Deferred RoPE.** Stored context keys are position-free: `prefill_chunk`
+//! emits RAW unrotated (and unquantized) key rows, and every context-
+//! consuming executable (`score`, `recompute`, `deviation`) materializes the
+//! attention-domain key at its storage position `ctx_gpos[r]` — via
+//! [`StubModel::rotate_row`], the same rotate-then-snap the old eager path
+//! baked into storage — before applying the layout's `ctx_delta`.  Context
+//! buffers arrive in STORAGE order with a `ctx_order` logical gather vector;
+//! the executables walk and EMIT in logical order, so scores, deviations and
+//! f32 summation order are bit-identical to the physically-permuted eager
+//! reference.
+//!
 //! Not a trained model: outputs are structurally plausible, deterministic
 //! token streams, which is exactly what the artifact-free conformance and
 //! serving tests need (they lock in *behavior*, not accuracy).  Every
@@ -35,11 +46,13 @@ const KIND_Q: u64 = 3;
 const KIND_UNEMBED: u64 = 4;
 
 /// Quantization grid (2^12): transcendental outputs are snapped to it so
-/// cross-platform libm jitter cannot flip an argmax.
-const GRID: f32 = 4096.0;
+/// cross-platform libm jitter cannot flip an argmax.  Shared with the
+/// attention-boundary key materialization ([`rope::ROTATION_GRID`]) — the
+/// deferred and eager paths must quantize identically to stay bit-equal.
+const GRID: f32 = rope::ROTATION_GRID;
 
 fn q(x: f32) -> f32 {
-    (x * GRID).round() / GRID
+    rope::snap(x)
 }
 
 /// Small dims the artifact-free tests run on: big enough that every stage
@@ -99,14 +112,10 @@ impl StubModel {
     }
 
     /// RoPE-rotate a [H*Dh] row per head by `delta` positions, quantized.
+    /// Delegates to [`rope::materialize_row`] — the one rotate-then-snap
+    /// implementation both attention seams share.
     fn rotate_row(&self, row: &mut [f32], delta: i64) {
-        let dh = self.d.head_dim;
-        for h in 0..self.d.n_heads {
-            rope::rotate(&mut row[h * dh..(h + 1) * dh], delta, self.d.rope_theta);
-        }
-        for x in row.iter_mut() {
-            *x = q(*x);
-        }
+        rope::materialize_row(row, self.d.n_heads, self.d.head_dim, delta, self.d.rope_theta);
     }
 
     /// Base embedding rotated to `pos`.
@@ -207,9 +216,13 @@ impl StubModel {
 
     // -- executable semantics ------------------------------------------------
 
-    /// Chunk-local prefill: keys RoPE'd at local positions, values mixed by
-    /// causal attention *within the chunk* (so chunk-local KV genuinely
-    /// differs from globally recomputed KV).
+    /// Chunk-local prefill.  Internal attention still runs over keys RoPE'd
+    /// at local positions (so chunk-local VALUES genuinely differ from
+    /// globally recomputed ones), but the KEYS this returns are position-
+    /// free: raw unrotated, unquantized embeds.  The attention seams
+    /// ([`StubModel::score`] et al., [`DecodeBuffer::new`],
+    /// [`ResidentDecodeKv::from_context`]) materialize them at their storage
+    /// positions on the way in.
     pub fn prefill_chunk(&self, tokens: &[i32]) -> Result<(TensorF, TensorF)> {
         let d = &self.d;
         let c = tokens.len();
@@ -232,9 +245,10 @@ impl StubModel {
             for t in 0..c {
                 let rows: Vec<usize> = (0..=t).collect();
                 let mixed = self.attend(&qs[t], &ks, &vs, &rows);
+                let raw_k = self.embed(KIND_K, tokens[t], li);
                 let base = (li * c + t) * row;
                 for i in 0..row {
-                    k.data_mut()[base + i] = ks[t][i];
+                    k.data_mut()[base + i] = raw_k[i];
                     v.data_mut()[base + i] = q(vs[t][i] + 0.5 * mixed[i]);
                 }
             }
@@ -242,10 +256,13 @@ impl StubModel {
         Ok((k, v))
     }
 
-    /// Prompt scoring under a positional layout: cached keys are re-rotated
-    /// by `ctx_delta`, prompt queries attend over them (plus earlier prompt
+    /// Prompt scoring under a positional layout: cached keys are
+    /// materialized at their storage positions (`ctx_spos`), re-rotated by
+    /// `ctx_delta`, prompt queries attend over them (plus earlier prompt
     /// rows), and the per-row attention mass times the value norm is the
-    /// Eq.7-style score.
+    /// Eq.7-style score.  Context tensors are in STORAGE order; `ctx_order`
+    /// maps logical row j to its storage row; `ctx_delta` is LOGICAL-indexed
+    /// and scores are emitted at logical indices.
     #[allow(clippy::too_many_arguments)]
     pub fn score(
         &self,
@@ -257,25 +274,40 @@ impl StubModel {
         ctx_delta: &TensorI,
         _ctx_gpos: &TensorI,
         ctx_valid: &TensorF,
+        ctx_spos: &TensorI,
+        ctx_order: &TensorI,
     ) -> Result<ScoreOut> {
         let d = &self.d;
         let (l, p) = (d.n_layers, d.prompt_len);
         let (h, dh) = (d.n_heads, d.head_dim);
         let row = h * dh;
-        if prompt.len() != p || ctx_valid.len() < bucket || ctx_delta.len() < bucket {
+        if prompt.len() != p
+            || ctx_valid.len() < bucket
+            || ctx_delta.len() < bucket
+            || ctx_spos.len() < bucket
+            || ctx_order.len() < bucket
+        {
             bail!("stub score: inconsistent shapes");
         }
+        let ord: Vec<usize> =
+            ctx_order.data()[..bucket].iter().map(|&x| x as usize).collect();
         let valid_rows: Vec<usize> =
-            (0..bucket).filter(|&r| ctx_valid.data()[r] > 0.0).collect();
+            (0..bucket).filter(|&j| ctx_valid.data()[ord[j]] > 0.0).collect();
         let mut scores = TensorF::zeros(&[l, bucket]);
         let mut pk = TensorF::zeros(&[l, p, h, dh]);
         let mut pv = TensorF::zeros(&[l, p, h, dh]);
         let mut last_state = vec![0.0f32; row];
         for li in 0..l {
             let mut keys: Vec<Vec<f32>> = (0..bucket)
-                .map(|r| {
+                .map(|j| {
+                    let r = ord[j];
                     let mut key = Self::kv_row(ctx_k, li, bucket, r, row);
-                    let delta = ctx_delta.data()[r];
+                    // storage->attention: materialize the position-free key
+                    // at its storage position (always — the snap is part of
+                    // the eager storage history we replicate)...
+                    self.rotate_row(&mut key, ctx_spos.data()[r] as i64);
+                    // ...then apply the layout's logical delta on top.
+                    let delta = ctx_delta.data()[j];
                     if delta != 0 {
                         self.rotate_row(&mut key, delta as i64);
                     }
@@ -283,7 +315,7 @@ impl StubModel {
                 })
                 .collect();
             let mut vals: Vec<Vec<f32>> = (0..bucket)
-                .map(|r| Self::kv_row(ctx_v, li, bucket, r, row))
+                .map(|j| Self::kv_row(ctx_v, li, bucket, ord[j], row))
                 .collect();
             let mut mass = vec![0.0f32; bucket + p];
             for pi in 0..p {
@@ -320,8 +352,11 @@ impl StubModel {
     }
 
     /// Fresh KV for the selected tokens at their global positions (the
-    /// selective_attn kernel): keys re-RoPE'd, values re-mixed by causal
-    /// attention over the re-rotated cached context.
+    /// selective_attn kernel): cached keys materialized at their storage
+    /// positions and re-RoPE'd by the layout delta, values re-mixed by
+    /// causal attention over them.  The NEW keys it emits are position-free
+    /// raw embeds, so patching them back keeps the buffer uniformly
+    /// unrotated (the seam re-materializes at the patched `gpos`).
     #[allow(clippy::too_many_arguments)]
     pub fn recompute(
         &self,
@@ -335,6 +370,8 @@ impl StubModel {
         ctx_delta: &TensorI,
         ctx_gpos: &TensorI,
         ctx_valid: &TensorF,
+        ctx_spos: &TensorI,
+        ctx_order: &TensorI,
     ) -> Result<RecomputeOut> {
         let d = &self.d;
         let (l, h, dh) = (d.n_layers, d.n_heads, d.head_dim);
@@ -343,13 +380,20 @@ impl StubModel {
         if sel_gpos.len() != s || sel_valid.len() != s {
             bail!("stub recompute: inconsistent selection shapes");
         }
+        if ctx_gpos.len() < bucket || ctx_spos.len() < bucket || ctx_order.len() < bucket {
+            bail!("stub recompute: inconsistent context shapes");
+        }
+        let ord: Vec<usize> =
+            ctx_order.data()[..bucket].iter().map(|&x| x as usize).collect();
         let mut new_k = TensorF::zeros(&[l, s, h, dh]);
         let mut new_v = TensorF::zeros(&[l, s, h, dh]);
         for li in 0..l {
             let keys: Vec<Vec<f32>> = (0..bucket)
-                .map(|r| {
+                .map(|j| {
+                    let r = ord[j];
                     let mut key = Self::kv_row(ctx_k, li, bucket, r, row);
-                    let delta = ctx_delta.data()[r];
+                    self.rotate_row(&mut key, ctx_spos.data()[r] as i64);
+                    let delta = ctx_delta.data()[j];
                     if delta != 0 {
                         self.rotate_row(&mut key, delta as i64);
                     }
@@ -357,7 +401,7 @@ impl StubModel {
                 })
                 .collect();
             let vals: Vec<Vec<f32>> = (0..bucket)
-                .map(|r| Self::kv_row(ctx_v, li, bucket, r, row))
+                .map(|j| Self::kv_row(ctx_v, li, bucket, ord[j], row))
                 .collect();
             for i in 0..s {
                 if sel_valid.data()[i] <= 0.0 {
@@ -365,14 +409,17 @@ impl StubModel {
                 }
                 let tok = sel_tokens.data()[i];
                 let gp = sel_gpos.data()[i];
+                // causal filter over the layout's TARGET positions (logical-
+                // indexed, like ctx_delta — NOT the storage positions)
                 let rows: Vec<usize> = (0..bucket)
-                    .filter(|&r| {
-                        ctx_valid.data()[r] > 0.0 && ctx_gpos.data()[r] <= gp
+                    .filter(|&j| {
+                        ctx_valid.data()[ord[j]] > 0.0
+                            && ctx_gpos.data()[j] <= gp
                     })
                     .collect();
                 let qp = self.embed_at(KIND_Q, tok, li, gp);
                 let mixed = self.attend(&qp, &keys, &vals, &rows);
-                let nk = self.embed_at(KIND_K, tok, li, gp);
+                let nk = self.embed(KIND_K, tok, li);
                 let vb = self.vbase(tok, li);
                 let base = (li * s + i) * row;
                 for j in 0..row {
@@ -440,7 +487,8 @@ impl StubModel {
 
     /// CacheBlend-style shallow-layer deviation: how far each stored value
     /// row is from what a full-context recompute at the target positions
-    /// would produce.
+    /// would produce.  Same storage-order + `ctx_order` convention as
+    /// [`StubModel::score`]; deviations are emitted at logical indices.
     #[allow(clippy::too_many_arguments)]
     pub fn deviation(
         &self,
@@ -451,19 +499,29 @@ impl StubModel {
         ctx_k_shallow: &TensorF,
         ctx_v_shallow: &TensorF,
         ctx_delta: &TensorI,
+        ctx_spos: &TensorI,
+        ctx_order: &TensorI,
     ) -> Result<TensorF> {
         let d = &self.d;
         let r_layers = d.dev_layers.min(d.n_layers);
         let row = self.row();
-        if ctx_tokens.len() < bucket || ctx_valid.len() < bucket {
+        if ctx_tokens.len() < bucket
+            || ctx_valid.len() < bucket
+            || ctx_spos.len() < bucket
+            || ctx_order.len() < bucket
+        {
             bail!("stub deviation: inconsistent shapes");
         }
+        let ord: Vec<usize> =
+            ctx_order.data()[..bucket].iter().map(|&x| x as usize).collect();
         let mut dev = vec![0.0f32; bucket];
         for li in 0..r_layers {
             let keys: Vec<Vec<f32>> = (0..bucket)
-                .map(|r| {
+                .map(|j| {
+                    let r = ord[j];
                     let mut key = Self::kv_row(ctx_k_shallow, li, bucket, r, row);
-                    let delta = ctx_delta.data()[r];
+                    self.rotate_row(&mut key, ctx_spos.data()[r] as i64);
+                    let delta = ctx_delta.data()[j];
                     if delta != 0 {
                         self.rotate_row(&mut key, delta as i64);
                     }
@@ -471,29 +529,31 @@ impl StubModel {
                 })
                 .collect();
             let vals: Vec<Vec<f32>> = (0..bucket)
-                .map(|r| Self::kv_row(ctx_v_shallow, li, bucket, r, row))
+                .map(|j| Self::kv_row(ctx_v_shallow, li, bucket, ord[j], row))
                 .collect();
-            for r in 0..bucket {
-                if ctx_valid.data()[r] <= 0.0 {
+            for j in 0..bucket {
+                if ctx_valid.data()[ord[j]] <= 0.0 {
                     continue;
                 }
-                let tok = ctx_tokens.data()[r];
-                let gp = ctx_gpos.data()[r];
+                let tok = ctx_tokens.data()[ord[j]];
+                // target position + causal filter are logical-indexed
+                let gp = ctx_gpos.data()[j];
                 let rows: Vec<usize> = (0..bucket)
-                    .filter(|&j| {
-                        ctx_valid.data()[j] > 0.0 && ctx_gpos.data()[j] <= gp
+                    .filter(|&jj| {
+                        ctx_valid.data()[ord[jj]] > 0.0
+                            && ctx_gpos.data()[jj] <= gp
                     })
                     .collect();
                 let qp = self.embed_at(KIND_Q, tok, li, gp);
                 let mixed = self.attend(&qp, &keys, &vals, &rows);
                 let vb = self.vbase(tok, li);
-                let stored = &vals[r];
+                let stored = &vals[j];
                 let mut sum = 0.0f32;
                 for i in 0..row {
                     let expect = q(vb[i] + 0.5 * mixed[i]);
                     sum += (expect - stored[i]).abs();
                 }
-                dev[r] = q(dev[r] + sum);
+                dev[j] = q(dev[j] + sum);
             }
         }
         TensorF::from_vec(&[bucket], dev)
@@ -621,8 +681,14 @@ mod tests {
         valid.data_mut()[..16].fill(1.0);
         let prompt = TensorI::from_vec(&[p], vec![2, 20, 3, 0]).unwrap();
         let ppos = TensorI::from_vec(&[p], (16..16 + p as i32).collect()).unwrap();
+        let spos = TensorI::zeros(&[bucket]);
+        let order =
+            TensorI::from_vec(&[bucket], (0..bucket as i32).collect()).unwrap();
         let out = m
-            .score(bucket, &prompt, &ppos, &ctx_k, &ctx_v, &delta, &gpos, &valid)
+            .score(
+                bucket, &prompt, &ppos, &ctx_k, &ctx_v, &delta, &gpos, &valid,
+                &spos, &order,
+            )
             .unwrap();
         assert_eq!(out.scores.shape(), &[l, bucket]);
         assert_eq!(out.prompt_k.shape(), &[l, p, h, dh]);
@@ -660,10 +726,13 @@ mod tests {
         let delta = TensorI::zeros(&[bucket]);
         let gpos = TensorI::from_vec(&[bucket], (0..bucket as i32).collect()).unwrap();
         let valid = TensorF::full(&[bucket], 1.0);
+        let spos = TensorI::from_vec(&[bucket], (0..bucket as i32).collect()).unwrap();
+        let order =
+            TensorI::from_vec(&[bucket], (0..bucket as i32).collect()).unwrap();
         let out = m
             .recompute(
                 bucket, &sel_tok, &sel_gpos, &sel_slot, &sel_valid, &k, &v, &delta,
-                &gpos, &valid,
+                &gpos, &valid, &spos, &order,
             )
             .unwrap();
         let row = d.n_heads * d.head_dim;
@@ -671,6 +740,107 @@ mod tests {
         let orig = &v.data()[8 * row..9 * row];
         let fresh = &out.new_v.data()[..row];
         assert_ne!(orig, fresh, "recompute must change the value row");
+    }
+
+    #[test]
+    fn storage_order_with_gather_matches_physical_order() {
+        // The deferred seam's contract: handing score() storage-ordered
+        // tensors plus a logical gather vector must be bit-identical to
+        // handing it the physically reordered tensors with identity order.
+        let m = model();
+        let d = default_dims();
+        let bucket = 8usize;
+        let (l, h, dh, p) = (d.n_layers, d.n_heads, d.head_dim, d.prompt_len);
+        let row = h * dh;
+        // storage-ordered raw (unrotated) keys: one distinct token per row
+        let mut ctx_k = TensorF::zeros(&[l, bucket, h, dh]);
+        let mut ctx_v = TensorF::zeros(&[l, bucket, h, dh]);
+        for li in 0..l {
+            for r in 0..bucket {
+                let kk = m.embed(KIND_K, 40 + r as i32, li);
+                let vv = m.vbase(40 + r as i32, li);
+                let base = (li * bucket + r) * row;
+                ctx_k.data_mut()[base..base + row].copy_from_slice(&kk);
+                ctx_v.data_mut()[base..base + row].copy_from_slice(&vv);
+            }
+        }
+        let gpos_s: Vec<i32> = vec![3, 0, 5, 2, 7, 1, 4, 6];
+        let gpos = TensorI::from_vec(&[bucket], gpos_s.clone()).unwrap();
+        let valid = TensorF::full(&[bucket], 1.0);
+        let ord: Vec<i32> = vec![4, 2, 7, 0, 3, 6, 1, 5];
+        let order = TensorI::from_vec(&[bucket], ord.clone()).unwrap();
+        let ident =
+            TensorI::from_vec(&[bucket], (0..bucket as i32).collect()).unwrap();
+        // logical-indexed delta, deliberately non-uniform
+        let delta =
+            TensorI::from_vec(&[bucket], vec![2, 0, 1, 3, 0, 5, 1, 0]).unwrap();
+        // physically reordered twin
+        let mut pk = TensorF::zeros(&[l, bucket, h, dh]);
+        let mut pv = TensorF::zeros(&[l, bucket, h, dh]);
+        let mut pg = vec![0i32; bucket];
+        for li in 0..l {
+            for j in 0..bucket {
+                let r = ord[j] as usize;
+                let src = (li * bucket + r) * row;
+                let dst = (li * bucket + j) * row;
+                pk.data_mut()[dst..dst + row]
+                    .copy_from_slice(&ctx_k.data()[src..src + row].to_vec());
+                pv.data_mut()[dst..dst + row]
+                    .copy_from_slice(&ctx_v.data()[src..src + row].to_vec());
+                pg[j] = gpos_s[r];
+            }
+        }
+        let pgpos = TensorI::from_vec(&[bucket], pg).unwrap();
+        let prompt = TensorI::from_vec(&[p], vec![2, 20, 3, 0]).unwrap();
+        let ppos = TensorI::from_vec(&[p], (8..8 + p as i32).collect()).unwrap();
+        let a = m
+            .score(
+                bucket, &prompt, &ppos, &ctx_k, &ctx_v, &delta, &gpos, &valid,
+                &gpos, &order,
+            )
+            .unwrap();
+        let b = m
+            .score(
+                bucket, &prompt, &ppos, &pk, &pv, &delta, &pgpos, &valid,
+                &pgpos, &ident,
+            )
+            .unwrap();
+        assert_eq!(a.scores.data(), b.scores.data());
+        assert_eq!(a.last_logits.data(), b.last_logits.data());
+        // target positions are LOGICAL-indexed — the same vector on both
+        // sides; only the storage positions follow the physical shuffle
+        let tgt = TensorI::from_vec(&[bucket], (20..28).collect()).unwrap();
+        let dev_a = m
+            .deviation(
+                bucket,
+                &TensorI::from_vec(&[bucket], (40..48).collect()).unwrap(),
+                &tgt,
+                &valid,
+                &ctx_k,
+                &ctx_v,
+                &delta,
+                &gpos,
+                &order,
+            )
+            .unwrap();
+        let mut ptoks = vec![0i32; bucket];
+        for j in 0..bucket {
+            ptoks[j] = 40 + ord[j];
+        }
+        let dev_b = m
+            .deviation(
+                bucket,
+                &TensorI::from_vec(&[bucket], ptoks).unwrap(),
+                &tgt,
+                &valid,
+                &pk,
+                &pv,
+                &delta,
+                &pgpos,
+                &ident,
+            )
+            .unwrap();
+        assert_eq!(dev_a.data(), dev_b.data());
     }
 
     #[test]

@@ -5,6 +5,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 #[derive(Debug, Clone)]
 pub struct Summary {
     pub n: usize,
@@ -32,6 +34,19 @@ impl Summary {
             min_s: xs[0],
             max_s: xs[n - 1],
         })
+    }
+
+    /// Machine-readable form for `BENCH_*.json` result files (CI uploads
+    /// these as artifacts, so the keys are part of the bench contract).
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::from(self.n)),
+            ("mean_s", Json::from(self.mean_s)),
+            ("median_s", Json::from(self.median_s)),
+            ("p95_s", Json::from(self.p95_s)),
+            ("min_s", Json::from(self.min_s)),
+            ("max_s", Json::from(self.max_s)),
+        ])
     }
 
     pub fn fmt_ms(&self) -> String {
@@ -133,6 +148,14 @@ mod tests {
         // regression: Bench::new(_, 0).run(..) used to abort
         let out = Bench::new(0, 0).run("noop", || 1 + 1);
         assert!(out.is_none());
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let s = Summary::from_samples(vec![3.0, 1.0, 2.0]).unwrap();
+        let j = Json::parse(&s.json().to_string_compact()).unwrap();
+        assert_eq!(j.get("n").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("median_s").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

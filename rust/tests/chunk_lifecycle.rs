@@ -9,7 +9,7 @@ use std::sync::{mpsc, Arc, Barrier};
 use std::time::Duration;
 
 use anyhow::bail;
-use infoflow_kv::kvcache::{ChunkKv, ChunkStore, SpillTier};
+use infoflow_kv::kvcache::{ChunkKv, ChunkStore, KeyDomain, SpillTier};
 use infoflow_kv::tensor::TensorF;
 use infoflow_kv::util::rng::Rng;
 
@@ -29,6 +29,7 @@ fn det_chunk(id: u64) -> ChunkKv {
             .unwrap(),
         v: TensorF::from_vec(&dims, (0..n).map(|_| rng.normal() as f32).collect())
             .unwrap(),
+        key_domain: KeyDomain::Unrotated,
     }
 }
 

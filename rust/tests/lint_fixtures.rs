@@ -725,6 +725,53 @@ fn f(lens: &[usize]) -> Vec<i32> {
     assert!(hits[0].message.contains("converter `to_global`"), "{}", hits[0].message);
 }
 
+#[test]
+fn position_domain_triggers_on_unrotated_keys_reaching_attention() {
+    // Deferred-RoPE doctrine: resident K is position-free (`unrotated`);
+    // handing it to an attention-facing consumer without the rotation seam
+    // is exactly the bug class the refactor makes possible.
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(unrotated)
+fn stored_keys(rows: usize) -> Vec<f32> { Vec::new() }
+// lint:domain(global)
+fn attention_scores(keys: &[f32]) -> usize { keys.len() }
+fn f(rows: usize) -> usize {
+    let k = stored_keys(rows);
+    attention_scores(&k)
+}
+"#,
+    );
+    let hits = rule_diags(&diags, "position-domain");
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].message.contains("unrotated-domain"), "{}", hits[0].message);
+    assert!(hits[0].message.contains("`attention_scores`"), "{}", hits[0].message);
+}
+
+#[test]
+fn position_domain_near_miss_unrotated_through_materialize_seam() {
+    // The sanctioned path: the attention-boundary seam (rope::materialize_row
+    // in the real tree) is the declared unrotated->global converter.
+    let diags = lint_str(
+        COORD,
+        r#"
+// lint:domain(unrotated)
+fn stored_keys(rows: usize) -> Vec<f32> { Vec::new() }
+// lint:converts(unrotated->global)
+fn materialize(k: Vec<f32>) -> Vec<f32> { k }
+// lint:domain(global)
+fn attention_scores(keys: &[f32]) -> usize { keys.len() }
+fn f(rows: usize) -> usize {
+    let k = stored_keys(rows);
+    let rotated = materialize(k);
+    attention_scores(&rotated)
+}
+"#,
+    );
+    assert!(rule_diags(&diags, "position-domain").is_empty(), "{diags:?}");
+}
+
 // ------------------------------------------------- control comments
 
 #[test]

@@ -1,9 +1,15 @@
-//! Property test: the pooled / assemble-once / in-place / resident-literal
-//! query path is BIT-IDENTICAL to the fresh-allocation reference path at
-//! every stage — across sequences of queries that actually reuse buffers,
-//! with §4.3 reorder and recompute-patching combined — and does it within
-//! the copy budget (one full-context copy + one decode-literal build per
-//! steady-state query).
+//! Property tests: the DEFERRED-RoPE query path — pooled assemble-once
+//! buffer, metadata-only §4.3 reorder, logical-slot patching, key
+//! materialization at the decode seam — is BIT-IDENTICAL to the eager
+//! reference path (physically permuted chunk list, fresh assembly, host
+//! decode buffer) at every stage, across random chunk lengths and all four
+//! RoPE geometries, and stays within the copy budget (one full-context copy
+//! + one decode-literal build per steady-state query).  A spill/re-admit
+//! round trip proves position-free records survive the tier with their
+//! domain flag intact.
+//!
+//! Each suite prints a `kvlayout-test: <name> ok` marker; CI tallies them
+//! (like `sched-test:`) so a silently skipped suite fails the build.
 //!
 //! This exercises the full host-side buffer machinery without model
 //! artifacts; `tests/integration.rs` adds the artifact-gated end-to-end
@@ -11,8 +17,11 @@
 
 use std::sync::Arc;
 
+use anyhow::bail;
+use infoflow_kv::geometry::{self, RopeGeometry};
 use infoflow_kv::kvcache::{
-    counters, AssembledContext, BufferPool, ChunkKv, DecodeBuffer,
+    counters, AssembledContext, BufferPool, ChunkKv, ChunkStore, DecodeBuffer, KeyDomain,
+    SpillTier,
 };
 use infoflow_kv::manifest::ModelDims;
 use infoflow_kv::runtime::resident::ResidentDecodeKv;
@@ -50,6 +59,7 @@ fn rand_chunk(rng: &mut Rng, id: u64, len: usize) -> Arc<ChunkKv> {
         tokens: (0..len as i32).map(|t| t + id as i32 * 100).collect(),
         k: rand_tensor(rng, &shape),
         v: rand_tensor(rng, &shape),
+        key_domain: KeyDomain::Unrotated,
     })
 }
 
@@ -58,6 +68,38 @@ fn rand_permutation(rng: &mut Rng, n: usize) -> Vec<usize> {
     let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
     order.sort_by_key(|&i| keys[i]);
     order
+}
+
+/// Logical-order view of a context's per-row state: what any consumer
+/// walking the `PositionMap` observes, independent of physical storage
+/// order.  For an identity-map context this is just the physical contents,
+/// so diffing views compares a metadata-reordered buffer against a
+/// physically permuted one.
+fn logical_view(
+    ctx: &AssembledContext,
+) -> (Vec<usize>, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let lro = ctx.logical_row_order();
+    let (l, row) = (ctx.k.shape()[0], ctx.k.shape()[2] * ctx.k.shape()[3]);
+    let mut toks = Vec::new();
+    let mut gpos = Vec::new();
+    let mut valid = Vec::new();
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for &pr in &lro {
+        let r = pr as usize;
+        toks.push(ctx.tokens.data()[r]);
+        gpos.push(ctx.gpos.data()[r]);
+        valid.push(ctx.valid.data()[r]);
+    }
+    for li in 0..l {
+        for &pr in &lro {
+            let r = pr as usize;
+            let s = (li * ctx.bucket + r) * row;
+            k.extend_from_slice(&ctx.k.data()[s..s + row]);
+            v.extend_from_slice(&ctx.v.data()[s..s + row]);
+        }
+    }
+    (ctx.logical_chunk_lens(), toks, gpos, valid, k, v)
 }
 
 struct QueryPlan {
@@ -79,9 +121,12 @@ struct QueryPlan {
 fn random_plan(rng: &mut Rng, bucket: usize) -> QueryPlan {
     let d = dims();
     let nc = 1 + rng.below(bucket / d.chunk);
-    let chunks: Vec<_> =
-        (0..nc).map(|i| rand_chunk(rng, i as u64, d.chunk)).collect();
-    let n = nc * d.chunk;
+    // RANDOM chunk lengths: the metadata reorder must handle any mix (the
+    // old equal-length restriction died with the physical gather fallback).
+    let chunks: Vec<_> = (0..nc)
+        .map(|i| rand_chunk(rng, i as u64, 2 + rng.below(d.chunk - 1)))
+        .collect();
+    let n: usize = chunks.iter().map(|c| c.len()).sum();
     let order = rand_permutation(rng, nc);
     let s_cap = d.sel_budget;
     let count = rng.below(s_cap + 1);
@@ -108,8 +153,13 @@ fn random_plan(rng: &mut Rng, bucket: usize) -> QueryPlan {
     }
 }
 
-/// The pre-refactor shape: fresh context per stage, host decode buffer.
-fn reference_path(d: &ModelDims, bucket: usize, plan: &QueryPlan) -> (AssembledContext, DecodeBuffer) {
+/// The EAGER reference: physically permute the chunk list, assemble a fresh
+/// context (identity `PositionMap`), patch, host decode buffer.
+fn reference_path(
+    d: &ModelDims,
+    bucket: usize,
+    plan: &QueryPlan,
+) -> (AssembledContext, DecodeBuffer) {
     let permuted: Vec<_> = plan.order.iter().map(|&i| plan.chunks[i].clone()).collect();
     let mut ctx = AssembledContext::new(d, bucket, &permuted).unwrap();
     ctx.patch(&plan.slots, &plan.sel_gpos, plan.count, &plan.new_k, &plan.new_v)
@@ -123,41 +173,48 @@ fn reference_path(d: &ModelDims, bucket: usize, plan: &QueryPlan) -> (AssembledC
 }
 
 #[test]
-fn pooled_path_is_bit_identical_to_reference_across_reuse() {
+fn deferred_path_is_bit_identical_to_eager_reference_across_reuse() {
     let d = dims();
     let bucket = 64usize;
     let pool = BufferPool::new();
     let mut warmed = false;
     prop::check(40, |rng: &mut Rng| {
         let plan = random_plan(rng, bucket);
+        let is_identity = plan.order.iter().enumerate().all(|(i, &o)| i == o);
 
-        // pooled / in-place / resident path, counters measured around it
+        // deferred: pooled checkout + METADATA reorder + logical patch +
+        // resident decode, counters measured around it
         let before = counters::snapshot();
         let mut ctx = pool.checkout(&d, bucket, &plan.chunks).unwrap();
-        ctx.permute_chunks_in_place(&plan.order).unwrap();
+        ctx.reorder_chunks(&plan.order).unwrap();
         ctx.patch(&plan.slots, &plan.sel_gpos, plan.count, &plan.new_k, &plan.new_v)
             .unwrap();
-        let mut kv =
-            ResidentDecodeKv::from_context(&d, &ctx, &plan.prompt_k, &plan.prompt_v, &plan.prompt_pos)
-                .unwrap();
+        let mut kv = ResidentDecodeKv::from_context(
+            &d,
+            &ctx,
+            &plan.prompt_k,
+            &plan.prompt_v,
+            &plan.prompt_pos,
+        )
+        .unwrap();
         for (nk, nv) in &plan.appends {
             kv.append(nk, nv).unwrap();
         }
         // counter delta captured BEFORE the reference path runs, so it
-        // covers only the pooled path's work
+        // covers only the deferred path's work
         let delta = counters::snapshot().since(&before);
 
-        // stage 1: the mutated context equals a freshly assembled one
+        // stage 1: the logical view of the metadata-reordered, patched
+        // buffer equals the physically permuted + patched reference
         let (ref_ctx, ref_buf) = reference_path(&d, bucket, &plan);
-        prop::assert_prop(ctx.chunk_lens == ref_ctx.chunk_lens, "chunk_lens differ")?;
-        prop::assert_prop(ctx.tokens.data() == ref_ctx.tokens.data(), "tokens differ")?;
-        prop::assert_prop(ctx.gpos.data() == ref_ctx.gpos.data(), "gpos differ")?;
-        prop::assert_prop(ctx.valid.data() == ref_ctx.valid.data(), "valid differ")?;
-        prop::assert_prop(ctx.k.data() == ref_ctx.k.data(), "ctx k differs")?;
-        prop::assert_prop(ctx.v.data() == ref_ctx.v.data(), "ctx v differs")?;
+        prop::assert_prop(
+            logical_view(&ctx) == logical_view(&ref_ctx),
+            "logical context views differ",
+        )?;
         drop(ctx); // back to the pool, as in the pipeline
 
-        // stage 2: the resident literal equals the reference decode buffer
+        // stage 2: the resident literal (keys materialized at the seam)
+        // equals the reference decode buffer bit-for-bit
         prop::assert_prop(
             kv.k_host().unwrap().data() == ref_buf.k.data(),
             "decode k differs",
@@ -179,7 +236,8 @@ fn pooled_path_is_bit_identical_to_reference_across_reuse() {
             "decode cursors differ",
         )?;
 
-        // stage 3: the copy budget, once the pool is warm
+        // stage 3: the copy budget, once the pool is warm — the reorder
+        // must be pure metadata (no copy, no alloc, no byte movement)
         if warmed {
             prop::assert_prop(
                 delta.full_kv_copies == 1,
@@ -188,6 +246,11 @@ fn pooled_path_is_bit_identical_to_reference_across_reuse() {
             prop::assert_prop(delta.ctx_allocs == 0, "steady state allocated a context")?;
         }
         warmed = true;
+        prop::assert_prop(
+            delta.meta_reorders == u64::from(!is_identity),
+            "non-identity reorder must be exactly one metadata mutation",
+        )?;
+        prop::assert_prop(delta.inplace_permutes == 0, "serving path must never permute")?;
         prop::assert_prop(
             delta.decode_uploads_full == 1,
             format!("{} decode-literal builds, want 1", delta.decode_uploads_full),
@@ -198,4 +261,128 @@ fn pooled_path_is_bit_identical_to_reference_across_reuse() {
         )?;
         Ok(())
     });
+    println!("kvlayout-test: deferred_vs_eager ok");
+}
+
+#[test]
+fn metadata_reorder_matches_physical_rechunk_across_geometries() {
+    // For every RoPE geometry: target-position layouts computed over the
+    // LOGICAL chunk lens of a metadata-reordered buffer must equal layouts
+    // over the physical lens of the reassembled reference, and patching
+    // target positions from that layout + building the decode buffer must
+    // come out bit-identical on both paths.
+    let d = dims();
+    prop::check(24, |rng: &mut Rng| {
+        let nc = 1 + rng.below(5);
+        let chunks: Vec<_> = (0..nc)
+            .map(|i| rand_chunk(rng, i as u64, 2 + rng.below(d.chunk - 1)))
+            .collect();
+        let n: usize = chunks.iter().map(|c| c.len()).sum();
+        let bucket = n + rng.below(5);
+        let order = rand_permutation(rng, nc);
+        for g in RopeGeometry::ALL {
+            let mut meta = AssembledContext::new(&d, bucket, &chunks).unwrap();
+            meta.reorder_chunks(&order).unwrap();
+            let permuted: Vec<_> = order.iter().map(|&i| chunks[i].clone()).collect();
+            let mut reference = AssembledContext::new(&d, bucket, &permuted).unwrap();
+
+            let lay_meta = geometry::layout(g, &meta.logical_chunk_lens(), d.prompt_len);
+            let lay_ref = geometry::layout(g, &reference.chunk_lens, d.prompt_len);
+            prop::assert_prop(
+                lay_meta.ctx_pos == lay_ref.ctx_pos
+                    && lay_meta.ctx_delta == lay_ref.ctx_delta
+                    && lay_meta.prompt_pos == lay_ref.prompt_pos,
+                format!("{} layout differs across reorder styles", g.name()),
+            )?;
+
+            // patch a few logical slots to their geometry target positions
+            let s_cap = d.sel_budget;
+            let count = rng.below(s_cap + 1);
+            let slots: Vec<i32> = (0..s_cap).map(|_| rng.below(n) as i32).collect();
+            let sel_gpos: Vec<i32> =
+                slots.iter().map(|&s| lay_meta.ctx_pos[s as usize]).collect();
+            let sel_shape = [d.n_layers, s_cap, d.n_heads, d.head_dim];
+            let nk = rand_tensor(rng, &sel_shape);
+            let nv = rand_tensor(rng, &sel_shape);
+            meta.patch(&slots, &sel_gpos, count, &nk, &nv).unwrap();
+            reference.patch(&slots, &sel_gpos, count, &nk, &nv).unwrap();
+            prop::assert_prop(
+                logical_view(&meta) == logical_view(&reference),
+                format!("{} patched views differ", g.name()),
+            )?;
+
+            let pshape = [d.n_layers, d.prompt_len, d.n_heads, d.head_dim];
+            let pk = rand_tensor(rng, &pshape);
+            let pv = rand_tensor(rng, &pshape);
+            let ppos: Vec<i32> = lay_meta.prompt_pos.clone();
+            let a = DecodeBuffer::new(&d, &meta, &pk, &pv, &ppos);
+            let b = DecodeBuffer::new(&d, &reference, &pk, &pv, &ppos);
+            prop::assert_prop(
+                a.k.data() == b.k.data()
+                    && a.v.data() == b.v.data()
+                    && a.gpos.data() == b.gpos.data()
+                    && a.valid.data() == b.valid.data(),
+                format!("{} decode buffers differ", g.name()),
+            )?;
+        }
+        Ok(())
+    });
+    println!("kvlayout-test: geometry_rechunk ok");
+}
+
+#[test]
+fn spill_readmit_preserves_unrotated_domain() {
+    // A position-free chunk must survive eviction → spill → re-admission
+    // with its bytes AND its `KeyDomain::Unrotated` flag intact, without
+    // tripping the legacy-record migration path; the re-admitted chunk must
+    // then assemble into exactly the original raw rows.
+    let d = dims();
+    let mut rng = Rng::new(23);
+    let a = rand_chunk(&mut rng, 1, d.chunk);
+    let b = rand_chunk(&mut rng, 2, d.chunk);
+    let dir = std::env::temp_dir()
+        .join(format!("ifkv_domain_roundtrip_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let tier = Arc::new(SpillTier::new(&dir).unwrap());
+    // Room for exactly one chunk: inserting B evicts (and spills) A.
+    let store = ChunkStore::with_spill(a.nbytes(), 1, tier.clone());
+    store.insert(ChunkKv {
+        id: a.id,
+        tokens: a.tokens.clone(),
+        k: a.k.clone(),
+        v: a.v.clone(),
+        key_domain: a.key_domain,
+    });
+    store.insert(ChunkKv {
+        id: b.id,
+        tokens: b.tokens.clone(),
+        k: b.k.clone(),
+        v: b.v.clone(),
+        key_domain: b.key_domain,
+    });
+    assert!(tier.contains(1), "A must be spilled, not discarded");
+    let back = store
+        .get_or_load(1, || bail!("spilled chunk must not be re-prefilled"))
+        .unwrap();
+    assert_eq!(back.key_domain, KeyDomain::Unrotated, "domain flag must survive the tier");
+    assert_eq!(back.k.data(), a.k.data(), "raw keys must round-trip bit-identically");
+    assert_eq!(back.v.data(), a.v.data());
+    assert_eq!(
+        store.lifecycle().migrations.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "a v2 unrotated record must NOT take the legacy migration path"
+    );
+    // ...and what assembly sees is still the raw position-free rows.
+    let ctx = AssembledContext::new(&d, d.chunk, &[back]).unwrap();
+    let row = d.n_heads * d.head_dim;
+    for li in 0..d.n_layers {
+        let s = li * d.chunk * row;
+        assert_eq!(
+            &ctx.k.data()[s..s + d.chunk * row],
+            &a.k.data()[li * d.chunk * row..(li + 1) * d.chunk * row],
+            "assembled keys must be the chunk's raw bytes (layer {li})"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("kvlayout-test: spill_domain ok");
 }

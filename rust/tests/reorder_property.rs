@@ -1,13 +1,14 @@
-//! Property test composing the §4.3 reorder with the in-place buffer
-//! permutation: applying `reorder_chunks`'s order via
-//! `AssembledContext::permute_chunks_in_place` must equal the clone-based
-//! `reorder::permute` reference (permute the chunk list, reassemble fresh)
-//! for random chunkings — including the single-chunk and empty-selection
-//! edge cases.
+//! Property test composing the §4.3 reorder policy with the metadata-only
+//! buffer reorder: applying `reorder::reorder_chunks`'s order via
+//! `AssembledContext::reorder_chunks` (a `PositionMap` mutation, zero bytes
+//! moved) must present — through the logical view — exactly what the
+//! clone-based `reorder::permute` reference (permute the chunk list,
+//! reassemble fresh) produces physically, for random chunkings including
+//! mixed lengths, the single-chunk identity, and the empty selection.
 
 use std::sync::Arc;
 
-use infoflow_kv::kvcache::{AssembledContext, ChunkKv};
+use infoflow_kv::kvcache::{counters, AssembledContext, ChunkKv, KeyDomain};
 use infoflow_kv::manifest::ModelDims;
 use infoflow_kv::reorder;
 use infoflow_kv::tensor::TensorF;
@@ -41,20 +42,42 @@ fn rand_chunk(rng: &mut Rng, id: u64, len: usize) -> Arc<ChunkKv> {
             .unwrap(),
         v: TensorF::from_vec(&shape, (0..n).map(|_| rng.normal() as f32).collect())
             .unwrap(),
+        key_domain: KeyDomain::Unrotated,
     })
 }
 
-fn assert_ctx_matches(a: &AssembledContext, b: &AssembledContext) -> prop::PropResult {
-    prop::assert_prop(a.chunk_lens == b.chunk_lens, "chunk_lens differ")?;
-    prop::assert_prop(a.tokens.data() == b.tokens.data(), "tokens differ")?;
-    prop::assert_prop(a.gpos.data() == b.gpos.data(), "gpos differ")?;
-    prop::assert_prop(a.valid.data() == b.valid.data(), "valid differ")?;
-    prop::assert_prop(a.k.data() == b.k.data(), "k differs")?;
-    prop::assert_prop(a.v.data() == b.v.data(), "v differs")
+/// Logical-order view of a context's per-row state (lens, tokens, gpos,
+/// valid, k, v): the frame in which a metadata-reordered buffer and a
+/// physically reassembled one must agree.
+fn logical_view(
+    ctx: &AssembledContext,
+) -> (Vec<usize>, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let lro = ctx.logical_row_order();
+    let (l, row) = (ctx.k.shape()[0], ctx.k.shape()[2] * ctx.k.shape()[3]);
+    let mut toks = Vec::new();
+    let mut gpos = Vec::new();
+    let mut valid = Vec::new();
+    let mut k = Vec::new();
+    let mut v = Vec::new();
+    for &pr in &lro {
+        let r = pr as usize;
+        toks.push(ctx.tokens.data()[r]);
+        gpos.push(ctx.gpos.data()[r]);
+        valid.push(ctx.valid.data()[r]);
+    }
+    for li in 0..l {
+        for &pr in &lro {
+            let r = pr as usize;
+            let s = (li * ctx.bucket + r) * row;
+            k.extend_from_slice(&ctx.k.data()[s..s + row]);
+            v.extend_from_slice(&ctx.v.data()[s..s + row]);
+        }
+    }
+    (ctx.logical_chunk_lens(), toks, gpos, valid, k, v)
 }
 
 #[test]
-fn reorder_applied_in_place_matches_clone_based_reference() {
+fn reorder_applied_as_metadata_matches_clone_based_reference() {
     let d = dims();
     prop::check(80, |rng: &mut Rng| {
         let nc = 1 + rng.below(6);
@@ -80,13 +103,25 @@ fn reorder_applied_in_place_matches_clone_based_reference() {
             format!("reorder produced a non-permutation {order:?}"),
         )?;
 
-        // In-place application...
-        ctx.permute_chunks_in_place(&order).unwrap();
+        // Metadata application: zero buffer bytes may move...
+        let k_before = ctx.k.data().to_vec();
+        let before = counters::snapshot();
+        ctx.reorder_chunks(&order).unwrap();
+        let delta = counters::snapshot().since(&before);
+        prop::assert_prop(delta.full_kv_copies == 0, "metadata reorder copied")?;
+        prop::assert_prop(delta.ctx_allocs == 0, "metadata reorder allocated")?;
+        prop::assert_prop(
+            ctx.k.data() == &k_before[..],
+            "metadata reorder moved buffer bytes",
+        )?;
         // ...vs the clone-based reference: permute the chunk list, then
-        // assemble a fresh buffer from it.
+        // assemble a fresh buffer from it.  The views must agree.
         let permuted = reorder::permute(&chunks, &order);
         let reference = AssembledContext::new(&d, bucket, &permuted).unwrap();
-        assert_ctx_matches(&ctx, &reference)
+        prop::assert_prop(
+            logical_view(&ctx) == logical_view(&reference),
+            "logical view differs from physical reassembly",
+        )
     });
 }
 
@@ -100,22 +135,28 @@ fn single_chunk_reorder_is_identity() {
     let scores: Vec<f32> = (0..d.chunk).map(|i| i as f32).collect();
     let order = reorder::reorder_chunks(&scores, ctx.valid.data(), &ctx.chunk_lens);
     assert_eq!(order, vec![0], "one chunk has exactly one order");
-    ctx.permute_chunks_in_place(&order).unwrap();
-    assert_eq!(ctx.k.data(), &before_k[..], "identity permutation must not move data");
+    let before = counters::snapshot();
+    ctx.reorder_chunks(&order).unwrap();
+    assert_eq!(
+        counters::snapshot().since(&before).meta_reorders,
+        0,
+        "the identity reorder must not even count as a reorder"
+    );
+    assert!(ctx.pos_map.is_identity());
+    assert_eq!(ctx.k.data(), &before_k[..], "identity must not move data");
 }
 
 #[test]
 fn empty_selection_reorders_nothing() {
-    // Zero chunks: the reorder yields an empty permutation and the in-place
+    // Zero chunks: the reorder yields an empty permutation and the metadata
     // application over an empty assembly is a no-op rather than a panic.
     let d = dims();
     let chunks: Vec<Arc<ChunkKv>> = Vec::new();
     let mut ctx = AssembledContext::new(&d, 8, &chunks).unwrap();
     let order = reorder::reorder_chunks(&[], &[], &[]);
     assert!(order.is_empty());
-    ctx.permute_chunks_in_place(&order).unwrap();
+    ctx.reorder_chunks(&order).unwrap();
     assert_eq!(ctx.n(), 0);
     let reference = AssembledContext::new(&d, 8, &reorder::permute(&chunks, &order)).unwrap();
-    assert_eq!(ctx.k.data(), reference.k.data());
-    assert_eq!(ctx.valid.data(), reference.valid.data());
+    assert_eq!(logical_view(&ctx), logical_view(&reference));
 }
